@@ -1,0 +1,79 @@
+//! Regenerate the paper's Tables 1-2 (quantization MRE) with the
+//! rust-native kernels, printing paper values alongside.
+//!
+//! ```sh
+//! cargo run --release --example accuracy_sweep [-- --full]
+//! ```
+//! `--full` extends the grid to 8k/16k sequences (minutes on CPU).
+
+use int_flashattention::attention::{attention_f32, reference, AttnConfig, Variant};
+use int_flashattention::bench_harness::Table;
+use int_flashattention::tensor::MatF32;
+use int_flashattention::util::cli::Args;
+use int_flashattention::util::rng::{Dist, Pcg64};
+use int_flashattention::util::stats;
+
+// paper Tables 1-2: (seq, fp8 %, half-int8 %, full-int8 %)
+const PAPER_NORMAL: &[(usize, f64, f64, f64)] = &[
+    (1024, 7.46, 0.890, 4.05),
+    (2048, 7.50, 0.802, 4.18),
+    (4096, 7.66, 0.843, 4.21),
+    (8192, 7.51, 0.932, 4.38),
+    (16384, 7.57, 0.775, 4.52),
+];
+const PAPER_UNIFORM: &[(usize, f64, f64, f64)] = &[
+    (1024, 8.94, 0.317, 1.69),
+    (2048, 9.15, 0.300, 1.62),
+    (4096, 8.89, 0.280, 1.65),
+    (8192, 9.02, 0.299, 1.85),
+    (16384, 8.97, 0.296, 1.82),
+];
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let full = args.has("full");
+    let d = args.get_usize("head-dim", 64)?;
+    let max_seq = if full { 16384 } else { 4096 };
+
+    for (dist, paper, label) in [
+        (Dist::Normal, PAPER_NORMAL, "Table 1 — N(0,1) activations"),
+        (Dist::Uniform, PAPER_UNIFORM, "Table 2 — U(-0.5,0.5) activations"),
+    ] {
+        println!("\n== {label} (ours vs paper, MRE %) ==");
+        let mut table = Table::new(&[
+            "seq", "fp8", "fp8(paper)", "half", "half(paper)", "full", "full(paper)", "full/fp8",
+        ]);
+        for &(seq, p_fp8, p_half, p_full) in paper {
+            if seq > max_seq {
+                continue;
+            }
+            let mut rng = Pcg64::seeded(seq as u64 * 31 + dist as u64);
+            let q = MatF32::random(seq, d, dist, &mut rng);
+            let k = MatF32::random(seq, d, dist, &mut rng);
+            let v = MatF32::random(seq, d, dist, &mut rng);
+            let cfg = AttnConfig::new(d);
+            let gold = reference::standard_attention(&q, &k, &v, &cfg);
+            let err = |variant| {
+                let o = attention_f32(variant, &q, &k, &v, &cfg);
+                stats::mre(&o.data, &gold.data) * 100.0
+            };
+            let (e8, eh, ef) = (err(Variant::Fp8), err(Variant::HalfInt8), err(Variant::Int8));
+            table.row(&[
+                seq.to_string(),
+                format!("{e8:.2}%"),
+                format!("{p_fp8:.2}%"),
+                format!("{eh:.3}%"),
+                format!("{p_half:.3}%"),
+                format!("{ef:.2}%"),
+                format!("{p_full:.2}%"),
+                format!("{:.2}", ef / e8),
+            ]);
+        }
+        print!("{}", table.render());
+    }
+    println!(
+        "\nheadline check: full-INT8/FP8 error ratio ≈ 0.54 (normal) / 0.18 (uniform) in the paper;\n\
+         orderings half < full < fp8 and the uniform-helps-INT8-more effect must reproduce."
+    );
+    Ok(())
+}

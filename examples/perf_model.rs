@@ -1,0 +1,68 @@
+//! Regenerate the paper's Figure 2 (inference time vs context length)
+//! from the Ampere/Ada cost model, with the paper's measured reductions
+//! alongside, plus a measured-CPU series from the rust-native kernels at
+//! reduced geometry (sanity: same ordering).
+//!
+//! ```sh
+//! cargo run --release --example perf_model
+//! ```
+
+use int_flashattention::attention::{attention_f32, AttnConfig, Variant};
+use int_flashattention::bench_harness::{bench, BenchConfig, Table};
+use int_flashattention::simulator::{predict, GpuModel, Workload};
+use int_flashattention::tensor::MatF32;
+use int_flashattention::util::rng::{Dist, Pcg64};
+
+// paper Figure 2: % smaller inference time of INT8 vs FP16
+const PAPER_REDUCTION: &[(usize, f64)] =
+    &[(1024, 31.0), (2048, 52.0), (4096, 66.0), (8192, 72.0), (16384, 73.0)];
+
+fn main() -> anyhow::Result<()> {
+    let gpu = GpuModel::rtx4090();
+    println!("== Figure 2 (modelled {}; paper geometry b=4 h=32 d=128) ==", gpu.name);
+    let mut t = Table::new(&[
+        "seq", "fp16 ms", "fp8 ms", "half ms", "int8 ms", "int8 vs fp16", "paper",
+    ]);
+    for &(seq, paper) in PAPER_REDUCTION {
+        let wl = Workload::fig2(seq);
+        let p = |v| predict(&gpu, &wl, v).unwrap().total * 1e3;
+        let reduction = 100.0 * (1.0 - p(Variant::Int8) / p(Variant::Fp16));
+        t.row(&[
+            seq.to_string(),
+            format!("{:.3}", p(Variant::Fp16)),
+            format!("{:.3}", p(Variant::Fp8)),
+            format!("{:.3}", p(Variant::HalfInt8)),
+            format!("{:.3}", p(Variant::Int8)),
+            format!("-{reduction:.0}%"),
+            format!("-{paper:.0}%"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "note: the model is a first-principles roofline — INT8's advantage caps at the 2×\n\
+         pipe/traffic ratio, so the paper's -72/73% (3.7×) cannot come from hardware ratios\n\
+         alone (see EXPERIMENTS.md E1 discussion). Shape (ordering + widening gap) matches."
+    );
+
+    println!("\n== measured on this CPU (rust-native kernels, 1 head, d=64) ==");
+    let cfg_bench = BenchConfig::quick();
+    let mut t2 = Table::new(&["seq", "fp16 ms", "int8 ms", "ratio"]);
+    for seq in [256usize, 512, 1024] {
+        let mut rng = Pcg64::seeded(seq as u64);
+        let q = MatF32::random(seq, 64, Dist::Normal, &mut rng);
+        let k = MatF32::random(seq, 64, Dist::Normal, &mut rng);
+        let v = MatF32::random(seq, 64, Dist::Normal, &mut rng);
+        let cfg = AttnConfig::new(64);
+        let m16 = bench("fp16", &cfg_bench, || attention_f32(Variant::Fp16, &q, &k, &v, &cfg));
+        let m8 = bench("int8", &cfg_bench, || attention_f32(Variant::Int8, &q, &k, &v, &cfg));
+        t2.row(&[
+            seq.to_string(),
+            format!("{:.3}", m16.mean_ms()),
+            format!("{:.3}", m8.mean_ms()),
+            format!("{:.2}x", m16.mean_ns() / m8.mean_ns()),
+        ]);
+    }
+    print!("{}", t2.render());
+    println!("(CPU has no int8 tensor pipe — this series validates plumbing, not the 2× claim)");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: run INT-FlashAttention three ways and compare.
+//!
+//! 1. Rust-native Algorithm 1 (`attention::int_flash`) — no artifacts.
+//! 2. The AOT Pallas pipeline through PJRT (needs `make artifacts`).
+//! 3. Exact fp32 attention as ground truth.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use int_flashattention::attention::{attention_f32, reference, AttnConfig, Variant};
+use int_flashattention::runtime::{executor::HostTensor, ArtifactRegistry, Executor};
+use int_flashattention::tensor::MatF32;
+use int_flashattention::util::rng::{Dist, Pcg64};
+use int_flashattention::util::stats;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let (n, d) = (128usize, 32usize);
+    let mut rng = Pcg64::seeded(2024);
+    let q = MatF32::random(n, d, Dist::Normal, &mut rng);
+    let k = MatF32::random(n, d, Dist::Normal, &mut rng);
+    let v = MatF32::random(n, d, Dist::Normal, &mut rng);
+    let cfg = AttnConfig::new(d);
+
+    // 1. ground truth
+    let gold = reference::standard_attention(&q, &k, &v, &cfg);
+
+    // 2. rust-native kernels
+    println!("single head, N={n}, d={d}, N(0,1) activations");
+    println!("{:<12} {:>12} {:>12}", "variant", "MRE vs f32", "max |err|");
+    for variant in [Variant::Fp16, Variant::Fp8, Variant::HalfInt8, Variant::Int8, Variant::Int4] {
+        let o = attention_f32(variant, &q, &k, &v, &cfg);
+        println!(
+            "{:<12} {:>11.4}% {:>12.5}",
+            variant.name(),
+            stats::mre(&o.data, &gold.data) * 100.0,
+            stats::max_abs_diff(&o.data, &gold.data),
+        );
+    }
+
+    // 3. the compiled Pallas pipeline through PJRT, if artifacts exist
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let registry = Arc::new(ArtifactRegistry::open(&dir)?);
+        let exe = Executor::new(registry, "attn_int8_b1_h2_n128_d32")?;
+        // artifact shape is (1, 2, 128, 32): replicate the head
+        let mut flat = Vec::with_capacity(2 * n * d);
+        flat.extend_from_slice(&q.data);
+        flat.extend_from_slice(&q.data);
+        let mk = |m: &MatF32| {
+            let mut f = Vec::with_capacity(2 * n * d);
+            f.extend_from_slice(&m.data);
+            f.extend_from_slice(&m.data);
+            HostTensor::F32(f)
+        };
+        let out = exe.run(&[mk(&q), mk(&k), mk(&v)])?;
+        let head0 = &out[0][..n * d];
+        println!(
+            "{:<12} {:>11.4}% {:>12.5}   (AOT Pallas kernel via PJRT)",
+            "int8-pjrt",
+            stats::mre(head0, &gold.data) * 100.0,
+            stats::max_abs_diff(head0, &gold.data),
+        );
+        let (gm, _) = exe.run_golden()?;
+        println!("golden fixture check: mre {gm:.2e} (python == rust bridge)");
+    } else {
+        println!("(run `make artifacts` to also exercise the PJRT path)");
+    }
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! End-to-end serving driver (the validation run recorded in
+//! EXPERIMENTS.md E6): bring up the full stack — AOT artifacts → PJRT
+//! backend → engine (router/batcher/admission) → TCP server — then drive
+//! it with a Poisson open-loop workload of mixed-length attention
+//! requests plus LM prefill calls, and report latency/throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_pipeline
+//! ```
+//!
+//! Flags: --requests N (default 64)  --rate R req/s (default 40)
+//!        --backend pjrt|native      --policy eager|deadline|full
+
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Backend, Engine, EngineConfig, NativeBackend, PjrtBackend};
+use int_flashattention::coordinator::router::BucketRouter;
+use int_flashattention::runtime::{executor::HostTensor, ArtifactRegistry, Executor, Manifest};
+use int_flashattention::server::{Client, Server};
+use int_flashattention::util::cli::Args;
+use int_flashattention::util::rng::Pcg64;
+use int_flashattention::util::stats::Summary;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let requests = args.get_usize("requests", 64)?;
+    let rate = args.get_f64("rate", 40.0)?;
+    let backend_kind = args.get_or("backend", "pjrt").to_string();
+    let policy = BatchPolicy::parse(args.get_or("policy", "deadline"))
+        .ok_or_else(|| anyhow::anyhow!("bad --policy"))?;
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("run `make artifacts` first");
+    }
+    let manifest = Manifest::load(&dir)?;
+    let router = BucketRouter::from_manifest(&manifest);
+    println!("== INT-FlashAttention serving pipeline ==");
+    println!("buckets: {}", router.buckets().len());
+
+    let backend: Arc<dyn Backend> = if backend_kind == "native" {
+        Arc::new(NativeBackend { threads: 4 })
+    } else {
+        Arc::new(PjrtBackend::start(dir.clone()).map_err(|e| anyhow::anyhow!(e))?)
+    };
+    println!("backend: {}", backend.name());
+
+    let engine = Arc::new(Engine::new(
+        router,
+        backend,
+        EngineConfig {
+            policy,
+            batch_deadline: Duration::from_millis(25),
+            workers: 2,
+            ..EngineConfig::default()
+        },
+    ));
+
+    // bring up the TCP front-end and drive it over loopback
+    let server = Server::bind(engine.clone(), "127.0.0.1:0")?;
+    let (handle, join) = server.start();
+    let addr = handle.addr();
+    println!("server: {addr}");
+
+    // open-loop Poisson workload: mixed seq lengths, mixed accuracy
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    let concurrency = 4usize;
+    let per = requests / concurrency;
+    for c in 0..concurrency {
+        workers.push(std::thread::spawn(move || -> anyhow::Result<Vec<(f64, usize)>> {
+            let mut client = Client::connect(addr)?;
+            let mut rng = Pcg64::new(c as u64, 99);
+            let mut results = Vec::new();
+            for i in 0..per {
+                // Poisson arrivals at rate/concurrency per worker
+                let gap = rng.exp_interval(40.0f64.max(1.0) / concurrency as f64);
+                std::thread::sleep(Duration::from_secs_f64(gap.min(0.25)));
+                let seq = [64usize, 100, 128, 200, 256][(c + i) % 5];
+                let acc = ["fast", "fast", "balanced", "exact"][(c + i) % 4];
+                let n = 8 * seq * 64;
+                let (q, k, v) = (rng.normal_vec(n), rng.normal_vec(n), rng.normal_vec(n));
+                let t = Instant::now();
+                let resp = client.attention(acc, 8, seq, 64, &q, &k, &v)?;
+                let lat_ms = t.elapsed().as_secs_f64() * 1e3;
+                if resp.at("ok").as_bool() != Some(true) {
+                    anyhow::bail!("request failed: {}", resp.to_string());
+                }
+                results.push((lat_ms, seq));
+            }
+            Ok(results)
+        }));
+    }
+    let mut lats = Vec::new();
+    for w in workers {
+        for (lat, _) in w.join().unwrap()? {
+            lats.push(lat);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&lats).unwrap();
+    println!("\n-- attention serving --");
+    println!("requests:   {} ok (target rate {rate:.0}/s)", lats.len());
+    println!("throughput: {:.1} req/s over {wall:.2}s", lats.len() as f64 / wall);
+    println!(
+        "latency ms: mean {:.2}  p50 {:.2}  p90 {:.2}  p99 {:.2}  max {:.2}",
+        s.mean, s.p50, s.p90, s.p99, s.max
+    );
+
+    // engine metrics
+    let snap = engine.metrics.snapshot();
+    println!("\n-- engine metrics --");
+    for key in ["counter.submitted", "counter.completed", "counter.batches.formed", "counter.batch.slots_wasted"] {
+        if let Some(v) = snap.at(key).as_i64() {
+            println!("{key}: {v}");
+        }
+    }
+
+    // LM prefill through the same runtime (tiny transformer, weights baked)
+    println!("\n-- LM prefill (2-layer transformer, d=128, INT8 attention) --");
+    let registry = Arc::new(ArtifactRegistry::open(&dir)?);
+    let exe = Executor::new(registry, "lm_int8_b4_n128")?;
+    let mut rng = Pcg64::seeded(7);
+    let mut lm_lats = Vec::new();
+    for _ in 0..8 {
+        let tokens: Vec<i32> = (0..4 * 128).map(|_| rng.next_range(256) as i32).collect();
+        let t = Instant::now();
+        let out = exe.run(&[HostTensor::I32(tokens)])?;
+        lm_lats.push(t.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(out[0].len(), 4 * 256);
+    }
+    let ls = Summary::of(&lm_lats).unwrap();
+    println!(
+        "prefill(4×128 tokens): mean {:.2} ms  p50 {:.2} ms → {:.0} tok/s",
+        ls.mean,
+        ls.p50,
+        4.0 * 128.0 / (ls.mean / 1e3)
+    );
+
+    handle.shutdown();
+    join.join().unwrap();
+    println!("\ndone.");
+    Ok(())
+}

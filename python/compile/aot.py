@@ -1,0 +1,232 @@
+# AOT export: lower the L2/L1 stack to HLO text + manifest for the rust
+# runtime. Runs once at build time (`make artifacts`); never on the
+# request path.
+#
+# Interchange format is HLO *text*, not serialized HloModuleProto: jax
+# ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+# (the version the published `xla` 0.1.6 crate binds) rejects
+# (`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+# cleanly. Lowered with return_tuple=True; the rust side unwraps with
+# `to_tuple1()`.
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import LMConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default HLO printer elides big literals as
+    # "{...}", which the text parser on the rust side silently reads back
+    # as zeros — fatal for artifacts with baked-in weights (the LM).
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # modern jaxlib emits source_end_line/column metadata the 0.5.1 text
+    # parser rejects — strip metadata entirely (it is debug-only)
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _tensor_spec(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _write_bin(path, arr):
+    np.asarray(arr, dtype="<f4").tofile(path)
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+def build_attention_artifact(out_dir, variant, batch, heads, seq, head_dim,
+                             causal=True, block_q=None, block_k=None,
+                             golden_seed=None):
+    """Export one fused quantize→attention→dequantize pipeline.
+
+    Inputs: q, k, v f32 (B, H, N, d). Output: o f32 (B, H, N, d).
+    """
+    # Default block size: 256 (capped at seq). §Perf iteration 5: the
+    # interpret-mode grid loop costs ~0.5 ms/iteration on CPU-PJRT, so
+    # fewer/larger tiles win big (64→256 blocks: 1215→288 ms for the
+    # 512-seq bucket). 256×256 int8 tiles are also MXU-aligned (128×128
+    # systolic) and far inside the ~16 MiB/core TPU VMEM budget — the
+    # 64×64 default elsewhere is the *GPU* 100 KiB-SRAM design point.
+    if block_q is None:
+        block_q = min(256, seq)
+    if block_k is None:
+        block_k = min(256, seq)
+    name = f"attn_{variant}_b{batch}_h{heads}_n{seq}_d{head_dim}" + (
+        "_causal" if causal else ""
+    )
+    shape = (batch, heads, seq, head_dim)
+    spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    def fn(q, k, v):
+        return (model.attention_bhnd(q, k, v, variant, causal=causal,
+                                     block_q=block_q, block_k=block_k),)
+
+    lowered = jax.jit(fn).lower(spec, spec, spec)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    entry = {
+        "name": name,
+        "file": fname,
+        "kind": "attention",
+        "variant": variant,
+        "batch": batch,
+        "heads": heads,
+        "seq": seq,
+        "head_dim": head_dim,
+        "causal": causal,
+        "block_q": block_q,
+        "block_k": block_k,
+        "inputs": [_tensor_spec(n, shape) for n in ("q", "k", "v")],
+        "outputs": [_tensor_spec("o", shape)],
+    }
+
+    if golden_seed is not None:
+        gdir = os.path.join(out_dir, "golden")
+        os.makedirs(gdir, exist_ok=True)
+        ks = jax.random.split(jax.random.PRNGKey(golden_seed), 3)
+        qv, kv, vv = (jax.random.normal(k, shape, jnp.float32) for k in ks)
+        out = jax.jit(fn)(qv, kv, vv)[0]
+        paths = {}
+        for label, arr in (("q", qv), ("k", kv), ("v", vv), ("o", out)):
+            p = f"golden/{name}.{label}.bin"
+            _write_bin(os.path.join(out_dir, p), arr)
+            paths[label] = p
+        entry["golden"] = {
+            "seed": golden_seed, "inputs": [paths["q"], paths["k"], paths["v"]],
+            "output": paths["o"], "atol": 1e-4, "rtol": 1e-3,
+        }
+    return entry
+
+
+def build_lm_artifact(out_dir, variant, batch, seq, cfg: LMConfig, params,
+                      golden_seed=None):
+    """Export the tiny causal LM prefill step with weights baked in as
+    constants: int32 tokens (B, N) → next-token logits (B, vocab)."""
+    name = f"lm_{variant}_b{batch}_n{seq}"
+    spec = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+    def fn(tokens):
+        # single-tile blocks: LM buckets are short (≤128) and the
+        # interpret-mode grid overhead dominates smaller tiles (§Perf)
+        return (model.lm_forward(params, cfg, tokens, variant,
+                                 block_q=seq, block_k=seq),)
+
+    lowered = jax.jit(fn).lower(spec)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    entry = {
+        "name": name,
+        "file": fname,
+        "kind": "lm",
+        "variant": variant,
+        "batch": batch,
+        "seq": seq,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "inputs": [{"name": "tokens", "shape": [batch, seq], "dtype": "s32"}],
+        "outputs": [_tensor_spec("logits", (batch, cfg.vocab))],
+    }
+
+    if golden_seed is not None:
+        gdir = os.path.join(out_dir, "golden")
+        os.makedirs(gdir, exist_ok=True)
+        toks = jax.random.randint(
+            jax.random.PRNGKey(golden_seed), (batch, seq), 0, cfg.vocab, jnp.int32
+        )
+        out = jax.jit(fn)(toks)[0]
+        tp = f"golden/{name}.tokens.bin"
+        np.asarray(toks, dtype="<i4").tofile(os.path.join(out_dir, tp))
+        op = f"golden/{name}.logits.bin"
+        _write_bin(os.path.join(out_dir, op), out)
+        entry["golden"] = {
+            "seed": golden_seed, "inputs": [tp], "output": op,
+            "atol": 5e-3, "rtol": 1e-2,
+        }
+    return entry
+
+
+# Default artifact set: the serving buckets the rust coordinator routes to.
+ATTN_VARIANTS = ("int8", "half_int8", "fp8", "fp16")
+ATTN_BUCKETS = (  # (batch, heads, seq, head_dim)
+    (4, 8, 128, 64),
+    (4, 8, 256, 64),
+    (4, 8, 512, 64),
+)
+LM_BUCKETS = ((1, 64), (4, 64), (4, 128))  # (batch, seq)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="AOT-export HLO artifacts")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the artifacts needed by tests/examples")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = []
+
+    # Small golden artifact pair for rust integration tests / quickstart.
+    entries.append(build_attention_artifact(
+        out_dir, "int8", 1, 2, 128, 32, causal=False, block_q=64, block_k=64,
+        golden_seed=1234))
+    entries.append(build_attention_artifact(
+        out_dir, "fp16", 1, 2, 128, 32, causal=False, block_q=64, block_k=64,
+        golden_seed=1234))
+    print(f"[aot] golden attention artifacts done")
+
+    if not args.quick:
+        for variant in ATTN_VARIANTS:
+            for (b, h, n, d) in ATTN_BUCKETS:
+                entries.append(build_attention_artifact(
+                    out_dir, variant, b, h, n, d, causal=True))
+                print(f"[aot] attn {variant} b{b} h{h} n{n} d{d}")
+
+    cfg = LMConfig()
+    params = model.init_lm(cfg, seed=0)
+    entries.append(build_lm_artifact(out_dir, "int8", 1, 64, cfg, params,
+                                     golden_seed=99))
+    print(f"[aot] lm int8 b1 n64 (golden)")
+    if not args.quick:
+        for variant in ("int8", "fp16"):
+            for (b, n) in LM_BUCKETS:
+                if variant == "int8" and b == 1 and n == 64:
+                    continue  # already built with golden data
+                entries.append(build_lm_artifact(out_dir, variant, b, n, cfg, params))
+                print(f"[aot] lm {variant} b{b} n{n}")
+
+    manifest = {
+        "version": 1,
+        "generated_by": "compile.aot",
+        "lm_config": dict(cfg._asdict()),
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(entries)} artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+# Post-training quantization calibration (paper §2.3, §3.2).
+#
+# INT-FlashAttention's Q/K scales are *token-level runtime* values
+# (rowmax(|·|)/R of the live activations), so they need no calibration.
+# Two things do:
+#   1. the tensor-level V scale S_V — the paper fixes it "after training";
+#      a robust estimate needs calibration data (a plain max over one batch
+#      is outlier-fragile);
+#   2. optional weight quantization of the projection GEMMs (an extension
+#      beyond the paper, used by the int8-weights ablation).
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quantize as q
+
+
+class RunningAbsMax:
+    """Streaming max(|x|) calibrator with optional percentile clipping.
+
+    percentile < 1.0 uses the per-batch |x| quantile instead of the hard
+    max, then takes the running max of those — a cheap outlier-robust
+    estimator (the standard trick for tensor-level PTQ scales).
+    """
+
+    def __init__(self, percentile: float = 1.0):
+        if not 0.0 < percentile <= 1.0:
+            raise ValueError("percentile must be in (0, 1]")
+        self.percentile = percentile
+        self.value = 0.0
+        self.batches = 0
+
+    def update(self, x) -> None:
+        ax = jnp.abs(x)
+        if self.percentile >= 1.0:
+            batch_max = float(jnp.max(ax))
+        else:
+            batch_max = float(jnp.quantile(ax.reshape(-1), self.percentile))
+        self.value = max(self.value, batch_max)
+        self.batches += 1
+
+    def scale(self, r: float = q.INT8_R) -> float:
+        if self.batches == 0:
+            raise ValueError("calibrator saw no data")
+        return max(self.value, q.SCALE_EPS) / r
+
+
+class VCalibration(NamedTuple):
+    """Calibrated tensor-level V scale, one per (layer, head-group)."""
+    s_v: float
+    batches: int
+    absmax: float
+
+
+def calibrate_v_scale(v_batches, percentile: float = 1.0,
+                      r: float = q.INT8_R) -> VCalibration:
+    """Estimate S_V = max(|V|)/R over a stream of calibration batches.
+
+    v_batches: iterable of (..., N, d) V activations.
+    """
+    cal = RunningAbsMax(percentile)
+    for v in v_batches:
+        cal.update(v)
+    return VCalibration(s_v=cal.scale(r), batches=cal.batches, absmax=cal.value)
+
+
+def quantize_v_with_calibration(v, cal: VCalibration):
+    """Quantize V with a pre-calibrated tensor scale (instead of the live
+    max): values beyond the calibrated range saturate, as on hardware."""
+    v_q = jnp.clip(jnp.round(v / cal.s_v), -(q.INT8_R + 1), q.INT8_R).astype(jnp.int8)
+    return v_q, jnp.float32(cal.s_v)
+
+
+def quantize_weights_per_channel(w, r: float = q.INT8_R):
+    """Per-output-channel symmetric weight quantization for projection
+    GEMMs (ablation extension; weights are static so this runs once).
+
+    w: (d_in, d_out). Returns (w_q int8, scales (d_out,))."""
+    scales = jnp.maximum(jnp.max(jnp.abs(w), axis=0), q.SCALE_EPS) / r
+    w_q = jnp.clip(jnp.round(w / scales[None, :]), -(r + 1), r).astype(jnp.int8)
+    return w_q, scales.astype(jnp.float32)
+
+
+def dequantize_weights_per_channel(w_q, scales):
+    return w_q.astype(jnp.float32) * scales[None, :]

@@ -1,0 +1,12 @@
+# L1: Pallas kernels for INT-FlashAttention and its baselines.
+#
+# Public surface:
+#   int_flash.int_flash_attention           — Algorithm 1 (INT8, INT4 via r=)
+#   int_flash.int_flash_attention_fp32_in   — quantize-inside-graph pipeline
+#   int_flash.half_int8_flash_attention     — INT8 Q/K, float V variant
+#   flash_fp16.flash_attention              — FlashAttention-2 float baseline
+#   flash_fp8.fp8_flash_attention           — FA3-style tensor-level FP8
+#   quantize.*                              — PTQ primitives + MRE metric
+#   ref.*                                   — pure-jnp oracles
+
+from . import flash_fp8, flash_fp16, int_flash, quantize, ref  # noqa: F401

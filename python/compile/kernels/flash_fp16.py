@@ -1,0 +1,98 @@
+# FlashAttention-2 float baseline (paper §2.2, "FlashAttention [FP16]").
+#
+# Classic FA2 forward: 2-D (T_r, T_c) grid, online softmax with running
+# (m, l) statistics and un-normalized accumulator in VMEM scratch. The
+# compute dtype is configurable (f32 on the CPU interpret path; bf16 is
+# the TPU-native stand-in for the paper's FP16 — see DESIGN.md
+# §Hardware-Adaptation).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, sm_scale, causal, block_q, block_k, n_q, n_k,
+):
+    j = pl.program_id(1)
+    n_kv_blocks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # S_ij = (Q_i K_jᵀ) · sm_scale — float GEMM with f32 accumulation
+    s = jax.lax.dot_general(
+        q_ref[...], k_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale
+
+    if causal:
+        i = pl.program_id(0)
+        row = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(col <= row + (n_k - n_q), s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...] / l_scr[...][:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    qf, kf, vf, sm_scale=None, causal=False, block_q=64, block_k=64,
+    interpret=True,
+):
+    """FlashAttention-2 forward for one head: (N, d) float in, f32 out."""
+    n_q, d = qf.shape
+    n_k = kf.shape[0]
+    if sm_scale is None:
+        sm_scale = float(1.0 / (d ** 0.5))
+    block_q = min(block_q, n_q)
+    block_k = min(block_k, n_k)
+    if n_q % block_q or n_k % block_k:
+        raise ValueError("sequence lengths must be multiples of block sizes")
+    t_r, t_c = n_q // block_q, n_k // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_q=n_q, n_k=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(t_r, t_c),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)

@@ -1,0 +1,134 @@
+# FlashAttention-3-style FP8 baseline (paper §2.2 / §4 "FlashAttention [FP8]").
+#
+# FA3 on Hopper quantizes Q, K, V *tensor-level* to e4m3 and runs both GEMMs
+# on the FP8 tensor cores with f32 accumulation. This environment has no FP8
+# hardware, so the kernel consumes operands already rounded to the e4m3
+# value lattice (stored as f32 — see quantize.quantize_fp8_per_tensor) and
+# performs float GEMMs: the *value semantics* match Hopper QGMMA exactly
+# (e4m3 operand grid, f32 accumulate), which is all the MRE experiments
+# (paper Tables 1-2) measure. P̃ ∈ (0,1] is additionally rounded to the
+# e4m3 grid before the PV product, mirroring FA3's FP8 second GEMM.
+#
+# Scale handling: the tensor-level scales s_q, s_k, s_v are data-dependent
+# traced scalars, so they are not closed over by the kernel. Instead the
+# combined (s_q·s_k) dequant factor pre-scales the Q operand outside the
+# pallas_call (a scalar multiple of a lattice tensor — GEMM-linear, so the
+# value semantics are identical to FA3's post-accumulator rescale), and
+# s_v rescales the output. Only the static softmax temperature lives in
+# the kernel closure.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import quantize as q
+
+_NEG_INF = -1e30
+
+
+def _fp8_flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, sm_scale, causal, block_q, block_k, n_q, n_k,
+):
+    j = pl.program_id(1)
+    n_kv_blocks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # "FP8 GEMM": operands on the e4m3 grid (Q pre-scaled by s_q·s_k),
+    # f32 accumulation.
+    s = jax.lax.dot_general(
+        q_ref[...], k_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale
+
+    if causal:
+        i = pl.program_id(0)
+        row = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(col <= row + (n_k - n_q), s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    # FA3's second GEMM is FP8 too: round P̃ to the e4m3 lattice.
+    p8 = p.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(
+        p8, v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[...] = acc_scr[...] / l_scr[...][:, None]
+
+
+def fp8_flash_attention(
+    q_e4m3, s_q, k_e4m3, s_k, v_e4m3, s_v,
+    sm_scale=None, causal=False, block_q=64, block_k=64, interpret=True,
+):
+    """FP8 flash attention for one head.
+
+    q_e4m3/k_e4m3/v_e4m3: f32 tensors whose values lie on the e4m3 lattice.
+    s_q/s_k/s_v: tensor-level dequantization scales (scalars, may be traced).
+    """
+    n_q, d = q_e4m3.shape
+    n_k = k_e4m3.shape[0]
+    if sm_scale is None:
+        sm_scale = float(1.0 / (d ** 0.5))
+    block_q = min(block_q, n_q)
+    block_k = min(block_k, n_k)
+    if n_q % block_q or n_k % block_k:
+        raise ValueError("sequence lengths must be multiples of block sizes")
+    t_r, t_c = n_q // block_q, n_k // block_k
+
+    kernel = functools.partial(
+        _fp8_flash_kernel,
+        sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_q=n_q, n_k=n_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(t_r, t_c),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_e4m3 * (s_q * s_k), k_e4m3, v_e4m3)
+    return out * s_v
+
+
+def fp8_attention_fp32_in(
+    qf, kf, vf, sm_scale=None, causal=False, block_q=64, block_k=64,
+    interpret=True,
+):
+    """f32 activations → tensor-level e4m3 quantization → FP8 flash kernel."""
+    q8, sq = q.quantize_fp8_per_tensor(qf)
+    k8, sk = q.quantize_fp8_per_tensor(kf)
+    v8, sv = q.quantize_fp8_per_tensor(vf)
+    return fp8_flash_attention(
+        q8, sq, k8, sk, v8, sv,
+        sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,281 @@
+# INT-FlashAttention forward kernel (paper Algorithm 1) in Pallas.
+#
+# TPU-shaped mapping of the paper's Ampere/Triton kernel (DESIGN.md
+# §Hardware-Adaptation):
+#   - the (B_r × B_c) threadblock tile  → a 2-D Pallas grid (T_r, T_c) with
+#     the KV loop as the innermost grid dimension; BlockSpec index maps
+#     express the HBM↔VMEM block schedule that the CUDA version expressed
+#     with cp.async staging;
+#   - INT8 tensor-core WMMA             → MXU dot_general on int8 operands
+#     with preferred_element_type=int32;
+#   - the running statistics (m, l) and the un-normalized accumulator Õ
+#     live in VMEM scratch across the inner grid dimension (persistent
+#     because T_c is the minormost grid axis);
+#   - warp rowmax/rowsum reductions     → lane-axis jnp.max/jnp.sum (VPU).
+#
+# Kernels are executed with interpret=True: the CPU PJRT plugin cannot run
+# Mosaic custom-calls, so CPU validates numerics and TPU performance is
+# estimated analytically (DESIGN.md §7).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import quantize as q
+
+_NEG_INF = -1e30
+
+
+def _int_flash_kernel(
+    # refs in BlockSpec order
+    sq_ref, sk_ref, q_ref, k_ref, v_ref, o_ref,
+    # scratch
+    m_scr, l_scr, acc_scr,
+    *, sm_scale, r, causal, block_q, block_k, n_q, n_k,
+):
+    """One (i, j) tile of Algorithm 1 (lines 9-13; 16 on the last j)."""
+    j = pl.program_id(1)
+    n_kv_blocks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():  # line 6: O = 0, l = 0, m = -inf
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # line 9: S = diag(S_Q) (Q₈ K₈ᵀ) diag(S_K) — INT8×INT8→INT32 GEMM (MXU),
+    # then the rank-1 row/col rescale in f32 (VPU). sm_scale (1/√d) folds
+    # into the same rescale for free.
+    s32 = jax.lax.dot_general(
+        q_ref[...], k_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    s = (
+        s32.astype(jnp.float32)
+        * sq_ref[...][:, None]
+        * sk_ref[...][None, :]
+        * sm_scale
+    )
+
+    if causal:
+        i = pl.program_id(0)
+        row = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(col <= row + (n_k - n_q), s, _NEG_INF)
+
+    # line 10: running rowmax
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+
+    # line 11: P = round(R · exp(S − m)) ∈ I₈ — the weight-matrix
+    # requantization whose scale 1/R is absorbed by l (line 12) and
+    # cancelled by the final diag(l)⁻¹ rescale (line 16).
+    p = jnp.round(r * jnp.exp(s - m_new[:, None]))
+    p8 = p.astype(jnp.int8)
+
+    # line 12: l = l·e^(m_prev−m_new) + rowsum(P)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+
+    # line 13: Õ = diag(α) Õ + P₈ V₈ — second INT8 GEMM
+    pv = jax.lax.dot_general(
+        p8, v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv.astype(jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():  # line 16 (S_V applied by the caller — see int_flash_attention)
+        o_ref[...] = acc_scr[...] / l_scr[...][:, None]
+
+
+def int_flash_attention(
+    q8, s_q, k8, s_k, v8, s_v,
+    sm_scale=None, causal=False, block_q=64, block_k=64,
+    r=q.INT8_R, interpret=True,
+):
+    """INT-FlashAttention forward (Algorithm 1) for one head.
+
+    Args:
+      q8, k8, v8: int8 (N_q, d) / (N_k, d) / (N_k, d) quantized operands.
+      s_q, s_k: per-token f32 scales (N_q,), (N_k,) — paper's S_Q, S_K.
+      s_v: scalar f32 tensor-level V scale — paper's S_V.
+      sm_scale: softmax temperature; defaults to 1/sqrt(d). Folded into the
+        S rescale (line 9), exactly as a fused implementation would.
+      r: quantization range of the P matrix (127 for INT8, 7 for INT4 —
+        the paper's "compatible with other data formats" knob).
+
+    Returns f32 (N_q, d) attention output.
+
+    The trailing `* s_v` (line 15-16's tensor-level dequantization) is a
+    scalar broadcast multiply applied outside pallas_call; XLA fuses it
+    into the kernel epilogue, and keeping it outside lets s_v stay a traced
+    scalar without an SMEM BlockSpec.
+    """
+    n_q, d = q8.shape
+    n_k = k8.shape[0]
+    if sm_scale is None:
+        sm_scale = float(1.0 / (d ** 0.5))
+    block_q = min(block_q, n_q)
+    block_k = min(block_k, n_k)
+    if n_q % block_q or n_k % block_k:
+        raise ValueError(
+            f"sequence lengths ({n_q}, {n_k}) must be multiples of block sizes "
+            f"({block_q}, {block_k}); pad inputs (see model.pad_to_block)"
+        )
+    t_r, t_c = n_q // block_q, n_k // block_k
+
+    kernel = functools.partial(
+        _int_flash_kernel,
+        sm_scale=sm_scale, r=float(r), causal=causal,
+        block_q=block_q, block_k=block_k, n_q=n_q, n_k=n_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(t_r, t_c),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),      # S_Q block (line 5)
+            pl.BlockSpec((block_k,), lambda i, j: (j,)),      # S_K block (line 8)
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),  # Q_i (line 5)
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),  # K_j (line 8)
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),  # V_j (line 8)
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),     # m (running rowmax)
+            pltpu.VMEM((block_q,), jnp.float32),     # l (running rowsum, carries R)
+            pltpu.VMEM((block_q, d), jnp.float32),   # Õ accumulator
+        ],
+        interpret=interpret,
+    )(s_q, s_k, q8, k8, v8)
+    return out * s_v
+
+
+def int_flash_attention_fp32_in(
+    qf, kf, vf, sm_scale=None, causal=False, block_q=64, block_k=64,
+    r=q.INT8_R, interpret=True,
+):
+    """End-to-end pipeline: f32 activations → token-level PTQ → Algorithm 1.
+
+    This is the entry point the AOT artifacts export: quantization runs
+    inside the jitted graph (activation scales are per-token *runtime*
+    values), so the rust runtime feeds plain f32 and the whole quantize →
+    INT8-flash → dequantize pipeline is one compiled executable.
+    """
+    if r == q.INT4_R:
+        q_t, sq_t = q.quantize_per_token_int4(qf)
+        k_t, sk_t = q.quantize_per_token_int4(kf)
+        v_t, sv_t = q.quantize_per_tensor_int4(vf)
+    else:
+        q_t, sq_t = q.quantize_per_token(qf)
+        k_t, sk_t = q.quantize_per_token(kf)
+        v_t, sv_t = q.quantize_per_tensor(vf)
+    return int_flash_attention(
+        q_t, sq_t, k_t, sk_t, v_t, sv_t,
+        sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k, r=r, interpret=interpret,
+    )
+
+
+def _half_int8_kernel(
+    sq_ref, sk_ref, q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, sm_scale, causal, block_q, block_k, n_q, n_k,
+):
+    """half-INT8 tile: INT8 QKᵀ GEMM, float P̃ and float PV GEMM."""
+    j = pl.program_id(1)
+    n_kv_blocks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    s32 = jax.lax.dot_general(
+        q_ref[...], k_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    s = (
+        s32.astype(jnp.float32)
+        * sq_ref[...][:, None]
+        * sk_ref[...][None, :]
+        * sm_scale
+    )
+    if causal:
+        i = pl.program_id(0)
+        row = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(col <= row + (n_k - n_q), s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])  # float P̃ — no R-quantization
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v_ref[...]
+    m_scr[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[...] = acc_scr[...] / l_scr[...][:, None]
+
+
+def half_int8_flash_attention(
+    q8, s_q, k8, s_k, vf,
+    sm_scale=None, causal=False, block_q=64, block_k=64, interpret=True,
+):
+    """half-INT8 variant (paper §4): INT8 Q/K, float V, float P·V GEMM."""
+    n_q, d = q8.shape
+    n_k = k8.shape[0]
+    if sm_scale is None:
+        sm_scale = float(1.0 / (d ** 0.5))
+    block_q = min(block_q, n_q)
+    block_k = min(block_k, n_k)
+    if n_q % block_q or n_k % block_k:
+        raise ValueError("sequence lengths must be multiples of block sizes")
+    t_r, t_c = n_q // block_q, n_k // block_k
+
+    kernel = functools.partial(
+        _half_int8_kernel,
+        sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_q=n_q, n_k=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(t_r, t_c),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda i, j: (j,)),
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(s_q, s_k, q8, k8, vf.astype(jnp.float32))
+
+
+def half_int8_attention_fp32_in(
+    qf, kf, vf, sm_scale=None, causal=False, block_q=64, block_k=64,
+    interpret=True,
+):
+    """f32 activations → token-level INT8 Q/K → half-INT8 flash kernel."""
+    q_t, sq_t = q.quantize_per_token(qf)
+    k_t, sk_t = q.quantize_per_token(kf)
+    return half_int8_flash_attention(
+        q_t, sq_t, k_t, sk_t, vf,
+        sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,32 @@
+# Error metrics for the quantization-accuracy experiments (paper §4.2).
+
+import jax.numpy as jnp
+
+
+def mre(approx, exact):
+    """Mean Relative Error — relative-L1 form: Σ|a−e| / Σ|e|.
+
+    The paper defines MRE as the "Mean Relative Error between original
+    activations and activations after quantization and subsequent
+    restoration" without pinning down the pointwise-vs-aggregate form.
+    The pointwise form mean(|a−e|/|e|) is dominated by near-zero attention
+    outputs (denominator blow-up) and is hypersensitive to the ε guard;
+    the relative-L1 form is scale-invariant and reproduces the paper's
+    *ratios* between methods almost exactly (see EXPERIMENTS.md E2/E3),
+    so it is the form used throughout this repo.
+    """
+    return jnp.sum(jnp.abs(approx - exact)) / jnp.sum(jnp.abs(exact))
+
+
+def mre_pointwise(approx, exact, eps=1e-6):
+    """Pointwise MRE: mean(|a−e| / (|e|+ε)). Reported alongside for
+    completeness; see `mre` for why it is not the primary metric."""
+    return jnp.mean(jnp.abs(approx - exact) / (jnp.abs(exact) + eps))
+
+
+def max_abs_error(approx, exact):
+    return jnp.max(jnp.abs(approx - exact))
+
+
+def rmse(approx, exact):
+    return jnp.sqrt(jnp.mean((approx - exact) ** 2))

@@ -1,0 +1,100 @@
+# Quantization primitives for INT-FlashAttention (paper §3.2).
+#
+# Linear *symmetric* quantization:
+#   token-level  : one scale per row   — S_Q = rowmax(|Q|)/R, S_K = rowmax(|K|)/R
+#   tensor-level : one scale per tensor — S_V = max(|V|)/R
+# with R = 127 for INT8 (paper Algorithm 1 header) and R = 7 for INT4
+# (paper §1: "also compatible with other data formats like INT4").
+#
+# FP8 (e4m3) emulation backs the FlashAttention-3-style baseline: jax ships
+# the ml_dtypes float8_e4m3fn grid, so a cast round-trip reproduces the
+# exact representable-value lattice (round-to-nearest-even, saturating at
+# ±448) that Hopper hardware uses.
+
+import jax
+import jax.numpy as jnp
+
+INT8_R = 127.0
+INT4_R = 7.0
+FP8_E4M3_MAX = 448.0
+
+# Floor for quantization scales: protects all-zero rows (scale would be 0
+# and x/scale would be inf). Any row whose max |x| is below this quantizes
+# to all-zeros, which is the correct behaviour for a zero row.
+SCALE_EPS = 1e-12
+
+
+def _clip_round(x, r):
+    # Symmetric signed range [-(r+1), r]; the paper uses I8 = [-128, 127]
+    # but symmetric quantization of x/s with s = max|x|/r never exceeds ±r.
+    return jnp.clip(jnp.round(x), -(r + 1.0), r)
+
+
+def quantize_per_token(x, r=INT8_R):
+    """Token-level symmetric quantization along the last-but-one axis.
+
+    x: (..., N, d) float. Returns (x_q int8, scales (..., N) float32) with
+    x ≈ x_q * scales[..., None].
+    """
+    scales = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), SCALE_EPS) / r
+    x_q = _clip_round(x / scales[..., None], r).astype(jnp.int8)
+    return x_q, scales.astype(jnp.float32)
+
+
+def quantize_per_tensor(x, r=INT8_R):
+    """Tensor-level symmetric quantization. Returns (x_q int8, scalar scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), SCALE_EPS) / r
+    x_q = _clip_round(x / scale, r).astype(jnp.int8)
+    return x_q, scale.astype(jnp.float32)
+
+
+def dequantize_per_token(x_q, scales):
+    """Inverse of quantize_per_token."""
+    return x_q.astype(jnp.float32) * scales[..., None]
+
+
+def dequantize_per_tensor(x_q, scale):
+    """Inverse of quantize_per_tensor."""
+    return x_q.astype(jnp.float32) * scale
+
+
+def quantize_per_token_int4(x):
+    """INT4 token-level quantization (values in [-8, 7], stored in int8)."""
+    return quantize_per_token(x, r=INT4_R)
+
+
+def quantize_per_tensor_int4(x):
+    return quantize_per_tensor(x, r=INT4_R)
+
+
+def fp8_e4m3_roundtrip(x):
+    """Round x to the nearest float8_e4m3fn representable value.
+
+    Emulates Hopper FP8 storage: cast down (round-to-nearest-even,
+    saturate to ±448) and back up to f32. jax's cast maps out-of-range
+    values to NaN rather than saturating as the hardware conversion does,
+    so clamp explicitly first.
+    """
+    x = jnp.clip(x, -FP8_E4M3_MAX, FP8_E4M3_MAX)
+    return x.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def quantize_fp8_per_tensor(x):
+    """Tensor-level FP8 quantization as used by FlashAttention-3.
+
+    Scales the tensor so its max |value| hits the top of the e4m3 range
+    (maximizing grid utilization), then rounds to the e4m3 lattice.
+    Returns (x_fp8_as_f32, scale) with x ≈ x_fp8_as_f32 * scale.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), SCALE_EPS) / FP8_E4M3_MAX
+    x_q = fp8_e4m3_roundtrip(x / scale)
+    return x_q, scale.astype(jnp.float32)
+
+
+def mean_relative_error(approx, exact, eps=1e-6):
+    """MRE as defined in paper §4.2: mean(|approx - exact| / |exact|).
+
+    eps guards near-zero exact entries (the paper does not specify its
+    guard; results are insensitive for the activation scales used).
+    """
+    return jnp.mean(jnp.abs(approx - exact) / (jnp.abs(exact) + eps))

@@ -1,0 +1,197 @@
+# Pure-jnp correctness oracles for the Pallas kernels.
+#
+# Three tiers of reference:
+#   1. standard_attention        — exact fp32 softmax attention (paper §2.1).
+#   2. *_reference pipelines     — non-tiled emulations of each quantized
+#      variant's arithmetic (identical value semantics to the kernels,
+#      modulo float-summation order), used for tight allclose checks.
+#   3. blocked references        — same block-iteration order as the Pallas
+#      kernels, for bitwise-tier comparisons of the online-softmax merge.
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize as q
+
+_NEG_INF = -1e30  # finite -inf stand-in: keeps exp() exact-zero without nan risk
+
+
+def _causal_mask(n_q, n_k):
+    # query i may attend to keys j <= i (aligned ends for n_q == n_k)
+    i = jnp.arange(n_q)[:, None]
+    j = jnp.arange(n_k)[None, :]
+    return j <= i + (n_k - n_q)
+
+
+def standard_attention(qm, km, vm, sm_scale=None, causal=False):
+    """Exact attention O = softmax(Q Kᵀ · sm_scale) V in fp32.
+
+    qm, km, vm: (N, d) fp32 (single head). sm_scale defaults to 1/sqrt(d).
+    """
+    d = qm.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s = (qm @ km.T) * sm_scale
+    if causal:
+        s = jnp.where(_causal_mask(qm.shape[0], km.shape[0]), s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ vm
+
+
+def int_flash_reference(q8, s_q, k8, s_k, v8, s_v, sm_scale, causal=False):
+    """Single-block (non-tiled) evaluation of Algorithm 1's arithmetic.
+
+    Inputs are already quantized: q8/k8/v8 int8, s_q/s_k per-token scales,
+    s_v scalar. Reproduces lines 9-16 with T_r = T_c = 1:
+        S = diag(s_q) (Q₈ K₈ᵀ) diag(s_k) · sm_scale
+        m = rowmax(S);  P = round(R · exp(S − m));  l = rowsum(P)
+        O = diag(l)⁻¹ (P V₈) · s_v
+    """
+    s32 = jax.lax.dot_general(
+        q8, k8, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    s = s32.astype(jnp.float32) * s_q[:, None] * s_k[None, :] * sm_scale
+    if causal:
+        s = jnp.where(_causal_mask(q8.shape[0], k8.shape[0]), s, _NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.round(q.INT8_R * jnp.exp(s - m[:, None]))
+    l = jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p.astype(jnp.int8), v8, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return pv.astype(jnp.float32) / l[:, None] * s_v
+
+
+def int_flash_blocked_reference(
+    q8, s_q, k8, s_k, v8, s_v, sm_scale, block_q, block_k, causal=False
+):
+    """Blocked evaluation with the same (i, j) iteration order as the
+    Pallas kernel — matches the kernel to float-associativity."""
+    n, d = q8.shape
+    n_k = k8.shape[0]
+    assert n % block_q == 0 and n_k % block_k == 0
+    out = jnp.zeros((n, d), jnp.float32)
+    for i0 in range(0, n, block_q):
+        qi = q8[i0 : i0 + block_q]
+        sqi = s_q[i0 : i0 + block_q]
+        m = jnp.full((block_q,), -jnp.inf)
+        l = jnp.zeros((block_q,))
+        acc = jnp.zeros((block_q, d))
+        for j0 in range(0, n_k, block_k):
+            kj = k8[j0 : j0 + block_k]
+            skj = s_k[j0 : j0 + block_k]
+            s32 = jax.lax.dot_general(
+                qi, kj, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            s = s32.astype(jnp.float32) * sqi[:, None] * skj[None, :] * sm_scale
+            if causal:
+                gi = i0 + jnp.arange(block_q)[:, None] + (n_k - n)
+                gj = j0 + jnp.arange(block_k)[None, :]
+                s = jnp.where(gj <= gi, s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.round(q.INT8_R * jnp.exp(s - m_new[:, None]))
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            pv = jax.lax.dot_general(
+                p.astype(jnp.int8), v8[j0 : j0 + block_k],
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
+            )
+            acc = acc * alpha[:, None] + pv.astype(jnp.float32)
+            m = m_new
+        out = out.at[i0 : i0 + block_q].set(acc / l[:, None] * s_v)
+    return out
+
+
+def half_int8_reference(q8, s_q, k8, s_k, vf, sm_scale, causal=False):
+    """half-INT8 variant (paper §4): INT8 Q/K with token scales, float V.
+
+    P̃ stays float (no R-quantization of the weight matrix), PV is a float
+    GEMM — this is why half-INT8's MRE is ~5× below full-INT8's.
+    """
+    s32 = jax.lax.dot_general(
+        q8, k8, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    s = s32.astype(jnp.float32) * s_q[:, None] * s_k[None, :] * sm_scale
+    if causal:
+        s = jnp.where(_causal_mask(q8.shape[0], k8.shape[0]), s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ vf
+
+
+def fp8_reference(qf, kf, vf, sm_scale, causal=False):
+    """FlashAttention-3-style tensor-level FP8 baseline (emulated e4m3).
+
+    Q, K, V are quantized tensor-level to the e4m3 grid; the attention is
+    then evaluated on the dequantized values (value semantics of an FP8
+    GEMM with f32 accumulation, which is what Hopper's QGMMA performs).
+    P is also rounded to e4m3 before the PV product, mirroring FA3's FP8
+    second GEMM.
+    """
+    q8, sq = q.quantize_fp8_per_tensor(qf)
+    k8, sk = q.quantize_fp8_per_tensor(kf)
+    v8, sv = q.quantize_fp8_per_tensor(vf)
+    s = (q8 @ k8.T) * (sq * sk * sm_scale)
+    if causal:
+        s = jnp.where(_causal_mask(qf.shape[0], kf.shape[0]), s, _NEG_INF)
+    # FA3 keeps P̃ un-normalized (∈ (0,1], directly representable in e4m3),
+    # rounds it for the FP8 PV GEMM, and normalizes by diag(l)⁻¹ at the end
+    # — same order as the kernel's online-softmax statistics.
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[:, None])
+    p8 = q.fp8_e4m3_roundtrip(p)
+    l = jnp.sum(p, axis=-1)
+    return (p8 @ v8) / l[:, None] * sv
+
+
+def int4_flash_reference(q4, s_q, k4, s_k, v4, s_v, sm_scale, causal=False):
+    """INT4 extension: same Algorithm 1 arithmetic with R = 7."""
+    s32 = jax.lax.dot_general(
+        q4, k4, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    s = s32.astype(jnp.float32) * s_q[:, None] * s_k[None, :] * sm_scale
+    if causal:
+        s = jnp.where(_causal_mask(q4.shape[0], k4.shape[0]), s, _NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.round(q.INT4_R * jnp.exp(s - m[:, None]))
+    l = jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p.astype(jnp.int8), v4, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return pv.astype(jnp.float32) / l[:, None] * s_v
+
+
+def int_flash_full_pipeline(qf, kf, vf, sm_scale=None, causal=False):
+    """f32 in → quantize (token-level Q/K, tensor-level V) → Algorithm 1.
+
+    The end-to-end value pipeline that the AOT artifact implements; used
+    for the MRE tables (paper §4.2) against standard_attention.
+    """
+    d = qf.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q8, s_q = q.quantize_per_token(qf)
+    k8, s_k = q.quantize_per_token(kf)
+    v8, s_v = q.quantize_per_tensor(vf)
+    return int_flash_reference(q8, s_q, k8, s_k, v8, s_v, sm_scale, causal)
+
+
+def half_int8_full_pipeline(qf, kf, vf, sm_scale=None, causal=False):
+    d = qf.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q8, s_q = q.quantize_per_token(qf)
+    k8, s_k = q.quantize_per_token(kf)
+    return half_int8_reference(q8, s_q, k8, s_k, vf, sm_scale, causal)
+
+
+def int4_flash_full_pipeline(qf, kf, vf, sm_scale=None, causal=False):
+    d = qf.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q4, s_q = q.quantize_per_token_int4(qf)
+    k4, s_k = q.quantize_per_token_int4(kf)
+    v4, s_v = q.quantize_per_tensor_int4(vf)
+    return int4_flash_reference(q4, s_q, k4, s_k, v4, s_v, sm_scale, causal)

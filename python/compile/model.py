@@ -1,0 +1,225 @@
+# L2: JAX model layer — multi-head attention and a small transformer LM
+# built on the L1 kernels. Everything here is build-time-only Python: the
+# functions in this module are lowered by aot.py to HLO text and executed
+# from the rust runtime.
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_fp8, flash_fp16, int_flash, quantize as q
+
+VARIANTS = ("int8", "half_int8", "fp8", "fp16", "int4")
+
+
+def pad_to_block(x, block, axis):
+    """Zero-pad `axis` of x up to a multiple of `block` (flash kernels
+    require block-divisible sequence lengths)."""
+    n = x.shape[axis]
+    rem = (-n) % block
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def attention_single_head(qf, kf, vf, variant, causal=False, block_q=64, block_k=64):
+    """Dispatch one (N, d) attention head to the chosen kernel variant.
+
+    All variants take f32 activations; quantization happens inside the
+    graph (activation scales are runtime values — see
+    int_flash.int_flash_attention_fp32_in).
+    """
+    if variant == "int8":
+        return int_flash.int_flash_attention_fp32_in(
+            qf, kf, vf, causal=causal, block_q=block_q, block_k=block_k
+        )
+    if variant == "int4":
+        return int_flash.int_flash_attention_fp32_in(
+            qf, kf, vf, causal=causal, block_q=block_q, block_k=block_k, r=q.INT4_R
+        )
+    if variant == "half_int8":
+        return int_flash.half_int8_attention_fp32_in(
+            qf, kf, vf, causal=causal, block_q=block_q, block_k=block_k
+        )
+    if variant == "fp8":
+        return flash_fp8.fp8_attention_fp32_in(
+            qf, kf, vf, causal=causal, block_q=block_q, block_k=block_k
+        )
+    if variant == "fp16":
+        return flash_fp16.flash_attention(
+            qf, kf, vf, causal=causal, block_q=block_q, block_k=block_k
+        )
+    raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
+
+
+def attention_bhnd(qf, kf, vf, variant, causal=False, block_q=64, block_k=64):
+    """Batched multi-head attention: (B, H, N, d) → (B, H, N, d).
+
+    vmap over batch and head of the single-head kernel — the Pallas
+    batching rule adds leading grid dimensions, which is exactly how the
+    paper's CUDA kernel parallelizes over (batch, head) blocks.
+    """
+    fn = functools.partial(
+        attention_single_head,
+        variant=variant, causal=causal, block_q=block_q, block_k=block_k,
+    )
+    return jax.vmap(jax.vmap(fn))(qf, kf, vf)
+
+
+# ---------------------------------------------------------------------------
+# Small transformer LM (byte-level) for the end-to-end serving example.
+# ---------------------------------------------------------------------------
+
+class MHAParams(NamedTuple):
+    wq: jax.Array  # (d_model, d_model)
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+
+
+class BlockParams(NamedTuple):
+    ln1_scale: jax.Array  # (d_model,)
+    ln1_bias: jax.Array
+    attn: MHAParams
+    ln2_scale: jax.Array
+    ln2_bias: jax.Array
+    w1: jax.Array  # (d_model, d_ff)
+    b1: jax.Array
+    w2: jax.Array  # (d_ff, d_model)
+    b2: jax.Array
+
+
+class LMParams(NamedTuple):
+    embed: jax.Array      # (vocab, d_model)
+    pos_embed: jax.Array  # (max_seq, d_model)
+    blocks: tuple         # tuple[BlockParams]
+    ln_f_scale: jax.Array
+    ln_f_bias: jax.Array
+    # lm head ties to embed.T
+
+
+class LMConfig(NamedTuple):
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    max_seq: int = 1024
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+def init_lm(cfg: LMConfig, seed: int = 0) -> LMParams:
+    """Deterministic init — the AOT artifact bakes these weights in, and the
+    rust integration tests regenerate golden outputs against them."""
+    key = jax.random.PRNGKey(seed)
+
+    def dense(key, shape, scale=None):
+        scale = scale or (1.0 / (shape[0] ** 0.5))
+        return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+    keys = iter(jax.random.split(key, 6 + 8 * cfg.n_layers))
+    blocks = []
+    for _ in range(cfg.n_layers):
+        blocks.append(BlockParams(
+            ln1_scale=jnp.ones((cfg.d_model,)),
+            ln1_bias=jnp.zeros((cfg.d_model,)),
+            attn=MHAParams(
+                wq=dense(next(keys), (cfg.d_model, cfg.d_model)),
+                wk=dense(next(keys), (cfg.d_model, cfg.d_model)),
+                wv=dense(next(keys), (cfg.d_model, cfg.d_model)),
+                wo=dense(next(keys), (cfg.d_model, cfg.d_model)),
+            ),
+            ln2_scale=jnp.ones((cfg.d_model,)),
+            ln2_bias=jnp.zeros((cfg.d_model,)),
+            w1=dense(next(keys), (cfg.d_model, cfg.d_ff)),
+            b1=jnp.zeros((cfg.d_ff,)),
+            w2=dense(next(keys), (cfg.d_ff, cfg.d_model)),
+            b2=jnp.zeros((cfg.d_model,)),
+        ))
+    return LMParams(
+        embed=dense(next(keys), (cfg.vocab, cfg.d_model), scale=0.02),
+        pos_embed=dense(next(keys), (cfg.max_seq, cfg.d_model), scale=0.02),
+        blocks=tuple(blocks),
+        ln_f_scale=jnp.ones((cfg.d_model,)),
+        ln_f_bias=jnp.zeros((cfg.d_model,)),
+    )
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def mha_forward(p: MHAParams, x, n_heads, variant, causal=True,
+                block_q=64, block_k=64):
+    """Multi-head attention over (B, N, d_model) activations.
+
+    The QKV projections stay float (the paper quantizes the attention
+    operator's activations, not the projection GEMMs); the (B, H, N, d_head)
+    tensors then flow through the variant kernel.
+    """
+    b, n, dm = x.shape
+    dh = dm // n_heads
+
+    def split(h):  # (B, N, dm) → (B, H, N, dh)
+        return h.reshape(b, n, n_heads, dh).transpose(0, 2, 1, 3)
+
+    qh = split(x @ p.wq)
+    kh = split(x @ p.wk)
+    vh = split(x @ p.wv)
+    oh = attention_bhnd(qh, kh, vh, variant, causal=causal,
+                        block_q=block_q, block_k=block_k)
+    o = oh.transpose(0, 2, 1, 3).reshape(b, n, dm)
+    return o @ p.wo
+
+
+def block_forward(p: BlockParams, x, n_heads, variant, causal=True,
+                  block_q=64, block_k=64):
+    """Pre-LN transformer block: x + MHA(LN(x)); x + MLP(LN(x))."""
+    x = x + mha_forward(p.attn, _layer_norm(x, p.ln1_scale, p.ln1_bias),
+                        n_heads, variant, causal, block_q, block_k)
+    h = _layer_norm(x, p.ln2_scale, p.ln2_bias)
+    h = jax.nn.gelu(h @ p.w1 + p.b1) @ p.w2 + p.b2
+    return x + h
+
+
+def lm_forward(params: LMParams, cfg: LMConfig, tokens, variant,
+               block_q=64, block_k=64):
+    """Causal LM forward: int32 tokens (B, N) → next-token logits (B, vocab).
+
+    This is the function the end-to-end serving artifact exports: one
+    prefill step returning the logits of the last position.
+    """
+    b, n = tokens.shape
+    x = params.embed[tokens] + params.pos_embed[:n][None]
+    for blk in params.blocks:
+        x = block_forward(blk, x, cfg.n_heads, variant, causal=True,
+                          block_q=block_q, block_k=block_k)
+    x = _layer_norm(x, params.ln_f_scale, params.ln_f_bias)
+    return x[:, -1, :] @ params.embed.T  # tied head, last position only
+
+
+def lm_loss(params: LMParams, cfg: LMConfig, tokens, variant="fp16",
+            block_q=64, block_k=64):
+    """Next-token cross-entropy over all positions (training-style loss,
+    used by the accuracy tests to compare variants on a *model-level*
+    metric, not just attention-output MRE)."""
+    b, n = tokens.shape
+    x = params.embed[tokens] + params.pos_embed[:n][None]
+    for blk in params.blocks:
+        x = block_forward(blk, x, cfg.n_heads, variant, causal=True,
+                          block_q=block_q, block_k=block_k)
+    x = _layer_norm(x, params.ln_f_scale, params.ln_f_bias)
+    logits = x @ params.embed.T  # (B, N, vocab)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.mean(nll)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Make `compile.*` importable when pytest runs from the repo root or from
+# python/ (the Makefile runs `cd python && pytest tests/`).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,82 @@
+# Calibration tests (PTQ scale estimation).
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import calibration as cal
+from compile.kernels import quantize as q
+
+
+def _batches(seed, n_batches=4, shape=(32, 16)):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_batches)
+    return [jax.random.normal(k, shape, jnp.float32) for k in keys]
+
+
+class TestRunningAbsMax:
+    def test_tracks_stream_max(self):
+        batches = _batches(0)
+        c = cal.RunningAbsMax()
+        for b in batches:
+            c.update(b)
+        expected = max(float(jnp.max(jnp.abs(b))) for b in batches)
+        assert c.value == pytest.approx(expected)
+
+    def test_percentile_below_max(self):
+        batches = _batches(1)
+        hard = cal.RunningAbsMax(1.0)
+        soft = cal.RunningAbsMax(0.99)
+        for b in batches:
+            hard.update(b)
+            soft.update(b)
+        assert soft.value < hard.value
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError, match="no data"):
+            cal.RunningAbsMax().scale()
+
+    def test_bad_percentile_raises(self):
+        with pytest.raises(ValueError):
+            cal.RunningAbsMax(0.0)
+        with pytest.raises(ValueError):
+            cal.RunningAbsMax(1.5)
+
+
+class TestVCalibration:
+    def test_scale_matches_stream(self):
+        batches = _batches(2)
+        vc = cal.calibrate_v_scale(batches)
+        assert vc.batches == len(batches)
+        assert vc.s_v == pytest.approx(vc.absmax / q.INT8_R)
+
+    def test_quantize_with_calibration_saturates(self):
+        vc = cal.VCalibration(s_v=0.01, batches=1, absmax=1.27)
+        v = jnp.array([[10.0, -10.0, 0.005]])
+        v_q, s = cal.quantize_v_with_calibration(v, vc)
+        assert int(v_q[0, 0]) == 127
+        assert int(v_q[0, 1]) == -128
+        assert abs(float(v_q[0, 2]) * float(s) - 0.005) < 0.01
+
+    def test_roundtrip_error_bound_in_range(self):
+        batches = _batches(3)
+        vc = cal.calibrate_v_scale(batches)
+        v = batches[0]
+        v_q, s = cal.quantize_v_with_calibration(v, vc)
+        err = jnp.max(jnp.abs(v_q.astype(jnp.float32) * s - v))
+        assert float(err) <= vc.s_v / 2 + 1e-7
+
+
+class TestWeightQuantization:
+    def test_per_channel_roundtrip(self):
+        w = jax.random.normal(jax.random.PRNGKey(4), (64, 32), jnp.float32)
+        w_q, scales = cal.quantize_weights_per_channel(w)
+        w_dq = cal.dequantize_weights_per_channel(w_q, scales)
+        err = jnp.max(jnp.abs(w - w_dq), axis=0)
+        assert bool(jnp.all(err <= scales / 2 + 1e-7))
+
+    def test_channel_extremum_hits_r(self):
+        w = jax.random.normal(jax.random.PRNGKey(5), (64, 32), jnp.float32)
+        w_q, _ = cal.quantize_weights_per_channel(w)
+        col_max = jnp.max(jnp.abs(w_q.astype(jnp.int32)), axis=0)
+        assert bool(jnp.all(col_max == 127))

@@ -1,0 +1,292 @@
+# Core correctness signal: the INT-FlashAttention Pallas kernel vs the
+# pure-jnp oracles (ref.py), including hypothesis sweeps over shapes,
+# block sizes, distributions and causal masking.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import int_flash, metrics, quantize as q, ref
+
+
+def _mk(seed, n, d, dist="normal"):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    if dist == "normal":
+        mk = lambda k: jax.random.normal(k, (n, d), jnp.float32)
+    else:
+        mk = lambda k: jax.random.uniform(k, (n, d), jnp.float32, minval=-0.5, maxval=0.5)
+    return mk(ks[0]), mk(ks[1]), mk(ks[2])
+
+
+def _quant(qf, kf, vf):
+    q8, sq = q.quantize_per_token(qf)
+    k8, sk = q.quantize_per_token(kf)
+    v8, sv = q.quantize_per_tensor(vf)
+    return q8, sq, k8, sk, v8, sv
+
+
+class TestKernelVsBlockedReference:
+    """The kernel must match the same-iteration-order jnp reference to
+    float-associativity precision — this pins the Algorithm 1 semantics."""
+
+    @pytest.mark.parametrize("causal", [False, True])
+    @pytest.mark.parametrize("n,d,bq,bk", [
+        (128, 32, 32, 32),
+        (128, 64, 64, 32),
+        (256, 64, 64, 64),
+        (192, 16, 32, 64),   # uneven T_r/T_c
+        (64, 128, 64, 64),   # d > block
+    ])
+    def test_matches_blocked_ref(self, n, d, bq, bk, causal):
+        qf, kf, vf = _mk(n + d, n, d)
+        q8, sq, k8, sk, v8, sv = _quant(qf, kf, vf)
+        sm = 1.0 / np.sqrt(d)
+        out_k = int_flash.int_flash_attention(
+            q8, sq, k8, sk, v8, sv, causal=causal, block_q=bq, block_k=bk
+        )
+        out_r = ref.int_flash_blocked_reference(
+            q8, sq, k8, sk, v8, sv, sm, min(bq, n), min(bk, n), causal=causal
+        )
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5, rtol=1e-4)
+
+    def test_single_block_equals_single_block_ref(self):
+        """With one (q, kv) block the kernel degenerates to Algorithm 1 with
+        T_r = T_c = 1 — must match int_flash_reference exactly."""
+        n, d = 64, 32
+        qf, kf, vf = _mk(7, n, d)
+        q8, sq, k8, sk, v8, sv = _quant(qf, kf, vf)
+        sm = 1.0 / np.sqrt(d)
+        out_k = int_flash.int_flash_attention(
+            q8, sq, k8, sk, v8, sv, block_q=64, block_k=64
+        )
+        out_r = ref.int_flash_reference(q8, sq, k8, sk, v8, sv, sm)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5, rtol=1e-4)
+
+
+class TestBlockInvariance:
+    """Online softmax is partition-invariant in exact arithmetic, but
+    Algorithm 1 rounds P against the *running* rowmax (line 11), which
+    depends on the KV partition — so invariance holds only to
+    quantization-noise order (≈ 1/2R relative). Two checks pin this:
+    exact invariance in the q-block dimension (rounding never depends on
+    B_r) and noise-bounded invariance in the kv dimension."""
+
+    @pytest.mark.parametrize("bq_pair", [(16, 32), (16, 64), (32, 128)])
+    def test_exact_invariance_in_q_blocks(self, bq_pair):
+        n, d = 128, 32
+        qf, kf, vf = _mk(11, n, d)
+        args = _quant(qf, kf, vf)
+        a = int_flash.int_flash_attention(*args, block_q=bq_pair[0], block_k=32)
+        b = int_flash.int_flash_attention(*args, block_q=bq_pair[1], block_k=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-6)
+
+    @pytest.mark.parametrize("bk", [16, 32, 64, 128])
+    def test_kv_partition_noise_bounded(self, bk):
+        n, d = 128, 32
+        qf, kf, vf = _mk(11, n, d)
+        args = _quant(qf, kf, vf)
+        base = int_flash.int_flash_attention(*args, block_q=32, block_k=16)
+        out = int_flash.int_flash_attention(*args, block_q=32, block_k=bk)
+        # ≈ P-rounding noise: well under 2% relative-L1
+        assert float(metrics.mre(out, base)) < 0.02
+
+
+class TestAgainstGold:
+    """MRE vs exact fp32 attention stays within the paper-scale envelope."""
+
+    @pytest.mark.parametrize("dist,bound", [("normal", 0.05), ("uniform", 0.02)])
+    def test_full_int8_mre(self, dist, bound):
+        n, d = 512, 64
+        qf, kf, vf = _mk(21, n, d, dist)
+        gold = ref.standard_attention(qf, kf, vf)
+        out = int_flash.int_flash_attention_fp32_in(qf, kf, vf)
+        assert float(metrics.mre(out, gold)) < bound
+
+    @pytest.mark.parametrize("dist,bound", [("normal", 0.02), ("uniform", 0.005)])
+    def test_half_int8_mre(self, dist, bound):
+        n, d = 512, 64
+        qf, kf, vf = _mk(22, n, d, dist)
+        gold = ref.standard_attention(qf, kf, vf)
+        out = int_flash.half_int8_attention_fp32_in(qf, kf, vf)
+        assert float(metrics.mre(out, gold)) < bound
+
+    def test_half_more_accurate_than_full(self):
+        """Paper Tables 1-2 ordering: half-INT8 error < full-INT8 error."""
+        n, d = 512, 64
+        qf, kf, vf = _mk(23, n, d)
+        gold = ref.standard_attention(qf, kf, vf)
+        full = int_flash.int_flash_attention_fp32_in(qf, kf, vf)
+        half = int_flash.half_int8_attention_fp32_in(qf, kf, vf)
+        assert float(metrics.mre(half, gold)) < float(metrics.mre(full, gold))
+
+    def test_causal_full_int8(self):
+        n, d = 256, 64
+        qf, kf, vf = _mk(24, n, d)
+        gold = ref.standard_attention(qf, kf, vf, causal=True)
+        out = int_flash.int_flash_attention_fp32_in(qf, kf, vf, causal=True)
+        assert float(metrics.mre(out, gold)) < 0.06
+
+    def test_int4_coarser_but_bounded(self):
+        n, d = 256, 64
+        qf, kf, vf = _mk(25, n, d)
+        gold = ref.standard_attention(qf, kf, vf)
+        out8 = int_flash.int_flash_attention_fp32_in(qf, kf, vf)
+        out4 = int_flash.int_flash_attention_fp32_in(qf, kf, vf, r=q.INT4_R)
+        e8, e4 = float(metrics.mre(out8, gold)), float(metrics.mre(out4, gold))
+        assert e8 < e4 < 1.0
+
+
+class TestAlgorithmOneInternals:
+    def test_l_carries_factor_r(self):
+        """Paper §3.2: l^(Tc) = R × l_float — verify the R factor is carried
+        by the running sum and cancelled by the final rescale."""
+        n, d = 64, 32
+        qf, kf, vf = _mk(31, n, d)
+        q8, sq, k8, sk, v8, sv = _quant(qf, kf, vf)
+        sm = 1.0 / np.sqrt(d)
+        s32 = jnp.einsum("id,jd->ij", q8.astype(jnp.int32), k8.astype(jnp.int32))
+        s = s32 * sq[:, None] * sk[None, :] * sm
+        m = jnp.max(s, axis=-1)
+        p_int = jnp.round(q.INT8_R * jnp.exp(s - m[:, None]))
+        l_int = jnp.sum(p_int, axis=-1)
+        l_float = jnp.sum(jnp.exp(s - m[:, None]), axis=-1)
+        np.testing.assert_allclose(
+            np.asarray(l_int), np.asarray(q.INT8_R * l_float), rtol=0.02
+        )
+
+    def test_p_block_fits_int8(self):
+        """round(R·exp(S−m)) ∈ [0, 127] always (m is the running rowmax)."""
+        n, d = 128, 32
+        qf, kf, vf = _mk(32, n, d)
+        q8, sq, k8, sk, v8, sv = _quant(qf, kf, vf)
+        s32 = jnp.einsum("id,jd->ij", q8.astype(jnp.int32), k8.astype(jnp.int32))
+        s = s32 * sq[:, None] * sk[None, :] / np.sqrt(d)
+        m = jnp.max(s, axis=-1)
+        p = jnp.round(q.INT8_R * jnp.exp(s - m[:, None]))
+        assert float(jnp.min(p)) >= 0.0
+        assert float(jnp.max(p)) <= 127.0
+
+    def test_dequant_linearity(self):
+        """Linearity of integer GEMM (paper §3.2): scaling after the INT32
+        product equals scaling the operands first."""
+        n, d = 64, 32
+        qf, kf, _ = _mk(33, n, d)
+        q8, sq = q.quantize_per_token(qf)
+        k8, sk = q.quantize_per_token(kf)
+        s_int = jnp.einsum("id,jd->ij", q8.astype(jnp.int32), k8.astype(jnp.int32))
+        post = s_int * sq[:, None] * sk[None, :]
+        pre = (q8 * sq[:, None]) @ (k8 * sk[:, None]).T
+        # `pre` rounds q8·sq to f32 before the GEMM; `post` keeps the exact
+        # int32 product — agreement is to f32 GEMM precision, not exact.
+        np.testing.assert_allclose(
+            np.asarray(post), np.asarray(pre), rtol=1e-4, atol=1e-5
+        )
+
+
+class TestEdgeCases:
+    def test_non_divisible_raises(self):
+        qf, kf, vf = _mk(41, 100, 32)
+        q8, sq, k8, sk, v8, sv = _quant(qf, kf, vf)
+        with pytest.raises(ValueError, match="multiples"):
+            int_flash.int_flash_attention(q8, sq, k8, sk, v8, sv, block_q=64, block_k=64)
+
+    def test_cross_attention_shapes(self):
+        """n_q != n_k (decode-style: 64 queries over 256 keys)."""
+        d = 32
+        qf, _, _ = _mk(42, 64, d)
+        _, kf, vf = _mk(43, 256, d)
+        q8, sq = q.quantize_per_token(qf)
+        k8, sk = q.quantize_per_token(kf)
+        v8, sv = q.quantize_per_tensor(vf)
+        out = int_flash.int_flash_attention(q8, sq, k8, sk, v8, sv, block_q=64, block_k=64)
+        gold = ref.standard_attention(qf, kf, vf)
+        assert out.shape == (64, d)
+        assert float(metrics.mre(out, gold)) < 0.06
+
+    def test_identical_tokens(self):
+        """All rows equal → uniform attention; kernel must not NaN."""
+        n, d = 64, 16
+        row = jax.random.normal(jax.random.PRNGKey(5), (1, d))
+        qf = jnp.tile(row, (n, 1))
+        kf = jnp.tile(row, (n, 1))
+        vf = jax.random.normal(jax.random.PRNGKey(6), (n, d))
+        out = int_flash.int_flash_attention_fp32_in(qf, kf, vf)
+        gold = ref.standard_attention(qf, kf, vf)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gold), atol=0.05)
+
+    def test_large_magnitude_activations(self):
+        """Scales absorb magnitude: 1000× inputs must not overflow/NaN."""
+        n, d = 64, 32
+        qf, kf, vf = _mk(44, n, d)
+        out = int_flash.int_flash_attention_fp32_in(1e3 * qf, 1e3 * kf, 1e3 * vf)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_jit_compilable(self):
+        n, d = 128, 32
+        qf, kf, vf = _mk(45, n, d)
+        f = jax.jit(lambda a, b, c: int_flash.int_flash_attention_fp32_in(a, b, c))
+        out = f(qf, kf, vf)
+        ref_out = int_flash.int_flash_attention_fp32_in(qf, kf, vf)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out), atol=1e-5)
+
+    def test_vmap_over_heads(self):
+        h, n, d = 3, 64, 16
+        ks = jax.random.split(jax.random.PRNGKey(50), 3)
+        qf = jax.random.normal(ks[0], (h, n, d))
+        kf = jax.random.normal(ks[1], (h, n, d))
+        vf = jax.random.normal(ks[2], (h, n, d))
+        out = jax.vmap(
+            lambda a, b, c: int_flash.int_flash_attention_fp32_in(a, b, c)
+        )(qf, kf, vf)
+        assert out.shape == (h, n, d)
+        for i in range(h):
+            single = int_flash.int_flash_attention_fp32_in(qf[i], kf[i], vf[i])
+            np.testing.assert_allclose(np.asarray(out[i]), np.asarray(single), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    log_n=st.integers(5, 8),
+    log_d=st.integers(3, 6),
+    log_bq=st.integers(4, 6),
+    log_bk=st.integers(4, 6),
+    seed=st.integers(0, 2**31 - 1),
+    dist=st.sampled_from(["normal", "uniform"]),
+    causal=st.booleans(),
+)
+def test_kernel_vs_blocked_ref_property(log_n, log_d, log_bq, log_bk, seed, dist, causal):
+    """Hypothesis sweep: kernel ≡ blocked reference over the shape grid."""
+    n, d = 2 ** log_n, 2 ** log_d
+    bq, bk = min(2 ** log_bq, n), min(2 ** log_bk, n)
+    qf, kf, vf = _mk(seed, n, d, dist)
+    q8, sq = q.quantize_per_token(qf)
+    k8, sk = q.quantize_per_token(kf)
+    v8, sv = q.quantize_per_tensor(vf)
+    sm = 1.0 / np.sqrt(d)
+    out_k = int_flash.int_flash_attention(
+        q8, sq, k8, sk, v8, sv, causal=causal, block_q=bq, block_k=bk
+    )
+    out_r = ref.int_flash_blocked_reference(
+        q8, sq, k8, sk, v8, sv, sm, bq, bk, causal=causal
+    )
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=5e-5, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    log_n=st.integers(5, 8),
+    seed=st.integers(0, 2**31 - 1),
+    dist=st.sampled_from(["normal", "uniform"]),
+)
+def test_half_int8_vs_ref_property(log_n, seed, dist):
+    n, d = 2 ** log_n, 32
+    qf, kf, vf = _mk(seed, n, d, dist)
+    q8, sq = q.quantize_per_token(qf)
+    k8, sk = q.quantize_per_token(kf)
+    sm = 1.0 / np.sqrt(d)
+    out_k = int_flash.half_int8_flash_attention(q8, sq, k8, sk, vf, block_q=32, block_k=32)
+    out_r = ref.half_int8_reference(q8, sq, k8, sk, vf, sm)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-4, rtol=1e-3)

@@ -1,0 +1,111 @@
+# L2 model-layer tests: batched attention dispatch, MHA, transformer LM.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import metrics, ref
+
+
+def _bhnd(seed, b, h, n, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(k, (b, h, n, d), jnp.float32) for k in ks)
+
+
+class TestAttentionBhnd:
+    @pytest.mark.parametrize("variant", ["int8", "half_int8", "fp8", "fp16"])
+    def test_matches_per_head_reference(self, variant):
+        b, h, n, d = 2, 3, 64, 32
+        qf, kf, vf = _bhnd(1, b, h, n, d)
+        out = model.attention_bhnd(qf, kf, vf, variant, block_q=32, block_k=32)
+        assert out.shape == (b, h, n, d)
+        for bi in range(b):
+            for hi in range(h):
+                single = model.attention_single_head(
+                    qf[bi, hi], kf[bi, hi], vf[bi, hi], variant,
+                    block_q=32, block_k=32)
+                np.testing.assert_allclose(
+                    np.asarray(out[bi, hi]), np.asarray(single), atol=1e-5)
+
+    def test_unknown_variant_raises(self):
+        qf, kf, vf = _bhnd(2, 1, 1, 32, 16)
+        with pytest.raises(ValueError, match="unknown variant"):
+            model.attention_bhnd(qf, kf, vf, "fp64")
+
+    @pytest.mark.parametrize("variant", ["int8", "fp16"])
+    def test_causal_close_to_gold(self, variant):
+        b, h, n, d = 1, 2, 128, 32
+        qf, kf, vf = _bhnd(3, b, h, n, d)
+        out = model.attention_bhnd(qf, kf, vf, variant, causal=True,
+                                   block_q=64, block_k=64)
+        gold = jnp.stack([
+            jnp.stack([
+                ref.standard_attention(qf[bi, hi], kf[bi, hi], vf[bi, hi],
+                                       causal=True)
+                for hi in range(h)])
+            for bi in range(b)])
+        tol = 0.06 if variant == "int8" else 1e-4
+        assert float(metrics.mre(out, gold)) < tol
+
+
+class TestPadToBlock:
+    def test_pads_up(self):
+        x = jnp.ones((2, 100, 8))
+        y = model.pad_to_block(x, 64, axis=1)
+        assert y.shape == (2, 128, 8)
+        assert float(jnp.sum(y[:, 100:])) == 0.0
+
+    def test_noop_when_divisible(self):
+        x = jnp.ones((2, 128, 8))
+        assert model.pad_to_block(x, 64, axis=1) is x
+
+
+class TestLM:
+    def setup_method(self):
+        self.cfg = model.LMConfig(n_layers=2, d_model=64, n_heads=2, d_ff=128)
+        self.params = model.init_lm(self.cfg, seed=0)
+
+    def test_forward_shape(self):
+        toks = jax.random.randint(jax.random.PRNGKey(0), (2, 64), 0, 256)
+        logits = model.lm_forward(self.params, self.cfg, toks, "int8")
+        assert logits.shape == (2, self.cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_init_deterministic(self):
+        p2 = model.init_lm(self.cfg, seed=0)
+        np.testing.assert_array_equal(np.asarray(self.params.embed),
+                                      np.asarray(p2.embed))
+
+    def test_int8_logits_close_to_fp16(self):
+        """Model-level accuracy: INT8 attention inside a full transformer
+        perturbs next-token logits only mildly."""
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, 256)
+        l_fp = model.lm_forward(self.params, self.cfg, toks, "fp16")
+        l_i8 = model.lm_forward(self.params, self.cfg, toks, "int8")
+        assert float(metrics.mre(l_i8, l_fp)) < 0.10
+
+    def test_variant_loss_ordering(self):
+        """Cross-entropy degradation ordering mirrors the MRE tables:
+        loss(fp16) ≲ loss(half_int8) ≲ loss(int8) + noise."""
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 64), 0, 256)
+        losses = {
+            v: float(model.lm_loss(self.params, self.cfg, toks, v))
+            for v in ("fp16", "half_int8", "int8")
+        }
+        # random-init model: all near ln(256) ≈ 5.55; quantized variants may
+        # not be strictly ordered but must stay within a tight band of fp16.
+        for v in ("half_int8", "int8"):
+            assert abs(losses[v] - losses["fp16"]) < 0.05, losses
+
+    def test_causal_dependence_prefix_only(self):
+        """Changing a future token must not change earlier-position logits
+        (causality through the whole stack). lm_forward returns the last
+        position, so test on lm-level by moving the change to the last
+        token and checking the prefix via a 2-call trick."""
+        toks = jax.random.randint(jax.random.PRNGKey(3), (1, 64), 0, 256)
+        base = model.lm_forward(self.params, self.cfg, toks[:, :32], "fp16")
+        toks2 = toks.at[0, 40].set((int(toks[0, 40]) + 1) % 256)
+        same = model.lm_forward(self.params, self.cfg, toks2[:, :32], "fp16")
+        np.testing.assert_allclose(np.asarray(base), np.asarray(same), atol=1e-6)

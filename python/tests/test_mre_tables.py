@@ -1,0 +1,92 @@
+# Python-side cross-check of the paper's quantization-accuracy experiments
+# (Tables 1 and 2). The rust benches regenerate the full tables; these
+# tests pin the *orderings* and *ratio bands* the paper claims, at a
+# reduced sequence length for CI speed.
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import flash_fp8, int_flash, metrics, ref
+
+
+def _acts(seed, n, d, dist):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    if dist == "normal":
+        return tuple(jax.random.normal(k, (n, d), jnp.float32) for k in ks)
+    return tuple(
+        jax.random.uniform(k, (n, d), jnp.float32, minval=-0.5, maxval=0.5)
+        for k in ks
+    )
+
+
+def _errors(n, d, dist, seed=7):
+    qf, kf, vf = _acts(seed, n, d, dist)
+    gold = ref.standard_attention(qf, kf, vf)
+    e = {}
+    e["fp8"] = float(metrics.mre(
+        flash_fp8.fp8_attention_fp32_in(qf, kf, vf), gold))
+    e["half_int8"] = float(metrics.mre(
+        int_flash.half_int8_attention_fp32_in(qf, kf, vf), gold))
+    e["full_int8"] = float(metrics.mre(
+        int_flash.int_flash_attention_fp32_in(qf, kf, vf), gold))
+    return e
+
+
+@pytest.fixture(scope="module")
+def errors_normal():
+    return _errors(1024, 64, "normal")
+
+
+@pytest.fixture(scope="module")
+def errors_uniform():
+    return _errors(1024, 64, "uniform")
+
+
+class TestTable1Normal:
+    def test_ordering(self, errors_normal):
+        """Paper Table 1 column ordering: half-INT8 < full-INT8 < FP8."""
+        e = errors_normal
+        assert e["half_int8"] < e["full_int8"] < e["fp8"], e
+
+    def test_int8_vs_fp8_ratio_band(self, errors_normal):
+        """Headline: ~46% smaller error than FP8 under normal activations
+        (paper ratio full/fp8 ≈ 0.54). Band allows emulation differences."""
+        ratio = errors_normal["full_int8"] / errors_normal["fp8"]
+        assert 0.3 < ratio < 0.75, errors_normal
+
+    def test_half_int8_much_smaller(self, errors_normal):
+        """Table 1: half-INT8 ≈ 0.8-0.9% vs full-INT8 ≈ 4-4.5% (≈5×)."""
+        ratio = errors_normal["half_int8"] / errors_normal["full_int8"]
+        assert ratio < 0.5, errors_normal
+
+
+class TestTable2Uniform:
+    def test_ordering(self, errors_uniform):
+        e = errors_uniform
+        assert e["half_int8"] < e["full_int8"] < e["fp8"], e
+
+    def test_int8_vs_fp8_ratio_band(self, errors_uniform):
+        """Headline: ~82% smaller error than FP8 under uniform activations
+        (paper ratio full/fp8 ≈ 0.18)."""
+        ratio = errors_uniform["full_int8"] / errors_uniform["fp8"]
+        assert ratio < 0.35, errors_uniform
+
+    def test_uniform_helps_int8_more_than_fp8(self, errors_normal, errors_uniform):
+        """Tables 1→2: INT8 error drops a lot under uniform activations
+        (no outliers → tight scales); FP8's drop is much smaller — this is
+        the mechanism behind the 82% claim."""
+        int8_gain = errors_normal["full_int8"] / errors_uniform["full_int8"]
+        fp8_gain = errors_normal["fp8"] / errors_uniform["fp8"]
+        assert int8_gain > fp8_gain
+
+
+class TestSequenceLengthStability:
+    @pytest.mark.parametrize("n", [256, 512, 1024])
+    def test_mre_flat_in_seqlen(self, n):
+        """Paper Tables 1-2: MRE is nearly flat across 1k→16k. Check the
+        trend at smaller n: errors stay within a 2× band of each other."""
+        e = _errors(n, 64, "normal")
+        base = _errors(256, 64, "normal")
+        for k in e:
+            assert 0.5 < e[k] / base[k] < 2.0, (k, e[k], base[k])

@@ -1,0 +1,169 @@
+# Unit + property tests for the PTQ primitives (quantize.py).
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize as q
+
+
+def _rand(key, shape, dist="normal"):
+    if dist == "normal":
+        return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return jax.random.uniform(
+        jax.random.PRNGKey(key), shape, jnp.float32, minval=-0.5, maxval=0.5
+    )
+
+
+class TestPerTokenQuantization:
+    def test_roundtrip_error_bounded_by_half_scale(self):
+        x = _rand(0, (64, 32))
+        x_q, scales = q.quantize_per_token(x)
+        x_dq = q.dequantize_per_token(x_q, scales)
+        # symmetric rounding: |x - dq| <= scale/2 per row
+        err = jnp.max(jnp.abs(x - x_dq), axis=-1)
+        assert bool(jnp.all(err <= scales / 2 + 1e-7))
+
+    def test_scales_are_rowmax_over_r(self):
+        x = _rand(1, (16, 8))
+        _, scales = q.quantize_per_token(x)
+        expected = jnp.max(jnp.abs(x), axis=-1) / q.INT8_R
+        np.testing.assert_allclose(scales, expected, rtol=1e-6)
+
+    def test_values_fit_int8_symmetric_range(self):
+        x = _rand(2, (128, 64))
+        x_q, _ = q.quantize_per_token(x)
+        assert x_q.dtype == jnp.int8
+        assert int(jnp.max(jnp.abs(x_q.astype(jnp.int32)))) <= 127
+
+    def test_row_extremum_maps_to_r(self):
+        # the row max |value| must quantize to exactly ±127
+        x = _rand(3, (32, 16))
+        x_q, _ = q.quantize_per_token(x)
+        row_absmax = jnp.max(jnp.abs(x_q.astype(jnp.int32)), axis=-1)
+        assert bool(jnp.all(row_absmax == 127))
+
+    def test_zero_row_quantizes_to_zero(self):
+        x = jnp.zeros((4, 8), jnp.float32)
+        x_q, scales = q.quantize_per_token(x)
+        assert bool(jnp.all(x_q == 0))
+        assert bool(jnp.all(jnp.isfinite(scales)))
+
+    def test_batched_shapes(self):
+        x = _rand(4, (2, 3, 32, 16))  # (batch, heads, N, d)
+        x_q, scales = q.quantize_per_token(x)
+        assert x_q.shape == x.shape
+        assert scales.shape == (2, 3, 32)
+
+    def test_sign_symmetry(self):
+        x = _rand(5, (16, 16))
+        xq_pos, s_pos = q.quantize_per_token(x)
+        xq_neg, s_neg = q.quantize_per_token(-x)
+        np.testing.assert_allclose(s_pos, s_neg, rtol=1e-7)
+        # round() at exact .5 boundaries may differ by 1 ulp; check dequant
+        np.testing.assert_allclose(
+            q.dequantize_per_token(xq_pos, s_pos),
+            -q.dequantize_per_token(xq_neg, s_neg),
+            atol=float(jnp.max(s_pos)),
+        )
+
+
+class TestPerTensorQuantization:
+    def test_roundtrip_error_bounded(self):
+        x = _rand(10, (64, 32))
+        x_q, scale = q.quantize_per_tensor(x)
+        x_dq = q.dequantize_per_tensor(x_q, scale)
+        assert float(jnp.max(jnp.abs(x - x_dq))) <= float(scale) / 2 + 1e-7
+
+    def test_scalar_scale(self):
+        x = _rand(11, (8, 8))
+        _, scale = q.quantize_per_tensor(x)
+        assert scale.shape == ()
+
+    def test_global_extremum_maps_to_r(self):
+        x = _rand(12, (32, 32))
+        x_q, _ = q.quantize_per_tensor(x)
+        assert int(jnp.max(jnp.abs(x_q.astype(jnp.int32)))) == 127
+
+
+class TestInt4:
+    def test_range(self):
+        x = _rand(20, (32, 16))
+        x_q, _ = q.quantize_per_token_int4(x)
+        assert int(jnp.max(jnp.abs(x_q.astype(jnp.int32)))) <= 7
+
+    def test_coarser_than_int8(self):
+        x = _rand(21, (64, 32))
+        dq8 = q.dequantize_per_token(*reversed(q.quantize_per_token(x)[::-1]))
+        x8, s8 = q.quantize_per_token(x)
+        x4, s4 = q.quantize_per_token_int4(x)
+        e8 = float(jnp.mean(jnp.abs(q.dequantize_per_token(x8, s8) - x)))
+        e4 = float(jnp.mean(jnp.abs(q.dequantize_per_token(x4, s4) - x)))
+        assert e4 > e8
+
+
+class TestFp8Emulation:
+    def test_lattice_idempotent(self):
+        x = _rand(30, (64, 64))
+        once = q.fp8_e4m3_roundtrip(x)
+        twice = q.fp8_e4m3_roundtrip(once)
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+    def test_saturation_at_448(self):
+        x = jnp.array([1000.0, -1000.0, 448.0, -448.0], jnp.float32)
+        y = q.fp8_e4m3_roundtrip(x)
+        assert float(jnp.max(jnp.abs(y))) <= 448.0
+
+    def test_exact_small_integers(self):
+        # e4m3 represents small integers exactly
+        x = jnp.array([0.0, 1.0, 2.0, -3.0, 16.0], jnp.float32)
+        np.testing.assert_array_equal(np.asarray(q.fp8_e4m3_roundtrip(x)), np.asarray(x))
+
+    def test_tensor_scale_uses_full_range(self):
+        x = _rand(31, (32, 32))
+        x_q, scale = q.quantize_fp8_per_tensor(x)
+        # max |scaled value| should be close to 448 (hit by the max element)
+        assert 440.0 <= float(jnp.max(jnp.abs(x / scale))) <= 448.5
+
+    def test_relative_error_within_e4m3_eps(self):
+        x = _rand(32, (64, 64))
+        x_q, scale = q.quantize_fp8_per_tensor(x)
+        rel = jnp.abs(x_q * scale - x) / jnp.maximum(jnp.abs(x), 1e-3)
+        # e4m3 has 3 mantissa bits → max rel rounding error 2^-4 = 6.25%
+        # (plus subnormal coarseness near zero, excluded by the 1e-3 floor
+        #  relative to the ~4σ/448 scale)
+        assert float(jnp.max(rel)) <= 0.07
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 96),
+    d=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+    dist=st.sampled_from(["normal", "uniform"]),
+)
+def test_per_token_roundtrip_property(n, d, seed, dist):
+    x = _rand(seed, (n, d), dist)
+    x_q, scales = q.quantize_per_token(x)
+    x_dq = q.dequantize_per_token(x_q, scales)
+    err = jnp.max(jnp.abs(x - x_dq), axis=-1)
+    assert bool(jnp.all(err <= scales / 2 + 1e-6))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+    scale_exp=st.integers(-6, 6),
+)
+def test_per_token_scale_invariance_property(n, d, seed, scale_exp):
+    """Quantizing c·x yields the same int codes with scales scaled by c."""
+    x = _rand(seed, (n, d))
+    c = float(2.0 ** scale_exp)  # power of two: exact float scaling
+    xq1, s1 = q.quantize_per_token(x)
+    xq2, s2 = q.quantize_per_token(x * c)
+    np.testing.assert_array_equal(np.asarray(xq1), np.asarray(xq2))
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1) * c, rtol=1e-6)

@@ -1,0 +1,106 @@
+//! A2 — ablation: batching policy (eager vs deadline vs full-only) under
+//! a Poisson open-loop workload on the native-backend engine.
+//!
+//! Run: `cargo bench --bench ablation_batching`
+
+use int_flashattention::attention::Variant;
+use int_flashattention::bench_harness::Table;
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::coordinator::{AccuracyClass, RequestPayload};
+use int_flashattention::util::rng::Pcg64;
+use int_flashattention::util::stats::Summary;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn run_policy(policy: BatchPolicy, requests: usize, rate_per_s: f64) -> (Summary, f64, i64, i64) {
+    let bucket = Bucket {
+        variant: Variant::Int8,
+        batch: 4,
+        heads: 2,
+        seq: 128,
+        head_dim: 32,
+        causal: true,
+        artifact: String::new(),
+    };
+    let engine = Arc::new(Engine::new(
+        BucketRouter::new(vec![bucket]),
+        Arc::new(NativeBackend { threads: 2 }),
+        EngineConfig {
+            policy,
+            batch_deadline: Duration::from_millis(4),
+            workers: 2,
+            ..EngineConfig::default()
+        },
+    ));
+
+    let t0 = Instant::now();
+    let mut rng = Pcg64::seeded(42);
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        std::thread::sleep(Duration::from_secs_f64(rng.exp_interval(rate_per_s).min(0.05)));
+        let seq = 64 + rng.next_range(64) as usize;
+        let n = 2 * seq * 32;
+        let payload = RequestPayload {
+            heads: 2,
+            seq,
+            head_dim: 32,
+            q: rng.normal_vec(n),
+            k: rng.normal_vec(n),
+            v: rng.normal_vec(n),
+        };
+        let (_, rx) = engine.submit(AccuracyClass::Fast, payload);
+        pending.push((Instant::now(), rx));
+    }
+    let mut lats = Vec::new();
+    for (_, rx) in pending {
+        // FullOnly can strand partial batches until engine drop — time out
+        match rx.recv_timeout(Duration::from_secs(2)) {
+            Ok(resp) if resp.result.is_ok() => lats.push(resp.latency_us as f64 / 1e3),
+            _ => {}
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = engine.metrics.snapshot();
+    let batches = snap.at("counter.batches.formed").as_i64().unwrap_or(0);
+    let wasted = snap.at("counter.batch.slots_wasted").as_i64().unwrap_or(0);
+    (
+        Summary::of(&lats).unwrap_or(Summary {
+            n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p95: 0.0, p99: 0.0,
+        }),
+        lats.len() as f64 / wall,
+        batches,
+        wasted,
+    )
+}
+
+fn main() {
+    let requests = 48;
+    let rate = 400.0;
+    println!("# A2 — batching policy ablation ({requests} Poisson requests @ ~{rate}/s offered)\n");
+    let mut t = Table::new(&[
+        "policy", "served/s", "p50 ms", "p99 ms", "batches", "wasted slots",
+    ]);
+    for (name, policy) in [
+        ("eager", BatchPolicy::Eager),
+        ("deadline", BatchPolicy::Deadline),
+        ("full-only", BatchPolicy::FullOnly),
+    ] {
+        let (s, tput, batches, wasted) = run_policy(policy, requests, rate);
+        t.row(&[
+            name.to_string(),
+            format!("{tput:.1}"),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+            batches.to_string(),
+            wasted.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nshape: eager minimizes wait but wastes slots (occupancy ≈ 1/B);\n\
+         deadline trades bounded extra latency for fuller batches; full-only\n\
+         maximizes occupancy but strands the tail (requests served only on flush)."
+    );
+}

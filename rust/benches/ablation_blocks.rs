@@ -1,0 +1,53 @@
+//! A1 — ablation: block size (B_r × B_c) sweep.
+//!
+//! Three views per block shape:
+//!   - measured CPU latency of the rust-native INT8 kernel,
+//!   - modelled Ampere latency (HBM traffic depends on T_r = N/B_r),
+//!   - SRAM/VMEM footprint of one tile (the L1 constraint that bounds
+//!     block growth on real hardware).
+//!
+//! Run: `cargo bench --bench ablation_blocks`
+
+use int_flashattention::attention::{int_flash, AttnConfig, Variant};
+use int_flashattention::bench_harness::{bench, BenchConfig, Table};
+use int_flashattention::quant::INT8_R;
+use int_flashattention::simulator::{predict, tile_sram_bytes, GpuModel, Workload};
+use int_flashattention::tensor::MatF32;
+use int_flashattention::util::rng::{Dist, Pcg64};
+
+fn main() {
+    let seq = 1024usize;
+    let d = 64usize;
+    let mut rng = Pcg64::seeded(7);
+    let q = MatF32::random(seq, d, Dist::Normal, &mut rng);
+    let k = MatF32::random(seq, d, Dist::Normal, &mut rng);
+    let v = MatF32::random(seq, d, Dist::Normal, &mut rng);
+    let gpu = GpuModel::rtx4090();
+    let cfg_bench = BenchConfig::quick();
+
+    println!("# A1 — block size sweep (INT8 kernel, N={seq}, d={d})\n");
+    let mut t = Table::new(&[
+        "Br x Bc", "cpu ms", "modelled ms", "tile SRAM KiB", "fits 100KiB",
+    ]);
+    for (bq, bk) in [(16, 16), (32, 32), (64, 64), (128, 64), (64, 128), (128, 128), (256, 256)] {
+        let cfg = AttnConfig::new(d).blocks(bq, bk);
+        let m = bench("blk", &cfg_bench, || {
+            int_flash::int_flash_attention_f32_in(&q, &k, &v, &cfg, INT8_R)
+        });
+        let wl = Workload { batch: 4, heads: 32, seq, head_dim: 128, causal: false, block_q: bq, block_k: bk };
+        let modelled = predict(&gpu, &wl, Variant::Int8).unwrap().total * 1e3;
+        let sram = tile_sram_bytes(&wl, Variant::Int8);
+        t.row(&[
+            format!("{bq}x{bk}"),
+            format!("{:.3}", m.mean_ms()),
+            format!("{modelled:.3}"),
+            format!("{:.1}", sram as f64 / 1024.0),
+            (sram < gpu.sram_per_block).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nshape: larger B_c cuts K/V re-reads (modelled ms drops) until the tile\n\
+         overflows SRAM — the design point the paper's 'read larger blocks' claim rests on."
+    );
+}

@@ -1,0 +1,62 @@
+//! A5 — ablation: Hadamard-rotated quantization (the paper's §5 future
+//! work) vs plain token-level INT8, on gaussian and outlier-heavy
+//! activations.
+//!
+//! Run: `cargo bench --bench ablation_hadamard`
+
+use int_flashattention::attention::{int_flash, reference, AttnConfig};
+use int_flashattention::bench_harness::{bench, BenchConfig, Table};
+use int_flashattention::quant::{hadamard, INT8_R};
+use int_flashattention::tensor::MatF32;
+use int_flashattention::util::rng::{Dist, Pcg64};
+use int_flashattention::util::stats;
+
+fn outlier_matrix(seed: u64, n: usize, d: usize, mult: f32) -> MatF32 {
+    let mut rng = Pcg64::seeded(seed);
+    let mut m = MatF32::random(n, d, Dist::Normal, &mut rng);
+    if mult > 1.0 {
+        for r in 0..n {
+            let c = rng.next_range(d as u64) as usize;
+            let v = m.at(r, c);
+            m.set(r, c, v * mult);
+        }
+    }
+    m
+}
+
+fn main() {
+    let (n, d) = (1024usize, 64usize);
+    println!("# A5 — Hadamard rotation ablation (N={n}, d={d})\n");
+    let mut t = Table::new(&[
+        "activations", "spread(Q)", "spread(HQ)", "int8 MRE", "hadamard MRE", "gain",
+        "rot overhead",
+    ]);
+    let cfgb = BenchConfig::quick();
+    for (label, mult) in [("gaussian", 1.0f32), ("outliers x8", 8.0), ("outliers x20", 20.0)] {
+        let q = outlier_matrix(1, n, d, mult);
+        let k = outlier_matrix(2, n, d, mult);
+        let v = outlier_matrix(3, n, d, 1.0);
+        let cfg = AttnConfig::new(d);
+        let gold = reference::standard_attention(&q, &k, &v, &cfg);
+        let plain = int_flash::int_flash_attention_f32_in(&q, &k, &v, &cfg, INT8_R);
+        let rot = hadamard::int_flash_attention_hadamard(&q, &k, &v, &cfg, INT8_R);
+        let e_plain = stats::mre(&plain.data, &gold.data) * 100.0;
+        let e_rot = stats::mre(&rot.data, &gold.data) * 100.0;
+        let m_rot = bench("rotate", &cfgb, || hadamard::rotate_rows(&q));
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", hadamard::outlier_spread(&q)),
+            format!("{:.2}", hadamard::outlier_spread(&hadamard::rotate_rows(&q))),
+            format!("{e_plain:.2}%"),
+            format!("{e_rot:.2}%"),
+            format!("{:.2}x", e_plain / e_rot),
+            format!("{:.3} ms", m_rot.mean_ms()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nshape: rotation pays off exactly where per-token outliers blow up the\n\
+         symmetric scales; on clean gaussians it is neutral. O(d log d)/token cost\n\
+         folds into the projection weights at deployment."
+    );
+}

@@ -1,0 +1,73 @@
+//! E1 — paper Figure 2: attention inference time vs context length for
+//! FP16 / FP8 / half-INT8 / full-INT8.
+//!
+//! Two series per the substitution in DESIGN.md:
+//!   A. modelled Ampere/Ada latency (the paper's hardware claim) over the
+//!      full 1k..16k grid at the paper geometry (b=4, h=32, d=128);
+//!   B. measured CPU wall-clock of the rust-native kernels at reduced
+//!      geometry (1 head, d=64 — quadratic cost on CPU).
+//!
+//! Run: `cargo bench --bench fig2_speed` (INTFA_BENCH_FULL=1 widens B).
+
+use int_flashattention::attention::{attention_f32, AttnConfig, Variant};
+use int_flashattention::bench_harness::{bench, BenchConfig, Table};
+use int_flashattention::simulator::{predict, GpuModel, Workload};
+use int_flashattention::tensor::MatF32;
+use int_flashattention::util::rng::{Dist, Pcg64};
+
+const PAPER_REDUCTION: &[(usize, f64)] =
+    &[(1024, 31.0), (2048, 52.0), (4096, 66.0), (8192, 72.0), (16384, 73.0)];
+
+fn main() {
+    let full = std::env::var("INTFA_BENCH_FULL").is_ok();
+
+    println!("# E1 / Figure 2 — inference time vs context length\n");
+    println!("## A. modelled (rtx4090 roofline, paper geometry b=4 h=32 d=128)\n");
+    let gpu = GpuModel::rtx4090();
+    let mut t = Table::new(&[
+        "seq", "fp16 ms", "fp8 ms", "half-int8 ms", "int8 ms", "int8 vs fp16", "paper fig2",
+    ]);
+    for &(seq, paper) in PAPER_REDUCTION {
+        let wl = Workload::fig2(seq);
+        let p = |v| predict(&gpu, &wl, v).unwrap().total * 1e3;
+        t.row(&[
+            seq.to_string(),
+            format!("{:.3}", p(Variant::Fp16)),
+            format!("{:.3}", p(Variant::Fp8)),
+            format!("{:.3}", p(Variant::HalfInt8)),
+            format!("{:.3}", p(Variant::Int8)),
+            format!("-{:.0}%", 100.0 * (1.0 - p(Variant::Int8) / p(Variant::Fp16))),
+            format!("-{paper:.0}%"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nexpected shape: int8 ≈ fp8 < half < fp16; gap widens with seq.\n");
+
+    println!("## B. measured CPU (rust-native kernels, 1 head, d=64)\n");
+    let seqs: &[usize] = if full { &[256, 512, 1024, 2048, 4096] } else { &[256, 512, 1024] };
+    let cfg_bench = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let mut t2 = Table::new(&["seq", "fp16 ms", "fp8 ms", "half ms", "int8 ms", "int4 ms"]);
+    for &seq in seqs {
+        let mut rng = Pcg64::seeded(seq as u64);
+        let q = MatF32::random(seq, 64, Dist::Normal, &mut rng);
+        let k = MatF32::random(seq, 64, Dist::Normal, &mut rng);
+        let v = MatF32::random(seq, 64, Dist::Normal, &mut rng);
+        let cfg = AttnConfig::new(64);
+        let m = |variant: Variant| {
+            bench(variant.name(), &cfg_bench, || {
+                attention_f32(variant, &q, &k, &v, &cfg)
+            })
+            .mean_ms()
+        };
+        t2.row(&[
+            seq.to_string(),
+            format!("{:.3}", m(Variant::Fp16)),
+            format!("{:.3}", m(Variant::Fp8)),
+            format!("{:.3}", m(Variant::HalfInt8)),
+            format!("{:.3}", m(Variant::Int8)),
+            format!("{:.3}", m(Variant::Int4)),
+        ]);
+    }
+    print!("{}", t2.render());
+    println!("\n(CPU series validates plumbing/scaling; the dtype speedup claim lives in series A)");
+}

@@ -1,0 +1,51 @@
+//! Micro-benchmark for the GEMM substrate (L3 hot path): blocked vs naive,
+//! i8 vs f32 — feeds the §Perf iteration log.
+//!
+//! Run: `cargo bench --bench gemm_microbench`
+
+use int_flashattention::bench_harness::{bench, BenchConfig, Table};
+use int_flashattention::gemm;
+use int_flashattention::tensor::{MatF32, MatI8};
+use int_flashattention::util::rng::Pcg64;
+
+fn rand_i8(seed: u64, rows: usize, cols: usize) -> MatI8 {
+    let mut rng = Pcg64::seeded(seed);
+    MatI8::from_vec(
+        rows,
+        cols,
+        (0..rows * cols).map(|_| (rng.next_range(255) as i32 - 127) as i8).collect(),
+    )
+}
+
+fn rand_f32(seed: u64, rows: usize, cols: usize) -> MatF32 {
+    let mut rng = Pcg64::seeded(seed);
+    MatF32::from_vec(rows, cols, rng.normal_vec(rows * cols))
+}
+
+fn main() {
+    let cfg = BenchConfig::default();
+    println!("# GEMM microbench (square M=N=K)\n");
+    let mut t = Table::new(&[
+        "size", "i8 naive ms", "i8 blocked ms", "i8 GOPS", "f32 blocked ms", "f32 GFLOPS", "i8/f32",
+    ]);
+    for n in [64usize, 128, 256, 512] {
+        let a8 = rand_i8(1, n, n);
+        let b8 = rand_i8(2, n, n);
+        let af = rand_f32(3, n, n);
+        let bf = rand_f32(4, n, n);
+        let ops = 2.0 * (n as f64).powi(3);
+        let m_naive = bench("i8 naive", &cfg, || gemm::gemm_i8_naive(&a8, &b8));
+        let m_i8 = bench("i8 blocked", &cfg, || gemm::gemm_i8(&a8, &b8));
+        let m_f32 = bench("f32 blocked", &cfg, || gemm::gemm_f32(&af, &bf));
+        t.row(&[
+            format!("{n}"),
+            format!("{:.3}", m_naive.mean_ms()),
+            format!("{:.3}", m_i8.mean_ms()),
+            format!("{:.2}", ops / m_i8.mean_ns()),
+            format!("{:.3}", m_f32.mean_ms()),
+            format!("{:.2}", ops / m_f32.mean_ns()),
+            format!("{:.2}x", m_f32.mean_ns() / m_i8.mean_ns()),
+        ]);
+    }
+    print!("{}", t.render());
+}

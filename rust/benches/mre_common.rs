@@ -1,0 +1,67 @@
+//! Shared driver for the Table 1 / Table 2 MRE benches.
+//! Included via `#[path]` from the two bench binaries (not a bench itself).
+
+use int_flashattention::attention::{attention_f32, reference, AttnConfig, Variant};
+use int_flashattention::bench_harness::Table;
+use int_flashattention::tensor::MatF32;
+use int_flashattention::util::rng::{Dist, Pcg64};
+use int_flashattention::util::stats;
+
+/// Rows: (seq, fp8 %, half-int8 %, full-int8 %) from the paper's table.
+pub fn run_mre_table(
+    label: &str,
+    dist: Dist,
+    paper: &[(usize, f64, f64, f64)],
+    paper_ratio: f64,
+) {
+    let full = std::env::var("INTFA_BENCH_FULL").is_ok();
+    let max_seq = if full { 16384 } else { 4096 };
+    let d = 64;
+    println!(
+        "# {label} — MRE vs exact attention ({} activations, d={d})\n",
+        dist.name()
+    );
+    let mut t = Table::new(&[
+        "seq", "fp8", "fp8(paper)", "half-int8", "half(paper)", "full-int8", "full(paper)",
+        "full/fp8",
+    ]);
+    let mut ratios = Vec::new();
+    for &(seq, p8, ph, pf) in paper {
+        if seq > max_seq {
+            continue;
+        }
+        let mut rng = Pcg64::seeded(seq as u64 * 131 + dist as u64);
+        let q = MatF32::random(seq, d, dist, &mut rng);
+        let k = MatF32::random(seq, d, dist, &mut rng);
+        let v = MatF32::random(seq, d, dist, &mut rng);
+        let cfg = AttnConfig::new(d);
+        let gold = reference::standard_attention(&q, &k, &v, &cfg);
+        let err = |variant| {
+            stats::mre(&attention_f32(variant, &q, &k, &v, &cfg).data, &gold.data) * 100.0
+        };
+        let (e8, eh, ef) = (err(Variant::Fp8), err(Variant::HalfInt8), err(Variant::Int8));
+        ratios.push(ef / e8);
+        t.row(&[
+            seq.to_string(),
+            format!("{e8:.2}%"),
+            format!("{p8:.2}%"),
+            format!("{eh:.3}%"),
+            format!("{ph:.3}%"),
+            format!("{ef:.2}%"),
+            format!("{pf:.2}%"),
+            format!("{:.2}", ef / e8),
+        ]);
+    }
+    print!("{}", t.render());
+    let mean_ratio = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    println!(
+        "\nheadline: full-INT8 error = {:.0}% of FP8's (paper: {:.0}%) → {:.0}% smaller error",
+        100.0 * mean_ratio,
+        100.0 * paper_ratio,
+        100.0 * (1.0 - mean_ratio),
+    );
+    assert!(
+        ratios.iter().all(|r| *r < 1.0),
+        "ordering violated: full-INT8 must beat FP8"
+    );
+}

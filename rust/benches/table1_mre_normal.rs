@@ -1,0 +1,21 @@
+//! E2 — paper Table 1: quantization MRE under N(0,1) activations.
+//!
+//! Run: `cargo bench --bench table1_mre_normal`
+//! (INTFA_BENCH_FULL=1 extends to the paper's full 1k..16k grid.)
+
+use int_flashattention::util::rng::Dist;
+
+#[path = "mre_common.rs"]
+mod mre_common;
+
+const PAPER: &[(usize, f64, f64, f64)] = &[
+    (1024, 7.46, 0.890, 4.05),
+    (2048, 7.50, 0.802, 4.18),
+    (4096, 7.66, 0.843, 4.21),
+    (8192, 7.51, 0.932, 4.38),
+    (16384, 7.57, 0.775, 4.52),
+];
+
+fn main() {
+    mre_common::run_mre_table("Table 1", Dist::Normal, PAPER, 0.54);
+}

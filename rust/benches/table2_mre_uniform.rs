@@ -1,0 +1,20 @@
+//! E3 — paper Table 2: quantization MRE under U(−0.5, 0.5) activations.
+//!
+//! Run: `cargo bench --bench table2_mre_uniform`
+
+use int_flashattention::util::rng::Dist;
+
+#[path = "mre_common.rs"]
+mod mre_common;
+
+const PAPER: &[(usize, f64, f64, f64)] = &[
+    (1024, 8.94, 0.317, 1.69),
+    (2048, 9.15, 0.300, 1.62),
+    (4096, 8.89, 0.280, 1.65),
+    (8192, 9.02, 0.299, 1.85),
+    (16384, 8.97, 0.296, 1.82),
+];
+
+fn main() {
+    mre_common::run_mre_table("Table 2", Dist::Uniform, PAPER, 0.18);
+}

@@ -1,0 +1,197 @@
+//! FlashAttention-2 float tiled forward (paper §2.2) — the FP16 baseline's
+//! rust-native twin. Same (i, j) block iteration and online-softmax
+//! statistics as the Pallas kernel in python/compile/kernels/flash_fp16.py.
+
+use super::{causal_visible, AttnConfig, NEG_INF};
+use crate::gemm::gemm_f32_into;
+use crate::tensor::MatF32;
+
+/// Tiled flash attention forward: f32 in → f32 out.
+///
+/// §Perf: both tile products (S = Q_i K_jᵀ and Õ += P̃ V_j) run through
+/// the blocked/vectorized [`crate::gemm`] kernels; V_jᵀ blocks are staged
+/// once so the PV GEMM reads K-contiguous operands (same structure as the
+/// INT8 path — EXPERIMENTS.md §Perf iteration 2).
+pub fn flash_attention(q: &MatF32, k: &MatF32, v: &MatF32, cfg: &AttnConfig) -> MatF32 {
+    assert_eq!(q.cols, k.cols);
+    assert_eq!(k.rows, v.rows);
+    let (n_q, n_k, d) = (q.rows, k.rows, q.cols);
+    let bq = cfg.block_q.min(n_q).max(1);
+    let bk = cfg.block_k.min(n_k).max(1);
+
+    // stage Vᵀ blocks once
+    let mut vt_blocks: Vec<MatF32> = Vec::new();
+    let mut j0 = 0;
+    while j0 < n_k {
+        let jb = bk.min(n_k - j0);
+        let mut vt = MatF32::zeros(d, jb);
+        for c in 0..jb {
+            let vrow = v.row(j0 + c);
+            for p in 0..d {
+                vt.set(p, c, vrow[p]);
+            }
+        }
+        vt_blocks.push(vt);
+        j0 += jb;
+    }
+
+    let mut out = MatF32::zeros(n_q, d);
+    // scratch (reused across q blocks)
+    let mut s = MatF32::zeros(bq, bk);
+    let mut pv = MatF32::zeros(bq, d);
+    let mut acc = MatF32::zeros(bq, d);
+    let mut m = vec![NEG_INF; bq];
+    let mut l = vec![0.0f32; bq];
+
+    let mut i0 = 0;
+    while i0 < n_q {
+        let ib = bq.min(n_q - i0);
+        let qi = q.rows_slice(i0, ib);
+        m[..ib].fill(NEG_INF);
+        l[..ib].fill(0.0);
+        acc.data.fill(0.0);
+
+        let mut j0 = 0;
+        let mut jblk = 0;
+        while j0 < n_k {
+            let jb = bk.min(n_k - j0);
+            let kj = k.rows_slice(j0, jb);
+            if s.rows != ib || s.cols != jb {
+                s = MatF32::zeros(ib, jb);
+            }
+            // S = Qi Kjᵀ (vectorized GEMM), then scale + mask
+            gemm_f32_into(&qi, &kj, &mut s);
+            for r in 0..ib {
+                let srow = s.row_mut(r);
+                for c in 0..jb {
+                    let vis = !cfg.causal || causal_visible(i0 + r, j0 + c, n_q, n_k);
+                    srow[c] = if vis { srow[c] * cfg.sm_scale } else { NEG_INF };
+                }
+            }
+            // online softmax statistics; P̃ overwrites s in place
+            for r in 0..ib {
+                let srow = s.row_mut(r);
+                let mut row_max = m[r];
+                for &x in &srow[..jb] {
+                    row_max = row_max.max(x);
+                }
+                let alpha = (m[r] - row_max).exp();
+                let mut row_sum = 0.0f32;
+                for x in srow.iter_mut().take(jb) {
+                    *x = (*x - row_max).exp();
+                    row_sum += *x;
+                }
+                l[r] = l[r] * alpha + row_sum;
+                for x in acc.row_mut(r).iter_mut().take(d) {
+                    *x *= alpha;
+                }
+                m[r] = row_max;
+            }
+            // Õ += P̃ V_j (vectorized GEMM against the staged Vᵀ block)
+            if pv.rows != ib {
+                pv = MatF32::zeros(ib, d);
+            }
+            gemm_f32_into(&s, &vt_blocks[jblk], &mut pv);
+            for r in 0..ib {
+                let arow = acc.row_mut(r);
+                let prow = pv.row(r);
+                for p in 0..d {
+                    arow[p] += prow[p];
+                }
+            }
+            j0 += jb;
+            jblk += 1;
+        }
+
+        for r in 0..ib {
+            let inv = 1.0 / l[r];
+            let orow = out.row_mut(i0 + r);
+            let arow = acc.row(r);
+            for p in 0..d {
+                orow[p] = arow[p] * inv;
+            }
+        }
+        i0 += ib;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::reference::standard_attention;
+    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::stats;
+
+    fn setup(seed: u64, n: usize, d: usize) -> (MatF32, MatF32, MatF32) {
+        let mut rng = Pcg64::seeded(seed);
+        (
+            MatF32::random(n, d, Dist::Normal, &mut rng),
+            MatF32::random(n, d, Dist::Normal, &mut rng),
+            MatF32::random(n, d, Dist::Normal, &mut rng),
+        )
+    }
+
+    #[test]
+    fn matches_reference_various_shapes() {
+        for (n, d, bq, bk) in [
+            (32, 8, 16, 16),
+            (64, 16, 64, 64),
+            (100, 8, 32, 16), // ragged blocks
+            (128, 32, 16, 64),
+            (7, 4, 64, 64), // n < block
+        ] {
+            let (q, k, v) = setup(n as u64, n, d);
+            let cfg = AttnConfig::new(d).blocks(bq, bk);
+            let got = flash_attention(&q, &k, &v, &cfg);
+            let want = standard_attention(&q, &k, &v, &cfg);
+            let diff = stats::max_abs_diff(&got.data, &want.data);
+            assert!(diff < 1e-5, "n={n} d={d} diff={diff}");
+        }
+    }
+
+    #[test]
+    fn matches_reference_causal() {
+        for (n, d) in [(32, 8), (96, 16)] {
+            let (q, k, v) = setup(n as u64 + 100, n, d);
+            let cfg = AttnConfig::new(d).causal(true).blocks(32, 16);
+            let got = flash_attention(&q, &k, &v, &cfg);
+            let want = standard_attention(&q, &k, &v, &cfg);
+            assert!(stats::max_abs_diff(&got.data, &want.data) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cross_attention() {
+        let (q, _, _) = setup(200, 24, 8);
+        let (_, k, v) = setup(201, 80, 8);
+        let cfg = AttnConfig::new(8).blocks(16, 32);
+        let got = flash_attention(&q, &k, &v, &cfg);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        assert!(stats::max_abs_diff(&got.data, &want.data) < 1e-5);
+    }
+
+    #[test]
+    fn block_size_invariance() {
+        let (q, k, v) = setup(300, 64, 16);
+        let base = flash_attention(&q, &k, &v, &AttnConfig::new(16).blocks(8, 8));
+        for (bq, bk) in [(16, 16), (64, 64), (32, 8), (8, 64)] {
+            let o = flash_attention(&q, &k, &v, &AttnConfig::new(16).blocks(bq, bk));
+            assert!(stats::max_abs_diff(&base.data, &o.data) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn numerically_stable_large_scores() {
+        let (mut q, mut k, v) = setup(400, 32, 8);
+        for x in &mut q.data {
+            *x *= 50.0;
+        }
+        for x in &mut k.data {
+            *x *= 50.0;
+        }
+        let cfg = AttnConfig::new(8);
+        let o = flash_attention(&q, &k, &v, &cfg);
+        assert!(o.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,185 @@
+//! FlashAttention-3-style FP8 baseline — tensor-level e4m3 quantization of
+//! Q, K, V; both GEMMs on e4m3 lattice values with f32 accumulation; P̃
+//! rounded to the lattice before the PV product (FA3's second FP8 GEMM).
+
+use super::{causal_visible, AttnConfig, NEG_INF};
+use crate::quant::fp8;
+use crate::tensor::MatF32;
+
+/// FP8 flash forward on f32 activations (quantization inside).
+pub fn fp8_attention_f32_in(q: &MatF32, k: &MatF32, v: &MatF32, cfg: &AttnConfig) -> MatF32 {
+    let (qv, s_q) = fp8::quantize_fp8_per_tensor(&q.data);
+    let (kv, s_k) = fp8::quantize_fp8_per_tensor(&k.data);
+    let (vv, s_v) = fp8::quantize_fp8_per_tensor(&v.data);
+    let q8 = MatF32::from_vec(q.rows, q.cols, qv);
+    let k8 = MatF32::from_vec(k.rows, k.cols, kv);
+    let v8 = MatF32::from_vec(v.rows, v.cols, vv);
+    fp8_attention(&q8, s_q, &k8, s_k, &v8, s_v, cfg)
+}
+
+/// FP8 flash forward on lattice operands with tensor scales.
+pub fn fp8_attention(
+    q8: &MatF32,
+    s_q: f32,
+    k8: &MatF32,
+    s_k: f32,
+    v8: &MatF32,
+    s_v: f32,
+    cfg: &AttnConfig,
+) -> MatF32 {
+    assert_eq!(q8.cols, k8.cols);
+    assert_eq!(k8.rows, v8.rows);
+    let (n_q, n_k, d) = (q8.rows, k8.rows, q8.cols);
+    let bq = cfg.block_q.min(n_q).max(1);
+    let bk = cfg.block_k.min(n_k).max(1);
+    let qk_scale = s_q * s_k * cfg.sm_scale;
+
+    // stage Vᵀ blocks once (PV GEMM wants K-contiguous operands)
+    let mut vt_blocks: Vec<MatF32> = Vec::new();
+    let mut j0 = 0;
+    while j0 < n_k {
+        let jb = bk.min(n_k - j0);
+        let mut vt = MatF32::zeros(d, jb);
+        for c in 0..jb {
+            let vrow = v8.row(j0 + c);
+            for p in 0..d {
+                vt.set(p, c, vrow[p]);
+            }
+        }
+        vt_blocks.push(vt);
+        j0 += jb;
+    }
+
+    let mut out = MatF32::zeros(n_q, d);
+    let mut s = MatF32::zeros(bq, bk);
+    let mut pv = MatF32::zeros(bq, d);
+    let mut acc = MatF32::zeros(bq, d);
+    let mut m = vec![NEG_INF; bq];
+    let mut l = vec![0.0f32; bq];
+
+    let mut i0 = 0;
+    while i0 < n_q {
+        let ib = bq.min(n_q - i0);
+        let qi = q8.rows_slice(i0, ib);
+        m[..ib].fill(NEG_INF);
+        l[..ib].fill(0.0);
+        acc.data.fill(0.0);
+
+        let mut j0 = 0;
+        let mut jblk = 0;
+        while j0 < n_k {
+            let jb = bk.min(n_k - j0);
+            let kj = k8.rows_slice(j0, jb);
+            if s.rows != ib || s.cols != jb {
+                s = MatF32::zeros(ib, jb);
+            }
+            // "FP8 GEMM": lattice operands, f32 accumulation (vectorized)
+            crate::gemm::gemm_f32_into(&qi, &kj, &mut s);
+            for rr in 0..ib {
+                let srow = s.row_mut(rr);
+                for cc in 0..jb {
+                    let vis = !cfg.causal || causal_visible(i0 + rr, j0 + cc, n_q, n_k);
+                    srow[cc] = if vis { srow[cc] * qk_scale } else { NEG_INF };
+                }
+            }
+            for rr in 0..ib {
+                let srow = s.row_mut(rr);
+                let mut m_new = m[rr];
+                for &x in &srow[..jb] {
+                    m_new = m_new.max(x);
+                }
+                let alpha = (m[rr] - m_new).exp();
+                let mut row_sum = 0.0f32;
+                for x in srow.iter_mut().take(jb) {
+                    let p = (*x - m_new).exp();
+                    row_sum += p;
+                    // FA3's second GEMM is FP8: round P̃ to the e4m3 grid
+                    *x = fp8::fp8_round(p);
+                }
+                l[rr] = l[rr] * alpha + row_sum;
+                for x in acc.row_mut(rr).iter_mut().take(d) {
+                    *x *= alpha;
+                }
+                m[rr] = m_new;
+            }
+            // Õ += P₈ V_j — vectorized GEMM on the rounded weight tile
+            if pv.rows != ib {
+                pv = MatF32::zeros(ib, d);
+            }
+            crate::gemm::gemm_f32_into(&s, &vt_blocks[jblk], &mut pv);
+            for rr in 0..ib {
+                let arow = acc.row_mut(rr);
+                let prow = pv.row(rr);
+                for p in 0..d {
+                    arow[p] += prow[p];
+                }
+            }
+            j0 += jb;
+            jblk += 1;
+        }
+
+        for rr in 0..ib {
+            let inv = s_v / l[rr];
+            let orow = out.row_mut(i0 + rr);
+            for (o, a) in orow.iter_mut().zip(acc.row(rr)).take(d) {
+                *o = a * inv;
+            }
+        }
+        i0 += ib;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::int_flash::int_flash_attention_f32_in;
+    use crate::attention::reference::standard_attention;
+    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::stats;
+
+    fn setup(seed: u64, n: usize, d: usize, dist: Dist) -> (MatF32, MatF32, MatF32) {
+        let mut rng = Pcg64::seeded(seed);
+        (
+            MatF32::random(n, d, dist, &mut rng),
+            MatF32::random(n, d, dist, &mut rng),
+            MatF32::random(n, d, dist, &mut rng),
+        )
+    }
+
+    #[test]
+    fn lossy_but_bounded() {
+        let (q, k, v) = setup(1, 256, 64, Dist::Normal);
+        let cfg = AttnConfig::new(64);
+        let got = fp8_attention_f32_in(&q, &k, &v, &cfg);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        let e = stats::mre(&got.data, &want.data);
+        assert!(0.005 < e && e < 0.12, "mre {e}");
+    }
+
+    #[test]
+    fn paper_ordering_int8_beats_fp8() {
+        // the headline accuracy claim, rust-native
+        for (dist, seed) in [(Dist::Normal, 2u64), (Dist::Uniform, 3u64)] {
+            let (q, k, v) = setup(seed, 512, 64, dist);
+            let cfg = AttnConfig::new(64);
+            let want = standard_attention(&q, &k, &v, &cfg);
+            let e_fp8 = stats::mre(&fp8_attention_f32_in(&q, &k, &v, &cfg).data, &want.data);
+            let e_int8 = stats::mre(
+                &int_flash_attention_f32_in(&q, &k, &v, &cfg, crate::quant::INT8_R).data,
+                &want.data,
+            );
+            assert!(e_int8 < e_fp8, "{dist:?}: int8 {e_int8} !< fp8 {e_fp8}");
+        }
+    }
+
+    #[test]
+    fn causal_finite() {
+        let (q, k, v) = setup(4, 96, 32, Dist::Normal);
+        let cfg = AttnConfig::new(32).causal(true).blocks(32, 32);
+        let got = fp8_attention_f32_in(&q, &k, &v, &cfg);
+        assert!(got.data.iter().all(|x| x.is_finite()));
+        let want = standard_attention(&q, &k, &v, &cfg);
+        assert!(stats::mre(&got.data, &want.data) < 0.15);
+    }
+}

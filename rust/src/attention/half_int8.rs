@@ -1,0 +1,199 @@
+//! half-INT8 variant (paper §4): INT8 Q/K with token scales, float V.
+//! The QKᵀ product runs on the integer pipe; P̃ stays float (no
+//! R-requantization) and the PV product is a float GEMM — this is why its
+//! MRE is ~5× below full-INT8's in Tables 1-2.
+
+use super::{causal_visible, AttnConfig, NEG_INF};
+use crate::gemm::gemm_i8_into;
+use crate::quant;
+use crate::tensor::{MatF32, MatI32, MatI8};
+
+/// half-INT8 forward on pre-quantized Q/K and float V.
+pub fn half_int8_attention(
+    q8: &MatI8,
+    s_q: &[f32],
+    k8: &MatI8,
+    s_k: &[f32],
+    v: &MatF32,
+    cfg: &AttnConfig,
+) -> MatF32 {
+    assert_eq!(q8.cols, k8.cols);
+    assert_eq!(k8.rows, v.rows);
+    let (n_q, n_k, d) = (q8.rows, k8.rows, q8.cols);
+    let bq = cfg.block_q.min(n_q).max(1);
+    let bk = cfg.block_k.min(n_k).max(1);
+
+    // stage f32 Vᵀ blocks once (PV GEMM wants K-contiguous operands)
+    let mut vt_blocks: Vec<MatF32> = Vec::new();
+    let mut j0 = 0;
+    while j0 < n_k {
+        let jb = bk.min(n_k - j0);
+        let mut vt = MatF32::zeros(d, jb);
+        for c in 0..jb {
+            let vrow = v.row(j0 + c);
+            for p in 0..d {
+                vt.set(p, c, vrow[p]);
+            }
+        }
+        vt_blocks.push(vt);
+        j0 += jb;
+    }
+
+    let mut out = MatF32::zeros(n_q, d);
+    let mut s_i32 = MatI32::zeros(bq, bk);
+    let mut s = MatF32::zeros(bq, bk);
+    let mut pv = MatF32::zeros(bq, d);
+    let mut acc = MatF32::zeros(bq, d);
+    let mut m = vec![NEG_INF; bq];
+    let mut l = vec![0.0f32; bq];
+
+    let mut i0 = 0;
+    while i0 < n_q {
+        let ib = bq.min(n_q - i0);
+        let qi = q8.rows_slice(i0, ib);
+        m[..ib].fill(NEG_INF);
+        l[..ib].fill(0.0);
+        acc.data.fill(0.0);
+
+        let mut j0 = 0;
+        let mut jblk = 0;
+        while j0 < n_k {
+            let jb = bk.min(n_k - j0);
+            let kj = k8.rows_slice(j0, jb);
+            if s_i32.rows != ib || s_i32.cols != jb {
+                s_i32 = MatI32::zeros(ib, jb);
+                s = MatF32::zeros(ib, jb);
+            }
+            gemm_i8_into(&qi, &kj, &mut s_i32);
+            for rr in 0..ib {
+                let scale_q = s_q[i0 + rr] * cfg.sm_scale;
+                let srow = s.row_mut(rr);
+                let irow = s_i32.row(rr);
+                for cc in 0..jb {
+                    let vis = !cfg.causal || causal_visible(i0 + rr, j0 + cc, n_q, n_k);
+                    srow[cc] = if vis {
+                        irow[cc] as f32 * scale_q * s_k[j0 + cc]
+                    } else {
+                        NEG_INF
+                    };
+                }
+            }
+            for rr in 0..ib {
+                let srow = s.row_mut(rr);
+                let mut m_new = m[rr];
+                for &x in &srow[..jb] {
+                    m_new = m_new.max(x);
+                }
+                let alpha = (m[rr] - m_new).exp();
+                let mut row_sum = 0.0f32;
+                for x in srow.iter_mut().take(jb) {
+                    *x = (*x - m_new).exp();
+                    row_sum += *x;
+                }
+                l[rr] = l[rr] * alpha + row_sum;
+                for x in acc.row_mut(rr).iter_mut().take(d) {
+                    *x *= alpha;
+                }
+                m[rr] = m_new;
+            }
+            // Õ += P̃ V_j — float GEMM against the staged Vᵀ block
+            if pv.rows != ib {
+                pv = MatF32::zeros(ib, d);
+            }
+            crate::gemm::gemm_f32_into(&s, &vt_blocks[jblk], &mut pv);
+            for rr in 0..ib {
+                let arow = acc.row_mut(rr);
+                let prow = pv.row(rr);
+                for p in 0..d {
+                    arow[p] += prow[p];
+                }
+            }
+            j0 += jb;
+            jblk += 1;
+        }
+
+        for rr in 0..ib {
+            let inv = 1.0 / l[rr];
+            let orow = out.row_mut(i0 + rr);
+            for (o, a) in orow.iter_mut().zip(acc.row(rr)).take(d) {
+                *o = a * inv;
+            }
+        }
+        i0 += ib;
+    }
+    out
+}
+
+/// f32 activations → token-level INT8 Q/K → half-INT8 forward.
+pub fn half_int8_attention_f32_in(
+    q: &MatF32,
+    k: &MatF32,
+    v: &MatF32,
+    cfg: &AttnConfig,
+) -> MatF32 {
+    let qq = quant::quantize_per_token(q, quant::INT8_R);
+    let kq = quant::quantize_per_token(k, quant::INT8_R);
+    half_int8_attention(&qq.codes, &qq.scales, &kq.codes, &kq.scales, v, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::int_flash::int_flash_attention_f32_in;
+    use crate::attention::reference::standard_attention;
+    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::stats;
+
+    fn setup(seed: u64, n: usize, d: usize, dist: Dist) -> (MatF32, MatF32, MatF32) {
+        let mut rng = Pcg64::seeded(seed);
+        (
+            MatF32::random(n, d, dist, &mut rng),
+            MatF32::random(n, d, dist, &mut rng),
+            MatF32::random(n, d, dist, &mut rng),
+        )
+    }
+
+    #[test]
+    fn close_to_reference() {
+        let (q, k, v) = setup(1, 256, 64, Dist::Normal);
+        let cfg = AttnConfig::new(64);
+        let got = half_int8_attention_f32_in(&q, &k, &v, &cfg);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        let e = stats::mre(&got.data, &want.data);
+        assert!(e < 0.02, "mre {e}");
+    }
+
+    #[test]
+    fn more_accurate_than_full_int8() {
+        // the ordering behind Tables 1-2's middle column
+        for dist in [Dist::Normal, Dist::Uniform] {
+            let (q, k, v) = setup(2, 256, 64, dist);
+            let cfg = AttnConfig::new(64);
+            let want = standard_attention(&q, &k, &v, &cfg);
+            let e_half = stats::mre(&half_int8_attention_f32_in(&q, &k, &v, &cfg).data, &want.data);
+            let e_full = stats::mre(
+                &int_flash_attention_f32_in(&q, &k, &v, &cfg, crate::quant::INT8_R).data,
+                &want.data,
+            );
+            assert!(e_half < e_full, "{dist:?}: half {e_half} !< full {e_full}");
+        }
+    }
+
+    #[test]
+    fn causal_and_ragged() {
+        let (q, k, v) = setup(3, 100, 16, Dist::Normal);
+        let cfg = AttnConfig::new(16).causal(true).blocks(48, 32);
+        let got = half_int8_attention_f32_in(&q, &k, &v, &cfg);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        assert!(stats::mre(&got.data, &want.data) < 0.03);
+    }
+
+    #[test]
+    fn block_invariance_tight() {
+        // no P rounding → partition invariance is float-tight
+        let (q, k, v) = setup(4, 128, 32, Dist::Normal);
+        let a = half_int8_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(16, 16));
+        let b = half_int8_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(128, 128));
+        assert!(stats::max_abs_diff(&a.data, &b.data) < 1e-4);
+    }
+}

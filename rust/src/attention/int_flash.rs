@@ -1,0 +1,300 @@
+//! INT-FlashAttention forward — paper Algorithm 1, rust-native.
+//!
+//! This is the serving hot path: token-level INT8 Q/K (scales S_Q, S_K),
+//! tensor-level INT8 V (scale S_V), both GEMMs in INT8×INT8→INT32
+//! ([`crate::gemm::gemm_i8_into`]), online softmax with the R-carrying
+//! running denominator `l`, final rescale `diag(l)⁻¹ · S_V` (lines 9-17).
+//!
+//! The same routine with `r = 7` is the INT4 extension (values still
+//! stored in i8; the paper's "compatible with other data formats" knob).
+
+use super::{causal_visible, AttnConfig, NEG_INF};
+use crate::gemm::gemm_i8_into;
+use crate::quant::{self, PerTensor, PerToken};
+use crate::tensor::{MatF32, MatI32, MatI8};
+
+/// Algorithm 1 on pre-quantized operands.
+///
+/// `q8`/`k8` int8 codes with per-token scales `s_q`/`s_k`; `v8` int8 codes
+/// with tensor scale `s_v`; `r` is the P-requantization range (127 for
+/// INT8, 7 for INT4).
+pub fn int_flash_attention(
+    q8: &MatI8,
+    s_q: &[f32],
+    k8: &MatI8,
+    s_k: &[f32],
+    v8: &MatI8,
+    s_v: f32,
+    cfg: &AttnConfig,
+    r: f32,
+) -> MatF32 {
+    assert_eq!(q8.cols, k8.cols, "head dim mismatch");
+    assert_eq!(k8.rows, v8.rows, "K/V length mismatch");
+    assert_eq!(s_q.len(), q8.rows);
+    assert_eq!(s_k.len(), k8.rows);
+    let (n_q, n_k, d) = (q8.rows, k8.rows, q8.cols);
+    let bq = cfg.block_q.min(n_q).max(1);
+    let bk = cfg.block_k.min(n_k).max(1);
+
+    // Stage the Vᵀ blocks once (line 8's V_j loads): the PV GEMM wants the
+    // right operand K-contiguous, i.e. V_jᵀ of shape (d × jb).
+    let mut vt_blocks: Vec<MatI8> = Vec::new();
+    let mut j0 = 0;
+    while j0 < n_k {
+        let jb = bk.min(n_k - j0);
+        let mut vt = MatI8::zeros(d, jb);
+        for c in 0..jb {
+            let vrow = v8.row(j0 + c);
+            for p in 0..d {
+                vt.set(p, c, vrow[p]);
+            }
+        }
+        vt_blocks.push(vt);
+        j0 += jb;
+    }
+
+    let mut out = MatF32::zeros(n_q, d);
+    // per-q-block scratch, reused across iterations (allocation-free loop)
+    let mut s_i32 = MatI32::zeros(bq, bk);
+    let mut s = MatF32::zeros(bq, bk);
+    let mut p8 = MatI8::zeros(bq, bk);
+    let mut pv = MatI32::zeros(bq, d);
+    let mut acc = MatF32::zeros(bq, d);
+    let mut m = vec![NEG_INF; bq];
+    let mut l = vec![0.0f32; bq];
+
+    let mut i0 = 0;
+    while i0 < n_q {
+        let ib = bq.min(n_q - i0);
+        let qi = q8.rows_slice(i0, ib); // line 5: load Q_i
+        m[..ib].fill(NEG_INF); // line 6
+        l[..ib].fill(0.0);
+        acc.data.fill(0.0);
+
+        let mut j0 = 0;
+        let mut jblk = 0;
+        while j0 < n_k {
+            let jb = bk.min(n_k - j0);
+            let kj = k8.rows_slice(j0, jb); // line 8: load K_j
+
+            // line 9: S = diag(S_Q)(Q₈K₈ᵀ)diag(S_K) — INT8 GEMM + rescale
+            if s_i32.rows != ib || s_i32.cols != jb {
+                s_i32 = MatI32::zeros(ib, jb);
+                s = MatF32::zeros(ib, jb);
+                p8 = MatI8::zeros(ib, jb);
+            }
+            gemm_i8_into(&qi, &kj, &mut s_i32);
+            for rr in 0..ib {
+                let scale_q = s_q[i0 + rr] * cfg.sm_scale;
+                let srow = s.row_mut(rr);
+                let irow = s_i32.row(rr);
+                for cc in 0..jb {
+                    let vis = !cfg.causal || causal_visible(i0 + rr, j0 + cc, n_q, n_k);
+                    srow[cc] = if vis {
+                        irow[cc] as f32 * scale_q * s_k[j0 + cc]
+                    } else {
+                        NEG_INF
+                    };
+                }
+            }
+
+            // lines 10-12: running max, P = round(R·exp(S−m)), l update
+            for rr in 0..ib {
+                let srow = s.row(rr);
+                let mut m_new = m[rr];
+                for &x in &srow[..jb] {
+                    m_new = m_new.max(x);
+                }
+                let alpha = (m[rr] - m_new).exp();
+                let prow = p8.row_mut(rr);
+                let mut row_sum = 0.0f32;
+                for cc in 0..jb {
+                    let p = (r * (srow[cc] - m_new).exp()).round();
+                    row_sum += p;
+                    prow[cc] = p as i8; // ∈ [0, R] ⊂ i8
+                }
+                l[rr] = l[rr] * alpha + row_sum;
+                // line 13 (first half): Õ *= α
+                for x in acc.row_mut(rr).iter_mut().take(d) {
+                    *x *= alpha;
+                }
+                m[rr] = m_new;
+            }
+
+            // line 13 (second half): Õ += P₈ V₈ — second INT8 GEMM
+            if pv.rows != ib {
+                pv = MatI32::zeros(ib, d);
+            }
+            gemm_i8_into(&p8, &vt_blocks[jblk], &mut pv);
+            for rr in 0..ib {
+                let arow = acc.row_mut(rr);
+                let prow = pv.row(rr);
+                for p in 0..d {
+                    arow[p] += prow[p] as f32;
+                }
+            }
+
+            j0 += jb;
+            jblk += 1;
+        }
+
+        // line 16: O_i = diag(l)⁻¹ Õ · S_V
+        for rr in 0..ib {
+            let inv = s_v / l[rr];
+            let orow = out.row_mut(i0 + rr);
+            let arow = acc.row(rr);
+            for p in 0..d {
+                orow[p] = arow[p] * inv;
+            }
+        }
+        i0 += ib;
+    }
+    out
+}
+
+/// End-to-end pipeline: f32 activations → token-level PTQ → Algorithm 1.
+/// Mirrors the AOT artifact's fused graph.
+pub fn int_flash_attention_f32_in(
+    q: &MatF32,
+    k: &MatF32,
+    v: &MatF32,
+    cfg: &AttnConfig,
+    r: f32,
+) -> MatF32 {
+    let qq: PerToken = quant::quantize_per_token(q, r);
+    let kq: PerToken = quant::quantize_per_token(k, r);
+    let vq: PerTensor = quant::quantize_per_tensor(v, r);
+    int_flash_attention(
+        &qq.codes, &qq.scales, &kq.codes, &kq.scales, &vq.codes, vq.scale, cfg, r,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::reference::standard_attention;
+    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::stats;
+
+    fn setup(seed: u64, n: usize, d: usize, dist: Dist) -> (MatF32, MatF32, MatF32) {
+        let mut rng = Pcg64::seeded(seed);
+        (
+            MatF32::random(n, d, dist, &mut rng),
+            MatF32::random(n, d, dist, &mut rng),
+            MatF32::random(n, d, dist, &mut rng),
+        )
+    }
+
+    #[test]
+    fn close_to_reference_normal() {
+        let (q, k, v) = setup(1, 256, 64, Dist::Normal);
+        let cfg = AttnConfig::new(64);
+        let got = int_flash_attention_f32_in(&q, &k, &v, &cfg, quant::INT8_R);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        let e = stats::mre(&got.data, &want.data);
+        assert!(e < 0.05, "mre {e}");
+    }
+
+    #[test]
+    fn close_to_reference_uniform() {
+        let (q, k, v) = setup(2, 256, 64, Dist::Uniform);
+        let cfg = AttnConfig::new(64);
+        let got = int_flash_attention_f32_in(&q, &k, &v, &cfg, quant::INT8_R);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        let e = stats::mre(&got.data, &want.data);
+        assert!(e < 0.02, "mre {e}");
+    }
+
+    #[test]
+    fn causal_close_to_reference() {
+        let (q, k, v) = setup(3, 128, 32, Dist::Normal);
+        let cfg = AttnConfig::new(32).causal(true).blocks(32, 32);
+        let got = int_flash_attention_f32_in(&q, &k, &v, &cfg, quant::INT8_R);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        assert!(stats::mre(&got.data, &want.data) < 0.06);
+    }
+
+    #[test]
+    fn ragged_blocks() {
+        // n not a multiple of the block size (rust impl handles remainders;
+        // the Pallas kernel requires padding instead)
+        let (q, k, v) = setup(4, 100, 16, Dist::Normal);
+        let cfg = AttnConfig::new(16).blocks(32, 48);
+        let got = int_flash_attention_f32_in(&q, &k, &v, &cfg, quant::INT8_R);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        assert!(stats::mre(&got.data, &want.data) < 0.06);
+    }
+
+    #[test]
+    fn q_block_partition_exact_invariance() {
+        // rounding depends only on the KV partition, never on B_r
+        let (q, k, v) = setup(5, 128, 32, Dist::Normal);
+        let a = int_flash_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(16, 32), quant::INT8_R);
+        let b = int_flash_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(64, 32), quant::INT8_R);
+        assert!(stats::max_abs_diff(&a.data, &b.data) < 1e-5);
+    }
+
+    #[test]
+    fn kv_partition_noise_bounded() {
+        let (q, k, v) = setup(6, 128, 32, Dist::Normal);
+        let a = int_flash_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(32, 16), quant::INT8_R);
+        let b = int_flash_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(32, 128), quant::INT8_R);
+        assert!(stats::mre(&a.data, &b.data) < 0.02);
+    }
+
+    #[test]
+    fn int4_coarser_than_int8() {
+        let (q, k, v) = setup(7, 128, 32, Dist::Normal);
+        let cfg = AttnConfig::new(32);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        let e8 = stats::mre(
+            &int_flash_attention_f32_in(&q, &k, &v, &cfg, quant::INT8_R).data,
+            &want.data,
+        );
+        let e4 = stats::mre(
+            &int_flash_attention_f32_in(&q, &k, &v, &cfg, quant::INT4_R).data,
+            &want.data,
+        );
+        assert!(e8 < e4, "int8 {e8} < int4 {e4}");
+        assert!(e4 < 1.0);
+    }
+
+    #[test]
+    fn large_magnitudes_absorbed_by_scales() {
+        let (mut q, mut k, mut v) = setup(8, 64, 16, Dist::Normal);
+        for x in q.data.iter_mut().chain(&mut k.data).chain(&mut v.data) {
+            *x *= 1e3;
+        }
+        let cfg = AttnConfig::new(16);
+        let got = int_flash_attention_f32_in(&q, &k, &v, &cfg, quant::INT8_R);
+        assert!(got.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn cross_attention_decode_shape() {
+        // decode: 1 query over 256 keys
+        let (q, _, _) = setup(9, 1, 64, Dist::Normal);
+        let (_, k, v) = setup(10, 256, 64, Dist::Normal);
+        let cfg = AttnConfig::new(64);
+        let got = int_flash_attention_f32_in(&q, &k, &v, &cfg, quant::INT8_R);
+        let want = standard_attention(&q, &k, &v, &cfg);
+        assert_eq!(got.rows, 1);
+        assert!(stats::mre(&got.data, &want.data) < 0.05);
+    }
+
+    #[test]
+    fn l_denominator_positive() {
+        // l ≥ R for every row (the running max row always contributes
+        // round(R·exp(0)) = R) — guards against divide-by-zero
+        let (q, k, v) = setup(11, 64, 16, Dist::Normal);
+        let qq = quant::quantize_per_token(&q, quant::INT8_R);
+        let kq = quant::quantize_per_token(&k, quant::INT8_R);
+        let vq = quant::quantize_per_tensor(&v, quant::INT8_R);
+        let cfg = AttnConfig::new(16);
+        let out = int_flash_attention(
+            &qq.codes, &qq.scales, &kq.codes, &kq.scales, &vq.codes, vq.scale, &cfg,
+            quant::INT8_R,
+        );
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,136 @@
+//! Attention substrates in rust — the serving hot path and the numeric
+//! ground truth for the benches.
+//!
+//! Five implementations, mirroring the paper's §4 candidates:
+//!   - [`reference`]: exact softmax attention (paper §2.1) — oracle.
+//!   - [`flash`]: FlashAttention-2 float tiled forward (§2.2) — baseline.
+//!   - [`int_flash`]: INT-FlashAttention Algorithm 1 — the contribution.
+//!   - [`half_int8`]: INT8 Q/K + float V variant (§4).
+//!   - [`flash_fp8`]: FlashAttention-3-style tensor-level FP8 (§4).
+//!
+//! All kernels are single-head (N×d); [`multihead`] maps them over
+//! (batch, head) for the serving path.
+
+pub mod flash;
+pub mod flash_fp8;
+pub mod half_int8;
+pub mod int_flash;
+pub mod multihead;
+pub mod reference;
+
+use crate::tensor::MatF32;
+
+/// Variant selector shared by the router, benches and examples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Fp16,
+    Fp8,
+    HalfInt8,
+    Int8,
+    Int4,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        Some(match s {
+            "fp16" => Variant::Fp16,
+            "fp8" => Variant::Fp8,
+            "half_int8" => Variant::HalfInt8,
+            "int8" => Variant::Int8,
+            "int4" => Variant::Int4,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Fp16 => "fp16",
+            Variant::Fp8 => "fp8",
+            Variant::HalfInt8 => "half_int8",
+            Variant::Int8 => "int8",
+            Variant::Int4 => "int4",
+        }
+    }
+
+    pub const ALL: [Variant; 5] = [
+        Variant::Fp16,
+        Variant::Fp8,
+        Variant::HalfInt8,
+        Variant::Int8,
+        Variant::Int4,
+    ];
+
+    /// Bytes per Q/K/V element in HBM (the IO side of the speedup:
+    /// INT8 halves traffic vs FP16).
+    pub fn qkv_bytes(self) -> f64 {
+        match self {
+            Variant::Fp16 => 2.0,
+            Variant::Fp8 | Variant::Int8 => 1.0,
+            Variant::HalfInt8 => 4.0 / 3.0, // Q,K int8; V fp16 (avg of 1,1,2)
+            Variant::Int4 => 0.5,
+        }
+    }
+}
+
+/// Common attention problem description.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnConfig {
+    pub sm_scale: f32,
+    pub causal: bool,
+    pub block_q: usize,
+    pub block_k: usize,
+}
+
+impl AttnConfig {
+    pub fn new(head_dim: usize) -> Self {
+        AttnConfig {
+            sm_scale: 1.0 / (head_dim as f32).sqrt(),
+            causal: false,
+            block_q: 64,
+            block_k: 64,
+        }
+    }
+
+    pub fn causal(mut self, on: bool) -> Self {
+        self.causal = on;
+        self
+    }
+
+    pub fn blocks(mut self, bq: usize, bk: usize) -> Self {
+        self.block_q = bq;
+        self.block_k = bk;
+        self
+    }
+
+    pub fn scale(mut self, s: f32) -> Self {
+        self.sm_scale = s;
+        self
+    }
+}
+
+/// Dispatch an f32-in/f32-out single-head attention to a variant
+/// implementation (quantization inside, mirroring the AOT pipeline).
+pub fn attention_f32(
+    variant: Variant,
+    q: &MatF32,
+    k: &MatF32,
+    v: &MatF32,
+    cfg: &AttnConfig,
+) -> MatF32 {
+    match variant {
+        Variant::Fp16 => flash::flash_attention(q, k, v, cfg),
+        Variant::Fp8 => flash_fp8::fp8_attention_f32_in(q, k, v, cfg),
+        Variant::HalfInt8 => half_int8::half_int8_attention_f32_in(q, k, v, cfg),
+        Variant::Int8 => int_flash::int_flash_attention_f32_in(q, k, v, cfg, crate::quant::INT8_R),
+        Variant::Int4 => int_flash::int_flash_attention_f32_in(q, k, v, cfg, crate::quant::INT4_R),
+    }
+}
+
+pub(crate) const NEG_INF: f32 = -1e30;
+
+/// Causal visibility: query row `i` of `n_q` attends key `j` of `n_k`
+/// iff `j <= i + n_k - n_q` (aligned ends).
+#[inline]
+pub(crate) fn causal_visible(i: usize, j: usize, n_q: usize, n_k: usize) -> bool {
+    j + n_q <= i + n_k
+}

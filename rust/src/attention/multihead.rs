@@ -1,0 +1,151 @@
+//! Batched multi-head attention over the single-head kernels, with a
+//! std::thread fan-out across (batch, head) pairs — the rust analogue of
+//! the CUDA grid's (batch, head) block dimensions.
+
+use super::{attention_f32, AttnConfig, Variant};
+use crate::tensor::MatF32;
+
+/// A (batch, heads) collection of per-head matrices, row-major heads.
+#[derive(Clone, Debug)]
+pub struct HeadBatch {
+    pub batch: usize,
+    pub heads: usize,
+    pub mats: Vec<MatF32>, // len = batch * heads
+}
+
+impl HeadBatch {
+    pub fn new(batch: usize, heads: usize, mats: Vec<MatF32>) -> Self {
+        assert_eq!(mats.len(), batch * heads);
+        HeadBatch { batch, heads, mats }
+    }
+
+    /// Build from a flat (B, H, N, d) f32 buffer (PJRT literal layout).
+    pub fn from_flat(batch: usize, heads: usize, n: usize, d: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), batch * heads * n * d);
+        let mats = (0..batch * heads)
+            .map(|i| MatF32::from_vec(n, d, data[i * n * d..(i + 1) * n * d].to_vec()))
+            .collect();
+        HeadBatch { batch, heads, mats }
+    }
+
+    /// Flatten back to (B, H, N, d).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.mats.iter().map(|m| m.len()).sum());
+        for m in &self.mats {
+            out.extend_from_slice(&m.data);
+        }
+        out
+    }
+
+    pub fn at(&self, b: usize, h: usize) -> &MatF32 {
+        &self.mats[b * self.heads + h]
+    }
+}
+
+/// Multi-head attention: applies the variant kernel to every (b, h) pair.
+/// `threads > 1` splits the head list across that many OS threads.
+pub fn attention_multihead(
+    variant: Variant,
+    q: &HeadBatch,
+    k: &HeadBatch,
+    v: &HeadBatch,
+    cfg: &AttnConfig,
+    threads: usize,
+) -> HeadBatch {
+    assert_eq!(q.mats.len(), k.mats.len());
+    assert_eq!(k.mats.len(), v.mats.len());
+    let n_mats = q.mats.len();
+    let threads = threads.clamp(1, n_mats.max(1));
+
+    let mats: Vec<MatF32> = if threads == 1 {
+        (0..n_mats)
+            .map(|i| attention_f32(variant, &q.mats[i], &k.mats[i], &v.mats[i], cfg))
+            .collect()
+    } else {
+        let mut results: Vec<Option<MatF32>> = vec![None; n_mats];
+        let chunk = n_mats.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (t, res_chunk) in results.chunks_mut(chunk).enumerate() {
+                let start = t * chunk;
+                let (qm, km, vm) = (&q.mats, &k.mats, &v.mats);
+                handles.push(scope.spawn(move || {
+                    for (off, slot) in res_chunk.iter_mut().enumerate() {
+                        let i = start + off;
+                        *slot = Some(attention_f32(variant, &qm[i], &km[i], &vm[i], cfg));
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("attention worker panicked");
+            }
+        });
+        results.into_iter().map(|r| r.unwrap()).collect()
+    };
+
+    HeadBatch { batch: q.batch, heads: q.heads, mats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::stats;
+
+    fn batch(seed: u64, b: usize, h: usize, n: usize, d: usize) -> HeadBatch {
+        let mut rng = Pcg64::seeded(seed);
+        HeadBatch::new(
+            b,
+            h,
+            (0..b * h).map(|_| MatF32::random(n, d, Dist::Normal, &mut rng)).collect(),
+        )
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let hb = batch(1, 2, 3, 8, 4);
+        let flat = hb.to_flat();
+        let back = HeadBatch::from_flat(2, 3, 8, 4, &flat);
+        for (a, b) in hb.mats.iter().zip(&back.mats) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial() {
+        let q = batch(2, 2, 4, 64, 16);
+        let k = batch(3, 2, 4, 64, 16);
+        let v = batch(4, 2, 4, 64, 16);
+        let cfg = AttnConfig::new(16);
+        let serial = attention_multihead(Variant::Int8, &q, &k, &v, &cfg, 1);
+        let par = attention_multihead(Variant::Int8, &q, &k, &v, &cfg, 4);
+        for (a, b) in serial.mats.iter().zip(&par.mats) {
+            assert_eq!(a.data, b.data); // identical arithmetic per head
+        }
+    }
+
+    #[test]
+    fn per_head_matches_single_call() {
+        let q = batch(5, 1, 2, 32, 8);
+        let k = batch(6, 1, 2, 32, 8);
+        let v = batch(7, 1, 2, 32, 8);
+        let cfg = AttnConfig::new(8);
+        let out = attention_multihead(Variant::Fp16, &q, &k, &v, &cfg, 2);
+        for i in 0..2 {
+            let single = super::super::attention_f32(
+                Variant::Fp16, &q.mats[i], &k.mats[i], &v.mats[i], &cfg,
+            );
+            assert!(stats::max_abs_diff(&out.mats[i].data, &single.data) < 1e-7);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_work() {
+        let q = batch(8, 1, 1, 16, 4);
+        let k = batch(9, 1, 1, 16, 4);
+        let v = batch(10, 1, 1, 16, 4);
+        let cfg = AttnConfig::new(4);
+        let out = attention_multihead(Variant::Fp16, &q, &k, &v, &cfg, 64);
+        assert_eq!(out.mats.len(), 1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Exact softmax attention (paper §2.1) — the numeric oracle every other
+//! implementation is measured against. Computes in f32 with f64 row
+//! accumulation for the softmax denominator.
+
+use super::{causal_visible, AttnConfig, NEG_INF};
+use crate::tensor::MatF32;
+
+/// O = softmax(Q Kᵀ · sm_scale) V, materializing S and P row by row.
+pub fn standard_attention(q: &MatF32, k: &MatF32, v: &MatF32, cfg: &AttnConfig) -> MatF32 {
+    assert_eq!(q.cols, k.cols, "head dim mismatch");
+    assert_eq!(k.rows, v.rows, "K/V length mismatch");
+    let (n_q, n_k, d) = (q.rows, k.rows, q.cols);
+    assert_eq!(v.cols, d, "V dim mismatch");
+
+    let mut out = MatF32::zeros(n_q, d);
+    let mut s_row = vec![0.0f32; n_k];
+    for i in 0..n_q {
+        let qi = q.row(i);
+        let mut m = NEG_INF;
+        for j in 0..n_k {
+            let vis = !cfg.causal || causal_visible(i, j, n_q, n_k);
+            let s = if vis {
+                let mut acc = 0.0f32;
+                let kj = k.row(j);
+                for p in 0..d {
+                    acc += qi[p] * kj[p];
+                }
+                acc * cfg.sm_scale
+            } else {
+                NEG_INF
+            };
+            s_row[j] = s;
+            m = m.max(s);
+        }
+        let mut denom = 0.0f64;
+        for j in 0..n_k {
+            let e = ((s_row[j] - m) as f64).exp();
+            s_row[j] = e as f32;
+            denom += e;
+        }
+        let inv = (1.0 / denom) as f32;
+        let orow = out.row_mut(i);
+        for j in 0..n_k {
+            let w = s_row[j] * inv;
+            if w == 0.0 {
+                continue;
+            }
+            let vj = v.row(j);
+            for p in 0..d {
+                orow[p] += w * vj[p];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::stats;
+
+    fn setup(seed: u64, n: usize, d: usize) -> (MatF32, MatF32, MatF32) {
+        let mut rng = Pcg64::seeded(seed);
+        (
+            MatF32::random(n, d, Dist::Normal, &mut rng),
+            MatF32::random(n, d, Dist::Normal, &mut rng),
+            MatF32::random(n, d, Dist::Normal, &mut rng),
+        )
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        // each output row lies in the convex hull of V rows → within
+        // [min, max] of each V column
+        let (q, k, v) = setup(1, 32, 8);
+        let cfg = AttnConfig::new(8);
+        let o = standard_attention(&q, &k, &v, &cfg);
+        for c in 0..8 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in 0..32 {
+                lo = lo.min(v.at(r, c));
+                hi = hi.max(v.at(r, c));
+            }
+            for r in 0..32 {
+                assert!(o.at(r, c) >= lo - 1e-5 && o.at(r, c) <= hi + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_scores_average_v() {
+        // Q = 0 → uniform softmax → output = column means of V
+        let (_, k, v) = setup(2, 16, 4);
+        let q = MatF32::zeros(16, 4);
+        let cfg = AttnConfig::new(4);
+        let o = standard_attention(&q, &k, &v, &cfg);
+        for c in 0..4 {
+            let mean: f32 = (0..16).map(|r| v.at(r, c)).sum::<f32>() / 16.0;
+            for r in 0..16 {
+                assert!((o.at(r, c) - mean).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn peaked_scores_select_row() {
+        // one huge-dot-product key dominates → output ≈ that V row
+        let d = 4;
+        let mut q = MatF32::zeros(1, d);
+        q.set(0, 0, 100.0);
+        let mut k = MatF32::zeros(3, d);
+        k.set(1, 0, 100.0); // key 1 matches strongly
+        let mut v = MatF32::zeros(3, d);
+        for c in 0..d {
+            v.set(1, c, c as f32 + 1.0);
+        }
+        let cfg = AttnConfig::new(d).scale(1.0);
+        let o = standard_attention(&q, &k, &v, &cfg);
+        for c in 0..d {
+            assert!((o.at(0, c) - (c as f32 + 1.0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn causal_first_row_attends_self_only() {
+        let (q, k, v) = setup(3, 8, 4);
+        let cfg = AttnConfig::new(4).causal(true);
+        let o = standard_attention(&q, &k, &v, &cfg);
+        for c in 0..4 {
+            assert!((o.at(0, c) - v.at(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn causal_matches_full_on_last_row() {
+        let (q, k, v) = setup(4, 16, 8);
+        let cfg_f = AttnConfig::new(8);
+        let cfg_c = AttnConfig::new(8).causal(true);
+        let of = standard_attention(&q, &k, &v, &cfg_f);
+        let oc = standard_attention(&q, &k, &v, &cfg_c);
+        for c in 0..8 {
+            assert!((of.at(15, c) - oc.at(15, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cross_attention_causal_alignment() {
+        // n_q=2, n_k=4: query 0 sees keys 0..=2, query 1 sees all 4
+        let (q, _, _) = setup(5, 2, 4);
+        let (_, k, v) = setup(6, 4, 4);
+        let cfg = AttnConfig::new(4).causal(true);
+        let o = standard_attention(&q, &k, &v, &cfg);
+        // compare against manual mask
+        let full = |i: usize, allowed: usize| {
+            let mut s: Vec<f32> = (0..allowed)
+                .map(|j| {
+                    (0..4).map(|p| q.at(i, p) * k.at(j, p)).sum::<f32>() * cfg.sm_scale
+                })
+                .collect();
+            let m = s.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut denom = 0.0;
+            for x in &mut s {
+                *x = (*x - m).exp();
+                denom += *x;
+            }
+            (0..4)
+                .map(|c| {
+                    (0..allowed).map(|j| s[j] * v.at(j, c)).sum::<f32>() / denom
+                })
+                .collect::<Vec<f32>>()
+        };
+        let want0 = full(0, 3);
+        let want1 = full(1, 4);
+        for c in 0..4 {
+            assert!((o.at(0, c) - want0[c]).abs() < 1e-5);
+            assert!((o.at(1, c) - want1[c]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scale_zero_is_uniform() {
+        let (q, k, v) = setup(7, 12, 4);
+        let cfg = AttnConfig::new(4).scale(0.0);
+        let o = standard_attention(&q, &k, &v, &cfg);
+        for c in 0..4 {
+            let mean: f32 = (0..12).map(|r| v.at(r, c)).sum::<f32>() / 12.0;
+            assert!((o.at(5, c) - mean).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn large_scores_stable() {
+        let (mut q, mut k, v) = setup(8, 8, 4);
+        for x in &mut q.data {
+            *x *= 100.0;
+        }
+        for x in &mut k.data {
+            *x *= 100.0;
+        }
+        let cfg = AttnConfig::new(4);
+        let o = standard_attention(&q, &k, &v, &cfg);
+        assert!(o.data.iter().all(|x| x.is_finite()));
+        let _ = stats::mre(&o.data, &o.data);
+    }
+}

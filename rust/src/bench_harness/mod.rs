@@ -1,0 +1,209 @@
+//! Criterion-lite benchmark harness (no criterion crate offline).
+//!
+//! Measures wall-clock of a closure with warmup, adaptive iteration
+//! counts, MAD outlier trimming and percentile reporting; renders
+//! markdown tables so `cargo bench` output can be pasted into
+//! EXPERIMENTS.md directly.
+
+use crate::util::stats::{mad_filter, Summary};
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean / 1e6
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// time spent warming up
+    pub warmup: Duration,
+    /// measurement budget
+    pub budget: Duration,
+    /// max sample count
+    pub max_samples: usize,
+    /// min sample count (even if budget exceeded)
+    pub min_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_samples: 200,
+            min_samples: 10,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast config for CI smoke benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(300),
+            max_samples: 50,
+            min_samples: 5,
+        }
+    }
+}
+
+/// Benchmark a closure; the closure's return value is black-boxed.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> Measurement {
+    // warmup
+    let w0 = Instant::now();
+    while w0.elapsed() < cfg.warmup {
+        black_box(f());
+    }
+    // measure
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let b0 = Instant::now();
+    while samples_ns.len() < cfg.min_samples
+        || (b0.elapsed() < cfg.budget && samples_ns.len() < cfg.max_samples)
+    {
+        let t0 = Instant::now();
+        black_box(f());
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    let kept = mad_filter(&samples_ns, 5.0);
+    Measurement {
+        name: name.to_string(),
+        iters: samples_ns.len(),
+        summary: Summary::of(&kept).expect("non-empty samples"),
+    }
+}
+
+/// Prevent the optimizer from eliding the benched computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Markdown table builder for bench reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Human duration from ns.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig::quick();
+        let m = bench("spin", &cfg, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(m.summary.mean > 0.0);
+        assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn bench_ordering_of_workloads() {
+        let cfg = BenchConfig::quick();
+        let small = bench("small", &cfg, || {
+            (0..100u64).map(black_box).sum::<u64>()
+        });
+        let large = bench("large", &cfg, || {
+            (0..100_000u64).map(black_box).sum::<u64>()
+        });
+        assert!(large.summary.p50 > small.summary.p50 * 5.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.starts_with("| a"));
+        assert!(s.contains("|---"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,168 @@
+//! Admission control: bounded in-flight work with load-shedding.
+//!
+//! Two budgets, both must pass: request count (queue slots) and total
+//! payload tokens (memory proxy). Rejections are immediate — the client
+//! gets a `Rejected` error rather than unbounded queueing (backpressure).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmitError {
+    QueueFull { depth: u64, limit: u64 },
+    TokenBudget { in_flight: u64, limit: u64 },
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull { depth, limit } => {
+                write!(f, "queue full ({depth}/{limit})")
+            }
+            AdmitError::TokenBudget { in_flight, limit } => {
+                write!(f, "token budget exceeded ({in_flight}/{limit})")
+            }
+        }
+    }
+}
+
+/// Shared admission gate; `admit` returns a guard that releases the
+/// budget on drop (RAII — a panicking worker still releases).
+pub struct Gate {
+    max_requests: u64,
+    max_tokens: u64,
+    in_flight: AtomicU64,
+    tokens: AtomicU64,
+}
+
+impl std::fmt::Debug for Permit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Permit({} tokens)", self.tokens)
+    }
+}
+
+pub struct Permit {
+    gate: Arc<Gate>,
+    tokens: u64,
+}
+
+impl Gate {
+    pub fn new(max_requests: u64, max_tokens: u64) -> Arc<Gate> {
+        Arc::new(Gate {
+            max_requests,
+            max_tokens,
+            in_flight: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+        })
+    }
+
+    pub fn admit(self: &Arc<Self>, tokens: u64) -> Result<Permit, AdmitError> {
+        // optimistic increment + rollback keeps this lock-free
+        let depth = self.in_flight.fetch_add(1, Ordering::AcqRel) + 1;
+        if depth > self.max_requests {
+            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            return Err(AdmitError::QueueFull { depth, limit: self.max_requests });
+        }
+        let t = self.tokens.fetch_add(tokens, Ordering::AcqRel) + tokens;
+        if t > self.max_tokens {
+            self.tokens.fetch_sub(tokens, Ordering::AcqRel);
+            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            return Err(AdmitError::TokenBudget { in_flight: t, limit: self.max_tokens });
+        }
+        Ok(Permit { gate: self.clone(), tokens })
+    }
+
+    pub fn depth(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    pub fn tokens_in_flight(&self) -> u64 {
+        self.tokens.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.gate.tokens.fetch_sub(self.tokens, Ordering::AcqRel);
+        self.gate.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_within_budget() {
+        let g = Gate::new(2, 1000);
+        let p1 = g.admit(100).unwrap();
+        let _p2 = g.admit(100).unwrap();
+        assert_eq!(g.depth(), 2);
+        assert_eq!(g.tokens_in_flight(), 200);
+        drop(p1);
+        assert_eq!(g.depth(), 1);
+        assert_eq!(g.tokens_in_flight(), 100);
+    }
+
+    #[test]
+    fn rejects_on_queue_full() {
+        let g = Gate::new(1, 1000);
+        let _p = g.admit(1).unwrap();
+        match g.admit(1) {
+            Err(AdmitError::QueueFull { .. }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // rejection rolled back the counter
+        assert_eq!(g.depth(), 1);
+    }
+
+    #[test]
+    fn rejects_on_token_budget() {
+        let g = Gate::new(10, 500);
+        let _p = g.admit(400).unwrap();
+        match g.admit(200) {
+            Err(AdmitError::TokenBudget { .. }) => {}
+            other => panic!("expected TokenBudget, got {other:?}"),
+        }
+        assert_eq!(g.tokens_in_flight(), 400);
+        assert_eq!(g.depth(), 1, "token rejection must also roll back depth");
+    }
+
+    #[test]
+    fn permit_released_on_panic() {
+        let g = Gate::new(4, 1000);
+        let g2 = g.clone();
+        let _ = std::thread::spawn(move || {
+            let _p = g2.admit(10).unwrap();
+            panic!("worker died");
+        })
+        .join();
+        assert_eq!(g.depth(), 0, "RAII release survived the panic");
+        assert_eq!(g.tokens_in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_admission_never_oversubscribes() {
+        let g = Gate::new(8, 100_000);
+        let mut handles = Vec::new();
+        let max_seen = Arc::new(AtomicU64::new(0));
+        for _ in 0..16 {
+            let g = g.clone();
+            let max_seen = max_seen.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..500 {
+                    if let Ok(_p) = g.admit(1) {
+                        let d = g.depth();
+                        max_seen.fetch_max(d, Ordering::Relaxed);
+                        std::hint::spin_loop();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(max_seen.load(Ordering::Relaxed) <= 8);
+        assert_eq!(g.depth(), 0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Dynamic batcher: groups routed requests per bucket and releases a
+//! batch when it is full (size trigger) or when its oldest member has
+//! waited past the deadline (latency trigger) — the standard
+//! continuous-batching tradeoff knob.
+
+use super::request::Request;
+use super::router::Bucket;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Batching policies (ablation A2 compares them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// release as soon as any request is present (batch size ≈ 1 under
+    /// light load; lowest latency, lowest throughput)
+    Eager,
+    /// wait for a full batch or the deadline, whichever first (default)
+    Deadline,
+    /// wait for a full batch only (highest occupancy; worst tail latency —
+    /// pending partial batches release only on `flush`)
+    FullOnly,
+}
+
+impl BatchPolicy {
+    pub fn parse(s: &str) -> Option<BatchPolicy> {
+        Some(match s {
+            "eager" => BatchPolicy::Eager,
+            "deadline" => BatchPolicy::Deadline,
+            "full" => BatchPolicy::FullOnly,
+            _ => return None,
+        })
+    }
+}
+
+/// A released batch, ready for execution.
+pub struct ReadyBatch {
+    pub bucket: Bucket,
+    pub requests: Vec<Request>,
+    /// formed_at − oldest submit time
+    pub queue_wait: Duration,
+}
+
+/// Per-bucket pending queues with trigger logic.
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    deadline: Duration,
+    pending: HashMap<Bucket, Vec<Request>>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy, deadline: Duration) -> Self {
+        DynamicBatcher { policy, deadline, pending: HashMap::new() }
+    }
+
+    /// Add a routed request; returns a batch if the size trigger fired.
+    pub fn push(&mut self, bucket: &Bucket, req: Request) -> Option<ReadyBatch> {
+        let q = self.pending.entry(bucket.clone()).or_default();
+        q.push(req);
+        if q.len() >= bucket.batch || self.policy == BatchPolicy::Eager {
+            return self.release(bucket);
+        }
+        None
+    }
+
+    /// Poll deadline triggers; call periodically from the engine loop.
+    pub fn poll(&mut self, now: Instant) -> Vec<ReadyBatch> {
+        if self.policy != BatchPolicy::Deadline {
+            return Vec::new();
+        }
+        let expired: Vec<Bucket> = self
+            .pending
+            .iter()
+            .filter(|(_, q)| {
+                q.iter()
+                    .map(|r| r.submitted_at)
+                    .min()
+                    .is_some_and(|t| now.duration_since(t) >= self.deadline)
+            })
+            .map(|(b, _)| b.clone())
+            .collect();
+        expired.into_iter().filter_map(|b| self.release(&b)).collect()
+    }
+
+    /// Force-release every pending batch (shutdown / FullOnly drain).
+    pub fn flush(&mut self) -> Vec<ReadyBatch> {
+        let buckets: Vec<Bucket> = self.pending.keys().cloned().collect();
+        buckets.into_iter().filter_map(|b| self.release(&b)).collect()
+    }
+
+    /// Number of requests waiting across all buckets.
+    pub fn pending_count(&self) -> usize {
+        self.pending.values().map(|q| q.len()).sum()
+    }
+
+    /// Time until the next deadline trigger (engine loop sleep hint).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        if self.policy != BatchPolicy::Deadline {
+            return None;
+        }
+        self.pending
+            .values()
+            .flat_map(|q| q.iter().map(|r| r.submitted_at))
+            .min()
+            .map(|oldest| {
+                self.deadline
+                    .checked_sub(now.duration_since(oldest))
+                    .unwrap_or(Duration::ZERO)
+            })
+    }
+
+    fn release(&mut self, bucket: &Bucket) -> Option<ReadyBatch> {
+        let q = self.pending.get_mut(bucket)?;
+        if q.is_empty() {
+            return None;
+        }
+        let take = q.len().min(bucket.batch);
+        let requests: Vec<Request> = q.drain(..take).collect();
+        if q.is_empty() {
+            self.pending.remove(bucket);
+        }
+        let oldest = requests.iter().map(|r| r.submitted_at).min().unwrap();
+        Some(ReadyBatch {
+            bucket: bucket.clone(),
+            requests,
+            queue_wait: oldest.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+    use crate::coordinator::request::{AccuracyClass, RequestPayload};
+    use std::sync::mpsc;
+
+    fn bucket(batch: usize) -> Bucket {
+        Bucket {
+            variant: Variant::Int8,
+            batch,
+            heads: 2,
+            seq: 64,
+            head_dim: 16,
+            causal: false,
+            artifact: "a".into(),
+        }
+    }
+
+    fn req(id: u64) -> (Request, mpsc::Receiver<super::super::request::Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                accuracy: AccuracyClass::Fast,
+                payload: RequestPayload {
+                    heads: 2, seq: 64, head_dim: 16,
+                    q: vec![0.0; 2048], k: vec![0.0; 2048], v: vec![0.0; 2048],
+                },
+                submitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn size_trigger_fires_at_capacity() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Deadline, Duration::from_secs(10));
+        let bk = bucket(3);
+        let mut keep = Vec::new();
+        for id in 0..2 {
+            let (r, rx) = req(id);
+            keep.push(rx);
+            assert!(b.push(&bk, r).is_none());
+        }
+        let (r, rx) = req(2);
+        keep.push(rx);
+        let batch = b.push(&bk, r).expect("full batch releases");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn eager_releases_immediately() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Eager, Duration::from_secs(10));
+        let bk = bucket(8);
+        let (r, _rx) = req(0);
+        let batch = b.push(&bk, r).expect("eager releases singletons");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Deadline, Duration::from_millis(1));
+        let bk = bucket(8);
+        let (r, _rx) = req(0);
+        assert!(b.push(&bk, r).is_none());
+        assert!(b.poll(Instant::now()).is_empty() || true); // may or may not fire yet
+        std::thread::sleep(Duration::from_millis(3));
+        let fired = b.poll(Instant::now());
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].requests.len(), 1);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn full_only_never_releases_partial_on_poll() {
+        let mut b = DynamicBatcher::new(BatchPolicy::FullOnly, Duration::from_millis(1));
+        let bk = bucket(4);
+        let (r, _rx) = req(0);
+        assert!(b.push(&bk, r).is_none());
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.poll(Instant::now()).is_empty());
+        let flushed = b.flush();
+        assert_eq!(flushed.len(), 1);
+    }
+
+    #[test]
+    fn batches_never_mix_buckets() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Deadline, Duration::from_secs(10));
+        let b1 = bucket(2);
+        let mut b2 = bucket(2);
+        b2.variant = Variant::Fp16;
+        let (r, _r1) = req(0);
+        assert!(b.push(&b1, r).is_none());
+        let (r, _r2) = req(1);
+        assert!(b.push(&b2, r).is_none());
+        assert_eq!(b.pending_count(), 2);
+        let (r, _r3) = req(2);
+        let ready = b.push(&b1, r).unwrap();
+        assert!(ready.requests.iter().all(|r| r.id != 1), "bucket b2 request leaked in");
+    }
+
+    #[test]
+    fn batch_never_exceeds_capacity() {
+        let mut b = DynamicBatcher::new(BatchPolicy::FullOnly, Duration::from_secs(1));
+        let bk = bucket(2);
+        let mut receivers = Vec::new();
+        let mut released = 0;
+        for id in 0..7 {
+            let (r, rx) = req(id);
+            receivers.push(rx);
+            if let Some(batch) = b.push(&bk, r) {
+                assert!(batch.requests.len() <= 2);
+                released += batch.requests.len();
+            }
+        }
+        let rest: usize = b.flush().iter().map(|x| x.requests.len()).sum();
+        assert_eq!(released + rest, 7, "no request lost");
+    }
+
+    #[test]
+    fn next_deadline_hint() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Deadline, Duration::from_millis(50));
+        assert!(b.next_deadline(Instant::now()).is_none());
+        let (r, _rx) = req(0);
+        b.push(&bucket(8), r);
+        let hint = b.next_deadline(Instant::now()).unwrap();
+        assert!(hint <= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(BatchPolicy::parse("eager"), Some(BatchPolicy::Eager));
+        assert_eq!(BatchPolicy::parse("deadline"), Some(BatchPolicy::Deadline));
+        assert_eq!(BatchPolicy::parse("full"), Some(BatchPolicy::FullOnly));
+        assert_eq!(BatchPolicy::parse("x"), None);
+    }
+}

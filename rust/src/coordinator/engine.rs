@@ -1,0 +1,698 @@
+//! The serving engine: admission → routing → batching → worker execution.
+//!
+//! One scheduler thread owns the router + batcher; a pool of worker
+//! threads executes released batches against a [`Backend`] (PJRT
+//! artifacts in production, the rust-native kernels in tests/benches).
+
+use super::admission::{Gate, Permit};
+use super::batcher::{BatchPolicy, DynamicBatcher, ReadyBatch};
+use super::metrics::Registry;
+use super::request::{AccuracyClass, Request, RequestPayload, Response};
+use super::router::{Bucket, BucketRouter};
+use crate::attention::{multihead, AttnConfig};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batch execution backend.
+pub trait Backend: Send + Sync + 'static {
+    /// Execute one padded bucket batch: q/k/v are flat (B, H, N, d) f32.
+    /// Returns the flat (B, H, N, d) output.
+    fn execute(&self, bucket: &Bucket, q: &[f32], k: &[f32], v: &[f32])
+        -> Result<Vec<f32>, String>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Backend running the rust-native attention kernels (no artifacts
+/// needed — used by unit tests, benches and the `--backend native` mode).
+pub struct NativeBackend {
+    /// threads per batch execution (heads fan-out)
+    pub threads: usize,
+}
+
+impl Backend for NativeBackend {
+    fn execute(
+        &self,
+        bucket: &Bucket,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        let (b, h, n, d) = (bucket.batch, bucket.heads, bucket.seq, bucket.head_dim);
+        let qb = multihead::HeadBatch::from_flat(b, h, n, d, q);
+        let kb = multihead::HeadBatch::from_flat(b, h, n, d, k);
+        let vb = multihead::HeadBatch::from_flat(b, h, n, d, v);
+        let cfg = AttnConfig::new(d).causal(bucket.causal);
+        let out = multihead::attention_multihead(bucket.variant, &qb, &kb, &vb, &cfg, self.threads);
+        Ok(out.to_flat())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Backend executing AOT artifacts through PJRT.
+///
+/// The `xla` crate's PJRT client is `!Send` (Rc internals), so a dedicated
+/// owner thread holds the [`crate::runtime::ArtifactRegistry`] and worker
+/// threads submit jobs over a channel. Serializing submissions is fine on
+/// the CPU plugin: XLA parallelizes *inside* an execution with its own
+/// thread pool, and one in-flight batch per device is the PJRT model.
+pub struct PjrtBackend {
+    tx: Sender<PjrtJob>,
+}
+
+struct PjrtJob {
+    artifact: String,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    reply: Sender<Result<Vec<f32>, String>>,
+}
+
+impl PjrtBackend {
+    /// Spawn the PJRT owner thread over an artifact directory.
+    pub fn start(dir: std::path::PathBuf) -> Result<PjrtBackend, String> {
+        let (tx, rx) = mpsc::channel::<PjrtJob>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        std::thread::Builder::new()
+            .name("intfa-pjrt".into())
+            .spawn(move || {
+                let registry = match crate::runtime::ArtifactRegistry::open(&dir) {
+                    Ok(r) => {
+                        // eager warm: compile every artifact at startup so
+                        // first-request latency is execution-only
+                        if let Err(e) = r.warm_all() {
+                            let _ = ready_tx.send(Err(format!("warm: {e:#}")));
+                            return;
+                        }
+                        let _ = ready_tx.send(Ok(()));
+                        Arc::new(r)
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                use crate::runtime::executor::HostTensor;
+                while let Ok(job) = rx.recv() {
+                    let result = crate::runtime::Executor::new(registry.clone(), &job.artifact)
+                        .map_err(|e| format!("{e:#}"))
+                        .and_then(|exe| {
+                            exe.run(&[
+                                HostTensor::F32(job.q),
+                                HostTensor::F32(job.k),
+                                HostTensor::F32(job.v),
+                            ])
+                            .map_err(|e| format!("{e:#}"))
+                        })
+                        .map(|outs| outs.into_iter().next().expect("one output"));
+                    let _ = job.reply.send(result);
+                }
+            })
+            .map_err(|e| e.to_string())?;
+        ready_rx
+            .recv()
+            .map_err(|_| "pjrt thread died during startup".to_string())??;
+        Ok(PjrtBackend { tx })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn execute(
+        &self,
+        bucket: &Bucket,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(PjrtJob {
+                artifact: bucket.artifact.clone(),
+                q: q.to_vec(),
+                k: k.to_vec(),
+                v: v.to_vec(),
+                reply,
+            })
+            .map_err(|_| "pjrt thread gone".to_string())?;
+        rx.recv().map_err(|_| "pjrt thread dropped reply".to_string())?
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub policy: BatchPolicy,
+    pub batch_deadline: Duration,
+    pub workers: usize,
+    pub max_queue: u64,
+    pub max_tokens: u64,
+    /// threads per native-backend batch
+    pub backend_threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: BatchPolicy::Deadline,
+            batch_deadline: Duration::from_millis(5),
+            workers: 2,
+            max_queue: 256,
+            max_tokens: 4 << 20,
+            backend_threads: 4,
+        }
+    }
+}
+
+enum SchedMsg {
+    Incoming(Request, Permit),
+    Shutdown,
+}
+
+struct WorkItem {
+    batch: ReadyBatch,
+    permits: Vec<Permit>,
+}
+
+/// The serving engine handle. Dropping it drains and joins all threads.
+pub struct Engine {
+    tx: Sender<SchedMsg>,
+    gate: Arc<Gate>,
+    router: Arc<BucketRouter>,
+    pub metrics: Arc<Registry>,
+    next_id: std::sync::atomic::AtomicU64,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Build an engine over a routing table and a backend.
+    pub fn new(router: BucketRouter, backend: Arc<dyn Backend>, cfg: EngineConfig) -> Engine {
+        let metrics = Arc::new(Registry::default());
+        let gate = Gate::new(cfg.max_queue, cfg.max_tokens);
+        let router = Arc::new(router);
+        let (tx, rx) = mpsc::channel::<SchedMsg>();
+        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+        let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+
+        let mut threads = Vec::new();
+
+        // workers
+        for wid in 0..cfg.workers.max(1) {
+            let work_rx = work_rx.clone();
+            let backend = backend.clone();
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("intfa-worker-{wid}"))
+                    .spawn(move || worker_loop(work_rx, backend, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+
+        // scheduler
+        {
+            let router = router.clone();
+            let metrics = metrics.clone();
+            let policy = cfg.policy;
+            let deadline = cfg.batch_deadline;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("intfa-sched".into())
+                    .spawn(move || scheduler_loop(rx, work_tx, router, metrics, policy, deadline))
+                    .expect("spawn scheduler"),
+            );
+        }
+
+        Engine {
+            tx,
+            gate,
+            router,
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            threads,
+        }
+    }
+
+    pub fn router(&self) -> &BucketRouter {
+        &self.router
+    }
+
+    /// Submit a request; returns (id, receiver for the response).
+    /// Admission rejections resolve immediately through the receiver.
+    pub fn submit(
+        &self,
+        accuracy: AccuracyClass,
+        payload: RequestPayload,
+    ) -> (u64, Receiver<Response>) {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let submitted_at = Instant::now();
+
+        let fail = |err: String| {
+            let _ = reply_tx.send(Response {
+                id,
+                result: Err(err),
+                variant: None,
+                bucket_seq: 0,
+                latency_us: 0,
+                batch_occupancy: 0.0,
+            });
+        };
+
+        if let Err(e) = payload.validate() {
+            self.metrics.counter("rejected.invalid").inc();
+            fail(format!("invalid payload: {e}"));
+            return (id, reply_rx);
+        }
+        let tokens = (payload.seq * payload.heads) as u64;
+        let permit = match self.gate.admit(tokens) {
+            Ok(p) => p,
+            Err(e) => {
+                self.metrics.counter("rejected.admission").inc();
+                fail(format!("rejected: {e}"));
+                return (id, reply_rx);
+            }
+        };
+        self.metrics.counter("submitted").inc();
+        self.metrics.gauge("queue.depth").set(self.gate.depth() as i64);
+        let req = Request { id, accuracy, payload, submitted_at, reply: reply_tx };
+        if self.tx.send(SchedMsg::Incoming(req, permit)).is_err() {
+            // engine shut down — receiver disconnected; nothing else to do
+        }
+        (id, reply_rx)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn submit_blocking(
+        &self,
+        accuracy: AccuracyClass,
+        payload: RequestPayload,
+    ) -> Response {
+        let (_, rx) = self.submit(accuracy, payload);
+        rx.recv().expect("engine dropped response channel")
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(SchedMsg::Shutdown);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn scheduler_loop(
+    rx: Receiver<SchedMsg>,
+    work_tx: Sender<WorkItem>,
+    router: Arc<BucketRouter>,
+    metrics: Arc<Registry>,
+    policy: BatchPolicy,
+    deadline: Duration,
+) {
+    let mut batcher = DynamicBatcher::new(policy, deadline);
+    // permits ride alongside their requests, keyed by request id
+    let mut permits: std::collections::HashMap<u64, Permit> = std::collections::HashMap::new();
+
+    let dispatch = |batch: ReadyBatch,
+                        permits: &mut std::collections::HashMap<u64, Permit>| {
+        let ps: Vec<Permit> = batch
+            .requests
+            .iter()
+            .filter_map(|r| permits.remove(&r.id))
+            .collect();
+        metrics.counter("batches.formed").inc();
+        metrics
+            .histogram("batch.queue_wait_us")
+            .observe_us(batch.queue_wait.as_micros() as u64);
+        let _ = work_tx.send(WorkItem { batch, permits: ps });
+    };
+
+    loop {
+        let timeout = batcher
+            .next_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(SchedMsg::Incoming(req, permit)) => {
+                let p = &req.payload;
+                match router.route(req.accuracy, p.heads, p.seq, p.head_dim) {
+                    Some(bucket) => {
+                        let bucket = bucket.clone();
+                        permits.insert(req.id, permit);
+                        if let Some(batch) = batcher.push(&bucket, req) {
+                            dispatch(batch, &mut permits);
+                        }
+                    }
+                    None => {
+                        metrics.counter("rejected.unroutable").inc();
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            result: Err(format!(
+                                "no bucket for heads={} seq={} d={} (max seq {})",
+                                p.heads,
+                                p.seq,
+                                p.head_dim,
+                                router.max_seq(p.heads, p.head_dim)
+                            )),
+                            variant: None,
+                            bucket_seq: 0,
+                            latency_us: 0,
+                            batch_occupancy: 0.0,
+                        });
+                        drop(permit);
+                    }
+                }
+            }
+            Ok(SchedMsg::Shutdown) => {
+                for batch in batcher.flush() {
+                    dispatch(batch, &mut permits);
+                }
+                break;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                for batch in batcher.poll(Instant::now()) {
+                    dispatch(batch, &mut permits);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for batch in batcher.flush() {
+                    dispatch(batch, &mut permits);
+                }
+                break;
+            }
+        }
+    }
+    // dropping work_tx closes the worker channel → workers drain and exit
+}
+
+fn worker_loop(
+    work_rx: Arc<std::sync::Mutex<Receiver<WorkItem>>>,
+    backend: Arc<dyn Backend>,
+    metrics: Arc<Registry>,
+) {
+    loop {
+        let item = {
+            let guard = work_rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(WorkItem { batch, permits }) = item else {
+            return; // channel closed
+        };
+        execute_batch(batch, &*backend, &metrics);
+        drop(permits); // release admission budget after execution
+    }
+}
+
+/// Pad requests into the bucket's (B, H, N, d) layout, execute, unpad,
+/// reply. Padding the *tail* of the key/value sequence is sound for
+/// causal buckets (queries never attend past their own position) and for
+/// exact-size requests on non-causal buckets (the router enforces this).
+fn execute_batch(batch: ReadyBatch, backend: &dyn Backend, metrics: &Registry) {
+    let bucket = &batch.bucket;
+    let (b, h, n, d) = (bucket.batch, bucket.heads, bucket.seq, bucket.head_dim);
+    let slot = h * n * d;
+    let mut q = vec![0.0f32; b * slot];
+    let mut k = vec![0.0f32; b * slot];
+    let mut v = vec![0.0f32; b * slot];
+
+    for (si, req) in batch.requests.iter().enumerate() {
+        let p = &req.payload;
+        // copy (h, p.seq, d) rows into the padded (h, n, d) slot
+        for head in 0..h {
+            let src0 = head * p.seq * d;
+            let dst0 = si * slot + head * n * d;
+            let len = p.seq * d;
+            q[dst0..dst0 + len].copy_from_slice(&p.q[src0..src0 + len]);
+            k[dst0..dst0 + len].copy_from_slice(&p.k[src0..src0 + len]);
+            v[dst0..dst0 + len].copy_from_slice(&p.v[src0..src0 + len]);
+        }
+    }
+
+    let occupancy = batch.requests.len() as f32 / b as f32;
+    let t0 = Instant::now();
+    let result = backend.execute(bucket, &q, &k, &v);
+    let exec_us = t0.elapsed().as_micros() as u64;
+    metrics.histogram("batch.exec_us").observe_us(exec_us);
+    metrics
+        .counter("batch.slots_wasted")
+        .add((b - batch.requests.len()) as u64);
+
+    match result {
+        Ok(out) => {
+            for (si, req) in batch.requests.iter().enumerate() {
+                let p = &req.payload;
+                let mut o = Vec::with_capacity(h * p.seq * d);
+                for head in 0..h {
+                    let base = si * slot + head * n * d;
+                    o.extend_from_slice(&out[base..base + p.seq * d]);
+                }
+                let latency_us = req.submitted_at.elapsed().as_micros() as u64;
+                metrics.histogram("request.latency_us").observe_us(latency_us);
+                metrics.counter("completed").inc();
+                let _ = req.reply.send(Response {
+                    id: req.id,
+                    result: Ok(o),
+                    variant: Some(bucket.variant),
+                    bucket_seq: n,
+                    latency_us,
+                    batch_occupancy: occupancy,
+                });
+            }
+        }
+        Err(e) => {
+            for req in &batch.requests {
+                metrics.counter("failed").inc();
+                let _ = req.reply.send(Response {
+                    id: req.id,
+                    result: Err(e.clone()),
+                    variant: Some(bucket.variant),
+                    bucket_seq: n,
+                    latency_us: req.submitted_at.elapsed().as_micros() as u64,
+                    batch_occupancy: occupancy,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+    use crate::util::rng::Pcg64;
+
+    fn native_router() -> BucketRouter {
+        let mk = |variant, seq| Bucket {
+            variant,
+            batch: 2,
+            heads: 2,
+            seq,
+            head_dim: 16,
+            causal: true,
+            artifact: String::new(),
+        };
+        BucketRouter::new(vec![
+            mk(Variant::Int8, 32),
+            mk(Variant::Int8, 64),
+            mk(Variant::Fp16, 64),
+            mk(Variant::HalfInt8, 64),
+        ])
+    }
+
+    fn engine(cfg: EngineConfig) -> Engine {
+        Engine::new(native_router(), Arc::new(NativeBackend { threads: 1 }), cfg)
+    }
+
+    fn payload(rng: &mut Pcg64, heads: usize, seq: usize, d: usize) -> RequestPayload {
+        let n = heads * seq * d;
+        RequestPayload {
+            heads,
+            seq,
+            head_dim: d,
+            q: rng.normal_vec(n),
+            k: rng.normal_vec(n),
+            v: rng.normal_vec(n),
+        }
+    }
+
+    #[test]
+    fn end_to_end_single_request() {
+        let e = engine(EngineConfig {
+            policy: BatchPolicy::Eager,
+            ..EngineConfig::default()
+        });
+        let mut rng = Pcg64::seeded(1);
+        let resp = e.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, 20, 16));
+        let out = resp.result.expect("ok");
+        assert_eq!(out.len(), 2 * 20 * 16);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert_eq!(resp.variant, Some(Variant::Int8));
+        assert_eq!(resp.bucket_seq, 32);
+    }
+
+    #[test]
+    fn output_matches_direct_kernel_call() {
+        // unpadded result must equal calling the kernel directly on the
+        // padded shape (the engine adds no numeric transformation)
+        let e = engine(EngineConfig {
+            policy: BatchPolicy::Eager,
+            ..EngineConfig::default()
+        });
+        let mut rng = Pcg64::seeded(2);
+        let p = payload(&mut rng, 2, 32, 16); // exact bucket size → no padding
+        let resp = e.submit_blocking(AccuracyClass::Exact, p.clone());
+        // Exact → fp16 bucket at 64 → padded; compare against direct padded run
+        let out = resp.result.unwrap();
+        assert_eq!(out.len(), 2 * 32 * 16);
+        // direct: pad to 64, run fp16 causal, slice. Buffers cover the
+        // full (batch=2) bucket; the request occupies slot 0.
+        let bseq = 64;
+        let mut qp = vec![0.0; 2 * 2 * bseq * 16];
+        let mut kp = vec![0.0; 2 * 2 * bseq * 16];
+        let mut vp = vec![0.0; 2 * 2 * bseq * 16];
+        for head in 0..2 {
+            let src = head * 32 * 16;
+            let dst = head * bseq * 16;
+            qp[dst..dst + 32 * 16].copy_from_slice(&p.q[src..src + 32 * 16]);
+            kp[dst..dst + 32 * 16].copy_from_slice(&p.k[src..src + 32 * 16]);
+            vp[dst..dst + 32 * 16].copy_from_slice(&p.v[src..src + 32 * 16]);
+        }
+        let backend = NativeBackend { threads: 1 };
+        let bucket = Bucket {
+            variant: Variant::Fp16,
+            batch: 2,
+            heads: 2,
+            seq: bseq,
+            head_dim: 16,
+            causal: true,
+            artifact: String::new(),
+        };
+        let direct = backend.execute(&bucket, &qp, &kp, &vp).unwrap();
+        for head in 0..2 {
+            let o0 = head * 32 * 16;
+            let d0 = head * bseq * 16;
+            for i in 0..32 * 16 {
+                assert!(
+                    (out[o0 + i] - direct[d0 + i]).abs() < 1e-5,
+                    "mismatch at head {head} idx {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_forms_from_concurrent_requests() {
+        let e = Arc::new(engine(EngineConfig {
+            policy: BatchPolicy::Deadline,
+            batch_deadline: Duration::from_millis(20),
+            ..EngineConfig::default()
+        }));
+        let mut handles = Vec::new();
+        for seed in 0..2u64 {
+            let e = e.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg64::seeded(seed);
+                e.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, 30, 16))
+            }));
+        }
+        let resps: Vec<Response> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(resps.iter().all(|r| r.result.is_ok()));
+        // both landed in the same 2-slot bucket batch (occupancy 1.0) —
+        // timing-dependent but with a 20ms window this is deterministic in
+        // practice; accept either full or split batches, but at least one
+        // response must exist per request.
+        assert_eq!(resps.len(), 2);
+    }
+
+    #[test]
+    fn unroutable_request_rejected() {
+        let e = engine(EngineConfig::default());
+        let mut rng = Pcg64::seeded(3);
+        let resp = e.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, 1000, 16));
+        let err = resp.result.unwrap_err();
+        assert!(err.contains("no bucket"), "{err}");
+    }
+
+    #[test]
+    fn invalid_payload_rejected() {
+        let e = engine(EngineConfig::default());
+        let p = RequestPayload {
+            heads: 2, seq: 20, head_dim: 16,
+            q: vec![0.0; 10], k: vec![0.0; 640], v: vec![0.0; 640],
+        };
+        let resp = e.submit_blocking(AccuracyClass::Fast, p);
+        assert!(resp.result.unwrap_err().contains("invalid payload"));
+    }
+
+    #[test]
+    fn admission_rejects_over_queue() {
+        let e = engine(EngineConfig {
+            max_queue: 1,
+            policy: BatchPolicy::FullOnly, // hold requests so the queue stays full
+            workers: 1,
+            ..EngineConfig::default()
+        });
+        let mut rng = Pcg64::seeded(4);
+        let (_, _rx1) = e.submit(AccuracyClass::Fast, payload(&mut rng, 2, 30, 16));
+        // second submit races the first's admission hold — the first is
+        // parked in the batcher (FullOnly, batch=2 never full with 1)
+        std::thread::sleep(Duration::from_millis(10));
+        let resp = e.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, 30, 16));
+        // either rejected by admission, or (if the scheduler already
+        // dispatched) accepted — with FullOnly it must be a rejection
+        assert!(resp.result.is_err());
+        assert!(resp.result.unwrap_err().contains("rejected"));
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let e = engine(EngineConfig {
+            policy: BatchPolicy::Eager,
+            ..EngineConfig::default()
+        });
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..3 {
+            let _ = e.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, 16, 16));
+        }
+        let snap = e.metrics.snapshot();
+        assert_eq!(snap.at("counter.submitted").as_i64(), Some(3));
+        assert_eq!(snap.at("counter.completed").as_i64(), Some(3));
+        assert!(snap.at("hist.request.latency_us").at("count").as_i64() == Some(3));
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let mut rng = Pcg64::seeded(6);
+        let rx = {
+            let e = engine(EngineConfig {
+                policy: BatchPolicy::FullOnly,
+                ..EngineConfig::default()
+            });
+            let (_, rx) = e.submit(AccuracyClass::Fast, payload(&mut rng, 2, 30, 16));
+            rx
+            // e drops here → flush → execute → respond
+        };
+        let resp = rx.recv().expect("drained on shutdown");
+        assert!(resp.result.is_ok());
+    }
+
+    #[test]
+    fn balanced_class_uses_half_int8() {
+        let e = engine(EngineConfig {
+            policy: BatchPolicy::Eager,
+            ..EngineConfig::default()
+        });
+        let mut rng = Pcg64::seeded(7);
+        let resp = e.submit_blocking(AccuracyClass::Balanced, payload(&mut rng, 2, 30, 16));
+        assert_eq!(resp.variant, Some(Variant::HalfInt8));
+    }
+}

@@ -1,0 +1,235 @@
+//! Serving metrics: counters, gauges, latency histograms with a JSON
+//! snapshot (exposed through the server's `metrics` verb).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous gauge.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-scale latency histogram (µs buckets, powers of two up to ~67 s).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 27;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << i; // bucket upper bound
+            }
+        }
+        1u64 << (HIST_BUCKETS - 1)
+    }
+}
+
+/// Named-metric registry shared across engine components.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Snapshot everything as JSON.
+    pub fn snapshot(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            obj.insert(format!("counter.{k}"), Json::num(c.get() as f64));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            obj.insert(format!("gauge.{k}"), Json::num(g.get() as f64));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            obj.insert(
+                format!("hist.{k}"),
+                Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("mean_us", Json::num(h.mean_us())),
+                    ("p50_us", Json::num(h.quantile_us(0.5) as f64)),
+                    ("p99_us", Json::num(h.quantile_us(0.99) as f64)),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::default();
+        let c = r.counter("reqs");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name → same instance
+        assert_eq!(r.counter("reqs").get(), 5);
+        let g = r.gauge("depth");
+        g.set(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::default();
+        for us in [10u64, 20, 30, 1000, 1000, 1000, 100_000, 1_000_000] {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.mean_us() > 0.0);
+        let p50 = h.quantile_us(0.5);
+        assert!((512..=2048).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile_us(0.99);
+        assert!(p99 >= 1 << 19, "p99 {p99}");
+        assert!(h.quantile_us(0.0) <= p50);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_json() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.gauge("b").set(7);
+        r.histogram("lat").observe_us(100);
+        let s = r.snapshot();
+        assert_eq!(s.at("counter.a").as_i64(), Some(1));
+        assert_eq!(s.at("gauge.b").as_i64(), Some(7));
+        assert_eq!(s.at("hist.lat").at("count").as_i64(), Some(1));
+        // serializes cleanly
+        assert!(crate::util::json::parse(&s.to_string()).is_ok());
+    }
+
+    #[test]
+    fn histogram_concurrent() {
+        let h = std::sync::Arc::new(Histogram::default());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.observe_us(i + 1);
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

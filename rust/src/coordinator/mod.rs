@@ -1,0 +1,27 @@
+//! L3 coordinator — the serving runtime wrapped around the attention
+//! operator (vLLM-router-shaped; see DESIGN.md §4).
+//!
+//! Request lifecycle:
+//! ```text
+//!   submit(Request)
+//!     → admission::Gate        (queue-depth backpressure)
+//!     → router::BucketRouter   (seq-len bucket + precision policy)
+//!     → batcher::DynamicBatcher(size- or deadline-triggered batches)
+//!     → engine worker pool     (PJRT or rust-native backend)
+//!     → Response via the request's reply channel
+//! ```
+//!
+//! All components are synchronous-core + thread-pool-driven (std::thread +
+//! mpsc; no async runtime in this offline environment) and individually
+//! unit/property-tested.
+
+pub mod admission;
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{AccuracyClass, Request, RequestPayload, Response};

@@ -1,0 +1,112 @@
+//! Request/response types for the serving engine.
+
+use crate::attention::Variant;
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Client-declared accuracy requirement; the precision policy maps it to
+/// a kernel variant (router::PrecisionPolicy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccuracyClass {
+    /// throughput first → full INT8 (the paper's headline operating point)
+    Fast,
+    /// balanced → half-INT8 (INT8 Q/K, float V)
+    Balanced,
+    /// reference quality → float kernel
+    Exact,
+}
+
+impl AccuracyClass {
+    pub fn parse(s: &str) -> Option<AccuracyClass> {
+        Some(match s {
+            "fast" => AccuracyClass::Fast,
+            "balanced" => AccuracyClass::Balanced,
+            "exact" => AccuracyClass::Exact,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AccuracyClass::Fast => "fast",
+            AccuracyClass::Balanced => "balanced",
+            AccuracyClass::Exact => "exact",
+        }
+    }
+}
+
+/// Attention workload payload: flat (H, N, d) f32 activations.
+#[derive(Clone, Debug)]
+pub struct RequestPayload {
+    pub heads: usize,
+    pub seq: usize,
+    pub head_dim: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl RequestPayload {
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.heads * self.seq * self.head_dim;
+        if n == 0 {
+            return Err("empty payload dims".into());
+        }
+        for (name, buf) in [("q", &self.q), ("k", &self.k), ("v", &self.v)] {
+            if buf.len() != n {
+                return Err(format!("{name} has {} elems, expected {n}", buf.len()));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One in-flight request.
+pub struct Request {
+    pub id: u64,
+    pub accuracy: AccuracyClass,
+    pub payload: RequestPayload,
+    pub submitted_at: Instant,
+    pub reply: Sender<Response>,
+}
+
+/// Completion message.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<Vec<f32>, String>,
+    /// variant the policy actually ran
+    pub variant: Option<Variant>,
+    /// bucket sequence length the request was padded to
+    pub bucket_seq: usize,
+    /// end-to-end latency
+    pub latency_us: u64,
+    /// occupancy of the executed batch (requests / slots)
+    pub batch_occupancy: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_parse() {
+        assert_eq!(AccuracyClass::parse("fast"), Some(AccuracyClass::Fast));
+        assert_eq!(AccuracyClass::parse("exact"), Some(AccuracyClass::Exact));
+        assert_eq!(AccuracyClass::parse("x"), None);
+        assert_eq!(AccuracyClass::Balanced.name(), "balanced");
+    }
+
+    #[test]
+    fn payload_validation() {
+        let ok = RequestPayload {
+            heads: 2, seq: 4, head_dim: 8,
+            q: vec![0.0; 64], k: vec![0.0; 64], v: vec![0.0; 64],
+        };
+        assert!(ok.validate().is_ok());
+        let bad = RequestPayload { k: vec![0.0; 63], ..ok.clone() };
+        assert!(bad.validate().is_err());
+        let empty = RequestPayload { heads: 0, ..ok };
+        assert!(empty.validate().is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! Bucket router + precision policy.
+//!
+//! Artifacts are compiled for fixed (batch, heads, seq, head_dim) shapes;
+//! the router maps an incoming request to the smallest compatible bucket
+//! (padding the sequence up) and the precision policy maps the client's
+//! accuracy class to a kernel variant, falling back along a defined chain
+//! when no artifact exists for the preferred variant.
+
+use super::request::AccuracyClass;
+use crate::attention::Variant;
+
+/// One executable bucket (mirror of an attention artifact's geometry).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Bucket {
+    pub variant: Variant,
+    pub batch: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub head_dim: usize,
+    pub causal: bool,
+    /// artifact name (PJRT backend) — empty for native buckets
+    pub artifact: String,
+}
+
+/// Routing table over the available buckets.
+#[derive(Clone, Debug, Default)]
+pub struct BucketRouter {
+    buckets: Vec<Bucket>,
+}
+
+/// Precision policy: accuracy class → ordered variant preference.
+pub fn variant_chain(acc: AccuracyClass) -> &'static [Variant] {
+    match acc {
+        AccuracyClass::Fast => &[Variant::Int8, Variant::HalfInt8, Variant::Fp16],
+        AccuracyClass::Balanced => &[Variant::HalfInt8, Variant::Int8, Variant::Fp16],
+        AccuracyClass::Exact => &[Variant::Fp16],
+    }
+}
+
+impl BucketRouter {
+    pub fn new(mut buckets: Vec<Bucket>) -> Self {
+        // smallest-seq-first so `route` finds the tightest bucket greedily
+        buckets.sort_by_key(|b| (b.seq, b.batch));
+        BucketRouter { buckets }
+    }
+
+    /// Build from an artifact manifest (PJRT serving).
+    pub fn from_manifest(manifest: &crate::runtime::Manifest) -> Self {
+        let buckets = manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "attention")
+            .filter_map(|a| {
+                Some(Bucket {
+                    variant: Variant::parse(&a.variant)?,
+                    batch: a.batch,
+                    heads: a.heads,
+                    seq: a.seq,
+                    head_dim: a.head_dim,
+                    causal: a.causal,
+                    artifact: a.name.clone(),
+                })
+            })
+            .collect();
+        Self::new(buckets)
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Route a request: smallest bucket with seq ≥ request seq, matching
+    /// heads/head_dim, walking the accuracy class's variant chain.
+    /// Returns the bucket and the variant actually chosen.
+    pub fn route(
+        &self,
+        acc: AccuracyClass,
+        heads: usize,
+        seq: usize,
+        head_dim: usize,
+    ) -> Option<&Bucket> {
+        for variant in variant_chain(acc) {
+            let found = self
+                .buckets
+                .iter()
+                .filter(|b| {
+                    b.variant == *variant
+                        && b.heads == heads
+                        && b.head_dim == head_dim
+                        && b.seq >= seq
+                        // tail-padding the KV sequence is only sound under a
+                        // causal mask (engine::execute_batch) — non-causal
+                        // buckets accept exact-size requests only
+                        && (b.causal || b.seq == seq)
+                })
+                .min_by_key(|b| b.seq);
+            if found.is_some() {
+                return found;
+            }
+        }
+        None
+    }
+
+    /// The largest supported sequence length for a (heads, head_dim) pair
+    /// across all variants (admission pre-check).
+    pub fn max_seq(&self, heads: usize, head_dim: usize) -> usize {
+        self.buckets
+            .iter()
+            .filter(|b| b.heads == heads && b.head_dim == head_dim)
+            .map(|b| b.seq)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, Gen, Pair, UsizeRange};
+    use crate::util::rng::Pcg64;
+
+    fn mk(variant: Variant, seq: usize) -> Bucket {
+        Bucket {
+            variant,
+            batch: 4,
+            heads: 8,
+            seq,
+            head_dim: 64,
+            causal: true,
+            artifact: format!("attn_{}_n{seq}", variant.name()),
+        }
+    }
+
+    fn router() -> BucketRouter {
+        BucketRouter::new(vec![
+            mk(Variant::Int8, 128),
+            mk(Variant::Int8, 256),
+            mk(Variant::Int8, 512),
+            mk(Variant::HalfInt8, 256),
+            mk(Variant::Fp16, 128),
+            mk(Variant::Fp16, 512),
+        ])
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let r = router();
+        let b = r.route(AccuracyClass::Fast, 8, 100, 64).unwrap();
+        assert_eq!(b.seq, 128);
+        assert_eq!(b.variant, Variant::Int8);
+        let b = r.route(AccuracyClass::Fast, 8, 129, 64).unwrap();
+        assert_eq!(b.seq, 256);
+        let b = r.route(AccuracyClass::Fast, 8, 512, 64).unwrap();
+        assert_eq!(b.seq, 512);
+    }
+
+    #[test]
+    fn too_long_is_unroutable() {
+        let r = router();
+        assert!(r.route(AccuracyClass::Fast, 8, 513, 64).is_none());
+        assert_eq!(r.max_seq(8, 64), 512);
+    }
+
+    #[test]
+    fn geometry_mismatch_is_unroutable() {
+        let r = router();
+        assert!(r.route(AccuracyClass::Fast, 4, 100, 64).is_none());
+        assert!(r.route(AccuracyClass::Fast, 8, 100, 32).is_none());
+        assert_eq!(r.max_seq(4, 64), 0);
+    }
+
+    #[test]
+    fn precision_fallback_chain() {
+        // balanced prefers half_int8 (only exists at 256)
+        let r = router();
+        let b = r.route(AccuracyClass::Balanced, 8, 100, 64).unwrap();
+        assert_eq!(b.variant, Variant::HalfInt8);
+        assert_eq!(b.seq, 256);
+        // balanced at 300: no half_int8 bucket ≥300 → falls back to int8/512
+        let b = r.route(AccuracyClass::Balanced, 8, 300, 64).unwrap();
+        assert_eq!(b.variant, Variant::Int8);
+        assert_eq!(b.seq, 512);
+        // exact only uses fp16
+        let b = r.route(AccuracyClass::Exact, 8, 300, 64).unwrap();
+        assert_eq!(b.variant, Variant::Fp16);
+        assert_eq!(b.seq, 512);
+    }
+
+    #[test]
+    fn empty_router() {
+        let r = BucketRouter::new(vec![]);
+        assert!(r.is_empty());
+        assert!(r.route(AccuracyClass::Fast, 8, 1, 64).is_none());
+    }
+
+    /// Property (DESIGN.md §4 invariant): the router always returns the
+    /// *smallest* bucket whose seq ≥ the request seq, within the chosen
+    /// variant — no bucket of the same variant fits more tightly.
+    #[test]
+    fn property_tightest_bucket() {
+        struct SeqGen;
+        impl Gen for SeqGen {
+            type Value = Vec<usize>;
+            fn generate(&self, rng: &mut Pcg64) -> Vec<usize> {
+                let n = 1 + rng.next_range(6) as usize;
+                (0..n).map(|_| 1 + rng.next_range(1024) as usize).collect()
+            }
+        }
+        let g = Pair(SeqGen, UsizeRange(1, 1100));
+        check_default("router picks tightest bucket", &g, |(seqs, want)| {
+            let buckets: Vec<Bucket> = seqs.iter().map(|&s| mk(Variant::Int8, s)).collect();
+            let r = BucketRouter::new(buckets);
+            match r.route(AccuracyClass::Fast, 8, *want, 64) {
+                None => seqs.iter().all(|&s| s < *want),
+                Some(b) => {
+                    b.seq >= *want
+                        && seqs.iter().all(|&s| s < *want || s >= b.seq)
+                }
+            }
+        });
+    }
+}

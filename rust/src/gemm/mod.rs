@@ -1,0 +1,239 @@
+//! Blocked GEMM kernels — the rust-native compute substrate.
+//!
+//! Two families, mirroring the two tensor-core pipes the paper uses:
+//!   - `i8`: INT8×INT8 → INT32 (Ampere's 2×-throughput integer pipe; here
+//!     a cache-blocked scalar kernel with i32 accumulation, written so the
+//!     inner loop autovectorizes to AVX2 `pmaddwd`-style code),
+//!   - `f32`: the float baseline.
+//!
+//! Layout convention: `a` is row-major (M×K); `bt` is the *transposed*
+//! right operand, row-major (N×K) — both operands are then contiguous
+//! along K, which is what both the attention QKᵀ product (K is stored
+//! row-major per token) and the PV product (after the V transpose staged
+//! at load time) want.
+
+use crate::tensor::{MatF32, MatI32, MatI8};
+
+/// Naive i8 GEMM (reference for tests): c[m][n] = Σ_k a[m][k]·bt[n][k].
+pub fn gemm_i8_naive(a: &MatI8, bt: &MatI8) -> MatI32 {
+    assert_eq!(a.cols, bt.cols, "K mismatch");
+    let (m, n, k) = (a.rows, bt.rows, a.cols);
+    let mut c = MatI32::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for p in 0..k {
+                acc += a.at(i, p) as i32 * bt.at(j, p) as i32;
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+/// Blocked + unrolled i8 GEMM. Blocks chosen so one (MC×KC) A-panel and
+/// an (NC×KC) B-panel stay L1/L2-resident; the K-loop is unrolled 8× and
+/// accumulates in i32 (no overflow: 127·127·K fits i32 for K < 133k).
+pub fn gemm_i8(a: &MatI8, bt: &MatI8) -> MatI32 {
+    assert_eq!(a.cols, bt.cols, "K mismatch");
+    let (m, n) = (a.rows, bt.rows);
+    let mut c = MatI32::zeros(m, n);
+    gemm_i8_into(a, bt, &mut c);
+    c
+}
+
+/// In-place variant reusing the output buffer (hot-path allocation-free).
+pub fn gemm_i8_into(a: &MatI8, bt: &MatI8, c: &mut MatI32) {
+    assert_eq!(a.cols, bt.cols, "K mismatch");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, bt.rows);
+    let k = a.cols;
+    const MC: usize = 64;
+    const NC: usize = 64;
+    for i0 in (0..a.rows).step_by(MC) {
+        let i1 = (i0 + MC).min(a.rows);
+        for j0 in (0..bt.rows).step_by(NC) {
+            let j1 = (j0 + NC).min(bt.rows);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let crow = c.row_mut(i);
+                for j in j0..j1 {
+                    crow[j] = dot_i8(arow, bt.row(j), k);
+                }
+            }
+        }
+    }
+}
+
+/// K-contiguous i8 dot product with i32 accumulation.
+///
+/// §Perf note: the simple zip/map/sum form beats a manual 8× unroll by
+/// 5-9× here — LLVM turns it into vpmovsxbw/vpmaddwd-style AVX-512 code
+/// with `-C target-cpu=native` (30 GOPS vs 3.4 for the unroll; see
+/// EXPERIMENTS.md §Perf iteration 1). Do not "optimize" this by hand.
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8], k: usize) -> i32 {
+    debug_assert!(a.len() >= k && b.len() >= k);
+    a[..k]
+        .iter()
+        .zip(&b[..k])
+        .map(|(&x, &y)| (x as i16 * y as i16) as i32)
+        .sum()
+}
+
+/// Naive f32 GEMM reference.
+pub fn gemm_f32_naive(a: &MatF32, bt: &MatF32) -> MatF32 {
+    assert_eq!(a.cols, bt.cols, "K mismatch");
+    let (m, n, k) = (a.rows, bt.rows, a.cols);
+    let mut c = MatF32::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a.at(i, p) * bt.at(j, p);
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+/// Blocked f32 GEMM (same structure as the i8 kernel).
+pub fn gemm_f32(a: &MatF32, bt: &MatF32) -> MatF32 {
+    assert_eq!(a.cols, bt.cols, "K mismatch");
+    let mut c = MatF32::zeros(a.rows, bt.rows);
+    gemm_f32_into(a, bt, &mut c);
+    c
+}
+
+/// In-place blocked f32 GEMM.
+pub fn gemm_f32_into(a: &MatF32, bt: &MatF32, c: &mut MatF32) {
+    assert_eq!(a.cols, bt.cols, "K mismatch");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, bt.rows);
+    let k = a.cols;
+    const MC: usize = 64;
+    const NC: usize = 64;
+    for i0 in (0..a.rows).step_by(MC) {
+        let i1 = (i0 + MC).min(a.rows);
+        for j0 in (0..bt.rows).step_by(NC) {
+            let j1 = (j0 + NC).min(bt.rows);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let crow = c.row_mut(i);
+                for j in j0..j1 {
+                    crow[j] = dot_f32(arow, bt.row(j), k);
+                }
+            }
+        }
+    }
+}
+
+/// §Perf note: 16 explicit accumulator lanes let LLVM keep the loop in
+/// one zmm FMA per iteration (32 GFLOPS native vs 3.7 for a scalar-chain
+/// unroll — EXPERIMENTS.md §Perf iteration 1). Float sum order differs
+/// from a sequential dot; callers tolerate ~1e-4 relative.
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32], k: usize) -> f32 {
+    let mut lanes = [0.0f32; 16];
+    let ac = a[..k].chunks_exact(16);
+    let bc = b[..k].chunks_exact(16);
+    let (ar, br) = (ac.remainder(), bc.remainder());
+    for (ca, cb) in ac.zip(bc) {
+        for i in 0..16 {
+            lanes[i] += ca[i] * cb[i];
+        }
+    }
+    lanes.iter().sum::<f32>()
+        + ar.iter().zip(br).map(|(x, y)| x * y).sum::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_i8(seed: u64, rows: usize, cols: usize) -> MatI8 {
+        let mut rng = Pcg64::seeded(seed);
+        MatI8::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| (rng.next_range(255) as i32 - 127) as i8)
+                .collect(),
+        )
+    }
+
+    fn rand_f32(seed: u64, rows: usize, cols: usize) -> MatF32 {
+        let mut rng = Pcg64::seeded(seed);
+        MatF32::from_vec(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    #[test]
+    fn i8_blocked_matches_naive() {
+        for (m, n, k) in [(1, 1, 1), (3, 5, 7), (64, 64, 64), (65, 33, 17), (128, 96, 80)] {
+            let a = rand_i8(m as u64, m, k);
+            let b = rand_i8(n as u64 + 1000, n, k);
+            assert_eq!(gemm_i8(&a, &b).data, gemm_i8_naive(&a, &b).data, "{m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn f32_blocked_matches_naive() {
+        for (m, n, k) in [(3, 5, 7), (64, 64, 64), (65, 33, 17)] {
+            let a = rand_f32(m as u64, m, k);
+            let b = rand_f32(n as u64 + 2000, n, k);
+            let got = gemm_f32(&a, &b);
+            let want = gemm_f32_naive(&a, &b);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn i8_identity() {
+        // bt = identity (transposed identity is identity) → c == a widened
+        let k = 16;
+        let a = rand_i8(9, 8, k);
+        let mut eye = MatI8::zeros(k, k);
+        for i in 0..k {
+            eye.set(i, i, 1);
+        }
+        let c = gemm_i8(&a, &eye);
+        for i in 0..8 {
+            for j in 0..k {
+                assert_eq!(c.at(i, j), a.at(i, j) as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn i8_extreme_values_no_overflow() {
+        // all +127 × all −128 at K=4096: acc = 4096·127·(−128) ≈ −6.6e7, fits i32
+        let m = MatI8::from_vec(1, 4096, vec![127; 4096]);
+        let n = MatI8::from_vec(1, 4096, vec![-128; 4096]);
+        let c = gemm_i8(&m, &n);
+        assert_eq!(c.at(0, 0), 4096 * 127 * -128);
+    }
+
+    #[test]
+    fn into_variant_reuses_buffer() {
+        let a = rand_i8(11, 32, 24);
+        let b = rand_i8(12, 16, 24);
+        let mut c = MatI32::zeros(32, 16);
+        gemm_i8_into(&a, &b, &mut c);
+        assert_eq!(c.data, gemm_i8_naive(&a, &b).data);
+        // second call overwrites (no accumulation across calls)
+        gemm_i8_into(&a, &b, &mut c);
+        assert_eq!(c.data, gemm_i8_naive(&a, &b).data);
+    }
+
+    #[test]
+    #[should_panic(expected = "K mismatch")]
+    fn shape_mismatch_panics() {
+        let a = rand_i8(1, 4, 8);
+        let b = rand_i8(2, 4, 9);
+        gemm_i8(&a, &b);
+    }
+}

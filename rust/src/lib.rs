@@ -1,0 +1,30 @@
+//! # INT-FlashAttention
+//!
+//! Rust + JAX + Pallas reproduction of *INT-FlashAttention: Enabling Flash
+//! Attention for INT8 Quantization* (Chen et al., 2024): a token-level
+//! INT8 post-training-quantization attention architecture integrated into
+//! the FlashAttention-2 forward workflow, wrapped in a production-shaped
+//! serving stack.
+//!
+//! Three layers (python never on the request path):
+//! - **L1** Pallas kernels (`python/compile/kernels/`) — Algorithm 1 and
+//!   the FP16/FP8/half-INT8 baselines, validated against pure-jnp oracles.
+//! - **L2** JAX model (`python/compile/`) — multi-head attention + a small
+//!   transformer LM, AOT-lowered to HLO text artifacts.
+//! - **L3** this crate — the serving coordinator (router, dynamic batcher,
+//!   scheduler), the PJRT runtime that executes the artifacts, rust-native
+//!   numeric twins of every kernel, and the Ampere cost-model simulator
+//!   that regenerates the paper's Figure 2.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod attention;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod gemm;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod tensor;
+pub mod util;

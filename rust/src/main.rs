@@ -1,0 +1,281 @@
+//! `intfa` — INT-FlashAttention serving CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   serve        start the TCP serving engine over AOT artifacts
+//!   client       load-generator client against a running server
+//!   golden       validate every artifact against its golden fixture
+//!   accuracy     regenerate the paper's Tables 1-2 (MRE)
+//!   perf-model   regenerate the paper's Figure 2 (Ampere cost model)
+//!   buckets      print the routing table derived from the manifest
+
+use anyhow::{anyhow, bail, Result};
+use int_flashattention::attention::Variant;
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend, PjrtBackend};
+use int_flashattention::coordinator::router::BucketRouter;
+use int_flashattention::runtime::Manifest;
+use int_flashattention::server::{Client, Server};
+use int_flashattention::simulator::{predict, GpuModel, Workload};
+use int_flashattention::util::cli::Args;
+use int_flashattention::util::log::{self, Level};
+use int_flashattention::util::rng::{Dist, Pcg64};
+use int_flashattention::util::stats::Summary;
+use int_flashattention::{bench_harness::Table, log_info};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const USAGE: &str = "\
+intfa — INT-FlashAttention serving runtime
+
+USAGE:
+  intfa serve      [--artifacts DIR] [--addr HOST:PORT] [--backend pjrt|native]
+                   [--policy eager|deadline|full] [--deadline-ms N] [--workers N]
+  intfa client     [--addr HOST:PORT] [--requests N] [--concurrency C]
+                   [--heads H] [--seq N] [--head-dim D] [--accuracy fast|balanced|exact]
+  intfa golden     [--artifacts DIR]
+  intfa accuracy   [--dist normal|uniform] [--seqs 1024,2048] [--head-dim D]
+  intfa perf-model [--gpu rtx4090|a100] [--seqs 1024,...,16384]
+  intfa buckets    [--artifacts DIR]
+
+GLOBAL: --log-level error|warn|info|debug";
+
+fn main() {
+    let args = Args::from_env();
+    if let Some(lvl) = args.get("log-level").and_then(Level::parse) {
+        log::init(lvl);
+    } else {
+        log::init_from_env();
+    }
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("serve") => cmd_serve(args),
+        Some("client") => cmd_client(args),
+        Some("golden") => cmd_golden(args),
+        Some("accuracy") => cmd_accuracy(args),
+        Some("perf-model") => cmd_perf_model(args),
+        Some("buckets") => cmd_buckets(args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    Ok(EngineConfig {
+        policy: BatchPolicy::parse(args.get_or("policy", "deadline"))
+            .ok_or_else(|| anyhow!("bad --policy"))?,
+        batch_deadline: Duration::from_millis(args.get_u64("deadline-ms", 5)?),
+        workers: args.get_usize("workers", 2)?,
+        max_queue: args.get_u64("max-queue", 256)?,
+        max_tokens: args.get_u64("max-tokens", 4 << 20)?,
+        backend_threads: args.get_usize("backend-threads", 4)?,
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    let router = BucketRouter::from_manifest(&manifest);
+    if router.is_empty() {
+        bail!("no attention buckets in manifest");
+    }
+    let cfg = engine_config(args)?;
+    let backend: Arc<dyn int_flashattention::coordinator::engine::Backend> =
+        match args.get_or("backend", "pjrt") {
+            "pjrt" => Arc::new(PjrtBackend::start(dir).map_err(|e| anyhow!(e))?),
+            "native" => Arc::new(NativeBackend { threads: cfg.backend_threads }),
+            other => bail!("unknown backend {other:?}"),
+        };
+    log_info!("backend={} buckets={}", backend.name(), router.buckets().len());
+    let engine = Arc::new(Engine::new(router, backend, cfg));
+    let server = Server::bind(engine, args.get_or("addr", "127.0.0.1:7433"))?;
+    println!("listening on {}", server.local_addr());
+    server.serve();
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7433").to_string();
+    let requests = args.get_usize("requests", 32)?;
+    let concurrency = args.get_usize("concurrency", 4)?;
+    let heads = args.get_usize("heads", 8)?;
+    let seq = args.get_usize("seq", 128)?;
+    let d = args.get_usize("head-dim", 64)?;
+    let accuracy = args.get_or("accuracy", "fast").to_string();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let per = requests.div_ceil(concurrency);
+    for c in 0..concurrency {
+        let addr = addr.clone();
+        let accuracy = accuracy.clone();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut client = Client::connect(&addr)?;
+            let mut rng = Pcg64::new(c as u64, 7);
+            let n = heads * seq * d;
+            let mut lats = Vec::new();
+            for _ in 0..per {
+                let (q, k, v) = (rng.normal_vec(n), rng.normal_vec(n), rng.normal_vec(n));
+                let t = Instant::now();
+                let resp = client.attention(&accuracy, heads, seq, d, &q, &k, &v)?;
+                if resp.at("ok").as_bool() != Some(true) {
+                    bail!("request failed: {}", resp.to_string());
+                }
+                lats.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(lats)
+        }));
+    }
+    let mut lats = Vec::new();
+    for h in handles {
+        lats.extend(h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&lats).unwrap();
+    println!(
+        "{} requests in {:.2}s → {:.1} req/s | latency ms: mean {:.2} p50 {:.2} p99 {:.2}",
+        lats.len(),
+        wall,
+        lats.len() as f64 / wall,
+        s.mean,
+        s.p50,
+        s.p99
+    );
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let registry = Arc::new(int_flashattention::runtime::ArtifactRegistry::open(&dir)?);
+    let mut table = Table::new(&["artifact", "mre", "max_abs", "status"]);
+    let mut failures = 0;
+    for meta in registry.manifest.artifacts.clone() {
+        if meta.golden.is_none() {
+            continue;
+        }
+        let exe = int_flashattention::runtime::Executor::new(registry.clone(), &meta.name)?;
+        let (mre, max_abs) = exe.run_golden()?;
+        let g = meta.golden.as_ref().unwrap();
+        let ok = mre < g.rtol && (max_abs as f64) < g.atol * 100.0;
+        if !ok {
+            failures += 1;
+        }
+        table.row(&[
+            meta.name.clone(),
+            format!("{mre:.2e}"),
+            format!("{max_abs:.2e}"),
+            if ok { "ok".into() } else { "FAIL".into() },
+        ]);
+    }
+    print!("{}", table.render());
+    if failures > 0 {
+        bail!("{failures} golden checks failed");
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    use int_flashattention::attention::{attention_f32, reference, AttnConfig};
+    use int_flashattention::tensor::MatF32;
+    use int_flashattention::util::stats;
+
+    let dist = Dist::parse(args.get_or("dist", "normal"))
+        .ok_or_else(|| anyhow!("bad --dist"))?;
+    let seqs: Vec<usize> = args
+        .get_list("seqs", &["1024", "2048", "4096"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow!("bad seq {s}")))
+        .collect::<Result<_>>()?;
+    let d = args.get_usize("head-dim", 64)?;
+    let mut table = Table::new(&["seq", "fp8", "half_int8", "full_int8", "int4"]);
+    for seq in seqs {
+        let mut rng = Pcg64::seeded(seq as u64);
+        let q = MatF32::random(seq, d, dist, &mut rng);
+        let k = MatF32::random(seq, d, dist, &mut rng);
+        let v = MatF32::random(seq, d, dist, &mut rng);
+        let cfg = AttnConfig::new(d);
+        let gold = reference::standard_attention(&q, &k, &v, &cfg);
+        let err = |variant| {
+            let o = attention_f32(variant, &q, &k, &v, &cfg);
+            stats::mre(&o.data, &gold.data) * 100.0
+        };
+        table.row(&[
+            seq.to_string(),
+            format!("{:.3}%", err(Variant::Fp8)),
+            format!("{:.3}%", err(Variant::HalfInt8)),
+            format!("{:.3}%", err(Variant::Int8)),
+            format!("{:.3}%", err(Variant::Int4)),
+        ]);
+    }
+    println!("MRE vs exact attention ({} activations, d={d}):", dist.name());
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_perf_model(args: &Args) -> Result<()> {
+    let gpu = match args.get_or("gpu", "rtx4090") {
+        "rtx4090" => GpuModel::rtx4090(),
+        "a100" => GpuModel::a100(),
+        other => bail!("unknown gpu {other:?}"),
+    };
+    let seqs: Vec<usize> = args
+        .get_list("seqs", &["1024", "2048", "4096", "8192", "16384"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow!("bad seq {s}")))
+        .collect::<Result<_>>()?;
+    let mut table = Table::new(&["seq", "fp16 ms", "fp8 ms", "half-int8 ms", "int8 ms", "int8 vs fp16"]);
+    for seq in seqs {
+        let wl = Workload::fig2(seq);
+        let fmt = |v| {
+            predict(&gpu, &wl, v)
+                .map(|p| format!("{:.3}", p.total * 1e3))
+                .unwrap_or_else(|| "n/a".into())
+        };
+        let reduction = match (predict(&gpu, &wl, Variant::Int8), predict(&gpu, &wl, Variant::Fp16)) {
+            (Some(a), Some(b)) => format!("-{:.0}%", 100.0 * (1.0 - a.total / b.total)),
+            _ => "n/a".into(),
+        };
+        table.row(&[
+            seq.to_string(),
+            fmt(Variant::Fp16),
+            fmt(Variant::Fp8),
+            fmt(Variant::HalfInt8),
+            fmt(Variant::Int8),
+            reduction,
+        ]);
+    }
+    println!("predicted attention latency on {} (paper Fig. 2 geometry):", gpu.name);
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_buckets(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    let router = BucketRouter::from_manifest(&manifest);
+    let mut table = Table::new(&["artifact", "variant", "batch", "heads", "seq", "d", "causal"]);
+    for b in router.buckets() {
+        table.row(&[
+            b.artifact.clone(),
+            b.variant.name().into(),
+            b.batch.to_string(),
+            b.heads.to_string(),
+            b.seq.to_string(),
+            b.head_dim.to_string(),
+            b.causal.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! Bit-exact software emulation of the float8 e4m3fn format (sign, 4-bit
+//! exponent with bias 7, 3-bit mantissa, max finite 448, no infinities).
+//! Backs the FlashAttention-3-style FP8 baseline on hardware without FP8.
+//!
+//! Rounding is round-to-nearest-even on the mantissa, matching both
+//! Hopper's conversion instructions and ml_dtypes' float8_e4m3fn (the
+//! python side's oracle — cross-checked in tests against known values).
+
+pub const FP8_E4M3_MAX: f32 = 448.0;
+
+/// Smallest positive normal: 2^-6.
+const MIN_NORMAL: f32 = 0.015625;
+/// Smallest positive subnormal: 2^-9.
+const MIN_SUBNORMAL: f32 = 0.001953125;
+
+/// Round one f32 to the nearest e4m3fn-representable value (saturating).
+pub fn fp8_round(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let sign = if x.is_sign_negative() { -1.0f32 } else { 1.0f32 };
+    let a = x.abs();
+    if a >= FP8_E4M3_MAX {
+        return sign * FP8_E4M3_MAX; // saturate (hardware conversion behaviour)
+    }
+    if a < MIN_SUBNORMAL / 2.0 {
+        return sign * 0.0;
+    }
+    if a < MIN_NORMAL {
+        // subnormal range: fixed quantum 2^-9
+        let q = (a / MIN_SUBNORMAL).round_ties_even() * MIN_SUBNORMAL;
+        return sign * q;
+    }
+    // normal range: 3 mantissa bits → quantum = 2^(binade exponent − 3).
+    // §Perf: the binade comes straight from the f32 exponent bits (a is
+    // normal here since a ≥ 2^-6) — the original log2().floor()/exp2()
+    // pair was two libm calls per element and dominated the FP8 kernel
+    // (EXPERIMENTS.md §Perf iteration 4).
+    let pow = f32::from_bits(a.to_bits() & 0x7f80_0000); // 2^floor(log2 a)
+    let quantum = pow / 8.0; // 2^exp / 2^3
+    let q = (a / quantum).round_ties_even() * quantum;
+    // rounding up may cross into the next binade (mantissa overflow) —
+    // that value is still representable unless it exceeds the max.
+    sign * q.min(FP8_E4M3_MAX)
+}
+
+/// Elementwise e4m3 round-trip.
+pub fn fp8_e4m3_roundtrip(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| fp8_round(x)).collect()
+}
+
+/// Tensor-level FP8 quantization as in FlashAttention-3: scale the tensor
+/// so max |value| hits the top of the e4m3 range, then round each element
+/// to the lattice. Returns (lattice values, dequant scale).
+pub fn quantize_fp8_per_tensor(xs: &[f32]) -> (Vec<f32>, f32) {
+    let absmax = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = absmax.max(crate::quant::SCALE_EPS) / FP8_E4M3_MAX;
+    let inv = 1.0 / scale;
+    (xs.iter().map(|&x| fp8_round(x * inv)).collect(), scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_unchanged() {
+        // every power of two in range and small integers are representable
+        for v in [0.0f32, 1.0, 2.0, 0.5, 0.25, 16.0, 448.0, 0.015625, -3.5] {
+            assert_eq!(fp8_round(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn known_rounding_cases() {
+        // quantum in [1,2) is 1/8 = 0.125
+        assert_eq!(fp8_round(1.06), 1.0);
+        assert_eq!(fp8_round(1.07), 1.125);
+        // ties to even: 1.0625 is halfway between 1.0 and 1.125 → 1.0 (even mantissa)
+        assert_eq!(fp8_round(1.0625), 1.0);
+        // 1.1875 halfway between 1.125 and 1.25 → 1.25 (even)
+        assert_eq!(fp8_round(1.1875), 1.25);
+        // quantum in [256, 448] is 32
+        assert_eq!(fp8_round(300.0), 288.0);
+        assert_eq!(fp8_round(440.0), 448.0);
+    }
+
+    #[test]
+    fn saturates_beyond_max() {
+        assert_eq!(fp8_round(1e6), 448.0);
+        assert_eq!(fp8_round(-1e6), -448.0);
+        assert_eq!(fp8_round(448.1), 448.0);
+    }
+
+    #[test]
+    fn subnormals() {
+        // quantum below 2^-6 is 2^-9
+        assert_eq!(fp8_round(0.001953125), 0.001953125); // exactly min subnormal
+        assert_eq!(fp8_round(0.002), 0.001953125);
+        assert_eq!(fp8_round(0.0005), 0.0); // below half-quantum → 0
+        assert_eq!(fp8_round(0.003), 0.00390625);
+    }
+
+    #[test]
+    fn idempotent_on_lattice() {
+        let xs: Vec<f32> = (0..2000).map(|i| (i as f32 - 1000.0) * 0.37).collect();
+        let once = fp8_e4m3_roundtrip(&xs);
+        let twice = fp8_e4m3_roundtrip(&once);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // normal range: relative rounding error ≤ 2^-4
+        let mut x = 0.02f32;
+        while x < 440.0 {
+            let r = fp8_round(x);
+            assert!(
+                (r - x).abs() / x <= 0.0625 + 1e-6,
+                "x={x} r={r} rel={}",
+                (r - x).abs() / x
+            );
+            x *= 1.013;
+        }
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        let mut x = 0.001f32;
+        while x < 500.0 {
+            assert_eq!(fp8_round(x), -fp8_round(-x));
+            x *= 1.1;
+        }
+    }
+
+    #[test]
+    fn tensor_quantize_uses_range() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 / 99.0) - 0.5).collect();
+        let (lattice, scale) = quantize_fp8_per_tensor(&xs);
+        let m = lattice.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        assert!((m - 448.0).abs() < 1e-3, "max lattice value {m}");
+        // dequantized max matches original absmax
+        assert!((m * scale - 0.5).abs() < 0.5 * 0.07);
+    }
+
+    #[test]
+    fn lattice_count_plausible() {
+        // e4m3fn positive finite values: 7 subnormals + 15 binades × 8
+        // mantissas − the S.1111.111 NaN encoding (480) = 126
+        let mut vals = std::collections::BTreeSet::new();
+        let mut x = 1e-4f32;
+        while x < 460.0 {
+            let r = fp8_round(x);
+            if r > 0.0 {
+                vals.insert(r.to_bits());
+            }
+            x *= 1.001;
+        }
+        assert_eq!(vals.len(), 126, "expected 126 positive e4m3fn values");
+    }
+}

@@ -1,0 +1,210 @@
+//! Hadamard-rotation quantization — the paper's stated future work
+//! (§5: "combine our INT-FlashAttention with Hadamard transformations to
+//! further accelerate the inference process while maintaining high
+//! accuracy").
+//!
+//! The idea (QuaRot/QuIP-style): attention is invariant under any
+//! orthogonal rotation H of the head dimension — (QH)(KH)ᵀ = QKᵀ — and a
+//! Walsh–Hadamard rotation spreads per-token outliers across the head
+//! dimension, flattening rowmax(|·|) and tightening the symmetric
+//! quantization scales. The rotation costs O(d log d) per token (fast
+//! WHT) and folds into the projection weights at deployment.
+//!
+//! Implemented: fast in-place WHT, the rotated quantize→attention
+//! pipeline (`int_flash_attention_hadamard`), and tests pinning both the
+//! orthogonality identity and the accuracy win on outlier-heavy
+//! activations. Ablation: `cargo bench --bench ablation_hadamard`.
+
+use crate::attention::{int_flash, AttnConfig};
+use crate::tensor::MatF32;
+
+/// In-place fast Walsh–Hadamard transform of a length-2^k slice,
+/// normalized by 1/√n so the transform is orthonormal (H Hᵀ = I).
+pub fn fwht_normalized(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "WHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let (a, b) = (x[j], x[j + h]);
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x {
+        *v *= scale;
+    }
+}
+
+/// Rotate every row of a (N, d) matrix by the orthonormal Hadamard
+/// transform (d must be a power of two).
+pub fn rotate_rows(x: &MatF32) -> MatF32 {
+    let mut out = x.clone();
+    for r in 0..out.rows {
+        fwht_normalized(out.row_mut(r));
+    }
+    out
+}
+
+/// Outlier spread of a matrix: mean over rows of rowmax(|x|) / rowrms(x).
+/// A perfectly flat row has spread 1; heavy per-token outliers push it up.
+/// Quantization error of symmetric per-token INT8 is proportional to this.
+pub fn outlier_spread(x: &MatF32) -> f32 {
+    let mut total = 0.0f64;
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let absmax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let rms = (row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            / row.len() as f64)
+            .sqrt() as f32;
+        if rms > 0.0 {
+            total += (absmax / rms) as f64;
+        }
+    }
+    (total / x.rows as f64) as f32
+}
+
+/// INT-FlashAttention with Hadamard-rotated Q/K quantization.
+///
+/// Q and K are rotated before token-level quantization — the QKᵀ scores
+/// are mathematically unchanged (H is orthogonal), but the quantization
+/// grid sees flattened rows. V is left unrotated (its quantization is
+/// tensor-level and the output basis must be preserved).
+pub fn int_flash_attention_hadamard(
+    q: &MatF32,
+    k: &MatF32,
+    v: &MatF32,
+    cfg: &AttnConfig,
+    r: f32,
+) -> MatF32 {
+    let qr = rotate_rows(q);
+    let kr = rotate_rows(k);
+    let qq = crate::quant::quantize_per_token(&qr, r);
+    let kq = crate::quant::quantize_per_token(&kr, r);
+    let vq = crate::quant::quantize_per_tensor(v, r);
+    int_flash::int_flash_attention(
+        &qq.codes, &qq.scales, &kq.codes, &kq.scales, &vq.codes, vq.scale, cfg, r,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::reference::standard_attention;
+    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::stats;
+
+    #[test]
+    fn wht_is_orthonormal_involution() {
+        // normalized WHT is its own inverse
+        let mut rng = Pcg64::seeded(1);
+        let orig = rng.normal_vec(64);
+        let mut x = orig.clone();
+        fwht_normalized(&mut x);
+        fwht_normalized(&mut x);
+        for (a, b) in orig.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn wht_preserves_norm() {
+        let mut rng = Pcg64::seeded(2);
+        let orig = rng.normal_vec(128);
+        let norm0: f32 = orig.iter().map(|v| v * v).sum();
+        let mut x = orig;
+        fwht_normalized(&mut x);
+        let norm1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() / norm0 < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn wht_rejects_non_pow2() {
+        fwht_normalized(&mut [0.0; 48]);
+    }
+
+    #[test]
+    fn rotation_preserves_dot_products() {
+        // (Hq)·(Hk) == q·k — the invariance the pipeline rests on
+        let mut rng = Pcg64::seeded(3);
+        let q = MatF32::random(8, 64, Dist::Normal, &mut rng);
+        let k = MatF32::random(8, 64, Dist::Normal, &mut rng);
+        let qr = rotate_rows(&q);
+        let kr = rotate_rows(&k);
+        for i in 0..8 {
+            for j in 0..8 {
+                let d0: f32 = q.row(i).iter().zip(k.row(j)).map(|(a, b)| a * b).sum();
+                let d1: f32 = qr.row(i).iter().zip(kr.row(j)).map(|(a, b)| a * b).sum();
+                assert!((d0 - d1).abs() < 1e-3 * d0.abs().max(1.0), "{d0} vs {d1}");
+            }
+        }
+    }
+
+    fn outlier_matrix(seed: u64, n: usize, d: usize) -> MatF32 {
+        // N(0,1) with a few huge per-token outlier channels — the regime
+        // the paper's §2.3 cites as the reason tensor-level PTQ fails
+        let mut rng = Pcg64::seeded(seed);
+        let mut m = MatF32::random(n, d, Dist::Normal, &mut rng);
+        for r in 0..n {
+            let c = (rng.next_range(d as u64)) as usize;
+            let v = m.at(r, c);
+            m.set(r, c, v * 20.0);
+        }
+        m
+    }
+
+    #[test]
+    fn rotation_flattens_outliers() {
+        let x = outlier_matrix(4, 128, 64);
+        let spread_before = outlier_spread(&x);
+        let spread_after = outlier_spread(&rotate_rows(&x));
+        assert!(
+            spread_after < spread_before * 0.5,
+            "spread {spread_before} → {spread_after}"
+        );
+    }
+
+    #[test]
+    fn hadamard_improves_outlier_accuracy() {
+        // the paper's future-work claim, quantified: on outlier-heavy
+        // activations the rotated pipeline beats plain INT8
+        let q = outlier_matrix(5, 256, 64);
+        let k = outlier_matrix(6, 256, 64);
+        let mut rng = Pcg64::seeded(7);
+        let v = MatF32::random(256, 64, Dist::Normal, &mut rng);
+        let cfg = AttnConfig::new(64);
+        let gold = standard_attention(&q, &k, &v, &cfg);
+        let plain = int_flash::int_flash_attention_f32_in(&q, &k, &v, &cfg, crate::quant::INT8_R);
+        let rotated = int_flash_attention_hadamard(&q, &k, &v, &cfg, crate::quant::INT8_R);
+        let e_plain = stats::mre(&plain.data, &gold.data);
+        let e_rot = stats::mre(&rotated.data, &gold.data);
+        assert!(
+            e_rot < e_plain * 0.8,
+            "rotation should cut outlier-regime error: {e_plain} → {e_rot}"
+        );
+    }
+
+    #[test]
+    fn hadamard_harmless_on_gaussian() {
+        // on outlier-free activations rotation must not hurt (both are
+        // near-isotropic): errors within 1.5× of each other
+        let mut rng = Pcg64::seeded(8);
+        let q = MatF32::random(256, 64, Dist::Normal, &mut rng);
+        let k = MatF32::random(256, 64, Dist::Normal, &mut rng);
+        let v = MatF32::random(256, 64, Dist::Normal, &mut rng);
+        let cfg = AttnConfig::new(64);
+        let gold = standard_attention(&q, &k, &v, &cfg);
+        let plain = int_flash::int_flash_attention_f32_in(&q, &k, &v, &cfg, crate::quant::INT8_R);
+        let rotated = int_flash_attention_hadamard(&q, &k, &v, &cfg, crate::quant::INT8_R);
+        let e_plain = stats::mre(&plain.data, &gold.data);
+        let e_rot = stats::mre(&rotated.data, &gold.data);
+        assert!(e_rot < e_plain * 1.5, "{e_plain} vs {e_rot}");
+    }
+}

@@ -1,0 +1,190 @@
+//! Linear symmetric integer quantization (INT8 / INT4), token-level and
+//! tensor-level — the rust mirror of python/compile/kernels/quantize.py,
+//! used by the serving hot path and the rust-native Algorithm 1
+//! implementation.
+
+use crate::tensor::{MatF32, MatI8};
+
+/// INT8 quantization range (paper Algorithm 1 header: R = 127).
+pub const INT8_R: f32 = 127.0;
+/// INT4 range (R = 7) for the paper's "other data formats" extension.
+pub const INT4_R: f32 = 7.0;
+/// Scale floor protecting all-zero rows.
+pub const SCALE_EPS: f32 = 1e-12;
+
+/// Token-level quantization result: int8 codes + one scale per row.
+#[derive(Clone, Debug)]
+pub struct PerToken {
+    pub codes: MatI8,
+    pub scales: Vec<f32>,
+    pub r: f32,
+}
+
+/// Tensor-level quantization result: int8 codes + one scale.
+#[derive(Clone, Debug)]
+pub struct PerTensor {
+    pub codes: MatI8,
+    pub scale: f32,
+    pub r: f32,
+}
+
+#[inline]
+fn clip_round(x: f32, r: f32) -> i8 {
+    // round half away from zero (matches jnp.round's half-to-even closely
+    // enough: the probability of an exact .5 after division is negligible
+    // and both land within the error bound scale/2)
+    let v = x.round();
+    v.clamp(-(r + 1.0), r) as i8
+}
+
+/// Token-level symmetric quantization: scale_i = rowmax(|x_i|)/R.
+pub fn quantize_per_token(x: &MatF32, r: f32) -> PerToken {
+    let mut codes = MatI8::zeros(x.rows, x.cols);
+    let mut scales = Vec::with_capacity(x.rows);
+    for row in 0..x.rows {
+        let src = x.row(row);
+        let absmax = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = absmax.max(SCALE_EPS) / r;
+        let dst = codes.row_mut(row);
+        let inv = 1.0 / scale;
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = clip_round(s * inv, r);
+        }
+        scales.push(scale);
+    }
+    PerToken { codes, scales, r }
+}
+
+/// Tensor-level symmetric quantization: scale = max(|x|)/R.
+pub fn quantize_per_tensor(x: &MatF32, r: f32) -> PerTensor {
+    let absmax = x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = absmax.max(SCALE_EPS) / r;
+    let inv = 1.0 / scale;
+    let mut codes = MatI8::zeros(x.rows, x.cols);
+    for (d, &s) in codes.data.iter_mut().zip(&x.data) {
+        *d = clip_round(s * inv, r);
+    }
+    PerTensor { codes, scale, r }
+}
+
+/// Dequantize token-level codes back to f32.
+pub fn dequantize_per_token(q: &PerToken) -> MatF32 {
+    let mut out = MatF32::zeros(q.codes.rows, q.codes.cols);
+    for row in 0..q.codes.rows {
+        let s = q.scales[row];
+        for (d, &c) in out.row_mut(row).iter_mut().zip(q.codes.row(row)) {
+            *d = c as f32 * s;
+        }
+    }
+    out
+}
+
+impl PerTensor {
+    pub fn dequantize(&self) -> MatF32 {
+        let mut out = MatF32::zeros(self.codes.rows, self.codes.cols);
+        for (d, &c) in out.data.iter_mut().zip(&self.codes.data) {
+            *d = c as f32 * self.scale;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::stats;
+
+    fn randmat(seed: u64, rows: usize, cols: usize, dist: Dist) -> MatF32 {
+        let mut rng = Pcg64::seeded(seed);
+        MatF32::random(rows, cols, dist, &mut rng)
+    }
+
+    #[test]
+    fn per_token_roundtrip_bound() {
+        let x = randmat(1, 64, 32, Dist::Normal);
+        let q = quantize_per_token(&x, INT8_R);
+        let dq = dequantize_per_token(&q);
+        for row in 0..x.rows {
+            let bound = q.scales[row] / 2.0 + 1e-7;
+            for (a, b) in x.row(row).iter().zip(dq.row(row)) {
+                assert!((a - b).abs() <= bound, "{a} vs {b} bound {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_token_scales_match_rowmax() {
+        let x = randmat(2, 16, 8, Dist::Normal);
+        let q = quantize_per_token(&x, INT8_R);
+        for row in 0..x.rows {
+            let absmax = x.row(row).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert!((q.scales[row] - absmax / 127.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn row_extremum_hits_r() {
+        let x = randmat(3, 32, 16, Dist::Uniform);
+        let q = quantize_per_token(&x, INT8_R);
+        for row in 0..x.rows {
+            let m = q.codes.row(row).iter().map(|&c| (c as i32).abs()).max().unwrap();
+            assert_eq!(m, 127);
+        }
+    }
+
+    #[test]
+    fn zero_rows_are_safe() {
+        let x = MatF32::zeros(4, 8);
+        let q = quantize_per_token(&x, INT8_R);
+        assert!(q.codes.data.iter().all(|&c| c == 0));
+        assert!(q.scales.iter().all(|s| s.is_finite() && *s > 0.0));
+    }
+
+    #[test]
+    fn per_tensor_roundtrip_bound() {
+        let x = randmat(4, 32, 32, Dist::Normal);
+        let q = quantize_per_tensor(&x, INT8_R);
+        let dq = q.dequantize();
+        let bound = q.scale / 2.0 + 1e-7;
+        for (a, b) in x.data.iter().zip(&dq.data) {
+            assert!((a - b).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn int4_range_and_coarseness() {
+        let x = randmat(5, 64, 32, Dist::Normal);
+        let q8 = quantize_per_token(&x, INT8_R);
+        let q4 = quantize_per_token(&x, INT4_R);
+        assert!(q4.codes.data.iter().all(|&c| (-8..=7).contains(&(c as i32))));
+        let e8 = stats::mre(&dequantize_per_token(&q8).data, &x.data);
+        let e4 = stats::mre(&dequantize_per_token(&q4).data, &x.data);
+        assert!(e4 > e8, "int4 {e4} should be coarser than int8 {e8}");
+    }
+
+    #[test]
+    fn matches_python_semantics_simple_case() {
+        // mirror of the jnp path: x = [1.0, -0.5, 0.25], rowmax = 1.0,
+        // scale = 1/127, codes = round(x*127)
+        let x = MatF32::from_vec(1, 3, vec![1.0, -0.5, 0.25]);
+        let q = quantize_per_token(&x, INT8_R);
+        assert_eq!(q.codes.data, vec![127, -64, 32]);
+        assert!((q.scales[0] - 1.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_invariance_pow2() {
+        let x = randmat(6, 16, 16, Dist::Normal);
+        let mut x8 = x.clone();
+        for v in &mut x8.data {
+            *v *= 8.0;
+        }
+        let q1 = quantize_per_token(&x, INT8_R);
+        let q2 = quantize_per_token(&x8, INT8_R);
+        assert_eq!(q1.codes.data, q2.codes.data);
+        for (a, b) in q1.scales.iter().zip(&q2.scales) {
+            assert!((b / a - 8.0).abs() < 1e-5);
+        }
+    }
+}

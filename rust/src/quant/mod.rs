@@ -1,0 +1,13 @@
+//! Quantization substrates: token-level / tensor-level symmetric integer
+//! quantization (paper §3.2) and a bit-exact software e4m3 FP8 emulation
+//! (the FlashAttention-3 baseline's storage format).
+
+pub mod fp8;
+pub mod hadamard;
+pub mod intq;
+
+pub use fp8::{fp8_e4m3_roundtrip, quantize_fp8_per_tensor, FP8_E4M3_MAX};
+pub use intq::{
+    dequantize_per_token, quantize_per_tensor, quantize_per_token, PerTensor,
+    PerToken, INT4_R, INT8_R, SCALE_EPS,
+};

@@ -1,0 +1,160 @@
+//! Executor: typed host-buffer in/out execution of compiled artifacts.
+//!
+//! Handles the literal plumbing (shape/dtype checks, tuple unwrapping —
+//! artifacts are lowered with `return_tuple=True`) so the coordinator only
+//! deals in flat `Vec<f32>` / `Vec<i32>` buffers.
+
+use super::manifest::{ArtifactMeta, Dtype};
+use super::registry::ArtifactRegistry;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// Typed host input buffer.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(_) => Dtype::F32,
+            HostTensor::I32(_) => Dtype::S32,
+        }
+    }
+}
+
+/// Executes one artifact; cheap to clone (shares the registry).
+pub struct Executor {
+    registry: Arc<ArtifactRegistry>,
+    pub meta: ArtifactMeta,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Look up + compile an artifact by name.
+    pub fn new(registry: Arc<ArtifactRegistry>, name: &str) -> Result<Executor> {
+        let meta = registry
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        let exe = registry.executable(name)?;
+        Ok(Executor { registry, meta, exe })
+    }
+
+    pub fn registry(&self) -> &Arc<ArtifactRegistry> {
+        &self.registry
+    }
+
+    /// Run the artifact. Inputs must match the manifest specs; returns the
+    /// flattened f32 outputs (one vec per output tensor).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.meta.inputs) {
+            if t.len() != spec.elems() {
+                bail!(
+                    "{}: input {} length {} != spec {} ({:?})",
+                    self.meta.name,
+                    spec.name,
+                    t.len(),
+                    spec.elems(),
+                    spec.shape
+                );
+            }
+            if t.dtype() != spec.dtype {
+                bail!("{}: input {} dtype mismatch", self.meta.name, spec.name);
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match t {
+                HostTensor::F32(v) => xla::Literal::vec1(v),
+                HostTensor::I32(v) => xla::Literal::vec1(v),
+            };
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {:?}: {e:?}", spec.shape))?;
+            literals.push(lit);
+        }
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{}: execute: {e:?}", self.meta.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // return_tuple=True → always a tuple literal
+        let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (p, spec) in parts.into_iter().zip(&self.meta.outputs) {
+            let v: Vec<f32> = p
+                .to_vec()
+                .map_err(|e| anyhow!("{}: output to_vec: {e:?}", self.meta.name))?;
+            if v.len() != spec.elems() {
+                bail!(
+                    "{}: output length {} != spec {}",
+                    self.meta.name,
+                    v.len(),
+                    spec.elems()
+                );
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+
+    /// Run against the artifact's golden fixture; returns (mre, max_abs).
+    pub fn run_golden(&self) -> Result<(f64, f32)> {
+        let golden = self
+            .meta
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow!("{} has no golden data", self.meta.name))?;
+        let mut inputs = Vec::new();
+        for (path, spec) in golden.inputs.iter().zip(&self.meta.inputs) {
+            let t = match spec.dtype {
+                Dtype::F32 => HostTensor::F32(self.registry.manifest.read_golden_f32(path)?),
+                Dtype::S32 => HostTensor::I32(self.registry.manifest.read_golden_i32(path)?),
+            };
+            inputs.push(t);
+        }
+        let expected = self.registry.manifest.read_golden_f32(&golden.output)?;
+        let got = self.run(&inputs)?;
+        let out = &got[0];
+        if out.len() != expected.len() {
+            bail!("golden output length mismatch");
+        }
+        Ok((
+            crate::util::stats::mre(out, &expected),
+            crate::util::stats::max_abs_diff(out, &expected),
+        ))
+    }
+}

@@ -1,0 +1,290 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the rust runtime. Parsed with the in-tree JSON codec.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype in the manifest ("f32" | "s32").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.at("name").as_str().unwrap_or("").to_string();
+        let shape = j
+            .at("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.at("dtype").as_str().unwrap_or("f32"))?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// Golden input/output fixture for integration tests.
+#[derive(Clone, Debug)]
+pub struct GoldenMeta {
+    pub inputs: Vec<PathBuf>,
+    pub output: PathBuf,
+    pub atol: f64,
+    pub rtol: f64,
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,    // "attention" | "lm"
+    pub variant: String, // "int8" | "half_int8" | "fp8" | "fp16"
+    pub batch: usize,
+    pub heads: usize,   // 0 for lm artifacts
+    pub seq: usize,
+    pub head_dim: usize, // 0 for lm artifacts
+    pub causal: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub golden: Option<GoldenMeta>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        Self::parse_str(&text, root)
+    }
+
+    /// Parse manifest text with the given artifact root.
+    pub fn parse_str(text: &str, root: PathBuf) -> Result<Manifest> {
+        let j = parse(text).map_err(|e| anyhow!("{e}"))?;
+        let version = j.at("version").as_i64().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = Vec::new();
+        for a in j
+            .at("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a
+                .at("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let inputs = a
+                .at("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .at("outputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let golden = if a.at("golden").is_null() {
+                None
+            } else {
+                let g = a.at("golden");
+                Some(GoldenMeta {
+                    inputs: g
+                        .at("inputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|p| p.as_str().map(PathBuf::from))
+                        .collect(),
+                    output: PathBuf::from(g.at("output").as_str().unwrap_or("")),
+                    atol: g.at("atol").as_f64().unwrap_or(1e-4),
+                    rtol: g.at("rtol").as_f64().unwrap_or(1e-3),
+                })
+            };
+            artifacts.push(ArtifactMeta {
+                name,
+                file: PathBuf::from(
+                    a.at("file").as_str().ok_or_else(|| anyhow!("missing file"))?,
+                ),
+                kind: a.at("kind").as_str().unwrap_or("attention").to_string(),
+                variant: a.at("variant").as_str().unwrap_or("fp16").to_string(),
+                batch: a.at("batch").as_usize().unwrap_or(0),
+                heads: a.at("heads").as_usize().unwrap_or(0),
+                seq: a.at("seq").as_usize().unwrap_or(0),
+                head_dim: a.at("head_dim").as_usize().unwrap_or(0),
+                causal: a.at("causal").as_bool().unwrap_or(false),
+                inputs,
+                outputs,
+                golden,
+            });
+        }
+        Ok(Manifest { root, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All attention artifacts of a given variant, sorted by (seq, batch).
+    pub fn attention_buckets(&self, variant: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "attention" && a.variant == variant)
+            .collect();
+        v.sort_by_key(|a| (a.seq, a.batch));
+        v
+    }
+
+    /// Read a golden binary (little-endian f32) relative to the root.
+    pub fn read_golden_f32(&self, rel: &Path) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.root.join(rel))
+            .with_context(|| format!("reading golden {rel:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("golden file {rel:?} not a multiple of 4 bytes");
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read a golden binary as little-endian i32.
+    pub fn read_golden_i32(&self, rel: &Path) -> Result<Vec<i32>> {
+        let bytes = std::fs::read(self.root.join(rel))
+            .with_context(|| format!("reading golden {rel:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("golden file {rel:?} not a multiple of 4 bytes");
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "attn_int8_b1_h2_n128_d32", "file": "a.hlo.txt",
+         "kind": "attention", "variant": "int8",
+         "batch": 1, "heads": 2, "seq": 128, "head_dim": 32, "causal": false,
+         "inputs": [{"name":"q","shape":[1,2,128,32],"dtype":"f32"},
+                    {"name":"k","shape":[1,2,128,32],"dtype":"f32"},
+                    {"name":"v","shape":[1,2,128,32],"dtype":"f32"}],
+         "outputs": [{"name":"o","shape":[1,2,128,32],"dtype":"f32"}],
+         "golden": {"inputs":["golden/q.bin"],"output":"golden/o.bin",
+                    "atol": 1e-4, "rtol": 1e-3}},
+        {"name": "lm_int8_b1_n64", "file": "b.hlo.txt", "kind": "lm",
+         "variant": "int8", "batch": 1, "seq": 64,
+         "inputs": [{"name":"tokens","shape":[1,64],"dtype":"s32"}],
+         "outputs": [{"name":"logits","shape":[1,256],"dtype":"f32"}]},
+        {"name": "attn_int8_b4_h8_n256_d64", "file": "c.hlo.txt",
+         "kind": "attention", "variant": "int8",
+         "batch": 4, "heads": 8, "seq": 256, "head_dim": 64, "causal": true,
+         "inputs": [{"name":"q","shape":[4,8,256,64],"dtype":"f32"}],
+         "outputs": [{"name":"o","shape":[4,8,256,64],"dtype":"f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.find("attn_int8_b1_h2_n128_d32").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].elems(), 1 * 2 * 128 * 32);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert!(a.golden.is_some());
+        let g = a.golden.as_ref().unwrap();
+        assert_eq!(g.atol, 1e-4);
+        let lm = m.find("lm_int8_b1_n64").unwrap();
+        assert_eq!(lm.kind, "lm");
+        assert_eq!(lm.inputs[0].dtype, Dtype::S32);
+        assert!(lm.golden.is_none());
+    }
+
+    #[test]
+    fn buckets_sorted_by_seq() {
+        let m = Manifest::parse_str(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let buckets = m.attention_buckets("int8");
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[0].seq, 128);
+        assert_eq!(buckets[1].seq, 256);
+        assert!(m.attention_buckets("fp64").is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = r#"{"version": 2, "artifacts": []}"#;
+        assert!(Manifest::parse_str(bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"version": 1, "artifacts": [{"file": "x"}]}"#;
+        assert!(Manifest::parse_str(bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // integration-ish: only runs when `make artifacts` has been run
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            assert!(m.artifacts.iter().any(|a| a.golden.is_some()));
+            for a in &m.artifacts {
+                assert!(m.root.join(&a.file).exists(), "{:?} missing", a.file);
+            }
+        }
+    }
+}

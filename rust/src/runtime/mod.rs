@@ -1,0 +1,18 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Flow: [`manifest`] parses `artifacts/manifest.json` →
+//! [`registry::ArtifactRegistry`] compiles each `*.hlo.txt` through the
+//! PJRT CPU client (`xla` crate) on first use → [`executor::Executor`]
+//! feeds f32/i32 host buffers in, gets f32 buffers out.
+//!
+//! Python is build-time only: once `artifacts/` exists the binary is
+//! self-contained.
+
+pub mod executor;
+pub mod manifest;
+pub mod registry;
+
+pub use executor::Executor;
+pub use manifest::{ArtifactMeta, GoldenMeta, Manifest, TensorSpec};
+pub use registry::ArtifactRegistry;

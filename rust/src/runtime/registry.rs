@@ -1,0 +1,89 @@
+//! Artifact registry: one PJRT client, lazily compiled executables.
+//!
+//! Compilation (HLO text → PJRT executable) happens once per artifact on
+//! first use and is cached behind a mutex; execution afterwards is
+//! lock-free reads of the compiled handle (the `xla` crate's executable is
+//! internally synchronized).
+
+use super::manifest::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Shared PJRT client + compiled-executable cache.
+pub struct ArtifactRegistry {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Create a registry over an artifact directory (CPU PJRT client).
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<ArtifactRegistry> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        Ok(ArtifactRegistry { manifest, client, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact name.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.compiled.lock().unwrap();
+            if let Some(exe) = cache.get(name) {
+                return Ok(exe.clone());
+            }
+        }
+        let meta = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        let exe = self.compile(&meta)?;
+        let mut cache = self.compiled.lock().unwrap();
+        Ok(cache.entry(name.to_string()).or_insert_with(|| Arc::new(exe)).clone())
+    }
+
+    /// Eagerly compile every artifact (server startup).
+    pub fn warm_all(&self) -> Result<usize> {
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    fn compile(&self, meta: &ArtifactMeta) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.root.join(&meta.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))
+            .with_context(|| format!("artifact {}", meta.name))
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_integration.rs
+// (they require `make artifacts`); unit tests here cover error paths only.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_errors() {
+        let err = match ArtifactRegistry::open("/nonexistent-artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Wire protocol + TCP server/client for the serving engine.
+//!
+//! Newline-delimited JSON over TCP (std::net + a thread per connection —
+//! no async runtime offline). Verbs:
+//!
+//! ```text
+//! → {"type":"attention","accuracy":"fast","heads":H,"seq":N,"head_dim":D,
+//!    "q":[...],"k":[...],"v":[...]}
+//! ← {"ok":true,"id":n,"variant":"int8","bucket_seq":128,
+//!    "latency_us":t,"o":[...]}
+//!
+//! → {"type":"ping"}                ← {"ok":true,"pong":true}
+//! → {"type":"metrics"}             ← {"ok":true,"metrics":{...}}
+//! ```
+
+pub mod protocol;
+pub mod tcp;
+
+pub use protocol::{decode_request, encode_response, WireRequest, WireResponse};
+pub use tcp::{Client, Server};

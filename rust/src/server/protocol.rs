@@ -1,0 +1,186 @@
+//! JSON wire protocol encode/decode.
+
+use crate::coordinator::request::{AccuracyClass, RequestPayload};
+use crate::coordinator::Response;
+use crate::util::json::{parse, Json};
+
+/// Decoded client request.
+#[derive(Debug)]
+pub enum WireRequest {
+    Attention { accuracy: AccuracyClass, payload: RequestPayload },
+    Ping,
+    Metrics,
+}
+
+/// Server reply (subset of fields depending on verb).
+#[derive(Debug)]
+pub enum WireResponse {
+    Attention(Response),
+    Pong,
+    Metrics(Json),
+    Error(String),
+}
+
+fn f32_array(j: &Json, key: &str) -> Result<Vec<f32>, String> {
+    j.at(key)
+        .as_arr()
+        .ok_or_else(|| format!("missing array field {key:?}"))?
+        .iter()
+        .map(|v| v.as_f64().map(|x| x as f32).ok_or_else(|| format!("{key}: non-number")))
+        .collect()
+}
+
+/// Parse one request line.
+pub fn decode_request(line: &str) -> Result<WireRequest, String> {
+    let j = parse(line).map_err(|e| e.to_string())?;
+    match j.at("type").as_str() {
+        Some("ping") => Ok(WireRequest::Ping),
+        Some("metrics") => Ok(WireRequest::Metrics),
+        Some("attention") => {
+            let accuracy = AccuracyClass::parse(j.at("accuracy").as_str().unwrap_or("fast"))
+                .ok_or_else(|| "bad accuracy class".to_string())?;
+            let heads = j.at("heads").as_usize().ok_or("missing heads")?;
+            let seq = j.at("seq").as_usize().ok_or("missing seq")?;
+            let head_dim = j.at("head_dim").as_usize().ok_or("missing head_dim")?;
+            let payload = RequestPayload {
+                heads,
+                seq,
+                head_dim,
+                q: f32_array(&j, "q")?,
+                k: f32_array(&j, "k")?,
+                v: f32_array(&j, "v")?,
+            };
+            Ok(WireRequest::Attention { accuracy, payload })
+        }
+        Some(other) => Err(format!("unknown request type {other:?}")),
+        None => Err("missing type field".into()),
+    }
+}
+
+fn floats_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+/// Serialize one response line (no trailing newline).
+pub fn encode_response(resp: &WireResponse) -> String {
+    match resp {
+        WireResponse::Pong => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("pong", Json::Bool(true)),
+        ])
+        .to_string(),
+        WireResponse::Metrics(m) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", m.clone()),
+        ])
+        .to_string(),
+        WireResponse::Error(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(e.clone())),
+        ])
+        .to_string(),
+        WireResponse::Attention(r) => {
+            let mut fields = vec![
+                ("id", Json::num(r.id as f64)),
+                ("latency_us", Json::num(r.latency_us as f64)),
+                ("bucket_seq", Json::num(r.bucket_seq as f64)),
+                (
+                    "batch_occupancy",
+                    Json::num((r.batch_occupancy * 1000.0).round() as f64 / 1000.0),
+                ),
+            ];
+            if let Some(v) = r.variant {
+                fields.push(("variant", Json::str(v.name())));
+            }
+            match &r.result {
+                Ok(o) => {
+                    fields.push(("ok", Json::Bool(true)));
+                    fields.push(("o", floats_json(o)));
+                }
+                Err(e) => {
+                    fields.push(("ok", Json::Bool(false)));
+                    fields.push(("error", Json::str(e.clone())));
+                }
+            }
+            Json::obj(fields).to_string()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+
+    #[test]
+    fn decode_ping_and_metrics() {
+        assert!(matches!(decode_request(r#"{"type":"ping"}"#), Ok(WireRequest::Ping)));
+        assert!(matches!(
+            decode_request(r#"{"type":"metrics"}"#),
+            Ok(WireRequest::Metrics)
+        ));
+    }
+
+    #[test]
+    fn decode_attention() {
+        let line = r#"{"type":"attention","accuracy":"balanced","heads":1,"seq":2,
+                      "head_dim":2,"q":[1,2,3,4],"k":[1,2,3,4],"v":[0.5,-0.5,1,1]}"#;
+        match decode_request(line).unwrap() {
+            WireRequest::Attention { accuracy, payload } => {
+                assert_eq!(accuracy, AccuracyClass::Balanced);
+                assert_eq!(payload.q, vec![1.0, 2.0, 3.0, 4.0]);
+                assert!(payload.validate().is_ok());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_errors() {
+        assert!(decode_request("not json").is_err());
+        assert!(decode_request(r#"{"type":"nope"}"#).is_err());
+        assert!(decode_request(r#"{"q":[1]}"#).is_err());
+        assert!(decode_request(
+            r#"{"type":"attention","heads":1,"seq":1,"head_dim":1,"q":["x"],"k":[1],"v":[1]}"#
+        )
+        .is_err());
+        assert!(decode_request(
+            r#"{"type":"attention","accuracy":"hyper","heads":1,"seq":1,"head_dim":1,"q":[1],"k":[1],"v":[1]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn encode_ok_response_roundtrips() {
+        let resp = WireResponse::Attention(Response {
+            id: 7,
+            result: Ok(vec![1.0, -2.5]),
+            variant: Some(Variant::Int8),
+            bucket_seq: 128,
+            latency_us: 420,
+            batch_occupancy: 0.75,
+        });
+        let s = encode_response(&resp);
+        let j = crate::util::json::parse(&s).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(true));
+        assert_eq!(j.at("id").as_i64(), Some(7));
+        assert_eq!(j.at("variant").as_str(), Some("int8"));
+        assert_eq!(j.at("o").as_arr().unwrap().len(), 2);
+        assert!(!s.contains('\n'), "single line");
+    }
+
+    #[test]
+    fn encode_error_response() {
+        let resp = WireResponse::Attention(Response {
+            id: 8,
+            result: Err("rejected: queue full".into()),
+            variant: None,
+            bucket_seq: 0,
+            latency_us: 0,
+            batch_occupancy: 0.0,
+        });
+        let j = crate::util::json::parse(&encode_response(&resp)).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(false));
+        assert!(j.at("error").as_str().unwrap().contains("queue full"));
+    }
+}

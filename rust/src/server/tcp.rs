@@ -1,0 +1,203 @@
+//! TCP server (thread per connection) + blocking client.
+
+use super::protocol::{decode_request, encode_response, WireRequest, WireResponse};
+use crate::coordinator::Engine;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Serving front-end over an [`Engine`].
+pub struct Server {
+    engine: Arc<Engine>,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to an address ("127.0.0.1:0" picks a free port).
+    pub fn bind(engine: Arc<Engine>, addr: impl ToSocketAddrs) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server { engine, listener, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound listener")
+    }
+
+    /// Handle returned by [`Server::start`]; signals shutdown on drop.
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { flag: self.shutdown.clone(), addr: self.local_addr() }
+    }
+
+    /// Accept-loop until shutdown; spawns one thread per connection.
+    pub fn serve(self) {
+        crate::log_info!("serving on {}", self.local_addr());
+        // accept with a timeout so the shutdown flag is polled
+        self.listener
+            .set_nonblocking(true)
+            .expect("nonblocking listener");
+        let mut conns = Vec::new();
+        while !self.shutdown.load(Ordering::Acquire) {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    crate::log_debug!("connection from {peer}");
+                    let engine = self.engine.clone();
+                    let flag = self.shutdown.clone();
+                    conns.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_connection(stream, engine, flag) {
+                            crate::log_debug!("connection closed: {e}");
+                        }
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    crate::log_warn!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+    }
+
+    /// Spawn the accept loop on a background thread.
+    pub fn start(self) -> (ShutdownHandle, std::thread::JoinHandle<()>) {
+        let handle = self.shutdown_handle();
+        let join = std::thread::Builder::new()
+            .name("intfa-accept".into())
+            .spawn(move || self.serve())
+            .expect("spawn server");
+        (handle, join)
+    }
+}
+
+/// Signals the accept loop (and its connections) to stop.
+pub struct ShutdownHandle {
+    flag: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+}
+
+impl ShutdownHandle {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    engine: Arc<Engine>,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match decode_request(line.trim()) {
+            Err(e) => WireResponse::Error(e),
+            Ok(WireRequest::Ping) => WireResponse::Pong,
+            Ok(WireRequest::Metrics) => WireResponse::Metrics(engine.metrics.snapshot()),
+            Ok(WireRequest::Attention { accuracy, payload }) => {
+                WireResponse::Attention(engine.submit_blocking(accuracy, payload))
+            }
+        };
+        writer.write_all(encode_response(&resp).as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+/// Blocking line-protocol client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Send one raw JSON line, receive one line back.
+    pub fn call_raw(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        Ok(resp.trim().to_string())
+    }
+
+    pub fn ping(&mut self) -> std::io::Result<bool> {
+        let resp = self.call_raw(r#"{"type":"ping"}"#)?;
+        Ok(crate::util::json::parse(&resp)
+            .map(|j| j.at("pong").as_bool() == Some(true))
+            .unwrap_or(false))
+    }
+
+    pub fn metrics(&mut self) -> std::io::Result<crate::util::json::Json> {
+        let resp = self.call_raw(r#"{"type":"metrics"}"#)?;
+        Ok(crate::util::json::parse(&resp)
+            .map(|j| j.at("metrics").clone())
+            .unwrap_or(crate::util::json::Json::Null))
+    }
+
+    /// Submit an attention request; returns the parsed response JSON.
+    pub fn attention(
+        &mut self,
+        accuracy: &str,
+        heads: usize,
+        seq: usize,
+        head_dim: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> std::io::Result<crate::util::json::Json> {
+        use crate::util::json::Json;
+        let arr = |xs: &[f32]| Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect());
+        let req = Json::obj(vec![
+            ("type", Json::str("attention")),
+            ("accuracy", Json::str(accuracy)),
+            ("heads", Json::num(heads as f64)),
+            ("seq", Json::num(seq as f64)),
+            ("head_dim", Json::num(head_dim as f64)),
+            ("q", arr(q)),
+            ("k", arr(k)),
+            ("v", arr(v)),
+        ]);
+        let resp = self.call_raw(&req.to_string())?;
+        crate::util::json::parse(&resp)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    }
+}

@@ -1,0 +1,344 @@
+//! Analytical GPU cost model — the substitute substrate for the paper's
+//! RTX 4090 / Ampere testbed (DESIGN.md §Substitutions).
+//!
+//! Figure 2 is a *hardware throughput* claim: INT8 tensor cores sustain 2×
+//! the MACs/cycle of FP16 on Ampere-class parts, and INT8 storage halves
+//! the HBM bytes for Q/K/V. Neither effect exists on this CPU-only
+//! testbed, so the model predicts kernel latency from first principles:
+//!
+//! ```text
+//! t = max(t_compute, t_memory)              (roofline per kernel phase)
+//! t_compute = FLOPs_equiv / (pipe_throughput · efficiency)
+//! t_memory  = HBM_bytes / bandwidth
+//! ```
+//!
+//! with HBM bytes derived from the *same block schedule* the kernels use
+//! (FlashAttention's IO complexity: Q read once, K/V read T_r times if no
+//! KV reuse across q-blocks — here K/V are re-read per q-block, the
+//! standard FA2 pattern) plus the softmax/rescale overhead modelled as a
+//! per-element VPU cost. Constants default to a 4090-like part; an
+//! `a100()` preset is included. The *shape* of Figure 2 (who wins, by what
+//! factor, how the gap widens with sequence length) is what the model must
+//! reproduce — see EXPERIMENTS.md E1.
+
+use crate::attention::Variant;
+
+/// Hardware description (Ampere-class defaults).
+#[derive(Clone, Debug)]
+pub struct GpuModel {
+    pub name: &'static str,
+    /// dense FP16 tensor-core throughput, MAC/s ×2 = FLOP/s
+    pub fp16_flops: f64,
+    /// dense INT8 tensor-core throughput, OP/s (2× fp16 on Ampere)
+    pub int8_tops: f64,
+    /// FP8 throughput (0 on Ampere — no hardware; Some on Hopper)
+    pub fp8_flops: Option<f64>,
+    /// CUDA-core f32 throughput for the softmax/rescale (non-matmul) work
+    pub vector_flops: f64,
+    /// HBM bandwidth, bytes/s
+    pub hbm_bw: f64,
+    /// achievable fraction of peak for attention-shaped GEMMs
+    pub mma_efficiency: f64,
+    /// achievable fraction of peak bandwidth
+    pub bw_efficiency: f64,
+    /// fixed kernel-launch + epilogue overhead, seconds
+    pub launch_overhead: f64,
+    /// SRAM per SM available to one threadblock (bytes) — block-size checks
+    pub sram_per_block: usize,
+}
+
+impl GpuModel {
+    /// RTX 4090-like (Ada; paper's testbed). 330 TFLOPS fp16 dense,
+    /// 660 TOPS int8 dense, ~1 TB/s GDDR6X.
+    pub fn rtx4090() -> GpuModel {
+        GpuModel {
+            name: "rtx4090",
+            fp16_flops: 330e12,
+            int8_tops: 660e12,
+            // Ada has FP8 tensor cores at the INT8 rate (the paper's FP8
+            // baseline runs on the 4090 in their Figure 2).
+            fp8_flops: Some(660e12),
+            vector_flops: 41e12,
+            hbm_bw: 1.008e12,
+            mma_efficiency: 0.55,
+            bw_efficiency: 0.80,
+            launch_overhead: 6e-6,
+            sram_per_block: 100 * 1024,
+        }
+    }
+
+    /// A100-SXM-like: 312 TFLOPS fp16, 624 TOPS int8, 2.04 TB/s, no FP8.
+    pub fn a100() -> GpuModel {
+        GpuModel {
+            name: "a100",
+            fp16_flops: 312e12,
+            int8_tops: 624e12,
+            fp8_flops: None,
+            vector_flops: 19.5e12,
+            hbm_bw: 2.039e12,
+            mma_efficiency: 0.55,
+            bw_efficiency: 0.80,
+            launch_overhead: 6e-6,
+            sram_per_block: 160 * 1024,
+        }
+    }
+
+    /// Matmul pipe throughput (FLOP-equivalents/s) for a variant.
+    /// `None` when the variant has no hardware pipe on this part.
+    pub fn pipe_throughput(&self, v: Variant) -> Option<f64> {
+        match v {
+            Variant::Fp16 => Some(self.fp16_flops),
+            Variant::Fp8 => self.fp8_flops,
+            // half-INT8: first GEMM int8, second fp16 — modelled per-GEMM
+            // in `predict`; this accessor returns the int8 pipe.
+            Variant::HalfInt8 | Variant::Int8 => Some(self.int8_tops),
+            // int4 runs on the int8 pipe at 2× (Ampere IMMA int4)
+            Variant::Int4 => Some(2.0 * self.int8_tops),
+        }
+    }
+}
+
+/// Attention workload description for the model.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub batch: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub head_dim: usize,
+    pub causal: bool,
+    pub block_q: usize,
+    pub block_k: usize,
+}
+
+impl Workload {
+    pub fn fig2(seq: usize) -> Workload {
+        // paper §4.1: batch, heads, head dim fixed; values not stated —
+        // llama-7B-like geometry is the community default
+        Workload {
+            batch: 4,
+            heads: 32,
+            seq,
+            head_dim: 128,
+            causal: false,
+            block_q: 64,
+            block_k: 64,
+        }
+    }
+
+    /// Total MACs for S=QKᵀ plus O=PV (×2 FLOPs/MAC), halved for causal.
+    pub fn matmul_flops(&self) -> f64 {
+        let nh = (self.batch * self.heads) as f64;
+        let n = self.seq as f64;
+        let d = self.head_dim as f64;
+        let full = 2.0 * nh * (n * n * d) * 2.0; // two GEMMs
+        if self.causal {
+            full / 2.0
+        } else {
+            full
+        }
+    }
+
+    /// Non-matmul (softmax, rescale, quantize) f32 ops — ~10 per S element.
+    pub fn vector_flops(&self) -> f64 {
+        let nh = (self.batch * self.heads) as f64;
+        let n = self.seq as f64;
+        let s_elems = if self.causal { nh * n * n / 2.0 } else { nh * n * n };
+        10.0 * s_elems
+    }
+
+    /// HBM traffic in bytes for the FA2 schedule with Q/K/V elements of
+    /// `qkv_bytes` each: Q+O streamed once, K/V streamed once per q-block
+    /// row (T_r passes), scales negligible.
+    pub fn hbm_bytes(&self, qkv_bytes: f64) -> f64 {
+        let nh = (self.batch * self.heads) as f64;
+        let n = self.seq as f64;
+        let d = self.head_dim as f64;
+        let t_r = (self.seq as f64 / self.block_q as f64).ceil();
+        // K/V re-reads assume no cross-block cache reuse (worst case —
+        // matches FA2's IO analysis when SRAM ≪ N·d)
+        let q_o = nh * n * d * (qkv_bytes + 4.0); // O written in f32/fp16≈4
+        let kv = 2.0 * nh * n * d * qkv_bytes * t_r;
+        q_o + kv
+    }
+}
+
+/// Predicted kernel latency (seconds) broken into phases.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub total: f64,
+    pub t_matmul: f64,
+    pub t_vector: f64,
+    pub t_memory: f64,
+}
+
+/// Predict attention latency for a variant on a GPU model.
+pub fn predict(gpu: &GpuModel, wl: &Workload, v: Variant) -> Option<Prediction> {
+    let flops = wl.matmul_flops();
+    let t_matmul = match v {
+        Variant::HalfInt8 => {
+            // QKᵀ on the int8 pipe, PV on the fp16 pipe (half each)
+            let half = flops / 2.0;
+            half / (gpu.int8_tops * gpu.mma_efficiency)
+                + half / (gpu.fp16_flops * gpu.mma_efficiency)
+        }
+        _ => flops / (gpu.pipe_throughput(v)? * gpu.mma_efficiency),
+    };
+    // quantized variants add requant work to the vector phase (~30%)
+    let vec_mult = match v {
+        Variant::Fp16 => 1.0,
+        Variant::HalfInt8 | Variant::Fp8 => 1.15,
+        Variant::Int8 | Variant::Int4 => 1.3,
+    };
+    let t_vector = wl.vector_flops() * vec_mult / gpu.vector_flops;
+    let t_memory = wl.hbm_bytes(v.qkv_bytes()) / (gpu.hbm_bw * gpu.bw_efficiency);
+    // compute and memory overlap; vector work overlaps the matmul pipes
+    let total = gpu.launch_overhead + (t_matmul + t_vector).max(t_memory);
+    Some(Prediction { total, t_matmul, t_vector, t_memory })
+}
+
+/// Speedup of `a` over `b` (t_b / t_a).
+pub fn speedup(gpu: &GpuModel, wl: &Workload, a: Variant, b: Variant) -> Option<f64> {
+    Some(predict(gpu, wl, b)?.total / predict(gpu, wl, a)?.total)
+}
+
+/// VMEM/SRAM footprint of one (B_r, B_c) tile for a variant — the L1
+/// perf-pass constraint (DESIGN.md §7): Q_i, K_j, V_j operands, the P
+/// tile, and the f32 accumulators m, l, Õ.
+pub fn tile_sram_bytes(wl: &Workload, v: Variant) -> usize {
+    let (bq, bk, d) = (wl.block_q, wl.block_k, wl.head_dim);
+    let e = v.qkv_bytes();
+    let operands = ((bq * d) as f64 * e) + 2.0 * ((bk * d) as f64 * e);
+    let p_tile = (bq * bk) as f64 * if matches!(v, Variant::Int8 | Variant::Int4) { 1.0 } else { 2.0 };
+    let accum = (bq * d * 4 + 2 * bq * 4) as f64;
+    (operands + p_tile + accum) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig2_model() -> GpuModel {
+        GpuModel::rtx4090()
+    }
+
+    #[test]
+    fn int8_beats_fp16_and_gap_widens() {
+        // the core Figure 2 shape: INT8 speedup over FP16 grows with seq
+        let gpu = fig2_model();
+        let mut last = 1.0;
+        for seq in [1024, 2048, 4096, 8192, 16384] {
+            let wl = Workload::fig2(seq);
+            let s = speedup(&gpu, &wl, Variant::Int8, Variant::Fp16).unwrap();
+            assert!(s > 1.2, "seq {seq}: speedup {s}");
+            assert!(s >= last - 1e-9, "monotone widening: {s} after {last}");
+            last = s;
+        }
+        // long-sequence regime approaches the compute-bound 2× pipe ratio
+        assert!(last > 1.6, "16k speedup {last}");
+    }
+
+    #[test]
+    fn int8_close_to_fp8_on_ada() {
+        // paper: "nearly the same inference speed as FP8, gap narrowing"
+        let gpu = fig2_model();
+        for seq in [1024, 16384] {
+            let wl = Workload::fig2(seq);
+            let s = speedup(&gpu, &wl, Variant::Int8, Variant::Fp8).unwrap();
+            assert!((s - 1.0).abs() < 0.15, "seq {seq}: int8/fp8 {s}");
+        }
+    }
+
+    #[test]
+    fn fp8_unavailable_on_a100() {
+        let gpu = GpuModel::a100();
+        let wl = Workload::fig2(1024);
+        assert!(predict(&gpu, &wl, Variant::Fp8).is_none());
+        assert!(predict(&gpu, &wl, Variant::Int8).is_some());
+    }
+
+    #[test]
+    fn half_int8_between_fp16_and_int8() {
+        let gpu = fig2_model();
+        let wl = Workload::fig2(8192);
+        let t16 = predict(&gpu, &wl, Variant::Fp16).unwrap().total;
+        let t_half = predict(&gpu, &wl, Variant::HalfInt8).unwrap().total;
+        let t8 = predict(&gpu, &wl, Variant::Int8).unwrap().total;
+        assert!(t8 < t_half && t_half < t16, "{t8} < {t_half} < {t16}");
+    }
+
+    #[test]
+    fn int4_fastest() {
+        let gpu = fig2_model();
+        let wl = Workload::fig2(8192);
+        let t8 = predict(&gpu, &wl, Variant::Int8).unwrap().total;
+        let t4 = predict(&gpu, &wl, Variant::Int4).unwrap().total;
+        assert!(t4 < t8);
+    }
+
+    #[test]
+    fn quadratic_compute_scaling() {
+        let gpu = fig2_model();
+        let t1 = predict(&gpu, &Workload::fig2(2048), Variant::Fp16).unwrap().total;
+        let t2 = predict(&gpu, &Workload::fig2(4096), Variant::Fp16).unwrap().total;
+        let ratio = t2 / t1;
+        assert!(3.0 < ratio && ratio < 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn causal_halves_compute() {
+        let wl_f = Workload::fig2(4096);
+        let wl_c = Workload { causal: true, ..wl_f };
+        assert!((wl_c.matmul_flops() / wl_f.matmul_flops() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_bytes_scale_with_dtype() {
+        let wl = Workload::fig2(4096);
+        let b16 = wl.hbm_bytes(2.0);
+        let b8 = wl.hbm_bytes(1.0);
+        assert!(b8 < b16);
+        assert!(b8 > b16 / 2.0 * 0.9); // O term keeps it above exactly half
+    }
+
+    #[test]
+    fn tile_fits_sram_at_default_blocks() {
+        let gpu = fig2_model();
+        let wl = Workload::fig2(8192);
+        for v in Variant::ALL {
+            let bytes = tile_sram_bytes(&wl, v);
+            assert!(
+                bytes < gpu.sram_per_block,
+                "{}: {bytes} > {}",
+                v.name(),
+                gpu.sram_per_block
+            );
+        }
+    }
+
+    #[test]
+    fn fp16_reduction_shape_and_roofline() {
+        // Paper Figure 2 reports 31% → 73% smaller inference time from 1k
+        // to 16k. A 73% reduction is a 3.7× speedup — *beyond* the 2×
+        // INT8/FP16 pipe ratio and the ≤2× HBM-traffic ratio, so a
+        // first-principles roofline cannot reproduce the absolute number
+        // (their FP16 Triton baseline evidently runs far from peak; see
+        // EXPERIMENTS.md E1). What the model must reproduce is the SHAPE:
+        // positive reduction everywhere, monotone widening with seq-len,
+        // approaching the 50% compute-roofline at long sequences.
+        let gpu = fig2_model();
+        let mut last = 0.0;
+        for seq in [1024, 2048, 4096, 8192, 16384] {
+            let wl = Workload::fig2(seq);
+            let t16 = predict(&gpu, &wl, Variant::Fp16).unwrap().total;
+            let t8 = predict(&gpu, &wl, Variant::Int8).unwrap().total;
+            let reduction = 100.0 * (1.0 - t8 / t16);
+            assert!(
+                (20.0..55.0).contains(&reduction),
+                "seq {seq}: reduction {reduction:.1}% outside roofline band"
+            );
+            assert!(reduction >= last - 1e-9, "widening violated at {seq}");
+            last = reduction;
+        }
+        assert!(last > 45.0, "16k reduction {last:.1}% should near the 50% roofline");
+    }
+}

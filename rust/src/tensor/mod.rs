@@ -1,0 +1,180 @@
+//! Minimal dense tensor types for the rust-side numeric substrates.
+//!
+//! Row-major, owned storage. This is deliberately *not* a general tensor
+//! library — just the shapes the attention/gemm/quant modules need:
+//! 2-D matrices of f32 / i8 / i32, plus flat-buffer views used by the
+//! PJRT literal conversions.
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+/// Row-major i8 matrix (quantized operands).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+/// Row-major i32 matrix (integer GEMM accumulator).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+macro_rules! impl_mat {
+    ($t:ident, $elem:ty) => {
+        impl $t {
+            pub fn zeros(rows: usize, cols: usize) -> Self {
+                $t { rows, cols, data: vec![<$elem>::default(); rows * cols] }
+            }
+
+            pub fn from_vec(rows: usize, cols: usize, data: Vec<$elem>) -> Self {
+                assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+                $t { rows, cols, data }
+            }
+
+            #[inline(always)]
+            pub fn at(&self, r: usize, c: usize) -> $elem {
+                debug_assert!(r < self.rows && c < self.cols);
+                self.data[r * self.cols + c]
+            }
+
+            #[inline(always)]
+            pub fn set(&mut self, r: usize, c: usize, v: $elem) {
+                debug_assert!(r < self.rows && c < self.cols);
+                self.data[r * self.cols + c] = v;
+            }
+
+            #[inline(always)]
+            pub fn row(&self, r: usize) -> &[$elem] {
+                &self.data[r * self.cols..(r + 1) * self.cols]
+            }
+
+            #[inline(always)]
+            pub fn row_mut(&mut self, r: usize) -> &mut [$elem] {
+                &mut self.data[r * self.cols..(r + 1) * self.cols]
+            }
+
+            pub fn len(&self) -> usize {
+                self.data.len()
+            }
+
+            pub fn is_empty(&self) -> bool {
+                self.data.is_empty()
+            }
+
+            /// Sub-matrix copy of `nr` rows starting at `r0` (block loads).
+            pub fn rows_slice(&self, r0: usize, nr: usize) -> Self {
+                assert!(r0 + nr <= self.rows);
+                $t {
+                    rows: nr,
+                    cols: self.cols,
+                    data: self.data[r0 * self.cols..(r0 + nr) * self.cols].to_vec(),
+                }
+            }
+        }
+    };
+}
+
+impl_mat!(MatF32, f32);
+impl_mat!(MatI8, i8);
+impl_mat!(MatI32, i32);
+
+impl MatF32 {
+    /// Generate from a PRNG + distribution (workload builders).
+    pub fn random(
+        rows: usize,
+        cols: usize,
+        dist: crate::util::rng::Dist,
+        rng: &mut crate::util::rng::Pcg64,
+    ) -> Self {
+        MatF32::from_vec(rows, cols, dist.sample_vec(rng, rows * cols))
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> MatF32 {
+        let mut out = MatF32::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.at(r, c));
+            }
+        }
+        out
+    }
+}
+
+impl MatI8 {
+    /// Transposed copy (used to lay K out column-major for the GEMM
+    /// microkernel's contiguous dot products).
+    pub fn transpose(&self) -> MatI8 {
+        let mut out = MatI8::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.at(r, c));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Dist, Pcg64};
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut m = MatF32::zeros(2, 3);
+        assert_eq!(m.len(), 6);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_len() {
+        MatF32::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let m = MatF32::random(3, 5, Dist::Normal, &mut rng);
+        let t = m.transpose();
+        assert_eq!(t.rows, 5);
+        assert_eq!(t.cols, 3);
+        assert_eq!(m, t.transpose());
+        assert_eq!(m.at(2, 4), t.at(4, 2));
+    }
+
+    #[test]
+    fn rows_slice() {
+        let m = MatI8::from_vec(3, 2, vec![1, 2, 3, 4, 5, 6]);
+        let s = m.rows_slice(1, 2);
+        assert_eq!(s.data, vec![3, 4, 5, 6]);
+        assert_eq!(s.rows, 2);
+    }
+
+    #[test]
+    fn i8_transpose() {
+        let m = MatI8::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        let t = m.transpose();
+        assert_eq!(t.data, vec![1, 4, 2, 5, 3, 6]);
+    }
+
+    #[test]
+    fn random_respects_dist() {
+        let mut rng = Pcg64::seeded(2);
+        let m = MatF32::random(50, 50, Dist::Uniform, &mut rng);
+        assert!(m.data.iter().all(|&x| (-0.5..0.5).contains(&x)));
+    }
+}

@@ -1,0 +1,179 @@
+//! Tiny CLI argument parser (no clap in this offline environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Typed getters parse on access and report readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+    positional: Vec<String>,
+}
+
+pub const FLAG_SET: &str = "\u{1}"; // sentinel: flag present without value
+
+impl Args {
+    /// Parse an argv-style iterator (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else {
+                    // value-taking if next token is not another --flag
+                    let takes_value = iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        let v = iter.next().unwrap();
+                        out.flags.insert(body.to_string(), v);
+                    } else {
+                        out.flags.insert(body.to_string(), FLAG_SET.to_string());
+                    }
+                    out.present.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some(FLAG_SET) => None,
+            other => other,
+        }
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list: `--seqs 1024,2048,4096`.
+    pub fn get_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional argument (subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--port", "8000", "--host=localhost"]);
+        assert_eq!(a.get("port"), Some("8000"));
+        assert_eq!(a.get("host"), Some("localhost"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["--verbose", "--dry-run", "--n", "3"]);
+        assert!(a.has("verbose"));
+        assert!(a.has("dry-run"));
+        assert_eq!(a.get("verbose"), None); // present but valueless
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = parse(&["--x", "1", "--flag"]);
+        assert!(a.has("flag"));
+        assert_eq!(a.get("flag"), None);
+    }
+
+    #[test]
+    fn positionals_and_subcommand() {
+        let a = parse(&["serve", "--port", "1234", "extra"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.positional(), &["serve".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "12", "--rate", "3.5"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 3.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn typed_getter_errors() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--seqs", "1024, 2048,4096"]);
+        assert_eq!(a.get_list("seqs", &[]), vec!["1024", "2048", "4096"]);
+        assert_eq!(a.get_list("other", &["1"]), vec!["1"]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // "-3" does not start with "--" → consumed as a value
+        let a = parse(&["--offset", "-3"]);
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Polynomial exp for the attention inner loops — kept as a NEGATIVE
+//! §Perf result (EXPERIMENTS.md §Perf iteration 3).
+//!
+//! Hypothesis: `f32::exp` is a scalar libm call, so replacing it with a
+//! range-reduction + degree-5 polynomial (~5e-6 max rel error) should let
+//! the softmax loop vectorize. Measured: with `-C target-cpu=native`,
+//! LLVM already vectorizes `expf` through libmvec (`_ZGVeN16v_expf`) at
+//! ~4.4 ns/elem, while this polynomial's int/float bit dance defeats the
+//! vectorizer and runs scalar at ~29 ns/elem — 6.5× SLOWER. The kernels
+//! therefore use plain `.exp()`; this module stays as documentation and
+//! as a fallback for targets without a vector libm.
+
+/// exp(x) for x ≤ 0 (the online-softmax domain: s − m ≤ 0).
+/// Underflows to 0 below ≈ −87; max relative error ≈ 5e-6 in [−87, 0].
+#[inline(always)]
+pub fn fast_exp(x: f32) -> f32 {
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    // below −87 exp() underflows to 0 in f32; clamp for the computation
+    // and select 0 at the end (branchless → vectorizable)
+    let tiny = x < -87.0;
+    let x = if tiny { -87.0 } else { x };
+    let t = x * LOG2E;
+    // round-to-nearest integer part
+    let n = (t + 12582912.0) - 12582912.0; // 1.5·2^23 trick (|t| < 2^22 here)
+    let f = t - n;
+    // 2^f on f ∈ [-0.5, 0.5], degree-5 minimax (Cephes-style coefficients)
+    let p = 1.339887440e-3_f32;
+    let p = p * f + 9.618437357e-3;
+    let p = p * f + 5.550332471e-2;
+    let p = p * f + 2.402264791e-1;
+    let p = p * f + 6.931472028e-1;
+    let p = p * f + 1.0;
+    // scale by 2^n via exponent bits
+    let bits = ((n as i32 + 127) as u32) << 23;
+    let r = p * f32::from_bits(bits);
+    if tiny { 0.0 } else { r }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_std_exp_on_softmax_domain() {
+        let mut x = -87.0f32;
+        let mut max_rel = 0.0f32;
+        while x <= 0.0 {
+            let got = fast_exp(x);
+            let want = x.exp();
+            if want > 0.0 {
+                max_rel = max_rel.max((got - want).abs() / want);
+            }
+            x += 0.0137;
+        }
+        assert!(max_rel < 1e-5, "max rel err {max_rel}");
+    }
+
+    #[test]
+    fn exact_at_zero() {
+        assert_eq!(fast_exp(0.0), 1.0);
+    }
+
+    #[test]
+    fn underflow_clean() {
+        let v = fast_exp(-200.0);
+        assert!(v >= 0.0 && v < 2e-38, "{v}");
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut prev = fast_exp(-87.0);
+        let mut x = -86.9f32;
+        while x <= 0.0 {
+            let cur = fast_exp(x);
+            assert!(cur >= prev, "not monotone at {x}");
+            prev = cur;
+            x += 0.05;
+        }
+    }
+
+    #[test]
+    fn neg_inf_stand_in_is_zero_weight() {
+        // the kernels use -1e30 as masked-score; after subtracting the max
+        // the argument is hugely negative → weight must be exactly 0
+        assert_eq!(fast_exp(-1e30), 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! From-scratch utility substrates.
+//!
+//! This build environment is offline (no serde/clap/criterion/proptest/rand),
+//! so the pieces a production serving stack normally pulls from crates.io
+//! are implemented in-tree: a PCG-family PRNG with normal/uniform sampling
+//! ([`rng`]), a JSON codec ([`json`]), a CLI argument parser ([`cli`]),
+//! summary statistics ([`stats`]), a tiny leveled logger ([`log`]) and a
+//! seeded property-testing harness ([`proptest`]).
+
+pub mod cli;
+pub mod fastmath;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

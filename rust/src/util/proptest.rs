@@ -1,0 +1,219 @@
+//! Seeded property-testing harness (no proptest crate offline).
+//!
+//! A property runs against `cases` randomly generated inputs; on failure
+//! the harness performs greedy *shrinking* via the generator's `shrink`
+//! hook and reports the minimal failing input plus the seed that
+//! reproduces it. Deliberately small: generators are closures over
+//! [`Pcg64`], composition is plain Rust.
+
+use super::rng::Pcg64;
+
+/// A generator produces values from randomness and can propose smaller
+/// variants of a failing value.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate shrinks, largest-step first. Default: no shrinking.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed fixed by default: property tests are reproducible in CI;
+        // override with INTFA_PROPTEST_SEED to explore.
+        let seed = std::env::var("INTFA_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 64, seed, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` against `cfg.cases` generated inputs; panics with the
+/// minimal failing case on violation.
+pub fn check<G: Gen>(name: &str, g: &G, cfg: Config, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Pcg64::new(cfg.seed, 77);
+    for case in 0..cfg.cases {
+        let value = g.generate(&mut rng);
+        if prop(&value) {
+            continue;
+        }
+        // shrink
+        let mut current = value;
+        let mut steps = 0;
+        'outer: while steps < cfg.max_shrink_steps {
+            for candidate in g.shrink(&current) {
+                steps += 1;
+                if !prop(&candidate) {
+                    current = candidate;
+                    continue 'outer;
+                }
+                if steps >= cfg.max_shrink_steps {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed (case {case}, seed {seed}): minimal counterexample: {current:?}",
+            seed = cfg.seed,
+        );
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check_default<G: Gen>(name: &str, g: &G, prop: impl Fn(&G::Value) -> bool) {
+    check(name, g, Config::default(), prop)
+}
+
+// ---------------------------------------------------------------------------
+// Basic generators
+// ---------------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi] with halving shrinks toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.next_range((self.1 - self.0 + 1) as u64) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut cur = *v;
+        while cur > self.0 {
+            cur = self.0 + (cur - self.0) / 2;
+            out.push(cur);
+            if out.len() > 16 {
+                break;
+            }
+        }
+        // decrement step lets greedy shrinking walk to an exact boundary
+        // once halving overshoots
+        if *v > self.0 {
+            out.push(*v - 1);
+        }
+        out
+    }
+}
+
+/// Vec of f32 from a value generator with element-drop shrinking.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let len = self.min_len
+            + rng.next_range((self.max_len - self.min_len + 1) as u64) as usize;
+        rng.uniform_vec(len, self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // drop back half, then single elements
+            let keep = (v.len() / 2).max(self.min_len);
+            out.push(v[..keep].to_vec());
+            if v.len() > self.min_len {
+                out.push(v[1..].to_vec());
+            }
+        }
+        // zero-out values (simpler numbers)
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(v.iter().map(|_| 0.0).collect());
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check_default("usize in range", &UsizeRange(3, 10), |v| (3..=10).contains(v));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample: 6")]
+    fn failing_property_shrinks_to_boundary() {
+        // property "v < 6" fails for v>=6; shrinking halves toward 0 and the
+        // minimal failing value is exactly 6.
+        check(
+            "shrinks to 6",
+            &UsizeRange(0, 100),
+            Config { cases: 200, seed: 42, max_shrink_steps: 200 },
+            |v| *v < 6,
+        );
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let g = VecF32 { min_len: 2, max_len: 5, lo: -1.0, hi: 1.0 };
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..50 {
+            let v = g.generate(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        }
+    }
+
+    #[test]
+    fn pair_generator_shrinks_both_sides() {
+        let g = Pair(UsizeRange(0, 8), UsizeRange(0, 8));
+        let shrunk = g.shrink(&(8, 8));
+        assert!(shrunk.iter().any(|(a, b)| *a < 8 && *b == 8));
+        assert!(shrunk.iter().any(|(a, b)| *a == 8 && *b < 8));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = UsizeRange(0, 1000);
+        let mut r1 = Pcg64::new(9, 77);
+        let mut r2 = Pcg64::new(9, 77);
+        for _ in 0..20 {
+            assert_eq!(g.generate(&mut r1), g.generate(&mut r2));
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Deterministic PRNG + distributions (no `rand` crate in this offline
+//! environment).
+//!
+//! Core generator is PCG64 (O'Neill 2014, XSL-RR 128/64): small state,
+//! excellent statistical quality, trivially seedable — everything the
+//! workload generators and property tests need. Distributions: uniform
+//! floats/ints, Box–Muller normals, Poisson arrivals (Knuth for small λ,
+//! normal approximation for large λ).
+
+/// PCG64 XSL-RR generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with an arbitrary 64-bit value; `stream` selects an
+    /// independent sequence (used to decorrelate per-worker generators).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Seed with a single value (stream 0).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use;
+    /// modulo bias is negligible for n ≪ 2^64 but we reject to be exact).
+    #[inline]
+    pub fn next_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_range(0)");
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached second value omitted for
+    /// simplicity; generation is not a hot path).
+    pub fn normal_f32(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal_f32()).collect()
+    }
+
+    /// Vector of U(lo, hi) samples.
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.uniform_f32(lo, hi)).collect()
+    }
+
+    /// Poisson sample (arrival processes in the batching ablation).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            // Knuth
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // normal approximation, clamped at 0
+            let z = {
+                let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+                let u2 = self.next_f64();
+                (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+            };
+            (lambda + lambda.sqrt() * z).round().max(0.0) as u64
+        }
+    }
+
+    /// Exponential inter-arrival time with rate λ (events/sec).
+    pub fn exp_interval(&mut self, lambda: f64) -> f64 {
+        let u = self.next_f64().max(f64::MIN_POSITIVE);
+        -u.ln() / lambda
+    }
+}
+
+/// Named activation distributions used by the paper's experiments (§4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dist {
+    /// N(0, 1)
+    Normal,
+    /// U(−0.5, 0.5)
+    Uniform,
+}
+
+impl Dist {
+    pub fn sample_vec(self, rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        match self {
+            Dist::Normal => rng.normal_vec(n),
+            Dist::Uniform => rng.uniform_vec(n, -0.5, 0.5),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dist> {
+        match s {
+            "normal" => Some(Dist::Normal),
+            "uniform" => Some(Dist::Uniform),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dist::Normal => "normal",
+            Dist::Uniform => "uniform",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn different_streams_diverge() {
+        let mut a = Pcg64::new(1, 0);
+        let mut b = Pcg64::new(1, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Pcg64::seeded(7);
+        for _ in 0..10_000 {
+            let v = r.uniform_f32(-0.5, 0.5);
+            assert!((-0.5..0.5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_range_bounds_and_coverage() {
+        let mut r = Pcg64::seeded(8);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_range(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(9);
+        let n = 100_000;
+        let xs = r.normal_vec(n);
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_lambda() {
+        let mut r = Pcg64::seeded(10);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.poisson(3.5) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 3.5).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean_large_lambda() {
+        let mut r = Pcg64::seeded(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.poisson(100.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 100.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn exp_interval_mean() {
+        let mut r = Pcg64::seeded(12);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exp_interval(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn dist_parse() {
+        assert_eq!(Dist::parse("normal"), Some(Dist::Normal));
+        assert_eq!(Dist::parse("uniform"), Some(Dist::Uniform));
+        assert_eq!(Dist::parse("cauchy"), None);
+    }
+}

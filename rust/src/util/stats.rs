@@ -1,0 +1,229 @@
+//! Summary statistics for benchmarks and serving metrics.
+
+/// Summary of a sample of f64 observations (latencies in ns, errors, …).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n.max(2) - 1) as f64;
+        Some(Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        })
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, q ∈ [0, 1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Remove outliers beyond `k` median-absolute-deviations from the median
+/// (robust trimming for noisy wall-clock benches). Returns the kept values.
+pub fn mad_filter(samples: &[f64], k: f64) -> Vec<f64> {
+    if samples.len() < 4 {
+        return samples.to_vec();
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = percentile_sorted(&sorted, 0.5);
+    let mut devs: Vec<f64> = samples.iter().map(|x| (x - med).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = percentile_sorted(&devs, 0.5);
+    if mad == 0.0 {
+        return samples.to_vec();
+    }
+    // 1.4826 ≈ consistency constant for normal data
+    let cutoff = k * 1.4826 * mad;
+    samples
+        .iter()
+        .copied()
+        .filter(|x| (x - med).abs() <= cutoff)
+        .collect()
+}
+
+/// Online mean/max accumulator (streaming serving metrics).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, sum: 0.0, max: f64::NEG_INFINITY, min: f64::INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.max = self.max.max(x);
+        self.min = self.min.min(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Relative-L1 mean relative error: Σ|a−e| / Σ|e| — the metric used for
+/// the paper's Tables 1-2 (see python kernels/metrics.py for why).
+pub fn mre(approx: &[f32], exact: &[f32]) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    let num: f64 = approx
+        .iter()
+        .zip(exact)
+        .map(|(a, e)| (*a as f64 - *e as f64).abs())
+        .sum();
+    let den: f64 = exact.iter().map(|e| (*e as f64).abs()).sum();
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        num / den
+    }
+}
+
+/// Max absolute elementwise difference.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.0]).unwrap();
+        assert_eq!(s.p99, 7.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&sorted, 0.5), 5.0);
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 1.0), 10.0);
+    }
+
+    #[test]
+    fn mad_filter_drops_outlier() {
+        // data needs nonzero spread: MAD of constant data is 0 → no trim
+        let mut xs: Vec<f64> = (0..20).map(|i| 10.0 + 0.1 * (i % 5) as f64).collect();
+        xs.push(1000.0);
+        let kept = mad_filter(&xs, 5.0);
+        assert_eq!(kept.len(), 20);
+        assert!(kept.iter().all(|&x| x < 100.0));
+    }
+
+    #[test]
+    fn mad_filter_keeps_clean_data() {
+        let xs: Vec<f64> = (0..50).map(|i| 100.0 + (i % 5) as f64).collect();
+        let kept = mad_filter(&xs, 5.0);
+        assert_eq!(kept.len(), xs.len());
+    }
+
+    #[test]
+    fn mad_zero_spread() {
+        let xs = vec![3.0; 10];
+        assert_eq!(mad_filter(&xs, 3.0).len(), 10);
+    }
+
+    #[test]
+    fn running_acc() {
+        let mut r = Running::new();
+        for x in [1.0, 5.0, 3.0] {
+            r.push(x);
+        }
+        assert_eq!(r.n, 3);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(r.max, 5.0);
+        assert_eq!(r.min, 1.0);
+    }
+
+    #[test]
+    fn mre_matches_hand_calc() {
+        let exact = [1.0f32, -2.0, 4.0];
+        let approx = [1.1f32, -1.9, 4.0];
+        let e = mre(&approx, &exact);
+        assert!((e - 0.2 / 7.0).abs() < 1e-6, "{e}"); // f32 inputs → ~1e-8 noise
+    }
+
+    #[test]
+    fn mre_zero_exact() {
+        assert_eq!(mre(&[0.0], &[0.0]), 0.0);
+        assert!(mre(&[1.0], &[0.0]).is_infinite());
+    }
+
+    #[test]
+    fn max_abs() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+}

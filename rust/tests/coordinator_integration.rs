@@ -1,0 +1,190 @@
+//! Coordinator integration: end-to-end engine over both backends, plus
+//! property tests on the engine's numeric transparency (pad → execute →
+//! unpad must equal a direct kernel call).
+
+use int_flashattention::attention::Variant;
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Backend, Engine, EngineConfig, NativeBackend, PjrtBackend};
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::coordinator::{AccuracyClass, RequestPayload};
+use int_flashattention::runtime::Manifest;
+use int_flashattention::util::rng::Pcg64;
+use int_flashattention::util::stats;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn payload(rng: &mut Pcg64, heads: usize, seq: usize, d: usize) -> RequestPayload {
+    let n = heads * seq * d;
+    RequestPayload {
+        heads,
+        seq,
+        head_dim: d,
+        q: rng.normal_vec(n),
+        k: rng.normal_vec(n),
+        v: rng.normal_vec(n),
+    }
+}
+
+#[test]
+fn native_engine_throughput_many_requests() {
+    let mk = |variant, seq| Bucket {
+        variant,
+        batch: 4,
+        heads: 2,
+        seq,
+        head_dim: 16,
+        causal: true,
+        artifact: String::new(),
+    };
+    let router = BucketRouter::new(vec![mk(Variant::Int8, 64), mk(Variant::Int8, 128)]);
+    let engine = Arc::new(Engine::new(
+        router,
+        Arc::new(NativeBackend { threads: 2 }),
+        EngineConfig {
+            policy: BatchPolicy::Deadline,
+            batch_deadline: Duration::from_millis(2),
+            workers: 2,
+            ..EngineConfig::default()
+        },
+    ));
+
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let engine = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::seeded(t);
+            let mut ok = 0;
+            for i in 0..10 {
+                let seq = 16 + ((t as usize * 13 + i * 7) % 100);
+                let resp = engine.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, seq, 16));
+                if resp.result.is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>().iter().sum();
+    assert_eq!(total, 40, "all requests served");
+    let snap = engine.metrics.snapshot();
+    assert_eq!(snap.at("counter.completed").as_i64(), Some(40));
+    // batching actually happened: fewer batches than requests
+    let batches = snap.at("counter.batches.formed").as_i64().unwrap();
+    assert!(batches < 40, "batches {batches} should be < 40");
+}
+
+#[test]
+fn engine_numeric_transparency_property() {
+    // For random (seq, seed), engine output == direct padded kernel output
+    // sliced back. This is the pad/unpad correctness invariant.
+    let bucket = Bucket {
+        variant: Variant::Int8,
+        batch: 2,
+        heads: 2,
+        seq: 64,
+        head_dim: 16,
+        causal: true,
+        artifact: String::new(),
+    };
+    let router = BucketRouter::new(vec![bucket.clone()]);
+    let engine = Engine::new(
+        router,
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    );
+    let backend = NativeBackend { threads: 1 };
+
+    let mut rng = Pcg64::seeded(42);
+    for case in 0..8 {
+        let seq = 1 + (rng.next_range(64) as usize);
+        let p = payload(&mut rng, 2, seq, 16);
+        let resp = engine.submit_blocking(AccuracyClass::Fast, p.clone());
+        let got = resp.result.expect("ok");
+
+        // direct: pad to 64 with zeros, run, slice
+        let (h, n, d) = (2usize, 64usize, 16usize);
+        let mut qp = vec![0.0f32; 2 * h * n * d];
+        let mut kp = vec![0.0f32; 2 * h * n * d];
+        let mut vp = vec![0.0f32; 2 * h * n * d];
+        for head in 0..h {
+            let src = head * seq * d;
+            let dst = head * n * d;
+            qp[dst..dst + seq * d].copy_from_slice(&p.q[src..src + seq * d]);
+            kp[dst..dst + seq * d].copy_from_slice(&p.k[src..src + seq * d]);
+            vp[dst..dst + seq * d].copy_from_slice(&p.v[src..src + seq * d]);
+        }
+        let direct = backend.execute(&bucket, &qp, &kp, &vp).unwrap();
+        let mut want = Vec::new();
+        for head in 0..h {
+            let base = head * n * d;
+            want.extend_from_slice(&direct[base..base + seq * d]);
+        }
+        let diff = stats::max_abs_diff(&got, &want);
+        assert!(diff < 1e-5, "case {case} seq {seq}: diff {diff}");
+    }
+}
+
+#[test]
+fn pjrt_engine_end_to_end() {
+    // Full production path: manifest-routed buckets + PJRT backend.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let router = BucketRouter::from_manifest(&manifest);
+    assert!(!router.is_empty());
+    let engine = Engine::new(
+        router,
+        Arc::new(PjrtBackend::start(dir).unwrap()),
+        EngineConfig {
+            policy: BatchPolicy::Deadline,
+            batch_deadline: Duration::from_millis(5),
+            workers: 2,
+            ..EngineConfig::default()
+        },
+    );
+    // serving buckets are (4, 8, {128,256,512}, 64) causal
+    let mut rng = Pcg64::seeded(9);
+    for seq in [100usize, 128, 200] {
+        let resp = engine.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 8, seq, 64));
+        let out = resp.result.expect("pjrt ok");
+        assert_eq!(out.len(), 8 * seq * 64);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert_eq!(resp.variant, Some(Variant::Int8));
+        assert!(resp.bucket_seq >= seq);
+    }
+    // Exact class routes to the fp16 artifact
+    let resp = engine.submit_blocking(AccuracyClass::Exact, payload(&mut rng, 8, 100, 64));
+    assert_eq!(resp.variant, Some(Variant::Fp16));
+}
+
+#[test]
+fn pjrt_and_native_agree() {
+    // The same request through both backends lands within quantization
+    // noise (different block partitions + float order).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let router = BucketRouter::from_manifest(&manifest);
+    let pjrt = Engine::new(
+        router.clone(),
+        Arc::new(PjrtBackend::start(dir).unwrap()),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    );
+    let native = Engine::new(
+        router,
+        Arc::new(NativeBackend { threads: 2 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    );
+    let mut rng = Pcg64::seeded(10);
+    let p = payload(&mut rng, 8, 128, 64);
+    let a = pjrt.submit_blocking(AccuracyClass::Fast, p.clone()).result.unwrap();
+    let b = native.submit_blocking(AccuracyClass::Fast, p).result.unwrap();
+    let e = stats::mre(&a, &b);
+    assert!(e < 0.02, "pjrt vs native mre {e}");
+}

@@ -1,0 +1,159 @@
+//! Integration tests: load the real AOT artifacts through PJRT and verify
+//! numerics against the python-generated golden data and the rust-native
+//! kernels. Requires `make artifacts` (skipped gracefully otherwise).
+
+use int_flashattention::attention::{self, multihead::HeadBatch, AttnConfig, Variant};
+use int_flashattention::runtime::{executor::HostTensor, ArtifactRegistry, Executor};
+use int_flashattention::util::rng::{Dist, Pcg64};
+use int_flashattention::util::stats;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn registry() -> Option<Arc<ArtifactRegistry>> {
+    artifacts_dir().map(|d| Arc::new(ArtifactRegistry::open(d).expect("open registry")))
+}
+
+#[test]
+fn golden_attention_int8_matches_python() {
+    let Some(reg) = registry() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let exe = Executor::new(reg, "attn_int8_b1_h2_n128_d32").expect("compile");
+    let (mre, max_abs) = exe.run_golden().expect("golden run");
+    // identical graph, identical inputs → tight agreement
+    assert!(mre < 1e-5, "mre {mre}");
+    assert!(max_abs < 1e-4, "max_abs {max_abs}");
+}
+
+#[test]
+fn golden_attention_fp16_matches_python() {
+    let Some(reg) = registry() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let exe = Executor::new(reg, "attn_fp16_b1_h2_n128_d32").expect("compile");
+    let (mre, max_abs) = exe.run_golden().expect("golden run");
+    assert!(mre < 1e-5, "mre {mre}");
+    assert!(max_abs < 1e-4, "max_abs {max_abs}");
+}
+
+#[test]
+fn golden_lm_matches_python() {
+    let Some(reg) = registry() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let exe = Executor::new(reg, "lm_int8_b1_n64").expect("compile");
+    let (mre, _) = exe.run_golden().expect("golden run");
+    assert!(mre < 1e-4, "mre {mre}");
+}
+
+#[test]
+fn pjrt_output_close_to_rust_native_kernel() {
+    // Cross-implementation check: the PJRT-executed Pallas pipeline and
+    // the rust-native Algorithm 1 differ only in block-partition rounding
+    // noise and float order → small MRE between them.
+    let Some(reg) = registry() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let exe = Executor::new(reg.clone(), "attn_int8_b1_h2_n128_d32").expect("compile");
+    let (b, h, n, d) = (1usize, 2usize, 128usize, 32usize);
+    let mut rng = Pcg64::seeded(77);
+    let q: Vec<f32> = rng.normal_vec(b * h * n * d);
+    let k: Vec<f32> = rng.normal_vec(b * h * n * d);
+    let v: Vec<f32> = rng.normal_vec(b * h * n * d);
+    let out = exe
+        .run(&[
+            HostTensor::F32(q.clone()),
+            HostTensor::F32(k.clone()),
+            HostTensor::F32(v.clone()),
+        ])
+        .expect("run");
+
+    let qb = HeadBatch::from_flat(b, h, n, d, &q);
+    let kb = HeadBatch::from_flat(b, h, n, d, &k);
+    let vb = HeadBatch::from_flat(b, h, n, d, &v);
+    let cfg = AttnConfig::new(d).blocks(64, 64);
+    let native = attention::multihead::attention_multihead(Variant::Int8, &qb, &kb, &vb, &cfg, 1);
+    let e = stats::mre(&out[0], &native.to_flat());
+    assert!(e < 0.02, "pjrt vs rust-native mre {e}");
+}
+
+#[test]
+fn executor_rejects_bad_inputs() {
+    let Some(reg) = registry() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let exe = Executor::new(reg, "attn_int8_b1_h2_n128_d32").expect("compile");
+    // wrong arity
+    assert!(exe.run(&[HostTensor::F32(vec![0.0; 10])]).is_err());
+    // wrong length
+    let bad = vec![
+        HostTensor::F32(vec![0.0; 10]),
+        HostTensor::F32(vec![0.0; 10]),
+        HostTensor::F32(vec![0.0; 10]),
+    ];
+    assert!(exe.run(&bad).is_err());
+    // wrong dtype
+    let n = 1 * 2 * 128 * 32;
+    let bad_dtype = vec![
+        HostTensor::I32(vec![0; n]),
+        HostTensor::F32(vec![0.0; n]),
+        HostTensor::F32(vec![0.0; n]),
+    ];
+    assert!(exe.run(&bad_dtype).is_err());
+}
+
+#[test]
+fn warm_all_compiles_everything() {
+    let Some(reg) = registry() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let n = reg.warm_all().expect("warm");
+    assert!(n >= 3, "expected ≥3 artifacts, got {n}");
+}
+
+#[test]
+fn lm_artifact_runs_on_fresh_tokens() {
+    let Some(reg) = registry() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let exe = Executor::new(reg, "lm_int8_b1_n64").expect("compile");
+    let mut rng = Pcg64::seeded(5);
+    let tokens: Vec<i32> = (0..64).map(|_| rng.next_range(256) as i32).collect();
+    let out = exe.run(&[HostTensor::I32(tokens)]).expect("run");
+    assert_eq!(out[0].len(), 256);
+    assert!(out[0].iter().all(|x| x.is_finite()));
+    // logits should not be constant
+    let spread = out[0].iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+        - out[0].iter().fold(f32::INFINITY, |a, &b| a.min(b));
+    assert!(spread > 0.01, "degenerate logits");
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let Some(reg) = registry() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let exe = Executor::new(reg, "attn_fp16_b1_h2_n128_d32").expect("compile");
+    let n = 1 * 2 * 128 * 32;
+    let mut rng = Pcg64::seeded(11);
+    let inputs = vec![
+        HostTensor::F32(rng.normal_vec(n)),
+        HostTensor::F32(rng.normal_vec(n)),
+        HostTensor::F32(rng.normal_vec(n)),
+    ];
+    let a = exe.run(&inputs).expect("run a");
+    let b = exe.run(&inputs).expect("run b");
+    assert_eq!(a[0], b[0]);
+}

@@ -1,0 +1,114 @@
+//! Server integration: real TCP round-trips against a native-backend
+//! engine (no artifacts needed).
+
+use int_flashattention::attention::Variant;
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::server::{Client, Server};
+use int_flashattention::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn test_server() -> (int_flashattention::server::tcp::ShutdownHandle, std::thread::JoinHandle<()>) {
+    let mk = |variant, seq| Bucket {
+        variant,
+        batch: 2,
+        heads: 2,
+        seq,
+        head_dim: 8,
+        causal: true,
+        artifact: String::new(),
+    };
+    let router = BucketRouter::new(vec![
+        mk(Variant::Int8, 32),
+        mk(Variant::Fp16, 32),
+        mk(Variant::HalfInt8, 32),
+    ]);
+    let engine = Arc::new(Engine::new(
+        router,
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    ));
+    let server = Server::bind(engine, "127.0.0.1:0").expect("bind");
+    server.start()
+}
+
+#[test]
+fn ping_metrics_attention_roundtrip() {
+    let (handle, join) = test_server();
+    let addr = handle.addr();
+
+    let mut client = Client::connect(addr).expect("connect");
+    assert!(client.ping().expect("ping"));
+
+    let mut rng = Pcg64::seeded(1);
+    let n = 2 * 16 * 8;
+    let (q, k, v) = (rng.normal_vec(n), rng.normal_vec(n), rng.normal_vec(n));
+    let resp = client.attention("fast", 2, 16, 8, &q, &k, &v).expect("attention");
+    assert_eq!(resp.at("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.at("variant").as_str(), Some("int8"));
+    assert_eq!(resp.at("o").as_arr().unwrap().len(), n);
+    assert!(resp.at("latency_us").as_i64().unwrap() >= 0);
+
+    let m = client.metrics().expect("metrics");
+    assert_eq!(m.at("counter.completed").as_i64(), Some(1));
+
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn protocol_error_handling() {
+    let (handle, join) = test_server();
+    let mut client = Client::connect(handle.addr()).expect("connect");
+
+    // malformed json
+    let resp = client.call_raw("{oops").expect("raw");
+    let j = int_flashattention::util::json::parse(&resp).unwrap();
+    assert_eq!(j.at("ok").as_bool(), Some(false));
+
+    // unknown verb
+    let resp = client.call_raw(r#"{"type":"teleport"}"#).expect("raw");
+    let j = int_flashattention::util::json::parse(&resp).unwrap();
+    assert!(j.at("error").as_str().unwrap().contains("unknown"));
+
+    // unroutable geometry
+    let resp = client
+        .attention("fast", 7, 16, 8, &vec![0.0; 7 * 16 * 8], &vec![0.0; 7 * 16 * 8], &vec![0.0; 7 * 16 * 8])
+        .expect("attention");
+    assert_eq!(resp.at("ok").as_bool(), Some(false));
+
+    // connection still alive after errors
+    assert!(client.ping().expect("ping"));
+
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn multiple_concurrent_clients() {
+    let (handle, join) = test_server();
+    let addr = handle.addr();
+    let mut threads = Vec::new();
+    for t in 0..4u64 {
+        threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).expect("connect");
+            let mut rng = Pcg64::seeded(t);
+            let n = 2 * 20 * 8;
+            for _ in 0..5 {
+                let (q, k, v) = (rng.normal_vec(n), rng.normal_vec(n), rng.normal_vec(n));
+                let resp = client.attention("balanced", 2, 20, 8, &q, &k, &v).expect("attn");
+                assert_eq!(resp.at("ok").as_bool(), Some(true));
+                assert_eq!(resp.at("variant").as_str(), Some("half_int8"));
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let mut client = Client::connect(addr).unwrap();
+    let m = client.metrics().unwrap();
+    assert_eq!(m.at("counter.completed").as_i64(), Some(20));
+    handle.shutdown();
+    join.join().unwrap();
+}

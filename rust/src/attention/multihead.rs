@@ -52,6 +52,29 @@ pub fn attention_multihead(
     cfg: &AttnConfig,
     threads: usize,
 ) -> HeadBatch {
+    attention_multihead_with(
+        |_, qm, km, vm| attention_f32(variant, qm, km, vm, cfg),
+        q,
+        k,
+        v,
+        threads,
+    )
+}
+
+/// Same (batch, head) fan-out with an arbitrary single-head kernel. The
+/// kernel receives the flat mat index (head = index % heads) so per-head
+/// calibration state can be applied; used by the plan-quantized serving
+/// backend (`coordinator::engine::CalibratedNativeBackend`).
+pub fn attention_multihead_with<F>(
+    kernel: F,
+    q: &HeadBatch,
+    k: &HeadBatch,
+    v: &HeadBatch,
+    threads: usize,
+) -> HeadBatch
+where
+    F: Fn(usize, &MatF32, &MatF32, &MatF32) -> MatF32 + Sync,
+{
     assert_eq!(q.mats.len(), k.mats.len());
     assert_eq!(k.mats.len(), v.mats.len());
     let n_mats = q.mats.len();
@@ -59,11 +82,12 @@ pub fn attention_multihead(
 
     let mats: Vec<MatF32> = if threads == 1 {
         (0..n_mats)
-            .map(|i| attention_f32(variant, &q.mats[i], &k.mats[i], &v.mats[i], cfg))
+            .map(|i| kernel(i, &q.mats[i], &k.mats[i], &v.mats[i]))
             .collect()
     } else {
         let mut results: Vec<Option<MatF32>> = vec![None; n_mats];
         let chunk = n_mats.div_ceil(threads);
+        let kernel = &kernel;
         std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for (t, res_chunk) in results.chunks_mut(chunk).enumerate() {
@@ -72,7 +96,7 @@ pub fn attention_multihead(
                 handles.push(scope.spawn(move || {
                     for (off, slot) in res_chunk.iter_mut().enumerate() {
                         let i = start + off;
-                        *slot = Some(attention_f32(variant, &qm[i], &km[i], &vm[i], cfg));
+                        *slot = Some(kernel(i, &qm[i], &km[i], &vm[i]));
                     }
                 }));
             }

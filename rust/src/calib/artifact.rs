@@ -1,0 +1,166 @@
+//! Persisted calibration: serialize/deserialize the plan + autotuned
+//! table through the in-tree JSON codec, and load it through the runtime
+//! manifest (an optional `"calibration": "<file>"` entry next to the AOT
+//! artifacts) so a serving process boots straight into measured scales.
+
+use super::autotune::{
+    self, autotune, AutotuneConfig, BucketReport, VariantTable,
+};
+use super::plan::CalibrationPlan;
+use crate::runtime::Manifest;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+const ARTIFACT_VERSION: i64 = 1;
+
+/// Everything a serving process needs from a calibration run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationArtifact {
+    pub plan: CalibrationPlan,
+    pub table: VariantTable,
+    /// Raw per-bucket measurements behind the table (kept for audits and
+    /// re-thresholding without a re-run).
+    pub reports: Vec<BucketReport>,
+}
+
+impl CalibrationArtifact {
+    /// Build an artifact by running the autotuner under `plan`.
+    pub fn autotuned(plan: CalibrationPlan, cfg: &AutotuneConfig) -> CalibrationArtifact {
+        let (reports, table) = autotune(&plan, cfg);
+        CalibrationArtifact { plan, table, reports }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(ARTIFACT_VERSION as f64)),
+            ("plan", self.plan.to_json()),
+            ("table", self.table.to_json()),
+            ("reports", autotune::reports_to_json(&self.reports)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CalibrationArtifact> {
+        let version = j.at("version").as_i64().unwrap_or(0);
+        if version != ARTIFACT_VERSION {
+            bail!("unsupported calibration artifact version {version}");
+        }
+        Ok(CalibrationArtifact {
+            plan: CalibrationPlan::from_json(j.at("plan")).map_err(|e| anyhow!("{e}"))?,
+            table: VariantTable::from_json(j.at("table")).map_err(|e| anyhow!("{e}"))?,
+            reports: autotune::reports_from_json(j.at("reports"))
+                .map_err(|e| anyhow!("{e}"))?,
+        })
+    }
+
+    /// Write as pretty JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing calibration artifact {path:?}"))
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<CalibrationArtifact> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration artifact {path:?}"))?;
+        let j = parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j).with_context(|| format!("calibration artifact {path:?}"))
+    }
+
+    /// Load the artifact a manifest points at (`Ok(None)` when the
+    /// deployment ships no calibration — callers fall back to
+    /// [`CalibrationPlan::uncalibrated`]).
+    pub fn from_manifest(manifest: &Manifest) -> Result<Option<CalibrationArtifact>> {
+        match &manifest.calibration {
+            None => Ok(None),
+            Some(rel) => Self::load(manifest.root.join(rel)).map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+    use crate::calib::autotune::TableBucket;
+    use crate::quant::INT8_R;
+    use std::path::PathBuf;
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("intfa-{}-{}.json", name, std::process::id()))
+    }
+
+    fn sample_artifact() -> CalibrationArtifact {
+        let mut plan = CalibrationPlan::uncalibrated(INT8_R);
+        plan.v_absmax = 2.5;
+        plan.v_scale = 2.5 / 127.0;
+        plan.k_clip = vec![2.0, 2.25];
+        plan.q_clip = vec![3.0, 3.5];
+        plan.batches = 7;
+        let table = VariantTable {
+            buckets: vec![TableBucket {
+                seq: 128,
+                fast: vec![Variant::Int8, Variant::Fp16],
+                balanced: vec![Variant::HalfInt8, Variant::Fp16],
+                exact: vec![Variant::Fp16],
+            }],
+        };
+        CalibrationArtifact { plan, table, reports: Vec::new() }
+    }
+
+    #[test]
+    fn file_round_trip_is_identical() {
+        let artifact = sample_artifact();
+        let path = tmp_path("artifact-roundtrip");
+        artifact.save(&path).unwrap();
+        let restored = CalibrationArtifact::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(restored, artifact);
+    }
+
+    #[test]
+    fn rejects_bad_version_and_garbage() {
+        let j = parse(r#"{"version": 99}"#).unwrap();
+        assert!(CalibrationArtifact::from_json(&j).is_err());
+        let path = tmp_path("artifact-garbage");
+        std::fs::write(&path, "not json").unwrap();
+        assert!(CalibrationArtifact::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+        assert!(CalibrationArtifact::load("/nonexistent/calibration.json").is_err());
+    }
+
+    #[test]
+    fn manifest_integration() {
+        // a manifest without the key carries no calibration
+        let bare = Manifest::parse_str(
+            r#"{"version": 1, "artifacts": []}"#,
+            PathBuf::from("/tmp"),
+        )
+        .unwrap();
+        assert!(CalibrationArtifact::from_manifest(&bare).unwrap().is_none());
+
+        // with the key, the artifact loads relative to the manifest root
+        let root = std::env::temp_dir()
+            .join(format!("intfa-manifest-calib-{}", std::process::id()));
+        std::fs::create_dir_all(&root).unwrap();
+        sample_artifact().save(root.join("calibration.json")).unwrap();
+        let m = Manifest::parse_str(
+            r#"{"version": 1, "artifacts": [], "calibration": "calibration.json"}"#,
+            root.clone(),
+        )
+        .unwrap();
+        let loaded = CalibrationArtifact::from_manifest(&m).unwrap().unwrap();
+        assert_eq!(loaded, sample_artifact());
+        let _ = std::fs::remove_dir_all(&root);
+
+        // a dangling pointer is an error, not a silent fallback
+        let dangling = Manifest::parse_str(
+            r#"{"version": 1, "artifacts": [], "calibration": "missing.json"}"#,
+            PathBuf::from("/tmp"),
+        )
+        .unwrap();
+        assert!(CalibrationArtifact::from_manifest(&dangling).is_err());
+    }
+}

@@ -1,0 +1,533 @@
+//! Precision autotuner: measure, per (seq-len bucket × variant), the
+//! accuracy (MRE vs [`crate::attention::reference`]) and throughput
+//! (wall-clock of the blocked-GEMM rust kernels) of every attention
+//! variant under a [`CalibrationPlan`], then emit a variant-selection
+//! table keyed by [`AccuracyClass`].
+//!
+//! The static `router::variant_chain` policy encodes the *paper's*
+//! accuracy ordering; the autotuned [`VariantTable`] replaces it with
+//! *this deployment's* measurements: a class admits every variant whose
+//! measured MRE clears the class threshold, ordered fastest-first, with
+//! `fp16` always kept as the exact fallback.
+
+use super::plan::{CalibrationPlan, Smoothing};
+use crate::attention::{attention_f32, reference, AttnConfig, Variant};
+use crate::bench_harness::black_box;
+use crate::coordinator::request::AccuracyClass;
+use crate::quant::{INT4_R, INT8_R};
+use crate::tensor::MatF32;
+use crate::util::json::Json;
+use crate::util::rng::{Dist, Pcg64};
+use crate::util::stats::mre;
+use std::time::Instant;
+
+/// Autotuning workload + admission thresholds.
+#[derive(Clone, Debug)]
+pub struct AutotuneConfig {
+    /// Sequence-length buckets to measure.
+    pub seqs: Vec<usize>,
+    pub head_dim: usize,
+    /// Synthetic activation distribution (match expected traffic).
+    pub dist: Dist,
+    /// Amplitude applied to the synthetic V samples — set it to the
+    /// calibrated traffic's value-activation scale so the MRE is
+    /// measured on the distribution the plan's V grid was built for
+    /// (Q/K stay unit-scale: their quantization is live token-level).
+    pub v_sigma: f32,
+    /// Measure under a causal mask. Defaults to true: the router only
+    /// pads requests into causal buckets, so served attention is causal
+    /// and admissions must be validated on the same computation.
+    pub causal: bool,
+    /// Sample matrices per bucket for the MRE estimate.
+    pub samples: usize,
+    /// Timed kernel invocations per variant for the throughput estimate.
+    pub timing_iters: usize,
+    /// Variants to measure.
+    pub variants: Vec<Variant>,
+    /// Max MRE a variant may show to serve the `Fast` class.
+    pub fast_mre: f64,
+    /// Max MRE for the `Balanced` class.
+    pub balanced_mre: f64,
+    /// Max MRE for the `Exact` class.
+    pub exact_mre: f64,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> Self {
+        AutotuneConfig {
+            seqs: vec![128, 256, 512],
+            head_dim: 64,
+            dist: Dist::Normal,
+            v_sigma: 1.0,
+            causal: true,
+            samples: 2,
+            timing_iters: 2,
+            variants: Variant::ALL.to_vec(),
+            // thresholds bracket the paper's Tables 1-2: INT8 lands at a
+            // few percent, half-INT8/FP8 near or under one percent, INT4
+            // well above all three
+            fast_mre: 0.08,
+            balanced_mre: 0.03,
+            exact_mre: 1e-4,
+        }
+    }
+}
+
+/// One (bucket × variant) measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantMeasurement {
+    pub variant: Variant,
+    /// Mean relative error vs exact attention over the sample matrices.
+    pub mre: f64,
+    /// Wall-clock per single-head forward call.
+    pub ns_per_call: f64,
+    /// Derived tokens/second for this bucket's seq.
+    pub tokens_per_sec: f64,
+}
+
+/// All variant measurements for one seq bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BucketReport {
+    pub seq: usize,
+    pub measurements: Vec<VariantMeasurement>,
+}
+
+impl BucketReport {
+    pub fn get(&self, v: Variant) -> Option<&VariantMeasurement> {
+        self.measurements.iter().find(|m| m.variant == v)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::num(self.seq as f64)),
+            (
+                "measurements",
+                Json::Arr(
+                    self.measurements
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("variant", Json::str(m.variant.name())),
+                                ("mre", Json::num(m.mre)),
+                                ("ns_per_call", Json::num(m.ns_per_call)),
+                                ("tokens_per_sec", Json::num(m.tokens_per_sec)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<BucketReport, String> {
+        let measurements = j
+            .at("measurements")
+            .as_arr()
+            .ok_or("report missing measurements")?
+            .iter()
+            .map(|m| {
+                Ok(VariantMeasurement {
+                    variant: m
+                        .at("variant")
+                        .as_str()
+                        .and_then(Variant::parse)
+                        .ok_or("bad variant in report")?,
+                    mre: m.at("mre").as_f64().ok_or("report missing mre")?,
+                    ns_per_call: m
+                        .at("ns_per_call")
+                        .as_f64()
+                        .ok_or("report missing ns_per_call")?,
+                    tokens_per_sec: m
+                        .at("tokens_per_sec")
+                        .as_f64()
+                        .ok_or("report missing tokens_per_sec")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(BucketReport {
+            seq: j.at("seq").as_usize().ok_or("report missing seq")?,
+            measurements,
+        })
+    }
+}
+
+/// Autotuned per-bucket variant preferences for one accuracy class each.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TableBucket {
+    pub seq: usize,
+    pub fast: Vec<Variant>,
+    pub balanced: Vec<Variant>,
+    pub exact: Vec<Variant>,
+}
+
+/// The measured replacement for the static precision policy.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VariantTable {
+    /// Sorted by seq ascending.
+    pub buckets: Vec<TableBucket>,
+}
+
+impl VariantTable {
+    /// Variant preference chain for a request: the tightest measured
+    /// bucket with `bucket.seq >= seq`. Requests longer than every
+    /// measured bucket get `None` — integer-variant MRE grows with seq,
+    /// so thresholds validated at the largest bucket must not be
+    /// extrapolated; callers fall back to the static policy instead.
+    pub fn chain(&self, acc: AccuracyClass, seq: usize) -> Option<&[Variant]> {
+        let bucket = self.buckets.iter().find(|b| b.seq >= seq)?;
+        let chain = match acc {
+            AccuracyClass::Fast => &bucket.fast,
+            AccuracyClass::Balanced => &bucket.balanced,
+            AccuracyClass::Exact => &bucket.exact,
+        };
+        if chain.is_empty() {
+            None
+        } else {
+            Some(chain)
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let variants = |vs: &[Variant]| {
+            Json::Arr(vs.iter().map(|v| Json::str(v.name())).collect())
+        };
+        Json::obj(vec![(
+            "buckets",
+            Json::Arr(
+                self.buckets
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("seq", Json::num(b.seq as f64)),
+                            ("fast", variants(&b.fast)),
+                            ("balanced", variants(&b.balanced)),
+                            ("exact", variants(&b.exact)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<VariantTable, String> {
+        let parse_chain = |j: &Json, key: &str| -> Result<Vec<Variant>, String> {
+            j.at(key)
+                .as_arr()
+                .ok_or_else(|| format!("table bucket missing {key}"))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .and_then(Variant::parse)
+                        .ok_or_else(|| format!("bad variant in {key}"))
+                })
+                .collect()
+        };
+        let mut buckets = j
+            .at("buckets")
+            .as_arr()
+            .ok_or("table missing buckets")?
+            .iter()
+            .map(|b| {
+                Ok(TableBucket {
+                    seq: b.at("seq").as_usize().ok_or("table bucket missing seq")?,
+                    fast: parse_chain(b, "fast")?,
+                    balanced: parse_chain(b, "balanced")?,
+                    exact: parse_chain(b, "exact")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        buckets.sort_by_key(|b| b.seq);
+        Ok(VariantTable { buckets })
+    }
+}
+
+/// Run one variant under the plan (integer variants honor the plan's
+/// V scale, smoothing and the given head's clips; float variants are
+/// plan-independent). This is the same dispatch
+/// `coordinator::engine::CalibratedNativeBackend` serves.
+fn run_variant(
+    plan: &CalibrationPlan,
+    variant: Variant,
+    head: Option<usize>,
+    q: &MatF32,
+    k: &MatF32,
+    v: &MatF32,
+    cfg: &AttnConfig,
+) -> MatF32 {
+    let run_int = |r: f32| match head {
+        Some(h) => plan.attention_int_for_head(h, q, k, v, cfg, r),
+        None => plan.attention_int(q, k, v, cfg, r),
+    };
+    match variant {
+        Variant::Int8 => run_int(INT8_R),
+        Variant::Int4 => run_int(INT4_R),
+        other => attention_f32(other, q, k, v, cfg),
+    }
+}
+
+/// Head configurations to measure. A plan with clips is measured at
+/// *every* calibrated head and admitted on the worst MRE, so the table's
+/// thresholds bound each served head's clipping error. One configuration
+/// suffices when the plan is clipless — or when Hadamard rotation will
+/// be taken (the rotate branch ignores clips, so all heads compute
+/// identically).
+fn candidate_heads(plan: &CalibrationPlan, head_dim: usize) -> Vec<Option<usize>> {
+    let rotated = plan.smoothing == Smoothing::Hadamard && head_dim.is_power_of_two();
+    let heads = plan.k_clip.len().max(plan.q_clip.len());
+    if heads == 0 || rotated {
+        vec![None]
+    } else {
+        (0..heads).map(Some).collect()
+    }
+}
+
+/// Measure every configured variant for one seq bucket.
+pub fn measure_bucket(
+    plan: &CalibrationPlan,
+    cfg: &AutotuneConfig,
+    seq: usize,
+) -> BucketReport {
+    let d = cfg.head_dim;
+    let attn = AttnConfig::new(d).causal(cfg.causal);
+    let samples = cfg.samples.max(1);
+    // deterministic workload per bucket: re-runs are comparable
+    let mut rng = Pcg64::new(seq as u64, 13);
+    let candidates = candidate_heads(plan, d);
+    let mut errs = vec![0.0f64; cfg.variants.len()];
+    let mut last: Option<(MatF32, MatF32, MatF32)> = None;
+    for _ in 0..samples {
+        let q = MatF32::random(seq, d, cfg.dist, &mut rng);
+        let k = MatF32::random(seq, d, cfg.dist, &mut rng);
+        let mut v = MatF32::random(seq, d, cfg.dist, &mut rng);
+        for x in &mut v.data {
+            *x *= cfg.v_sigma;
+        }
+        let gold = reference::standard_attention(&q, &k, &v, &attn);
+        for (i, &variant) in cfg.variants.iter().enumerate() {
+            let err = match variant {
+                // integer variants: worst MRE across calibrated heads
+                Variant::Int8 | Variant::Int4 => candidates
+                    .iter()
+                    .map(|&head| {
+                        let out = run_variant(plan, variant, head, &q, &k, &v, &attn);
+                        mre(&out.data, &gold.data)
+                    })
+                    .fold(0.0f64, f64::max),
+                _ => {
+                    let out = run_variant(plan, variant, None, &q, &k, &v, &attn);
+                    mre(&out.data, &gold.data)
+                }
+            };
+            errs[i] += err;
+        }
+        last = Some((q, k, v));
+    }
+    let (q, k, v) = last.expect("samples >= 1");
+    let measurements = cfg
+        .variants
+        .iter()
+        .zip(&errs)
+        .map(|(&variant, &err_sum)| {
+            let iters = cfg.timing_iters.max(1);
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(run_variant(plan, variant, candidates[0], &q, &k, &v, &attn));
+            }
+            let ns_per_call = t0.elapsed().as_nanos() as f64 / iters as f64;
+            VariantMeasurement {
+                variant,
+                mre: err_sum / samples as f64,
+                ns_per_call,
+                tokens_per_sec: seq as f64 * 1e9 / ns_per_call.max(1.0),
+            }
+        })
+        .collect();
+    BucketReport { seq, measurements }
+}
+
+/// Threshold-filter + fastest-first ordering → the per-class chains.
+pub fn build_table(reports: &[BucketReport], cfg: &AutotuneConfig) -> VariantTable {
+    let chain_for = |rep: &BucketReport, threshold: f64| -> Vec<Variant> {
+        let mut admitted: Vec<&VariantMeasurement> = rep
+            .measurements
+            .iter()
+            .filter(|m| m.mre <= threshold)
+            .collect();
+        admitted.sort_by(|a, b| {
+            a.ns_per_call
+                .partial_cmp(&b.ns_per_call)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut chain: Vec<Variant> = admitted.iter().map(|m| m.variant).collect();
+        // exact fallback is always routable
+        if !chain.contains(&Variant::Fp16) {
+            chain.push(Variant::Fp16);
+        }
+        chain
+    };
+    let mut buckets: Vec<TableBucket> = reports
+        .iter()
+        .map(|rep| TableBucket {
+            seq: rep.seq,
+            fast: chain_for(rep, cfg.fast_mre),
+            balanced: chain_for(rep, cfg.balanced_mre),
+            exact: chain_for(rep, cfg.exact_mre),
+        })
+        .collect();
+    buckets.sort_by_key(|b| b.seq);
+    VariantTable { buckets }
+}
+
+/// Full autotune pass: measure every bucket, build the selection table.
+/// Buckets are measured in ascending seq order regardless of the input
+/// order, so `reports` and `table.buckets` always align index-for-index.
+pub fn autotune(
+    plan: &CalibrationPlan,
+    cfg: &AutotuneConfig,
+) -> (Vec<BucketReport>, VariantTable) {
+    let mut seqs = cfg.seqs.clone();
+    seqs.sort_unstable();
+    seqs.dedup();
+    let reports: Vec<BucketReport> = seqs
+        .iter()
+        .map(|&seq| measure_bucket(plan, cfg, seq))
+        .collect();
+    let table = build_table(&reports, cfg);
+    (reports, table)
+}
+
+/// JSON array helpers shared with the artifact codec.
+pub(super) fn reports_to_json(reports: &[BucketReport]) -> Json {
+    Json::Arr(reports.iter().map(|r| r.to_json()).collect())
+}
+
+pub(super) fn reports_from_json(j: &Json) -> Result<Vec<BucketReport>, String> {
+    j.as_arr()
+        .ok_or("reports must be an array")?
+        .iter()
+        .map(BucketReport::from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn tiny_cfg() -> AutotuneConfig {
+        AutotuneConfig {
+            seqs: vec![16, 32],
+            head_dim: 16,
+            samples: 1,
+            timing_iters: 1,
+            ..AutotuneConfig::default()
+        }
+    }
+
+    fn plan() -> CalibrationPlan {
+        CalibrationPlan::uncalibrated(INT8_R)
+    }
+
+    #[test]
+    fn reports_cover_buckets_and_variants() {
+        let cfg = tiny_cfg();
+        let (reports, _) = autotune(&plan(), &cfg);
+        assert_eq!(reports.len(), 2);
+        for (rep, want_seq) in reports.iter().zip([16usize, 32]) {
+            assert_eq!(rep.seq, want_seq);
+            assert_eq!(rep.measurements.len(), Variant::ALL.len());
+            for m in &rep.measurements {
+                assert!(m.mre.is_finite(), "{:?} mre {}", m.variant, m.mre);
+                assert!(m.ns_per_call > 0.0);
+                assert!(m.tokens_per_sec > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_ordering_matches_paper() {
+        // fp16 ≈ exact; int8 beats int4 by a wide margin
+        let cfg = tiny_cfg();
+        let rep = measure_bucket(&plan(), &cfg, 32);
+        let fp16 = rep.get(Variant::Fp16).unwrap().mre;
+        let int8 = rep.get(Variant::Int8).unwrap().mre;
+        let int4 = rep.get(Variant::Int4).unwrap().mre;
+        assert!(fp16 < 1e-4, "fp16 mre {fp16}");
+        assert!(int8 < 0.08, "int8 mre {int8}");
+        assert!(int4 > int8, "int4 {int4} should be coarser than int8 {int8}");
+    }
+
+    #[test]
+    fn table_respects_thresholds() {
+        let cfg = tiny_cfg();
+        let (reports, table) = autotune(&plan(), &cfg);
+        assert_eq!(table.buckets.len(), 2);
+        for (bucket, rep) in table.buckets.iter().zip(&reports) {
+            for &v in &bucket.fast {
+                if v != Variant::Fp16 {
+                    assert!(rep.get(v).unwrap().mre <= cfg.fast_mre);
+                }
+            }
+            for &v in &bucket.balanced {
+                if v != Variant::Fp16 {
+                    assert!(rep.get(v).unwrap().mre <= cfg.balanced_mre);
+                }
+            }
+            // the exact fallback is present in every chain
+            assert!(bucket.fast.contains(&Variant::Fp16));
+            assert!(bucket.balanced.contains(&Variant::Fp16));
+            assert!(bucket.exact.contains(&Variant::Fp16));
+            // int4's MRE keeps it out of every class at these thresholds
+            assert!(!bucket.fast.contains(&Variant::Int4));
+        }
+    }
+
+    #[test]
+    fn chain_lookup_picks_bucket() {
+        let mk = |seq: usize| TableBucket {
+            seq,
+            fast: vec![Variant::Int8, Variant::Fp16],
+            balanced: vec![Variant::HalfInt8, Variant::Fp16],
+            exact: vec![Variant::Fp16],
+        };
+        let table = VariantTable { buckets: vec![mk(128), mk(512)] };
+        // tightest bucket ≥ seq
+        assert_eq!(
+            table.chain(AccuracyClass::Fast, 100).unwrap()[0],
+            Variant::Int8
+        );
+        assert_eq!(table.chain(AccuracyClass::Fast, 300).unwrap()[0], Variant::Int8);
+        assert_eq!(table.chain(AccuracyClass::Exact, 100).unwrap().len(), 1);
+        // longer than every measured bucket → no measured chain (callers
+        // fall back to the static policy; thresholds don't extrapolate)
+        assert!(table.chain(AccuracyClass::Fast, 4096).is_none());
+        // empty table → no chain
+        assert!(VariantTable::default().chain(AccuracyClass::Fast, 1).is_none());
+    }
+
+    #[test]
+    fn table_json_round_trip() {
+        let cfg = tiny_cfg();
+        let (reports, table) = autotune(&plan(), &cfg);
+        let restored = VariantTable::from_json(&parse(&table.to_json().to_pretty()).unwrap());
+        assert_eq!(restored.unwrap(), table);
+        let rj = reports_to_json(&reports);
+        let restored = reports_from_json(&parse(&rj.to_pretty()).unwrap()).unwrap();
+        assert_eq!(restored, reports);
+    }
+
+    #[test]
+    fn mre_is_deterministic_across_runs() {
+        let cfg = tiny_cfg();
+        let a = measure_bucket(&plan(), &cfg, 32);
+        let b = measure_bucket(&plan(), &cfg, 32);
+        for (ma, mb) in a.measurements.iter().zip(&b.measurements) {
+            assert_eq!(ma.variant, mb.variant);
+            assert_eq!(ma.mre, mb.mre, "{:?}", ma.variant);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Post-training calibration & precision autotuning.
+//!
+//! The paper frames INT-FlashAttention as "a general token-level
+//! post-training quantization framework" — this module is the
+//! post-training part for the serving stack. Token-level Q/K scales are
+//! runtime values and need no calibration (§3.2), but three things do:
+//!
+//!   1. the tensor-level V scale S_V, which the paper fixes "after
+//!      training" — [`stats`] measures it from live traffic instead of
+//!      the N(0,1) guess the KV cache used to hard-code;
+//!   2. outlier handling — per-head percentile clip ranges and the
+//!      Hadamard-smoothing decision (SageAttention-style), derived by
+//!      [`plan`] from the measured outlier spread;
+//!   3. the precision policy — [`autotune`] measures MRE and throughput
+//!      per (seq bucket × variant) and emits the variant-selection table
+//!      the router consumes in place of the static accuracy-class chain.
+//!
+//! [`artifact`] persists the result next to the AOT artifacts (an
+//! optional `"calibration"` entry in `manifest.json`), so a serving
+//! process boots from measured, per-deployment scales:
+//!
+//! ```text
+//!   traffic → CalibStats → PlanBuilder → CalibrationPlan
+//!                                           │ autotune
+//!                                           ▼
+//!            CalibrationArtifact { plan, VariantTable, reports }
+//!               │ save / load (runtime::Manifest "calibration")
+//!               ▼
+//!   Engine::with_calibration → BucketRouter policy + kvcache scales
+//! ```
+//!
+//! End-to-end demo: `cargo run --release --example calibrate_and_serve`.
+
+pub mod artifact;
+pub mod autotune;
+pub mod plan;
+pub mod stats;
+
+pub use artifact::CalibrationArtifact;
+pub use autotune::{AutotuneConfig, BucketReport, VariantMeasurement, VariantTable};
+pub use plan::{CalibrationPlan, PlanBuilder, ScaleMethod, Smoothing};
+pub use stats::{CalibStats, StreamStats};

@@ -1,0 +1,473 @@
+//! Streaming activation-statistics collectors.
+//!
+//! Calibration never holds activations: every collector is O(1) memory
+//! and one pass. [`StreamStats`] accumulates, per tensor (or per head):
+//!   - running `absmax` — the classic PTQ scale numerator,
+//!   - a log₂-spaced histogram of |x| — approximate percentiles for
+//!     outlier-robust clipping (the `jnp.quantile` trick from
+//!     `python/compile/calibration.py`, made streaming),
+//!   - an EMA of per-row absmax — drift-tolerant scale estimation,
+//!   - sum of squares and the per-row outlier spread
+//!     (rowmax/rowrms, the quantity Hadamard smoothing flattens —
+//!     definition matches `quant::hadamard::outlier_spread`).
+//!
+//! [`CalibStats`] groups collectors the way the attention operands need
+//! them: per-head Q and K (token-level quantization → per-head clip
+//! ranges) and tensor-level V (one scale, paper §3.2).
+
+/// 1/16-octave bins over 2^-64 .. 2^64 — ≤ 4.4 % relative quantile error.
+const BINS: usize = 2048;
+const BINS_PER_OCTAVE: f32 = 16.0;
+const MIN_EXP: f32 = -64.0;
+
+fn bin_index(x: f32) -> usize {
+    // x is |value|; zeros land in the lowest bin
+    let e = x.log2().clamp(MIN_EXP, -MIN_EXP - 1.0 / BINS_PER_OCTAVE);
+    (((e - MIN_EXP) * BINS_PER_OCTAVE) as usize).min(BINS - 1)
+}
+
+fn bin_upper_edge(i: usize) -> f32 {
+    2.0f32.powf((i + 1) as f32 / BINS_PER_OCTAVE + MIN_EXP)
+}
+
+/// One streaming collector over rows of activations.
+#[derive(Clone)]
+pub struct StreamStats {
+    rows: u64,
+    vals: u64,
+    absmax: f32,
+    sumsq: f64,
+    spread_sum: f64,
+    ema: f64,
+    ema_alpha: f64,
+    hist: Vec<u64>,
+}
+
+impl Default for StreamStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamStats {
+    pub fn new() -> StreamStats {
+        Self::with_ema(0.01)
+    }
+
+    /// `ema_alpha` is the per-row EMA weight of the absmax tracker.
+    pub fn with_ema(ema_alpha: f64) -> StreamStats {
+        StreamStats {
+            rows: 0,
+            vals: 0,
+            absmax: 0.0,
+            sumsq: 0.0,
+            spread_sum: 0.0,
+            ema: 0.0,
+            ema_alpha,
+            hist: vec![0; BINS],
+        }
+    }
+
+    /// Fold in one activation row (one token of one head, length d).
+    pub fn record_row(&mut self, row: &[f32]) {
+        if row.is_empty() {
+            return;
+        }
+        let mut rowmax = 0.0f32;
+        let mut rowsq = 0.0f64;
+        for &x in row {
+            let a = x.abs();
+            rowmax = rowmax.max(a);
+            rowsq += (x as f64) * (x as f64);
+            self.hist[bin_index(a)] += 1;
+        }
+        self.absmax = self.absmax.max(rowmax);
+        self.sumsq += rowsq;
+        let rms = (rowsq / row.len() as f64).sqrt();
+        if rms > 0.0 {
+            self.spread_sum += rowmax as f64 / rms;
+        }
+        self.ema = if self.rows == 0 {
+            rowmax as f64
+        } else {
+            self.ema * (1.0 - self.ema_alpha) + rowmax as f64 * self.ema_alpha
+        };
+        self.rows += 1;
+        self.vals += row.len() as u64;
+    }
+
+    /// Fold in a flat buffer of `len/row_len` rows. The buffer must be an
+    /// exact multiple of `row_len` — a silently dropped tail could hide
+    /// the very outlier the calibration exists to measure.
+    pub fn record_flat(&mut self, data: &[f32], row_len: usize) {
+        assert!(row_len > 0, "row_len must be positive");
+        assert!(
+            data.len() % row_len == 0,
+            "buffer of {} values is not a multiple of row_len {row_len}",
+            data.len()
+        );
+        for row in data.chunks_exact(row_len) {
+            self.record_row(row);
+        }
+    }
+
+    /// Combine another collector into this one (sharded calibration).
+    pub fn merge(&mut self, other: &StreamStats) {
+        let total = self.rows + other.rows;
+        if total > 0 {
+            self.ema = (self.ema * self.rows as f64 + other.ema * other.rows as f64)
+                / total as f64;
+        }
+        self.rows = total;
+        self.vals += other.vals;
+        self.absmax = self.absmax.max(other.absmax);
+        self.sumsq += other.sumsq;
+        self.spread_sum += other.spread_sum;
+        for (a, b) in self.hist.iter_mut().zip(&other.hist) {
+            *a += b;
+        }
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    pub fn values(&self) -> u64 {
+        self.vals
+    }
+
+    /// Hard max(|x|) over everything seen.
+    pub fn absmax(&self) -> f32 {
+        self.absmax
+    }
+
+    /// Root-mean-square over everything seen.
+    pub fn rms(&self) -> f32 {
+        if self.vals == 0 {
+            0.0
+        } else {
+            (self.sumsq / self.vals as f64).sqrt() as f32
+        }
+    }
+
+    /// Mean per-row outlier spread (rowmax/rowrms), matching
+    /// [`crate::quant::hadamard::outlier_spread`].
+    pub fn spread(&self) -> f32 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            (self.spread_sum / self.rows as f64) as f32
+        }
+    }
+
+    /// EMA of per-row absmax (drift-tolerant scale estimate).
+    pub fn ema_absmax(&self) -> f32 {
+        self.ema as f32
+    }
+
+    /// Approximate q-quantile of |x| (upper bin edge, ≤ 4.4 % high),
+    /// clamped to the observed absmax. `q >= 1` returns the absmax.
+    pub fn quantile(&self, q: f64) -> f32 {
+        if self.vals == 0 {
+            return 0.0;
+        }
+        if q >= 1.0 {
+            return self.absmax;
+        }
+        let target = ((q.max(0.0) * self.vals as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &count) in self.hist.iter().enumerate() {
+            cum += count;
+            if cum >= target {
+                return bin_upper_edge(i).min(self.absmax);
+            }
+        }
+        self.absmax
+    }
+}
+
+impl std::fmt::Debug for StreamStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamStats")
+            .field("rows", &self.rows)
+            .field("vals", &self.vals)
+            .field("absmax", &self.absmax)
+            .field("rms", &self.rms())
+            .field("spread", &self.spread())
+            .field("ema", &self.ema)
+            .finish()
+    }
+}
+
+/// Per-operand calibration statistics for one attention layer:
+/// per-head Q/K collectors plus a tensor-level V collector.
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    pub heads: usize,
+    pub head_dim: usize,
+    pub q: Vec<StreamStats>,
+    pub k: Vec<StreamStats>,
+    pub v: StreamStats,
+    batches: u64,
+}
+
+impl CalibStats {
+    pub fn new(heads: usize, head_dim: usize) -> CalibStats {
+        assert!(heads > 0 && head_dim > 0, "empty calibration geometry");
+        CalibStats {
+            heads,
+            head_dim,
+            q: vec![StreamStats::new(); heads],
+            k: vec![StreamStats::new(); heads],
+            v: StreamStats::new(),
+            batches: 0,
+        }
+    }
+
+    /// Number of record calls folded in (prefill batches + decode tokens).
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Fold in one prefill request's activations, flat `(heads, seq, d)`
+    /// f32 — the [`crate::coordinator::RequestPayload`] layout.
+    pub fn record_qkv(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        seq: usize,
+    ) -> Result<(), String> {
+        let expect = self.heads * seq * self.head_dim;
+        for (name, buf) in [("q", q), ("k", k), ("v", v)] {
+            if buf.len() != expect {
+                return Err(format!(
+                    "{name} has {} elems, expected {expect} (heads={} seq={seq} d={})",
+                    buf.len(),
+                    self.heads,
+                    self.head_dim
+                ));
+            }
+        }
+        let (d, span) = (self.head_dim, seq * self.head_dim);
+        for h in 0..self.heads {
+            self.q[h].record_flat(&q[h * span..(h + 1) * span], d);
+            self.k[h].record_flat(&k[h * span..(h + 1) * span], d);
+            self.v.record_flat(&v[h * span..(h + 1) * span], d);
+        }
+        self.batches += 1;
+        Ok(())
+    }
+
+    /// Fold in one decode-path token, flat `(heads, d)` K/V — the
+    /// [`crate::coordinator::kvcache::KvCachePool::append`] layout.
+    pub fn record_kv_token(&mut self, k: &[f32], v: &[f32]) -> Result<(), String> {
+        let expect = self.heads * self.head_dim;
+        for (name, buf) in [("k", k), ("v", v)] {
+            if buf.len() != expect {
+                return Err(format!("{name} has {} elems, expected {expect}", buf.len()));
+            }
+        }
+        let d = self.head_dim;
+        for h in 0..self.heads {
+            self.k[h].record_row(&k[h * d..(h + 1) * d]);
+            self.v.record_row(&v[h * d..(h + 1) * d]);
+        }
+        self.batches += 1;
+        Ok(())
+    }
+
+    /// Mean outlier spread across the Q and K heads (the Hadamard
+    /// auto-enable signal in [`super::plan::PlanBuilder`]).
+    pub fn qk_spread(&self) -> f32 {
+        let n = (self.q.len() + self.k.len()) as f32;
+        let total: f32 = self.q.iter().chain(&self.k).map(|s| s.spread()).sum();
+        if n == 0.0 {
+            0.0
+        } else {
+            total / n
+        }
+    }
+
+    /// Merge a sharded collector (same geometry) into this one.
+    pub fn merge(&mut self, other: &CalibStats) -> Result<(), String> {
+        if self.heads != other.heads || self.head_dim != other.head_dim {
+            return Err(format!(
+                "geometry mismatch: {}x{} vs {}x{}",
+                self.heads, self.head_dim, other.heads, other.head_dim
+            ));
+        }
+        for (a, b) in self.q.iter_mut().zip(&other.q) {
+            a.merge(b);
+        }
+        for (a, b) in self.k.iter_mut().zip(&other.k) {
+            a.merge(b);
+        }
+        self.v.merge(&other.v);
+        self.batches += other.batches;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::hadamard::outlier_spread;
+    use crate::tensor::MatF32;
+    use crate::util::rng::{Dist, Pcg64};
+
+    fn randmat(seed: u64, rows: usize, cols: usize, dist: Dist) -> MatF32 {
+        let mut rng = Pcg64::seeded(seed);
+        MatF32::random(rows, cols, dist, &mut rng)
+    }
+
+    #[test]
+    fn absmax_matches_batch_computation() {
+        let m = randmat(1, 64, 32, Dist::Normal);
+        let mut s = StreamStats::new();
+        s.record_flat(&m.data, 32);
+        let direct = m.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        assert_eq!(s.absmax(), direct);
+        assert_eq!(s.rows(), 64);
+        assert_eq!(s.values(), 64 * 32);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let m = randmat(2, 48, 16, Dist::Normal);
+        let mut one = StreamStats::new();
+        one.record_flat(&m.data, 16);
+        let mut chunked = StreamStats::new();
+        for r in 0..48 {
+            chunked.record_row(m.row(r));
+        }
+        assert_eq!(one.absmax(), chunked.absmax());
+        assert_eq!(one.rows(), chunked.rows());
+        assert!((one.rms() - chunked.rms()).abs() < 1e-6);
+        assert!((one.quantile(0.99) - chunked.quantile(0.99)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let a = randmat(3, 32, 8, Dist::Normal);
+        let b = randmat(4, 32, 8, Dist::Uniform);
+        let mut whole = StreamStats::new();
+        whole.record_flat(&a.data, 8);
+        whole.record_flat(&b.data, 8);
+        let mut left = StreamStats::new();
+        left.record_flat(&a.data, 8);
+        let mut right = StreamStats::new();
+        right.record_flat(&b.data, 8);
+        left.merge(&right);
+        assert_eq!(left.absmax(), whole.absmax());
+        assert_eq!(left.rows(), whole.rows());
+        assert!((left.rms() - whole.rms()).abs() < 1e-6);
+        assert!((left.quantile(0.9) - whole.quantile(0.9)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantile_brackets_absmax() {
+        let m = randmat(5, 128, 32, Dist::Normal);
+        let mut s = StreamStats::new();
+        s.record_flat(&m.data, 32);
+        // q=1 is exactly the absmax; p999 is below it but above the median
+        assert_eq!(s.quantile(1.0), s.absmax());
+        let p999 = s.quantile(0.999);
+        let p50 = s.quantile(0.5);
+        assert!(p999 <= s.absmax());
+        assert!(p50 < p999, "p50 {p50} p999 {p999}");
+        // log-binned estimate of N(0,1) median |x| (~0.674) within bin error
+        assert!((0.5..0.9).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn percentile_is_outlier_robust() {
+        // one huge outlier row (16 of 4112 values) moves absmax but not p99
+        let m = randmat(6, 256, 16, Dist::Normal);
+        let mut s = StreamStats::new();
+        s.record_flat(&m.data, 16);
+        let p99_before = s.quantile(0.99);
+        s.record_row(&[1e6; 16]);
+        assert!(s.absmax() >= 1e6);
+        assert!(s.quantile(0.99) < p99_before * 2.0 + 1.0);
+    }
+
+    #[test]
+    fn spread_matches_hadamard_definition() {
+        let m = randmat(7, 64, 64, Dist::Normal);
+        let mut s = StreamStats::new();
+        s.record_flat(&m.data, 64);
+        let want = outlier_spread(&m);
+        assert!((s.spread() - want).abs() < 1e-4, "{} vs {want}", s.spread());
+    }
+
+    #[test]
+    fn ema_tracks_rowmax_level() {
+        let mut s = StreamStats::with_ema(0.2);
+        let mut rng = Pcg64::seeded(8);
+        for _ in 0..200 {
+            s.record_row(&rng.normal_vec(32));
+        }
+        // EMA of N(0,1) rowmax over d=32 sits near E[max|x|] ≈ 2.2
+        let ema = s.ema_absmax();
+        assert!((1.5..3.5).contains(&ema), "ema {ema}");
+        assert!(ema < s.absmax());
+    }
+
+    #[test]
+    fn zero_and_empty_rows_are_safe() {
+        let mut s = StreamStats::new();
+        s.record_row(&[]);
+        assert_eq!(s.rows(), 0);
+        s.record_row(&[0.0; 8]);
+        assert_eq!(s.rows(), 1);
+        assert_eq!(s.absmax(), 0.0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.rms(), 0.0);
+    }
+
+    #[test]
+    fn calib_stats_layout_and_validation() {
+        let (h, d, n) = (2usize, 8usize, 4usize);
+        let mut cs = CalibStats::new(h, d);
+        let mut rng = Pcg64::seeded(9);
+        let q = rng.normal_vec(h * n * d);
+        let k = rng.normal_vec(h * n * d);
+        let v = rng.normal_vec(h * n * d);
+        cs.record_qkv(&q, &k, &v, n).unwrap();
+        assert_eq!(cs.batches(), 1);
+        assert_eq!(cs.q[0].rows(), n as u64);
+        assert_eq!(cs.v.rows(), (h * n) as u64);
+        // per-head slicing: head 1's K absmax comes from the second span
+        let span = n * d;
+        let direct = k[span..].iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        assert_eq!(cs.k[1].absmax(), direct);
+        // shape errors are reported, not panicked
+        assert!(cs.record_qkv(&q[1..], &k, &v, n).is_err());
+        assert!(cs.record_kv_token(&q[..h * d], &v[..h * d - 1]).is_err());
+        cs.record_kv_token(&k[..h * d], &v[..h * d]).unwrap();
+        assert_eq!(cs.batches(), 2);
+    }
+
+    #[test]
+    fn calib_stats_merge() {
+        let (h, d, n) = (2usize, 8usize, 16usize);
+        let mut rng = Pcg64::seeded(10);
+        let q = rng.normal_vec(h * n * d);
+        let k = rng.normal_vec(h * n * d);
+        let v = rng.normal_vec(h * n * d);
+        let mut whole = CalibStats::new(h, d);
+        whole.record_qkv(&q, &k, &v, n).unwrap();
+        whole.record_qkv(&v, &q, &k, n).unwrap();
+        let mut a = CalibStats::new(h, d);
+        a.record_qkv(&q, &k, &v, n).unwrap();
+        let mut b = CalibStats::new(h, d);
+        b.record_qkv(&v, &q, &k, n).unwrap();
+        a.merge(&b).unwrap();
+        assert_eq!(a.batches(), whole.batches());
+        assert_eq!(a.v.absmax(), whole.v.absmax());
+        assert_eq!(a.k[1].absmax(), whole.k[1].absmax());
+        let mismatched = CalibStats::new(h + 1, d);
+        assert!(a.merge(&mismatched).is_err());
+    }
+}

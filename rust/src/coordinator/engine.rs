@@ -9,7 +9,9 @@ use super::batcher::{BatchPolicy, DynamicBatcher, ReadyBatch};
 use super::metrics::Registry;
 use super::request::{AccuracyClass, Request, RequestPayload, Response};
 use super::router::{Bucket, BucketRouter};
-use crate::attention::{multihead, AttnConfig};
+use crate::attention::{multihead, AttnConfig, Variant};
+use crate::calib::{CalibrationArtifact, CalibrationPlan};
+use crate::quant::{INT4_R, INT8_R};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -22,10 +24,22 @@ pub trait Backend: Send + Sync + 'static {
         -> Result<Vec<f32>, String>;
 
     fn name(&self) -> &'static str;
+
+    /// The calibration plan this backend's kernels execute under, if
+    /// any. [`Engine::with_calibration`] installs an artifact's variant
+    /// table as the routing policy only when the backend's plan equals
+    /// the artifact's — measured accuracy admissions must not govern
+    /// kernels that were never measured (including kernels running a
+    /// *different* plan).
+    fn plan(&self) -> Option<&crate::calib::CalibrationPlan> {
+        None
+    }
 }
 
 /// Backend running the rust-native attention kernels (no artifacts
 /// needed — used by unit tests, benches and the `--backend native` mode).
+/// Quantization scales are live per-call values — the *uncalibrated*
+/// native path; see [`CalibratedNativeBackend`] for the plan-driven one.
 pub struct NativeBackend {
     /// threads per batch execution (heads fan-out)
     pub threads: usize,
@@ -50,6 +64,66 @@ impl Backend for NativeBackend {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+/// Native backend whose integer variants run the plan-quantized kernels
+/// (the plan's V scale + smoothing) — exactly the path
+/// `calib::autotune` measured when it admitted variants into the
+/// selection table. Pair this with [`Engine::with_calibration`] so the
+/// table's accuracy guarantees hold for served traffic; float variants
+/// are plan-independent and identical to [`NativeBackend`].
+pub struct CalibratedNativeBackend {
+    /// threads per batch execution (heads fan-out)
+    pub threads: usize,
+    pub plan: CalibrationPlan,
+}
+
+impl Backend for CalibratedNativeBackend {
+    fn execute(
+        &self,
+        bucket: &Bucket,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        let (b, h, n, d) = (bucket.batch, bucket.heads, bucket.seq, bucket.head_dim);
+        // same fail-fast policy as CacheConfig::calibrated: a plan
+        // calibrated for a different head count must not be half-applied
+        for (name, clips) in [("K", &self.plan.k_clip), ("Q", &self.plan.q_clip)] {
+            if !clips.is_empty() && clips.len() != h {
+                return Err(format!(
+                    "calibration plan has {} {name} clips but bucket has {h} heads",
+                    clips.len()
+                ));
+            }
+        }
+        let qb = multihead::HeadBatch::from_flat(b, h, n, d, q);
+        let kb = multihead::HeadBatch::from_flat(b, h, n, d, k);
+        let vb = multihead::HeadBatch::from_flat(b, h, n, d, v);
+        let cfg = AttnConfig::new(d).causal(bucket.causal);
+        let out = match bucket.variant {
+            Variant::Int8 | Variant::Int4 => {
+                let r = if bucket.variant == Variant::Int8 { INT8_R } else { INT4_R };
+                multihead::attention_multihead_with(
+                    |i, qm, km, vm| self.plan.attention_int_for_head(i % h, qm, km, vm, &cfg, r),
+                    &qb,
+                    &kb,
+                    &vb,
+                    self.threads,
+                )
+            }
+            _ => multihead::attention_multihead(bucket.variant, &qb, &kb, &vb, &cfg, self.threads),
+        };
+        Ok(out.to_flat())
+    }
+
+    fn name(&self) -> &'static str {
+        "native-calibrated"
+    }
+
+    fn plan(&self) -> Option<&CalibrationPlan> {
+        Some(&self.plan)
     }
 }
 
@@ -186,15 +260,46 @@ pub struct Engine {
     tx: Sender<SchedMsg>,
     gate: Arc<Gate>,
     router: Arc<BucketRouter>,
+    calibration: Option<CalibrationArtifact>,
     pub metrics: Arc<Registry>,
     next_id: std::sync::atomic::AtomicU64,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Engine {
-    /// Build an engine over a routing table and a backend.
+    /// Build an engine over a routing table and a backend, using the
+    /// static precision policy and uncalibrated scales.
     pub fn new(router: BucketRouter, backend: Arc<dyn Backend>, cfg: EngineConfig) -> Engine {
+        Self::with_calibration(router, backend, cfg, None)
+    }
+
+    /// Build an engine from a calibration artifact. The artifact's
+    /// autotuned [`crate::calib::VariantTable`] becomes the router's
+    /// precision policy — but only when [`Backend::plan`] reports the
+    /// *same* plan the artifact carries (the backend serves the kernels
+    /// the table was measured on); otherwise the static chain stays and
+    /// only the plan/scales are exposed via [`Engine::calibration`] for
+    /// cache construction.
+    pub fn with_calibration(
+        router: BucketRouter,
+        backend: Arc<dyn Backend>,
+        cfg: EngineConfig,
+        calibration: Option<CalibrationArtifact>,
+    ) -> Engine {
+        let router = match &calibration {
+            Some(artifact) if backend.plan() == Some(&artifact.plan) => {
+                router.with_policy(artifact.table.clone())
+            }
+            _ => router,
+        };
         let metrics = Arc::new(Registry::default());
+        metrics
+            .gauge("calib.loaded")
+            .set(calibration.is_some() as i64);
+        // read back from the router: an empty table is discarded there
+        metrics
+            .gauge("calib.policy")
+            .set(router.policy().is_some() as i64);
         let gate = Gate::new(cfg.max_queue, cfg.max_tokens);
         let router = Arc::new(router);
         let (tx, rx) = mpsc::channel::<SchedMsg>();
@@ -234,6 +339,7 @@ impl Engine {
             tx,
             gate,
             router,
+            calibration,
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
             threads,
@@ -242,6 +348,11 @@ impl Engine {
 
     pub fn router(&self) -> &BucketRouter {
         &self.router
+    }
+
+    /// The calibration artifact this engine was booted from, if any.
+    pub fn calibration(&self) -> Option<&CalibrationArtifact> {
+        self.calibration.as_ref()
     }
 
     /// Submit a request; returns (id, receiver for the response).
@@ -683,6 +794,57 @@ mod tests {
         };
         let resp = rx.recv().expect("drained on shutdown");
         assert!(resp.result.is_ok());
+    }
+
+    #[test]
+    fn calibration_artifact_installs_policy() {
+        use crate::calib::autotune::{TableBucket, VariantTable};
+        use crate::calib::{CalibrationArtifact, CalibrationPlan};
+        // measured table: Fast should run half_int8 at these seqs
+        let artifact = CalibrationArtifact {
+            plan: CalibrationPlan::uncalibrated(crate::quant::INT8_R),
+            table: VariantTable {
+                buckets: vec![TableBucket {
+                    seq: 64,
+                    fast: vec![Variant::HalfInt8, Variant::Fp16],
+                    balanced: vec![Variant::HalfInt8, Variant::Fp16],
+                    exact: vec![Variant::Fp16],
+                }],
+            },
+            reports: Vec::new(),
+        };
+        let e = Engine::with_calibration(
+            native_router(),
+            Arc::new(CalibratedNativeBackend {
+                threads: 1,
+                plan: artifact.plan.clone(),
+            }),
+            EngineConfig { policy: BatchPolicy::Eager, ..EngineConfig::default() },
+            Some(artifact.clone()),
+        );
+        assert!(e.calibration().is_some());
+        assert!(e.router().policy().is_some());
+        let mut rng = Pcg64::seeded(8);
+        let resp = e.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, 20, 16));
+        assert!(resp.result.is_ok());
+        assert_eq!(resp.variant, Some(Variant::HalfInt8));
+        assert_eq!(e.metrics.gauge("calib.loaded").get(), 1);
+        assert_eq!(e.metrics.gauge("calib.policy").get(), 1);
+
+        // a plan-UNaware backend must not inherit the measured policy:
+        // the table's admissions were never validated on its kernels
+        let e = Engine::with_calibration(
+            native_router(),
+            Arc::new(NativeBackend { threads: 1 }),
+            EngineConfig { policy: BatchPolicy::Eager, ..EngineConfig::default() },
+            Some(artifact),
+        );
+        assert!(e.calibration().is_some());
+        assert!(e.router().policy().is_none());
+        assert_eq!(e.metrics.gauge("calib.policy").get(), 0);
+        let resp = e.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, 20, 16));
+        // static Fast chain → int8
+        assert_eq!(resp.variant, Some(Variant::Int8));
     }
 
     #[test]

@@ -11,11 +11,17 @@
 //! l carries R) block by block over the cached codes — a single-query
 //! specialization of Algorithm 1.
 
+use crate::calib::plan::CalibrationPlan;
 use crate::quant::{self, SCALE_EPS};
 use std::collections::HashMap;
 
-/// Cache geometry.
-#[derive(Clone, Copy, Debug)]
+/// Cache geometry + quantization scales.
+///
+/// The scales come from a [`CalibrationPlan`]: [`CacheConfig::new`] uses
+/// the documented uncalibrated fallback (N(0,1) absmax guess — serving
+/// works but scales are guesses), [`CacheConfig::calibrated`] uses
+/// measured traffic statistics.
+#[derive(Clone, Debug)]
 pub struct CacheConfig {
     pub heads: usize,
     pub head_dim: usize,
@@ -27,17 +33,48 @@ pub struct CacheConfig {
     pub v_scale: f32,
     /// quantization range (127 INT8, 7 INT4)
     pub r: f32,
+    /// per-head clip on the token-level K rowmax (empty → live rowmax)
+    pub k_clip: Vec<f32>,
 }
 
 impl CacheConfig {
+    /// Uncalibrated fallback: scales from
+    /// [`CalibrationPlan::uncalibrated`] (the N(0,1) absmax≈4 guess).
+    /// Run calibration and use [`CacheConfig::calibrated`] in production.
     pub fn new(heads: usize, head_dim: usize) -> CacheConfig {
+        Self::calibrated(
+            heads,
+            head_dim,
+            &CalibrationPlan::uncalibrated(quant::INT8_R),
+        )
+    }
+
+    /// Derive the V scale, range and per-head K clips from a plan.
+    /// A plan calibrated for a different head count is a deployment
+    /// error — rejected here rather than silently half-applied.
+    pub fn calibrated(heads: usize, head_dim: usize, plan: &CalibrationPlan) -> CacheConfig {
+        assert!(
+            plan.k_clip.is_empty() || plan.k_clip.len() == heads,
+            "calibration plan has {} K clips but the cache has {heads} heads",
+            plan.k_clip.len()
+        );
         CacheConfig {
             heads,
             head_dim,
             block_tokens: 16,
             max_blocks: 1024,
-            v_scale: 4.0 / 127.0, // ≈ N(0,1) absmax/R default; calibrate in prod
-            r: quant::INT8_R,
+            v_scale: plan.v_scale,
+            r: plan.r,
+            k_clip: plan.k_clip.clone(),
+        }
+    }
+
+    /// Apply this cache's calibrated clip to a K rowmax for `head`
+    /// (identity when uncalibrated).
+    pub fn clip_k_rowmax(&self, head: usize, rowmax: f32) -> f32 {
+        match self.k_clip.get(head) {
+            Some(&clip) => rowmax.min(clip),
+            None => rowmax,
         }
     }
 }
@@ -163,7 +200,10 @@ impl KvCachePool {
         let inv_v = 1.0 / self.cfg.v_scale;
         for head in 0..h {
             let krow = &k[head * d..(head + 1) * d];
-            let absmax = krow.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let rowmax = krow.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            // calibrated per-head clip: outlier tokens saturate instead of
+            // blowing up the whole row's quantization grid
+            let absmax = self.cfg.clip_k_rowmax(head, rowmax);
             let scale = absmax.max(SCALE_EPS) / r;
             let inv = 1.0 / scale;
             let base = head * bt * d + slot * d;
@@ -333,6 +373,62 @@ mod tests {
         for _ in 0..8 {
             pool.append(b, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
         }
+    }
+
+    #[test]
+    fn calibrated_scales_beat_uncalibrated_fallback() {
+        use crate::calib::{CalibStats, PlanBuilder};
+        // decode traffic whose V sits at ~0.5σ: the N(0,1) fallback grid
+        // wastes most of its range, a calibrated grid does not
+        let (h, d, n) = (1usize, 32usize, 48usize);
+        let mut rng = Pcg64::seeded(7);
+        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+            .map(|_| {
+                let k: Vec<f32> = rng.normal_vec(h * d);
+                let v: Vec<f32> = rng.normal_vec(h * d).iter().map(|x| x * 0.5).collect();
+                (k, v)
+            })
+            .collect();
+        let q: Vec<f32> = rng.normal_vec(h * d);
+
+        let mut cs = CalibStats::new(h, d);
+        for (k, v) in &toks {
+            cs.record_kv_token(k, v).unwrap();
+        }
+        let plan = PlanBuilder::new(quant::INT8_R).build(&cs);
+        assert!(plan.v_absmax < 3.0, "0.5σ V absmax, got {}", plan.v_absmax);
+
+        let run = |cfg: CacheConfig| -> Vec<f32> {
+            let mut pool = KvCachePool::new(CacheConfig {
+                block_tokens: 8,
+                max_blocks: 64,
+                ..cfg
+            });
+            let id = pool.alloc_sequence();
+            for (k, v) in &toks {
+                pool.append(id, k, v).unwrap();
+            }
+            pool.decode_attention(id, &q, None).unwrap()
+        };
+        let out_cal = run(CacheConfig::calibrated(h, d, &plan));
+        let out_unc = run(CacheConfig::new(h, d));
+
+        let mut ks = MatF32::zeros(n, d);
+        let mut vs = MatF32::zeros(n, d);
+        for (t, (k, v)) in toks.iter().enumerate() {
+            for i in 0..d {
+                ks.set(t, i, k[i]);
+                vs.set(t, i, v[i]);
+            }
+        }
+        let qm = MatF32::from_vec(1, d, q.clone());
+        let gold = reference::standard_attention(&qm, &ks, &vs, &AttnConfig::new(d));
+        let e_cal = stats::mre(&out_cal, &gold.data);
+        let e_unc = stats::mre(&out_unc, &gold.data);
+        assert!(
+            e_cal < e_unc,
+            "calibrated {e_cal} should beat uncalibrated {e_unc}"
+        );
     }
 
     #[test]

@@ -5,9 +5,16 @@
 //! (padding the sequence up) and the precision policy maps the client's
 //! accuracy class to a kernel variant, falling back along a defined chain
 //! when no artifact exists for the preferred variant.
+//!
+//! The chain comes from one of two places: the static [`variant_chain`]
+//! (the paper's a-priori accuracy ordering — the uncalibrated fallback),
+//! or an autotuned [`VariantTable`] installed via
+//! [`BucketRouter::with_policy`], which replaces guesses with
+//! per-deployment MRE and throughput measurements (see `calib::autotune`).
 
 use super::request::AccuracyClass;
 use crate::attention::Variant;
+use crate::calib::autotune::VariantTable;
 
 /// One executable bucket (mirror of an attention artifact's geometry).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -26,6 +33,8 @@ pub struct Bucket {
 #[derive(Clone, Debug, Default)]
 pub struct BucketRouter {
     buckets: Vec<Bucket>,
+    /// Autotuned precision policy; `None` → static [`variant_chain`].
+    policy: Option<VariantTable>,
 }
 
 /// Precision policy: accuracy class → ordered variant preference.
@@ -41,7 +50,19 @@ impl BucketRouter {
     pub fn new(mut buckets: Vec<Bucket>) -> Self {
         // smallest-seq-first so `route` finds the tightest bucket greedily
         buckets.sort_by_key(|b| (b.seq, b.batch));
-        BucketRouter { buckets }
+        BucketRouter { buckets, policy: None }
+    }
+
+    /// Install an autotuned variant-selection table as the precision
+    /// policy. Seq buckets the table does not cover fall back to the
+    /// static [`variant_chain`].
+    pub fn with_policy(mut self, table: VariantTable) -> Self {
+        self.policy = if table.is_empty() { None } else { Some(table) };
+        self
+    }
+
+    pub fn policy(&self) -> Option<&VariantTable> {
+        self.policy.as_ref()
     }
 
     /// Build from an artifact manifest (PJRT serving).
@@ -83,7 +104,12 @@ impl BucketRouter {
         seq: usize,
         head_dim: usize,
     ) -> Option<&Bucket> {
-        for variant in variant_chain(acc) {
+        let chain: &[Variant] = self
+            .policy
+            .as_ref()
+            .and_then(|t| t.chain(acc, seq))
+            .unwrap_or_else(|| variant_chain(acc));
+        for variant in chain {
             let found = self
                 .buckets
                 .iter()
@@ -195,6 +221,39 @@ mod tests {
         let r = BucketRouter::new(vec![]);
         assert!(r.is_empty());
         assert!(r.route(AccuracyClass::Fast, 8, 1, 64).is_none());
+    }
+
+    #[test]
+    fn autotuned_policy_overrides_static_chain() {
+        use crate::calib::autotune::{TableBucket, VariantTable};
+        // measurements said: at short seqs half_int8 is both accurate and
+        // fastest for Fast traffic — the opposite of the static chain
+        let table = VariantTable {
+            buckets: vec![TableBucket {
+                seq: 256,
+                fast: vec![Variant::HalfInt8, Variant::Int8, Variant::Fp16],
+                balanced: vec![Variant::Fp16],
+                exact: vec![Variant::Fp16],
+            }],
+        };
+        let r = router().with_policy(table);
+        assert!(r.policy().is_some());
+        let b = r.route(AccuracyClass::Fast, 8, 100, 64).unwrap();
+        assert_eq!(b.variant, Variant::HalfInt8);
+        assert_eq!(b.seq, 256);
+        // balanced now pins fp16 (per the measured table)
+        let b = r.route(AccuracyClass::Balanced, 8, 100, 64).unwrap();
+        assert_eq!(b.variant, Variant::Fp16);
+        // seqs beyond every measured bucket fall back to the *static*
+        // chain (measured thresholds are not extrapolated): Fast → int8
+        let b = r.route(AccuracyClass::Fast, 8, 400, 64).unwrap();
+        assert_eq!(b.variant, Variant::Int8);
+        assert_eq!(b.seq, 512);
+        // an empty table is ignored entirely
+        let r = router().with_policy(VariantTable::default());
+        assert!(r.policy().is_none());
+        let b = r.route(AccuracyClass::Fast, 8, 100, 64).unwrap();
+        assert_eq!(b.variant, Variant::Int8);
     }
 
     /// Property (DESIGN.md §4 invariant): the router always returns the

@@ -13,13 +13,16 @@
 //!   transformer LM, AOT-lowered to HLO text artifacts.
 //! - **L3** this crate — the serving coordinator (router, dynamic batcher,
 //!   scheduler), the PJRT runtime that executes the artifacts, rust-native
-//!   numeric twins of every kernel, and the Ampere cost-model simulator
-//!   that regenerates the paper's Figure 2.
+//!   numeric twins of every kernel, the post-training calibration and
+//!   precision-autotuning subsystem ([`calib`]) feeding the router and KV
+//!   cache measured scales, and the Ampere cost-model simulator that
+//!   regenerates the paper's Figure 2.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
 pub mod attention;
 pub mod bench_harness;
+pub mod calib;
 pub mod coordinator;
 pub mod gemm;
 pub mod quant;

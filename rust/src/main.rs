@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve        start the TCP serving engine over AOT artifacts
 //!   client       load-generator client against a running server
+//!   calibrate    run calibration + precision autotuning, write artifact
 //!   golden       validate every artifact against its golden fixture
 //!   accuracy     regenerate the paper's Tables 1-2 (MRE)
 //!   perf-model   regenerate the paper's Figure 2 (Ampere cost model)
@@ -10,8 +11,13 @@
 
 use anyhow::{anyhow, bail, Result};
 use int_flashattention::attention::Variant;
+use int_flashattention::calib::{
+    AutotuneConfig, CalibStats, CalibrationArtifact, PlanBuilder, ScaleMethod,
+};
 use int_flashattention::coordinator::batcher::BatchPolicy;
-use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend, PjrtBackend};
+use int_flashattention::coordinator::engine::{
+    CalibratedNativeBackend, Engine, EngineConfig, NativeBackend, PjrtBackend,
+};
 use int_flashattention::coordinator::router::BucketRouter;
 use int_flashattention::runtime::Manifest;
 use int_flashattention::server::{Client, Server};
@@ -32,6 +38,9 @@ USAGE:
                    [--policy eager|deadline|full] [--deadline-ms N] [--workers N]
   intfa client     [--addr HOST:PORT] [--requests N] [--concurrency C]
                    [--heads H] [--seq N] [--head-dim D] [--accuracy fast|balanced|exact]
+  intfa calibrate  [--out FILE] [--heads H] [--head-dim D] [--batches N]
+                   [--calib-seq N] [--dist normal|uniform] [--method absmax|p999|ema]
+                   [--seqs 128,256,512] [--seed S]
   intfa golden     [--artifacts DIR]
   intfa accuracy   [--dist normal|uniform] [--seqs 1024,2048] [--head-dim D]
   intfa perf-model [--gpu rtx4090|a100] [--seqs 1024,...,16384]
@@ -60,6 +69,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("serve") => cmd_serve(args),
         Some("client") => cmd_client(args),
+        Some("calibrate") => cmd_calibrate(args),
         Some("golden") => cmd_golden(args),
         Some("accuracy") => cmd_accuracy(args),
         Some("perf-model") => cmd_perf_model(args),
@@ -91,14 +101,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("no attention buckets in manifest");
     }
     let cfg = engine_config(args)?;
+    let calibration = CalibrationArtifact::from_manifest(&manifest)?;
+    match &calibration {
+        Some(a) => log_info!(
+            "calibration: v_scale={:.6} batches={} table buckets={}",
+            a.plan.v_scale,
+            a.plan.batches,
+            a.table.buckets.len()
+        ),
+        None => log_info!("no calibration artifact — uncalibrated fallback scales"),
+    }
+    let backend_kind = args.get_or("backend", "pjrt").to_string();
     let backend: Arc<dyn int_flashattention::coordinator::engine::Backend> =
-        match args.get_or("backend", "pjrt") {
-            "pjrt" => Arc::new(PjrtBackend::start(dir).map_err(|e| anyhow!(e))?),
-            "native" => Arc::new(NativeBackend { threads: cfg.backend_threads }),
-            other => bail!("unknown backend {other:?}"),
+        match (backend_kind.as_str(), &calibration) {
+            ("pjrt", _) => Arc::new(PjrtBackend::start(dir).map_err(|e| anyhow!(e))?),
+            // serve the plan-quantized kernels the autotuner measured
+            ("native", Some(a)) => Arc::new(CalibratedNativeBackend {
+                threads: cfg.backend_threads,
+                plan: a.plan.clone(),
+            }),
+            ("native", None) => Arc::new(NativeBackend { threads: cfg.backend_threads }),
+            (other, _) => bail!("unknown backend {other:?}"),
         };
+    // Engine::with_calibration installs the autotuned policy only when
+    // the backend serves the artifact's plan; PJRT artifacts were
+    // compiled with their own scales, so they keep the static chain
+    // (scales stay available).
+    if calibration.is_some() && backend.plan().is_none() {
+        int_flashattention::log_warn!(
+            "calibration artifact present but backend={backend_kind} is not \
+             plan-aware: serving with the static precision policy"
+        );
+    }
     log_info!("backend={} buckets={}", backend.name(), router.buckets().len());
-    let engine = Arc::new(Engine::new(router, backend, cfg));
+    let engine = Arc::new(Engine::with_calibration(router, backend, cfg, calibration));
     let server = Server::bind(engine, args.get_or("addr", "127.0.0.1:7433"))?;
     println!("listening on {}", server.local_addr());
     server.serve();
@@ -152,6 +188,67 @@ fn cmd_client(args: &Args) -> Result<()> {
         s.p50,
         s.p99
     );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let heads = args.get_usize("heads", 8)?;
+    let d = args.get_usize("head-dim", 64)?;
+    let batches = args.get_usize("batches", 32)?;
+    let calib_seq = args.get_usize("calib-seq", 128)?;
+    let dist = Dist::parse(args.get_or("dist", "normal")).ok_or_else(|| anyhow!("bad --dist"))?;
+    let method = ScaleMethod::parse(args.get_or("method", "absmax"))
+        .ok_or_else(|| anyhow!("bad --method (absmax | p<digits> | ema)"))?;
+    // autotune() sorts and dedups; reports/table stay index-aligned
+    let seqs: Vec<usize> = args
+        .get_list("seqs", &["128", "256", "512"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow!("bad seq {s}")))
+        .collect::<Result<_>>()?;
+    let out = args.get_or("out", "calibration.json").to_string();
+
+    // synthetic calibration traffic (swap for recorded activations in prod)
+    let mut stats = CalibStats::new(heads, d);
+    let mut rng = Pcg64::new(args.get_u64("seed", 7)?, 3);
+    for _ in 0..batches {
+        let n = heads * calib_seq * d;
+        let q = dist.sample_vec(&mut rng, n);
+        let k = dist.sample_vec(&mut rng, n);
+        let v = dist.sample_vec(&mut rng, n);
+        stats.record_qkv(&q, &k, &v, calib_seq).map_err(|e| anyhow!(e))?;
+    }
+    let plan = PlanBuilder::new(int_flashattention::quant::INT8_R)
+        .method(method)
+        .build(&stats);
+    log_info!(
+        "plan: v_scale={:.6} (uncalibrated {:.6}) smoothing={} batches={}",
+        plan.v_scale,
+        int_flashattention::calib::CalibrationPlan::uncalibrated(plan.r).v_scale,
+        plan.smoothing.name(),
+        plan.batches
+    );
+
+    let cfg = AutotuneConfig { seqs, head_dim: d, dist, ..AutotuneConfig::default() };
+    let artifact = CalibrationArtifact::autotuned(plan, &cfg);
+    let mut table = Table::new(&["seq", "fast", "balanced", "exact", "int8 mre", "int8 Mtok/s"]);
+    let join = |vs: &[Variant]| {
+        vs.iter().map(|v| v.name()).collect::<Vec<_>>().join(" > ")
+    };
+    for (bucket, report) in artifact.table.buckets.iter().zip(&artifact.reports) {
+        let int8 = report.get(Variant::Int8);
+        table.row(&[
+            bucket.seq.to_string(),
+            join(&bucket.fast),
+            join(&bucket.balanced),
+            join(&bucket.exact),
+            int8.map(|m| format!("{:.2e}", m.mre)).unwrap_or_else(|| "-".into()),
+            int8.map(|m| format!("{:.1}", m.tokens_per_sec / 1e6))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", table.render());
+    artifact.save(&out)?;
+    println!("wrote {out} — reference it from manifest.json as \"calibration\": \"{out}\"");
     Ok(())
 }
 
@@ -234,7 +331,8 @@ fn cmd_perf_model(args: &Args) -> Result<()> {
         .iter()
         .map(|s| s.parse().map_err(|_| anyhow!("bad seq {s}")))
         .collect::<Result<_>>()?;
-    let mut table = Table::new(&["seq", "fp16 ms", "fp8 ms", "half-int8 ms", "int8 ms", "int8 vs fp16"]);
+    let mut table =
+        Table::new(&["seq", "fp16 ms", "fp8 ms", "half-int8 ms", "int8 ms", "int8 vs fp16"]);
     for seq in seqs {
         let wl = Workload::fig2(seq);
         let fmt = |v| {
@@ -242,7 +340,8 @@ fn cmd_perf_model(args: &Args) -> Result<()> {
                 .map(|p| format!("{:.3}", p.total * 1e3))
                 .unwrap_or_else(|| "n/a".into())
         };
-        let reduction = match (predict(&gpu, &wl, Variant::Int8), predict(&gpu, &wl, Variant::Fp16)) {
+        let int8_vs_fp16 = (predict(&gpu, &wl, Variant::Int8), predict(&gpu, &wl, Variant::Fp16));
+        let reduction = match int8_vs_fp16 {
             (Some(a), Some(b)) => format!("-{:.0}%", 100.0 * (1.0 - a.total / b.total)),
             _ => "n/a".into(),
         };

@@ -39,11 +39,21 @@ fn clip_round(x: f32, r: f32) -> i8 {
 
 /// Token-level symmetric quantization: scale_i = rowmax(|x_i|)/R.
 pub fn quantize_per_token(x: &MatF32, r: f32) -> PerToken {
+    quantize_per_token_clipped(x, None, r)
+}
+
+/// Token-level symmetric quantization with an optional rowmax clip
+/// (calibrated outlier handling): `scale_i = min(rowmax_i, clip)/R`;
+/// values beyond the clipped range saturate, as on hardware.
+pub fn quantize_per_token_clipped(x: &MatF32, clip: Option<f32>, r: f32) -> PerToken {
     let mut codes = MatI8::zeros(x.rows, x.cols);
     let mut scales = Vec::with_capacity(x.rows);
     for row in 0..x.rows {
         let src = x.row(row);
-        let absmax = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let mut absmax = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if let Some(c) = clip {
+            absmax = absmax.min(c);
+        }
         let scale = absmax.max(SCALE_EPS) / r;
         let dst = codes.row_mut(row);
         let inv = 1.0 / scale;
@@ -58,7 +68,12 @@ pub fn quantize_per_token(x: &MatF32, r: f32) -> PerToken {
 /// Tensor-level symmetric quantization: scale = max(|x|)/R.
 pub fn quantize_per_tensor(x: &MatF32, r: f32) -> PerTensor {
     let absmax = x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    let scale = absmax.max(SCALE_EPS) / r;
+    quantize_with_scale(x, absmax.max(SCALE_EPS) / r, r)
+}
+
+/// Tensor-level quantization with a *fixed* pre-computed scale (a
+/// calibrated S_V): out-of-range values saturate, as on hardware.
+pub fn quantize_with_scale(x: &MatF32, scale: f32, r: f32) -> PerTensor {
     let inv = 1.0 / scale;
     let mut codes = MatI8::zeros(x.rows, x.cols);
     for (d, &s) in codes.data.iter_mut().zip(&x.data) {

@@ -8,6 +8,7 @@ pub mod intq;
 
 pub use fp8::{fp8_e4m3_roundtrip, quantize_fp8_per_tensor, FP8_E4M3_MAX};
 pub use intq::{
-    dequantize_per_token, quantize_per_tensor, quantize_per_token, PerTensor,
-    PerToken, INT4_R, INT8_R, SCALE_EPS,
+    dequantize_per_token, quantize_per_tensor, quantize_per_token,
+    quantize_per_token_clipped, quantize_with_scale, PerTensor, PerToken, INT4_R,
+    INT8_R, SCALE_EPS,
 };

@@ -5,6 +5,8 @@
 //! deals in flat `Vec<f32>` / `Vec<i32>` buffers.
 
 use super::manifest::{ArtifactMeta, Dtype};
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
 use super::registry::ArtifactRegistry;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;

@@ -84,6 +84,9 @@ pub struct ArtifactMeta {
 pub struct Manifest {
     pub root: PathBuf,
     pub artifacts: Vec<ArtifactMeta>,
+    /// Optional calibration artifact (path relative to `root`), loaded
+    /// through [`crate::calib::CalibrationArtifact::from_manifest`].
+    pub calibration: Option<PathBuf>,
 }
 
 impl Manifest {
@@ -162,7 +165,15 @@ impl Manifest {
                 golden,
             });
         }
-        Ok(Manifest { root, artifacts })
+        // present-but-malformed must not silently boot uncalibrated
+        let calibration = match j.get("calibration") {
+            None => None,
+            Some(v) => Some(PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("manifest calibration must be a string path"))?,
+            )),
+        };
+        Ok(Manifest { root, artifacts, calibration })
     }
 
     pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
@@ -260,6 +271,19 @@ mod tests {
         assert_eq!(buckets[0].seq, 128);
         assert_eq!(buckets[1].seq, 256);
         assert!(m.attention_buckets("fp64").is_empty());
+    }
+
+    #[test]
+    fn calibration_key_is_optional() {
+        let m = Manifest::parse_str(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.calibration.is_none());
+        let with = r#"{"version": 1, "artifacts": [],
+                       "calibration": "calibration.json"}"#;
+        let m = Manifest::parse_str(with, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.calibration, Some(PathBuf::from("calibration.json")));
+        // a malformed entry is an error, not a silent uncalibrated boot
+        let bad = r#"{"version": 1, "artifacts": [], "calibration": 7}"#;
+        assert!(Manifest::parse_str(bad, PathBuf::from("/tmp")).is_err());
     }
 
     #[test]

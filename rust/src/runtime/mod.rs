@@ -11,6 +11,8 @@
 
 pub mod executor;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod pjrt_stub;
 pub mod registry;
 
 pub use executor::Executor;

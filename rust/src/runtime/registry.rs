@@ -6,6 +6,8 @@
 //! internally synchronized).
 
 use super::manifest::{ArtifactMeta, Manifest};
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};

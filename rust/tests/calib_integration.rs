@@ -1,0 +1,196 @@
+//! Calibration integration: the full stats → plan → autotune → artifact
+//! → manifest → engine pipeline, exercised end-to-end with the native
+//! backend (no AOT artifacts needed).
+
+use int_flashattention::attention::Variant;
+use int_flashattention::calib::{
+    AutotuneConfig, CalibStats, CalibrationArtifact, CalibrationPlan, PlanBuilder,
+};
+use int_flashattention::coordinator::engine::{CalibratedNativeBackend, Engine, EngineConfig};
+use int_flashattention::coordinator::kvcache::CacheConfig;
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::coordinator::{AccuracyClass, RequestPayload};
+use int_flashattention::quant::INT8_R;
+use int_flashattention::runtime::Manifest;
+use int_flashattention::util::rng::{Dist, Pcg64};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const HEADS: usize = 2;
+const HEAD_DIM: usize = 16;
+
+fn calibrate(rng: &mut Pcg64, batches: usize, v_sigma: f32) -> CalibStats {
+    let mut stats = CalibStats::new(HEADS, HEAD_DIM);
+    let seq = 32;
+    for _ in 0..batches {
+        let n = HEADS * seq * HEAD_DIM;
+        let q = rng.normal_vec(n);
+        let k = rng.normal_vec(n);
+        let v: Vec<f32> = rng.normal_vec(n).iter().map(|x| x * v_sigma).collect();
+        stats.record_qkv(&q, &k, &v, seq).unwrap();
+    }
+    stats
+}
+
+fn tiny_autotune() -> AutotuneConfig {
+    AutotuneConfig {
+        seqs: vec![32, 64],
+        head_dim: HEAD_DIM,
+        dist: Dist::Normal,
+        samples: 1,
+        timing_iters: 1,
+        ..AutotuneConfig::default()
+    }
+}
+
+fn native_router() -> BucketRouter {
+    let mk = |variant, seq| Bucket {
+        variant,
+        batch: 2,
+        heads: HEADS,
+        seq,
+        head_dim: HEAD_DIM,
+        causal: true,
+        artifact: String::new(),
+    };
+    BucketRouter::new(vec![
+        mk(Variant::Int8, 32),
+        mk(Variant::Int8, 64),
+        mk(Variant::HalfInt8, 64),
+        mk(Variant::Fp8, 64),
+        mk(Variant::Fp16, 64),
+    ])
+}
+
+fn tmp_root(name: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!(
+        "intfa-calib-integration-{name}-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&root).unwrap();
+    root
+}
+
+#[test]
+fn full_pipeline_calibrate_persist_reload_serve() {
+    let mut rng = Pcg64::seeded(1);
+    // calibrate on 0.5σ V traffic — measurably different from the fallback
+    let stats = calibrate(&mut rng, 8, 0.5);
+    let plan = PlanBuilder::new(INT8_R).build(&stats);
+    assert!(plan.is_calibrated());
+    assert!(
+        plan.v_scale < CalibrationPlan::uncalibrated(INT8_R).v_scale,
+        "0.5σ traffic must calibrate a tighter V grid"
+    );
+
+    // autotune on the same 0.5σ V traffic the plan was calibrated for,
+    // then persist next to a manifest
+    let tune = AutotuneConfig { v_sigma: 0.5, ..tiny_autotune() };
+    let artifact = CalibrationArtifact::autotuned(plan, &tune);
+    let root = tmp_root("pipeline");
+    artifact.save(root.join("calibration.json")).unwrap();
+    std::fs::write(
+        root.join("manifest.json"),
+        r#"{"version": 1, "artifacts": [], "calibration": "calibration.json"}"#,
+    )
+    .unwrap();
+
+    // reload through the manifest — byte-identical plan and table
+    let manifest = Manifest::load(&root).unwrap();
+    let reloaded = CalibrationArtifact::from_manifest(&manifest).unwrap().unwrap();
+    assert_eq!(reloaded, artifact);
+
+    // boot the engine from the artifact: policy installed, requests
+    // served through the same plan-quantized kernels autotune measured
+    let backend = CalibratedNativeBackend { threads: 1, plan: reloaded.plan.clone() };
+    let engine = Engine::with_calibration(
+        native_router(),
+        Arc::new(backend),
+        EngineConfig::default(),
+        Some(reloaded),
+    );
+    assert!(engine.calibration().is_some());
+    let policy = engine.router().policy().expect("autotuned policy installed");
+    assert_eq!(policy.buckets.len(), 2);
+
+    for acc in [
+        AccuracyClass::Fast,
+        AccuracyClass::Balanced,
+        AccuracyClass::Exact,
+    ] {
+        let seq = 24usize;
+        let n = HEADS * seq * HEAD_DIM;
+        let payload = RequestPayload {
+            heads: HEADS,
+            seq,
+            head_dim: HEAD_DIM,
+            q: rng.normal_vec(n),
+            k: rng.normal_vec(n),
+            v: rng.normal_vec(n),
+        };
+        let resp = engine.submit_blocking(acc, payload);
+        let out = resp.result.expect("served");
+        assert_eq!(out.len(), n);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // the served variant must come from the autotuned chain for this
+        // class (the class's measured-admissible set), not be arbitrary
+        let chain = policy.chain(acc, seq).expect("chain for bucket");
+        let served = resp.variant.expect("variant reported");
+        assert!(
+            chain.contains(&served),
+            "{acc:?}: served {served:?} not in autotuned chain {chain:?}"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn exact_class_still_exact_under_autotuned_policy() {
+    // whatever the measurements said, Exact must resolve to fp16: the
+    // autotuner's exact threshold admits nothing coarser
+    let mut rng = Pcg64::seeded(2);
+    let plan = PlanBuilder::new(INT8_R).build(&calibrate(&mut rng, 4, 1.0));
+    let artifact = CalibrationArtifact::autotuned(plan.clone(), &tiny_autotune());
+    let engine = Engine::with_calibration(
+        native_router(),
+        Arc::new(CalibratedNativeBackend { threads: 1, plan }),
+        EngineConfig::default(),
+        Some(artifact),
+    );
+    let seq = 30usize;
+    let n = HEADS * seq * HEAD_DIM;
+    let payload = RequestPayload {
+        heads: HEADS,
+        seq,
+        head_dim: HEAD_DIM,
+        q: rng.normal_vec(n),
+        k: rng.normal_vec(n),
+        v: rng.normal_vec(n),
+    };
+    let resp = engine.submit_blocking(AccuracyClass::Exact, payload);
+    assert_eq!(resp.variant, Some(Variant::Fp16));
+}
+
+#[test]
+fn cache_config_scales_follow_the_artifact() {
+    // the serving path carries no hard-coded V scale: both the fallback
+    // and the calibrated cache derive from a CalibrationPlan
+    let mut rng = Pcg64::seeded(3);
+    let plan = PlanBuilder::new(INT8_R).build(&calibrate(&mut rng, 8, 0.5));
+    let artifact = CalibrationArtifact::autotuned(plan.clone(), &tiny_autotune());
+
+    let root = tmp_root("cache");
+    artifact.save(root.join("calibration.json")).unwrap();
+    let reloaded = CalibrationArtifact::load(root.join("calibration.json")).unwrap();
+    let cfg = CacheConfig::calibrated(HEADS, HEAD_DIM, &reloaded.plan);
+    assert_eq!(cfg.v_scale, plan.v_scale);
+    assert_eq!(cfg.k_clip.len(), HEADS);
+
+    let fallback = CacheConfig::new(HEADS, HEAD_DIM);
+    let uncal = CalibrationPlan::uncalibrated(INT8_R);
+    assert_eq!(fallback.v_scale, uncal.v_scale);
+    assert!(cfg.v_scale < fallback.v_scale);
+
+    let _ = std::fs::remove_dir_all(&root);
+}

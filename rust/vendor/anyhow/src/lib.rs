@@ -1,0 +1,214 @@
+//! Minimal `anyhow` shim — same spirit as the in-tree JSON codec and PRNG:
+//! no registry access in this offline environment, so the subset of the
+//! `anyhow` API the crate uses is implemented here and wired in via a
+//! path dependency. Swapping in the real crate is a one-line change in
+//! `rust/Cargo.toml`; no source file mentions this shim.
+//!
+//! Implemented surface: [`Error`] (context chain, `{e}` / `{e:#}` /
+//! `{e:?}` formatting), [`Result`], [`anyhow!`], [`bail!`], and the
+//! [`Context`] extension trait for `Result` and `Option`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error value carrying a context chain (outermost context first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Build from a standard error, capturing its `source()` chain.
+    pub fn new<E: StdError>(error: E) -> Error {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}` — the full context chain, anyhow-style
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes this blanket `From` (and the `Context` impls below) coherent,
+// exactly as in the real crate.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed unification of `std::error::Error` values and [`crate::Error`]
+    /// so a single `Context` impl covers both.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::new(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors (`.context(...)` / `.with_context(|| ...)`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "outer layer".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "outer layer");
+        assert_eq!(format!("{e:#}"), "outer layer: missing thing");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let _ = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(1)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let v = 3;
+        let e = anyhow!("value {v} and {}", 4);
+        assert_eq!(format!("{e}"), "value 3 and 4");
+        let owned = String::from("from a String");
+        let e = anyhow!(owned);
+        assert_eq!(format!("{e}"), "from a String");
+
+        fn bails(flag: bool) -> Result<()> {
+            if flag {
+                bail!("bailed with {}", 7);
+            }
+            Ok(())
+        }
+        assert_eq!(format!("{}", bails(true).unwrap_err()), "bailed with 7");
+        assert!(bails(false).is_ok());
+    }
+
+    #[test]
+    fn context_on_error_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let none: Option<i32> = None;
+        let e = none.context("was none").unwrap_err();
+        assert_eq!(format!("{e}"), "was none");
+        assert_eq!(Some(5).context("unused").unwrap(), 5);
+    }
+}

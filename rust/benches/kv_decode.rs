@@ -1,0 +1,155 @@
+//! KV-cache serving bench: prefix-hit vs cold prefill latency, and
+//! split-K decode scaling on long sequences.
+//!
+//! Prints markdown tables and writes `BENCH_kv.json` (consumed by the CI
+//! bench-smoke step as an artifact).
+//!
+//! Run: `cargo bench --bench kv_decode` (INTFA_BENCH_FULL=1 widens the
+//! geometry; INTFA_BENCH_OUT overrides the JSON path).
+
+use int_flashattention::bench_harness::{bench, black_box, BenchConfig, Table};
+use int_flashattention::kv::{CacheConfig, RadixKvCache};
+use int_flashattention::util::json::Json;
+use int_flashattention::util::rng::Pcg64;
+
+const HEADS: usize = 4;
+const HEAD_DIM: usize = 64;
+
+fn cache_cfg(max_blocks: usize) -> CacheConfig {
+    CacheConfig { block_tokens: 16, max_blocks, ..CacheConfig::new(HEADS, HEAD_DIM) }
+}
+
+fn token_kv(tok: u32) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::new(tok as u64, 7);
+    (
+        rng.normal_vec(HEADS * HEAD_DIM),
+        rng.normal_vec(HEADS * HEAD_DIM),
+    )
+}
+
+fn build_seq(cache: &mut RadixKvCache, tokens: &[u32]) -> u64 {
+    let (id, cached) = cache.start_sequence(tokens);
+    for &t in &tokens[cached..] {
+        let (k, v) = token_kv(t);
+        cache.append_token(id, t, &k, &v).expect("bench pool sized for the prompt");
+    }
+    id
+}
+
+fn main() {
+    let full = std::env::var("INTFA_BENCH_FULL").is_ok();
+    let cfg_bench = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let prompt_len: usize = if full { 2048 } else { 512 };
+    let decode_len: usize = if full { 4096 } else { 1024 };
+
+    println!("# kv/ — shared-prefix prefill + split-K decode\n");
+    println!(
+        "geometry: heads={HEADS} d={HEAD_DIM} block_tokens=16; prompt={prompt_len} \
+         decode_len={decode_len}\n"
+    );
+
+    // ---- A. cold prefill vs prefix-cache hit --------------------------
+    let prompt: Vec<u32> = (0..prompt_len as u32).collect();
+    let rows: Vec<(Vec<f32>, Vec<f32>)> = prompt.iter().map(|&t| token_kv(t)).collect();
+    let blocks = prompt_len / 16 + 8;
+
+    // cold path measured as an anonymous sequence: every token quantizes
+    // + appends, nothing resolves from the trie, and the pre-built pool
+    // keeps allocator/pool-construction cost out of the timed region
+    let mut cold_cache = RadixKvCache::new(cache_cfg(blocks));
+    let cold = bench("prefill.cold", &cfg_bench, || {
+        let id = cold_cache.alloc_sequence();
+        for (k, v) in &rows {
+            cold_cache.append(id, k, v).unwrap();
+        }
+        let len = cold_cache.seq_len(id);
+        cold_cache.free_sequence(id).unwrap();
+        black_box(len)
+    });
+
+    // warm cache: the whole prompt resolves through the radix trie
+    let mut warm_cache = RadixKvCache::new(cache_cfg(blocks));
+    let _seed = build_seq(&mut warm_cache, &prompt);
+    let hit = bench("prefill.hit", &cfg_bench, || {
+        let (id, cached) = warm_cache.start_sequence(&prompt);
+        assert_eq!(cached, prompt_len, "prompt must resolve from the trie");
+        warm_cache.free_sequence(id).unwrap();
+        black_box(cached)
+    });
+
+    let mut t = Table::new(&["path", "mean ms", "speedup"]);
+    t.row(&["cold prefill".into(), format!("{:.3}", cold.mean_ms()), "1.0×".into()]);
+    t.row(&[
+        "prefix hit".into(),
+        format!("{:.3}", hit.mean_ms()),
+        format!("{:.0}×", cold.mean_ns() / hit.mean_ns()),
+    ]);
+    print!("{}", t.render());
+    println!();
+
+    // ---- B. split-K decode scaling ------------------------------------
+    let mut cache = RadixKvCache::new(cache_cfg(decode_len / 16 + 8));
+    let long: Vec<u32> = (0..decode_len as u32).collect();
+    let id = build_seq(&mut cache, &long);
+    let mut rng = Pcg64::seeded(1);
+    let q = rng.normal_vec(HEADS * HEAD_DIM);
+    let baseline = cache.decode_attention(id, &q, None).unwrap();
+
+    let mut t = Table::new(&["split-K workers", "mean ms", "Mtok/s", "scaling"]);
+    let mut splitk_json = Vec::new();
+    let mut base_ns = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let m = bench(&format!("decode.splitk{workers}"), &cfg_bench, || {
+            let out = cache.decode_attention_splitk(id, &q, None, workers).unwrap();
+            black_box(out)
+        });
+        // exactness is part of the contract, not just the tests
+        assert_eq!(
+            cache.decode_attention_splitk(id, &q, None, workers).unwrap(),
+            baseline,
+            "split-K must be bit-identical"
+        );
+        if workers == 1 {
+            base_ns = m.mean_ns();
+        }
+        let mtok_s = decode_len as f64 / (m.mean_ns() / 1e9) / 1e6;
+        t.row(&[
+            workers.to_string(),
+            format!("{:.3}", m.mean_ms()),
+            format!("{mtok_s:.2}"),
+            format!("{:.2}×", base_ns / m.mean_ns()),
+        ]);
+        splitk_json.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("mean_ms", Json::num(m.mean_ms())),
+            ("mtok_per_s", Json::num(mtok_s)),
+            ("scaling", Json::num(base_ns / m.mean_ns())),
+        ]));
+    }
+    print!("{}", t.render());
+
+    let report = Json::obj(vec![
+        (
+            "geometry",
+            Json::obj(vec![
+                ("heads", Json::num(HEADS as f64)),
+                ("head_dim", Json::num(HEAD_DIM as f64)),
+                ("block_tokens", Json::num(16.0)),
+                ("prompt_len", Json::num(prompt_len as f64)),
+                ("decode_len", Json::num(decode_len as f64)),
+            ]),
+        ),
+        (
+            "prefill",
+            Json::obj(vec![
+                ("cold_ms", Json::num(cold.mean_ms())),
+                ("hit_ms", Json::num(hit.mean_ms())),
+                ("speedup", Json::num(cold.mean_ns() / hit.mean_ns())),
+            ]),
+        ),
+        ("splitk", Json::Arr(splitk_json)),
+    ]);
+    let out = std::env::var("INTFA_BENCH_OUT").unwrap_or_else(|_| "BENCH_kv.json".into());
+    std::fs::write(&out, report.to_pretty()).expect("write bench report");
+    println!("\nwrote {out}");
+}

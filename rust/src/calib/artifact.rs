@@ -12,7 +12,65 @@ use crate::util::json::{parse, Json};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
-const ARTIFACT_VERSION: i64 = 1;
+/// Version 2 added the optional calibration geometry; version-1 files
+/// (no geometry) still load.
+const ARTIFACT_VERSION: i64 = 2;
+
+/// The geometry a calibration run measured — persisted with the artifact
+/// so deployments validate compatibility *once at load time* instead of
+/// scattering per-consumer head-count checks (and leaving `head_dim`
+/// unchecked, as the pre-geometry code did).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationGeometry {
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Sequence-length buckets the autotuner measured, ascending.
+    pub seq_buckets: Vec<usize>,
+}
+
+impl CalibrationGeometry {
+    /// Deployment-compatibility check (engine boot, KV-cache build).
+    pub fn check(&self, heads: usize, head_dim: usize) -> Result<(), String> {
+        if self.heads != heads || self.head_dim != head_dim {
+            return Err(format!(
+                "calibration artifact was measured at {}×{} (heads×head_dim) but the \
+                 deployment runs {heads}×{head_dim}",
+                self.heads, self.head_dim
+            ));
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("heads", Json::num(self.heads as f64)),
+            ("head_dim", Json::num(self.head_dim as f64)),
+            (
+                "seq_buckets",
+                Json::Arr(self.seq_buckets.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<CalibrationGeometry> {
+        let heads = j.at("heads").as_usize().ok_or(anyhow!("geometry missing heads"))?;
+        let head_dim = j
+            .at("head_dim")
+            .as_usize()
+            .ok_or(anyhow!("geometry missing head_dim"))?;
+        if heads == 0 || head_dim == 0 {
+            bail!("geometry has empty dimensions ({heads}×{head_dim})");
+        }
+        let seq_buckets = j
+            .at("seq_buckets")
+            .as_arr()
+            .ok_or(anyhow!("geometry missing seq_buckets"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or(anyhow!("bad seq bucket")))
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(CalibrationGeometry { heads, head_dim, seq_buckets })
+    }
+}
 
 /// Everything a serving process needs from a calibration run.
 #[derive(Clone, Debug, PartialEq)]
@@ -22,34 +80,67 @@ pub struct CalibrationArtifact {
     /// Raw per-bucket measurements behind the table (kept for audits and
     /// re-thresholding without a re-run).
     pub reports: Vec<BucketReport>,
+    /// Measured geometry; `None` for version-1 artifacts and runs that
+    /// never declared a head count.
+    pub geometry: Option<CalibrationGeometry>,
 }
 
 impl CalibrationArtifact {
-    /// Build an artifact by running the autotuner under `plan`.
+    /// Build an artifact by running the autotuner under `plan`. The
+    /// geometry records `cfg.heads` when set, else the plan's calibrated
+    /// head count (clip length); plans with neither carry no geometry.
     pub fn autotuned(plan: CalibrationPlan, cfg: &AutotuneConfig) -> CalibrationArtifact {
         let (reports, table) = autotune(&plan, cfg);
-        CalibrationArtifact { plan, table, reports }
+        let heads = if cfg.heads > 0 {
+            cfg.heads
+        } else {
+            plan.k_clip.len().max(plan.q_clip.len())
+        };
+        let geometry = (heads > 0).then(|| {
+            let mut seqs = cfg.seqs.clone();
+            seqs.sort_unstable();
+            seqs.dedup();
+            CalibrationGeometry { heads, head_dim: cfg.head_dim, seq_buckets: seqs }
+        });
+        CalibrationArtifact { plan, table, reports, geometry }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("version", Json::num(ARTIFACT_VERSION as f64)),
             ("plan", self.plan.to_json()),
             ("table", self.table.to_json()),
             ("reports", autotune::reports_to_json(&self.reports)),
-        ])
+        ];
+        if let Some(g) = &self.geometry {
+            fields.push(("geometry", g.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<CalibrationArtifact> {
         let version = j.at("version").as_i64().unwrap_or(0);
-        if version != ARTIFACT_VERSION {
+        if !(1..=ARTIFACT_VERSION).contains(&version) {
             bail!("unsupported calibration artifact version {version}");
         }
+        let plan = CalibrationPlan::from_json(j.at("plan")).map_err(|e| anyhow!("{e}"))?;
+        let geometry = if j.at("geometry").is_null() {
+            None
+        } else {
+            Some(CalibrationGeometry::from_json(j.at("geometry"))?)
+        };
+        // the load-time geometry validation: a plan whose scales don't
+        // fit the declared geometry must never reach a consumer
+        if let Some(g) = &geometry {
+            plan.validate_geometry(g.heads, g.head_dim)
+                .map_err(|e| anyhow!("calibration artifact geometry: {e}"))?;
+        }
         Ok(CalibrationArtifact {
-            plan: CalibrationPlan::from_json(j.at("plan")).map_err(|e| anyhow!("{e}"))?,
+            plan,
             table: VariantTable::from_json(j.at("table")).map_err(|e| anyhow!("{e}"))?,
             reports: autotune::reports_from_json(j.at("reports"))
                 .map_err(|e| anyhow!("{e}"))?,
+            geometry,
         })
     }
 
@@ -107,7 +198,12 @@ mod tests {
                 exact: vec![Variant::Fp16],
             }],
         };
-        CalibrationArtifact { plan, table, reports: Vec::new() }
+        let geometry = Some(CalibrationGeometry {
+            heads: 2,
+            head_dim: 16,
+            seq_buckets: vec![128],
+        });
+        CalibrationArtifact { plan, table, reports: Vec::new(), geometry }
     }
 
     #[test]
@@ -129,6 +225,38 @@ mod tests {
         assert!(CalibrationArtifact::load(&path).is_err());
         let _ = std::fs::remove_file(&path);
         assert!(CalibrationArtifact::load("/nonexistent/calibration.json").is_err());
+    }
+
+    #[test]
+    fn version_1_artifacts_load_without_geometry() {
+        let mut j = sample_artifact().to_json();
+        if let crate::util::json::Json::Obj(map) = &mut j {
+            map.insert("version".into(), Json::num(1.0));
+            map.remove("geometry");
+        }
+        let loaded = CalibrationArtifact::from_json(&j).unwrap();
+        assert!(loaded.geometry.is_none());
+        assert_eq!(loaded.plan, sample_artifact().plan);
+    }
+
+    #[test]
+    fn load_rejects_geometry_plan_mismatch() {
+        // plan with 2 clips but geometry declaring 3 heads: caught once
+        // at load, before any consumer sees the artifact
+        let mut artifact = sample_artifact();
+        artifact.geometry = Some(CalibrationGeometry {
+            heads: 3,
+            head_dim: 16,
+            seq_buckets: vec![128],
+        });
+        let err = CalibrationArtifact::from_json(&artifact.to_json());
+        assert!(err.is_err(), "mismatched geometry must fail load");
+        // deployment check catches a head_dim mismatch (previously
+        // unchecked anywhere)
+        let g = sample_artifact().geometry.unwrap();
+        assert!(g.check(2, 16).is_ok());
+        assert!(g.check(2, 64).is_err());
+        assert!(g.check(4, 16).is_err());
     }
 
     #[test]

@@ -27,6 +27,11 @@ pub struct AutotuneConfig {
     /// Sequence-length buckets to measure.
     pub seqs: Vec<usize>,
     pub head_dim: usize,
+    /// Deployment head count recorded into the artifact's
+    /// [`super::artifact::CalibrationGeometry`]. 0 → derive from the
+    /// plan's calibrated clips (kernels are single-head; this is
+    /// metadata, not a workload knob).
+    pub heads: usize,
     /// Synthetic activation distribution (match expected traffic).
     pub dist: Dist,
     /// Amplitude applied to the synthetic V samples — set it to the
@@ -57,6 +62,7 @@ impl Default for AutotuneConfig {
         AutotuneConfig {
             seqs: vec![128, 256, 512],
             head_dim: 64,
+            heads: 0,
             dist: Dist::Normal,
             v_sigma: 1.0,
             causal: true,

@@ -36,7 +36,7 @@ pub mod autotune;
 pub mod plan;
 pub mod stats;
 
-pub use artifact::CalibrationArtifact;
+pub use artifact::{CalibrationArtifact, CalibrationGeometry};
 pub use autotune::{AutotuneConfig, BucketReport, VariantMeasurement, VariantTable};
 pub use plan::{CalibrationPlan, PlanBuilder, ScaleMethod, Smoothing};
 pub use stats::{CalibStats, StreamStats};

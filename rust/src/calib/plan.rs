@@ -120,6 +120,12 @@ pub struct CalibrationPlan {
     pub k_clip: Vec<f32>,
     /// Per-head clip on the token-level Q rowmax (empty → live rowmax).
     pub q_clip: Vec<f32>,
+    /// Measured per-channel K absmax, flat (heads, head_dim). Non-empty
+    /// switches the KV cache's K storage from token-level to per-channel
+    /// scales (the GPU INT8-KV-cache mode, consumed by
+    /// [`crate::kv::CacheConfig::calibrated`]); empty keeps the paper's
+    /// token-level K quantization.
+    pub k_channel_absmax: Vec<f32>,
     pub smoothing: Smoothing,
     pub method: ScaleMethod,
     /// Calibration batches behind this plan (0 → uncalibrated fallback).
@@ -137,10 +143,36 @@ impl CalibrationPlan {
             v_absmax: UNCALIBRATED_ABSMAX,
             k_clip: Vec::new(),
             q_clip: Vec::new(),
+            k_channel_absmax: Vec::new(),
             smoothing: Smoothing::None,
             method: ScaleMethod::AbsMax,
             batches: 0,
         }
+    }
+
+    /// Check this plan against a deployment geometry — the single
+    /// implementation behind what used to be scattered per-consumer
+    /// checks (`CacheConfig::calibrated` asserts, backend per-call head
+    /// checks, and `head_dim` previously unchecked anywhere).
+    pub fn validate_geometry(&self, heads: usize, head_dim: usize) -> Result<(), String> {
+        for (name, clips) in [("K", &self.k_clip), ("Q", &self.q_clip)] {
+            if !clips.is_empty() && clips.len() != heads {
+                return Err(format!(
+                    "calibration plan has {} {name} clips but the deployment has {heads} heads",
+                    clips.len()
+                ));
+            }
+        }
+        if !self.k_channel_absmax.is_empty()
+            && self.k_channel_absmax.len() != heads * head_dim
+        {
+            return Err(format!(
+                "calibration plan has {} per-channel K ranges but the deployment has \
+                 {heads} heads × {head_dim} dims",
+                self.k_channel_absmax.len()
+            ));
+        }
+        Ok(())
     }
 
     pub fn is_calibrated(&self) -> bool {
@@ -242,6 +274,15 @@ impl CalibrationPlan {
                 "q_clip",
                 Json::Arr(self.q_clip.iter().map(|&c| Json::num(c as f64)).collect()),
             ),
+            (
+                "k_channel_absmax",
+                Json::Arr(
+                    self.k_channel_absmax
+                        .iter()
+                        .map(|&c| Json::num(c as f64))
+                        .collect(),
+                ),
+            ),
             ("smoothing", Json::str(self.smoothing.name())),
             ("method", self.method.to_json()),
             ("batches", Json::num(self.batches as f64)),
@@ -269,6 +310,12 @@ impl CalibrationPlan {
         };
         let k_clip = clip_list("k_clip")?;
         let q_clip = clip_list("q_clip")?;
+        // absent in pre-per-channel artifacts — default to disabled
+        let k_channel_absmax = if j.at("k_channel_absmax").is_null() {
+            Vec::new()
+        } else {
+            clip_list("k_channel_absmax")?
+        };
         // empty means "operand unobserved — no clips"; when both are
         // present their head counts must agree
         if !k_clip.is_empty() && !q_clip.is_empty() && k_clip.len() != q_clip.len() {
@@ -292,12 +339,28 @@ impl CalibrationPlan {
         if k_clip.iter().chain(&q_clip).any(|c| !c.is_finite() || *c <= 0.0) {
             return Err("plan clip values must be positive and finite".to_string());
         }
+        if k_channel_absmax.iter().any(|c| !c.is_finite() || *c <= 0.0) {
+            return Err("plan per-channel K ranges must be positive and finite".to_string());
+        }
+        // channel count must factor over the clip head count when both
+        // are present (full geometry is validated at artifact load)
+        if !k_channel_absmax.is_empty()
+            && !k_clip.is_empty()
+            && k_channel_absmax.len() % k_clip.len() != 0
+        {
+            return Err(format!(
+                "plan has {} per-channel K ranges, not a multiple of {} heads",
+                k_channel_absmax.len(),
+                k_clip.len()
+            ));
+        }
         Ok(CalibrationPlan {
             r,
             v_scale,
             v_absmax,
             k_clip,
             q_clip,
+            k_channel_absmax,
             smoothing: j
                 .at("smoothing")
                 .as_str()
@@ -318,6 +381,9 @@ pub struct PlanBuilder {
     pub smoothing: Option<Smoothing>,
     pub spread_threshold: f32,
     pub r: f32,
+    /// Emit measured per-channel K ranges so the KV cache stores K with
+    /// per-(head, dim) scales instead of token-level ones.
+    pub per_channel_k: bool,
 }
 
 impl PlanBuilder {
@@ -329,6 +395,7 @@ impl PlanBuilder {
             // activations (the regime §2.3 cites) measure well above.
             spread_threshold: 4.5,
             r,
+            per_channel_k: false,
         }
     }
 
@@ -339,6 +406,11 @@ impl PlanBuilder {
 
     pub fn smoothing(mut self, s: Smoothing) -> PlanBuilder {
         self.smoothing = Some(s);
+        self
+    }
+
+    pub fn per_channel_k(mut self, on: bool) -> PlanBuilder {
+        self.per_channel_k = on;
         self
     }
 
@@ -385,12 +457,26 @@ impl PlanBuilder {
                 values
             }
         };
+        // per-channel K ranges: only when requested AND K was observed;
+        // dead channels get the scale floor instead of a zero range
+        // (from_json rejects non-positive ranges)
+        let k_channel_absmax = if self.per_channel_k && stats.k.iter().all(|s| s.rows() > 0)
+        {
+            stats
+                .k_dim_absmax
+                .iter()
+                .map(|&a| a.max(SCALE_EPS))
+                .collect()
+        } else {
+            Vec::new()
+        };
         CalibrationPlan {
             r: self.r,
             v_scale: v_absmax / self.r,
             v_absmax,
             k_clip: clips(&stats.k),
             q_clip: clips(&stats.q),
+            k_channel_absmax,
             smoothing,
             method: self.method,
             batches: stats.batches(),
@@ -643,6 +729,36 @@ mod tests {
         // a head with no calibrated clip falls back to live scales exactly
         let other_head = plan.attention_int_for_head(5, &q, &k, &v, &cfg, INT8_R);
         assert_eq!(other_head.data, unclipped.data);
+    }
+
+    #[test]
+    fn per_channel_k_plan_round_trips_and_validates() {
+        let (h, d) = (2usize, 8usize);
+        let mut cs = CalibStats::new(h, d);
+        let mut rng = Pcg64::seeded(21);
+        for _ in 0..4 {
+            let n = h * 16 * d;
+            cs.record_qkv(&rng.normal_vec(n), &rng.normal_vec(n), &rng.normal_vec(n), 16)
+                .unwrap();
+        }
+        let plan = PlanBuilder::new(INT8_R).per_channel_k(true).build(&cs);
+        assert_eq!(plan.k_channel_absmax.len(), h * d);
+        assert!(plan.k_channel_absmax.iter().all(|&c| c > 0.0));
+        assert!(plan.validate_geometry(h, d).is_ok());
+        assert!(plan.validate_geometry(h, d + 1).is_err());
+        assert!(plan.validate_geometry(h + 1, d).is_err());
+        let restored = CalibrationPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(restored, plan);
+        // pre-per-channel artifacts (no field) parse to the disabled mode
+        let mut j = plan.to_json();
+        if let crate::util::json::Json::Obj(map) = &mut j {
+            map.remove("k_channel_absmax");
+        }
+        let legacy = CalibrationPlan::from_json(&j).unwrap();
+        assert!(legacy.k_channel_absmax.is_empty());
+        // default builder stays token-level (the paper's operand format)
+        let off = PlanBuilder::new(INT8_R).build(&cs);
+        assert!(off.k_channel_absmax.is_empty());
     }
 
     #[test]

@@ -208,6 +208,10 @@ pub struct CalibStats {
     pub q: Vec<StreamStats>,
     pub k: Vec<StreamStats>,
     pub v: StreamStats,
+    /// Per-channel K absmax, flat (heads, head_dim) — feeds the optional
+    /// per-channel K-scale mode of [`super::plan::PlanBuilder`] (the GPU
+    /// INT8-KV-cache line of work).
+    pub k_dim_absmax: Vec<f32>,
     batches: u64,
 }
 
@@ -220,7 +224,20 @@ impl CalibStats {
             q: vec![StreamStats::new(); heads],
             k: vec![StreamStats::new(); heads],
             v: StreamStats::new(),
+            k_dim_absmax: vec![0.0; heads * head_dim],
             batches: 0,
+        }
+    }
+
+    /// Fold one head's K rows (flat, row length `head_dim`) into the
+    /// per-channel absmax tracker.
+    fn record_k_dims(&mut self, head: usize, rows: &[f32]) {
+        let d = self.head_dim;
+        for row in rows.chunks_exact(d) {
+            let dims = &mut self.k_dim_absmax[head * d..(head + 1) * d];
+            for (c, &x) in dims.iter_mut().zip(row) {
+                *c = c.max(x.abs());
+            }
         }
     }
 
@@ -254,6 +271,7 @@ impl CalibStats {
             self.q[h].record_flat(&q[h * span..(h + 1) * span], d);
             self.k[h].record_flat(&k[h * span..(h + 1) * span], d);
             self.v.record_flat(&v[h * span..(h + 1) * span], d);
+            self.record_k_dims(h, &k[h * span..(h + 1) * span]);
         }
         self.batches += 1;
         Ok(())
@@ -272,6 +290,7 @@ impl CalibStats {
         for h in 0..self.heads {
             self.k[h].record_row(&k[h * d..(h + 1) * d]);
             self.v.record_row(&v[h * d..(h + 1) * d]);
+            self.record_k_dims(h, &k[h * d..(h + 1) * d]);
         }
         self.batches += 1;
         Ok(())
@@ -304,6 +323,9 @@ impl CalibStats {
             a.merge(b);
         }
         self.v.merge(&other.v);
+        for (a, &b) in self.k_dim_absmax.iter_mut().zip(&other.k_dim_absmax) {
+            *a = a.max(b);
+        }
         self.batches += other.batches;
         Ok(())
     }
@@ -447,6 +469,42 @@ mod tests {
         assert!(cs.record_kv_token(&q[..h * d], &v[..h * d - 1]).is_err());
         cs.record_kv_token(&k[..h * d], &v[..h * d]).unwrap();
         assert_eq!(cs.batches(), 2);
+    }
+
+    #[test]
+    fn per_channel_k_absmax_tracks_columns() {
+        let (h, d, n) = (2usize, 8usize, 12usize);
+        let mut cs = CalibStats::new(h, d);
+        let mut rng = Pcg64::seeded(12);
+        let q = rng.normal_vec(h * n * d);
+        let k = rng.normal_vec(h * n * d);
+        let v = rng.normal_vec(h * n * d);
+        cs.record_qkv(&q, &k, &v, n).unwrap();
+        // decode-path rows fold in too
+        let kt = rng.normal_vec(h * d);
+        let vt = rng.normal_vec(h * d);
+        cs.record_kv_token(&kt, &vt).unwrap();
+        let span = n * d;
+        for head in 0..h {
+            for dim in 0..d {
+                let mut want = kt[head * d + dim].abs();
+                for t in 0..n {
+                    want = want.max(k[head * span + t * d + dim].abs());
+                }
+                assert_eq!(cs.k_dim_absmax[head * d + dim], want, "head {head} dim {dim}");
+            }
+        }
+        // merge takes the elementwise max
+        let mut other = CalibStats::new(h, d);
+        other.record_kv_token(&vt, &kt).unwrap();
+        let mut merged = cs.clone();
+        merged.merge(&other).unwrap();
+        for i in 0..h * d {
+            assert_eq!(
+                merged.k_dim_absmax[i],
+                cs.k_dim_absmax[i].max(other.k_dim_absmax[i])
+            );
+        }
     }
 
     #[test]

@@ -11,9 +11,10 @@ use super::request::{AccuracyClass, Request, RequestPayload, Response};
 use super::router::{Bucket, BucketRouter};
 use crate::attention::{multihead, AttnConfig, Variant};
 use crate::calib::{CalibrationArtifact, CalibrationPlan};
+use crate::kv::RadixKvCache;
 use crate::quant::{INT4_R, INT8_R};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batch execution backend.
@@ -89,15 +90,9 @@ impl Backend for CalibratedNativeBackend {
     ) -> Result<Vec<f32>, String> {
         let (b, h, n, d) = (bucket.batch, bucket.heads, bucket.seq, bucket.head_dim);
         // same fail-fast policy as CacheConfig::calibrated: a plan
-        // calibrated for a different head count must not be half-applied
-        for (name, clips) in [("K", &self.plan.k_clip), ("Q", &self.plan.q_clip)] {
-            if !clips.is_empty() && clips.len() != h {
-                return Err(format!(
-                    "calibration plan has {} {name} clips but bucket has {h} heads",
-                    clips.len()
-                ));
-            }
-        }
+        // calibrated for a different geometry must not be half-applied
+        // (one shared check — see CalibrationPlan::validate_geometry)
+        self.plan.validate_geometry(h, d)?;
         let qb = multihead::HeadBatch::from_flat(b, h, n, d, q);
         let kb = multihead::HeadBatch::from_flat(b, h, n, d, k);
         let vb = multihead::HeadBatch::from_flat(b, h, n, d, v);
@@ -255,12 +250,36 @@ struct WorkItem {
     permits: Vec<Permit>,
 }
 
+/// The engine's shared-prefix KV cache runtime (see [`crate::kv`]).
+struct KvRuntime {
+    cache: Mutex<RadixKvCache>,
+    /// split-K workers per decode call
+    splitk: usize,
+}
+
+/// Outcome of [`Engine::prefill`].
+#[derive(Clone, Debug)]
+pub struct PrefillResponse {
+    /// KV-cache sequence handle for follow-up `extend`/`decode` calls.
+    pub seq_id: u64,
+    /// Tokens whose prefill was skipped via radix prefix reuse.
+    pub cached_tokens: usize,
+    /// Tokens actually prefilled (quantized + appended) by this call.
+    pub new_tokens: usize,
+    /// Attention output for the new tokens, flat (heads, new_tokens, d);
+    /// `None` when the whole prompt was cached (prefill fully skipped).
+    pub output: Option<Vec<f32>>,
+    /// Kernel variant that produced `output` (`None` with it).
+    pub variant: Option<Variant>,
+}
+
 /// The serving engine handle. Dropping it drains and joins all threads.
 pub struct Engine {
     tx: Sender<SchedMsg>,
     gate: Arc<Gate>,
     router: Arc<BucketRouter>,
     calibration: Option<CalibrationArtifact>,
+    kv: Option<KvRuntime>,
     pub metrics: Arc<Registry>,
     next_id: std::sync::atomic::AtomicU64,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -340,10 +359,27 @@ impl Engine {
             gate,
             router,
             calibration,
+            kv: None,
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
             threads,
         }
+    }
+
+    /// Attach a shared-prefix KV cache: enables the `prefill` / `extend`
+    /// / `decode` / `kv_release` serving surface, with `splitk` worker
+    /// threads per decode call.
+    pub fn with_kv(mut self, cache: RadixKvCache, splitk: usize) -> Engine {
+        self.metrics.gauge("kv.enabled").set(1);
+        self.metrics
+            .gauge("kv.blocks.free")
+            .set(cache.blocks_free() as i64);
+        self.kv = Some(KvRuntime { cache: Mutex::new(cache), splitk: splitk.max(1) });
+        self
+    }
+
+    pub fn has_kv(&self) -> bool {
+        self.kv.is_some()
     }
 
     pub fn router(&self) -> &BucketRouter {
@@ -410,6 +446,204 @@ impl Engine {
     ) -> Response {
         let (_, rx) = self.submit(accuracy, payload);
         rx.recv().expect("engine dropped response channel")
+    }
+
+    /// Prefill a prompt into the KV cache, routing prefix-cache hits
+    /// *around* prefill:
+    ///
+    /// - every token covered by a radix prefix hit reuses its shared
+    ///   already-quantized blocks — no quantization, no attention;
+    /// - a fully cached prompt skips the batched pipeline entirely
+    ///   (`kv.prefill.batches_skipped`), for every accuracy class — there
+    ///   are no new rows to compute;
+    /// - a partial hit under [`AccuracyClass::Fast`] computes only the
+    ///   suffix rows through the cache's split-K decode path (causally
+    ///   exact over the shared prefix, full-INT8 — exactly Fast's
+    ///   operating point). `Balanced`/`Exact` requests never downgrade to
+    ///   the quantized cache path: their suffix rows come from the
+    ///   batched pipeline under the router's variant for that class;
+    /// - a cold prompt appends all tokens and runs attention through the
+    ///   normal router → batcher → worker pipeline.
+    ///
+    /// `tokens` are the prompt's token ids (`tokens.len() == payload.seq`)
+    /// and `payload` carries the (heads, seq, d) Q/K/V activations. The
+    /// returned output always covers the *new* tokens only.
+    pub fn prefill(
+        &self,
+        accuracy: AccuracyClass,
+        tokens: &[u32],
+        payload: RequestPayload,
+    ) -> Result<PrefillResponse, String> {
+        let kv = self.kv.as_ref().ok_or("kv cache not enabled")?;
+        payload.validate()?;
+        if tokens.len() != payload.seq {
+            return Err(format!(
+                "{} tokens but payload seq {}",
+                tokens.len(),
+                payload.seq
+            ));
+        }
+        let (h, n, d) = (payload.heads, payload.seq, payload.head_dim);
+        // one token's flat (heads, d) rows out of the (heads, seq, d) payload
+        let gather = |buf: &[f32], t: usize| -> Vec<f32> {
+            let mut row = Vec::with_capacity(h * d);
+            for head in 0..h {
+                let base = head * n * d + t * d;
+                row.extend_from_slice(&buf[base..base + d]);
+            }
+            row
+        };
+
+        let mut cache = kv.cache.lock().unwrap();
+        let cfg = cache.config();
+        if cfg.heads != h || cfg.head_dim != d {
+            return Err(format!(
+                "kv cache is {}×{} (heads×head_dim) but the request is {h}×{d}",
+                cfg.heads, cfg.head_dim
+            ));
+        }
+        let int_variant = if cfg.r == INT4_R { Variant::Int4 } else { Variant::Int8 };
+        let (seq_id, cached) = cache.start_sequence(tokens);
+        let new_tokens = n - cached;
+
+        let abort = |cache: &mut RadixKvCache, e: String| -> String {
+            let _ = cache.free_sequence(seq_id);
+            e
+        };
+
+        let (output, variant) = if new_tokens == 0 {
+            // fully cached: no new rows for any accuracy class
+            self.metrics.counter("kv.prefill.batches_skipped").inc();
+            self.metrics.counter("kv.prefill.fully_cached").inc();
+            self.sync_kv_metrics(&cache);
+            (None, None)
+        } else if cached > 0 && accuracy == AccuracyClass::Fast {
+            // warm + Fast: the batched prefill is skipped — only suffix
+            // rows run, via single-query INT8 attention over the cached
+            // codes (append/decode interleave keeps causality exact)
+            self.metrics.counter("kv.prefill.batches_skipped").inc();
+            let mut o = vec![0.0f32; h * new_tokens * d];
+            for t in cached..n {
+                cache
+                    .append_token(
+                        seq_id,
+                        tokens[t],
+                        &gather(&payload.k, t),
+                        &gather(&payload.v, t),
+                    )
+                    .map_err(|e| abort(&mut cache, format!("kv append: {e}")))?;
+                let workers = cache.suggested_splitk(seq_id, kv.splitk);
+                let row = cache
+                    .decode_attention_splitk(seq_id, &gather(&payload.q, t), None, workers)
+                    .map_err(|e| abort(&mut cache, format!("kv decode: {e}")))?;
+                for head in 0..h {
+                    let dst = head * new_tokens * d + (t - cached) * d;
+                    o[dst..dst + d].copy_from_slice(&row[head * d..(head + 1) * d]);
+                }
+            }
+            self.sync_kv_metrics(&cache);
+            (Some(o), Some(int_variant))
+        } else {
+            // cold prompt, or a warm Balanced/Exact request whose
+            // accuracy contract the quantized cache path must not
+            // override: append the missing suffix, then run the batched
+            // pipeline and keep only the new rows
+            for t in cached..n {
+                cache
+                    .append_token(
+                        seq_id,
+                        tokens[t],
+                        &gather(&payload.k, t),
+                        &gather(&payload.v, t),
+                    )
+                    .map_err(|e| abort(&mut cache, format!("kv append: {e}")))?;
+            }
+            self.sync_kv_metrics(&cache);
+            drop(cache); // batched execution must not hold the cache lock
+            let resp = self.submit_blocking(accuracy, payload);
+            match resp.result {
+                Ok(full) => {
+                    let o = if cached == 0 {
+                        full
+                    } else {
+                        let mut o = vec![0.0f32; h * new_tokens * d];
+                        for head in 0..h {
+                            let src = head * n * d + cached * d;
+                            let dst = head * new_tokens * d;
+                            let len = new_tokens * d;
+                            o[dst..dst + len].copy_from_slice(&full[src..src + len]);
+                        }
+                        o
+                    };
+                    (Some(o), resp.variant)
+                }
+                Err(e) => {
+                    let mut cache = kv.cache.lock().unwrap();
+                    return Err(abort(&mut cache, e));
+                }
+            }
+        };
+        self.metrics.counter("kv.prefill").inc();
+        Ok(PrefillResponse { seq_id, cached_tokens: cached, new_tokens, output, variant })
+    }
+
+    /// Append one generated token's K/V to a cached sequence (the
+    /// autoregressive step between decodes).
+    pub fn extend(&self, seq_id: u64, token: u32, k: &[f32], v: &[f32]) -> Result<(), String> {
+        let kv = self.kv.as_ref().ok_or("kv cache not enabled")?;
+        let mut cache = kv.cache.lock().unwrap();
+        cache
+            .append_token(seq_id, token, k, v)
+            .map_err(|e| e.to_string())?;
+        self.sync_kv_metrics(&cache);
+        Ok(())
+    }
+
+    /// Split-K decode: one query token (flat (heads, d)) attends to the
+    /// sequence's entire cached K/V. The worker count adapts to the
+    /// sequence length (short sequences don't pay thread spawns).
+    pub fn decode(&self, seq_id: u64, q: &[f32]) -> Result<Vec<f32>, String> {
+        let kv = self.kv.as_ref().ok_or("kv cache not enabled")?;
+        let t0 = Instant::now();
+        let cache = kv.cache.lock().unwrap();
+        let workers = cache.suggested_splitk(seq_id, kv.splitk);
+        let out = cache
+            .decode_attention_splitk(seq_id, q, None, workers)
+            .map_err(|e| e.to_string())?;
+        self.metrics
+            .histogram("kv.decode_us")
+            .observe_us(t0.elapsed().as_micros() as u64);
+        self.metrics.counter("kv.decoded").inc();
+        Ok(out)
+    }
+
+    /// Release a cached sequence's block references (trie-shared blocks
+    /// stay resident for future prefix hits).
+    pub fn kv_release(&self, seq_id: u64) -> Result<(), String> {
+        let kv = self.kv.as_ref().ok_or("kv cache not enabled")?;
+        let mut cache = kv.cache.lock().unwrap();
+        cache.free_sequence(seq_id).map_err(|e| e.to_string())?;
+        self.sync_kv_metrics(&cache);
+        Ok(())
+    }
+
+    /// Mirror the cache's sharing/reuse counters into the registry
+    /// (exported through the server's `metrics` verb).
+    fn sync_kv_metrics(&self, cache: &RadixKvCache) {
+        let s = cache.stats();
+        self.metrics.gauge("kv.blocks.free").set(cache.blocks_free() as i64);
+        self.metrics
+            .gauge("kv.blocks.shared")
+            .set(cache.blocks_shared() as i64);
+        self.metrics.gauge("kv.prefix.hits").set(s.prefix_hits as i64);
+        self.metrics
+            .gauge("kv.prefix.misses")
+            .set(s.prefix_misses as i64);
+        self.metrics
+            .gauge("kv.prefix.tokens_reused")
+            .set(s.tokens_reused as i64);
+        self.metrics.gauge("kv.evictions").set(s.evictions as i64);
+        self.metrics.gauge("kv.cow_copies").set(s.cow_copies as i64);
     }
 }
 
@@ -812,6 +1046,7 @@ mod tests {
                 }],
             },
             reports: Vec::new(),
+            geometry: None,
         };
         let e = Engine::with_calibration(
             native_router(),
@@ -845,6 +1080,66 @@ mod tests {
         let resp = e.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, 20, 16));
         // static Fast chain → int8
         assert_eq!(resp.variant, Some(Variant::Int8));
+    }
+
+    #[test]
+    fn kv_prefill_hit_skips_batched_pipeline() {
+        use crate::kv::{CacheConfig, RadixKvCache};
+        let cache = RadixKvCache::new(CacheConfig {
+            block_tokens: 8,
+            max_blocks: 64,
+            ..CacheConfig::new(2, 16)
+        });
+        let e = engine(EngineConfig { policy: BatchPolicy::Eager, ..EngineConfig::default() })
+            .with_kv(cache, 2);
+        assert!(e.has_kv());
+        let mut rng = Pcg64::seeded(9);
+        let p = payload(&mut rng, 2, 16, 16);
+        let tokens: Vec<u32> = (0..16).collect();
+
+        // cold: runs through the batched pipeline
+        let cold = e
+            .prefill(AccuracyClass::Fast, &tokens, p.clone())
+            .expect("cold prefill");
+        assert_eq!(cold.cached_tokens, 0);
+        assert_eq!(cold.new_tokens, 16);
+        assert_eq!(cold.variant, Some(Variant::Int8));
+        assert_eq!(cold.output.as_ref().map(Vec::len), Some(2 * 16 * 16));
+        let batches_after_cold = e.metrics.counter("batches.formed").get();
+        assert!(batches_after_cold >= 1);
+
+        // warm: identical prompt — both full blocks reused, the batched
+        // prefill is provably skipped (no new batch forms)
+        let warm = e
+            .prefill(AccuracyClass::Fast, &tokens, p.clone())
+            .expect("warm prefill");
+        assert_eq!(warm.cached_tokens, 16);
+        assert_eq!(warm.new_tokens, 0);
+        assert!(warm.output.is_none());
+        assert_eq!(e.metrics.counter("batches.formed").get(), batches_after_cold);
+        assert_eq!(e.metrics.counter("kv.prefill.batches_skipped").get(), 1);
+        assert_eq!(e.metrics.counter("kv.prefill.fully_cached").get(), 1);
+        assert_eq!(e.metrics.gauge("kv.prefix.tokens_reused").get(), 16);
+        assert!(e.metrics.gauge("kv.blocks.shared").get() >= 2);
+
+        // the autoregressive surface: extend + decode on the warm sequence
+        let q: Vec<f32> = rng.normal_vec(2 * 16);
+        let k: Vec<f32> = rng.normal_vec(2 * 16);
+        let v: Vec<f32> = rng.normal_vec(2 * 16);
+        e.extend(warm.seq_id, 99, &k, &v).expect("extend");
+        let out = e.decode(warm.seq_id, &q).expect("decode");
+        assert_eq!(out.len(), 2 * 16);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert_eq!(e.metrics.counter("kv.decoded").get(), 1);
+
+        e.kv_release(cold.seq_id).expect("release cold");
+        e.kv_release(warm.seq_id).expect("release warm");
+        assert!(e.kv_release(warm.seq_id).is_err(), "double release");
+
+        // engines without a cache reject the kv surface
+        let bare = engine(EngineConfig::default());
+        assert!(bare.prefill(AccuracyClass::Fast, &tokens, p).is_err());
+        assert!(bare.decode(1, &q).is_err());
     }
 
     #[test]

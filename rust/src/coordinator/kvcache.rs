@@ -1,519 +1,11 @@
-//! Quantized paged KV cache + decode attention.
+//! Thin re-export of the [`crate::kv`] subsystem, which subsumed the
+//! paged quantized KV cache that used to live here.
 //!
-//! The serving-side payoff of the paper's INT8 K/V storage: the KV cache
-//! is the memory bottleneck of LLM inference, and token-level INT8 K plus
-//! tensor-level INT8 V (exactly Algorithm 1's operand formats) halve its
-//! footprint vs fp16 while feeding the integer GEMM decode path directly.
-//!
-//! Layout is vLLM-style paged: fixed-size token blocks from a shared
-//! pool, per-sequence block lists, O(1) alloc/free. Decode runs the
-//! paper's online-softmax INT8 arithmetic (P = round(R·exp(s−m)),
-//! l carries R) block by block over the cached codes — a single-query
-//! specialization of Algorithm 1.
+//! The old `KvCachePool` surface (anonymous sequences, `append`,
+//! `decode_attention`) is preserved as an alias of
+//! [`crate::kv::RadixKvCache`]; new code should use `crate::kv` directly
+//! for prefix sharing ([`crate::kv::RadixKvCache::start_sequence`]),
+//! copy-on-write forking and split-K decode.
 
-use crate::calib::plan::CalibrationPlan;
-use crate::quant::{self, SCALE_EPS};
-use std::collections::HashMap;
-
-/// Cache geometry + quantization scales.
-///
-/// The scales come from a [`CalibrationPlan`]: [`CacheConfig::new`] uses
-/// the documented uncalibrated fallback (N(0,1) absmax guess — serving
-/// works but scales are guesses), [`CacheConfig::calibrated`] uses
-/// measured traffic statistics.
-#[derive(Clone, Debug)]
-pub struct CacheConfig {
-    pub heads: usize,
-    pub head_dim: usize,
-    /// tokens per block
-    pub block_tokens: usize,
-    /// pool capacity in blocks (shared across sequences)
-    pub max_blocks: usize,
-    /// tensor-level V scale (paper: fixed post-training / calibration)
-    pub v_scale: f32,
-    /// quantization range (127 INT8, 7 INT4)
-    pub r: f32,
-    /// per-head clip on the token-level K rowmax (empty → live rowmax)
-    pub k_clip: Vec<f32>,
-}
-
-impl CacheConfig {
-    /// Uncalibrated fallback: scales from
-    /// [`CalibrationPlan::uncalibrated`] (the N(0,1) absmax≈4 guess).
-    /// Run calibration and use [`CacheConfig::calibrated`] in production.
-    pub fn new(heads: usize, head_dim: usize) -> CacheConfig {
-        Self::calibrated(
-            heads,
-            head_dim,
-            &CalibrationPlan::uncalibrated(quant::INT8_R),
-        )
-    }
-
-    /// Derive the V scale, range and per-head K clips from a plan.
-    /// A plan calibrated for a different head count is a deployment
-    /// error — rejected here rather than silently half-applied.
-    pub fn calibrated(heads: usize, head_dim: usize, plan: &CalibrationPlan) -> CacheConfig {
-        assert!(
-            plan.k_clip.is_empty() || plan.k_clip.len() == heads,
-            "calibration plan has {} K clips but the cache has {heads} heads",
-            plan.k_clip.len()
-        );
-        CacheConfig {
-            heads,
-            head_dim,
-            block_tokens: 16,
-            max_blocks: 1024,
-            v_scale: plan.v_scale,
-            r: plan.r,
-            k_clip: plan.k_clip.clone(),
-        }
-    }
-
-    /// Apply this cache's calibrated clip to a K rowmax for `head`
-    /// (identity when uncalibrated).
-    pub fn clip_k_rowmax(&self, head: usize, rowmax: f32) -> f32 {
-        match self.k_clip.get(head) {
-            Some(&clip) => rowmax.min(clip),
-            None => rowmax,
-        }
-    }
-}
-
-/// One pool block: INT8 K/V codes + per-token K scales for every head.
-/// K codes layout: (heads, block_tokens, d); scales (heads, block_tokens).
-struct Block {
-    k_codes: Vec<i8>,
-    v_codes: Vec<i8>,
-    k_scales: Vec<f32>,
-}
-
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum CacheError {
-    OutOfBlocks,
-    UnknownSequence(u64),
-    BadShape { expected: usize, got: usize },
-}
-
-impl std::fmt::Display for CacheError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            CacheError::OutOfBlocks => write!(f, "KV cache pool exhausted"),
-            CacheError::UnknownSequence(id) => write!(f, "unknown sequence {id}"),
-            CacheError::BadShape { expected, got } => {
-                write!(f, "bad activation shape: expected {expected} values, got {got}")
-            }
-        }
-    }
-}
-
-struct Sequence {
-    blocks: Vec<usize>,
-    len_tokens: usize,
-}
-
-/// Paged quantized KV cache for one attention layer.
-pub struct KvCachePool {
-    cfg: CacheConfig,
-    blocks: Vec<Block>,
-    free: Vec<usize>,
-    seqs: HashMap<u64, Sequence>,
-    next_id: u64,
-}
-
-impl KvCachePool {
-    pub fn new(cfg: CacheConfig) -> KvCachePool {
-        let kv_elems = cfg.heads * cfg.block_tokens * cfg.head_dim;
-        let blocks = (0..cfg.max_blocks)
-            .map(|_| Block {
-                k_codes: vec![0; kv_elems],
-                v_codes: vec![0; kv_elems],
-                k_scales: vec![0.0; cfg.heads * cfg.block_tokens],
-            })
-            .collect();
-        KvCachePool {
-            cfg,
-            blocks,
-            free: (0..cfg.max_blocks).rev().collect(),
-            seqs: HashMap::new(),
-            next_id: 1,
-        }
-    }
-
-    pub fn config(&self) -> &CacheConfig {
-        &self.cfg
-    }
-
-    /// Start a new sequence; returns its id.
-    pub fn alloc_sequence(&mut self) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.seqs.insert(id, Sequence { blocks: Vec::new(), len_tokens: 0 });
-        id
-    }
-
-    /// Release a sequence's blocks back to the pool.
-    pub fn free_sequence(&mut self, id: u64) -> Result<(), CacheError> {
-        let seq = self.seqs.remove(&id).ok_or(CacheError::UnknownSequence(id))?;
-        self.free.extend(seq.blocks);
-        Ok(())
-    }
-
-    pub fn seq_len(&self, id: u64) -> Option<usize> {
-        self.seqs.get(&id).map(|s| s.len_tokens)
-    }
-
-    pub fn blocks_free(&self) -> usize {
-        self.free.len()
-    }
-
-    /// Cache bytes used by one token across all heads (codes + scales).
-    pub fn bytes_per_token(&self) -> usize {
-        // int8 K + int8 V + f32 K scale, per head
-        self.cfg.heads * (2 * self.cfg.head_dim + 4)
-    }
-
-    /// fp16 baseline bytes per token (2 bytes per K and V element).
-    pub fn fp16_bytes_per_token(&self) -> usize {
-        self.cfg.heads * 2 * 2 * self.cfg.head_dim
-    }
-
-    /// Append one token's K/V activations (flat (heads, d) f32 each).
-    /// Quantizes K token-level per head, V with the fixed tensor scale.
-    pub fn append(&mut self, id: u64, k: &[f32], v: &[f32]) -> Result<(), CacheError> {
-        let (h, d, bt) = (self.cfg.heads, self.cfg.head_dim, self.cfg.block_tokens);
-        if k.len() != h * d || v.len() != h * d {
-            return Err(CacheError::BadShape { expected: h * d, got: k.len() });
-        }
-        let seq = self
-            .seqs
-            .get_mut(&id)
-            .ok_or(CacheError::UnknownSequence(id))?;
-        let slot = seq.len_tokens % bt;
-        if slot == 0 {
-            // need a fresh block
-            let block = self.free.pop().ok_or(CacheError::OutOfBlocks)?;
-            seq.blocks.push(block);
-        }
-        let block_idx = *seq.blocks.last().unwrap();
-        let block = &mut self.blocks[block_idx];
-        let r = self.cfg.r;
-        let inv_v = 1.0 / self.cfg.v_scale;
-        for head in 0..h {
-            let krow = &k[head * d..(head + 1) * d];
-            let rowmax = krow.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-            // calibrated per-head clip: outlier tokens saturate instead of
-            // blowing up the whole row's quantization grid
-            let absmax = self.cfg.clip_k_rowmax(head, rowmax);
-            let scale = absmax.max(SCALE_EPS) / r;
-            let inv = 1.0 / scale;
-            let base = head * bt * d + slot * d;
-            for (i, &x) in krow.iter().enumerate() {
-                block.k_codes[base + i] = (x * inv).round().clamp(-(r + 1.0), r) as i8;
-            }
-            block.k_scales[head * bt + slot] = scale;
-            let vrow = &v[head * d..(head + 1) * d];
-            for (i, &x) in vrow.iter().enumerate() {
-                block.v_codes[base + i] =
-                    (x * inv_v).round().clamp(-(r + 1.0), r) as i8;
-            }
-        }
-        seq.len_tokens += 1;
-        Ok(())
-    }
-
-    /// Decode attention: one query token (flat (heads, d) f32) attends to
-    /// the sequence's entire cached K/V. Returns flat (heads, d) f32.
-    ///
-    /// Single-query Algorithm 1: per block j — s = (q₈·k₈)·S_q·S_k·τ,
-    /// m/l online update with P = round(R·exp(s−m)), Õ += P·V₈ in i32 —
-    /// then O = Õ·S_V / l.
-    pub fn decode_attention(
-        &self,
-        id: u64,
-        q: &[f32],
-        sm_scale: Option<f32>,
-    ) -> Result<Vec<f32>, CacheError> {
-        let (h, d, bt) = (self.cfg.heads, self.cfg.head_dim, self.cfg.block_tokens);
-        if q.len() != h * d {
-            return Err(CacheError::BadShape { expected: h * d, got: q.len() });
-        }
-        let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSequence(id))?;
-        let r = self.cfg.r;
-        let tau = sm_scale.unwrap_or(1.0 / (d as f32).sqrt());
-        let mut out = vec![0.0f32; h * d];
-
-        for head in 0..h {
-            let qrow = &q[head * d..(head + 1) * d];
-            // quantize the query token-level
-            let absmax = qrow.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-            let q_scale = absmax.max(SCALE_EPS) / r;
-            let inv = 1.0 / q_scale;
-            let q8: Vec<i8> = qrow
-                .iter()
-                .map(|&x| (x * inv).round().clamp(-(r + 1.0), r) as i8)
-                .collect();
-
-            let mut m = f32::NEG_INFINITY;
-            let mut l = 0.0f32;
-            let mut acc = vec![0.0f32; d];
-            let mut remaining = seq.len_tokens;
-            for &bi in &seq.blocks {
-                let block = &self.blocks[bi];
-                let tokens = remaining.min(bt);
-                // s_t for each cached token t in this block
-                for t in 0..tokens {
-                    let base = head * bt * d + t * d;
-                    let mut dot = 0i32;
-                    for i in 0..d {
-                        dot += q8[i] as i32 * block.k_codes[base + i] as i32;
-                    }
-                    let s = dot as f32 * q_scale * block.k_scales[head * bt + t] * tau;
-                    let m_new = m.max(s);
-                    let alpha = if m.is_finite() { (m - m_new).exp() } else { 0.0 };
-                    let p = (r * (s - m_new).exp()).round();
-                    l = l * alpha + p;
-                    let p8 = p as i32;
-                    for (a, &vc) in acc.iter_mut().zip(&block.v_codes[base..base + d]) {
-                        *a = *a * alpha + (p8 * vc as i32) as f32;
-                    }
-                    m = m_new;
-                }
-                remaining -= tokens;
-            }
-            let rescale = self.cfg.v_scale / l.max(SCALE_EPS);
-            for (o, a) in out[head * d..(head + 1) * d].iter_mut().zip(&acc) {
-                *o = a * rescale;
-            }
-        }
-        Ok(out)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::attention::{reference, AttnConfig};
-    use crate::tensor::MatF32;
-    use crate::util::rng::{Dist, Pcg64};
-    use crate::util::stats;
-
-    fn cfg(heads: usize, d: usize) -> CacheConfig {
-        CacheConfig { block_tokens: 8, max_blocks: 64, ..CacheConfig::new(heads, d) }
-    }
-
-    #[test]
-    fn decode_matches_reference_attention() {
-        let (h, d, n) = (2usize, 32usize, 40usize);
-        let mut pool = KvCachePool::new(cfg(h, d));
-        let id = pool.alloc_sequence();
-        let mut rng = Pcg64::seeded(1);
-        // per-head K/V histories
-        let mut ks = vec![MatF32::zeros(n, d), MatF32::zeros(n, d)];
-        let mut vs = vec![MatF32::zeros(n, d), MatF32::zeros(n, d)];
-        for t in 0..n {
-            let k: Vec<f32> = rng.normal_vec(h * d);
-            let v: Vec<f32> = rng.normal_vec(h * d);
-            for head in 0..h {
-                for i in 0..d {
-                    ks[head].set(t, i, k[head * d + i]);
-                    vs[head].set(t, i, v[head * d + i]);
-                }
-            }
-            pool.append(id, &k, &v).unwrap();
-        }
-        assert_eq!(pool.seq_len(id), Some(n));
-
-        let q: Vec<f32> = rng.normal_vec(h * d);
-        let out = pool.decode_attention(id, &q, None).unwrap();
-        for head in 0..h {
-            let qm = MatF32::from_vec(1, d, q[head * d..(head + 1) * d].to_vec());
-            let gold = reference::standard_attention(
-                &qm, &ks[head], &vs[head], &AttnConfig::new(d),
-            );
-            let e = stats::mre(&out[head * d..(head + 1) * d], &gold.data);
-            assert!(e < 0.08, "head {head}: mre {e}");
-        }
-    }
-
-    #[test]
-    fn append_across_block_boundaries() {
-        let (h, d) = (1usize, 8usize);
-        let mut pool = KvCachePool::new(cfg(h, d)); // block_tokens = 8
-        let id = pool.alloc_sequence();
-        let free0 = pool.blocks_free();
-        let mut rng = Pcg64::seeded(2);
-        for t in 0..17 {
-            pool.append(id, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
-            let expected_blocks = t / 8 + 1;
-            assert_eq!(pool.blocks_free(), free0 - expected_blocks);
-        }
-        assert_eq!(pool.seq_len(id), Some(17));
-    }
-
-    #[test]
-    fn pool_exhaustion_and_reuse() {
-        let (h, d) = (1usize, 8usize);
-        let mut pool = KvCachePool::new(CacheConfig {
-            block_tokens: 4,
-            max_blocks: 2,
-            ..CacheConfig::new(h, d)
-        });
-        let a = pool.alloc_sequence();
-        let mut rng = Pcg64::seeded(3);
-        for _ in 0..8 {
-            pool.append(a, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
-        }
-        // pool is full
-        let err = pool.append(a, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap_err();
-        assert_eq!(err, CacheError::OutOfBlocks);
-        // freeing returns capacity
-        pool.free_sequence(a).unwrap();
-        assert_eq!(pool.blocks_free(), 2);
-        let b = pool.alloc_sequence();
-        for _ in 0..8 {
-            pool.append(b, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
-        }
-    }
-
-    #[test]
-    fn calibrated_scales_beat_uncalibrated_fallback() {
-        use crate::calib::{CalibStats, PlanBuilder};
-        // decode traffic whose V sits at ~0.5σ: the N(0,1) fallback grid
-        // wastes most of its range, a calibrated grid does not
-        let (h, d, n) = (1usize, 32usize, 48usize);
-        let mut rng = Pcg64::seeded(7);
-        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
-            .map(|_| {
-                let k: Vec<f32> = rng.normal_vec(h * d);
-                let v: Vec<f32> = rng.normal_vec(h * d).iter().map(|x| x * 0.5).collect();
-                (k, v)
-            })
-            .collect();
-        let q: Vec<f32> = rng.normal_vec(h * d);
-
-        let mut cs = CalibStats::new(h, d);
-        for (k, v) in &toks {
-            cs.record_kv_token(k, v).unwrap();
-        }
-        let plan = PlanBuilder::new(quant::INT8_R).build(&cs);
-        assert!(plan.v_absmax < 3.0, "0.5σ V absmax, got {}", plan.v_absmax);
-
-        let run = |cfg: CacheConfig| -> Vec<f32> {
-            let mut pool = KvCachePool::new(CacheConfig {
-                block_tokens: 8,
-                max_blocks: 64,
-                ..cfg
-            });
-            let id = pool.alloc_sequence();
-            for (k, v) in &toks {
-                pool.append(id, k, v).unwrap();
-            }
-            pool.decode_attention(id, &q, None).unwrap()
-        };
-        let out_cal = run(CacheConfig::calibrated(h, d, &plan));
-        let out_unc = run(CacheConfig::new(h, d));
-
-        let mut ks = MatF32::zeros(n, d);
-        let mut vs = MatF32::zeros(n, d);
-        for (t, (k, v)) in toks.iter().enumerate() {
-            for i in 0..d {
-                ks.set(t, i, k[i]);
-                vs.set(t, i, v[i]);
-            }
-        }
-        let qm = MatF32::from_vec(1, d, q.clone());
-        let gold = reference::standard_attention(&qm, &ks, &vs, &AttnConfig::new(d));
-        let e_cal = stats::mre(&out_cal, &gold.data);
-        let e_unc = stats::mre(&out_unc, &gold.data);
-        assert!(
-            e_cal < e_unc,
-            "calibrated {e_cal} should beat uncalibrated {e_unc}"
-        );
-    }
-
-    #[test]
-    fn memory_halves_vs_fp16() {
-        let pool = KvCachePool::new(CacheConfig::new(8, 64));
-        let int8 = pool.bytes_per_token();
-        let fp16 = pool.fp16_bytes_per_token();
-        // int8 codes + per-token scale ≈ 0.52× of fp16 (paper's memory win)
-        let ratio = int8 as f64 / fp16 as f64;
-        assert!(ratio < 0.55, "ratio {ratio}");
-    }
-
-    #[test]
-    fn unknown_sequence_and_bad_shape() {
-        let mut pool = KvCachePool::new(cfg(1, 8));
-        assert!(matches!(
-            pool.append(99, &[0.0; 8], &[0.0; 8]),
-            Err(CacheError::UnknownSequence(99))
-        ));
-        let id = pool.alloc_sequence();
-        assert!(matches!(
-            pool.append(id, &[0.0; 4], &[0.0; 8]),
-            Err(CacheError::BadShape { .. })
-        ));
-        assert!(matches!(
-            pool.decode_attention(id, &[0.0; 3], None),
-            Err(CacheError::BadShape { .. })
-        ));
-        assert!(pool.free_sequence(77).is_err());
-    }
-
-    #[test]
-    fn multiple_sequences_isolated() {
-        let (h, d) = (1usize, 16usize);
-        let mut pool = KvCachePool::new(cfg(h, d));
-        let a = pool.alloc_sequence();
-        let b = pool.alloc_sequence();
-        let mut rng = Pcg64::seeded(4);
-        let ka: Vec<f32> = rng.normal_vec(d);
-        let va: Vec<f32> = rng.normal_vec(d);
-        pool.append(a, &ka, &va).unwrap();
-        // b gets very different content
-        let kb: Vec<f32> = ka.iter().map(|x| -x).collect();
-        let vb: Vec<f32> = va.iter().map(|x| x * 2.0).collect();
-        pool.append(b, &kb, &vb).unwrap();
-        let q: Vec<f32> = rng.normal_vec(d);
-        let oa = pool.decode_attention(a, &q, None).unwrap();
-        let ob = pool.decode_attention(b, &q, None).unwrap();
-        // single-token cache → output ≈ dequantized V row
-        let ea = stats::mre(&oa, &va);
-        let eb: f64 = stats::mre(&ob, &vb);
-        assert!(ea < 0.05, "{ea}");
-        assert!(eb < 0.05, "{eb}");
-    }
-
-    #[test]
-    fn decode_latency_grows_linearly() {
-        // sanity: decode is O(len) — paged layout adds no quadratic cost
-        let (h, d) = (1usize, 32usize);
-        let mut pool = KvCachePool::new(CacheConfig {
-            block_tokens: 32,
-            max_blocks: 256,
-            ..CacheConfig::new(h, d)
-        });
-        let id = pool.alloc_sequence();
-        let mut rng = Pcg64::seeded(5);
-        let q: Vec<f32> = rng.normal_vec(d);
-        let mut t_short = 0.0;
-        let mut t_long = 0.0;
-        for target in [256usize, 1024] {
-            while pool.seq_len(id).unwrap() < target {
-                pool.append(id, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
-            }
-            let t0 = std::time::Instant::now();
-            for _ in 0..20 {
-                let _ = pool.decode_attention(id, &q, None).unwrap();
-            }
-            let el = t0.elapsed().as_secs_f64();
-            if target == 256 {
-                t_short = el;
-            } else {
-                t_long = el;
-            }
-        }
-        let ratio = t_long / t_short;
-        assert!(ratio < 8.0, "4× tokens took {ratio:.1}× time (super-linear)");
-    }
-}
+pub use crate::kv::cache::KvCachePool;
+pub use crate::kv::{CacheConfig, CacheError, KvStats, RadixKvCache};

@@ -1,0 +1,205 @@
+//! Refcounted block pool with copy-on-write hand-out.
+//!
+//! Storage is pre-allocated at construction (the pool is the serving
+//! memory budget); alloc/free are O(1) free-list operations. Reference
+//! counts implement sharing: sequences and the radix trie each hold one
+//! reference per block they point at, and a block returns to the free
+//! list when the last reference drops. Writers must go through
+//! [`BlockPool::cow`], which hands back the same block when the caller
+//! holds the only reference and a private copy otherwise — the
+//! copy-on-write half of prefix sharing and sequence forking.
+
+/// One pool block: INT8 K/V codes + per-token K scales for every head.
+/// K codes layout: (heads, block_tokens, d); scales (heads, block_tokens)
+/// in token-level K mode (unused in per-channel mode, where the scales
+/// live in the cache config).
+pub struct Block {
+    pub k_codes: Vec<i8>,
+    pub v_codes: Vec<i8>,
+    pub k_scales: Vec<f32>,
+}
+
+/// Fixed-capacity refcounted block pool.
+pub struct BlockPool {
+    blocks: Vec<Block>,
+    refs: Vec<u32>,
+    free: Vec<usize>,
+}
+
+impl BlockPool {
+    /// Pre-allocate `max_blocks` blocks of `kv_elems` K/V codes and
+    /// `scale_elems` K scales each.
+    pub fn new(max_blocks: usize, kv_elems: usize, scale_elems: usize) -> BlockPool {
+        let blocks = (0..max_blocks)
+            .map(|_| Block {
+                k_codes: vec![0; kv_elems],
+                v_codes: vec![0; kv_elems],
+                k_scales: vec![0.0; scale_elems],
+            })
+            .collect();
+        BlockPool {
+            blocks,
+            refs: vec![0; max_blocks],
+            free: (0..max_blocks).rev().collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks referenced by more than one holder (the sharing gauge).
+    pub fn shared_blocks(&self) -> usize {
+        self.refs.iter().filter(|&&r| r > 1).count()
+    }
+
+    pub fn ref_count(&self, i: usize) -> u32 {
+        self.refs[i]
+    }
+
+    /// Take a fresh block with refcount 1, or `None` when the pool is
+    /// exhausted (callers evict from the trie and retry).
+    pub fn alloc(&mut self) -> Option<usize> {
+        let i = self.free.pop()?;
+        debug_assert_eq!(self.refs[i], 0, "free-list block had references");
+        self.refs[i] = 1;
+        Some(i)
+    }
+
+    /// Add one reference (a sequence or the trie starts pointing at it).
+    pub fn retain(&mut self, i: usize) {
+        debug_assert!(self.refs[i] > 0, "retain of a free block");
+        self.refs[i] += 1;
+    }
+
+    /// Drop one reference; returns true when the block went back to the
+    /// free list.
+    pub fn release(&mut self, i: usize) -> bool {
+        debug_assert!(self.refs[i] > 0, "release of a free block");
+        self.refs[i] -= 1;
+        if self.refs[i] == 0 {
+            self.free.push(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Copy-on-write hand-out: a block the caller may write. Returns `i`
+    /// itself when the caller holds the only reference; otherwise copies
+    /// the contents into a fresh block, moves the caller's reference to
+    /// it, and returns the copy. `None` when a copy is needed but the
+    /// pool is exhausted.
+    pub fn cow(&mut self, i: usize) -> Option<usize> {
+        if self.refs[i] == 1 {
+            return Some(i);
+        }
+        let ni = self.alloc()?;
+        debug_assert_ne!(i, ni, "a shared block cannot be on the free list");
+        // copy into the destination's pre-allocated buffers (all blocks
+        // share one geometry) — no heap traffic on the serving path
+        let (src, dst) = if i < ni {
+            let (lo, hi) = self.blocks.split_at_mut(ni);
+            (&lo[i], &mut hi[0])
+        } else {
+            let (lo, hi) = self.blocks.split_at_mut(i);
+            (&hi[0], &mut lo[ni])
+        };
+        dst.k_codes.copy_from_slice(&src.k_codes);
+        dst.v_codes.copy_from_slice(&src.v_codes);
+        dst.k_scales.copy_from_slice(&src.k_scales);
+        self.release(i);
+        Some(ni)
+    }
+
+    pub fn block(&self, i: usize) -> &Block {
+        &self.blocks[i]
+    }
+
+    /// Mutable access for writers. Callers must hold the only reference
+    /// (go through [`BlockPool::cow`] first) — shared blocks are
+    /// immutable.
+    pub fn block_mut(&mut self, i: usize) -> &mut Block {
+        debug_assert_eq!(self.refs[i], 1, "write to a shared block");
+        &mut self.blocks[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut pool = BlockPool::new(2, 8, 2);
+        assert_eq!(pool.free_len(), 2);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(pool.alloc().is_none(), "pool exhausted");
+        assert!(pool.release(a));
+        assert_eq!(pool.free_len(), 1);
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, a, "freed block is reused");
+        assert!(pool.release(b));
+        assert!(pool.release(c));
+        assert_eq!(pool.free_len(), 2);
+    }
+
+    #[test]
+    fn refcounts_defer_free() {
+        let mut pool = BlockPool::new(1, 4, 1);
+        let a = pool.alloc().unwrap();
+        pool.retain(a);
+        assert_eq!(pool.ref_count(a), 2);
+        assert_eq!(pool.shared_blocks(), 1);
+        assert!(!pool.release(a), "still referenced");
+        assert_eq!(pool.free_len(), 0);
+        assert!(pool.release(a));
+        assert_eq!(pool.free_len(), 1);
+        assert_eq!(pool.shared_blocks(), 0);
+    }
+
+    #[test]
+    fn cow_is_identity_when_unique() {
+        let mut pool = BlockPool::new(2, 4, 1);
+        let a = pool.alloc().unwrap();
+        pool.block_mut(a).k_codes[0] = 7;
+        assert_eq!(pool.cow(a), Some(a), "sole holder writes in place");
+    }
+
+    #[test]
+    fn cow_copies_shared_block() {
+        let mut pool = BlockPool::new(2, 4, 1);
+        let a = pool.alloc().unwrap();
+        pool.block_mut(a).k_codes[0] = 7;
+        pool.block_mut(a).v_codes[1] = -3;
+        pool.block_mut(a).k_scales[0] = 0.5;
+        pool.retain(a); // second holder
+        let b = pool.cow(a).unwrap();
+        assert_ne!(b, a, "shared block must be copied");
+        assert_eq!(pool.block(b).k_codes[0], 7);
+        assert_eq!(pool.block(b).v_codes[1], -3);
+        assert_eq!(pool.block(b).k_scales[0], 0.5);
+        // the caller's reference moved: a is back to one holder
+        assert_eq!(pool.ref_count(a), 1);
+        assert_eq!(pool.ref_count(b), 1);
+        // writes to the copy leave the original alone
+        pool.block_mut(b).k_codes[0] = 1;
+        assert_eq!(pool.block(a).k_codes[0], 7);
+    }
+
+    #[test]
+    fn cow_fails_when_pool_exhausted() {
+        let mut pool = BlockPool::new(1, 4, 1);
+        let a = pool.alloc().unwrap();
+        pool.retain(a);
+        assert!(pool.cow(a).is_none(), "no free block for the copy");
+        // references unchanged by the failed attempt
+        assert_eq!(pool.ref_count(a), 2);
+    }
+}

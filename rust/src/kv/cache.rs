@@ -1,0 +1,631 @@
+//! The serving-facing radix KV cache: sequences over shared refcounted
+//! blocks, prefix matching, copy-on-write appends, LRU eviction.
+//!
+//! See the [module docs](crate::kv) for the COW/refcount invariants.
+
+use super::block::BlockPool;
+use super::quantize;
+use super::radix::RadixIndex;
+use crate::calib::plan::CalibrationPlan;
+use crate::quant::{self, SCALE_EPS};
+use std::collections::HashMap;
+
+/// Cache geometry + quantization scales.
+///
+/// The scales come from a [`CalibrationPlan`]: [`CacheConfig::new`] uses
+/// the documented uncalibrated fallback (N(0,1) absmax guess — serving
+/// works but scales are guesses), [`CacheConfig::calibrated`] uses
+/// measured traffic statistics. Scales attach at the *block* level:
+/// every sequence sharing a block shares its quantization operating
+/// point.
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    pub heads: usize,
+    pub head_dim: usize,
+    /// tokens per block
+    pub block_tokens: usize,
+    /// pool capacity in blocks (shared across sequences)
+    pub max_blocks: usize,
+    /// tensor-level V scale (paper: fixed post-training / calibration)
+    pub v_scale: f32,
+    /// quantization range (127 INT8, 7 INT4)
+    pub r: f32,
+    /// per-head clip on the token-level K rowmax (empty → live rowmax)
+    pub k_clip: Vec<f32>,
+    /// per-channel K scales, flat (heads, head_dim) — non-empty switches
+    /// K storage from token-level to per-channel quantization (the GPU
+    /// INT8-KV-cache mode); derived from
+    /// [`CalibrationPlan::k_channel_absmax`]
+    pub k_channel_scale: Vec<f32>,
+}
+
+impl CacheConfig {
+    /// Uncalibrated fallback: scales from
+    /// [`CalibrationPlan::uncalibrated`] (the N(0,1) absmax≈4 guess).
+    /// Run calibration and use [`CacheConfig::calibrated`] in production.
+    pub fn new(heads: usize, head_dim: usize) -> CacheConfig {
+        Self::calibrated(
+            heads,
+            head_dim,
+            &CalibrationPlan::uncalibrated(quant::INT8_R),
+        )
+    }
+
+    /// Derive the V scale, range, per-head K clips and the optional
+    /// per-channel K scales from a plan. A plan calibrated for a
+    /// different geometry is a deployment error — rejected here rather
+    /// than silently half-applied.
+    pub fn calibrated(heads: usize, head_dim: usize, plan: &CalibrationPlan) -> CacheConfig {
+        if let Err(e) = plan.validate_geometry(heads, head_dim) {
+            panic!("{e}");
+        }
+        CacheConfig {
+            heads,
+            head_dim,
+            block_tokens: 16,
+            max_blocks: 1024,
+            v_scale: plan.v_scale,
+            r: plan.r,
+            k_clip: plan.k_clip.clone(),
+            k_channel_scale: plan
+                .k_channel_absmax
+                .iter()
+                .map(|a| a.max(SCALE_EPS) / plan.r)
+                .collect(),
+        }
+    }
+
+    /// Like [`CacheConfig::calibrated`], but validated against the
+    /// artifact's stored geometry first (the load-time check that
+    /// replaced the per-consumer asserts).
+    pub fn from_artifact(
+        heads: usize,
+        head_dim: usize,
+        artifact: &crate::calib::CalibrationArtifact,
+    ) -> Result<CacheConfig, String> {
+        if let Some(g) = &artifact.geometry {
+            g.check(heads, head_dim)?;
+        }
+        artifact.plan.validate_geometry(heads, head_dim)?;
+        Ok(Self::calibrated(heads, head_dim, &artifact.plan))
+    }
+
+    /// Apply this cache's calibrated clip to a K rowmax for `head`
+    /// (identity when uncalibrated).
+    pub fn clip_k_rowmax(&self, head: usize, rowmax: f32) -> f32 {
+        match self.k_clip.get(head) {
+            Some(&clip) => rowmax.min(clip),
+            None => rowmax,
+        }
+    }
+
+    /// Whether K is stored with per-channel scales.
+    pub fn per_channel_k(&self) -> bool {
+        !self.k_channel_scale.is_empty()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheError {
+    OutOfBlocks,
+    UnknownSequence(u64),
+    BadShape { expected: usize, got: usize },
+    /// Token-id-tracked sequences must append through
+    /// [`RadixKvCache::append_token`].
+    TokenRequired(u64),
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::OutOfBlocks => write!(f, "KV cache pool exhausted"),
+            CacheError::UnknownSequence(id) => write!(f, "unknown sequence {id}"),
+            CacheError::BadShape { expected, got } => {
+                write!(f, "bad activation shape: expected {expected} values, got {got}")
+            }
+            CacheError::TokenRequired(id) => {
+                write!(f, "sequence {id} tracks token ids; use append_token")
+            }
+        }
+    }
+}
+
+/// Sharing / reuse counters (mirrored into the engine's metric registry).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvStats {
+    /// `start_sequence` calls that matched at least one block.
+    pub prefix_hits: u64,
+    /// tokenized `start_sequence` calls that matched nothing.
+    pub prefix_misses: u64,
+    /// tokens whose prefill was skipped via prefix reuse.
+    pub tokens_reused: u64,
+    /// trie entries evicted under pool pressure.
+    pub evictions: u64,
+    /// shared partial blocks privately copied before a write.
+    pub cow_copies: u64,
+}
+
+pub(crate) struct Sequence {
+    pub blocks: Vec<usize>,
+    pub len_tokens: usize,
+    /// `Some` for prefix-sharable sequences (trie-registered); `None`
+    /// for anonymous sequences using the legacy token-id-free API.
+    pub token_ids: Option<Vec<u32>>,
+}
+
+/// Shared-prefix radix KV cache for one attention layer.
+pub struct RadixKvCache {
+    pub(crate) cfg: CacheConfig,
+    pub(crate) pool: BlockPool,
+    trie: RadixIndex,
+    pub(crate) seqs: HashMap<u64, Sequence>,
+    next_id: u64,
+    stats: KvStats,
+}
+
+/// Back-compat alias: the old `coordinator::kvcache` pool name.
+pub type KvCachePool = RadixKvCache;
+
+impl RadixKvCache {
+    pub fn new(cfg: CacheConfig) -> RadixKvCache {
+        let kv_elems = cfg.heads * cfg.block_tokens * cfg.head_dim;
+        let scale_elems = cfg.heads * cfg.block_tokens;
+        let pool = BlockPool::new(cfg.max_blocks, kv_elems, scale_elems);
+        RadixKvCache {
+            cfg,
+            pool,
+            trie: RadixIndex::new(),
+            seqs: HashMap::new(),
+            next_id: 1,
+            stats: KvStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> KvStats {
+        self.stats
+    }
+
+    /// Blocks currently referenced by more than one holder.
+    pub fn blocks_shared(&self) -> usize {
+        self.pool.shared_blocks()
+    }
+
+    /// Start an anonymous sequence (no token ids → no prefix sharing);
+    /// returns its id. The legacy `coordinator::kvcache` surface.
+    pub fn alloc_sequence(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seqs
+            .insert(id, Sequence { blocks: Vec::new(), len_tokens: 0, token_ids: None });
+        id
+    }
+
+    /// Start a token-tracked sequence, reusing every already-quantized
+    /// full block whose token prefix matches. Returns `(id, cached)` —
+    /// the caller appends K/V only for `tokens[cached..]` (its prefill
+    /// for the first `cached` tokens is skipped entirely).
+    pub fn start_sequence(&mut self, tokens: &[u32]) -> (u64, usize) {
+        let matched = self.trie.lookup(tokens, self.cfg.block_tokens);
+        for &b in &matched {
+            self.pool.retain(b);
+        }
+        let cached = matched.len() * self.cfg.block_tokens;
+        if cached > 0 {
+            self.stats.prefix_hits += 1;
+            self.stats.tokens_reused += cached as u64;
+        } else {
+            self.stats.prefix_misses += 1;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seqs.insert(
+            id,
+            Sequence {
+                blocks: matched,
+                len_tokens: cached,
+                token_ids: Some(tokens[..cached].to_vec()),
+            },
+        );
+        (id, cached)
+    }
+
+    /// Fork a sequence (parallel sampling): the fork shares every block,
+    /// including the partial last one — the first divergent append
+    /// triggers a copy-on-write of that block.
+    pub fn fork_sequence(&mut self, id: u64) -> Result<u64, CacheError> {
+        let src = self.seqs.get(&id).ok_or(CacheError::UnknownSequence(id))?;
+        let forked = Sequence {
+            blocks: src.blocks.clone(),
+            len_tokens: src.len_tokens,
+            token_ids: src.token_ids.clone(),
+        };
+        for &b in &forked.blocks {
+            self.pool.retain(b);
+        }
+        let nid = self.next_id;
+        self.next_id += 1;
+        self.seqs.insert(nid, forked);
+        Ok(nid)
+    }
+
+    /// Release a sequence's references; blocks also indexed by the trie
+    /// stay resident for future prefix hits.
+    pub fn free_sequence(&mut self, id: u64) -> Result<(), CacheError> {
+        let seq = self.seqs.remove(&id).ok_or(CacheError::UnknownSequence(id))?;
+        for b in seq.blocks {
+            self.pool.release(b);
+        }
+        Ok(())
+    }
+
+    pub fn seq_len(&self, id: u64) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.len_tokens)
+    }
+
+    pub fn blocks_free(&self) -> usize {
+        self.pool.free_len()
+    }
+
+    /// Cache bytes used by one token across all heads (codes + scales).
+    pub fn bytes_per_token(&self) -> usize {
+        // int8 K + int8 V + f32 K scale, per head
+        self.cfg.heads * (2 * self.cfg.head_dim + 4)
+    }
+
+    /// fp16 baseline bytes per token (2 bytes per K and V element).
+    pub fn fp16_bytes_per_token(&self) -> usize {
+        self.cfg.heads * 2 * 2 * self.cfg.head_dim
+    }
+
+    /// Append one token's K/V to an anonymous sequence (flat (heads, d)
+    /// f32 each). The legacy `coordinator::kvcache` surface.
+    pub fn append(&mut self, id: u64, k: &[f32], v: &[f32]) -> Result<(), CacheError> {
+        if matches!(self.seqs.get(&id), Some(s) if s.token_ids.is_some()) {
+            return Err(CacheError::TokenRequired(id));
+        }
+        self.append_inner(id, None, k, v)
+    }
+
+    /// Append one token (id + K/V activations) to a token-tracked
+    /// sequence; when this fills a block, the block is registered in the
+    /// radix trie for future prefix reuse.
+    pub fn append_token(
+        &mut self,
+        id: u64,
+        token: u32,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(), CacheError> {
+        self.append_inner(id, Some(token), k, v)
+    }
+
+    fn append_inner(
+        &mut self,
+        id: u64,
+        token: Option<u32>,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(), CacheError> {
+        let (h, d, bt) = (self.cfg.heads, self.cfg.head_dim, self.cfg.block_tokens);
+        if k.len() != h * d || v.len() != h * d {
+            return Err(CacheError::BadShape { expected: h * d, got: k.len() });
+        }
+        let (slot, last_block) = {
+            let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSequence(id))?;
+            if seq.token_ids.is_some() && token.is_none() {
+                return Err(CacheError::TokenRequired(id));
+            }
+            (seq.len_tokens % bt, seq.blocks.last().copied())
+        };
+        // a writable target: fresh block at a boundary, otherwise the
+        // last block — copied first if shared (fork divergence)
+        let target = if slot == 0 {
+            let b = self.alloc_block()?;
+            self.seqs.get_mut(&id).unwrap().blocks.push(b);
+            b
+        } else {
+            let b = last_block.expect("mid-block sequence has a last block");
+            if self.pool.ref_count(b) > 1 {
+                let nb = self.cow_block(b)?;
+                *self.seqs.get_mut(&id).unwrap().blocks.last_mut().unwrap() = nb;
+                self.stats.cow_copies += 1;
+                nb
+            } else {
+                b
+            }
+        };
+        quantize::write_token(&self.cfg, self.pool.block_mut(target), slot, k, v);
+        let seq = self.seqs.get_mut(&id).unwrap();
+        seq.len_tokens += 1;
+        if let (Some(tok), Some(ids)) = (token, seq.token_ids.as_mut()) {
+            ids.push(tok);
+        }
+        // block filled → index it for prefix reuse
+        if slot + 1 == bt {
+            let seq = self.seqs.get(&id).unwrap();
+            if let Some(ids) = &seq.token_ids {
+                let prefix = &ids[..seq.len_tokens];
+                if self.trie.insert(prefix, bt, target) {
+                    self.pool.retain(target);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Allocate a block, evicting LRU trie entries under pool pressure.
+    /// Eviction only ever frees blocks no live sequence references (the
+    /// trie holds their sole reference).
+    fn alloc_block(&mut self) -> Result<usize, CacheError> {
+        loop {
+            if let Some(b) = self.pool.alloc() {
+                return Ok(b);
+            }
+            match self.trie.evict_lru(&self.pool) {
+                Some(freed) => {
+                    self.pool.release(freed);
+                    self.stats.evictions += 1;
+                }
+                None => return Err(CacheError::OutOfBlocks),
+            }
+        }
+    }
+
+    /// COW a shared block, evicting for the copy when needed.
+    fn cow_block(&mut self, b: usize) -> Result<usize, CacheError> {
+        loop {
+            if let Some(nb) = self.pool.cow(b) {
+                return Ok(nb);
+            }
+            match self.trie.evict_lru(&self.pool) {
+                Some(freed) => {
+                    self.pool.release(freed);
+                    self.stats.evictions += 1;
+                }
+                None => return Err(CacheError::OutOfBlocks),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{reference, AttnConfig};
+    use crate::tensor::MatF32;
+    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::stats;
+
+    fn cfg(heads: usize, d: usize) -> CacheConfig {
+        CacheConfig { block_tokens: 8, max_blocks: 64, ..CacheConfig::new(heads, d) }
+    }
+
+    #[test]
+    fn decode_matches_reference_attention() {
+        let (h, d, n) = (2usize, 32usize, 40usize);
+        let mut pool = RadixKvCache::new(cfg(h, d));
+        let id = pool.alloc_sequence();
+        let mut rng = Pcg64::seeded(1);
+        // per-head K/V histories
+        let mut ks = vec![MatF32::zeros(n, d), MatF32::zeros(n, d)];
+        let mut vs = vec![MatF32::zeros(n, d), MatF32::zeros(n, d)];
+        for t in 0..n {
+            let k: Vec<f32> = rng.normal_vec(h * d);
+            let v: Vec<f32> = rng.normal_vec(h * d);
+            for head in 0..h {
+                for i in 0..d {
+                    ks[head].set(t, i, k[head * d + i]);
+                    vs[head].set(t, i, v[head * d + i]);
+                }
+            }
+            pool.append(id, &k, &v).unwrap();
+        }
+        assert_eq!(pool.seq_len(id), Some(n));
+
+        let q: Vec<f32> = rng.normal_vec(h * d);
+        let out = pool.decode_attention(id, &q, None).unwrap();
+        for head in 0..h {
+            let qm = MatF32::from_vec(1, d, q[head * d..(head + 1) * d].to_vec());
+            let gold = reference::standard_attention(
+                &qm, &ks[head], &vs[head], &AttnConfig::new(d),
+            );
+            let e = stats::mre(&out[head * d..(head + 1) * d], &gold.data);
+            assert!(e < 0.08, "head {head}: mre {e}");
+        }
+    }
+
+    #[test]
+    fn append_across_block_boundaries() {
+        let (h, d) = (1usize, 8usize);
+        let mut pool = RadixKvCache::new(cfg(h, d)); // block_tokens = 8
+        let id = pool.alloc_sequence();
+        let free0 = pool.blocks_free();
+        let mut rng = Pcg64::seeded(2);
+        for t in 0..17 {
+            pool.append(id, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
+            let expected_blocks = t / 8 + 1;
+            assert_eq!(pool.blocks_free(), free0 - expected_blocks);
+        }
+        assert_eq!(pool.seq_len(id), Some(17));
+    }
+
+    #[test]
+    fn pool_exhaustion_and_reuse() {
+        let (h, d) = (1usize, 8usize);
+        let mut pool = RadixKvCache::new(CacheConfig {
+            block_tokens: 4,
+            max_blocks: 2,
+            ..CacheConfig::new(h, d)
+        });
+        let a = pool.alloc_sequence();
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..8 {
+            pool.append(a, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
+        }
+        // pool is full (anonymous sequences register nothing evictable)
+        let err = pool.append(a, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap_err();
+        assert_eq!(err, CacheError::OutOfBlocks);
+        // freeing returns capacity
+        pool.free_sequence(a).unwrap();
+        assert_eq!(pool.blocks_free(), 2);
+        let b = pool.alloc_sequence();
+        for _ in 0..8 {
+            pool.append(b, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_sequence_and_bad_shape() {
+        let mut pool = RadixKvCache::new(cfg(1, 8));
+        assert!(matches!(
+            pool.append(99, &[0.0; 8], &[0.0; 8]),
+            Err(CacheError::UnknownSequence(99))
+        ));
+        let id = pool.alloc_sequence();
+        assert!(matches!(
+            pool.append(id, &[0.0; 4], &[0.0; 8]),
+            Err(CacheError::BadShape { .. })
+        ));
+        assert!(matches!(
+            pool.decode_attention(id, &[0.0; 3], None),
+            Err(CacheError::BadShape { .. })
+        ));
+        assert!(pool.free_sequence(77).is_err());
+        // tokenized sequences require append_token
+        let (tid, _) = pool.start_sequence(&[1, 2, 3]);
+        assert_eq!(
+            pool.append(tid, &[0.0; 8], &[0.0; 8]),
+            Err(CacheError::TokenRequired(tid))
+        );
+    }
+
+    #[test]
+    fn multiple_sequences_isolated() {
+        let (h, d) = (1usize, 16usize);
+        let mut pool = RadixKvCache::new(cfg(h, d));
+        let a = pool.alloc_sequence();
+        let b = pool.alloc_sequence();
+        let mut rng = Pcg64::seeded(4);
+        let ka: Vec<f32> = rng.normal_vec(d);
+        let va: Vec<f32> = rng.normal_vec(d);
+        pool.append(a, &ka, &va).unwrap();
+        // b gets very different content
+        let kb: Vec<f32> = ka.iter().map(|x| -x).collect();
+        let vb: Vec<f32> = va.iter().map(|x| x * 2.0).collect();
+        pool.append(b, &kb, &vb).unwrap();
+        let q: Vec<f32> = rng.normal_vec(d);
+        let oa = pool.decode_attention(a, &q, None).unwrap();
+        let ob = pool.decode_attention(b, &q, None).unwrap();
+        // single-token cache → output ≈ dequantized V row
+        let ea = stats::mre(&oa, &va);
+        let eb: f64 = stats::mre(&ob, &vb);
+        assert!(ea < 0.05, "{ea}");
+        assert!(eb < 0.05, "{eb}");
+    }
+
+    #[test]
+    fn memory_halves_vs_fp16() {
+        let pool = RadixKvCache::new(CacheConfig::new(8, 64));
+        let int8 = pool.bytes_per_token();
+        let fp16 = pool.fp16_bytes_per_token();
+        // int8 codes + per-token scale ≈ 0.52× of fp16 (paper's memory win)
+        let ratio = int8 as f64 / fp16 as f64;
+        assert!(ratio < 0.55, "ratio {ratio}");
+    }
+
+    fn tok_rows(rng: &mut Pcg64, n: usize, d: usize) -> Vec<(Vec<f32>, Vec<f32>)> {
+        (0..n).map(|_| (rng.normal_vec(d), rng.normal_vec(d))).collect()
+    }
+
+    #[test]
+    fn prefix_hit_shares_blocks_and_skips_prefill() {
+        let (h, d, bt) = (1usize, 8usize, 8usize);
+        let mut pool = RadixKvCache::new(cfg(h, d));
+        let mut rng = Pcg64::seeded(5);
+        let tokens: Vec<u32> = (0..20).collect();
+        let rows = tok_rows(&mut rng, tokens.len(), d);
+
+        let (a, cached) = pool.start_sequence(&tokens);
+        assert_eq!(cached, 0, "cold start");
+        for (t, (k, v)) in rows.iter().enumerate() {
+            pool.append_token(a, tokens[t], k, v).unwrap();
+        }
+        let free_after_a = pool.blocks_free();
+
+        // same prompt again: both full blocks (16 tokens) come from the trie
+        let (b, cached) = pool.start_sequence(&tokens);
+        assert_eq!(cached, 2 * bt, "two full blocks reused");
+        assert_eq!(pool.stats().prefix_hits, 1);
+        assert_eq!(pool.stats().tokens_reused, (2 * bt) as u64);
+        assert_eq!(pool.blocks_shared(), 2);
+        for (t, (k, v)) in rows.iter().enumerate().skip(cached) {
+            pool.append_token(b, tokens[t], k, v).unwrap();
+        }
+        // only the partial tail block was newly allocated
+        assert_eq!(pool.blocks_free(), free_after_a - 1);
+        assert_eq!(pool.seq_len(b), Some(tokens.len()));
+        // decode through the shared prefix is bit-identical to the private one
+        let q: Vec<f32> = rng.normal_vec(h * d);
+        let oa = pool.decode_attention(a, &q, None).unwrap();
+        let ob = pool.decode_attention(b, &q, None).unwrap();
+        assert_eq!(oa, ob, "shared-prefix decode must be bit-identical");
+    }
+
+    #[test]
+    fn fork_copy_on_write_diverges_privately() {
+        let (h, d) = (1usize, 8usize);
+        let mut pool = RadixKvCache::new(cfg(h, d)); // bt = 8
+        let mut rng = Pcg64::seeded(6);
+        let (a, _) = pool.start_sequence(&[]);
+        // 3 tokens → one partial block
+        for t in 0..3u32 {
+            pool.append_token(a, t, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
+        }
+        let b = pool.fork_sequence(a).unwrap();
+        assert_eq!(pool.seq_len(b), Some(3));
+        assert_eq!(pool.blocks_shared(), 1, "partial block shared by the fork");
+        let q: Vec<f32> = rng.normal_vec(d);
+        let before = pool.decode_attention(a, &q, None).unwrap();
+        // divergent append on the fork COWs the partial block
+        pool.append_token(b, 99, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
+        assert_eq!(pool.stats().cow_copies, 1);
+        assert_eq!(pool.blocks_shared(), 0);
+        // a's view is unchanged by b's divergence
+        let after = pool.decode_attention(a, &q, None).unwrap();
+        assert_eq!(before, after, "COW must isolate the parent");
+        assert_eq!(pool.seq_len(a), Some(3));
+        assert_eq!(pool.seq_len(b), Some(4));
+    }
+
+    #[test]
+    fn eviction_recovers_trie_only_blocks() {
+        let (h, d) = (1usize, 8usize);
+        let mut pool = RadixKvCache::new(CacheConfig {
+            block_tokens: 4,
+            max_blocks: 2,
+            ..CacheConfig::new(h, d)
+        });
+        let mut rng = Pcg64::seeded(7);
+        // fill both blocks with a tokenized sequence, then free it: the
+        // trie keeps both blocks resident
+        let (a, _) = pool.start_sequence(&[]);
+        for t in 0..8u32 {
+            pool.append_token(a, t, &rng.normal_vec(d), &rng.normal_vec(d)).unwrap();
+        }
+        pool.free_sequence(a).unwrap();
+        assert_eq!(pool.blocks_free(), 0, "trie holds both blocks");
+        // a different prompt forces eviction of the LRU trie entries
+        let (b, cached) = pool.start_sequence(&[100, 101, 102, 103]);
+        assert_eq!(cached, 0);
+        for t in 0..4u32 {
+            pool.append_token(b, 100 + t, &rng.normal_vec(d), &rng.normal_vec(d))
+                .unwrap();
+        }
+        assert!(pool.stats().evictions >= 1);
+        assert_eq!(pool.seq_len(b), Some(4));
+    }
+}

@@ -1,0 +1,445 @@
+//! Single-query INT8 decode attention over cached codes — sequential or
+//! split-K parallel, with an exact partial-state merge.
+//!
+//! A CPU Flash-Decoding specialization of the paper's Algorithm 1: the
+//! sequence's blocks are partitioned across worker threads, each runs
+//! the INT8 online-softmax arithmetic over its partition, and the
+//! partial `(m, l, acc)` states merge exactly. Exactness comes from a
+//! two-pass schedule (see the [module docs](crate::kv) for the math):
+//! pass 1 reduces partial score maxima (`merge = max`, exact), pass 2
+//! accumulates the quantized probabilities `P = round(R·exp(s − m))` and
+//! `P·V₈` as integers under the shared max (`merge = integer sum`,
+//! exact). [`RadixKvCache::decode_attention`] is the one-worker case of
+//! the same code path, so split-K output is bit-identical to sequential
+//! output for any worker count.
+
+use super::block::Block;
+use super::cache::{CacheError, RadixKvCache, Sequence};
+use crate::quant::SCALE_EPS;
+
+/// Token-level-quantized query: (heads, d) codes + one scale per head.
+/// In per-channel K mode the calibrated channel scales are folded into
+/// the query before quantization (`q'ᵢ = qᵢ·S_kᵢ`), so the score stays a
+/// single integer dot with one scalar rescale.
+struct QuantQuery {
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+/// Blocks of work per worker below which spawning another thread costs
+/// more than it saves (thread spawn ≈ tens of µs; one block of scores is
+/// `block_tokens × heads × d` multiply-adds). [`RadixKvCache::suggested_splitk`]
+/// uses this to pick a worker count; exactness never depends on it.
+const MIN_BLOCKS_PER_WORKER: usize = 8;
+
+/// Contiguous block ranges, one per worker, sized within ±1 block.
+fn partition(n_blocks: usize, workers: usize) -> Vec<(usize, usize)> {
+    let w = workers.min(n_blocks).max(1);
+    let base = n_blocks / w;
+    let extra = n_blocks % w;
+    let mut parts = Vec::with_capacity(w);
+    let mut at = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < extra);
+        parts.push((at, at + len));
+        at += len;
+    }
+    parts
+}
+
+impl RadixKvCache {
+    /// Decode attention: one query token (flat (heads, d) f32) attends to
+    /// the sequence's entire cached K/V. Returns flat (heads, d) f32.
+    /// Sequential schedule — exactly `decode_attention_splitk` with one
+    /// worker.
+    pub fn decode_attention(
+        &self,
+        id: u64,
+        q: &[f32],
+        sm_scale: Option<f32>,
+    ) -> Result<Vec<f32>, CacheError> {
+        self.decode_attention_splitk(id, q, sm_scale, 1)
+    }
+
+    /// Split-K decode: partition the sequence's blocks across `workers`
+    /// threads, run the INT8 online-softmax per partition, merge the
+    /// partial states exactly. Output is bit-identical for any worker
+    /// count.
+    pub fn decode_attention_splitk(
+        &self,
+        id: u64,
+        q: &[f32],
+        sm_scale: Option<f32>,
+        workers: usize,
+    ) -> Result<Vec<f32>, CacheError> {
+        let (h, d) = (self.cfg.heads, self.cfg.head_dim);
+        if q.len() != h * d {
+            return Err(CacheError::BadShape { expected: h * d, got: q.len() });
+        }
+        let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSequence(id))?;
+        if seq.len_tokens == 0 {
+            return Ok(vec![0.0; h * d]);
+        }
+        let tau = sm_scale.unwrap_or(1.0 / (d as f32).sqrt());
+        let qq = self.quantize_query(q);
+        let parts = partition(seq.blocks.len(), workers);
+
+        // pass 1: partial score maxima per head; merge = max (exact)
+        let maxes = self.map_parts(&parts, |b0, b1| self.partial_max(seq, b0, b1, &qq, tau));
+        let mut m = vec![f32::NEG_INFINITY; h];
+        for pm in &maxes {
+            for (a, &b) in m.iter_mut().zip(pm) {
+                *a = a.max(b);
+            }
+        }
+
+        // pass 2: integer (l, acc) partials under the shared max;
+        // merge = integer sum (exact)
+        let partials =
+            self.map_parts(&parts, |b0, b1| self.partial_sums(seq, b0, b1, &qq, tau, &m));
+        let mut l = vec![0i64; h];
+        let mut acc = vec![0i64; h * d];
+        for (pl, pa) in &partials {
+            for (a, &b) in l.iter_mut().zip(pl) {
+                *a += b;
+            }
+            for (a, &b) in acc.iter_mut().zip(pa) {
+                *a += b;
+            }
+        }
+
+        // finalize once: O = acc·S_V / l
+        let mut out = vec![0.0f32; h * d];
+        for head in 0..h {
+            let rescale = self.cfg.v_scale / (l[head] as f32).max(SCALE_EPS);
+            for i in 0..d {
+                out[head * d + i] = acc[head * d + i] as f32 * rescale;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Worker count worth spawning for this sequence's length: at least
+    /// [`MIN_BLOCKS_PER_WORKER`] blocks of work per thread, capped at
+    /// `max_workers`. Output is bit-identical for every worker count, so
+    /// callers may apply this freely (the engine's decode surface does).
+    pub fn suggested_splitk(&self, id: u64, max_workers: usize) -> usize {
+        let blocks = self.seqs.get(&id).map(|s| s.blocks.len()).unwrap_or(0);
+        (blocks / MIN_BLOCKS_PER_WORKER).clamp(1, max_workers.max(1))
+    }
+
+    /// Run `f` over every partition — inline for one, scoped threads
+    /// otherwise. Results come back in partition order.
+    fn map_parts<T: Send + 'static>(
+        &self,
+        parts: &[(usize, usize)],
+        f: impl Fn(usize, usize) -> T + Sync,
+    ) -> Vec<T> {
+        if parts.len() == 1 {
+            let (b0, b1) = parts[0];
+            return vec![f(b0, b1)];
+        }
+        let fr = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = parts
+                .iter()
+                .map(|&(b0, b1)| s.spawn(move || fr(b0, b1)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|t| t.join().expect("split-K worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Tokens resident in the sequence's `bi`-th block.
+    fn block_fill(&self, seq: &Sequence, bi: usize) -> usize {
+        let bt = self.cfg.block_tokens;
+        (seq.len_tokens - bi * bt).min(bt)
+    }
+
+    /// s_t = (q₈·k₈)·S_q·S_k·τ for one cached token. Shared by both
+    /// passes so every partition computes identical floats.
+    #[inline]
+    fn score(&self, block: &Block, head: usize, t: usize, qq: &QuantQuery, tau: f32) -> f32 {
+        let (d, bt) = (self.cfg.head_dim, self.cfg.block_tokens);
+        let base = head * bt * d + t * d;
+        let qbase = head * d;
+        let mut dot = 0i32;
+        for i in 0..d {
+            dot += qq.codes[qbase + i] as i32 * block.k_codes[base + i] as i32;
+        }
+        // per-channel mode folds the K scales into the query, so the
+        // token's K rescale is identity there
+        let k_scale = if self.cfg.per_channel_k() {
+            1.0
+        } else {
+            block.k_scales[head * bt + t]
+        };
+        dot as f32 * qq.scales[head] * k_scale * tau
+    }
+
+    fn partial_max(
+        &self,
+        seq: &Sequence,
+        b0: usize,
+        b1: usize,
+        qq: &QuantQuery,
+        tau: f32,
+    ) -> Vec<f32> {
+        let h = self.cfg.heads;
+        let mut m = vec![f32::NEG_INFINITY; h];
+        for bi in b0..b1 {
+            let block = self.pool.block(seq.blocks[bi]);
+            let tokens = self.block_fill(seq, bi);
+            for (head, mh) in m.iter_mut().enumerate() {
+                for t in 0..tokens {
+                    let s = self.score(block, head, t, qq, tau);
+                    if s > *mh {
+                        *mh = s;
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    fn partial_sums(
+        &self,
+        seq: &Sequence,
+        b0: usize,
+        b1: usize,
+        qq: &QuantQuery,
+        tau: f32,
+        m: &[f32],
+    ) -> (Vec<i64>, Vec<i64>) {
+        let (h, d, bt) = (self.cfg.heads, self.cfg.head_dim, self.cfg.block_tokens);
+        let r = self.cfg.r;
+        let mut l = vec![0i64; h];
+        let mut acc = vec![0i64; h * d];
+        for bi in b0..b1 {
+            let block = self.pool.block(seq.blocks[bi]);
+            let tokens = self.block_fill(seq, bi);
+            for head in 0..h {
+                for t in 0..tokens {
+                    let s = self.score(block, head, t, qq, tau);
+                    // P̃ = round(R·exp(s − m)) ∈ [0, R] — integer-exact
+                    let p = (r * (s - m[head]).exp()).round() as i64;
+                    l[head] += p;
+                    let base = head * bt * d + t * d;
+                    for i in 0..d {
+                        acc[head * d + i] += p * block.v_codes[base + i] as i64;
+                    }
+                }
+            }
+        }
+        (l, acc)
+    }
+
+    /// Token-level query quantization (live rowmax, the paper's runtime
+    /// Q scale), with per-channel K scales folded in first when the
+    /// cache runs in per-channel mode.
+    fn quantize_query(&self, q: &[f32]) -> QuantQuery {
+        let (h, d) = (self.cfg.heads, self.cfg.head_dim);
+        let r = self.cfg.r;
+        let per_channel = self.cfg.per_channel_k();
+        let mut codes = vec![0i8; h * d];
+        let mut scales = vec![0.0f32; h];
+        let mut folded = vec![0.0f32; d];
+        for head in 0..h {
+            let qrow = &q[head * d..(head + 1) * d];
+            let row: &[f32] = if per_channel {
+                let ch = &self.cfg.k_channel_scale[head * d..(head + 1) * d];
+                for (dst, (&x, &sc)) in folded.iter_mut().zip(qrow.iter().zip(ch)) {
+                    *dst = x * sc;
+                }
+                &folded
+            } else {
+                qrow
+            };
+            let absmax = row.iter().fold(0.0f32, |mx, &x| mx.max(x.abs()));
+            let scale = absmax.max(SCALE_EPS) / r;
+            let inv = 1.0 / scale;
+            for (i, &x) in row.iter().enumerate() {
+                codes[head * d + i] = (x * inv).round().clamp(-(r + 1.0), r) as i8;
+            }
+            scales[head] = scale;
+        }
+        QuantQuery { codes, scales }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{reference, AttnConfig};
+    use crate::kv::CacheConfig;
+    use crate::tensor::MatF32;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats;
+
+    fn filled_cache(seed: u64, h: usize, d: usize, n: usize) -> (RadixKvCache, u64, Vec<f32>) {
+        let mut cache = RadixKvCache::new(CacheConfig {
+            block_tokens: 8,
+            max_blocks: 256,
+            ..CacheConfig::new(h, d)
+        });
+        let id = cache.alloc_sequence();
+        let mut rng = Pcg64::seeded(seed);
+        for _ in 0..n {
+            cache
+                .append(id, &rng.normal_vec(h * d), &rng.normal_vec(h * d))
+                .unwrap();
+        }
+        let q = rng.normal_vec(h * d);
+        (cache, id, q)
+    }
+
+    #[test]
+    fn splitk_bit_identical_to_sequential() {
+        // irregular length: last block partially filled, blocks don't
+        // divide evenly across workers
+        let (cache, id, q) = filled_cache(1, 2, 32, 77);
+        let gold = cache.decode_attention(id, &q, None).unwrap();
+        for workers in [2usize, 3, 4, 8, 64] {
+            let out = cache.decode_attention_splitk(id, &q, None, workers).unwrap();
+            assert_eq!(out, gold, "workers={workers} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn splitk_handles_single_block_and_empty() {
+        let (cache, id, q) = filled_cache(2, 1, 16, 3);
+        let gold = cache.decode_attention(id, &q, None).unwrap();
+        assert_eq!(cache.decode_attention_splitk(id, &q, None, 4).unwrap(), gold);
+        // empty sequence decodes to zeros
+        let mut cache = RadixKvCache::new(CacheConfig::new(1, 16));
+        let id = cache.alloc_sequence();
+        let out = cache.decode_attention_splitk(id, &[1.0; 16], None, 4).unwrap();
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sm_scale_override_respected() {
+        let (cache, id, q) = filled_cache(3, 1, 16, 20);
+        let default = cache.decode_attention(id, &q, None).unwrap();
+        let explicit = cache
+            .decode_attention(id, &q, Some(1.0 / (16f32).sqrt()))
+            .unwrap();
+        assert_eq!(default, explicit);
+        let flat = cache.decode_attention(id, &q, Some(0.0)).unwrap();
+        assert_ne!(default, flat);
+    }
+
+    #[test]
+    fn per_channel_k_mode_decodes_accurately() {
+        let (h, d, n) = (1usize, 32usize, 48usize);
+        let mut rng = Pcg64::seeded(4);
+        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+            .map(|_| (rng.normal_vec(d), rng.normal_vec(d)))
+            .collect();
+        let q: Vec<f32> = rng.normal_vec(d);
+        // per-channel scales measured from the actual K columns
+        let mut ch = vec![0.0f32; d];
+        for (k, _) in &toks {
+            for (c, &x) in ch.iter_mut().zip(k) {
+                *c = c.max(x.abs());
+            }
+        }
+        let mut cfg = CacheConfig { block_tokens: 8, max_blocks: 64, ..CacheConfig::new(h, d) };
+        let r = cfg.r;
+        cfg.k_channel_scale = ch.iter().map(|a| a.max(SCALE_EPS) / r).collect();
+        let mut cache = RadixKvCache::new(cfg);
+        let id = cache.alloc_sequence();
+        for (k, v) in &toks {
+            cache.append(id, k, v).unwrap();
+        }
+        let out = cache.decode_attention(id, &q, None).unwrap();
+        // split-K exactness holds in channel mode too
+        assert_eq!(
+            cache.decode_attention_splitk(id, &q, None, 3).unwrap(),
+            out
+        );
+        let mut ks = MatF32::zeros(n, d);
+        let mut vs = MatF32::zeros(n, d);
+        for (t, (k, v)) in toks.iter().enumerate() {
+            for i in 0..d {
+                ks.set(t, i, k[i]);
+                vs.set(t, i, v[i]);
+            }
+        }
+        let qm = MatF32::from_vec(1, d, q);
+        let gold = reference::standard_attention(&qm, &ks, &vs, &AttnConfig::new(d));
+        let e = stats::mre(&out, &gold.data);
+        assert!(e < 0.08, "per-channel decode mre {e}");
+    }
+
+    #[test]
+    fn calibrated_scales_beat_uncalibrated_fallback() {
+        use crate::calib::{CalibStats, PlanBuilder};
+        // decode traffic whose V sits at ~0.5σ: the N(0,1) fallback grid
+        // wastes most of its range, a calibrated grid does not
+        let (h, d, n) = (1usize, 32usize, 48usize);
+        let mut rng = Pcg64::seeded(7);
+        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+            .map(|_| {
+                let k: Vec<f32> = rng.normal_vec(h * d);
+                let v: Vec<f32> = rng.normal_vec(h * d).iter().map(|x| x * 0.5).collect();
+                (k, v)
+            })
+            .collect();
+        let q: Vec<f32> = rng.normal_vec(h * d);
+
+        let mut cs = CalibStats::new(h, d);
+        for (k, v) in &toks {
+            cs.record_kv_token(k, v).unwrap();
+        }
+        let plan = PlanBuilder::new(crate::quant::INT8_R).build(&cs);
+        assert!(plan.v_absmax < 3.0, "0.5σ V absmax, got {}", plan.v_absmax);
+
+        let run = |cfg: CacheConfig| -> Vec<f32> {
+            let mut cache = RadixKvCache::new(CacheConfig {
+                block_tokens: 8,
+                max_blocks: 64,
+                ..cfg
+            });
+            let id = cache.alloc_sequence();
+            for (k, v) in &toks {
+                cache.append(id, k, v).unwrap();
+            }
+            cache.decode_attention(id, &q, None).unwrap()
+        };
+        let out_cal = run(CacheConfig::calibrated(h, d, &plan));
+        let out_unc = run(CacheConfig::new(h, d));
+
+        let mut ks = MatF32::zeros(n, d);
+        let mut vs = MatF32::zeros(n, d);
+        for (t, (k, v)) in toks.iter().enumerate() {
+            for i in 0..d {
+                ks.set(t, i, k[i]);
+                vs.set(t, i, v[i]);
+            }
+        }
+        let qm = MatF32::from_vec(1, d, q.clone());
+        let gold = reference::standard_attention(&qm, &ks, &vs, &AttnConfig::new(d));
+        let e_cal = stats::mre(&out_cal, &gold.data);
+        let e_unc = stats::mre(&out_unc, &gold.data);
+        assert!(
+            e_cal < e_unc,
+            "calibrated {e_cal} should beat uncalibrated {e_unc}"
+        );
+    }
+
+    #[test]
+    fn partition_covers_exactly() {
+        for (n, w) in [(1usize, 4usize), (7, 3), (8, 8), (13, 4), (5, 1)] {
+            let parts = partition(n, w);
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts.last().unwrap().1, n);
+            for pair in parts.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0, "contiguous");
+                assert!(pair[0].1 > pair[0].0, "non-empty");
+            }
+        }
+    }
+}

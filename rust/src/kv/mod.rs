@@ -1,0 +1,71 @@
+//! Shared-prefix radix KV cache with copy-on-write INT8 blocks and
+//! split-K parallel flash-decode.
+//!
+//! Subsumes and extends the old `coordinator::kvcache` paged pool (which
+//! is now a thin re-export of this module). Four pieces:
+//!
+//!   - [`block`]: a refcounted [`block::BlockPool`] of fixed-size token
+//!     blocks holding the paper's operand formats — token-level INT8 K
+//!     codes + scales, tensor-level INT8 V codes — with copy-on-write
+//!     hand-out for writers ([`block::BlockPool::cow`]).
+//!   - [`radix`]: a [`radix::RadixIndex`] trie keyed on full-block
+//!     token-id chunks that maps incoming requests to already-quantized
+//!     shared blocks (system prompts, multi-turn chat, parallel
+//!     sampling), with LRU eviction of unreferenced entries under pool
+//!     pressure.
+//!   - [`quantize`]: the block quantizer — token-level K scales with the
+//!     plan's calibrated per-head clips, or the optional *per-channel*
+//!     K-scale mode ([`crate::calib::CalibrationPlan::k_channel_absmax`],
+//!     per the GPU INT8-KV-cache line of work), plus the fixed tensor
+//!     V scale. Scales attach at the block level: every sequence sharing
+//!     a block shares its quantization operating point by construction.
+//!   - [`decode`]: single-query INT8 attention over the cached codes —
+//!     sequential, or split-K across worker threads with an *exact*
+//!     partial-state merge (see below).
+//!
+//! # COW / refcount invariants
+//!
+//! 1. Every block has a reference count: one per sequence whose block
+//!    list contains it, plus one when the radix trie indexes it.
+//! 2. Full blocks are immutable. Only a sequence's *last, partially
+//!    filled* block is ever written, and only while the writer holds the
+//!    sole reference — [`RadixKvCache::append_token`] copies a shared
+//!    partial block before writing (copy-on-write; this happens after
+//!    [`RadixKvCache::fork_sequence`], the parallel-sampling path).
+//! 3. The trie only indexes *full* blocks, keyed by the complete
+//!    token-id prefix that produced them; prefix reuse therefore assumes
+//!    the usual serving invariant that identical token prefixes produce
+//!    identical K/V activations.
+//! 4. LRU eviction only removes trie leaves whose block refcount is
+//!    exactly 1 (the trie's own reference) — a block referenced by any
+//!    live sequence is never freed, and evicting a leaf can cascade to
+//!    its parent on the next pass, keeping the trie prefix-closed.
+//!
+//! # Split-K merge math
+//!
+//! Flash-Decoding partitions the key/value sequence, runs online softmax
+//! per partition and merges partial `(m, l, acc)` states. With the
+//! paper's quantized probabilities `P = round(R·exp(s − m))`, the classic
+//! float merge `l ← Σ l_j·exp(m_j − m)` is *inexact*: `P` rounded against
+//! a partition-local max does not equal `P` rounded against the global
+//! max. The single-query case admits an exact schedule instead:
+//!
+//!   - pass 1: each partition reduces its scores to a partial max `m_j`
+//!     (`max` is exact and order-invariant); merge: `m = max_j m_j`;
+//!   - pass 2: each partition accumulates integer partials under the
+//!     shared `m`: `l_j = Σ P_t`, `acc_j = Σ P_t·V₈[t]` — `P_t ≤ R` and
+//!     `|V₈| ≤ 128`, so both fit i64 exactly; merge: integer sums;
+//!   - finalize once: `O = acc·S_V / l`.
+//!
+//! Every float is computed from the same inputs regardless of the
+//! partitioning, so split-K decode output is bit-identical to sequential
+//! decode for any worker count (`decode_attention` *is* the one-worker
+//! case), which the kv integration tests assert.
+
+pub mod block;
+pub mod cache;
+pub mod decode;
+pub mod quantize;
+pub mod radix;
+
+pub use cache::{CacheConfig, CacheError, KvStats, RadixKvCache};

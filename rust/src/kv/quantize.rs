@@ -1,0 +1,109 @@
+//! The block quantizer: one token's K/V activations → INT8 codes inside
+//! a pool block, under the cache's plan-derived scales.
+//!
+//! K is quantized token-level (live rowmax, optionally clipped by the
+//! plan's calibrated per-head ranges) or per-channel (fixed calibrated
+//! per-(head, dim) scales — [`CacheConfig::k_channel_scale`]); V always
+//! uses the fixed tensor-level scale (paper §3.2). Because scales are
+//! properties of the *pool*, not the writer, every sequence sharing a
+//! block shares its quantization operating point by construction.
+
+use super::block::Block;
+use super::cache::CacheConfig;
+use crate::quant::SCALE_EPS;
+
+#[inline]
+fn clip_round(x: f32, r: f32) -> i8 {
+    x.round().clamp(-(r + 1.0), r) as i8
+}
+
+/// Quantize one token's flat (heads, d) K/V rows into `block` at `slot`.
+pub(crate) fn write_token(
+    cfg: &CacheConfig,
+    block: &mut Block,
+    slot: usize,
+    k: &[f32],
+    v: &[f32],
+) {
+    let (h, d, bt) = (cfg.heads, cfg.head_dim, cfg.block_tokens);
+    let r = cfg.r;
+    let inv_v = 1.0 / cfg.v_scale;
+    let per_channel = cfg.per_channel_k();
+    for head in 0..h {
+        let krow = &k[head * d..(head + 1) * d];
+        let base = head * bt * d + slot * d;
+        if per_channel {
+            let scales = &cfg.k_channel_scale[head * d..(head + 1) * d];
+            for (i, (&x, &s)) in krow.iter().zip(scales).enumerate() {
+                block.k_codes[base + i] = clip_round(x / s, r);
+            }
+        } else {
+            let rowmax = krow.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            // calibrated per-head clip: outlier tokens saturate instead
+            // of blowing up the whole row's quantization grid
+            let absmax = cfg.clip_k_rowmax(head, rowmax);
+            let scale = absmax.max(SCALE_EPS) / r;
+            let inv = 1.0 / scale;
+            for (i, &x) in krow.iter().enumerate() {
+                block.k_codes[base + i] = clip_round(x * inv, r);
+            }
+            block.k_scales[head * bt + slot] = scale;
+        }
+        let vrow = &v[head * d..(head + 1) * d];
+        for (i, &x) in vrow.iter().enumerate() {
+            block.v_codes[base + i] = clip_round(x * inv_v, r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::block::BlockPool;
+    use crate::util::rng::Pcg64;
+
+    fn block_for(cfg: &CacheConfig) -> (BlockPool, usize) {
+        let kv = cfg.heads * cfg.block_tokens * cfg.head_dim;
+        let mut pool = BlockPool::new(1, kv, cfg.heads * cfg.block_tokens);
+        let b = pool.alloc().unwrap();
+        (pool, b)
+    }
+
+    #[test]
+    fn token_mode_matches_per_token_quantizer() {
+        let cfg = CacheConfig { block_tokens: 4, ..CacheConfig::new(2, 8) };
+        let (mut pool, b) = block_for(&cfg);
+        let mut rng = Pcg64::seeded(1);
+        let k = rng.normal_vec(16);
+        let v = rng.normal_vec(16);
+        write_token(&cfg, pool.block_mut(b), 1, &k, &v);
+        let block = pool.block(b);
+        for head in 0..2 {
+            let krow = &k[head * 8..(head + 1) * 8];
+            let absmax = krow.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = absmax.max(SCALE_EPS) / 127.0;
+            assert!((block.k_scales[head * 4 + 1] - scale).abs() < 1e-9);
+            let base = head * 4 * 8 + 8;
+            for (i, &x) in krow.iter().enumerate() {
+                assert_eq!(block.k_codes[base + i], clip_round(x / scale, 127.0));
+            }
+        }
+    }
+
+    #[test]
+    fn per_channel_mode_uses_fixed_scales_and_saturates() {
+        let mut cfg = CacheConfig { block_tokens: 2, ..CacheConfig::new(1, 4) };
+        cfg.k_channel_scale = vec![0.01, 0.02, 0.04, 0.08];
+        let (mut pool, b) = block_for(&cfg);
+        let k = [0.5f32, 0.5, 0.5, 100.0];
+        let v = [0.0f32; 4];
+        write_token(&cfg, pool.block_mut(b), 0, &k, &v);
+        let block = pool.block(b);
+        assert_eq!(block.k_codes[0], 50); // 0.5 / 0.01
+        assert_eq!(block.k_codes[1], 25);
+        assert_eq!(block.k_codes[2], 13); // round(12.5)
+        assert_eq!(block.k_codes[3], 127, "out-of-range saturates");
+        // per-token scale slot untouched in channel mode
+        assert_eq!(block.k_scales[0], 0.0);
+    }
+}

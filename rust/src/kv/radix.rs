@@ -1,0 +1,253 @@
+//! Radix trie over token-id prefixes → quantized blocks.
+//!
+//! Block-granular, vLLM-prefix-caching-shaped: every edge is the token-id
+//! content of one *full* block, so a node at depth k indexes the
+//! quantized KV of tokens `[(k−1)·block_tokens, k·block_tokens)` of some
+//! previously served prefix. Lookup walks full-block chunks of an
+//! incoming prompt and returns the already-quantized blocks; the caller
+//! retains them for the new sequence and skips their prefill entirely.
+//!
+//! Eviction is LRU over *leaves whose block the trie alone references*
+//! (pool refcount 1): interior nodes are never removed (prefix closure)
+//! and blocks held by live sequences are never freed — evicting a leaf
+//! merely makes its parent eligible on a later pass.
+
+use super::block::BlockPool;
+use std::collections::HashMap;
+
+struct Node {
+    /// Token chunk keying this node in its parent (one full block).
+    chunk: Vec<u32>,
+    /// The pool block holding this chunk's quantized K/V.
+    block: usize,
+    parent: usize,
+    children: HashMap<Vec<u32>, usize>,
+    /// Logical LRU clock value of the last lookup/insert touching this
+    /// node.
+    last_used: u64,
+}
+
+const ROOT: usize = 0;
+
+/// Prefix index: token-id chunks → pool block ids.
+pub struct RadixIndex {
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    clock: u64,
+}
+
+impl Default for RadixIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixIndex {
+    pub fn new() -> RadixIndex {
+        RadixIndex {
+            nodes: vec![Some(Node {
+                chunk: Vec::new(),
+                block: usize::MAX,
+                parent: usize::MAX,
+                children: HashMap::new(),
+                last_used: 0,
+            })],
+            free: Vec::new(),
+            clock: 0,
+        }
+    }
+
+    /// Live entries (excluding the root).
+    pub fn len(&self) -> usize {
+        self.nodes.iter().flatten().count() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("live node")
+    }
+
+    /// Longest-prefix match over full `block_tokens`-sized chunks of
+    /// `tokens`; returns the indexed blocks in prefix order and bumps
+    /// the matched path's recency.
+    pub fn lookup(&mut self, tokens: &[u32], block_tokens: usize) -> Vec<usize> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut at = ROOT;
+        let mut blocks = Vec::new();
+        for chunk in tokens.chunks_exact(block_tokens) {
+            let Some(&child) = self.node(at).children.get(chunk) else {
+                break;
+            };
+            let node = self.node_mut(child);
+            node.last_used = clock;
+            blocks.push(node.block);
+            at = child;
+        }
+        blocks
+    }
+
+    /// Index `block` as the quantized KV of the last chunk of `tokens`
+    /// (whose length must be a positive multiple of `block_tokens`).
+    /// Returns true when a new entry was created — the caller must then
+    /// retain `block` on the trie's behalf. Returns false when the path's
+    /// interior is not indexed (an unshared ancestor was never inserted)
+    /// or an entry for this exact prefix already exists (first writer
+    /// wins — same tokens quantize to the same codes, so the existing
+    /// block is interchangeable).
+    pub fn insert(&mut self, tokens: &[u32], block_tokens: usize, block: usize) -> bool {
+        debug_assert!(
+            block_tokens > 0 && !tokens.is_empty() && tokens.len() % block_tokens == 0,
+            "insert key must be whole blocks"
+        );
+        self.clock += 1;
+        let clock = self.clock;
+        let chunks: Vec<&[u32]> = tokens.chunks_exact(block_tokens).collect();
+        let mut at = ROOT;
+        for chunk in &chunks[..chunks.len() - 1] {
+            let Some(&child) = self.node(at).children.get(*chunk) else {
+                return false;
+            };
+            self.node_mut(child).last_used = clock;
+            at = child;
+        }
+        let last = chunks[chunks.len() - 1].to_vec();
+        if self.node(at).children.contains_key(&last) {
+            return false;
+        }
+        let node = Node {
+            chunk: last.clone(),
+            block,
+            parent: at,
+            children: HashMap::new(),
+            last_used: clock,
+        };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.nodes[s] = Some(node);
+                s
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        self.node_mut(at).children.insert(last, slot);
+        true
+    }
+
+    /// Evict the least-recently-used leaf whose block only the trie
+    /// references, returning its block for the caller to release (which
+    /// frees it). `None` when nothing is evictable — every indexed block
+    /// is also held by a live sequence, or the trie is empty.
+    pub fn evict_lru(&mut self, pool: &BlockPool) -> Option<usize> {
+        let mut victim: Option<(usize, u64)> = None;
+        for (i, slot) in self.nodes.iter().enumerate() {
+            let Some(node) = slot else { continue };
+            if i == ROOT || !node.children.is_empty() || pool.ref_count(node.block) != 1 {
+                continue;
+            }
+            if victim.map(|(_, t)| node.last_used < t).unwrap_or(true) {
+                victim = Some((i, node.last_used));
+            }
+        }
+        let (i, _) = victim?;
+        let node = self.nodes[i].take().expect("victim is live");
+        self.node_mut(node.parent).children.remove(&node.chunk);
+        self.free.push(i);
+        Some(node.block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool_with(n: usize) -> (BlockPool, Vec<usize>) {
+        let mut pool = BlockPool::new(n, 4, 1);
+        let blocks = (0..n).map(|_| pool.alloc().unwrap()).collect();
+        (pool, blocks)
+    }
+
+    #[test]
+    fn lookup_matches_longest_full_block_prefix() {
+        let (_pool, b) = pool_with(3);
+        let mut trie = RadixIndex::new();
+        assert!(trie.insert(&[1, 2], 2, b[0]));
+        assert!(trie.insert(&[1, 2, 3, 4], 2, b[1]));
+        assert!(trie.insert(&[1, 2, 9, 9], 2, b[2]));
+        assert_eq!(trie.len(), 3);
+        // full two-block match
+        assert_eq!(trie.lookup(&[1, 2, 3, 4, 5], 2), vec![b[0], b[1]]);
+        // diverging second block
+        assert_eq!(trie.lookup(&[1, 2, 9, 9], 2), vec![b[0], b[2]]);
+        // partial final chunk never matches
+        assert_eq!(trie.lookup(&[1, 2, 3], 2), vec![b[0]]);
+        // cold prefix
+        assert!(trie.lookup(&[7, 7, 7, 7], 2).is_empty());
+    }
+
+    #[test]
+    fn insert_requires_indexed_interior_and_is_first_writer_wins() {
+        let (_pool, b) = pool_with(3);
+        let mut trie = RadixIndex::new();
+        // depth-2 insert without its ancestor: rejected
+        assert!(!trie.insert(&[1, 2, 3, 4], 2, b[0]));
+        assert!(trie.insert(&[1, 2], 2, b[0]));
+        // duplicate path keeps the first block
+        assert!(!trie.insert(&[1, 2], 2, b[1]));
+        assert_eq!(trie.lookup(&[1, 2], 2), vec![b[0]]);
+    }
+
+    #[test]
+    fn evict_lru_prefers_oldest_trie_only_leaf() {
+        let (mut pool, b) = pool_with(3);
+        let mut trie = RadixIndex::new();
+        trie.insert(&[1, 2], 2, b[0]);
+        trie.insert(&[3, 4], 2, b[1]);
+        trie.insert(&[5, 6], 2, b[2]);
+        // refresh [1,2] so [3,4] is the LRU
+        trie.lookup(&[1, 2], 2);
+        // a live sequence still holds b[1] → it must be skipped
+        pool.retain(b[1]);
+        let victim = trie.evict_lru(&pool).expect("evictable leaf");
+        assert_eq!(victim, b[2], "oldest trie-only leaf evicts first");
+        assert!(trie.lookup(&[5, 6], 2).is_empty());
+        // releasing the sequence's hold makes b[1] evictable
+        pool.release(b[1]);
+        assert_eq!(trie.evict_lru(&pool), Some(b[1]));
+        assert_eq!(trie.evict_lru(&pool), Some(b[0]));
+        assert!(trie.evict_lru(&pool).is_none(), "trie drained");
+        assert!(trie.is_empty());
+    }
+
+    #[test]
+    fn interior_nodes_survive_until_children_go() {
+        let (pool, b) = pool_with(2);
+        let mut trie = RadixIndex::new();
+        trie.insert(&[1, 2], 2, b[0]);
+        trie.insert(&[1, 2, 3, 4], 2, b[1]);
+        // refresh the parent: the child is still the only evictable node
+        trie.lookup(&[1, 2], 2);
+        assert_eq!(trie.evict_lru(&pool), Some(b[1]), "leaf before parent");
+        assert_eq!(trie.evict_lru(&pool), Some(b[0]), "parent after cascade");
+    }
+
+    #[test]
+    fn freed_slots_are_recycled() {
+        let (pool, b) = pool_with(2);
+        let mut trie = RadixIndex::new();
+        trie.insert(&[1, 2], 2, b[0]);
+        assert_eq!(trie.evict_lru(&pool), Some(b[0]));
+        trie.insert(&[9, 9], 2, b[1]);
+        assert_eq!(trie.len(), 1);
+        assert_eq!(trie.nodes.len(), 2, "slab slot reused");
+    }
+}

@@ -15,8 +15,9 @@
 //!   scheduler), the PJRT runtime that executes the artifacts, rust-native
 //!   numeric twins of every kernel, the post-training calibration and
 //!   precision-autotuning subsystem ([`calib`]) feeding the router and KV
-//!   cache measured scales, and the Ampere cost-model simulator that
-//!   regenerates the paper's Figure 2.
+//!   cache measured scales, the shared-prefix radix KV cache with
+//!   copy-on-write INT8 blocks and split-K flash-decode ([`kv`]), and the
+//!   Ampere cost-model simulator that regenerates the paper's Figure 2.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -25,6 +26,7 @@ pub mod bench_harness;
 pub mod calib;
 pub mod coordinator;
 pub mod gemm;
+pub mod kv;
 pub mod quant;
 pub mod runtime;
 pub mod server;

@@ -36,11 +36,12 @@ intfa — INT-FlashAttention serving runtime
 USAGE:
   intfa serve      [--artifacts DIR] [--addr HOST:PORT] [--backend pjrt|native]
                    [--policy eager|deadline|full] [--deadline-ms N] [--workers N]
+                   [--no-kv] [--kv-blocks N] [--kv-block-tokens N] [--kv-split-k N]
   intfa client     [--addr HOST:PORT] [--requests N] [--concurrency C]
                    [--heads H] [--seq N] [--head-dim D] [--accuracy fast|balanced|exact]
   intfa calibrate  [--out FILE] [--heads H] [--head-dim D] [--batches N]
                    [--calib-seq N] [--dist normal|uniform] [--method absmax|p999|ema]
-                   [--seqs 128,256,512] [--seed S]
+                   [--seqs 128,256,512] [--seed S] [--per-channel-k]
   intfa golden     [--artifacts DIR]
   intfa accuracy   [--dist normal|uniform] [--seqs 1024,2048] [--head-dim D]
   intfa perf-model [--gpu rtx4090|a100] [--seqs 1024,...,16384]
@@ -134,8 +135,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     log_info!("backend={} buckets={}", backend.name(), router.buckets().len());
-    let engine = Arc::new(Engine::with_calibration(router, backend, cfg, calibration));
-    let server = Server::bind(engine, args.get_or("addr", "127.0.0.1:7433"))?;
+    // shared-prefix KV cache over the manifest's attention geometry: the
+    // prefill/extend/decode verbs and prefix reuse around prefill
+    let kv_geometry = (!args.has("no-kv"))
+        .then(|| router.buckets().first().map(|b| (b.heads, b.head_dim)))
+        .flatten();
+    let engine = Engine::with_calibration(router, backend, cfg, calibration);
+    let engine = match kv_geometry {
+        Some((heads, head_dim)) => {
+            let mut kv_cfg = match engine.calibration() {
+                Some(artifact) => {
+                    int_flashattention::kv::CacheConfig::from_artifact(heads, head_dim, artifact)
+                        .map_err(|e| anyhow!(e))?
+                }
+                None => int_flashattention::kv::CacheConfig::new(heads, head_dim),
+            };
+            kv_cfg.max_blocks = args.get_usize("kv-blocks", 1024)?;
+            kv_cfg.block_tokens = args.get_usize("kv-block-tokens", 16)?;
+            let splitk = args.get_usize("kv-split-k", 4)?;
+            log_info!(
+                "kv cache: {heads}×{head_dim}, {} blocks × {} tokens, split-K {splitk}, \
+                 per-channel K {}",
+                kv_cfg.max_blocks,
+                kv_cfg.block_tokens,
+                !kv_cfg.k_channel_scale.is_empty()
+            );
+            engine.with_kv(
+                int_flashattention::kv::RadixKvCache::new(kv_cfg),
+                splitk,
+            )
+        }
+        None => engine,
+    };
+    let server = Server::bind(Arc::new(engine), args.get_or("addr", "127.0.0.1:7433"))?;
     println!("listening on {}", server.local_addr());
     server.serve();
     Ok(())
@@ -219,6 +251,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     }
     let plan = PlanBuilder::new(int_flashattention::quant::INT8_R)
         .method(method)
+        .per_channel_k(args.has("per-channel-k"))
         .build(&stats);
     log_info!(
         "plan: v_scale={:.6} (uncalibrated {:.6}) smoothing={} batches={}",
@@ -228,7 +261,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         plan.batches
     );
 
-    let cfg = AutotuneConfig { seqs, head_dim: d, dist, ..AutotuneConfig::default() };
+    let cfg = AutotuneConfig { seqs, head_dim: d, heads, dist, ..AutotuneConfig::default() };
     let artifact = CalibrationArtifact::autotuned(plan, &cfg);
     let mut table = Table::new(&["seq", "fast", "balanced", "exact", "int8 mre", "int8 Mtok/s"]);
     let join = |vs: &[Variant]| {

@@ -1,5 +1,6 @@
 //! JSON wire protocol encode/decode.
 
+use crate::coordinator::engine::PrefillResponse;
 use crate::coordinator::request::{AccuracyClass, RequestPayload};
 use crate::coordinator::Response;
 use crate::util::json::{parse, Json};
@@ -8,6 +9,14 @@ use crate::util::json::{parse, Json};
 #[derive(Debug)]
 pub enum WireRequest {
     Attention { accuracy: AccuracyClass, payload: RequestPayload },
+    /// Prompt prefill into the shared-prefix KV cache (token ids + QKV).
+    Prefill { accuracy: AccuracyClass, tokens: Vec<u32>, payload: RequestPayload },
+    /// Append one generated token's K/V to a cached sequence.
+    Extend { seq_id: u64, token: u32, k: Vec<f32>, v: Vec<f32> },
+    /// Split-K decode of one query token against a cached sequence.
+    Decode { seq_id: u64, q: Vec<f32> },
+    /// Release a cached sequence.
+    Release { seq_id: u64 },
     Ping,
     Metrics,
 }
@@ -16,6 +25,11 @@ pub enum WireRequest {
 #[derive(Debug)]
 pub enum WireResponse {
     Attention(Response),
+    Prefill(PrefillResponse),
+    /// Decode output (flat (heads, d)).
+    Output(Vec<f32>),
+    /// Verb succeeded with nothing to return (extend / release).
+    Done,
     Pong,
     Metrics(Json),
     Error(String),
@@ -30,28 +44,70 @@ fn f32_array(j: &Json, key: &str) -> Result<Vec<f32>, String> {
         .collect()
 }
 
+// token ids must fit u32 exactly — wrapping would alias distinct tokens
+// onto the same radix-trie key and serve another prompt's cached KV
+fn u32_field(j: &Json, key: &str) -> Result<u32, String> {
+    j.at(key)
+        .as_usize()
+        .and_then(|x| u32::try_from(x).ok())
+        .ok_or_else(|| format!("{key}: expected a u32"))
+}
+
+fn u32_array(j: &Json, key: &str) -> Result<Vec<u32>, String> {
+    j.at(key)
+        .as_arr()
+        .ok_or_else(|| format!("missing array field {key:?}"))?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .and_then(|x| u32::try_from(x).ok())
+                .ok_or_else(|| format!("{key}: expected u32 entries"))
+        })
+        .collect()
+}
+
+fn payload_fields(j: &Json) -> Result<RequestPayload, String> {
+    Ok(RequestPayload {
+        heads: j.at("heads").as_usize().ok_or("missing heads")?,
+        seq: j.at("seq").as_usize().ok_or("missing seq")?,
+        head_dim: j.at("head_dim").as_usize().ok_or("missing head_dim")?,
+        q: f32_array(j, "q")?,
+        k: f32_array(j, "k")?,
+        v: f32_array(j, "v")?,
+    })
+}
+
 /// Parse one request line.
 pub fn decode_request(line: &str) -> Result<WireRequest, String> {
     let j = parse(line).map_err(|e| e.to_string())?;
+    let accuracy = || {
+        AccuracyClass::parse(j.at("accuracy").as_str().unwrap_or("fast"))
+            .ok_or_else(|| "bad accuracy class".to_string())
+    };
+    let seq_id = || j.at("seq_id").as_usize().map(|x| x as u64).ok_or("missing seq_id");
     match j.at("type").as_str() {
         Some("ping") => Ok(WireRequest::Ping),
         Some("metrics") => Ok(WireRequest::Metrics),
-        Some("attention") => {
-            let accuracy = AccuracyClass::parse(j.at("accuracy").as_str().unwrap_or("fast"))
-                .ok_or_else(|| "bad accuracy class".to_string())?;
-            let heads = j.at("heads").as_usize().ok_or("missing heads")?;
-            let seq = j.at("seq").as_usize().ok_or("missing seq")?;
-            let head_dim = j.at("head_dim").as_usize().ok_or("missing head_dim")?;
-            let payload = RequestPayload {
-                heads,
-                seq,
-                head_dim,
-                q: f32_array(&j, "q")?,
-                k: f32_array(&j, "k")?,
-                v: f32_array(&j, "v")?,
-            };
-            Ok(WireRequest::Attention { accuracy, payload })
-        }
+        Some("attention") => Ok(WireRequest::Attention {
+            accuracy: accuracy()?,
+            payload: payload_fields(&j)?,
+        }),
+        Some("prefill") => Ok(WireRequest::Prefill {
+            accuracy: accuracy()?,
+            tokens: u32_array(&j, "tokens")?,
+            payload: payload_fields(&j)?,
+        }),
+        Some("extend") => Ok(WireRequest::Extend {
+            seq_id: seq_id()?,
+            token: u32_field(&j, "token")?,
+            k: f32_array(&j, "k")?,
+            v: f32_array(&j, "v")?,
+        }),
+        Some("decode") => Ok(WireRequest::Decode {
+            seq_id: seq_id()?,
+            q: f32_array(&j, "q")?,
+        }),
+        Some("release") => Ok(WireRequest::Release { seq_id: seq_id()? }),
         Some(other) => Err(format!("unknown request type {other:?}")),
         None => Err("missing type field".into()),
     }
@@ -79,6 +135,27 @@ pub fn encode_response(resp: &WireResponse) -> String {
             ("error", Json::str(e.clone())),
         ])
         .to_string(),
+        WireResponse::Done => Json::obj(vec![("ok", Json::Bool(true))]).to_string(),
+        WireResponse::Output(o) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("o", floats_json(o)),
+        ])
+        .to_string(),
+        WireResponse::Prefill(r) => {
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("seq_id", Json::num(r.seq_id as f64)),
+                ("cached_tokens", Json::num(r.cached_tokens as f64)),
+                ("new_tokens", Json::num(r.new_tokens as f64)),
+            ];
+            if let Some(v) = r.variant {
+                fields.push(("variant", Json::str(v.name())));
+            }
+            if let Some(o) = &r.output {
+                fields.push(("o", floats_json(o)));
+            }
+            Json::obj(fields).to_string()
+        }
         WireResponse::Attention(r) => {
             let mut fields = vec![
                 ("id", Json::num(r.id as f64)),
@@ -148,6 +225,83 @@ mod tests {
             r#"{"type":"attention","accuracy":"hyper","heads":1,"seq":1,"head_dim":1,"q":[1],"k":[1],"v":[1]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn decode_kv_verbs() {
+        let line = r#"{"type":"prefill","accuracy":"fast","tokens":[5,6,7],"heads":1,
+                      "seq":3,"head_dim":2,"q":[1,2,3,4,5,6],"k":[1,2,3,4,5,6],"v":[1,2,3,4,5,6]}"#;
+        match decode_request(line).unwrap() {
+            WireRequest::Prefill { tokens, payload, .. } => {
+                assert_eq!(tokens, vec![5, 6, 7]);
+                assert!(payload.validate().is_ok());
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode_request(r#"{"type":"extend","seq_id":4,"token":9,"k":[1],"v":[2]}"#)
+            .unwrap()
+        {
+            WireRequest::Extend { seq_id, token, k, v } => {
+                assert_eq!((seq_id, token), (4, 9));
+                assert_eq!((k, v), (vec![1.0], vec![2.0]));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            decode_request(r#"{"type":"decode","seq_id":4,"q":[1,2]}"#).unwrap(),
+            WireRequest::Decode { seq_id: 4, .. }
+        ));
+        assert!(matches!(
+            decode_request(r#"{"type":"release","seq_id":4}"#).unwrap(),
+            WireRequest::Release { seq_id: 4 }
+        ));
+        // missing fields are reported
+        assert!(decode_request(r#"{"type":"prefill","heads":1,"seq":1,"head_dim":1}"#).is_err());
+        assert!(decode_request(r#"{"type":"decode","q":[1]}"#).is_err());
+        assert!(decode_request(r#"{"type":"release"}"#).is_err());
+        // out-of-range token ids are rejected, not wrapped (wrapping
+        // would alias trie keys across prompts)
+        assert!(decode_request(
+            r#"{"type":"extend","seq_id":1,"token":4294967296,"k":[1],"v":[1]}"#
+        )
+        .is_err());
+        assert!(decode_request(
+            r#"{"type":"prefill","accuracy":"fast","tokens":[4294967297],"heads":1,
+               "seq":1,"head_dim":1,"q":[1],"k":[1],"v":[1]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn encode_kv_responses() {
+        let full = WireResponse::Prefill(PrefillResponse {
+            seq_id: 3,
+            cached_tokens: 8,
+            new_tokens: 2,
+            output: Some(vec![0.5, -1.0]),
+            variant: Some(Variant::Int8),
+        });
+        let j = crate::util::json::parse(&encode_response(&full)).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(true));
+        assert_eq!(j.at("seq_id").as_i64(), Some(3));
+        assert_eq!(j.at("cached_tokens").as_i64(), Some(8));
+        assert_eq!(j.at("o").as_arr().unwrap().len(), 2);
+        // fully cached: no output, no variant
+        let skipped = WireResponse::Prefill(PrefillResponse {
+            seq_id: 4,
+            cached_tokens: 10,
+            new_tokens: 0,
+            output: None,
+            variant: None,
+        });
+        let j = crate::util::json::parse(&encode_response(&skipped)).unwrap();
+        assert!(j.at("o").is_null());
+        assert!(j.at("variant").is_null());
+        let j = crate::util::json::parse(&encode_response(&WireResponse::Done)).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(true));
+        let j =
+            crate::util::json::parse(&encode_response(&WireResponse::Output(vec![1.0]))).unwrap();
+        assert_eq!(j.at("o").as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -126,6 +126,26 @@ fn handle_connection(
             Ok(WireRequest::Attention { accuracy, payload }) => {
                 WireResponse::Attention(engine.submit_blocking(accuracy, payload))
             }
+            Ok(WireRequest::Prefill { accuracy, tokens, payload }) => {
+                match engine.prefill(accuracy, &tokens, payload) {
+                    Ok(r) => WireResponse::Prefill(r),
+                    Err(e) => WireResponse::Error(e),
+                }
+            }
+            Ok(WireRequest::Extend { seq_id, token, k, v }) => {
+                match engine.extend(seq_id, token, &k, &v) {
+                    Ok(()) => WireResponse::Done,
+                    Err(e) => WireResponse::Error(e),
+                }
+            }
+            Ok(WireRequest::Decode { seq_id, q }) => match engine.decode(seq_id, &q) {
+                Ok(o) => WireResponse::Output(o),
+                Err(e) => WireResponse::Error(e),
+            },
+            Ok(WireRequest::Release { seq_id }) => match engine.kv_release(seq_id) {
+                Ok(()) => WireResponse::Done,
+                Err(e) => WireResponse::Error(e),
+            },
         };
         writer.write_all(encode_response(&resp).as_bytes())?;
         writer.write_all(b"\n")?;
@@ -196,6 +216,91 @@ impl Client {
             ("k", arr(k)),
             ("v", arr(v)),
         ]);
+        let resp = self.call_raw(&req.to_string())?;
+        crate::util::json::parse(&resp)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    }
+
+    /// Prefill a tokenized prompt into the server's KV cache.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill(
+        &mut self,
+        accuracy: &str,
+        tokens: &[u32],
+        heads: usize,
+        seq: usize,
+        head_dim: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> std::io::Result<crate::util::json::Json> {
+        use crate::util::json::Json;
+        let arr = |xs: &[f32]| Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect());
+        let req = Json::obj(vec![
+            ("type", Json::str("prefill")),
+            ("accuracy", Json::str(accuracy)),
+            (
+                "tokens",
+                Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("heads", Json::num(heads as f64)),
+            ("seq", Json::num(seq as f64)),
+            ("head_dim", Json::num(head_dim as f64)),
+            ("q", arr(q)),
+            ("k", arr(k)),
+            ("v", arr(v)),
+        ]);
+        self.call_json(&req)
+    }
+
+    /// Append one generated token's K/V to a cached sequence.
+    pub fn extend(
+        &mut self,
+        seq_id: u64,
+        token: u32,
+        k: &[f32],
+        v: &[f32],
+    ) -> std::io::Result<crate::util::json::Json> {
+        use crate::util::json::Json;
+        let arr = |xs: &[f32]| Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect());
+        let req = Json::obj(vec![
+            ("type", Json::str("extend")),
+            ("seq_id", Json::num(seq_id as f64)),
+            ("token", Json::num(token as f64)),
+            ("k", arr(k)),
+            ("v", arr(v)),
+        ]);
+        self.call_json(&req)
+    }
+
+    /// Decode one query token against a cached sequence.
+    pub fn decode(&mut self, seq_id: u64, q: &[f32]) -> std::io::Result<crate::util::json::Json> {
+        use crate::util::json::Json;
+        let req = Json::obj(vec![
+            ("type", Json::str("decode")),
+            ("seq_id", Json::num(seq_id as f64)),
+            (
+                "q",
+                Json::Arr(q.iter().map(|&x| Json::num(x as f64)).collect()),
+            ),
+        ]);
+        self.call_json(&req)
+    }
+
+    /// Release a cached sequence.
+    pub fn release(&mut self, seq_id: u64) -> std::io::Result<crate::util::json::Json> {
+        use crate::util::json::Json;
+        let req = Json::obj(vec![
+            ("type", Json::str("release")),
+            ("seq_id", Json::num(seq_id as f64)),
+        ]);
+        self.call_json(&req)
+    }
+
+    fn call_json(
+        &mut self,
+        req: &crate::util::json::Json,
+    ) -> std::io::Result<crate::util::json::Json> {
         let resp = self.call_raw(&req.to_string())?;
         crate::util::json::parse(&resp)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))

@@ -1,0 +1,275 @@
+//! kv/ integration: shared-prefix reuse and eviction safety
+//! (property-tested against private rebuilds), and the engine path that
+//! routes prefix-cache hits around prefill.
+
+use int_flashattention::attention::Variant;
+use int_flashattention::calib::{AutotuneConfig, CalibStats, CalibrationArtifact, PlanBuilder};
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::coordinator::{AccuracyClass, RequestPayload};
+use int_flashattention::kv::{CacheConfig, RadixKvCache};
+use int_flashattention::quant::INT8_R;
+use int_flashattention::util::proptest::{check, Config, Pair, UsizeRange};
+use int_flashattention::util::rng::Pcg64;
+use std::sync::Arc;
+
+const HEADS: usize = 2;
+const HEAD_DIM: usize = 16;
+
+/// Deterministic per-token activations — the serving invariant that an
+/// identical token prefix reproduces its K/V rows, which is what makes
+/// radix reuse sound.
+fn token_kv(tok: u32) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::new(tok as u64, 42);
+    (rng.normal_vec(HEADS * HEAD_DIM), rng.normal_vec(HEADS * HEAD_DIM))
+}
+
+fn small_cfg(block_tokens: usize, max_blocks: usize) -> CacheConfig {
+    CacheConfig { block_tokens, max_blocks, ..CacheConfig::new(HEADS, HEAD_DIM) }
+}
+
+/// Start + fully append a prompt (reusing whatever the trie offers).
+fn build_seq(cache: &mut RadixKvCache, tokens: &[u32]) -> u64 {
+    let (id, cached) = cache.start_sequence(tokens);
+    for &t in &tokens[cached..] {
+        let (k, v) = token_kv(t);
+        cache.append_token(id, t, &k, &v).unwrap();
+    }
+    id
+}
+
+#[test]
+fn property_shared_prefix_decode_bit_identical_to_private() {
+    // random (prefix, suffix, split-K width): decode through radix-shared
+    // blocks must equal a fully private rebuild bit-for-bit
+    let g = Pair(UsizeRange(1, 40), Pair(UsizeRange(0, 20), UsizeRange(1, 4)));
+    check(
+        "shared-prefix decode is exact",
+        &g,
+        Config { cases: 24, ..Config::default() },
+        |&(prefix, (suffix, workers))| {
+            let prompt: Vec<u32> = (0..(prefix + suffix) as u32).collect();
+            let mut shared = RadixKvCache::new(small_cfg(8, 64));
+            // first tenant registers the prefix in the trie
+            let first = build_seq(&mut shared, &prompt[..prefix]);
+            // second tenant rides the radix hit
+            let second = build_seq(&mut shared, &prompt);
+            // private rebuild: same tokens, nothing shared
+            let mut private = RadixKvCache::new(small_cfg(8, 64));
+            let p = build_seq(&mut private, &prompt);
+            let mut qrng = Pcg64::seeded((prefix * 31 + suffix) as u64);
+            let q = qrng.normal_vec(HEADS * HEAD_DIM);
+            let want = private.decode_attention(p, &q, None).unwrap();
+            let _ = first;
+            (1..=workers).all(|w| {
+                shared.decode_attention_splitk(second, &q, None, w).unwrap() == want
+            })
+        },
+    );
+}
+
+#[test]
+fn property_eviction_never_frees_live_blocks() {
+    // churn a tiny pool (10 blocks) with prefix-sharing tenants, frees
+    // and forced evictions; afterwards every live sequence must decode
+    // exactly like a private rebuild — a block freed while referenced
+    // would get clobbered by reuse and diverge
+    let g = UsizeRange(1, 10_000);
+    check(
+        "eviction spares live blocks",
+        &g,
+        Config { cases: 16, ..Config::default() },
+        |&seed| {
+            let mut rng = Pcg64::seeded(seed as u64);
+            let mut cache = RadixKvCache::new(small_cfg(4, 10));
+            let mut live: Vec<(u64, Vec<u32>)> = Vec::new();
+            for _ in 0..12 {
+                if rng.next_range(3) < 2 || live.is_empty() {
+                    // new tenant: one of three base prompts, random length
+                    let base = rng.next_range(3) as u32 * 100;
+                    let len = 1 + rng.next_range(10) as usize;
+                    let tokens: Vec<u32> = (0..len as u32).map(|i| base + i).collect();
+                    let (id, cached) = cache.start_sequence(&tokens);
+                    let mut appended = tokens[..cached].to_vec();
+                    for &t in &tokens[cached..] {
+                        let (k, v) = token_kv(t);
+                        // pool pressure may legitimately reject the tail
+                        if cache.append_token(id, t, &k, &v).is_err() {
+                            break;
+                        }
+                        appended.push(t);
+                    }
+                    live.push((id, appended));
+                } else {
+                    let idx = rng.next_range(live.len() as u64) as usize;
+                    let (id, _) = live.swap_remove(idx);
+                    cache.free_sequence(id).unwrap();
+                }
+            }
+            let mut qrng = Pcg64::seeded(seed as u64 ^ 0xABCD);
+            let q = qrng.normal_vec(HEADS * HEAD_DIM);
+            live.iter().all(|(id, tokens)| {
+                let mut private = RadixKvCache::new(small_cfg(4, 10));
+                let p = build_seq(&mut private, tokens);
+                cache.decode_attention_splitk(*id, &q, None, 2).unwrap()
+                    == private.decode_attention(p, &q, None).unwrap()
+            })
+        },
+    );
+}
+
+fn native_router() -> BucketRouter {
+    let mk = |variant, seq| Bucket {
+        variant,
+        batch: 2,
+        heads: HEADS,
+        seq,
+        head_dim: HEAD_DIM,
+        causal: true,
+        artifact: String::new(),
+    };
+    BucketRouter::new(vec![
+        mk(Variant::Int8, 32),
+        mk(Variant::Int8, 64),
+        mk(Variant::Fp16, 64),
+    ])
+}
+
+/// Payload whose K/V rows match [`token_kv`] (so trie reuse is sound)
+/// in the engine's flat (heads, seq, d) layout.
+fn payload_for(tokens: &[u32], qseed: u64) -> RequestPayload {
+    let n = tokens.len();
+    let mut k = vec![0.0f32; HEADS * n * HEAD_DIM];
+    let mut v = vec![0.0f32; HEADS * n * HEAD_DIM];
+    for (t, &tok) in tokens.iter().enumerate() {
+        let (kt, vt) = token_kv(tok);
+        for head in 0..HEADS {
+            let dst = head * n * HEAD_DIM + t * HEAD_DIM;
+            let src = head * HEAD_DIM;
+            k[dst..dst + HEAD_DIM].copy_from_slice(&kt[src..src + HEAD_DIM]);
+            v[dst..dst + HEAD_DIM].copy_from_slice(&vt[src..src + HEAD_DIM]);
+        }
+    }
+    let mut rng = Pcg64::seeded(qseed);
+    RequestPayload {
+        heads: HEADS,
+        seq: n,
+        head_dim: HEAD_DIM,
+        q: rng.normal_vec(HEADS * n * HEAD_DIM),
+        k,
+        v,
+    }
+}
+
+#[test]
+fn engine_partial_prefix_hit_prefills_only_the_suffix() {
+    let cache = RadixKvCache::new(small_cfg(8, 64));
+    let e = Engine::new(
+        native_router(),
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, ..EngineConfig::default() },
+    )
+    .with_kv(cache, 2);
+
+    // cold 16-token prompt goes through the batched pipeline
+    let prompt: Vec<u32> = (0..16).collect();
+    let cold = e
+        .prefill(AccuracyClass::Fast, &prompt, payload_for(&prompt, 1))
+        .expect("cold prefill");
+    assert_eq!(cold.cached_tokens, 0);
+    assert_eq!(cold.output.as_ref().map(Vec::len), Some(HEADS * 16 * HEAD_DIM));
+    let formed = e.metrics.counter("batches.formed").get();
+    assert!(formed >= 1, "cold prefill batched");
+
+    // longer prompt sharing the 16-token prefix: the batched prefill is
+    // provably skipped (block-reuse metrics + no new batch forms) and
+    // only the 8 suffix rows are computed
+    let longer: Vec<u32> = (0..24).collect();
+    let warm = e
+        .prefill(AccuracyClass::Fast, &longer, payload_for(&longer, 2))
+        .expect("warm prefill");
+    assert_eq!(warm.cached_tokens, 16, "both full blocks reused");
+    assert_eq!(warm.new_tokens, 8);
+    assert_eq!(warm.variant, Some(Variant::Int8));
+    assert_eq!(warm.output.as_ref().map(Vec::len), Some(HEADS * 8 * HEAD_DIM));
+    assert!(warm.output.unwrap().iter().all(|x| x.is_finite()));
+    assert_eq!(
+        e.metrics.counter("batches.formed").get(),
+        formed,
+        "prefix hit must not reach the batcher"
+    );
+    assert_eq!(e.metrics.counter("kv.prefill.batches_skipped").get(), 1);
+    assert_eq!(e.metrics.gauge("kv.prefix.tokens_reused").get(), 16);
+    assert_eq!(e.metrics.gauge("kv.prefix.hits").get(), 1);
+    assert!(e.metrics.gauge("kv.blocks.shared").get() >= 2);
+
+    // a warm Exact request must not downgrade to the quantized cache
+    // path: blocks are still reused, but its suffix rows run through the
+    // batched pipeline under the router's exact variant
+    let formed_before = e.metrics.counter("batches.formed").get();
+    let longest: Vec<u32> = (0..32).collect();
+    let exact = e
+        .prefill(AccuracyClass::Exact, &longest, payload_for(&longest, 4))
+        .expect("exact prefill");
+    assert_eq!(exact.cached_tokens, 24, "three full blocks reused");
+    assert_eq!(exact.new_tokens, 8);
+    assert_eq!(exact.variant, Some(Variant::Fp16));
+    assert_eq!(exact.output.as_ref().map(Vec::len), Some(HEADS * 8 * HEAD_DIM));
+    assert!(
+        e.metrics.counter("batches.formed").get() > formed_before,
+        "Exact suffix rows go through the batcher"
+    );
+    e.kv_release(exact.seq_id).unwrap();
+
+    // the warm sequence serves decodes over shared + private blocks
+    let mut rng = Pcg64::seeded(3);
+    let q: Vec<f32> = rng.normal_vec(HEADS * HEAD_DIM);
+    let out = e.decode(warm.seq_id, &q).expect("decode");
+    assert_eq!(out.len(), HEADS * HEAD_DIM);
+    e.kv_release(cold.seq_id).unwrap();
+    e.kv_release(warm.seq_id).unwrap();
+}
+
+#[test]
+fn kv_cache_from_artifact_validates_geometry() {
+    // calibrate (with per-channel K) at the deployment geometry, persist
+    // through the artifact, rebuild the cache from it
+    let mut stats = CalibStats::new(HEADS, HEAD_DIM);
+    let mut rng = Pcg64::seeded(5);
+    for _ in 0..4 {
+        let n = HEADS * 32 * HEAD_DIM;
+        stats
+            .record_qkv(&rng.normal_vec(n), &rng.normal_vec(n), &rng.normal_vec(n), 32)
+            .unwrap();
+    }
+    let plan = PlanBuilder::new(INT8_R).per_channel_k(true).build(&stats);
+    let tune = AutotuneConfig {
+        seqs: vec![32],
+        head_dim: HEAD_DIM,
+        heads: HEADS,
+        samples: 1,
+        timing_iters: 1,
+        ..AutotuneConfig::default()
+    };
+    let artifact = CalibrationArtifact::autotuned(plan, &tune);
+    let g = artifact.geometry.as_ref().expect("geometry recorded");
+    assert_eq!((g.heads, g.head_dim), (HEADS, HEAD_DIM));
+
+    let cfg = CacheConfig::from_artifact(HEADS, HEAD_DIM, &artifact).expect("compatible");
+    assert_eq!(cfg.k_channel_scale.len(), HEADS * HEAD_DIM);
+    assert!(cfg.per_channel_k());
+
+    // wrong deployment geometry is rejected up front — including the
+    // head_dim direction, which predecessor checks never covered
+    assert!(CacheConfig::from_artifact(HEADS + 1, HEAD_DIM, &artifact).is_err());
+    assert!(CacheConfig::from_artifact(HEADS, HEAD_DIM * 2, &artifact).is_err());
+
+    // and the per-channel cache serves decodes end to end
+    let mut cache = RadixKvCache::new(CacheConfig { block_tokens: 8, max_blocks: 32, ..cfg });
+    let id = build_seq(&mut cache, &(0..12).collect::<Vec<u32>>());
+    let q = rng.normal_vec(HEADS * HEAD_DIM);
+    let out = cache.decode_attention_splitk(id, &q, None, 2).unwrap();
+    assert_eq!(out, cache.decode_attention(id, &q, None).unwrap());
+    assert!(out.iter().all(|x| x.is_finite()));
+}

@@ -10,6 +10,7 @@ use int_flashattention::util::rng::Pcg64;
 use std::sync::Arc;
 
 fn test_server() -> (int_flashattention::server::tcp::ShutdownHandle, std::thread::JoinHandle<()>) {
+    use int_flashattention::kv::{CacheConfig, RadixKvCache};
     let mk = |variant, seq| Bucket {
         variant,
         batch: 2,
@@ -24,11 +25,19 @@ fn test_server() -> (int_flashattention::server::tcp::ShutdownHandle, std::threa
         mk(Variant::Fp16, 32),
         mk(Variant::HalfInt8, 32),
     ]);
-    let engine = Arc::new(Engine::new(
-        router,
-        Arc::new(NativeBackend { threads: 1 }),
-        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
-    ));
+    let cache = RadixKvCache::new(CacheConfig {
+        block_tokens: 8,
+        max_blocks: 32,
+        ..CacheConfig::new(2, 8)
+    });
+    let engine = Arc::new(
+        Engine::new(
+            router,
+            Arc::new(NativeBackend { threads: 1 }),
+            EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+        )
+        .with_kv(cache, 2),
+    );
     let server = Server::bind(engine, "127.0.0.1:0").expect("bind");
     server.start()
 }
@@ -79,6 +88,63 @@ fn protocol_error_handling() {
     assert_eq!(resp.at("ok").as_bool(), Some(false));
 
     // connection still alive after errors
+    assert!(client.ping().expect("ping"));
+
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn kv_prefill_decode_release_roundtrip() {
+    let (handle, join) = test_server();
+    let mut client = Client::connect(handle.addr()).expect("connect");
+    let (h, n, d) = (2usize, 16usize, 8usize);
+    let mut rng = Pcg64::seeded(7);
+    let tokens: Vec<u32> = (0..n as u32).collect();
+    let q = rng.normal_vec(h * n * d);
+    let k = rng.normal_vec(h * n * d);
+    let v = rng.normal_vec(h * n * d);
+
+    // cold prefill: full output, nothing cached
+    let resp = client
+        .prefill("fast", &tokens, h, n, d, &q, &k, &v)
+        .expect("prefill");
+    assert_eq!(resp.at("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.at("cached_tokens").as_i64(), Some(0));
+    assert_eq!(resp.at("o").as_arr().unwrap().len(), h * n * d);
+    let cold_id = resp.at("seq_id").as_usize().unwrap() as u64;
+
+    // warm prefill of the same prompt: both full blocks reused, no output
+    let resp = client
+        .prefill("fast", &tokens, h, n, d, &q, &k, &v)
+        .expect("prefill");
+    assert_eq!(resp.at("ok").as_bool(), Some(true));
+    assert_eq!(resp.at("cached_tokens").as_i64(), Some(16));
+    assert_eq!(resp.at("new_tokens").as_i64(), Some(0));
+    assert!(resp.at("o").is_null(), "fully cached prompt carries no output");
+    let warm_id = resp.at("seq_id").as_usize().unwrap() as u64;
+
+    // extend + decode on the warm sequence
+    let kt = rng.normal_vec(h * d);
+    let vt = rng.normal_vec(h * d);
+    let resp = client.extend(warm_id, 99, &kt, &vt).expect("extend");
+    assert_eq!(resp.at("ok").as_bool(), Some(true));
+    let qt = rng.normal_vec(h * d);
+    let resp = client.decode(warm_id, &qt).expect("decode");
+    assert_eq!(resp.at("ok").as_bool(), Some(true));
+    assert_eq!(resp.at("o").as_arr().unwrap().len(), h * d);
+
+    // reuse metrics are exported through the metrics verb
+    let m = client.metrics().expect("metrics");
+    assert_eq!(m.at("gauge.kv.prefix.tokens_reused").as_i64(), Some(16));
+    assert_eq!(m.at("counter.kv.prefill.batches_skipped").as_i64(), Some(1));
+
+    // release both; a dangling decode reports an error but keeps the
+    // connection alive
+    assert_eq!(client.release(cold_id).unwrap().at("ok").as_bool(), Some(true));
+    assert_eq!(client.release(warm_id).unwrap().at("ok").as_bool(), Some(true));
+    let resp = client.decode(warm_id, &qt).expect("decode after release");
+    assert_eq!(resp.at("ok").as_bool(), Some(false));
     assert!(client.ping().expect("ping"));
 
     handle.shutdown();

@@ -1,0 +1,204 @@
+//! sched/ serving bench: decode tokens/sec at 1 / 8 / 32 concurrent
+//! sequences — continuous-batched tick loop vs the per-call baseline.
+//!
+//! The per-call baseline is the pre-scheduler serving shape: one OS
+//! thread per sequence driving `Engine::kv_start` / `extend` / `decode`
+//! round-trips (per-op stripe locking, per-op metric sync, per-op
+//! split-K decision). The batched mode submits the same prompts through
+//! `Engine::generate`, whose scheduler folds every in-flight decode
+//! step into one batched attention call per tick. Both modes run the
+//! same deterministic model over the same prompts, so the bench also
+//! asserts the token streams are bit-identical — the exactness contract
+//! is part of the measurement, not just the tests.
+//!
+//! Prints markdown tables and writes `BENCH_sched.json` (consumed by
+//! the CI bench-smoke step as an artifact).
+//!
+//! Run: `cargo bench --bench sched_throughput` (INTFA_BENCH_FULL=1
+//! lengthens generation; INTFA_BENCH_OUT overrides the JSON path).
+
+use int_flashattention::attention::Variant;
+use int_flashattention::bench_harness::Table;
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::kv::CacheConfig;
+use int_flashattention::sched::{HashModel, SchedConfig, TokenModel};
+use int_flashattention::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+const HEADS: usize = 4;
+const HEAD_DIM: usize = 64;
+const STRIPES: usize = 4;
+const PROMPT_LEN: usize = 32;
+
+fn engine() -> Engine {
+    let router = BucketRouter::new(vec![Bucket {
+        variant: Variant::Int8,
+        batch: 2,
+        heads: HEADS,
+        seq: 64,
+        head_dim: HEAD_DIM,
+        causal: true,
+        artifact: String::new(),
+    }]);
+    Engine::new(
+        router,
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    )
+    // generous pool (~20 MB): the per-call baseline has no admission
+    // control, so even a worst-case stripe-hash skew of 32 full-length
+    // sequences must fit one stripe
+    .with_kv_striped(
+        CacheConfig { block_tokens: 16, max_blocks: 2048, ..CacheConfig::new(HEADS, HEAD_DIM) },
+        STRIPES,
+        2,
+    )
+}
+
+fn prompt(i: usize) -> Vec<u32> {
+    let base = (i as u32 + 1) * 100_000;
+    (base..base + PROMPT_LEN as u32).collect()
+}
+
+/// Per-call baseline: one thread per sequence, engine verb round-trips.
+fn run_percall(conc: usize, max_new: usize, model: &Arc<HashModel>) -> (f64, Vec<Vec<u32>>) {
+    let e = Arc::new(engine());
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..conc)
+        .map(|i| {
+            let e = e.clone();
+            let model = model.clone();
+            std::thread::spawn(move || {
+                let p = prompt(i);
+                let (seq, cached) = e.kv_start(&p).expect("start");
+                let mut tokens = p;
+                for pos in cached..tokens.len() {
+                    let (k, v) = model.kv(tokens[pos], pos);
+                    e.extend(seq, tokens[pos], &k, &v).expect("prefill extend");
+                }
+                let mut generated = Vec::new();
+                while generated.len() < max_new {
+                    let pos = tokens.len() - 1;
+                    let q = model.query(tokens[pos], pos);
+                    let out = e.decode(seq, &q).expect("decode");
+                    let next = model.next_token(&out, pos);
+                    generated.push(next);
+                    tokens.push(next);
+                    if generated.len() < max_new {
+                        let (k, v) = model.kv(next, pos + 1);
+                        e.extend(seq, next, &k, &v).expect("extend");
+                    }
+                }
+                e.kv_release(seq).expect("release");
+                generated
+            })
+        })
+        .collect();
+    let tails: Vec<Vec<u32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    ((conc * max_new) as f64 / wall, tails)
+}
+
+/// Continuous batching: the same prompts through the scheduler.
+fn run_batched(conc: usize, max_new: usize, model: &Arc<HashModel>) -> (f64, Vec<Vec<u32>>) {
+    let e = engine()
+        .with_sched(
+            model.clone(),
+            SchedConfig { max_inflight: conc.max(1), ..SchedConfig::default() },
+        )
+        .expect("kv attached");
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..conc)
+        .map(|i| e.generate(prompt(i), max_new).expect("submit").1)
+        .collect();
+    let tails: Vec<Vec<u32>> = rxs
+        .into_iter()
+        .map(|rx| {
+            use int_flashattention::sched::StreamEvent;
+            let mut out = Vec::new();
+            loop {
+                match rx.recv().expect("stream open") {
+                    StreamEvent::Token { token, .. } => out.push(token),
+                    StreamEvent::Done { .. } => return out,
+                    StreamEvent::Failed { reason, .. } => panic!("stream failed: {reason}"),
+                }
+            }
+        })
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    ((conc * max_new) as f64 / wall, tails)
+}
+
+fn main() {
+    let full = std::env::var("INTFA_BENCH_FULL").is_ok();
+    let max_new: usize = if full { 128 } else { 32 };
+    let reps: usize = if full { 5 } else { 3 };
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+
+    println!("# sched/ — continuous-batched decode vs per-call baseline\n");
+    println!(
+        "geometry: heads={HEADS} d={HEAD_DIM} block_tokens=16, {STRIPES} stripes; \
+         prompt={PROMPT_LEN} max_new={max_new}, best of {reps}\n"
+    );
+
+    let mut table = Table::new(&[
+        "concurrency",
+        "per-call tok/s",
+        "batched tok/s",
+        "batched speedup",
+    ]);
+    let mut levels_json = Vec::new();
+    for &conc in &[1usize, 8, 32] {
+        let mut best_percall = 0.0f64;
+        let mut best_batched = 0.0f64;
+        let mut percall_tails = Vec::new();
+        let mut batched_tails = Vec::new();
+        for _ in 0..reps {
+            let (tps, tails) = run_percall(conc, max_new, &model);
+            best_percall = best_percall.max(tps);
+            percall_tails = tails;
+            let (tps, tails) = run_batched(conc, max_new, &model);
+            best_batched = best_batched.max(tps);
+            batched_tails = tails;
+        }
+        assert_eq!(
+            percall_tails, batched_tails,
+            "continuous batching must be bit-identical to per-call decode"
+        );
+        let speedup = best_batched / best_percall;
+        table.row(&[
+            conc.to_string(),
+            format!("{best_percall:.0}"),
+            format!("{best_batched:.0}"),
+            format!("{speedup:.2}×"),
+        ]);
+        levels_json.push(Json::obj(vec![
+            ("concurrency", Json::num(conc as f64)),
+            ("percall_tok_per_s", Json::num(best_percall)),
+            ("batched_tok_per_s", Json::num(best_batched)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    print!("{}", table.render());
+
+    let report = Json::obj(vec![
+        (
+            "geometry",
+            Json::obj(vec![
+                ("heads", Json::num(HEADS as f64)),
+                ("head_dim", Json::num(HEAD_DIM as f64)),
+                ("block_tokens", Json::num(16.0)),
+                ("stripes", Json::num(STRIPES as f64)),
+                ("prompt_len", Json::num(PROMPT_LEN as f64)),
+                ("max_new", Json::num(max_new as f64)),
+            ]),
+        ),
+        ("levels", Json::Arr(levels_json)),
+    ]);
+    let out = std::env::var("INTFA_BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".into());
+    std::fs::write(&out, report.to_pretty()).expect("write bench report");
+    println!("\nwrote {out}");
+}

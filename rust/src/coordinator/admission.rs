@@ -3,6 +3,20 @@
 //! Two budgets, both must pass: request count (queue slots) and total
 //! payload tokens (memory proxy). Rejections are immediate — the client
 //! gets a `Rejected` error rather than unbounded queueing (backpressure).
+//!
+//! The [`Gate`] governs the *batched attention* path, where payload
+//! tokens proxy memory well. The continuous-batching generate path has
+//! a different binding resource — KV pool **blocks** — and delegates to
+//! the trie-aware policy in [`crate::sched::queue`] instead: prompts
+//! are priced per stripe against resident prefix blocks (read-only
+//! radix peek), free blocks and full-eviction headroom, then admitted,
+//! deferred (FIFO, re-priced each tick) or rejected outright when the
+//! cold prefill can never fit. The types are re-exported here so this
+//! module stays the single index of every admission policy; a request
+//! the scheduler queues is *not* double-charged against the `Gate` —
+//! its backpressure is `sched.queue.depth` plus the block pricing.
+
+pub use crate::sched::queue::{price_admission as kv_price_admission, AdmissionPrice, AdmissionVerdict};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -139,6 +153,25 @@ mod tests {
         .join();
         assert_eq!(g.depth(), 0, "RAII release survived the panic");
         assert_eq!(g.tokens_in_flight(), 0);
+    }
+
+    #[test]
+    fn kv_admission_delegates_to_trie_aware_policy() {
+        // the generate path's admission is the sched::queue pricing,
+        // reachable through this module's re-export
+        use crate::kv::{CacheConfig, RadixKvCache};
+        let c = RadixKvCache::new(CacheConfig {
+            block_tokens: 4,
+            max_blocks: 2,
+            ..CacheConfig::new(1, 8)
+        });
+        let p = kv_price_admission(&c, &[1, 2, 3, 4, 5], 0, 0);
+        assert_eq!(p.cold_prefill, 2);
+        assert_eq!(p.verdict(), AdmissionVerdict::Admit);
+        assert_eq!(
+            kv_price_admission(&c, &(0..100).collect::<Vec<u32>>(), 0, 0).verdict(),
+            AdmissionVerdict::Reject
+        );
     }
 
     #[test]

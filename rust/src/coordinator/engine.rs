@@ -11,10 +11,11 @@ use super::request::{AccuracyClass, Request, RequestPayload, Response};
 use super::router::{Bucket, BucketRouter};
 use crate::attention::{multihead, AttnConfig, Variant};
 use crate::calib::{CalibrationArtifact, CalibrationPlan};
-use crate::kv::RadixKvCache;
+use crate::kv::{CacheConfig, RadixKvCache};
 use crate::quant::{INT4_R, INT8_R};
+use crate::sched::{SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batch execution backend.
@@ -250,9 +251,11 @@ struct WorkItem {
     permits: Vec<Permit>,
 }
 
-/// The engine's shared-prefix KV cache runtime (see [`crate::kv`]).
+/// The engine's shared-prefix KV cache runtime (see [`crate::kv`]):
+/// a striped pool — each stripe independently locked — shared with the
+/// continuous-batching scheduler when one is attached.
 struct KvRuntime {
-    cache: Mutex<RadixKvCache>,
+    cache: Arc<StripedKvCache>,
     /// split-K workers per decode call
     splitk: usize,
 }
@@ -280,6 +283,7 @@ pub struct Engine {
     router: Arc<BucketRouter>,
     calibration: Option<CalibrationArtifact>,
     kv: Option<KvRuntime>,
+    sched: Option<Scheduler>,
     pub metrics: Arc<Registry>,
     next_id: std::sync::atomic::AtomicU64,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -360,6 +364,7 @@ impl Engine {
             router,
             calibration,
             kv: None,
+            sched: None,
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
             threads,
@@ -368,18 +373,64 @@ impl Engine {
 
     /// Attach a shared-prefix KV cache: enables the `prefill` / `extend`
     /// / `decode` / `kv_release` serving surface, with `splitk` worker
-    /// threads per decode call.
-    pub fn with_kv(mut self, cache: RadixKvCache, splitk: usize) -> Engine {
+    /// threads per decode call. Single-striped — the legacy single-mutex
+    /// pool; use [`Engine::with_kv_striped`] for concurrent sequences.
+    pub fn with_kv(self, cache: RadixKvCache, splitk: usize) -> Engine {
+        self.install_kv(StripedKvCache::from_cache(cache), splitk)
+    }
+
+    /// Attach a KV pool sharded into `stripes` independently-locked
+    /// stripes (`cfg.max_blocks` is the *total* budget; see
+    /// [`StripedKvCache`]). Concurrent sequences on different stripes
+    /// no longer contend on one cache mutex.
+    pub fn with_kv_striped(self, cfg: CacheConfig, stripes: usize, splitk: usize) -> Engine {
+        self.install_kv(StripedKvCache::new(cfg, stripes), splitk)
+    }
+
+    fn install_kv(mut self, cache: StripedKvCache, splitk: usize) -> Engine {
         self.metrics.gauge("kv.enabled").set(1);
         self.metrics
             .gauge("kv.blocks.free")
             .set(cache.blocks_free() as i64);
-        self.kv = Some(KvRuntime { cache: Mutex::new(cache), splitk: splitk.max(1) });
+        self.metrics.gauge("kv.stripes").set(cache.stripes() as i64);
+        self.kv = Some(KvRuntime { cache: Arc::new(cache), splitk: splitk.max(1) });
         self
+    }
+
+    /// Attach the continuous-batching decode scheduler (requires a KV
+    /// cache): enables the streaming [`Engine::generate`] surface. Each
+    /// tick batches every in-flight decode step into one attention call
+    /// over the shared striped pool (see [`crate::sched`]).
+    pub fn with_sched(
+        mut self,
+        model: Arc<dyn TokenModel>,
+        cfg: SchedConfig,
+    ) -> Result<Engine, String> {
+        let kv = self.kv.as_ref().ok_or("scheduler requires a kv cache")?;
+        let (h, d) = model.geometry();
+        let kcfg = kv.cache.config();
+        if (h, d) != (kcfg.heads, kcfg.head_dim) {
+            return Err(format!(
+                "model geometry {h}×{d} does not match kv cache {}×{}",
+                kcfg.heads, kcfg.head_dim
+            ));
+        }
+        self.metrics.gauge("sched.enabled").set(1);
+        self.sched = Some(Scheduler::start(
+            kv.cache.clone(),
+            model,
+            cfg,
+            self.metrics.clone(),
+        ));
+        Ok(self)
     }
 
     pub fn has_kv(&self) -> bool {
         self.kv.is_some()
+    }
+
+    pub fn has_sched(&self) -> bool {
+        self.sched.is_some()
     }
 
     pub fn router(&self) -> &BucketRouter {
@@ -494,7 +545,7 @@ impl Engine {
             row
         };
 
-        let mut cache = kv.cache.lock().unwrap();
+        let cache = &kv.cache;
         let cfg = cache.config();
         if cfg.heads != h || cfg.head_dim != d {
             return Err(format!(
@@ -506,7 +557,7 @@ impl Engine {
         let (seq_id, cached) = cache.start_sequence(tokens);
         let new_tokens = n - cached;
 
-        let abort = |cache: &mut RadixKvCache, e: String| -> String {
+        let abort = |e: String| -> String {
             let _ = cache.free_sequence(seq_id);
             e
         };
@@ -515,12 +566,13 @@ impl Engine {
             // fully cached: no new rows for any accuracy class
             self.metrics.counter("kv.prefill.batches_skipped").inc();
             self.metrics.counter("kv.prefill.fully_cached").inc();
-            self.sync_kv_metrics(&cache);
+            self.sync_kv_metrics(cache);
             (None, None)
         } else if cached > 0 && accuracy == AccuracyClass::Fast {
             // warm + Fast: the batched prefill is skipped — only suffix
             // rows run, via single-query INT8 attention over the cached
-            // codes (append/decode interleave keeps causality exact)
+            // codes (append/decode interleave keeps causality exact;
+            // every cache call locks its stripe only briefly)
             self.metrics.counter("kv.prefill.batches_skipped").inc();
             let mut o = vec![0.0f32; h * new_tokens * d];
             for t in cached..n {
@@ -531,17 +583,19 @@ impl Engine {
                         &gather(&payload.k, t),
                         &gather(&payload.v, t),
                     )
-                    .map_err(|e| abort(&mut cache, format!("kv append: {e}")))?;
-                let workers = cache.suggested_splitk(seq_id, kv.splitk);
-                let row = cache
-                    .decode_attention_splitk(seq_id, &gather(&payload.q, t), None, workers)
-                    .map_err(|e| abort(&mut cache, format!("kv decode: {e}")))?;
+                    .map_err(|e| abort(format!("kv append: {e}")))?;
+                let view = cache
+                    .decode_view(seq_id)
+                    .map_err(|e| abort(format!("kv decode: {e}")))?;
+                let row = view
+                    .decode_splitk(&gather(&payload.q, t), None, view.suggested_splitk(kv.splitk))
+                    .map_err(|e| abort(format!("kv decode: {e}")))?;
                 for head in 0..h {
                     let dst = head * new_tokens * d + (t - cached) * d;
                     o[dst..dst + d].copy_from_slice(&row[head * d..(head + 1) * d]);
                 }
             }
-            self.sync_kv_metrics(&cache);
+            self.sync_kv_metrics(cache);
             (Some(o), Some(int_variant))
         } else {
             // cold prompt, or a warm Balanced/Exact request whose
@@ -556,10 +610,9 @@ impl Engine {
                         &gather(&payload.k, t),
                         &gather(&payload.v, t),
                     )
-                    .map_err(|e| abort(&mut cache, format!("kv append: {e}")))?;
+                    .map_err(|e| abort(format!("kv append: {e}")))?;
             }
-            self.sync_kv_metrics(&cache);
-            drop(cache); // batched execution must not hold the cache lock
+            self.sync_kv_metrics(cache);
             let resp = self.submit_blocking(accuracy, payload);
             match resp.result {
                 Ok(full) => {
@@ -577,38 +630,51 @@ impl Engine {
                     };
                     (Some(o), resp.variant)
                 }
-                Err(e) => {
-                    let mut cache = kv.cache.lock().unwrap();
-                    return Err(abort(&mut cache, e));
-                }
+                Err(e) => return Err(abort(e)),
             }
         };
         self.metrics.counter("kv.prefill").inc();
         Ok(PrefillResponse { seq_id, cached_tokens: cached, new_tokens, output, variant })
     }
 
+    /// Start a cached sequence from its token ids *without* running any
+    /// attention — the entry point for caller-managed decode loops
+    /// (benches, tests, replay tooling). Returns `(seq_id, cached)`;
+    /// the caller appends K/V for `tokens[cached..]` via
+    /// [`Engine::extend`].
+    pub fn kv_start(&self, tokens: &[u32]) -> Result<(u64, usize), String> {
+        let kv = self.kv.as_ref().ok_or("kv cache not enabled")?;
+        let (seq_id, cached) = kv.cache.start_sequence(tokens);
+        self.sync_kv_metrics(&kv.cache);
+        Ok((seq_id, cached))
+    }
+
     /// Append one generated token's K/V to a cached sequence (the
-    /// autoregressive step between decodes).
+    /// autoregressive step between decodes). This is a per-token hot
+    /// path, so it deliberately does **not** sweep the stripes to sync
+    /// gauges — `kv.*` gauges refresh on prefill / release / scheduler
+    /// ticks, which bound the staleness to one sequence lifetime.
     pub fn extend(&self, seq_id: u64, token: u32, k: &[f32], v: &[f32]) -> Result<(), String> {
         let kv = self.kv.as_ref().ok_or("kv cache not enabled")?;
-        let mut cache = kv.cache.lock().unwrap();
-        cache
+        kv.cache
             .append_token(seq_id, token, k, v)
-            .map_err(|e| e.to_string())?;
-        self.sync_kv_metrics(&cache);
-        Ok(())
+            .map_err(|e| e.to_string())
     }
 
     /// Split-K decode: one query token (flat (heads, d)) attends to the
     /// sequence's entire cached K/V. The worker count adapts to the
-    /// sequence length (short sequences don't pay thread spawns).
+    /// sequence length (short sequences don't pay thread spawns). The
+    /// stripe lock covers only block hand-out (the pinned
+    /// [`crate::kv::DecodeView`]); compute runs lock-free, so
+    /// concurrent appends/decodes on other sequences never wait on it.
     pub fn decode(&self, seq_id: u64, q: &[f32]) -> Result<Vec<f32>, String> {
         let kv = self.kv.as_ref().ok_or("kv cache not enabled")?;
         let t0 = Instant::now();
-        let cache = kv.cache.lock().unwrap();
-        let workers = cache.suggested_splitk(seq_id, kv.splitk);
-        let out = cache
-            .decode_attention_splitk(seq_id, q, None, workers)
+        // one lock acquisition: the pinned view serves both the worker
+        // count and the decode itself
+        let view = kv.cache.decode_view(seq_id).map_err(|e| e.to_string())?;
+        let out = view
+            .decode_splitk(q, None, view.suggested_splitk(kv.splitk))
             .map_err(|e| e.to_string())?;
         self.metrics
             .histogram("kv.decode_us")
@@ -621,20 +687,60 @@ impl Engine {
     /// stay resident for future prefix hits).
     pub fn kv_release(&self, seq_id: u64) -> Result<(), String> {
         let kv = self.kv.as_ref().ok_or("kv cache not enabled")?;
-        let mut cache = kv.cache.lock().unwrap();
-        cache.free_sequence(seq_id).map_err(|e| e.to_string())?;
-        self.sync_kv_metrics(&cache);
+        kv.cache.free_sequence(seq_id).map_err(|e| e.to_string())?;
+        self.sync_kv_metrics(&kv.cache);
         Ok(())
     }
 
+    /// Submit a prompt for continuous-batched generation (requires
+    /// [`Engine::with_sched`]). Returns the request id and the event
+    /// stream: tokens arrive as scheduler ticks complete, terminated by
+    /// [`StreamEvent::Done`] or [`StreamEvent::Failed`].
+    pub fn generate(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+    ) -> Result<(u64, Receiver<StreamEvent>), String> {
+        let sched = self.sched.as_ref().ok_or("scheduler not enabled")?;
+        if tokens.is_empty() {
+            return Err("empty prompt".into());
+        }
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.counter("sched.submitted").inc();
+        Ok((id, sched.submit(id, tokens, max_new)))
+    }
+
+    /// Convenience: generate and block until the stream terminates,
+    /// returning the full generated tail.
+    pub fn generate_blocking(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+    ) -> Result<Vec<u32>, String> {
+        let (_, rx) = self.generate(tokens, max_new)?;
+        let mut out = Vec::new();
+        loop {
+            match rx.recv() {
+                Ok(StreamEvent::Token { token, .. }) => out.push(token),
+                Ok(StreamEvent::Done { .. }) => return Ok(out),
+                Ok(StreamEvent::Failed { reason, .. }) => return Err(reason),
+                Err(_) => return Err("stream dropped".into()),
+            }
+        }
+    }
+
     /// Mirror the cache's sharing/reuse counters into the registry
-    /// (exported through the server's `metrics` verb).
-    fn sync_kv_metrics(&self, cache: &RadixKvCache) {
-        let s = cache.stats();
-        self.metrics.gauge("kv.blocks.free").set(cache.blocks_free() as i64);
+    /// (exported through the server's `metrics` verb). One snapshot
+    /// pass — each stripe locked once, not once per gauge.
+    fn sync_kv_metrics(&self, cache: &StripedKvCache) {
+        let snap = cache.snapshot();
+        let s = snap.stats;
+        self.metrics.gauge("kv.blocks.free").set(snap.blocks_free as i64);
         self.metrics
             .gauge("kv.blocks.shared")
-            .set(cache.blocks_shared() as i64);
+            .set(snap.blocks_shared as i64);
         self.metrics.gauge("kv.prefix.hits").set(s.prefix_hits as i64);
         self.metrics
             .gauge("kv.prefix.misses")
@@ -649,6 +755,9 @@ impl Engine {
 
 impl Drop for Engine {
     fn drop(&mut self) {
+        // the tick loop first: it submits no batched work, but its
+        // streams must terminate before the worker pool drains
+        drop(self.sched.take());
         let _ = self.tx.send(SchedMsg::Shutdown);
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -1140,6 +1249,41 @@ mod tests {
         let bare = engine(EngineConfig::default());
         assert!(bare.prefill(AccuracyClass::Fast, &tokens, p).is_err());
         assert!(bare.decode(1, &q).is_err());
+    }
+
+    #[test]
+    fn sched_generate_streams_deterministically() {
+        use crate::kv::CacheConfig;
+        use crate::sched::HashModel;
+        let e = engine(EngineConfig { policy: BatchPolicy::Eager, ..EngineConfig::default() })
+            .with_kv_striped(
+                CacheConfig { block_tokens: 8, max_blocks: 64, ..CacheConfig::new(2, 16) },
+                2,
+                2,
+            )
+            .with_sched(Arc::new(HashModel::new(2, 16)), SchedConfig::default())
+            .expect("kv present");
+        assert!(e.has_sched());
+        let prompt: Vec<u32> = (0..12).collect();
+        let out = e.generate_blocking(prompt.clone(), 5).expect("stream completes");
+        assert_eq!(out.len(), 5);
+        // same prompt again: prefix blocks resolve from the trie and the
+        // tail is identical (generation is deterministic end to end)
+        let again = e.generate_blocking(prompt, 5).expect("stream completes");
+        assert_eq!(out, again);
+        assert!(e.metrics.counter("sched.tokens").get() >= 10);
+        assert!(e.metrics.counter("sched.admitted").get() >= 2);
+        assert_eq!(e.metrics.gauge("sched.enabled").get(), 1);
+        assert!(e.metrics.gauge("kv.prefix.hits").get() >= 1);
+        // empty prompts and sched-less engines are rejected
+        assert!(e.generate(Vec::new(), 1).is_err());
+        let bare = engine(EngineConfig::default());
+        assert!(bare.generate(vec![1], 1).is_err());
+        // a model whose geometry disagrees with the cache is refused
+        let mismatch = engine(EngineConfig::default())
+            .with_kv_striped(CacheConfig::new(2, 16), 1, 1)
+            .with_sched(Arc::new(HashModel::new(4, 8)), SchedConfig::default());
+        assert!(mismatch.is_err());
     }
 
     #[test]

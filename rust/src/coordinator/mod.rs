@@ -11,6 +11,12 @@
 //!     → Response via the request's reply channel
 //! ```
 //!
+//! The continuous-batching generate path bypasses the batcher: prompts
+//! go through the trie-aware block admission re-exported in
+//! [`admission`] into the [`crate::sched`] tick loop, which folds every
+//! in-flight decode step into one batched attention call per tick over
+//! the engine's striped KV pool and streams tokens back per sequence.
+//!
 //! All components are synchronous-core + thread-pool-driven (std::thread +
 //! mpsc; no async runtime in this offline environment) and individually
 //! unit/property-tested.

@@ -8,11 +8,24 @@
 //! [`BlockPool::cow`], which hands back the same block when the caller
 //! holds the only reference and a private copy otherwise — the
 //! copy-on-write half of prefix sharing and sequence forking.
+//!
+//! Block storage sits behind an `Arc` so decode can *pin* a block's
+//! contents ([`BlockPool::block_arc`]) and read them after the cache
+//! lock is released (see [`crate::kv::decode::DecodeView`]). The logical
+//! refcount in `refs` is unrelated to the `Arc` strong count: `refs`
+//! tracks who points at the *slot* (sequences + trie), the `Arc` tracks
+//! who can still read the *bytes*. A writer reaching a slot whose bytes
+//! are still pinned by an in-flight reader clones them first
+//! (`Arc::make_mut`), so the reader finishes over a coherent snapshot —
+//! this is what makes eviction + slot reuse safe under lock-free decode.
+
+use std::sync::Arc;
 
 /// One pool block: INT8 K/V codes + per-token K scales for every head.
 /// K codes layout: (heads, block_tokens, d); scales (heads, block_tokens)
 /// in token-level K mode (unused in per-channel mode, where the scales
 /// live in the cache config).
+#[derive(Clone)]
 pub struct Block {
     pub k_codes: Vec<i8>,
     pub v_codes: Vec<i8>,
@@ -21,7 +34,7 @@ pub struct Block {
 
 /// Fixed-capacity refcounted block pool.
 pub struct BlockPool {
-    blocks: Vec<Block>,
+    blocks: Vec<Arc<Block>>,
     refs: Vec<u32>,
     free: Vec<usize>,
 }
@@ -31,10 +44,12 @@ impl BlockPool {
     /// `scale_elems` K scales each.
     pub fn new(max_blocks: usize, kv_elems: usize, scale_elems: usize) -> BlockPool {
         let blocks = (0..max_blocks)
-            .map(|_| Block {
-                k_codes: vec![0; kv_elems],
-                v_codes: vec![0; kv_elems],
-                k_scales: vec![0.0; scale_elems],
+            .map(|_| {
+                Arc::new(Block {
+                    k_codes: vec![0; kv_elems],
+                    v_codes: vec![0; kv_elems],
+                    k_scales: vec![0.0; scale_elems],
+                })
             })
             .collect();
         BlockPool {
@@ -102,13 +117,9 @@ impl BlockPool {
         debug_assert_ne!(i, ni, "a shared block cannot be on the free list");
         // copy into the destination's pre-allocated buffers (all blocks
         // share one geometry) — no heap traffic on the serving path
-        let (src, dst) = if i < ni {
-            let (lo, hi) = self.blocks.split_at_mut(ni);
-            (&lo[i], &mut hi[0])
-        } else {
-            let (lo, hi) = self.blocks.split_at_mut(i);
-            (&hi[0], &mut lo[ni])
-        };
+        // unless a lock-free reader still pins the destination's bytes
+        let src = self.blocks[i].clone();
+        let dst = Arc::make_mut(&mut self.blocks[ni]);
         dst.k_codes.copy_from_slice(&src.k_codes);
         dst.v_codes.copy_from_slice(&src.v_codes);
         dst.k_scales.copy_from_slice(&src.k_scales);
@@ -120,12 +131,22 @@ impl BlockPool {
         &self.blocks[i]
     }
 
-    /// Mutable access for writers. Callers must hold the only reference
-    /// (go through [`BlockPool::cow`] first) — shared blocks are
-    /// immutable.
+    /// Pin a block's contents for reading outside the cache lock: the
+    /// returned `Arc` keeps these bytes alive (and immutable from the
+    /// reader's perspective) even if the slot is evicted, reallocated
+    /// and rewritten while the reader computes — the writer clones first
+    /// (see [`BlockPool::block_mut`]).
+    pub fn block_arc(&self, i: usize) -> Arc<Block> {
+        self.blocks[i].clone()
+    }
+
+    /// Mutable access for writers. Callers must hold the only logical
+    /// reference (go through [`BlockPool::cow`] first) — shared blocks
+    /// are immutable. If an in-flight decode still pins this slot's
+    /// bytes, the storage is cloned so the reader keeps its snapshot.
     pub fn block_mut(&mut self, i: usize) -> &mut Block {
         debug_assert_eq!(self.refs[i], 1, "write to a shared block");
-        &mut self.blocks[i]
+        Arc::make_mut(&mut self.blocks[i])
     }
 }
 
@@ -191,6 +212,22 @@ mod tests {
         // writes to the copy leave the original alone
         pool.block_mut(b).k_codes[0] = 1;
         assert_eq!(pool.block(a).k_codes[0], 7);
+    }
+
+    #[test]
+    fn pinned_reader_keeps_snapshot_across_slot_reuse() {
+        // a decode that pinned a block's bytes must not observe a write
+        // that lands after the slot was freed and reallocated
+        let mut pool = BlockPool::new(1, 4, 1);
+        let a = pool.alloc().unwrap();
+        pool.block_mut(a).k_codes[0] = 42;
+        let pinned = pool.block_arc(a);
+        pool.release(a);
+        let b = pool.alloc().unwrap();
+        assert_eq!(b, a, "slot reused");
+        pool.block_mut(b).k_codes[0] = -7; // forces the clone-for-writer path
+        assert_eq!(pinned.k_codes[0], 42, "reader snapshot intact");
+        assert_eq!(pool.block(b).k_codes[0], -7);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use super::radix::RadixIndex;
 use crate::calib::plan::CalibrationPlan;
 use crate::quant::{self, SCALE_EPS};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Cache geometry + quantization scales.
 ///
@@ -155,7 +156,9 @@ pub(crate) struct Sequence {
 
 /// Shared-prefix radix KV cache for one attention layer.
 pub struct RadixKvCache {
-    pub(crate) cfg: CacheConfig,
+    /// Shared with every [`crate::kv::decode::DecodeView`] this cache
+    /// hands out (views outlive the cache lock).
+    pub(crate) cfg: Arc<CacheConfig>,
     pub(crate) pool: BlockPool,
     trie: RadixIndex,
     pub(crate) seqs: HashMap<u64, Sequence>,
@@ -172,7 +175,7 @@ impl RadixKvCache {
         let scale_elems = cfg.heads * cfg.block_tokens;
         let pool = BlockPool::new(cfg.max_blocks, kv_elems, scale_elems);
         RadixKvCache {
-            cfg,
+            cfg: Arc::new(cfg),
             pool,
             trie: RadixIndex::new(),
             seqs: HashMap::new(),
@@ -268,6 +271,30 @@ impl RadixKvCache {
 
     pub fn blocks_free(&self) -> usize {
         self.pool.free_len()
+    }
+
+    /// Pool capacity in blocks.
+    pub fn capacity_blocks(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    /// Blocks required to hold `tokens` tokens (partial tail included).
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.block_tokens)
+    }
+
+    /// Full blocks of `tokens` already resident in the trie, *without*
+    /// promoting their recency — the read-only estimate admission
+    /// pricing uses (a priced-but-unadmitted prompt must not reorder
+    /// eviction).
+    pub fn peek_cached_blocks(&self, tokens: &[u32]) -> usize {
+        self.trie.peek(tokens, self.cfg.block_tokens).len()
+    }
+
+    /// Blocks recoverable under *full* trie eviction (beyond the free
+    /// list): indexed blocks no live sequence references.
+    pub fn evictable_blocks(&self) -> usize {
+        self.trie.evictable_blocks(&self.pool)
     }
 
     /// Cache bytes used by one token across all heads (codes + scales).

@@ -1,5 +1,6 @@
 //! Single-query INT8 decode attention over cached codes — sequential or
-//! split-K parallel, with an exact partial-state merge.
+//! split-K parallel, with an exact partial-state merge, computed over a
+//! pinned [`DecodeView`] so the cache lock never covers compute.
 //!
 //! A CPU Flash-Decoding specialization of the paper's Algorithm 1: the
 //! sequence's blocks are partitioned across worker threads, each runs
@@ -12,10 +13,22 @@
 //! exact). [`RadixKvCache::decode_attention`] is the one-worker case of
 //! the same code path, so split-K output is bit-identical to sequential
 //! output for any worker count.
+//!
+//! # Lock scope
+//!
+//! [`RadixKvCache::decode_view`] is the only part of decode that needs
+//! the cache: it resolves the sequence, `Arc`-pins its blocks and
+//! returns a self-contained [`DecodeView`]. Everything numeric runs on
+//! the view — callers (the engine's `decode` verb, the scheduler's
+//! batched tick) hold the cache mutex only for the pin, then compute
+//! lock-free while appends, evictions and admissions proceed on other
+//! sequences. Pinned bytes stay coherent even across eviction + slot
+//! reuse (see [`crate::kv::block`]).
 
 use super::block::Block;
-use super::cache::{CacheError, RadixKvCache, Sequence};
+use super::cache::{CacheError, RadixKvCache};
 use crate::quant::SCALE_EPS;
+use std::sync::Arc;
 
 /// Token-level-quantized query: (heads, d) codes + one scale per head.
 /// In per-channel K mode the calibrated channel scales are folded into
@@ -47,27 +60,37 @@ fn partition(n_blocks: usize, workers: usize) -> Vec<(usize, usize)> {
     parts
 }
 
-impl RadixKvCache {
-    /// Decode attention: one query token (flat (heads, d) f32) attends to
-    /// the sequence's entire cached K/V. Returns flat (heads, d) f32.
-    /// Sequential schedule — exactly `decode_attention_splitk` with one
-    /// worker.
-    pub fn decode_attention(
-        &self,
-        id: u64,
-        q: &[f32],
-        sm_scale: Option<f32>,
-    ) -> Result<Vec<f32>, CacheError> {
-        self.decode_attention_splitk(id, q, sm_scale, 1)
+/// A pinned, self-contained snapshot of one sequence's cached K/V: the
+/// quantization config plus `Arc` handles on every block. Owns no lock —
+/// build it under the cache mutex ([`RadixKvCache::decode_view`]), drop
+/// the guard, then decode. `Send`, so a batched tick can fan a set of
+/// views across worker threads.
+pub struct DecodeView {
+    cfg: Arc<super::cache::CacheConfig>,
+    blocks: Vec<Arc<Block>>,
+    len_tokens: usize,
+}
+
+impl DecodeView {
+    /// Cached tokens visible to this view.
+    pub fn len_tokens(&self) -> usize {
+        self.len_tokens
     }
 
-    /// Split-K decode: partition the sequence's blocks across `workers`
+    /// Worker count worth spawning for this view's length: at least
+    /// [`MIN_BLOCKS_PER_WORKER`] blocks of work per thread, capped at
+    /// `max_workers`. Output is bit-identical for every worker count,
+    /// so callers may apply this freely.
+    pub fn suggested_splitk(&self, max_workers: usize) -> usize {
+        (self.blocks.len() / MIN_BLOCKS_PER_WORKER).clamp(1, max_workers.max(1))
+    }
+
+    /// Split-K decode over the pinned blocks: partition across `workers`
     /// threads, run the INT8 online-softmax per partition, merge the
     /// partial states exactly. Output is bit-identical for any worker
     /// count.
-    pub fn decode_attention_splitk(
+    pub fn decode_splitk(
         &self,
-        id: u64,
         q: &[f32],
         sm_scale: Option<f32>,
         workers: usize,
@@ -76,16 +99,15 @@ impl RadixKvCache {
         if q.len() != h * d {
             return Err(CacheError::BadShape { expected: h * d, got: q.len() });
         }
-        let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSequence(id))?;
-        if seq.len_tokens == 0 {
+        if self.len_tokens == 0 {
             return Ok(vec![0.0; h * d]);
         }
         let tau = sm_scale.unwrap_or(1.0 / (d as f32).sqrt());
         let qq = self.quantize_query(q);
-        let parts = partition(seq.blocks.len(), workers);
+        let parts = partition(self.blocks.len(), workers);
 
         // pass 1: partial score maxima per head; merge = max (exact)
-        let maxes = self.map_parts(&parts, |b0, b1| self.partial_max(seq, b0, b1, &qq, tau));
+        let maxes = self.map_parts(&parts, |b0, b1| self.partial_max(b0, b1, &qq, tau));
         let mut m = vec![f32::NEG_INFINITY; h];
         for pm in &maxes {
             for (a, &b) in m.iter_mut().zip(pm) {
@@ -96,7 +118,7 @@ impl RadixKvCache {
         // pass 2: integer (l, acc) partials under the shared max;
         // merge = integer sum (exact)
         let partials =
-            self.map_parts(&parts, |b0, b1| self.partial_sums(seq, b0, b1, &qq, tau, &m));
+            self.map_parts(&parts, |b0, b1| self.partial_sums(b0, b1, &qq, tau, &m));
         let mut l = vec![0i64; h];
         let mut acc = vec![0i64; h * d];
         for (pl, pa) in &partials {
@@ -119,18 +141,9 @@ impl RadixKvCache {
         Ok(out)
     }
 
-    /// Worker count worth spawning for this sequence's length: at least
-    /// [`MIN_BLOCKS_PER_WORKER`] blocks of work per thread, capped at
-    /// `max_workers`. Output is bit-identical for every worker count, so
-    /// callers may apply this freely (the engine's decode surface does).
-    pub fn suggested_splitk(&self, id: u64, max_workers: usize) -> usize {
-        let blocks = self.seqs.get(&id).map(|s| s.blocks.len()).unwrap_or(0);
-        (blocks / MIN_BLOCKS_PER_WORKER).clamp(1, max_workers.max(1))
-    }
-
     /// Run `f` over every partition — inline for one, scoped threads
     /// otherwise. Results come back in partition order.
-    fn map_parts<T: Send + 'static>(
+    fn map_parts<T: Send>(
         &self,
         parts: &[(usize, usize)],
         f: impl Fn(usize, usize) -> T + Sync,
@@ -152,10 +165,10 @@ impl RadixKvCache {
         })
     }
 
-    /// Tokens resident in the sequence's `bi`-th block.
-    fn block_fill(&self, seq: &Sequence, bi: usize) -> usize {
+    /// Tokens resident in the `bi`-th pinned block.
+    fn block_fill(&self, bi: usize) -> usize {
         let bt = self.cfg.block_tokens;
-        (seq.len_tokens - bi * bt).min(bt)
+        (self.len_tokens - bi * bt).min(bt)
     }
 
     /// s_t = (q₈·k₈)·S_q·S_k·τ for one cached token. Shared by both
@@ -179,19 +192,12 @@ impl RadixKvCache {
         dot as f32 * qq.scales[head] * k_scale * tau
     }
 
-    fn partial_max(
-        &self,
-        seq: &Sequence,
-        b0: usize,
-        b1: usize,
-        qq: &QuantQuery,
-        tau: f32,
-    ) -> Vec<f32> {
+    fn partial_max(&self, b0: usize, b1: usize, qq: &QuantQuery, tau: f32) -> Vec<f32> {
         let h = self.cfg.heads;
         let mut m = vec![f32::NEG_INFINITY; h];
         for bi in b0..b1 {
-            let block = self.pool.block(seq.blocks[bi]);
-            let tokens = self.block_fill(seq, bi);
+            let block = &self.blocks[bi];
+            let tokens = self.block_fill(bi);
             for (head, mh) in m.iter_mut().enumerate() {
                 for t in 0..tokens {
                     let s = self.score(block, head, t, qq, tau);
@@ -206,7 +212,6 @@ impl RadixKvCache {
 
     fn partial_sums(
         &self,
-        seq: &Sequence,
         b0: usize,
         b1: usize,
         qq: &QuantQuery,
@@ -218,8 +223,8 @@ impl RadixKvCache {
         let mut l = vec![0i64; h];
         let mut acc = vec![0i64; h * d];
         for bi in b0..b1 {
-            let block = self.pool.block(seq.blocks[bi]);
-            let tokens = self.block_fill(seq, bi);
+            let block = &self.blocks[bi];
+            let tokens = self.block_fill(bi);
             for head in 0..h {
                 for t in 0..tokens {
                     let s = self.score(block, head, t, qq, tau);
@@ -266,6 +271,107 @@ impl RadixKvCache {
             scales[head] = scale;
         }
         QuantQuery { codes, scales }
+    }
+}
+
+/// Batched multi-sequence decode: run every `(view, query)` pair inside
+/// one thread scope, parallel *across sequences* (each sequence decodes
+/// sequentially — cross-sequence parallelism is the continuous-batching
+/// axis; split-K within a sequence is for the single-stream case).
+/// `workers` bounds the thread fan-out. Outputs come back in input
+/// order and are bit-identical to calling
+/// [`DecodeView::decode_splitk`] per view, because they *are* that call.
+/// Queries are anything slice-shaped (`Vec<f32>` or `&[f32]`), so the
+/// per-tick caller can borrow instead of copying.
+pub fn decode_views<Q: AsRef<[f32]> + Sync>(
+    items: &[(DecodeView, Q)],
+    sm_scale: Option<f32>,
+    workers: usize,
+) -> Vec<Result<Vec<f32>, CacheError>> {
+    let w = workers.clamp(1, items.len().max(1));
+    if w == 1 || items.len() <= 1 {
+        return items
+            .iter()
+            .map(|(v, q)| v.decode_splitk(q.as_ref(), sm_scale, 1))
+            .collect();
+    }
+    // strided assignment: worker j takes items j, j+w, j+2w, ...
+    let results: Vec<Vec<(usize, Result<Vec<f32>, CacheError>)>> = std::thread::scope(|s| {
+        (0..w)
+            .map(|j| {
+                let items = &items;
+                s.spawn(move || {
+                    items
+                        .iter()
+                        .enumerate()
+                        .skip(j)
+                        .step_by(w)
+                        .map(|(i, (v, q))| (i, v.decode_splitk(q.as_ref(), sm_scale, 1)))
+                        .collect()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|t| t.join().expect("batched decode worker panicked"))
+            .collect()
+    });
+    let mut out: Vec<Option<Result<Vec<f32>, CacheError>>> =
+        (0..items.len()).map(|_| None).collect();
+    for chunk in results {
+        for (i, r) in chunk {
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter().map(|r| r.expect("all items covered")).collect()
+}
+
+impl RadixKvCache {
+    /// Pin a sequence's blocks into a self-contained [`DecodeView`].
+    /// This is the only decode step that needs the cache lock; compute
+    /// on the returned view after dropping the guard.
+    pub fn decode_view(&self, id: u64) -> Result<DecodeView, CacheError> {
+        let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSequence(id))?;
+        Ok(DecodeView {
+            cfg: self.cfg.clone(),
+            blocks: seq.blocks.iter().map(|&b| self.pool.block_arc(b)).collect(),
+            len_tokens: seq.len_tokens,
+        })
+    }
+
+    /// Decode attention: one query token (flat (heads, d) f32) attends to
+    /// the sequence's entire cached K/V. Returns flat (heads, d) f32.
+    /// Sequential schedule — exactly `decode_attention_splitk` with one
+    /// worker.
+    pub fn decode_attention(
+        &self,
+        id: u64,
+        q: &[f32],
+        sm_scale: Option<f32>,
+    ) -> Result<Vec<f32>, CacheError> {
+        self.decode_attention_splitk(id, q, sm_scale, 1)
+    }
+
+    /// Split-K decode: partition the sequence's blocks across `workers`
+    /// threads, run the INT8 online-softmax per partition, merge the
+    /// partial states exactly. Output is bit-identical for any worker
+    /// count.
+    pub fn decode_attention_splitk(
+        &self,
+        id: u64,
+        q: &[f32],
+        sm_scale: Option<f32>,
+        workers: usize,
+    ) -> Result<Vec<f32>, CacheError> {
+        self.decode_view(id)?.decode_splitk(q, sm_scale, workers)
+    }
+
+    /// Worker count worth spawning for this sequence's length: at least
+    /// [`MIN_BLOCKS_PER_WORKER`] blocks of work per thread, capped at
+    /// `max_workers`. Output is bit-identical for every worker count, so
+    /// callers may apply this freely (the engine's decode surface does).
+    pub fn suggested_splitk(&self, id: u64, max_workers: usize) -> usize {
+        let blocks = self.seqs.get(&id).map(|s| s.blocks.len()).unwrap_or(0);
+        (blocks / MIN_BLOCKS_PER_WORKER).clamp(1, max_workers.max(1))
     }
 }
 
@@ -317,6 +423,46 @@ mod tests {
         let id = cache.alloc_sequence();
         let out = cache.decode_attention_splitk(id, &[1.0; 16], None, 4).unwrap();
         assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn view_survives_cache_mutation() {
+        // pin a view, then mutate the cache underneath it (appends +
+        // eviction churn): the view must keep decoding its snapshot
+        // bit-identically — the lock-scope contract of Engine::decode
+        let (mut cache, id, q) = filled_cache(9, 1, 16, 20);
+        let view = cache.decode_view(id).unwrap();
+        let gold = view.decode_splitk(&q, None, 1).unwrap();
+        let mut rng = Pcg64::seeded(99);
+        for _ in 0..30 {
+            cache.append(id, &rng.normal_vec(16), &rng.normal_vec(16)).unwrap();
+        }
+        assert_eq!(view.len_tokens(), 20, "view pinned at its snapshot");
+        assert_eq!(view.decode_splitk(&q, None, 2).unwrap(), gold);
+        // a fresh view sees the longer sequence and decodes differently
+        let now = cache.decode_attention(id, &q, None).unwrap();
+        assert_ne!(now, gold);
+    }
+
+    #[test]
+    fn decode_views_matches_per_view_calls() {
+        let mut items = Vec::new();
+        let mut gold = Vec::new();
+        let mut caches = Vec::new();
+        for seed in 0..5u64 {
+            let (cache, id, q) = filled_cache(seed, 2, 16, 9 + 7 * seed as usize);
+            gold.push(cache.decode_attention(id, &q, None).unwrap());
+            caches.push((cache, id, q));
+        }
+        for (cache, id, q) in &caches {
+            items.push((cache.decode_view(*id).unwrap(), q.clone()));
+        }
+        for workers in [1usize, 2, 3, 8] {
+            let outs = decode_views(&items, None, workers);
+            for (o, g) in outs.iter().zip(&gold) {
+                assert_eq!(o.as_ref().unwrap(), g, "workers={workers}");
+            }
+        }
     }
 
     #[test]

@@ -21,7 +21,12 @@
 //!     a block shares its quantization operating point by construction.
 //!   - [`decode`]: single-query INT8 attention over the cached codes —
 //!     sequential, or split-K across worker threads with an *exact*
-//!     partial-state merge (see below).
+//!     partial-state merge (see below). Compute runs on a pinned
+//!     [`decode::DecodeView`] (blocks `Arc`-pinned under the cache
+//!     lock, numeric work after the guard drops), and
+//!     [`decode_views`] fans a whole batch of views across one thread
+//!     scope — the multi-sequence entry point the continuous-batching
+//!     scheduler ticks through ([`crate::sched`]).
 //!
 //! # COW / refcount invariants
 //!
@@ -69,3 +74,4 @@ pub mod quantize;
 pub mod radix;
 
 pub use cache::{CacheConfig, CacheError, KvStats, RadixKvCache};
+pub use decode::{decode_views, DecodeView};

@@ -11,6 +11,15 @@
 //! (pool refcount 1): interior nodes are never removed (prefix closure)
 //! and blocks held by live sequences are never freed — evicting a leaf
 //! merely makes its parent eligible on a later pass.
+//!
+//! Recency is an intrusive doubly-linked list threaded through the node
+//! slab (LRU at the head, most-recent at the tail); lookups and inserts
+//! splice touched nodes to the tail in O(1), and [`RadixIndex::evict_lru`]
+//! walks from the head and stops at the first evictable node instead of
+//! scanning every node for the minimum timestamp. Under sustained pool
+//! pressure — the continuous-batching scheduler's steady state — the
+//! head of the list is almost always evictable, so eviction stays flat
+//! as the trie grows (the old full scan was O(nodes) *per eviction*).
 
 use super::block::BlockPool;
 use std::collections::HashMap;
@@ -22,18 +31,23 @@ struct Node {
     block: usize,
     parent: usize,
     children: HashMap<Vec<u32>, usize>,
-    /// Logical LRU clock value of the last lookup/insert touching this
-    /// node.
-    last_used: u64,
+    /// Intrusive recency list: previous (less recent) / next (more
+    /// recent) node slab index, [`NIL`] at the ends.
+    lru_prev: usize,
+    lru_next: usize,
 }
 
 const ROOT: usize = 0;
+const NIL: usize = usize::MAX;
 
 /// Prefix index: token-id chunks → pool block ids.
 pub struct RadixIndex {
     nodes: Vec<Option<Node>>,
     free: Vec<usize>,
-    clock: u64,
+    /// Least-recently-used node (eviction scan start).
+    lru_head: usize,
+    /// Most-recently-used node (touch target).
+    lru_tail: usize,
 }
 
 impl Default for RadixIndex {
@@ -50,10 +64,12 @@ impl RadixIndex {
                 block: usize::MAX,
                 parent: usize::MAX,
                 children: HashMap::new(),
-                last_used: 0,
+                lru_prev: NIL,
+                lru_next: NIL,
             })],
             free: Vec::new(),
-            clock: 0,
+            lru_head: NIL,
+            lru_tail: NIL,
         }
     }
 
@@ -74,24 +90,99 @@ impl RadixIndex {
         self.nodes[i].as_mut().expect("live node")
     }
 
+    /// Unlink `i` from the recency list (no-op bookkeeping is the
+    /// caller's job: `i` must currently be linked).
+    fn lru_unlink(&mut self, i: usize) {
+        let (prev, next) = {
+            let n = self.node(i);
+            (n.lru_prev, n.lru_next)
+        };
+        match prev {
+            NIL => self.lru_head = next,
+            p => self.node_mut(p).lru_next = next,
+        }
+        match next {
+            NIL => self.lru_tail = prev,
+            n => self.node_mut(n).lru_prev = prev,
+        }
+    }
+
+    /// Splice `i` to the most-recent end of the recency list.
+    fn lru_push_tail(&mut self, i: usize) {
+        let tail = self.lru_tail;
+        {
+            let n = self.node_mut(i);
+            n.lru_prev = tail;
+            n.lru_next = NIL;
+        }
+        match tail {
+            NIL => self.lru_head = i,
+            t => self.node_mut(t).lru_next = i,
+        }
+        self.lru_tail = i;
+    }
+
+    /// O(1) recency bump.
+    fn touch(&mut self, i: usize) {
+        if self.lru_tail == i {
+            return;
+        }
+        self.lru_unlink(i);
+        self.lru_push_tail(i);
+    }
+
     /// Longest-prefix match over full `block_tokens`-sized chunks of
     /// `tokens`; returns the indexed blocks in prefix order and bumps
     /// the matched path's recency.
     pub fn lookup(&mut self, tokens: &[u32], block_tokens: usize) -> Vec<usize> {
-        self.clock += 1;
-        let clock = self.clock;
         let mut at = ROOT;
         let mut blocks = Vec::new();
         for chunk in tokens.chunks_exact(block_tokens) {
             let Some(&child) = self.node(at).children.get(chunk) else {
                 break;
             };
-            let node = self.node_mut(child);
-            node.last_used = clock;
-            blocks.push(node.block);
+            // path order root→leaf leaves the deepest node most recent
+            self.touch(child);
+            blocks.push(self.node(child).block);
             at = child;
         }
         blocks
+    }
+
+    /// Read-only longest-prefix match: like [`RadixIndex::lookup`] but
+    /// touches nothing — recency, and therefore the eviction order, is
+    /// unchanged. Admission pricing uses this to estimate how many of a
+    /// queued prompt's blocks are already resident without promoting
+    /// them (a priced-but-rejected prompt must not pin its prefix).
+    pub fn peek(&self, tokens: &[u32], block_tokens: usize) -> Vec<usize> {
+        let mut at = ROOT;
+        let mut blocks = Vec::new();
+        for chunk in tokens.chunks_exact(block_tokens) {
+            let Some(&child) = self.node(at).children.get(chunk) else {
+                break;
+            };
+            blocks.push(self.node(child).block);
+            at = child;
+        }
+        blocks
+    }
+
+    /// Blocks the trie could hand back under *full* eviction pressure:
+    /// every indexed block whose pool refcount is exactly 1 (the trie's
+    /// own reference). Interior nodes count too — cascaded leaf eviction
+    /// reaches them once their children go. O(live nodes); used by
+    /// admission pricing (per request, not per token).
+    pub fn evictable_blocks(&self, pool: &BlockPool) -> usize {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, slot)| {
+                *i != ROOT
+                    && slot
+                        .as_ref()
+                        .is_some_and(|n| pool.ref_count(n.block) == 1)
+            })
+            .count()
     }
 
     /// Index `block` as the quantized KV of the last chunk of `tokens`
@@ -107,15 +198,13 @@ impl RadixIndex {
             block_tokens > 0 && !tokens.is_empty() && tokens.len() % block_tokens == 0,
             "insert key must be whole blocks"
         );
-        self.clock += 1;
-        let clock = self.clock;
         let chunks: Vec<&[u32]> = tokens.chunks_exact(block_tokens).collect();
         let mut at = ROOT;
         for chunk in &chunks[..chunks.len() - 1] {
             let Some(&child) = self.node(at).children.get(*chunk) else {
                 return false;
             };
-            self.node_mut(child).last_used = clock;
+            self.touch(child);
             at = child;
         }
         let last = chunks[chunks.len() - 1].to_vec();
@@ -127,7 +216,8 @@ impl RadixIndex {
             block,
             parent: at,
             children: HashMap::new(),
-            last_used: clock,
+            lru_prev: NIL,
+            lru_next: NIL,
         };
         let slot = match self.free.pop() {
             Some(s) => {
@@ -139,6 +229,7 @@ impl RadixIndex {
                 self.nodes.len() - 1
             }
         };
+        self.lru_push_tail(slot);
         self.node_mut(at).children.insert(last, slot);
         true
     }
@@ -146,22 +237,26 @@ impl RadixIndex {
     /// Evict the least-recently-used leaf whose block only the trie
     /// references, returning its block for the caller to release (which
     /// frees it). `None` when nothing is evictable — every indexed block
-    /// is also held by a live sequence, or the trie is empty.
+    /// is also held by a live sequence, or the trie is empty. Walks the
+    /// recency list from the LRU end and stops at the first evictable
+    /// node (amortized O(1) under pool pressure; never the O(nodes)
+    /// min-scan of every entry).
     pub fn evict_lru(&mut self, pool: &BlockPool) -> Option<usize> {
-        let mut victim: Option<(usize, u64)> = None;
-        for (i, slot) in self.nodes.iter().enumerate() {
-            let Some(node) = slot else { continue };
-            if i == ROOT || !node.children.is_empty() || pool.ref_count(node.block) != 1 {
-                continue;
+        let mut at = self.lru_head;
+        while at != NIL {
+            let node = self.node(at);
+            if node.children.is_empty() && pool.ref_count(node.block) == 1 {
+                break;
             }
-            if victim.map(|(_, t)| node.last_used < t).unwrap_or(true) {
-                victim = Some((i, node.last_used));
-            }
+            at = node.lru_next;
         }
-        let (i, _) = victim?;
-        let node = self.nodes[i].take().expect("victim is live");
+        if at == NIL {
+            return None;
+        }
+        self.lru_unlink(at);
+        let node = self.nodes[at].take().expect("victim is live");
         self.node_mut(node.parent).children.remove(&node.chunk);
-        self.free.push(i);
+        self.free.push(at);
         Some(node.block)
     }
 }
@@ -192,6 +287,23 @@ mod tests {
         assert_eq!(trie.lookup(&[1, 2, 3], 2), vec![b[0]]);
         // cold prefix
         assert!(trie.lookup(&[7, 7, 7, 7], 2).is_empty());
+    }
+
+    #[test]
+    fn peek_matches_lookup_without_promoting() {
+        let (pool, b) = pool_with(3);
+        let mut trie = RadixIndex::new();
+        trie.insert(&[1, 2], 2, b[0]);
+        trie.insert(&[3, 4], 2, b[1]);
+        // peek sees the same blocks a lookup would...
+        assert_eq!(trie.peek(&[1, 2, 9, 9], 2), vec![b[0]]);
+        assert!(trie.peek(&[9, 9], 2).is_empty());
+        // ...but does not bump recency: [1,2] (inserted first) is still
+        // the LRU victim even after being peeked many times
+        for _ in 0..5 {
+            trie.peek(&[1, 2], 2);
+        }
+        assert_eq!(trie.evict_lru(&pool), Some(b[0]), "peek must not promote");
     }
 
     #[test]
@@ -249,5 +361,48 @@ mod tests {
         trie.insert(&[9, 9], 2, b[1]);
         assert_eq!(trie.len(), 1);
         assert_eq!(trie.nodes.len(), 2, "slab slot reused");
+    }
+
+    #[test]
+    fn evictable_blocks_counts_trie_only_references() {
+        let (mut pool, b) = pool_with(3);
+        let mut trie = RadixIndex::new();
+        trie.insert(&[1, 2], 2, b[0]);
+        trie.insert(&[1, 2, 3, 4], 2, b[1]);
+        trie.insert(&[5, 6], 2, b[2]);
+        // all three indexed blocks are trie-only: full eviction (with
+        // cascade) reaches every one, interior nodes included
+        assert_eq!(trie.evictable_blocks(&pool), 3);
+        pool.retain(b[2]); // a live sequence pins one
+        assert_eq!(trie.evictable_blocks(&pool), 2);
+        pool.release(b[2]);
+        assert_eq!(trie.evictable_blocks(&pool), 3);
+    }
+
+    #[test]
+    fn recency_list_survives_heavy_churn() {
+        // interleaved inserts / lookups / evictions keep the intrusive
+        // list consistent: eviction order equals least-recent order and
+        // every entry is eventually reachable from the head
+        let (pool, blocks) = pool_with(16);
+        let mut trie = RadixIndex::new();
+        for i in 0..16u32 {
+            assert!(trie.insert(&[i, i], 2, blocks[i as usize]));
+        }
+        // touch evens so odds evict first, oldest odd first
+        for i in (0..16u32).step_by(2) {
+            trie.lookup(&[i, i], 2);
+        }
+        let mut evicted = Vec::new();
+        while let Some(b) = trie.evict_lru(&pool) {
+            evicted.push(b);
+        }
+        let want: Vec<usize> = (1..16)
+            .step_by(2)
+            .chain((0..16).step_by(2))
+            .map(|i| blocks[i])
+            .collect();
+        assert_eq!(evicted, want, "evictions follow recency order");
+        assert!(trie.is_empty());
     }
 }

@@ -16,8 +16,10 @@
 //!   numeric twins of every kernel, the post-training calibration and
 //!   precision-autotuning subsystem ([`calib`]) feeding the router and KV
 //!   cache measured scales, the shared-prefix radix KV cache with
-//!   copy-on-write INT8 blocks and split-K flash-decode ([`kv`]), and the
-//!   Ampere cost-model simulator that regenerates the paper's Figure 2.
+//!   copy-on-write INT8 blocks and split-K flash-decode ([`kv`]), the
+//!   continuous-batching decode scheduler with its striped KV pool and
+//!   streaming token delivery ([`sched`]), and the Ampere cost-model
+//!   simulator that regenerates the paper's Figure 2.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -29,6 +31,7 @@ pub mod gemm;
 pub mod kv;
 pub mod quant;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod simulator;
 pub mod tensor;

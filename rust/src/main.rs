@@ -37,6 +37,18 @@ USAGE:
   intfa serve      [--artifacts DIR] [--addr HOST:PORT] [--backend pjrt|native]
                    [--policy eager|deadline|full] [--deadline-ms N] [--workers N]
                    [--no-kv] [--kv-blocks N] [--kv-block-tokens N] [--kv-split-k N]
+                   [--no-sched] [--sched-stripes N] [--sched-tick-us N]
+                   [--sched-max-inflight N] [--sched-prefill-chunk N]
+                   [--sched-workers N]
+                     --sched-stripes      KV pool stripes (independent locks), default 4
+                     --sched-tick-us      idle-tick wait for new work in µs, default 500
+                                          (in-flight decodes never wait; this bounds
+                                          added batching latency only)
+                     --sched-max-inflight concurrent sequences per tick, default 32
+                     --sched-prefill-chunk prompt tokens appended per seq per tick,
+                                          default 64
+                     --sched-workers      thread fan-out of the batched decode, default 4
+                     --no-sched           disable the continuous-batching generate verb
   intfa client     [--addr HOST:PORT] [--requests N] [--concurrency C]
                    [--heads H] [--seq N] [--head-dim D] [--accuracy fast|balanced|exact]
   intfa calibrate  [--out FILE] [--heads H] [--head-dim D] [--batches N]
@@ -153,17 +165,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
             kv_cfg.max_blocks = args.get_usize("kv-blocks", 1024)?;
             kv_cfg.block_tokens = args.get_usize("kv-block-tokens", 16)?;
             let splitk = args.get_usize("kv-split-k", 4)?;
+            let stripes = args.get_usize("sched-stripes", 4)?;
             log_info!(
-                "kv cache: {heads}×{head_dim}, {} blocks × {} tokens, split-K {splitk}, \
-                 per-channel K {}",
+                "kv cache: {heads}×{head_dim}, {} blocks × {} tokens over {stripes} \
+                 stripes, split-K {splitk}, per-channel K {}",
                 kv_cfg.max_blocks,
                 kv_cfg.block_tokens,
                 !kv_cfg.k_channel_scale.is_empty()
             );
-            engine.with_kv(
-                int_flashattention::kv::RadixKvCache::new(kv_cfg),
-                splitk,
-            )
+            let engine = engine.with_kv_striped(kv_cfg, stripes, splitk);
+            if args.has("no-sched") {
+                engine
+            } else {
+                // continuous-batching generate verb: until an LM artifact
+                // path exists, generation runs the deterministic
+                // reference pseudo-LM (sched::HashModel) — the serving
+                // mechanics (admission, batching, streaming) are real
+                let sched_cfg = int_flashattention::sched::SchedConfig {
+                    tick_budget: Duration::from_micros(args.get_u64("sched-tick-us", 500)?),
+                    max_inflight: args.get_usize("sched-max-inflight", 32)?,
+                    prefill_chunk: args.get_usize("sched-prefill-chunk", 64)?,
+                    batch_workers: args.get_usize("sched-workers", 4)?,
+                    ..int_flashattention::sched::SchedConfig::default()
+                };
+                log_info!(
+                    "sched: tick {}µs, max in-flight {}, prefill chunk {}, {} workers",
+                    sched_cfg.tick_budget.as_micros(),
+                    sched_cfg.max_inflight,
+                    sched_cfg.prefill_chunk,
+                    sched_cfg.batch_workers
+                );
+                let model = Arc::new(int_flashattention::sched::HashModel::new(
+                    heads, head_dim,
+                ));
+                engine.with_sched(model, sched_cfg).map_err(|e| anyhow!(e))?
+            }
         }
         None => engine,
     };

@@ -1,0 +1,616 @@
+//! The continuous-batching tick loop: iteration-level scheduling of
+//! prefill chunks and decode steps with streaming token delivery.
+//!
+//! One scheduler thread owns the in-flight set. Each tick it
+//!
+//!   1. drains newly submitted prompts into the admission queue and
+//!      admits from the front under the trie-aware block pricing
+//!      ([`crate::sched::queue`]) and the `max_inflight` cap — FIFO,
+//!      no overtaking: a deferred head blocks later arrivals so a big
+//!      prompt cannot starve behind a stream of small ones;
+//!   2. advances prefill: every sequence with unappended tokens
+//!      (prompt chunks, or a generated token whose append hit pool
+//!      pressure last tick) appends up to `prefill_chunk` rows;
+//!   3. folds **all** in-flight decode steps into one batched INT8
+//!      attention call ([`StripedKvCache::decode_batch`]: per-stripe
+//!      lock for the view pins, then one lock-free thread scope across
+//!      sequences);
+//!   4. maps each output to its next token through the
+//!      [`TokenModel`], streams it to the sequence's receiver, and
+//!      appends its K/V for the next step.
+//!
+//! Completed sequences release their blocks (trie-shared prefixes stay
+//! resident for future hits); a sequence stalled on pool pressure for
+//! `stall_ticks` consecutive ticks fails instead of wedging the tick.
+//!
+//! # Exactness
+//!
+//! The tick loop never changes per-sequence numerics: step t of a
+//! sequence decodes over exactly the blocks a sequential
+//! `decode`/`extend` loop would have resident at step t, with the same
+//! query, through the same [`crate::kv::DecodeView`] math. Batching
+//! only changes *when* steps run, so per-sequence token streams are
+//! bit-identical to K independent per-call loops (property-tested in
+//! `tests/sched_integration.rs`).
+
+use super::model::TokenModel;
+use super::queue::AdmissionVerdict;
+use super::stripe::StripedKvCache;
+use crate::coordinator::metrics::Registry;
+use crate::kv::CacheError;
+use std::collections::VecDeque;
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Tick-loop configuration (`intfa serve --sched-*`).
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    /// How long an *idle-but-queued* tick waits for new work before
+    /// re-pricing deferred admissions. While decodes are in flight the
+    /// loop never sleeps — this bounds added batching latency only.
+    pub tick_budget: Duration,
+    /// In-flight sequence cap (admission stops above it).
+    pub max_inflight: usize,
+    /// Prompt tokens appended per sequence per tick (bounds how long
+    /// one cold prefill can monopolize a tick).
+    pub prefill_chunk: usize,
+    /// Thread fan-out of the batched decode call.
+    pub batch_workers: usize,
+    /// Consecutive ticks a sequence may stall on pool pressure before
+    /// it fails (prevents a wedged sequence from holding its blocks
+    /// forever).
+    pub stall_ticks: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            tick_budget: Duration::from_micros(500),
+            max_inflight: 32,
+            prefill_chunk: 64,
+            batch_workers: 4,
+            stall_ticks: 512,
+        }
+    }
+}
+
+/// Per-sequence stream message. `pos` is the token's absolute position
+/// (prompt positions are `0..prompt_len`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// One generated token, delivered as its tick completes.
+    Token { id: u64, pos: usize, token: u32 },
+    /// Generation finished; `tokens` is the full generated tail.
+    Done { id: u64, tokens: Vec<u32> },
+    /// Admission rejected the prompt, or the sequence failed mid-stream.
+    Failed { id: u64, reason: String },
+}
+
+struct Submit {
+    id: u64,
+    tokens: Vec<u32>,
+    max_new: usize,
+    stream: Sender<StreamEvent>,
+}
+
+enum Cmd {
+    Submit(Submit),
+    Shutdown,
+}
+
+/// One in-flight generation.
+struct Active {
+    id: u64,
+    /// KV sequence handle (stripe-encoded).
+    seq: u64,
+    /// Prompt + generated tokens.
+    tokens: Vec<u32>,
+    /// Tokens whose K/V is resident; `< tokens.len()` while prefilling
+    /// or after a pressure-deferred append.
+    appended: usize,
+    max_new: usize,
+    generated: Vec<u32>,
+    stream: Sender<StreamEvent>,
+    stalled: usize,
+}
+
+/// Handle on the tick loop. Dropping it shuts the loop down (pending
+/// and in-flight requests receive [`StreamEvent::Failed`]).
+pub struct Scheduler {
+    tx: Sender<Cmd>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Spawn the tick loop over a striped cache and a token model.
+    /// Metrics land in `metrics` under `sched.*`.
+    pub fn start(
+        cache: Arc<StripedKvCache>,
+        model: Arc<dyn TokenModel>,
+        cfg: SchedConfig,
+        metrics: Arc<Registry>,
+    ) -> Scheduler {
+        let (tx, rx) = mpsc::channel();
+        let join = std::thread::Builder::new()
+            .name("intfa-sched-tick".into())
+            .spawn(move || tick_loop(rx, cache, model, cfg, metrics))
+            .expect("spawn scheduler tick loop");
+        Scheduler { tx, join: Some(join) }
+    }
+
+    /// Submit a prompt for continuous-batched generation. Tokens arrive
+    /// on the returned receiver as their ticks complete; the stream
+    /// ends with [`StreamEvent::Done`] or [`StreamEvent::Failed`].
+    pub fn submit(&self, id: u64, tokens: Vec<u32>, max_new: usize) -> Receiver<StreamEvent> {
+        let (stx, srx) = mpsc::channel();
+        let sub = Submit { id, tokens, max_new, stream: stx.clone() };
+        if self.tx.send(Cmd::Submit(sub)).is_err() {
+            let _ = stx.send(StreamEvent::Failed {
+                id,
+                reason: "scheduler shut down".into(),
+            });
+        }
+        srx
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn tick_loop(
+    rx: Receiver<Cmd>,
+    cache: Arc<StripedKvCache>,
+    model: Arc<dyn TokenModel>,
+    cfg: SchedConfig,
+    metrics: Arc<Registry>,
+) {
+    let mut queue: VecDeque<Submit> = VecDeque::new();
+    let mut active: Vec<Active> = Vec::new();
+    let ticks = metrics.counter("sched.ticks");
+    let tokens_out = metrics.counter("sched.tokens");
+    let admitted = metrics.counter("sched.admitted");
+    let deferred = metrics.counter("sched.admission.deferred");
+    let rejected = metrics.counter("sched.admission.rejected");
+    let batch_size = metrics.histogram("sched.tick.batch_size");
+    let tick_us = metrics.histogram("sched.tick.us");
+    let queue_depth = metrics.gauge("sched.queue.depth");
+    let inflight = metrics.gauge("sched.inflight");
+    let contention = metrics.gauge("sched.stripe.contention");
+    let kv_hits = metrics.gauge("kv.prefix.hits");
+    let kv_reused = metrics.gauge("kv.prefix.tokens_reused");
+    let kv_evictions = metrics.gauge("kv.evictions");
+    let kv_free = metrics.gauge("kv.blocks.free");
+    let block_tokens = cache.config().block_tokens;
+
+    let mut shutdown = false;
+    loop {
+        // ---- wait for / drain commands --------------------------------
+        // busy while decodes are in flight; patient otherwise. With no
+        // active sequences nothing this loop does can free blocks, so a
+        // deferred head is re-priced at the slow idle rate (external
+        // kv_release / new submissions wake it) rather than every
+        // tick_budget — admission pricing scans the trie under the
+        // stripe lock and must not spin at kHz against an idle pool.
+        if active.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(Cmd::Submit(s)) => queue.push_back(s),
+                Ok(Cmd::Shutdown) => shutdown = true,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Cmd::Submit(s)) => queue.push_back(s),
+                Ok(Cmd::Shutdown) => shutdown = true,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if shutdown {
+            // fail everything still pending and stop: streaming callers
+            // see a terminal event rather than a hung receiver
+            for s in queue.drain(..) {
+                let _ = s.stream.send(StreamEvent::Failed {
+                    id: s.id,
+                    reason: "scheduler shut down".into(),
+                });
+            }
+            for a in active.drain(..) {
+                let _ = cache.free_sequence(a.seq);
+                let _ = a.stream.send(StreamEvent::Failed {
+                    id: a.id,
+                    reason: "scheduler shut down".into(),
+                });
+            }
+            return;
+        }
+        if active.is_empty() && queue.is_empty() {
+            continue;
+        }
+
+        let t0 = Instant::now();
+        ticks.inc();
+        let mut progressed = false;
+
+        // ---- 1. admission (FIFO, trie-aware block pricing) ------------
+        while active.len() < cfg.max_inflight {
+            let Some(head) = queue.front() else { break };
+            if head.tokens.is_empty() {
+                let s = queue.pop_front().unwrap();
+                rejected.inc();
+                let _ = s.stream.send(StreamEvent::Failed {
+                    id: s.id,
+                    reason: "empty prompt".into(),
+                });
+                continue;
+            }
+            // blocks already promised to admitted-but-still-growing
+            // sequences on the same stripe: the raw price sees only
+            // *allocated* blocks, so without this reservation several
+            // prompts can be admitted into headroom that exists once —
+            // and then deadlock mid-append, each holding blocks the
+            // others need
+            let stripe = cache.route(&head.tokens);
+            let reserved = reserved_blocks(&cache, &active, stripe, block_tokens);
+            let price = cache.price_admission(&head.tokens, head.max_new, reserved);
+            let verdict = if price.verdict() == AdmissionVerdict::Reject {
+                AdmissionVerdict::Reject
+            } else if price.cold + reserved > price.headroom() {
+                AdmissionVerdict::Defer
+            } else {
+                AdmissionVerdict::Admit
+            };
+            match verdict {
+                AdmissionVerdict::Admit => {
+                    let s = queue.pop_front().unwrap();
+                    let (seq, cached) = cache.start_sequence(&s.tokens);
+                    admitted.inc();
+                    progressed = true;
+                    active.push(Active {
+                        id: s.id,
+                        seq,
+                        tokens: s.tokens,
+                        appended: cached,
+                        max_new: s.max_new,
+                        generated: Vec::new(),
+                        stream: s.stream,
+                        stalled: 0,
+                    });
+                }
+                AdmissionVerdict::Defer => {
+                    deferred.inc();
+                    break; // head-of-line: re-priced next tick
+                }
+                AdmissionVerdict::Reject => {
+                    let s = queue.pop_front().unwrap();
+                    rejected.inc();
+                    let _ = s.stream.send(StreamEvent::Failed {
+                        id: s.id,
+                        reason: format!(
+                            "admission rejected: total footprint {} blocks \
+                             (cached {} + cold {}, prefill alone {}), stripe \
+                             capacity {}",
+                            price.cached + price.cold,
+                            price.cached,
+                            price.cold,
+                            price.cold_prefill,
+                            price.capacity
+                        ),
+                    });
+                }
+            }
+        }
+
+        // ---- 2. prefill chunks / append catch-up ----------------------
+        let mut remove: Vec<(usize, Option<String>)> = Vec::new();
+        for (i, a) in active.iter_mut().enumerate() {
+            let mut budget = cfg.prefill_chunk.min(a.tokens.len() - a.appended);
+            while budget > 0 {
+                let pos = a.appended;
+                let (k, v) = model.kv(a.tokens[pos], pos);
+                match cache.append_token(a.seq, a.tokens[pos], &k, &v) {
+                    Ok(()) => {
+                        a.appended += 1;
+                        a.stalled = 0;
+                        budget -= 1;
+                        progressed = true;
+                    }
+                    Err(CacheError::OutOfBlocks) => {
+                        // blocks may free when neighbors finish; retry
+                        // next tick, give up after stall_ticks
+                        a.stalled += 1;
+                        if a.stalled > cfg.stall_ticks {
+                            remove.push((i, Some("stalled on pool pressure".into())));
+                        }
+                        break;
+                    }
+                    Err(e) => {
+                        remove.push((i, Some(format!("kv append: {e}"))));
+                        break;
+                    }
+                }
+            }
+        }
+        flush_removed(&cache, &mut active, &mut remove);
+
+        // ---- 3. one batched decode call over every ready sequence -----
+        let ready: Vec<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.appended == a.tokens.len() && a.generated.len() < a.max_new)
+            .map(|(i, _)| i)
+            .collect();
+        let queries: Vec<(u64, Vec<f32>)> = ready
+            .iter()
+            .map(|&i| {
+                let a = &active[i];
+                let pos = a.tokens.len() - 1;
+                (a.seq, model.query(a.tokens[pos], pos))
+            })
+            .collect();
+        let outs = if queries.is_empty() {
+            // decode-free ticks (admission/prefill-only) record no
+            // sample: the histogram's 1-µs floor would misfile them as
+            // 1-sized batches and mask real batching behavior
+            Vec::new()
+        } else {
+            batch_size.observe_us(queries.len() as u64);
+            cache.decode_batch(&queries, cfg.batch_workers)
+        };
+
+        // ---- 4. stream tokens, append their K/V -----------------------
+        for (&i, out) in ready.iter().zip(&outs) {
+            let a = &mut active[i];
+            match out {
+                Ok(o) => {
+                    let pos = a.tokens.len() - 1;
+                    let next = model.next_token(o, pos);
+                    tokens_out.inc();
+                    progressed = true;
+                    let send = a.stream.send(StreamEvent::Token {
+                        id: a.id,
+                        pos: pos + 1,
+                        token: next,
+                    });
+                    if send.is_err() {
+                        // receiver gone (client disconnected): cancel
+                        // instead of generating max_new tokens into the
+                        // void while holding blocks and an inflight slot
+                        remove.push((i, Some("stream receiver dropped".into())));
+                        continue;
+                    }
+                    a.tokens.push(next);
+                    a.generated.push(next);
+                    if a.generated.len() < a.max_new {
+                        // the final token is never attended to — only
+                        // continuing sequences append; a pressure miss
+                        // here is caught up in step 2 next tick
+                        let (k, v) = model.kv(next, pos + 1);
+                        if cache.append_token(a.seq, next, &k, &v).is_ok() {
+                            a.appended += 1;
+                        }
+                    }
+                }
+                Err(e) => remove.push((i, Some(format!("kv decode: {e}")))),
+            }
+        }
+
+        // ---- 5. complete finished sequences ---------------------------
+        for (i, a) in active.iter().enumerate() {
+            if a.generated.len() >= a.max_new {
+                remove.push((i, None));
+            }
+        }
+        flush_removed(&cache, &mut active, &mut remove);
+
+        queue_depth.set(queue.len() as i64);
+        inflight.set(active.len() as i64);
+        contention.set(cache.contention() as i64);
+        // mirror the cache's sharing counters (the engine only syncs
+        // them on its own verbs; scheduler traffic must show up too) —
+        // one snapshot pass, each stripe locked once
+        let snap = cache.snapshot();
+        kv_hits.set(snap.stats.prefix_hits as i64);
+        kv_reused.set(snap.stats.tokens_reused as i64);
+        kv_evictions.set(snap.stats.evictions as i64);
+        kv_free.set(snap.blocks_free as i64);
+        tick_us.observe_us(t0.elapsed().as_micros() as u64);
+
+        // every in-flight sequence is stalled on pool pressure: back off
+        // instead of spinning hot until neighbors release blocks
+        if !progressed && !active.is_empty() {
+            std::thread::sleep(cfg.tick_budget);
+        }
+    }
+}
+
+/// Blocks promised to in-flight sequences on `stripe` beyond what they
+/// have already allocated: planned footprint (prompt + generation
+/// budget; slightly conservative — the final token is never appended)
+/// minus blocks currently held. Admission adds this to a candidate's
+/// price so concurrent growth cannot oversubscribe the stripe.
+fn reserved_blocks(
+    cache: &StripedKvCache,
+    active: &[Active],
+    stripe: usize,
+    block_tokens: usize,
+) -> usize {
+    active
+        .iter()
+        .filter(|a| cache.stripe_of_seq(a.seq) == stripe)
+        .map(|a| {
+            let prompt_len = a.tokens.len() - a.generated.len();
+            // peak residency excludes the final generated token (it is
+            // emitted, never appended) — same rule as admission pricing
+            let resident = prompt_len + a.max_new.saturating_sub(1);
+            let planned = resident.div_ceil(block_tokens);
+            planned.saturating_sub(a.appended.div_ceil(block_tokens))
+        })
+        .sum()
+}
+
+/// Retire the marked sequences: free their blocks (shared prefixes stay
+/// trie-resident) and send the terminal stream event. Indices are
+/// collected during iteration, so removal happens highest-first.
+fn flush_removed(
+    cache: &StripedKvCache,
+    active: &mut Vec<Active>,
+    remove: &mut Vec<(usize, Option<String>)>,
+) {
+    if remove.is_empty() {
+        return;
+    }
+    remove.sort_by(|a, b| b.0.cmp(&a.0));
+    remove.dedup_by_key(|(i, _)| *i);
+    for (i, reason) in remove.drain(..) {
+        let a = active.remove(i);
+        let _ = cache.free_sequence(a.seq);
+        let _ = match reason {
+            None => a.stream.send(StreamEvent::Done { id: a.id, tokens: a.generated }),
+            Some(reason) => a.stream.send(StreamEvent::Failed { id: a.id, reason }),
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::CacheConfig;
+    use crate::sched::HashModel;
+
+    const HEADS: usize = 2;
+    const HEAD_DIM: usize = 8;
+
+    fn pool(max_blocks: usize, stripes: usize) -> Arc<StripedKvCache> {
+        Arc::new(StripedKvCache::new(
+            CacheConfig {
+                block_tokens: 4,
+                max_blocks,
+                ..CacheConfig::new(HEADS, HEAD_DIM)
+            },
+            stripes,
+        ))
+    }
+
+    fn drain(rx: Receiver<StreamEvent>) -> (Vec<u32>, Option<String>) {
+        let mut tokens = Vec::new();
+        loop {
+            match rx.recv().expect("stream open until terminal event") {
+                StreamEvent::Token { token, .. } => tokens.push(token),
+                StreamEvent::Done { tokens: done, .. } => {
+                    assert_eq!(done, tokens, "Done carries the streamed tail");
+                    return (tokens, None);
+                }
+                StreamEvent::Failed { reason, .. } => return (tokens, Some(reason)),
+            }
+        }
+    }
+
+    #[test]
+    fn generates_streams_and_completes() {
+        let cache = pool(64, 2);
+        let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+        let sched = Scheduler::start(
+            cache.clone(),
+            model,
+            SchedConfig::default(),
+            Arc::new(Registry::default()),
+        );
+        let rx = sched.submit(1, vec![10, 11, 12, 13, 14], 6);
+        let (tokens, err) = drain(rx);
+        assert_eq!(err, None);
+        assert_eq!(tokens.len(), 6);
+        // blocks released back (trie may keep full prompt blocks)
+        assert!(cache.blocks_free() > 0);
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected_with_reason() {
+        let cache = pool(4, 1); // 4 blocks × 4 tokens = 16-token capacity
+        let sched = Scheduler::start(
+            cache,
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig::default(),
+            Arc::new(Registry::default()),
+        );
+        let rx = sched.submit(7, (0..100).collect(), 4);
+        let (tokens, err) = drain(rx);
+        assert!(tokens.is_empty());
+        assert!(err.unwrap().contains("admission rejected"));
+    }
+
+    #[test]
+    fn shutdown_fails_pending_streams() {
+        // max_new chosen so the request ADMITS (resident 4002 tokens =
+        // 1001 blocks < 1024) but the stream is far from done when the
+        // handle drops — shutdown must terminate it with Failed
+        let cache = pool(1024, 1);
+        let sched = Scheduler::start(
+            cache,
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig::default(),
+            Arc::new(Registry::default()),
+        );
+        let rx = sched.submit(9, vec![1, 2, 3], 4000);
+        drop(sched); // long stream still in flight
+        let (_, err) = drain(rx);
+        assert!(err.unwrap().contains("shut down"));
+    }
+
+    #[test]
+    fn dropped_stream_cancels_generation() {
+        let cache = pool(1024, 1);
+        let metrics = Arc::new(Registry::default());
+        let sched = Scheduler::start(
+            cache.clone(),
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig::default(),
+            metrics.clone(),
+        );
+        // admissible budget (resident 4002 tokens = 1001 of 1024 blocks)
+        let rx = sched.submit(1, vec![1, 2, 3], 4000);
+        drop(rx); // client walks away immediately
+        // the first token send fails → the sequence must be cancelled,
+        // not generated to max_new into the void
+        let mut cancelled = false;
+        for _ in 0..400 {
+            if metrics.counter("sched.admitted").get() == 1
+                && metrics.gauge("sched.inflight").get() == 0
+            {
+                cancelled = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(cancelled, "orphaned stream still in flight");
+        assert!(
+            metrics.counter("sched.tokens").get() < 100,
+            "ran on long after the receiver dropped"
+        );
+        assert_eq!(cache.blocks_free(), 1024, "cancelled sequence released its blocks");
+        drop(sched);
+    }
+
+    #[test]
+    fn max_new_zero_completes_immediately() {
+        let sched = Scheduler::start(
+            pool(16, 1),
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig::default(),
+            Arc::new(Registry::default()),
+        );
+        let (tokens, err) = drain(sched.submit(3, vec![5, 6], 0));
+        assert_eq!((tokens, err), (Vec::new(), None));
+    }
+}

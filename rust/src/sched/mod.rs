@@ -1,0 +1,53 @@
+//! Continuous-batching decode scheduler: a tick-driven runtime that
+//! turns the engine's per-call decode surface into iteration-level
+//! batched serving with streaming token delivery.
+//!
+//! PR 2's split-K flash-decode made the per-step kernel cheap; this
+//! module removes the serving-layer bottleneck around it. Three pieces
+//! (vLLM/TurboAttention-shaped — the quantized-attention win only
+//! compounds when many decodes share one batched step):
+//!
+//!   - [`stripe`]: a [`stripe::StripedKvCache`] that shards the block
+//!     pool into N independently-locked [`crate::kv::RadixKvCache`]
+//!     stripes. Sequences are routed by a hash of their first-block
+//!     token prefix, so identical prompts still colocate for radix
+//!     prefix reuse while unrelated sequences stop contending on one
+//!     mutex. Lock acquisitions that had to wait are counted
+//!     (`sched.stripe.contention`).
+//!   - [`queue`]: trie-aware admission — an incoming prompt is priced
+//!     against its stripe (already-resident prefix blocks via the
+//!     read-only radix peek, free blocks, blocks recoverable under full
+//!     eviction) and admitted, deferred, or rejected *before* it can
+//!     wedge the pool ([`queue::AdmissionPrice`]).
+//!   - [`loop_`]: the scheduler itself — each tick drains the admission
+//!     queue, advances in-flight prefill chunks, folds every in-flight
+//!     decode step into **one batched INT8 attention call**
+//!     ([`crate::kv::decode_views`] over pinned lock-free views), and
+//!     yields tokens to per-sequence streams
+//!     ([`loop_::StreamEvent`]).
+//!   - [`model`]: the deterministic [`model::TokenModel`] closing the
+//!     autoregressive loop (query/K/V activations per token, next-token
+//!     selection from attention output). [`model::HashModel`] is the
+//!     reference pseudo-LM used by tests, benches and `intfa serve`.
+//!
+//! # Exactness contract
+//!
+//! Continuous batching is a *scheduling* transform, never a numeric
+//! one: a sequence run through the tick loop produces exactly the
+//! token stream a sequential per-call `decode`/`extend` loop produces.
+//! This holds by construction — per-sequence decode math is untouched
+//! (`decode_views` simply fans the same `DecodeView::decode_splitk`
+//! across sequences), quantized block contents are a deterministic
+//! function of the token prefix, and eviction/prefix-sharing churn
+//! never mutates a live sequence's blocks — and it is property-tested
+//! in `tests/sched_integration.rs`.
+
+pub mod loop_;
+pub mod model;
+pub mod queue;
+pub mod stripe;
+
+pub use loop_::{SchedConfig, Scheduler, StreamEvent};
+pub use model::{HashModel, TokenModel};
+pub use queue::{AdmissionPrice, AdmissionVerdict};
+pub use stripe::StripedKvCache;

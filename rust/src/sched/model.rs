@@ -1,0 +1,125 @@
+//! The token model closing the scheduler's autoregressive loop.
+//!
+//! The serving stack is attention-only — there is no transformer LM on
+//! the rust side — so generation needs a pluggable source of per-token
+//! activations and a next-token rule. [`TokenModel`] is that seam: the
+//! scheduler (and any sequential baseline it is checked against) asks
+//! it for the decode query, the appended K/V rows and the next token.
+//!
+//! Determinism is load-bearing, not cosmetic. Radix prefix reuse is
+//! only sound when an identical token prefix reproduces identical K/V
+//! rows (the serving invariant the kv/ tests pin down), and the
+//! scheduler's bit-identity contract — continuous batching yields the
+//! same streams as sequential per-call decode — is only *testable*
+//! when both sides consult the same deterministic model.
+//!
+//! [`HashModel`] is the reference implementation: activations are PRNG
+//! rows keyed by `(token, position)`, next-token selection hashes the
+//! attention output's exact bit pattern. Any numeric divergence
+//! anywhere in the batched path therefore derails the token stream
+//! immediately — making the property tests maximally sensitive.
+
+use crate::util::hash::{fnv1a_extend, fnv1a_init};
+use crate::util::rng::Pcg64;
+
+/// Deterministic autoregressive model surface: everything the tick loop
+/// needs to run a sequence, with no state of its own.
+pub trait TokenModel: Send + Sync {
+    /// (heads, head_dim) of the activations this model emits.
+    fn geometry(&self) -> (usize, usize);
+
+    /// Decode query (flat (heads, d)) for the step *from* position
+    /// `pos`, whose resident token is `token`.
+    fn query(&self, token: u32, pos: usize) -> Vec<f32>;
+
+    /// K/V rows (flat (heads, d) each) for `token` at position `pos`.
+    /// Must be a pure function of `(token, pos)` — prefix reuse depends
+    /// on it.
+    fn kv(&self, token: u32, pos: usize) -> (Vec<f32>, Vec<f32>);
+
+    /// Next token given the decode output (flat (heads, d)) of the step
+    /// from position `pos`.
+    fn next_token(&self, out: &[f32], pos: usize) -> u32;
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Reference pseudo-LM: PRNG activations keyed by `(token, pos)`, a
+/// bit-exact hash of the attention output as the "argmax".
+#[derive(Clone, Debug)]
+pub struct HashModel {
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Token-id range for generated tokens.
+    pub vocab: u32,
+}
+
+impl HashModel {
+    pub fn new(heads: usize, head_dim: usize) -> HashModel {
+        HashModel { heads, head_dim, vocab: 50_000 }
+    }
+
+    fn rng(&self, token: u32, pos: usize, salt: u64) -> Pcg64 {
+        Pcg64::new(
+            splitmix(((token as u64) << 32) | ((pos as u64) ^ salt.rotate_left(17))),
+            salt,
+        )
+    }
+}
+
+impl TokenModel for HashModel {
+    fn geometry(&self) -> (usize, usize) {
+        (self.heads, self.head_dim)
+    }
+
+    fn query(&self, token: u32, pos: usize) -> Vec<f32> {
+        self.rng(token, pos, 0x5175).normal_vec(self.heads * self.head_dim)
+    }
+
+    fn kv(&self, token: u32, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = self.rng(token, pos, 0x4b56);
+        (
+            rng.normal_vec(self.heads * self.head_dim),
+            rng.normal_vec(self.heads * self.head_dim),
+        )
+    }
+
+    fn next_token(&self, out: &[f32], pos: usize) -> u32 {
+        // fnv1a over the exact output bits: any numeric divergence in
+        // the batched path changes the stream immediately
+        let h = out.iter().fold(fnv1a_init(pos as u64), |h, &x| {
+            fnv1a_extend(h, x.to_bits().to_le_bytes())
+        });
+        (h % self.vocab as u64) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_is_deterministic_and_position_sensitive() {
+        let m = HashModel::new(2, 8);
+        assert_eq!(m.geometry(), (2, 8));
+        assert_eq!(m.query(7, 3), m.query(7, 3));
+        assert_ne!(m.query(7, 3), m.query(7, 4), "position matters");
+        assert_ne!(m.query(7, 3), m.query(8, 3), "token matters");
+        let (k1, v1) = m.kv(9, 5);
+        let (k2, v2) = m.kv(9, 5);
+        assert_eq!((k1.len(), v1.len()), (16, 16));
+        assert_eq!((k1, v1), (k2, v2));
+        let out = m.query(1, 1);
+        assert_eq!(m.next_token(&out, 2), m.next_token(&out, 2));
+        assert!(m.next_token(&out, 2) < m.vocab);
+        // output bit sensitivity: flipping one mantissa bit moves the token
+        let mut tweaked = out.clone();
+        tweaked[0] = f32::from_bits(tweaked[0].to_bits() ^ 1);
+        assert_ne!(m.next_token(&out, 2), m.next_token(&tweaked, 2));
+    }
+}

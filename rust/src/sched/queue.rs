@@ -1,0 +1,302 @@
+//! Trie-aware admission: price an incoming prompt against its stripe
+//! before it can wedge the pool.
+//!
+//! The old gate ([`crate::coordinator::admission::Gate`]) counts
+//! requests and payload tokens — proxies that know nothing about what
+//! the KV pool can actually hold. Under continuous batching the
+//! binding resource is *blocks*: a prompt admitted into a pool that
+//! cannot fit its cold prefill stalls mid-append holding every block
+//! it already took, which is exactly how decode fleets livelock. This
+//! module prices a prompt in blocks, against its stripe, using the
+//! radix trie's read-only peek:
+//!
+//!   - `cached` — full prefix blocks already resident (their prefill is
+//!     skipped *and* they cost nothing: the sequence just retains them);
+//!   - `cold` — blocks the request still needs for prompt + generation
+//!     budget;
+//!   - `free` / `evictable` — what the stripe can hand out now, and
+//!     what full LRU eviction could additionally recover.
+//!
+//! Three verdicts: **Reject** when the request's *total resident
+//! footprint* — cached prefix + cold blocks for prompt and generation
+//! budget — exceeds the stripe's capacity (it can never complete;
+//! queueing it would wedge the FIFO queue forever behind an
+//! unsatisfiable head); **Defer** when it fits the stripe but not the
+//! current headroom (live sequences hold the difference — retry once
+//! they retire); **Admit** otherwise. Headroom excludes the prompt's
+//! *own* peeked prefix blocks: admission retains them, so they stop
+//! being evictable exactly when they would be needed. Pricing must
+//! never promote the peeked prefix (see [`crate::kv::radix`]): a
+//! deferred prompt must not reorder eviction.
+
+use crate::kv::RadixKvCache;
+
+/// Admission decision for one priced prompt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionVerdict {
+    /// Cold blocks fit in the stripe's headroom: start the sequence now.
+    Admit,
+    /// Doesn't fit now, but will once live sequences release blocks.
+    Defer,
+    /// The request's total footprint exceeds the stripe: it can never
+    /// complete.
+    Reject,
+}
+
+/// Block-level price of admitting one prompt (all counts in blocks of
+/// the stripe the prompt routes to).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPrice {
+    /// Full prefix blocks already resident in the stripe's trie.
+    pub cached: usize,
+    /// Blocks still needed for prompt + generation budget.
+    pub cold: usize,
+    /// Blocks needed for the cold *prefill* only (reported in reject
+    /// messages; the reject decision uses the total footprint).
+    pub cold_prefill: usize,
+    /// Free blocks in the stripe right now.
+    pub free: usize,
+    /// Blocks recoverable under full trie eviction, *excluding* the
+    /// prompt's own cached prefix (admission retains those). Computed
+    /// lazily: left at 0 when `cold <= free` already admits — the
+    /// O(trie nodes) evictability scan only runs under pool pressure.
+    pub evictable: usize,
+    /// The stripe's total block budget.
+    pub capacity: usize,
+}
+
+impl AdmissionPrice {
+    /// Blocks the stripe could actually hand this request.
+    pub fn headroom(&self) -> usize {
+        self.free + self.evictable
+    }
+
+    pub fn verdict(&self) -> AdmissionVerdict {
+        if self.cached + self.cold > self.capacity {
+            AdmissionVerdict::Reject
+        } else if self.cold > self.headroom() {
+            AdmissionVerdict::Defer
+        } else {
+            AdmissionVerdict::Admit
+        }
+    }
+}
+
+/// Price `tokens` (+ a `gen_budget`-token generation budget) against
+/// one stripe. `pressure` is extra block demand the caller already
+/// knows about (the scheduler's reservations for admitted-but-growing
+/// sequences) — it widens the lazily-computed `evictable` term, never
+/// the verdict itself. Read-only: recency, residency and refcounts are
+/// untouched.
+pub fn price_admission(
+    cache: &RadixKvCache,
+    tokens: &[u32],
+    gen_budget: usize,
+    pressure: usize,
+) -> AdmissionPrice {
+    let cached = cache.peek_cached_blocks(tokens);
+    let prefill_blocks = cache.blocks_for_tokens(tokens.len());
+    // peak residency: the final generated token is never appended (it
+    // is emitted, not attended to), so a gen budget of g adds g − 1
+    // resident tokens — counting the phantom token would hard-Reject
+    // requests that actually fit
+    let resident = tokens.len() + gen_budget.saturating_sub(1);
+    let cold = cache.blocks_for_tokens(resident).saturating_sub(cached);
+    let free = cache.blocks_free();
+    // the scan is O(live trie nodes) — only pay it when free blocks
+    // cannot cover demand (this request + the caller's outstanding
+    // reservations); subtract the prompt's own prefix, which admission
+    // would retain (making it non-evictable on arrival)
+    let evictable = if cold + pressure > free {
+        cache.evictable_blocks().saturating_sub(cached)
+    } else {
+        0
+    };
+    AdmissionPrice {
+        cached,
+        cold,
+        cold_prefill: prefill_blocks.saturating_sub(cached),
+        free,
+        evictable,
+        capacity: cache.capacity_blocks(),
+    }
+}
+
+impl super::stripe::StripedKvCache {
+    /// Price a prompt against the stripe it would route to (one short
+    /// lock hold; nothing is promoted or allocated). `pressure` as in
+    /// [`price_admission`].
+    pub fn price_admission(
+        &self,
+        tokens: &[u32],
+        gen_budget: usize,
+        pressure: usize,
+    ) -> AdmissionPrice {
+        let s = self.route(tokens);
+        price_admission(&self.lock(s), tokens, gen_budget, pressure)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::CacheConfig;
+    use crate::sched::StripedKvCache;
+    use crate::util::rng::Pcg64;
+
+    const HEADS: usize = 1;
+    const HEAD_DIM: usize = 8;
+
+    fn cache(max_blocks: usize) -> RadixKvCache {
+        RadixKvCache::new(CacheConfig {
+            block_tokens: 4,
+            max_blocks,
+            ..CacheConfig::new(HEADS, HEAD_DIM)
+        })
+    }
+
+    fn fill(cache: &mut RadixKvCache, tokens: &[u32]) -> u64 {
+        let (id, cached) = cache.start_sequence(tokens);
+        let mut rng = Pcg64::seeded(1);
+        for &t in &tokens[cached..] {
+            cache
+                .append_token(id, t, &rng.normal_vec(HEAD_DIM), &rng.normal_vec(HEAD_DIM))
+                .unwrap();
+        }
+        id
+    }
+
+    #[test]
+    fn cold_prompt_priced_in_blocks() {
+        let c = cache(8);
+        // 10 tokens @ 4/block = 3 blocks prefill, +6 gen tokens → 4 total
+        let p = price_admission(&c, &(0..10).collect::<Vec<u32>>(), 6, 0);
+        assert_eq!((p.cached, p.cold_prefill, p.cold), (0, 3, 4));
+        assert_eq!((p.free, p.evictable, p.capacity), (8, 0, 8));
+        assert_eq!(p.verdict(), AdmissionVerdict::Admit);
+    }
+
+    #[test]
+    fn resident_prefix_discounts_the_price() {
+        let mut c = cache(8);
+        let prompt: Vec<u32> = (0..8).collect(); // 2 full blocks
+        let id = fill(&mut c, &prompt);
+        let longer: Vec<u32> = (0..10).collect();
+        let p = price_admission(&c, &longer, 0, 0);
+        assert_eq!(p.cached, 2, "both full blocks peeked");
+        assert_eq!(p.cold_prefill, 1, "only the partial tail is cold");
+        // pricing must not promote: the peek leaves eviction order alone
+        c.free_sequence(id).unwrap();
+        let before = c.stats().evictions;
+        let _ = price_admission(&c, &longer, 0, 0);
+        assert_eq!(c.stats().evictions, before);
+    }
+
+    #[test]
+    fn verdicts_reject_defer_admit() {
+        let mut c = cache(4);
+        // live sequence holds 3 blocks (not evictable while live)
+        let live = fill(&mut c, &(100..112).collect::<Vec<u32>>());
+        // never fits: 6 cold prefill blocks > 4 capacity
+        let huge: Vec<u32> = (0..24).collect();
+        assert_eq!(price_admission(&c, &huge, 0, 0).verdict(), AdmissionVerdict::Reject);
+        // fits the pool but not while the live sequence holds it
+        let mid: Vec<u32> = (200..208).collect(); // 2 blocks, 1 free
+        assert_eq!(price_admission(&c, &mid, 0, 0).verdict(), AdmissionVerdict::Defer);
+        // retiring the live sequence turns its blocks evictable
+        c.free_sequence(live).unwrap();
+        let p = price_admission(&c, &mid, 0, 0);
+        assert!(p.free + p.evictable >= 2);
+        assert_eq!(p.verdict(), AdmissionVerdict::Admit);
+    }
+
+    #[test]
+    fn unsatisfiable_total_footprint_is_rejected_not_deferred() {
+        // a tiny prompt with a generation budget the stripe can never
+        // hold must Reject — Deferring it would wedge the FIFO queue
+        // forever behind an unsatisfiable head
+        let c = cache(8);
+        let p = price_admission(&c, &[1], 1_000, 0);
+        assert!(p.cold > p.capacity);
+        assert_eq!(p.verdict(), AdmissionVerdict::Reject);
+
+        // warm-prefix overflow: prefill alone fits the old floor, but
+        // cached + cold exceeds capacity — the resident prefix is
+        // retained on admission, so the request can never complete
+        let mut c = cache(4);
+        let id = fill(&mut c, &(0..12).collect::<Vec<u32>>()); // 3 blocks
+        c.free_sequence(id).unwrap(); // trie keeps them (refcount 1)
+        let longer: Vec<u32> = (0..20).collect(); // 5 blocks total
+        let p = price_admission(&c, &longer, 0, 0);
+        assert_eq!((p.cached, p.cold, p.cold_prefill), (3, 2, 2));
+        assert_eq!(p.verdict(), AdmissionVerdict::Reject, "3 cached + 2 cold > 4");
+    }
+
+    #[test]
+    fn final_generated_token_is_not_priced() {
+        // the last generated token is emitted but never appended: a
+        // 12-token prompt with max_new=5 peaks at 16 resident tokens —
+        // exactly a 4-block stripe, so it must Admit, not Reject
+        let c = cache(4);
+        let p = price_admission(&c, &(0..12).collect::<Vec<u32>>(), 5, 0);
+        assert_eq!(p.cold, 4, "16 resident tokens, not 17");
+        assert_eq!(p.verdict(), AdmissionVerdict::Admit);
+    }
+
+    #[test]
+    fn pressure_widens_the_evictability_scan() {
+        // cold fits free, but the caller's reservations don't: pricing
+        // must still compute evictable so deferral decisions see the
+        // real headroom instead of a lazily-zeroed one
+        let mut c = cache(8);
+        let id = fill(&mut c, &(0..16).collect::<Vec<u32>>()); // 4 blocks
+        c.free_sequence(id).unwrap(); // all 4 now trie-only evictable
+        let p = price_admission(&c, &[500, 501, 502], 0, 0);
+        assert_eq!((p.cold, p.free), (1, 4));
+        assert_eq!(p.evictable, 0, "no pressure → scan skipped");
+        let p = price_admission(&c, &[500, 501, 502], 0, 6);
+        assert_eq!(p.evictable, 4, "pressure forces the real scan");
+        assert_eq!(p.verdict(), AdmissionVerdict::Admit);
+    }
+
+    #[test]
+    fn own_prefix_does_not_count_as_evictable_headroom() {
+        // stripe of 5: 3 trie-resident prefix blocks + 2 free. A warm
+        // request needing 2 cold blocks admits on free alone; one
+        // needing 3 cold must NOT count its own prefix as evictable
+        // (admission retains it), so it defers until something else
+        // frees up — never a false Admit that stalls mid-append
+        let mut c = cache(5);
+        let id = fill(&mut c, &(0..12).collect::<Vec<u32>>());
+        c.free_sequence(id).unwrap();
+        // burn the free headroom with a live anonymous sequence
+        let live = c.alloc_sequence();
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..8 {
+            // 2 blocks
+            c.append(live, &rng.normal_vec(HEAD_DIM), &rng.normal_vec(HEAD_DIM))
+                .unwrap();
+        }
+        // warm request: 12 cached tokens + 8 more = 5 blocks total, 2
+        // cold; free 0; its own 3 prefix blocks are the only evictable
+        // ones and must be excluded from headroom
+        let longer: Vec<u32> = (0..20).collect();
+        let p = price_admission(&c, &longer, 0, 0);
+        assert_eq!((p.cached, p.cold, p.free), (3, 2, 0));
+        assert_eq!(p.evictable, 0, "own prefix excluded");
+        assert_eq!(p.verdict(), AdmissionVerdict::Defer);
+    }
+
+    #[test]
+    fn striped_pricing_targets_the_routed_stripe() {
+        let pool = StripedKvCache::new(
+            CacheConfig { block_tokens: 4, max_blocks: 8, ..CacheConfig::new(HEADS, HEAD_DIM) },
+            2,
+        );
+        let prompt: Vec<u32> = (0..4).collect();
+        let p = pool.price_admission(&prompt, 0, 0);
+        // a 2-stripe split of 8 blocks prices against one 4-block stripe
+        assert_eq!(p.capacity, 4);
+        assert_eq!(p.verdict(), AdmissionVerdict::Admit);
+    }
+}

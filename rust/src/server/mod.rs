@@ -11,7 +11,17 @@
 //!
 //! → {"type":"ping"}                ← {"ok":true,"pong":true}
 //! → {"type":"metrics"}             ← {"ok":true,"metrics":{...}}
+//!
+//! → {"type":"generate","tokens":[...],"max_new":N}
+//! ← {"stream":true,"id":n,"pos":p,"token":t}      (one per token, as
+//! ← {"stream":true,"id":n,"pos":p,"token":t}       scheduler ticks
+//! ← {"ok":true,"done":true,"id":n,"tokens":[...]}  complete)
 //! ```
+//!
+//! `generate` is the continuous-batching surface: the engine's
+//! scheduler folds every in-flight request's decode step into one
+//! batched INT8 attention call per tick, and each connection's tokens
+//! stream out as their ticks finish (see [`crate::sched`]).
 
 pub mod protocol;
 pub mod tcp;

@@ -17,6 +17,11 @@ pub enum WireRequest {
     Decode { seq_id: u64, q: Vec<f32> },
     /// Release a cached sequence.
     Release { seq_id: u64 },
+    /// Continuous-batched generation with streaming token delivery:
+    /// the server answers with one `{"stream":true,...}` line per
+    /// generated token as scheduler ticks complete, then a final
+    /// `{"ok":...,"done":true,...}` line.
+    Generate { tokens: Vec<u32>, max_new: usize },
     Ping,
     Metrics,
 }
@@ -108,8 +113,48 @@ pub fn decode_request(line: &str) -> Result<WireRequest, String> {
             q: f32_array(&j, "q")?,
         }),
         Some("release") => Ok(WireRequest::Release { seq_id: seq_id()? }),
+        Some("generate") => Ok(WireRequest::Generate {
+            tokens: u32_array(&j, "tokens")?,
+            max_new: j.at("max_new").as_usize().ok_or("missing max_new")?,
+        }),
         Some(other) => Err(format!("unknown request type {other:?}")),
         None => Err("missing type field".into()),
+    }
+}
+
+/// One streamed token line (`generate` verb): not a terminal response —
+/// the client keeps reading until a line without `"stream"`.
+pub fn encode_stream_token(id: u64, pos: usize, token: u32) -> String {
+    Json::obj(vec![
+        ("stream", Json::Bool(true)),
+        ("id", Json::num(id as f64)),
+        ("pos", Json::num(pos as f64)),
+        ("token", Json::num(token as f64)),
+    ])
+    .to_string()
+}
+
+/// Terminal line of a `generate` stream.
+pub fn encode_generate_done(id: u64, result: Result<&[u32], &str>) -> String {
+    match result {
+        Ok(tokens) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("done", Json::Bool(true)),
+            ("id", Json::num(id as f64)),
+            (
+                "tokens",
+                Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("count", Json::num(tokens.len() as f64)),
+        ])
+        .to_string(),
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("done", Json::Bool(true)),
+            ("id", Json::num(id as f64)),
+            ("error", Json::str(e)),
+        ])
+        .to_string(),
     }
 }
 
@@ -270,6 +315,38 @@ mod tests {
                "seq":1,"head_dim":1,"q":[1],"k":[1],"v":[1]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn decode_and_encode_generate() {
+        match decode_request(r#"{"type":"generate","tokens":[1,2,3],"max_new":8}"#).unwrap() {
+            WireRequest::Generate { tokens, max_new } => {
+                assert_eq!(tokens, vec![1, 2, 3]);
+                assert_eq!(max_new, 8);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(decode_request(r#"{"type":"generate","tokens":[1]}"#).is_err());
+        assert!(decode_request(r#"{"type":"generate","max_new":4}"#).is_err());
+
+        let line = encode_stream_token(7, 12, 400);
+        let j = crate::util::json::parse(&line).unwrap();
+        assert_eq!(j.at("stream").as_bool(), Some(true));
+        assert_eq!(j.at("pos").as_i64(), Some(12));
+        assert_eq!(j.at("token").as_i64(), Some(400));
+        assert!(!line.contains('\n'));
+
+        let done = encode_generate_done(7, Ok(&[4, 5, 6]));
+        let j = crate::util::json::parse(&done).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(true));
+        assert_eq!(j.at("done").as_bool(), Some(true));
+        assert_eq!(j.at("count").as_i64(), Some(3));
+        assert!(j.at("stream").is_null(), "terminal line carries no stream flag");
+
+        let failed = encode_generate_done(7, Err("admission rejected"));
+        let j = crate::util::json::parse(&failed).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(false));
+        assert!(j.at("error").as_str().unwrap().contains("rejected"));
     }
 
     #[test]

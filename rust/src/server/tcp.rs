@@ -146,10 +146,53 @@ fn handle_connection(
                 Ok(()) => WireResponse::Done,
                 Err(e) => WireResponse::Error(e),
             },
+            Ok(WireRequest::Generate { tokens, max_new }) => {
+                // streaming verb: tokens go out line by line as their
+                // scheduler ticks complete, then one terminal line
+                stream_generate(&mut writer, &engine, tokens, max_new)?;
+                continue;
+            }
         };
         writer.write_all(encode_response(&resp).as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
+    }
+}
+
+/// Run one `generate` exchange: relay the engine's stream events as
+/// they arrive (each token line flushed immediately — delivery is
+/// per-tick, not per-request) and finish with the terminal line.
+fn stream_generate(
+    writer: &mut BufWriter<TcpStream>,
+    engine: &Engine,
+    tokens: Vec<u32>,
+    max_new: usize,
+) -> std::io::Result<()> {
+    use crate::sched::StreamEvent;
+    use crate::server::protocol::{encode_generate_done, encode_stream_token};
+    let (id, rx) = match engine.generate(tokens, max_new) {
+        Ok(pair) => pair,
+        Err(e) => {
+            writer.write_all(encode_generate_done(0, Err(&e)).as_bytes())?;
+            writer.write_all(b"\n")?;
+            return writer.flush();
+        }
+    };
+    loop {
+        let line = match rx.recv() {
+            Ok(StreamEvent::Token { pos, token, .. }) => {
+                writer.write_all(encode_stream_token(id, pos, token).as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                continue;
+            }
+            Ok(StreamEvent::Done { tokens, .. }) => encode_generate_done(id, Ok(&tokens)),
+            Ok(StreamEvent::Failed { reason, .. }) => encode_generate_done(id, Err(&reason)),
+            Err(_) => encode_generate_done(id, Err("stream dropped")),
+        };
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        return writer.flush();
     }
 }
 
@@ -285,6 +328,61 @@ impl Client {
             ),
         ]);
         self.call_json(&req)
+    }
+
+    /// Continuous-batched generation with streaming delivery: `on_token`
+    /// fires per token *as the server's scheduler ticks complete*;
+    /// returns the terminal response line (ok/done/tokens or error).
+    pub fn generate_streaming(
+        &mut self,
+        tokens: &[u32],
+        max_new: usize,
+        mut on_token: impl FnMut(usize, u32),
+    ) -> std::io::Result<crate::util::json::Json> {
+        use crate::util::json::Json;
+        let req = Json::obj(vec![
+            ("type", Json::str("generate")),
+            (
+                "tokens",
+                Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("max_new", Json::num(max_new as f64)),
+        ]);
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed mid-stream",
+                ));
+            }
+            let j = crate::util::json::parse(line.trim()).map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+            })?;
+            if j.at("stream").as_bool() == Some(true) {
+                if let (Some(pos), Some(tok)) = (j.at("pos").as_usize(), j.at("token").as_usize())
+                {
+                    on_token(pos, tok as u32);
+                }
+                continue;
+            }
+            return Ok(j);
+        }
+    }
+
+    /// Convenience: generate and collect the streamed tokens.
+    pub fn generate(
+        &mut self,
+        tokens: &[u32],
+        max_new: usize,
+    ) -> std::io::Result<(Vec<u32>, crate::util::json::Json)> {
+        let mut streamed = Vec::new();
+        let done = self.generate_streaming(tokens, max_new, |_, t| streamed.push(t))?;
+        Ok((streamed, done))
     }
 
     /// Release a cached sequence.

@@ -1,0 +1,52 @@
+//! Deterministic non-cryptographic hashing (FNV-1a).
+//!
+//! One definition for every place the serving stack needs a stable,
+//! platform-independent hash — stripe routing
+//! ([`crate::sched::stripe`]) and pseudo-LM token selection
+//! ([`crate::sched::model`]) both key decisions off these bits, so two
+//! drifting copies of the constants would silently change routing or
+//! generated streams.
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over a byte stream, from an explicit initial state (pass
+/// [`fnv1a_init`]'s result, or fold additional salt in beforehand).
+pub fn fnv1a_extend(mut h: u64, bytes: impl IntoIterator<Item = u8>) -> u64 {
+    for b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// The FNV-1a offset basis, optionally salted.
+pub fn fnv1a_init(salt: u64) -> u64 {
+    FNV_OFFSET ^ salt
+}
+
+/// FNV-1a over a `u32` sequence (little-endian bytes).
+pub fn fnv1a_u32s(values: &[u32]) -> u64 {
+    values.iter().fold(fnv1a_init(0), |h, v| {
+        fnv1a_extend(h, v.to_le_bytes())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // FNV-1a("a") and FNV-1a("foobar") from the reference spec
+        assert_eq!(fnv1a_extend(fnv1a_init(0), *b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_extend(fnv1a_init(0), *b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn u32_hash_is_stable_and_prefix_sensitive() {
+        assert_eq!(fnv1a_u32s(&[1, 2, 3]), fnv1a_u32s(&[1, 2, 3]));
+        assert_ne!(fnv1a_u32s(&[1, 2, 3]), fnv1a_u32s(&[1, 2, 4]));
+        assert_ne!(fnv1a_u32s(&[1, 2]), fnv1a_u32s(&[2, 1]));
+        assert_ne!(fnv1a_u32s(&[]), fnv1a_u32s(&[0]));
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod cli;
 pub mod fastmath;
+pub mod hash;
 pub mod json;
 pub mod log;
 pub mod proptest;

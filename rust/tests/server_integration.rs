@@ -10,7 +10,8 @@ use int_flashattention::util::rng::Pcg64;
 use std::sync::Arc;
 
 fn test_server() -> (int_flashattention::server::tcp::ShutdownHandle, std::thread::JoinHandle<()>) {
-    use int_flashattention::kv::{CacheConfig, RadixKvCache};
+    use int_flashattention::kv::CacheConfig;
+    use int_flashattention::sched::{HashModel, SchedConfig};
     let mk = |variant, seq| Bucket {
         variant,
         batch: 2,
@@ -25,18 +26,20 @@ fn test_server() -> (int_flashattention::server::tcp::ShutdownHandle, std::threa
         mk(Variant::Fp16, 32),
         mk(Variant::HalfInt8, 32),
     ]);
-    let cache = RadixKvCache::new(CacheConfig {
+    let cfg = CacheConfig {
         block_tokens: 8,
         max_blocks: 32,
         ..CacheConfig::new(2, 8)
-    });
+    };
     let engine = Arc::new(
         Engine::new(
             router,
             Arc::new(NativeBackend { threads: 1 }),
             EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
         )
-        .with_kv(cache, 2),
+        .with_kv_striped(cfg, 2, 2)
+        .with_sched(Arc::new(HashModel::new(2, 8)), SchedConfig::default())
+        .expect("kv attached"),
     );
     let server = Server::bind(engine, "127.0.0.1:0").expect("bind");
     server.start()
@@ -145,6 +148,57 @@ fn kv_prefill_decode_release_roundtrip() {
     assert_eq!(client.release(warm_id).unwrap().at("ok").as_bool(), Some(true));
     let resp = client.decode(warm_id, &qt).expect("decode after release");
     assert_eq!(resp.at("ok").as_bool(), Some(false));
+    assert!(client.ping().expect("ping"));
+
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn generate_streams_tokens_over_the_wire() {
+    let (handle, join) = test_server();
+    let mut client = Client::connect(handle.addr()).expect("connect");
+    let prompt: Vec<u32> = (0..10).collect();
+
+    // token lines arrive with consecutive absolute positions, then the
+    // terminal line carries the full tail
+    let mut positions = Vec::new();
+    let done = client
+        .generate_streaming(&prompt, 7, |pos, _| positions.push(pos))
+        .expect("generate");
+    assert_eq!(done.at("ok").as_bool(), Some(true), "{done:?}");
+    assert_eq!(done.at("done").as_bool(), Some(true));
+    assert_eq!(done.at("count").as_i64(), Some(7));
+    assert_eq!(positions, (10..17).collect::<Vec<usize>>());
+    let want: Vec<u32> = done
+        .at("tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap() as u32)
+        .collect();
+
+    // generation is deterministic over the wire: the same prompt rides
+    // the radix prefix hit and reproduces the tail exactly
+    let (streamed, d2) = client.generate(&prompt, 7).expect("generate again");
+    assert_eq!(d2.at("ok").as_bool(), Some(true));
+    assert_eq!(streamed, want);
+
+    // scheduler metrics are visible through the stats verb
+    let m = client.metrics().expect("metrics");
+    assert!(m.at("counter.sched.tokens").as_i64().unwrap() >= 14);
+    assert!(m.at("counter.sched.admitted").as_i64().unwrap() >= 2);
+    assert!(m.at("hist.sched.tick.batch_size").at("count").as_i64().unwrap() >= 1);
+    assert!(m.at("gauge.sched.stripe.contention").as_i64().unwrap() >= 0);
+
+    // a prompt whose cold prefill can never fit fails with a terminal
+    // error line and leaves the connection usable
+    let (toks, fail) = client
+        .generate(&(0..1000).collect::<Vec<u32>>(), 1)
+        .expect("rejected generate");
+    assert!(toks.is_empty());
+    assert_eq!(fail.at("ok").as_bool(), Some(false));
+    assert!(fail.at("error").as_str().unwrap().contains("admission rejected"));
     assert!(client.ping().expect("ping"));
 
     handle.shutdown();

@@ -1,0 +1,201 @@
+//! sched/ QoS bench: first-token latency for interactive traffic with
+//! and without a competing batch flood.
+//!
+//! Two scenarios over the same engine geometry:
+//!
+//!   - **quiet**: interactive requests one at a time against an idle
+//!     scheduler — the first-token latency floor;
+//!   - **flooded**: a fleet of long-running `batch`-class generations
+//!     saturates the KV pool and the in-flight set first, then the
+//!     same interactive requests run. Priority-class admission (plus
+//!     preemption-by-recompute of lower classes) is what keeps the
+//!     interactive p99 from degrading to the flood's drain time.
+//!
+//! Prints a markdown table and writes `BENCH_sched_qos.json` (consumed
+//! by the CI bench-smoke step as an artifact).
+//!
+//! Run: `cargo bench --bench sched_qos` (INTFA_BENCH_FULL=1 lengthens
+//! the flood; INTFA_BENCH_OUT overrides the JSON path).
+
+use int_flashattention::attention::Variant;
+use int_flashattention::bench_harness::Table;
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::kv::CacheConfig;
+use int_flashattention::sched::{HashModel, Priority, SchedConfig, StreamEvent};
+use int_flashattention::util::json::Json;
+use int_flashattention::util::stats::Summary;
+use std::sync::Arc;
+use std::time::Instant;
+
+const HEADS: usize = 4;
+const HEAD_DIM: usize = 64;
+const STRIPES: usize = 2;
+const PROMPT_LEN: usize = 24;
+const INTERACTIVE_REQS: usize = 24;
+const INTERACTIVE_NEW: usize = 4;
+const FLOOD_SEQS: usize = 24;
+
+fn engine(model: &Arc<HashModel>) -> Engine {
+    let router = BucketRouter::new(vec![Bucket {
+        variant: Variant::Int8,
+        batch: 2,
+        heads: HEADS,
+        seq: 64,
+        head_dim: HEAD_DIM,
+        causal: true,
+        artifact: String::new(),
+    }]);
+    Engine::new(
+        router,
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    )
+    // pool sized so the flood's combined reservations oversubscribe it:
+    // interactive admission has to rely on priority, not spare blocks
+    .with_kv_striped(
+        CacheConfig { block_tokens: 16, max_blocks: 256, ..CacheConfig::new(HEADS, HEAD_DIM) },
+        STRIPES,
+        2,
+    )
+    .with_sched(
+        model.clone(),
+        SchedConfig { max_inflight: 16, ..SchedConfig::default() },
+    )
+    .expect("kv attached")
+}
+
+fn interactive_prompt(i: usize) -> Vec<u32> {
+    let base = (i as u32 + 1) * 1_000_000;
+    (base..base + PROMPT_LEN as u32).collect()
+}
+
+fn flood_prompt(i: usize) -> Vec<u32> {
+    let base = (i as u32 + 1) * 10_000;
+    (base..base + PROMPT_LEN as u32).collect()
+}
+
+/// Measure first-token latency (ms) for `INTERACTIVE_REQS` serial
+/// interactive requests against `e`.
+fn measure_interactive(e: &Engine) -> Vec<f64> {
+    let mut lats = Vec::with_capacity(INTERACTIVE_REQS);
+    for i in 0..INTERACTIVE_REQS {
+        let t0 = Instant::now();
+        let (_, rx) = e
+            .generate_with_priority(
+                interactive_prompt(i),
+                INTERACTIVE_NEW,
+                Priority::Interactive,
+            )
+            .expect("submit interactive");
+        let mut first = None;
+        let mut failed = None;
+        for ev in rx.iter() {
+            match ev {
+                StreamEvent::Token { .. } => {
+                    if first.is_none() {
+                        first = Some(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                StreamEvent::Done { .. } => break,
+                StreamEvent::Failed { reason, .. } => {
+                    failed = Some(reason);
+                    break;
+                }
+            }
+        }
+        assert!(failed.is_none(), "interactive request failed: {failed:?}");
+        lats.push(first.expect("interactive stream produced a token"));
+    }
+    lats
+}
+
+fn scenario(flood: bool, flood_new: usize) -> Vec<f64> {
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let e = engine(&model);
+    // hold the flood receivers: dropping them would cancel the flood
+    let mut flood_rxs = Vec::new();
+    if flood {
+        for i in 0..FLOOD_SEQS {
+            let (_, rx) = e
+                .generate_with_priority(flood_prompt(i), flood_new, Priority::Batch)
+                .expect("submit flood");
+            flood_rxs.push(rx);
+        }
+        // wait until the flood demonstrably saturates the scheduler:
+        // every flood stream has produced at least one event or the
+        // pool is deep into its reservations
+        for rx in flood_rxs.iter().take(4) {
+            let _ = rx.recv();
+        }
+    }
+    let lats = measure_interactive(&e);
+    drop(flood_rxs); // cancels any still-running flood sequences
+    lats
+}
+
+fn main() {
+    let full = std::env::var("INTFA_BENCH_FULL").is_ok();
+    let flood_new: usize = if full { 512 } else { 128 };
+
+    println!("# sched/ — interactive first-token latency under a batch flood\n");
+    println!(
+        "geometry: heads={HEADS} d={HEAD_DIM} block_tokens=16, {STRIPES} stripes, \
+         256 blocks; {INTERACTIVE_REQS} interactive reqs (prompt={PROMPT_LEN}, \
+         max_new={INTERACTIVE_NEW}) vs {FLOOD_SEQS}-seq batch flood \
+         (max_new={flood_new})\n"
+    );
+
+    let quiet = measure_interactive_summary(scenario(false, flood_new));
+    let flooded = measure_interactive_summary(scenario(true, flood_new));
+
+    let mut table = Table::new(&["scenario", "p50 ms", "p99 ms", "mean ms"]);
+    table.row(&[
+        "quiet".into(),
+        format!("{:.3}", quiet.p50),
+        format!("{:.3}", quiet.p99),
+        format!("{:.3}", quiet.mean),
+    ]);
+    table.row(&[
+        "batch flood".into(),
+        format!("{:.3}", flooded.p50),
+        format!("{:.3}", flooded.p99),
+        format!("{:.3}", flooded.mean),
+    ]);
+    print!("{}", table.render());
+
+    let level = |s: &Summary| {
+        Json::obj(vec![
+            ("p50_ms", Json::num(s.p50)),
+            ("p99_ms", Json::num(s.p99)),
+            ("mean_ms", Json::num(s.mean)),
+            ("n", Json::num(s.n as f64)),
+        ])
+    };
+    let report = Json::obj(vec![
+        (
+            "geometry",
+            Json::obj(vec![
+                ("heads", Json::num(HEADS as f64)),
+                ("head_dim", Json::num(HEAD_DIM as f64)),
+                ("block_tokens", Json::num(16.0)),
+                ("stripes", Json::num(STRIPES as f64)),
+                ("max_blocks", Json::num(256.0)),
+                ("prompt_len", Json::num(PROMPT_LEN as f64)),
+                ("interactive_max_new", Json::num(INTERACTIVE_NEW as f64)),
+                ("flood_seqs", Json::num(FLOOD_SEQS as f64)),
+                ("flood_max_new", Json::num(flood_new as f64)),
+            ]),
+        ),
+        ("quiet", level(&quiet)),
+        ("flooded", level(&flooded)),
+    ]);
+    let out = std::env::var("INTFA_BENCH_OUT").unwrap_or_else(|_| "BENCH_sched_qos.json".into());
+    std::fs::write(&out, report.to_pretty()).expect("write bench report");
+    println!("\nwrote {out}");
+}
+
+fn measure_interactive_summary(lats: Vec<f64>) -> Summary {
+    Summary::of(&lats).expect("non-empty latency sample")
+}

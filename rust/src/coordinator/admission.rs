@@ -7,16 +7,22 @@
 //! The [`Gate`] governs the *batched attention* path, where payload
 //! tokens proxy memory well. The continuous-batching generate path has
 //! a different binding resource — KV pool **blocks** — and delegates to
-//! the trie-aware policy in [`crate::sched::queue`] instead: prompts
-//! are priced per stripe against resident prefix blocks (read-only
-//! radix peek), free blocks and full-eviction headroom, then admitted,
-//! deferred (FIFO, re-priced each tick) or rejected outright when the
-//! cold prefill can never fit. The types are re-exported here so this
-//! module stays the single index of every admission policy; a request
-//! the scheduler queues is *not* double-charged against the `Gate` —
-//! its backpressure is `sched.queue.depth` plus the block pricing.
+//! the priority-class policy in [`crate::sched::queue`] instead:
+//! prompts are priced per stripe against resident prefix blocks
+//! (read-only radix peek), free blocks and the pool's O(1)
+//! evictability counter, then admitted, deferred (re-priced each tick
+//! in [`Priority`]-plus-aging order, with preemption-by-recompute of
+//! strictly lower classes under pressure) or rejected outright when
+//! the total footprint can never fit. The scheduler's queue is
+//! bounded like the `Gate`: overflow sheds with a terminal `Failed`.
+//! The types are re-exported here so this module stays the single
+//! index of every admission policy; a request the scheduler queues is
+//! *not* double-charged against the `Gate` — its backpressure is
+//! `sched.queue.depth` plus the block pricing.
 
-pub use crate::sched::queue::{price_admission as kv_price_admission, AdmissionPrice, AdmissionVerdict};
+pub use crate::sched::queue::{
+    price_admission as kv_price_admission, AdmissionPrice, AdmissionVerdict, Priority,
+};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -165,13 +171,16 @@ mod tests {
             max_blocks: 2,
             ..CacheConfig::new(1, 8)
         });
-        let p = kv_price_admission(&c, &[1, 2, 3, 4, 5], 0, 0);
+        let p = kv_price_admission(&c, &[1, 2, 3, 4, 5], 0);
         assert_eq!(p.cold_prefill, 2);
         assert_eq!(p.verdict(), AdmissionVerdict::Admit);
         assert_eq!(
-            kv_price_admission(&c, &(0..100).collect::<Vec<u32>>(), 0, 0).verdict(),
+            kv_price_admission(&c, &(0..100).collect::<Vec<u32>>(), 0).verdict(),
             AdmissionVerdict::Reject
         );
+        // priority classes ride the same re-export surface
+        assert_eq!(Priority::parse("interactive"), Some(Priority::Interactive));
+        assert!(Priority::Interactive > Priority::default());
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::attention::{multihead, AttnConfig, Variant};
 use crate::calib::{CalibrationArtifact, CalibrationPlan};
 use crate::kv::{CacheConfig, RadixKvCache};
 use crate::quant::{INT4_R, INT8_R};
-use crate::sched::{SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel};
+use crate::sched::{Priority, SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -692,14 +692,29 @@ impl Engine {
         Ok(())
     }
 
-    /// Submit a prompt for continuous-batched generation (requires
-    /// [`Engine::with_sched`]). Returns the request id and the event
-    /// stream: tokens arrive as scheduler ticks complete, terminated by
-    /// [`StreamEvent::Done`] or [`StreamEvent::Failed`].
+    /// Submit a prompt for continuous-batched generation at the
+    /// default priority class (requires [`Engine::with_sched`]).
+    /// Returns the request id and the event stream: tokens arrive as
+    /// scheduler ticks complete, terminated by [`StreamEvent::Done`]
+    /// or [`StreamEvent::Failed`].
     pub fn generate(
         &self,
         tokens: Vec<u32>,
         max_new: usize,
+    ) -> Result<(u64, Receiver<StreamEvent>), String> {
+        self.generate_with_priority(tokens, max_new, Priority::default())
+    }
+
+    /// [`Engine::generate`] with an explicit [`Priority`] class (the
+    /// server's `generate` verb maps its `priority` field here):
+    /// `Interactive` is admitted first and may preempt lower classes
+    /// under pool pressure; `BestEffort` is first to wait and first to
+    /// be preempted.
+    pub fn generate_with_priority(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        priority: Priority,
     ) -> Result<(u64, Receiver<StreamEvent>), String> {
         let sched = self.sched.as_ref().ok_or("scheduler not enabled")?;
         if tokens.is_empty() {
@@ -709,7 +724,7 @@ impl Engine {
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.metrics.counter("sched.submitted").inc();
-        Ok((id, sched.submit(id, tokens, max_new)))
+        Ok((id, sched.submit_with_priority(id, tokens, max_new, priority)))
     }
 
     /// Convenience: generate and block until the stream terminates,

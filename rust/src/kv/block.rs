@@ -33,10 +33,25 @@ pub struct Block {
 }
 
 /// Fixed-capacity refcounted block pool.
+///
+/// The pool also carries the *incremental evictability counter*: the
+/// radix trie marks the blocks it indexes ([`BlockPool::mark_indexed`] /
+/// [`BlockPool::unmark_indexed`]), and every refcount transition keeps
+/// `evictable` — the number of indexed blocks whose sole reference is
+/// the trie's — up to date in O(1). Admission pricing reads it through
+/// [`BlockPool::evictable_blocks`] instead of re-running the old
+/// O(trie nodes) scan per pricing; the scan survives as a test-only
+/// cross-check ([`crate::kv::RadixKvCache::evictable_blocks_scan`]).
 pub struct BlockPool {
     blocks: Vec<Arc<Block>>,
     refs: Vec<u32>,
     free: Vec<usize>,
+    /// Whether the radix trie indexes this slot (trie holds one ref).
+    indexed: Vec<bool>,
+    /// Indexed blocks with refcount exactly 1 — recoverable under full
+    /// trie eviction. Maintained incrementally at every refcount and
+    /// index transition.
+    evictable: usize,
 }
 
 impl BlockPool {
@@ -56,6 +71,8 @@ impl BlockPool {
             blocks,
             refs: vec![0; max_blocks],
             free: (0..max_blocks).rev().collect(),
+            indexed: vec![false; max_blocks],
+            evictable: 0,
         }
     }
 
@@ -81,6 +98,7 @@ impl BlockPool {
     pub fn alloc(&mut self) -> Option<usize> {
         let i = self.free.pop()?;
         debug_assert_eq!(self.refs[i], 0, "free-list block had references");
+        debug_assert!(!self.indexed[i], "free-list block still trie-marked");
         self.refs[i] = 1;
         Some(i)
     }
@@ -88,6 +106,10 @@ impl BlockPool {
     /// Add one reference (a sequence or the trie starts pointing at it).
     pub fn retain(&mut self, i: usize) {
         debug_assert!(self.refs[i] > 0, "retain of a free block");
+        if self.indexed[i] && self.refs[i] == 1 {
+            // trie-only block gains a live holder: no longer evictable
+            self.evictable -= 1;
+        }
         self.refs[i] += 1;
     }
 
@@ -97,11 +119,46 @@ impl BlockPool {
         debug_assert!(self.refs[i] > 0, "release of a free block");
         self.refs[i] -= 1;
         if self.refs[i] == 0 {
+            debug_assert!(!self.indexed[i], "freed block still trie-marked");
             self.free.push(i);
             true
         } else {
+            if self.refs[i] == 1 && self.indexed[i] {
+                // last live holder left: only the trie references it now
+                self.evictable += 1;
+            }
             false
         }
+    }
+
+    /// Mark `i` as trie-indexed (call right after the trie starts
+    /// holding a reference to it). Keeps the evictability counter
+    /// consistent: a block whose only reference is the trie's becomes
+    /// recoverable under eviction pressure.
+    pub fn mark_indexed(&mut self, i: usize) {
+        debug_assert!(self.refs[i] > 0, "indexing a free block");
+        debug_assert!(!self.indexed[i], "block indexed twice");
+        self.indexed[i] = true;
+        if self.refs[i] == 1 {
+            self.evictable += 1;
+        }
+    }
+
+    /// Clear the trie-index mark (call right before the trie drops its
+    /// reference on eviction).
+    pub fn unmark_indexed(&mut self, i: usize) {
+        debug_assert!(self.indexed[i], "unmark of a non-indexed block");
+        self.indexed[i] = false;
+        if self.refs[i] == 1 {
+            self.evictable -= 1;
+        }
+    }
+
+    /// Indexed blocks whose sole reference is the trie's — what full
+    /// LRU eviction could recover right now. O(1): maintained
+    /// incrementally on every retain/release/mark/unmark.
+    pub fn evictable_blocks(&self) -> usize {
+        self.evictable
     }
 
     /// Copy-on-write hand-out: a block the caller may write. Returns `i`
@@ -228,6 +285,45 @@ mod tests {
         pool.block_mut(b).k_codes[0] = -7; // forces the clone-for-writer path
         assert_eq!(pinned.k_codes[0], 42, "reader snapshot intact");
         assert_eq!(pool.block(b).k_codes[0], -7);
+    }
+
+    #[test]
+    fn evictability_counter_tracks_every_transition() {
+        let mut pool = BlockPool::new(3, 4, 1);
+        assert_eq!(pool.evictable_blocks(), 0);
+        let a = pool.alloc().unwrap(); // seq holds it
+        assert_eq!(pool.evictable_blocks(), 0, "unindexed blocks never count");
+        // trie indexes it while the sequence still holds it: refs 2
+        pool.retain(a);
+        pool.mark_indexed(a);
+        assert_eq!(pool.evictable_blocks(), 0, "live holder pins it");
+        // sequence retires: trie-only → evictable
+        pool.release(a);
+        assert_eq!(pool.evictable_blocks(), 1);
+        // a prefix hit retains it again: not evictable while shared
+        pool.retain(a);
+        assert_eq!(pool.evictable_blocks(), 0);
+        pool.release(a);
+        assert_eq!(pool.evictable_blocks(), 1);
+        // eviction: unmark then release frees the slot
+        pool.unmark_indexed(a);
+        assert_eq!(pool.evictable_blocks(), 0);
+        assert!(pool.release(a));
+        assert_eq!(pool.free_len(), 3);
+    }
+
+    #[test]
+    fn cow_release_feeds_the_evictability_counter() {
+        // a fork COW releases the shared source block; when the other
+        // holder is the trie alone, the source becomes evictable
+        let mut pool = BlockPool::new(2, 4, 1);
+        let a = pool.alloc().unwrap(); // writer's ref
+        pool.retain(a);
+        pool.mark_indexed(a); // trie's ref: refs 2, indexed
+        assert_eq!(pool.evictable_blocks(), 0);
+        let b = pool.cow(a).unwrap(); // writer moves to a private copy
+        assert_ne!(b, a);
+        assert_eq!(pool.evictable_blocks(), 1, "source is trie-only now");
     }
 
     #[test]

@@ -233,6 +233,7 @@ impl RadixKvCache {
                 token_ids: Some(tokens[..cached].to_vec()),
             },
         );
+        self.debug_check_evictable();
         (id, cached)
     }
 
@@ -252,6 +253,7 @@ impl RadixKvCache {
         let nid = self.next_id;
         self.next_id += 1;
         self.seqs.insert(nid, forked);
+        self.debug_check_evictable();
         Ok(nid)
     }
 
@@ -262,6 +264,7 @@ impl RadixKvCache {
         for b in seq.blocks {
             self.pool.release(b);
         }
+        self.debug_check_evictable();
         Ok(())
     }
 
@@ -292,9 +295,32 @@ impl RadixKvCache {
     }
 
     /// Blocks recoverable under *full* trie eviction (beyond the free
-    /// list): indexed blocks no live sequence references.
+    /// list): indexed blocks no live sequence references. O(1) — the
+    /// pool maintains the count incrementally at every retain /
+    /// release / trie-insert / eviction, so admission pricing under
+    /// pool pressure no longer scans the trie.
     pub fn evictable_blocks(&self) -> usize {
+        self.pool.evictable_blocks()
+    }
+
+    /// Test-only cross-check: the original O(trie nodes) evictability
+    /// scan. Property tests assert it equals [`RadixKvCache::evictable_blocks`]
+    /// after arbitrary mutation interleavings; serving code must use
+    /// the flat counter instead.
+    #[doc(hidden)]
+    pub fn evictable_blocks_scan(&self) -> usize {
         self.trie.evictable_blocks(&self.pool)
+    }
+
+    /// Debug-build invariant: the incremental evictability counter
+    /// equals the full scan. Called at every mutation site; compiles
+    /// to nothing in release builds.
+    fn debug_check_evictable(&self) {
+        debug_assert_eq!(
+            self.pool.evictable_blocks(),
+            self.trie.evictable_blocks(&self.pool),
+            "incremental evictability counter diverged from the full scan"
+        );
     }
 
     /// Cache bytes used by one token across all heads (codes + scales).
@@ -378,9 +404,11 @@ impl RadixKvCache {
                 let prefix = &ids[..seq.len_tokens];
                 if self.trie.insert(prefix, bt, target) {
                     self.pool.retain(target);
+                    self.pool.mark_indexed(target);
                 }
             }
         }
+        self.debug_check_evictable();
         Ok(())
     }
 
@@ -394,8 +422,10 @@ impl RadixKvCache {
             }
             match self.trie.evict_lru(&self.pool) {
                 Some(freed) => {
+                    self.pool.unmark_indexed(freed);
                     self.pool.release(freed);
                     self.stats.evictions += 1;
+                    self.debug_check_evictable();
                 }
                 None => return Err(CacheError::OutOfBlocks),
             }
@@ -410,8 +440,10 @@ impl RadixKvCache {
             }
             match self.trie.evict_lru(&self.pool) {
                 Some(freed) => {
+                    self.pool.unmark_indexed(freed);
                     self.pool.release(freed);
                     self.stats.evictions += 1;
+                    self.debug_check_evictable();
                 }
                 None => return Err(CacheError::OutOfBlocks),
             }
@@ -626,6 +658,41 @@ mod tests {
         assert_eq!(before, after, "COW must isolate the parent");
         assert_eq!(pool.seq_len(a), Some(3));
         assert_eq!(pool.seq_len(b), Some(4));
+    }
+
+    #[test]
+    fn evictable_counter_matches_scan_under_churn() {
+        // shared prefixes, frees and eviction churn: the flat counter
+        // must equal the O(nodes) scan at every step (debug builds also
+        // assert this inside every mutation; this pins it in the API)
+        let mut pool = RadixKvCache::new(CacheConfig {
+            block_tokens: 4,
+            max_blocks: 8,
+            ..CacheConfig::new(1, 8)
+        });
+        let mut rng = Pcg64::seeded(11);
+        let mut live = Vec::new();
+        for round in 0..6u32 {
+            let family = (round % 2) * 100;
+            let tokens: Vec<u32> = (0..6 + round).map(|i| family + i).collect();
+            let (id, cached) = pool.start_sequence(&tokens);
+            for &t in &tokens[cached..] {
+                if pool.append_token(id, t, &rng.normal_vec(8), &rng.normal_vec(8)).is_err() {
+                    break;
+                }
+            }
+            live.push(id);
+            assert_eq!(pool.evictable_blocks(), pool.evictable_blocks_scan());
+            if round % 2 == 1 {
+                pool.free_sequence(live.remove(0)).unwrap();
+                assert_eq!(pool.evictable_blocks(), pool.evictable_blocks_scan());
+            }
+        }
+        for id in live {
+            pool.free_sequence(id).unwrap();
+        }
+        assert_eq!(pool.evictable_blocks(), pool.evictable_blocks_scan());
+        assert!(pool.evictable_blocks() > 0, "retired prefixes stay trie-resident");
     }
 
     #[test]

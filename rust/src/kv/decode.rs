@@ -275,24 +275,34 @@ impl DecodeView {
 }
 
 /// Batched multi-sequence decode: run every `(view, query)` pair inside
-/// one thread scope, parallel *across sequences* (each sequence decodes
-/// sequentially — cross-sequence parallelism is the continuous-batching
-/// axis; split-K within a sequence is for the single-stream case).
-/// `workers` bounds the thread fan-out. Outputs come back in input
+/// one thread scope, parallel *across sequences* (cross-sequence
+/// parallelism is the continuous-batching axis). `workers` bounds the
+/// total thread fan-out. When the batch is smaller than the worker
+/// budget — the low-concurrency long-context tick — the surplus is
+/// redistributed *within* sequences: each view may split-K up to
+/// `workers / items` ways (gated by [`DecodeView::suggested_splitk`],
+/// so short sequences don't pay thread spawns), instead of pinning
+/// per-view split-K at 1 and idling cores. Outputs come back in input
 /// order and are bit-identical to calling
-/// [`DecodeView::decode_splitk`] per view, because they *are* that call.
-/// Queries are anything slice-shaped (`Vec<f32>` or `&[f32]`), so the
-/// per-tick caller can borrow instead of copying.
+/// [`DecodeView::decode_splitk`] per view for *any* worker count,
+/// because the exact `(m, l, acc)` merge makes split-K itself
+/// bit-identical. Queries are anything slice-shaped (`Vec<f32>` or
+/// `&[f32]`), so the per-tick caller can borrow instead of copying.
 pub fn decode_views<Q: AsRef<[f32]> + Sync>(
     items: &[(DecodeView, Q)],
     sm_scale: Option<f32>,
     workers: usize,
 ) -> Vec<Result<Vec<f32>, CacheError>> {
     let w = workers.clamp(1, items.len().max(1));
+    // idle-worker budget per sequence (1 when the batch saturates the
+    // worker count — the high-concurrency steady state)
+    let per_view = (workers / items.len().max(1)).max(1);
     if w == 1 || items.len() <= 1 {
         return items
             .iter()
-            .map(|(v, q)| v.decode_splitk(q.as_ref(), sm_scale, 1))
+            .map(|(v, q)| {
+                v.decode_splitk(q.as_ref(), sm_scale, v.suggested_splitk(per_view))
+            })
             .collect();
     }
     // strided assignment: worker j takes items j, j+w, j+2w, ...
@@ -306,7 +316,9 @@ pub fn decode_views<Q: AsRef<[f32]> + Sync>(
                         .enumerate()
                         .skip(j)
                         .step_by(w)
-                        .map(|(i, (v, q))| (i, v.decode_splitk(q.as_ref(), sm_scale, 1)))
+                        .map(|(i, (v, q))| {
+                            (i, v.decode_splitk(q.as_ref(), sm_scale, v.suggested_splitk(per_view)))
+                        })
                         .collect()
                 })
             })
@@ -463,6 +475,35 @@ mod tests {
                 assert_eq!(o.as_ref().unwrap(), g, "workers={workers}");
             }
         }
+    }
+
+    #[test]
+    fn decode_views_redistributes_idle_workers_bit_identically() {
+        // batch smaller than the worker budget: surplus workers split
+        // within the (long) sequences; outputs must stay bit-identical
+        // to the sequential per-view baseline
+        let mut items = Vec::new();
+        let mut gold = Vec::new();
+        let mut caches = Vec::new();
+        for seed in 0..2u64 {
+            // 100+ tokens = 13+ blocks, enough for suggested_splitk > 1
+            let (cache, id, q) = filled_cache(seed + 20, 2, 16, 100 + 31 * seed as usize);
+            gold.push(cache.decode_attention(id, &q, None).unwrap());
+            caches.push((cache, id, q));
+        }
+        for (cache, id, q) in &caches {
+            items.push((cache.decode_view(*id).unwrap(), q.clone()));
+        }
+        for workers in [4usize, 8, 16] {
+            assert!(workers > items.len(), "bench the redistribution regime");
+            let outs = decode_views(&items, None, workers);
+            for (o, g) in outs.iter().zip(&gold) {
+                assert_eq!(o.as_ref().unwrap(), g, "workers={workers}");
+            }
+        }
+        // single-item batch gets the whole budget
+        let outs = decode_views(&items[..1], None, 8);
+        assert_eq!(outs[0].as_ref().unwrap(), &gold[0]);
     }
 
     #[test]

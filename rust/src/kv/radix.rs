@@ -170,8 +170,10 @@ impl RadixIndex {
     /// Blocks the trie could hand back under *full* eviction pressure:
     /// every indexed block whose pool refcount is exactly 1 (the trie's
     /// own reference). Interior nodes count too — cascaded leaf eviction
-    /// reaches them once their children go. O(live nodes); used by
-    /// admission pricing (per request, not per token).
+    /// reaches them once their children go. O(live nodes) — the serving
+    /// path uses the pool's incremental counter
+    /// ([`BlockPool::evictable_blocks`]) instead; this scan remains as
+    /// the property-test cross-check of that counter.
     pub fn evictable_blocks(&self, pool: &BlockPool) -> usize {
         self.nodes
             .iter()

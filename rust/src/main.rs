@@ -39,7 +39,7 @@ USAGE:
                    [--no-kv] [--kv-blocks N] [--kv-block-tokens N] [--kv-split-k N]
                    [--no-sched] [--sched-stripes N] [--sched-tick-us N]
                    [--sched-max-inflight N] [--sched-prefill-chunk N]
-                   [--sched-workers N]
+                   [--sched-workers N] [--sched-queue-cap N] [--sched-aging-ticks N]
                      --sched-stripes      KV pool stripes (independent locks), default 4
                      --sched-tick-us      idle-tick wait for new work in µs, default 500
                                           (in-flight decodes never wait; this bounds
@@ -48,7 +48,17 @@ USAGE:
                      --sched-prefill-chunk prompt tokens appended per seq per tick,
                                           default 64
                      --sched-workers      thread fan-out of the batched decode, default 4
+                     --sched-queue-cap    admission queue depth cap, default 1024
+                                          (overflow is shed with a terminal Failed
+                                          line instead of queueing without bound)
+                     --sched-aging-ticks  ticks per one-class aging promotion of a
+                                          queued request, default 256 (the starvation
+                                          bound for deferred admissions)
                      --no-sched           disable the continuous-batching generate verb
+                     generate requests may carry \"priority\":
+                     interactive | batch (default) | best-effort — interactive
+                     admits first and may preempt lower classes under pool
+                     pressure (preempted sequences replay bit-identically)
   intfa client     [--addr HOST:PORT] [--requests N] [--concurrency C]
                    [--heads H] [--seq N] [--head-dim D] [--accuracy fast|balanced|exact]
   intfa calibrate  [--out FILE] [--heads H] [--head-dim D] [--batches N]
@@ -186,14 +196,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     max_inflight: args.get_usize("sched-max-inflight", 32)?,
                     prefill_chunk: args.get_usize("sched-prefill-chunk", 64)?,
                     batch_workers: args.get_usize("sched-workers", 4)?,
+                    queue_cap: args.get_usize("sched-queue-cap", 1024)?,
+                    aging_ticks: args.get_u64("sched-aging-ticks", 256)?,
                     ..int_flashattention::sched::SchedConfig::default()
                 };
                 log_info!(
-                    "sched: tick {}µs, max in-flight {}, prefill chunk {}, {} workers",
+                    "sched: tick {}µs, max in-flight {}, prefill chunk {}, {} workers, \
+                     queue cap {}, aging {} ticks/class",
                     sched_cfg.tick_budget.as_micros(),
                     sched_cfg.max_inflight,
                     sched_cfg.prefill_chunk,
-                    sched_cfg.batch_workers
+                    sched_cfg.batch_workers,
+                    sched_cfg.queue_cap,
+                    sched_cfg.aging_ticks
                 );
                 let model = Arc::new(int_flashattention::sched::HashModel::new(
                     heads, head_dim,

@@ -1,16 +1,29 @@
 //! The continuous-batching tick loop: iteration-level scheduling of
-//! prefill chunks and decode steps with streaming token delivery.
+//! prefill chunks and decode steps with streaming token delivery,
+//! priority-class admission and preemption-by-recompute.
 //!
 //! One scheduler thread owns the in-flight set. Each tick it
 //!
-//!   1. drains newly submitted prompts into the admission queue and
-//!      admits from the front under the trie-aware block pricing
-//!      ([`crate::sched::queue`]) and the `max_inflight` cap — FIFO,
-//!      no overtaking: a deferred head blocks later arrivals so a big
-//!      prompt cannot starve behind a stream of small ones;
+//!   1. drains newly submitted prompts into the bounded
+//!      [`AdmissionQueue`] (overflow is shed with
+//!      [`StreamEvent::Failed`] — the queue never grows without bound
+//!      while a head defers) and admits in *effective-priority order*
+//!      under the trie-aware block pricing
+//!      ([`crate::sched::queue`]) and the `max_inflight` cap.
+//!      Deferred entries no longer block admissible ones behind them:
+//!      a deferred request bars only strictly lower *effective ranks*
+//!      from its stripe, and the aging term promotes every waiting
+//!      entry one rank per `aging_ticks` — once an entry ages past
+//!      every class it bars the whole stripe, so nothing starves in
+//!      either direction. A deferred candidate that outranks live
+//!      sequences
+//!      may *preempt*: the tick loop frees the lowest-priority live
+//!      sequence's blocks and requeues its prompt + generated tail for
+//!      replay (see Preemption below);
 //!   2. advances prefill: every sequence with unappended tokens
-//!      (prompt chunks, or a generated token whose append hit pool
-//!      pressure last tick) appends up to `prefill_chunk` rows;
+//!      (prompt chunks, a replayed history, or a generated token whose
+//!      append hit pool pressure last tick) appends up to
+//!      `prefill_chunk` rows;
 //!   3. folds **all** in-flight decode steps into one batched INT8
 //!      attention call ([`StripedKvCache::decode_batch`]: per-stripe
 //!      lock for the view pins, then one lock-free thread scope across
@@ -23,25 +36,55 @@
 //! resident for future hits); a sequence stalled on pool pressure for
 //! `stall_ticks` consecutive ticks fails instead of wedging the tick.
 //!
+//! # Preemption by recompute
+//!
+//! Under pool pressure a deferred candidate of class C may evict live
+//! sequences of *strictly lower* class on its stripe (lowest class
+//! first, most recently admitted first), but only while feasibility —
+//! remaining victims' blocks plus surviving headroom covering the
+//! cold demand — holds, re-checked before every eviction: evicting
+//! past the point where admission is reachable would churn replays
+//! without unblocking anyone. Under *slot* pressure (in-flight set
+//! full) the lowest-class victim anywhere loses its slot, but only
+//! after pricing says the candidate will actually run — never
+//! speculatively. A victim's blocks are freed and its full history
+//! (prompt + generated tail) is requeued cap-exempt under its own
+//! class with its aging credit carried over; on re-admission the
+//! history replays through the deterministic [`TokenModel`] seam —
+//! identical `(token, pos)` pairs quantize to identical block codes,
+//! so the resumed decode, and therefore the rest of the token stream,
+//! is bit-identical to an uninterrupted run. Already-streamed tokens
+//! are never re-streamed (they ride along in the requeued entry).
+//! Starvation of preempted work is bounded twice over: the strict
+//! class rule keeps preemption acyclic (a victim can never preempt
+//! its preemptor back), and a sequence whose carried wait has aged
+//! past every class becomes exempt from further preemption.
+//!
 //! # Exactness
 //!
 //! The tick loop never changes per-sequence numerics: step t of a
 //! sequence decodes over exactly the blocks a sequential
 //! `decode`/`extend` loop would have resident at step t, with the same
-//! query, through the same [`crate::kv::DecodeView`] math. Batching
-//! only changes *when* steps run, so per-sequence token streams are
-//! bit-identical to K independent per-call loops (property-tested in
-//! `tests/sched_integration.rs`).
+//! query, through the same [`crate::kv::DecodeView`] math — including
+//! across a preempt/replay cycle, whose rebuilt blocks are a
+//! deterministic function of the token prefix. Batching and
+//! preemption only change *when* steps run, so per-sequence token
+//! streams are bit-identical to K independent per-call loops
+//! (property-tested in `tests/sched_integration.rs`).
 
 use super::model::TokenModel;
-use super::queue::AdmissionVerdict;
+use super::queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority};
 use super::stripe::StripedKvCache;
-use crate::coordinator::metrics::Registry;
+use crate::coordinator::metrics::{Counter, Registry};
 use crate::kv::CacheError;
-use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Queued entries priced per tick. Bounds admission work when the
+/// queue is deep; entries beyond the budget simply age one more tick
+/// (they are scanned first next tick once their rank rises).
+const ADMIT_SCAN_BUDGET: usize = 128;
 
 /// Tick-loop configuration (`intfa serve --sched-*`).
 #[derive(Clone, Debug)]
@@ -61,6 +104,13 @@ pub struct SchedConfig {
     /// it fails (prevents a wedged sequence from holding its blocks
     /// forever).
     pub stall_ticks: usize,
+    /// Admission queue depth cap: submissions beyond it are shed with
+    /// [`StreamEvent::Failed`] instead of queueing without bound
+    /// (`--sched-queue-cap`).
+    pub queue_cap: usize,
+    /// Ticks per one-class aging promotion of a queued entry
+    /// (`--sched-aging-ticks`); the starvation bound.
+    pub aging_ticks: u64,
 }
 
 impl Default for SchedConfig {
@@ -71,6 +121,8 @@ impl Default for SchedConfig {
             prefill_chunk: 64,
             batch_workers: 4,
             stall_ticks: 512,
+            queue_cap: 1024,
+            aging_ticks: 256,
         }
     }
 }
@@ -83,7 +135,8 @@ pub enum StreamEvent {
     Token { id: u64, pos: usize, token: u32 },
     /// Generation finished; `tokens` is the full generated tail.
     Done { id: u64, tokens: Vec<u32> },
-    /// Admission rejected the prompt, or the sequence failed mid-stream.
+    /// Admission rejected or shed the prompt, or the sequence failed
+    /// mid-stream.
     Failed { id: u64, reason: String },
 }
 
@@ -91,12 +144,27 @@ struct Submit {
     id: u64,
     tokens: Vec<u32>,
     max_new: usize,
+    class: Priority,
     stream: Sender<StreamEvent>,
 }
 
 enum Cmd {
     Submit(Submit),
     Shutdown,
+}
+
+/// One queued (or preempted-and-requeued) generation.
+struct Pending {
+    id: u64,
+    /// Prompt tokens; for a preemption requeue, prompt + generated
+    /// tail — the full history the replay rebuilds.
+    tokens: Vec<u32>,
+    /// Total generation budget (`generated.len()` counts toward it).
+    max_new: usize,
+    /// Tokens generated and streamed before a preemption (empty for
+    /// fresh submissions); never re-streamed.
+    generated: Vec<u32>,
+    stream: Sender<StreamEvent>,
 }
 
 /// One in-flight generation.
@@ -107,12 +175,22 @@ struct Active {
     /// Prompt + generated tokens.
     tokens: Vec<u32>,
     /// Tokens whose K/V is resident; `< tokens.len()` while prefilling
-    /// or after a pressure-deferred append.
+    /// (or replaying) or after a pressure-deferred append.
     appended: usize,
     max_new: usize,
     generated: Vec<u32>,
     stream: Sender<StreamEvent>,
     stalled: usize,
+    /// Priority class (preemption eligibility: strictly lower classes
+    /// only).
+    class: Priority,
+    /// Admission stamp — preemption evicts the most recent victim
+    /// first (least sunk work lost).
+    admitted_at: u64,
+    /// Queue ticks this request had waited when admitted (accumulated
+    /// across preempt cycles); once past the aging barrier the
+    /// sequence is exempt from further preemption.
+    waited_carry: u64,
 }
 
 /// Handle on the tick loop. Dropping it shuts the loop down (pending
@@ -139,12 +217,24 @@ impl Scheduler {
         Scheduler { tx, join: Some(join) }
     }
 
-    /// Submit a prompt for continuous-batched generation. Tokens arrive
-    /// on the returned receiver as their ticks complete; the stream
-    /// ends with [`StreamEvent::Done`] or [`StreamEvent::Failed`].
+    /// Submit a prompt for continuous-batched generation at the
+    /// default priority class. Tokens arrive on the returned receiver
+    /// as their ticks complete; the stream ends with
+    /// [`StreamEvent::Done`] or [`StreamEvent::Failed`].
     pub fn submit(&self, id: u64, tokens: Vec<u32>, max_new: usize) -> Receiver<StreamEvent> {
+        self.submit_with_priority(id, tokens, max_new, Priority::default())
+    }
+
+    /// [`Scheduler::submit`] with an explicit [`Priority`] class.
+    pub fn submit_with_priority(
+        &self,
+        id: u64,
+        tokens: Vec<u32>,
+        max_new: usize,
+        class: Priority,
+    ) -> Receiver<StreamEvent> {
         let (stx, srx) = mpsc::channel();
-        let sub = Submit { id, tokens, max_new, stream: stx.clone() };
+        let sub = Submit { id, tokens, max_new, class, stream: stx.clone() };
         if self.tx.send(Cmd::Submit(sub)).is_err() {
             let _ = stx.send(StreamEvent::Failed {
                 id,
@@ -164,6 +254,25 @@ impl Drop for Scheduler {
     }
 }
 
+/// Enqueue a submission, shedding with `Failed` when the depth cap is
+/// hit (the bounded-queue half of admission control).
+fn enqueue(queue: &mut AdmissionQueue<Pending>, s: Submit, shed: &Counter, cap: usize) {
+    let pending = Pending {
+        id: s.id,
+        tokens: s.tokens,
+        max_new: s.max_new,
+        generated: Vec::new(),
+        stream: s.stream,
+    };
+    if let Err(p) = queue.push(pending, s.class) {
+        shed.inc();
+        let _ = p.stream.send(StreamEvent::Failed {
+            id: p.id,
+            reason: format!("admission queue full ({cap} queued)"),
+        });
+    }
+}
+
 fn tick_loop(
     rx: Receiver<Cmd>,
     cache: Arc<StripedKvCache>,
@@ -171,13 +280,17 @@ fn tick_loop(
     cfg: SchedConfig,
     metrics: Arc<Registry>,
 ) {
-    let mut queue: VecDeque<Submit> = VecDeque::new();
+    let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(cfg.queue_cap, cfg.aging_ticks);
     let mut active: Vec<Active> = Vec::new();
+    let mut admit_stamp: u64 = 0;
     let ticks = metrics.counter("sched.ticks");
     let tokens_out = metrics.counter("sched.tokens");
     let admitted = metrics.counter("sched.admitted");
     let deferred = metrics.counter("sched.admission.deferred");
     let rejected = metrics.counter("sched.admission.rejected");
+    let shed = metrics.counter("sched.admission.shed");
+    let preemptions = metrics.counter("sched.preemptions");
+    let preempt_tokens = metrics.counter("sched.preempt.evicted_tokens");
     let batch_size = metrics.histogram("sched.tick.batch_size");
     let tick_us = metrics.histogram("sched.tick.us");
     let queue_depth = metrics.gauge("sched.queue.depth");
@@ -194,13 +307,13 @@ fn tick_loop(
         // ---- wait for / drain commands --------------------------------
         // busy while decodes are in flight; patient otherwise. With no
         // active sequences nothing this loop does can free blocks, so a
-        // deferred head is re-priced at the slow idle rate (external
+        // deferred entry is re-priced at the slow idle rate (external
         // kv_release / new submissions wake it) rather than every
-        // tick_budget — admission pricing scans the trie under the
-        // stripe lock and must not spin at kHz against an idle pool.
+        // tick_budget — admission pricing takes the stripe lock and
+        // must not spin at kHz against an idle pool.
         if active.is_empty() {
             match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(Cmd::Submit(s)) => queue.push_back(s),
+                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &shed, cfg.queue_cap),
                 Ok(Cmd::Shutdown) => shutdown = true,
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
@@ -208,7 +321,7 @@ fn tick_loop(
         }
         loop {
             match rx.try_recv() {
-                Ok(Cmd::Submit(s)) => queue.push_back(s),
+                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &shed, cfg.queue_cap),
                 Ok(Cmd::Shutdown) => shutdown = true,
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -220,9 +333,9 @@ fn tick_loop(
         if shutdown {
             // fail everything still pending and stop: streaming callers
             // see a terminal event rather than a hung receiver
-            for s in queue.drain(..) {
-                let _ = s.stream.send(StreamEvent::Failed {
-                    id: s.id,
+            for e in queue.drain_all() {
+                let _ = e.item.stream.send(StreamEvent::Failed {
+                    id: e.item.id,
                     reason: "scheduler shut down".into(),
                 });
             }
@@ -243,17 +356,58 @@ fn tick_loop(
         ticks.inc();
         let mut progressed = false;
 
-        // ---- 1. admission (FIFO, trie-aware block pricing) ------------
-        while active.len() < cfg.max_inflight {
-            let Some(head) = queue.front() else { break };
-            if head.tokens.is_empty() {
-                let s = queue.pop_front().unwrap();
+        // ---- 1. admission: priority order, aging, preemption ----------
+        queue.age_tick();
+        // per-stripe class bar: a deferred entry claims its stripe's
+        // next headroom against strictly lower classes (and against
+        // everything once it has aged to the barrier). This is also
+        // what makes preemption converge: requeued victims cannot slip
+        // back in under the candidate that evicted them.
+        let mut bar = vec![0u64; cache.stripes()];
+        let mut scanned = 0usize;
+        for key in queue.order() {
+            // every iterated entry counts against the budget (skips
+            // included) so deep queues cannot make a tick O(n²);
+            // entries past the budget age and rise in next tick's order
+            scanned += 1;
+            if scanned > ADMIT_SCAN_BUDGET {
+                break;
+            }
+            let (class, remaining, stripe, is_empty, waited) = {
+                let e = queue.get(key).expect("ordered key is live");
+                (
+                    e.class,
+                    e.item.max_new.saturating_sub(e.item.generated.len()),
+                    cache.route(&e.item.tokens),
+                    e.item.tokens.is_empty(),
+                    e.waited,
+                )
+            };
+            let eff = class.effective_rank(waited, cfg.aging_ticks);
+            if is_empty {
+                let e = queue.remove(key).expect("ordered key is live");
                 rejected.inc();
-                let _ = s.stream.send(StreamEvent::Failed {
-                    id: s.id,
+                let _ = e.item.stream.send(StreamEvent::Failed {
+                    id: e.item.id,
                     reason: "empty prompt".into(),
                 });
                 continue;
+            }
+            // the bar compares *effective* rank, the same currency the
+            // scan is ordered by: an aged entry is never parked behind
+            // a deferred entry it outranks
+            if eff < bar[stripe] {
+                continue; // an outranking deferred entry owns this headroom
+            }
+            // slot pressure: when the in-flight set is full, a
+            // candidate may only proceed if a strictly lower-class,
+            // non-exempt victim exists to take a slot from — and the
+            // eviction itself happens only after pricing says Admit,
+            // never speculatively
+            let needs_slot = active.len() >= cfg.max_inflight;
+            if needs_slot && pick_victim(&cache, &active, class, None, cfg.aging_ticks).is_none()
+            {
+                continue; // wait for retirements
             }
             // blocks already promised to admitted-but-still-growing
             // sequences on the same stripe: the raw price sees only
@@ -261,42 +415,117 @@ fn tick_loop(
             // prompts can be admitted into headroom that exists once —
             // and then deadlock mid-append, each holding blocks the
             // others need
-            let stripe = cache.route(&head.tokens);
-            let reserved = reserved_blocks(&cache, &active, stripe, block_tokens);
-            let price = cache.price_admission(&head.tokens, head.max_new, reserved);
-            let verdict = if price.verdict() == AdmissionVerdict::Reject {
-                AdmissionVerdict::Reject
-            } else if price.cold + reserved > price.headroom() {
-                AdmissionVerdict::Defer
-            } else {
-                AdmissionVerdict::Admit
+            let mut reserved = reserved_blocks(&cache, &active, stripe, block_tokens);
+            let mut price = {
+                let e = queue.get(key).expect("ordered key is live");
+                cache.price_admission(&e.item.tokens, remaining)
             };
+            let mut verdict = shade_verdict(&price, reserved);
+            while verdict == AdmissionVerdict::Defer {
+                // preemption-by-recompute: evict strictly lower-class
+                // live sequences on this stripe — but only while the
+                // remaining victims' blocks plus surviving headroom
+                // can still cover the cold demand (re-checked before
+                // every eviction: the per-victim block estimate
+                // overcounts blocks shared with survivors, so evicting
+                // past the point where admission is reachable would
+                // churn replays without unblocking anyone)
+                let Some(vi) =
+                    pick_victim(&cache, &active, class, Some(stripe), cfg.aging_ticks)
+                else {
+                    break;
+                };
+                let freeable: usize = active
+                    .iter()
+                    .filter(|a| {
+                        preemptible(a, class, cfg.aging_ticks)
+                            && cache.stripe_of_seq(a.seq) == stripe
+                    })
+                    .map(|a| a.appended.div_ceil(block_tokens))
+                    .sum();
+                let survivors: usize = active
+                    .iter()
+                    .filter(|a| {
+                        cache.stripe_of_seq(a.seq) == stripe
+                            && !preemptible(a, class, cfg.aging_ticks)
+                    })
+                    .map(|a| planned_shortfall(a, block_tokens))
+                    .sum();
+                if price.cold + survivors > price.headroom() + freeable {
+                    break;
+                }
+                // slack = what the stripe can still hand out beyond its
+                // outstanding promises; an eviction that fails to grow
+                // it recovered nothing (the victim's blocks were all
+                // shared), so the estimate is wrong — stop churning
+                let slack_before = price.headroom() as i64 - reserved as i64;
+                preempt(&cache, &mut active, vi, &mut queue, &preemptions, &preempt_tokens);
+                reserved = reserved_blocks(&cache, &active, stripe, block_tokens);
+                price = {
+                    let e = queue.get(key).expect("candidate still queued");
+                    cache.price_admission(&e.item.tokens, remaining)
+                };
+                verdict = shade_verdict(&price, reserved);
+                if verdict == AdmissionVerdict::Defer
+                    && price.headroom() as i64 - reserved as i64 <= slack_before
+                {
+                    break;
+                }
+            }
             match verdict {
                 AdmissionVerdict::Admit => {
-                    let s = queue.pop_front().unwrap();
-                    let (seq, cached) = cache.start_sequence(&s.tokens);
+                    // the block-pressure loop may already have freed a
+                    // slot; otherwise take one from the lowest class
+                    // now that the candidate is guaranteed to run
+                    if active.len() >= cfg.max_inflight {
+                        match pick_victim(&cache, &active, class, None, cfg.aging_ticks) {
+                            Some(vi) => preempt(
+                                &cache,
+                                &mut active,
+                                vi,
+                                &mut queue,
+                                &preemptions,
+                                &preempt_tokens,
+                            ),
+                            None => {
+                                deferred.inc();
+                                continue;
+                            }
+                        }
+                    }
+                    let e = queue.remove(key).expect("ordered key is live");
+                    let (seq, cached) = cache.start_sequence(&e.item.tokens);
                     admitted.inc();
                     progressed = true;
+                    admit_stamp += 1;
                     active.push(Active {
-                        id: s.id,
+                        id: e.item.id,
                         seq,
-                        tokens: s.tokens,
+                        tokens: e.item.tokens,
                         appended: cached,
-                        max_new: s.max_new,
-                        generated: Vec::new(),
-                        stream: s.stream,
+                        max_new: e.item.max_new,
+                        generated: e.item.generated,
+                        stream: e.item.stream,
                         stalled: 0,
+                        class: e.class,
+                        admitted_at: admit_stamp,
+                        waited_carry: e.waited,
                     });
                 }
                 AdmissionVerdict::Defer => {
                     deferred.inc();
-                    break; // head-of-line: re-priced next tick
+                    // claim this stripe's next headroom against lower
+                    // *effective* ranks: equal-rank traffic may still
+                    // overtake (price-aware reordering), and once this
+                    // entry ages past every class its claim bars all
+                    // fresh arrivals (the starvation backstop)
+                    bar[stripe] = bar[stripe].max(eff);
                 }
                 AdmissionVerdict::Reject => {
-                    let s = queue.pop_front().unwrap();
+                    let e = queue.remove(key).expect("ordered key is live");
                     rejected.inc();
-                    let _ = s.stream.send(StreamEvent::Failed {
-                        id: s.id,
+                    let _ = e.item.stream.send(StreamEvent::Failed {
+                        id: e.item.id,
                         reason: format!(
                             "admission rejected: total footprint {} blocks \
                              (cached {} + cold {}, prefill alone {}), stripe \
@@ -435,11 +664,29 @@ fn tick_loop(
     }
 }
 
+/// Reservation-aware verdict: the raw price plus the caller's
+/// outstanding per-stripe reservations.
+fn shade_verdict(price: &AdmissionPrice, reserved: usize) -> AdmissionVerdict {
+    match price.verdict() {
+        AdmissionVerdict::Reject => AdmissionVerdict::Reject,
+        _ if price.cold + reserved > price.headroom() => AdmissionVerdict::Defer,
+        _ => AdmissionVerdict::Admit,
+    }
+}
+
+/// Planned blocks `a` will still allocate: peak footprint (prompt +
+/// generation budget; the final token is never appended — same rule as
+/// admission pricing) minus blocks currently held.
+fn planned_shortfall(a: &Active, block_tokens: usize) -> usize {
+    let prompt_len = a.tokens.len() - a.generated.len();
+    let resident = prompt_len + a.max_new.saturating_sub(1);
+    let planned = resident.div_ceil(block_tokens);
+    planned.saturating_sub(a.appended.div_ceil(block_tokens))
+}
+
 /// Blocks promised to in-flight sequences on `stripe` beyond what they
-/// have already allocated: planned footprint (prompt + generation
-/// budget; slightly conservative — the final token is never appended)
-/// minus blocks currently held. Admission adds this to a candidate's
-/// price so concurrent growth cannot oversubscribe the stripe.
+/// have already allocated. Admission adds this to a candidate's price
+/// so concurrent growth cannot oversubscribe the stripe.
 fn reserved_blocks(
     cache: &StripedKvCache,
     active: &[Active],
@@ -449,15 +696,71 @@ fn reserved_blocks(
     active
         .iter()
         .filter(|a| cache.stripe_of_seq(a.seq) == stripe)
-        .map(|a| {
-            let prompt_len = a.tokens.len() - a.generated.len();
-            // peak residency excludes the final generated token (it is
-            // emitted, never appended) — same rule as admission pricing
-            let resident = prompt_len + a.max_new.saturating_sub(1);
-            let planned = resident.div_ceil(block_tokens);
-            planned.saturating_sub(a.appended.div_ceil(block_tokens))
-        })
+        .map(|a| planned_shortfall(a, block_tokens))
         .sum()
+}
+
+/// Evict a live sequence's blocks and requeue its full history
+/// (prompt + generated tail, cap-exempt, under its own class, with its
+/// aging credit carried over) for bit-identical replay on re-admission
+/// — the preemption-by-recompute primitive shared by the slot- and
+/// block-pressure paths.
+fn preempt(
+    cache: &StripedKvCache,
+    active: &mut Vec<Active>,
+    victim: usize,
+    queue: &mut AdmissionQueue<Pending>,
+    preemptions: &Counter,
+    preempt_tokens: &Counter,
+) {
+    let v = active.remove(victim);
+    preemptions.inc();
+    preempt_tokens.add(v.appended as u64);
+    let _ = cache.free_sequence(v.seq);
+    queue.requeue(
+        Pending {
+            id: v.id,
+            tokens: v.tokens,
+            max_new: v.max_new,
+            generated: v.generated,
+            stream: v.stream,
+        },
+        v.class,
+        v.waited_carry,
+    );
+}
+
+/// The one preemption-eligibility rule: strictly lower class than the
+/// candidate (keeps preemption acyclic — a victim can never preempt
+/// its preemptor back), and not yet aged past every class on its
+/// carried wait ([`Priority::aged_past_all`] — the starvation bound
+/// holds across preempt cycles). Victim pickers and the feasibility
+/// arithmetic all go through this predicate so they cannot drift.
+fn preemptible(a: &Active, class: Priority, aging_ticks: u64) -> bool {
+    a.class < class && !a.class.aged_past_all(a.waited_carry, aging_ticks)
+}
+
+/// Preemption victim for a candidate of class `class`: among
+/// [`preemptible`] sequences — on one stripe for block pressure
+/// (`stripe: Some`), anywhere for slot pressure (in-flight slots are
+/// global) — lowest class first, most recently admitted first (least
+/// sunk work lost).
+fn pick_victim(
+    cache: &StripedKvCache,
+    active: &[Active],
+    class: Priority,
+    stripe: Option<usize>,
+    aging_ticks: u64,
+) -> Option<usize> {
+    active
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| {
+            preemptible(a, class, aging_ticks)
+                && stripe.map_or(true, |s| cache.stripe_of_seq(a.seq) == s)
+        })
+        .min_by_key(|(_, a)| (a.class, std::cmp::Reverse(a.admitted_at)))
+        .map(|(i, _)| i)
 }
 
 /// Retire the marked sequences: free their blocks (shared prefixes stay
@@ -612,5 +915,96 @@ mod tests {
         );
         let (tokens, err) = drain(sched.submit(3, vec![5, 6], 0));
         assert_eq!((tokens, err), (Vec::new(), None));
+    }
+
+    #[test]
+    fn queue_cap_sheds_overflow_with_failed() {
+        // max_inflight 1 parks everything behind a long-running
+        // blocker; the queue holds exactly queue_cap entries and sheds
+        // the rest with a terminal Failed — never unbounded growth
+        let metrics = Arc::new(Registry::default());
+        let sched = Scheduler::start(
+            pool(1024, 1),
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig { max_inflight: 1, queue_cap: 2, ..SchedConfig::default() },
+            metrics.clone(),
+        );
+        let blocker = sched.submit(1, vec![1, 2, 3], 4000);
+        // wait until the blocker is demonstrably admitted and streaming
+        match blocker.recv().expect("blocker streams") {
+            StreamEvent::Token { .. } => {}
+            other => panic!("expected a token, got {other:?}"),
+        }
+        let q1 = sched.submit(2, vec![10], 1);
+        let q2 = sched.submit(3, vec![11], 1);
+        let overflow = sched.submit(4, vec![12], 1);
+        let (tokens, err) = drain(overflow);
+        assert!(tokens.is_empty());
+        assert!(err.unwrap().contains("queue full"), "overflow sheds with a reason");
+        assert_eq!(metrics.counter("sched.admission.shed").get(), 1);
+        // the in-cap entries were queued, not shed (poll: the gauge is
+        // published at end-of-tick, just after the shed event)
+        let mut queued = false;
+        for _ in 0..200 {
+            if metrics.gauge("sched.queue.depth").get() == 2 {
+                queued = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(queued, "both in-cap entries remain queued behind the blocker");
+        drop(blocker);
+        drop((q1, q2));
+        drop(sched);
+    }
+
+    #[test]
+    fn interactive_overtakes_deferred_batch() {
+        // a long-running blocker leaves 55 of 256 blocks unreserved: a
+        // Batch request needing 60 defers for the blocker's whole run,
+        // while a *later, smaller* Interactive request (2 blocks) must
+        // be admitted past it — the pool math makes the ordering
+        // deterministic, not timing
+        let metrics = Arc::new(Registry::default());
+        let sched = Scheduler::start(
+            pool(256, 1),
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig::default(),
+            metrics.clone(),
+        );
+        // resident 4 + 800 = 804 tokens → 201 of 256 blocks planned
+        let blocker = sched.submit_with_priority(1, vec![1, 2, 3, 4], 801, Priority::Batch);
+        match blocker.recv().expect("blocker streams") {
+            StreamEvent::Token { .. } => {}
+            other => panic!("expected a token, got {other:?}"),
+        }
+        // resident 4 + 236 = 240 tokens → 60 blocks > 55 unreserved
+        let batch = sched.submit_with_priority(2, vec![10, 11, 12, 13], 237, Priority::Batch);
+        // resident 4 + 1 = 5 tokens → 2 blocks: fits the slack
+        let inter =
+            sched.submit_with_priority(3, vec![20, 21, 22, 23], 2, Priority::Interactive);
+        let (it, ierr) = drain(inter);
+        assert_eq!(ierr, None);
+        assert_eq!(it.len(), 2);
+        // the interactive stream finished while the earlier batch
+        // request was still deferred behind the blocker's reservation
+        assert_eq!(metrics.counter("sched.admitted").get(), 2, "blocker + interactive");
+        assert!(metrics.counter("sched.admission.deferred").get() >= 1);
+        // everything still completes once the blocker retires
+        let (bt, berr) = drain(batch);
+        assert_eq!(berr, None);
+        assert_eq!(bt.len(), 237);
+        // the blocker's first token was consumed above — drain the rest
+        loop {
+            match blocker.recv().expect("blocker stream open") {
+                StreamEvent::Token { .. } => {}
+                StreamEvent::Done { tokens, .. } => {
+                    assert_eq!(tokens.len(), 801);
+                    break;
+                }
+                StreamEvent::Failed { reason, .. } => panic!("blocker failed: {reason}"),
+            }
+        }
+        drop(sched);
     }
 }

@@ -14,14 +14,21 @@
 //!     prefix reuse while unrelated sequences stop contending on one
 //!     mutex. Lock acquisitions that had to wait are counted
 //!     (`sched.stripe.contention`).
-//!   - [`queue`]: trie-aware admission — an incoming prompt is priced
-//!     against its stripe (already-resident prefix blocks via the
-//!     read-only radix peek, free blocks, blocks recoverable under full
-//!     eviction) and admitted, deferred, or rejected *before* it can
-//!     wedge the pool ([`queue::AdmissionPrice`]).
-//!   - [`loop_`]: the scheduler itself — each tick drains the admission
-//!     queue, advances in-flight prefill chunks, folds every in-flight
-//!     decode step into **one batched INT8 attention call**
+//!   - [`queue`]: priority-class admission — an incoming prompt is
+//!     priced against its stripe (already-resident prefix blocks via
+//!     the read-only radix peek, free blocks, and the pool's O(1)
+//!     incremental evictability counter) and admitted, deferred, or
+//!     rejected *before* it can wedge the pool
+//!     ([`queue::AdmissionPrice`]). The [`queue::AdmissionQueue`] is
+//!     bounded (overflow sheds with `Failed`) and orders entries by
+//!     [`queue::Priority`] class plus an aging term, so a deferred
+//!     giant neither starves small admissible prompts nor is starved
+//!     by them.
+//!   - [`loop_`]: the scheduler itself — each tick admits in
+//!     effective-priority order (preempting strictly lower-class live
+//!     sequences under pressure and replaying them bit-identically
+//!     later), advances in-flight prefill chunks, folds every
+//!     in-flight decode step into **one batched INT8 attention call**
 //!     ([`crate::kv::decode_views`] over pinned lock-free views), and
 //!     yields tokens to per-sequence streams
 //!     ([`loop_::StreamEvent`]).
@@ -39,8 +46,11 @@
 //! (`decode_views` simply fans the same `DecodeView::decode_splitk`
 //! across sequences), quantized block contents are a deterministic
 //! function of the token prefix, and eviction/prefix-sharing churn
-//! never mutates a live sequence's blocks — and it is property-tested
-//! in `tests/sched_integration.rs`.
+//! never mutates a live sequence's blocks — and it extends to
+//! preemption-by-recompute: a preempted sequence's replayed history
+//! rebuilds bit-identical blocks, so its resumed stream equals an
+//! uninterrupted run. Both are property-tested in
+//! `tests/sched_integration.rs`.
 
 pub mod loop_;
 pub mod model;
@@ -49,5 +59,5 @@ pub mod stripe;
 
 pub use loop_::{SchedConfig, Scheduler, StreamEvent};
 pub use model::{HashModel, TokenModel};
-pub use queue::{AdmissionPrice, AdmissionVerdict};
+pub use queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority};
 pub use stripe::StripedKvCache;

@@ -1,5 +1,7 @@
-//! Trie-aware admission: price an incoming prompt against its stripe
-//! before it can wedge the pool.
+//! Priority-class admission: trie-aware block pricing plus a bounded,
+//! aging, price-aware queue.
+//!
+//! # Pricing
 //!
 //! The old gate ([`crate::coordinator::admission::Gate`]) counts
 //! requests and payload tokens — proxies that know nothing about what
@@ -15,19 +17,49 @@
 //!   - `cold` — blocks the request still needs for prompt + generation
 //!     budget;
 //!   - `free` / `evictable` — what the stripe can hand out now, and
-//!     what full LRU eviction could additionally recover.
+//!     what full LRU eviction could additionally recover. Flat: the
+//!     pool maintains the evictable count incrementally
+//!     ([`crate::kv::block::BlockPool::evictable_blocks`]), so pricing
+//!     never scans the trie — not even under pressure.
 //!
 //! Three verdicts: **Reject** when the request's *total resident
 //! footprint* — cached prefix + cold blocks for prompt and generation
-//! budget — exceeds the stripe's capacity (it can never complete;
-//! queueing it would wedge the FIFO queue forever behind an
-//! unsatisfiable head); **Defer** when it fits the stripe but not the
-//! current headroom (live sequences hold the difference — retry once
-//! they retire); **Admit** otherwise. Headroom excludes the prompt's
-//! *own* peeked prefix blocks: admission retains them, so they stop
-//! being evictable exactly when they would be needed. Pricing must
-//! never promote the peeked prefix (see [`crate::kv::radix`]): a
-//! deferred prompt must not reorder eviction.
+//! budget — exceeds the stripe's capacity (it can never complete);
+//! **Defer** when it fits the stripe but not the current headroom (live
+//! sequences hold the difference — retry once they retire); **Admit**
+//! otherwise. Headroom excludes the prompt's *own* peeked prefix
+//! blocks: admission retains them, so they stop being evictable exactly
+//! when they would be needed. Pricing must never promote the peeked
+//! prefix (see [`crate::kv::radix`]): a deferred prompt must not
+//! reorder eviction.
+//!
+//! # Queueing
+//!
+//! [`AdmissionQueue`] replaces the old FIFO `VecDeque`, whose
+//! no-overtaking rule had three defects: a deferred giant starved
+//! admissible small prompts behind it, the queue grew without bound
+//! while its head deferred, and fairness came only from head-of-line
+//! blocking. The queue orders entries by **effective rank** =
+//! `class rank + waited_ticks / aging_ticks`:
+//!
+//!   - [`Priority`] classes (`Interactive` > `Batch` > `BestEffort`)
+//!     give latency-sensitive traffic first claim on freed headroom;
+//!   - the aging term promotes any waiting entry one class per
+//!     `aging_ticks`, so nothing starves: once an entry ages past
+//!     every class ([`AdmissionQueue::aged_to_barrier`]) the scheduler
+//!     stops admitting *anything* past it on its stripe until it gets
+//!     in;
+//!   - a hard depth cap sheds overflow at submit time
+//!     ([`AdmissionQueue::push`] returns the item back; the scheduler
+//!     fails it with `StreamEvent::Failed`), mirroring what the `Gate`
+//!     does for batched traffic.
+//!
+//! The scheduler prices entries in effective-rank order and admits any
+//! that fit — price-aware overtaking — while a deferred entry bars
+//! *strictly lower effective ranks* from its stripe (so freed blocks
+//! are not snatched by traffic the deferred entry outranks, which is
+//! also what makes preemption-by-recompute converge; equal-rank
+//! traffic still overtakes; see [`crate::sched::loop_`]).
 
 use crate::kv::RadixKvCache;
 
@@ -41,6 +73,71 @@ pub enum AdmissionVerdict {
     /// The request's total footprint exceeds the stripe: it can never
     /// complete.
     Reject,
+}
+
+/// Request priority class. Order is meaningful: `BestEffort < Batch <
+/// Interactive` (derived `Ord`), and preemption-by-recompute only ever
+/// evicts a *strictly lower* class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Throughput filler: first to wait, first to be preempted.
+    BestEffort,
+    /// The default class for bulk generation.
+    Batch,
+    /// Latency-sensitive traffic: admitted first, never preempted by
+    /// lower classes.
+    Interactive,
+}
+
+impl Priority {
+    /// Highest class rank (Interactive).
+    pub const MAX_RANK: u64 = 2;
+
+    pub fn rank(self) -> u64 {
+        match self {
+            Priority::BestEffort => 0,
+            Priority::Batch => 1,
+            Priority::Interactive => 2,
+        }
+    }
+
+    /// Wire name (`priority` field of the `generate` verb).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::BestEffort => "best-effort",
+            Priority::Batch => "batch",
+            Priority::Interactive => "interactive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            "best-effort" | "best_effort" | "besteffort" => Some(Priority::BestEffort),
+            _ => None,
+        }
+    }
+
+    /// The one aging formula: `rank + waited / aging_ticks`. Queue
+    /// ordering, the admission bar and the preemption exemption all
+    /// derive from it, so the starvation bound cannot drift between
+    /// them.
+    pub fn effective_rank(self, waited: u64, aging_ticks: u64) -> u64 {
+        self.rank() + waited / aging_ticks.max(1)
+    }
+
+    /// Whether `waited` ticks of aging have promoted this class past
+    /// every other.
+    pub fn aged_past_all(self, waited: u64, aging_ticks: u64) -> bool {
+        self.effective_rank(waited, aging_ticks) > Priority::MAX_RANK
+    }
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::Batch
+    }
 }
 
 /// Block-level price of admitting one prompt (all counts in blocks of
@@ -57,9 +154,8 @@ pub struct AdmissionPrice {
     /// Free blocks in the stripe right now.
     pub free: usize,
     /// Blocks recoverable under full trie eviction, *excluding* the
-    /// prompt's own cached prefix (admission retains those). Computed
-    /// lazily: left at 0 when `cold <= free` already admits — the
-    /// O(trie nodes) evictability scan only runs under pool pressure.
+    /// prompt's own cached prefix (admission retains those). Read from
+    /// the pool's incremental counter — O(1), always reported.
     pub evictable: usize,
     /// The stripe's total block budget.
     pub capacity: usize,
@@ -83,16 +179,13 @@ impl AdmissionPrice {
 }
 
 /// Price `tokens` (+ a `gen_budget`-token generation budget) against
-/// one stripe. `pressure` is extra block demand the caller already
-/// knows about (the scheduler's reservations for admitted-but-growing
-/// sequences) — it widens the lazily-computed `evictable` term, never
-/// the verdict itself. Read-only: recency, residency and refcounts are
-/// untouched.
+/// one stripe. Read-only and flat: recency, residency and refcounts
+/// are untouched, and no trie scan runs — evictability comes from the
+/// pool's incrementally maintained counter.
 pub fn price_admission(
     cache: &RadixKvCache,
     tokens: &[u32],
     gen_budget: usize,
-    pressure: usize,
 ) -> AdmissionPrice {
     let cached = cache.peek_cached_blocks(tokens);
     let prefill_blocks = cache.blocks_for_tokens(tokens.len());
@@ -103,15 +196,11 @@ pub fn price_admission(
     let resident = tokens.len() + gen_budget.saturating_sub(1);
     let cold = cache.blocks_for_tokens(resident).saturating_sub(cached);
     let free = cache.blocks_free();
-    // the scan is O(live trie nodes) — only pay it when free blocks
-    // cannot cover demand (this request + the caller's outstanding
-    // reservations); subtract the prompt's own prefix, which admission
-    // would retain (making it non-evictable on arrival)
-    let evictable = if cold + pressure > free {
-        cache.evictable_blocks().saturating_sub(cached)
-    } else {
-        0
-    };
+    // subtract the prompt's own prefix, which admission would retain
+    // (making it non-evictable on arrival); prefix blocks pinned by
+    // other live sequences are already outside the counter, so this is
+    // conservative, never optimistic
+    let evictable = cache.evictable_blocks().saturating_sub(cached);
     AdmissionPrice {
         cached,
         cold,
@@ -124,16 +213,130 @@ pub fn price_admission(
 
 impl super::stripe::StripedKvCache {
     /// Price a prompt against the stripe it would route to (one short
-    /// lock hold; nothing is promoted or allocated). `pressure` as in
-    /// [`price_admission`].
-    pub fn price_admission(
-        &self,
-        tokens: &[u32],
-        gen_budget: usize,
-        pressure: usize,
-    ) -> AdmissionPrice {
+    /// lock hold; nothing is promoted or allocated).
+    pub fn price_admission(&self, tokens: &[u32], gen_budget: usize) -> AdmissionPrice {
         let s = self.route(tokens);
-        price_admission(&self.lock(s), tokens, gen_budget, pressure)
+        price_admission(&self.lock(s), tokens, gen_budget)
+    }
+}
+
+/// One queued entry: the payload plus its scheduling metadata.
+pub struct Queued<T> {
+    pub item: T,
+    pub class: Priority,
+    /// Unique, monotonically increasing arrival stamp (FIFO tiebreak
+    /// within an effective rank, and the entry's stable key).
+    pub arrival: u64,
+    /// Ticks spent queued — the aging input.
+    pub waited: u64,
+}
+
+/// Bounded priority queue with aging: the scheduler's admission queue.
+///
+/// Entries are keyed by their arrival stamp (stable across reorders)
+/// and admitted in [`AdmissionQueue::order`]: effective rank
+/// descending, arrival ascending. See the module docs for the policy.
+pub struct AdmissionQueue<T> {
+    entries: Vec<Queued<T>>,
+    cap: usize,
+    aging_ticks: u64,
+    next_arrival: u64,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(cap: usize, aging_ticks: u64) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            entries: Vec::new(),
+            cap: cap.max(1),
+            aging_ticks: aging_ticks.max(1),
+            next_arrival: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Enqueue; `Err(item)` when the depth cap would be exceeded — the
+    /// caller sheds the request instead of queueing without bound.
+    pub fn push(&mut self, item: T, class: Priority) -> Result<(), T> {
+        if self.entries.len() >= self.cap {
+            return Err(item);
+        }
+        self.push_unbounded(item, class);
+        Ok(())
+    }
+
+    /// Cap-exempt enqueue, for preemption requeues: shedding an
+    /// already-admitted sequence's work would break the replay
+    /// contract (its depth contribution is bounded by `max_inflight`).
+    pub fn push_unbounded(&mut self, item: T, class: Priority) {
+        self.requeue(item, class, 0);
+    }
+
+    /// Cap-exempt enqueue with carried aging credit: a preempted
+    /// sequence keeps the seniority it had accumulated, so repeated
+    /// preempt cycles still converge on the aging barrier instead of
+    /// resetting the starvation clock each time.
+    pub fn requeue(&mut self, item: T, class: Priority, waited: u64) {
+        let arrival = self.next_arrival;
+        self.next_arrival += 1;
+        self.entries.push(Queued { item, class, arrival, waited });
+    }
+
+    /// One scheduler tick elapsed: every queued entry ages.
+    pub fn age_tick(&mut self) {
+        for e in &mut self.entries {
+            e.waited += 1;
+        }
+    }
+
+    /// [`Priority::effective_rank`] of one entry — the ordering key.
+    /// Grows without bound, so every entry eventually outranks all
+    /// fresh arrivals of every class.
+    fn effective_rank(&self, e: &Queued<T>) -> u64 {
+        e.class.effective_rank(e.waited, self.aging_ticks)
+    }
+
+    /// Whether the entry has aged past every class
+    /// ([`Priority::aged_past_all`]): the scheduler stops admitting
+    /// anything behind it on its stripe (the starvation backstop for
+    /// repeatedly deferred requests).
+    pub fn aged_to_barrier(&self, arrival: u64) -> bool {
+        self.entries
+            .iter()
+            .find(|e| e.arrival == arrival)
+            .is_some_and(|e| e.class.aged_past_all(e.waited, self.aging_ticks))
+    }
+
+    /// Arrival stamps in admission order: effective rank descending,
+    /// arrival ascending (stable FIFO within a rank).
+    pub fn order(&self) -> Vec<u64> {
+        let mut keys: Vec<(u64, u64)> = self
+            .entries
+            .iter()
+            .map(|e| (self.effective_rank(e), e.arrival))
+            .collect();
+        keys.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        keys.into_iter().map(|(_, arrival)| arrival).collect()
+    }
+
+    pub fn get(&self, arrival: u64) -> Option<&Queued<T>> {
+        self.entries.iter().find(|e| e.arrival == arrival)
+    }
+
+    pub fn remove(&mut self, arrival: u64) -> Option<Queued<T>> {
+        let i = self.entries.iter().position(|e| e.arrival == arrival)?;
+        Some(self.entries.remove(i))
+    }
+
+    /// Take every entry (shutdown: the caller fails their streams).
+    pub fn drain_all(&mut self) -> Vec<Queued<T>> {
+        std::mem::take(&mut self.entries)
     }
 }
 
@@ -170,7 +373,7 @@ mod tests {
     fn cold_prompt_priced_in_blocks() {
         let c = cache(8);
         // 10 tokens @ 4/block = 3 blocks prefill, +6 gen tokens → 4 total
-        let p = price_admission(&c, &(0..10).collect::<Vec<u32>>(), 6, 0);
+        let p = price_admission(&c, &(0..10).collect::<Vec<u32>>(), 6);
         assert_eq!((p.cached, p.cold_prefill, p.cold), (0, 3, 4));
         assert_eq!((p.free, p.evictable, p.capacity), (8, 0, 8));
         assert_eq!(p.verdict(), AdmissionVerdict::Admit);
@@ -182,13 +385,13 @@ mod tests {
         let prompt: Vec<u32> = (0..8).collect(); // 2 full blocks
         let id = fill(&mut c, &prompt);
         let longer: Vec<u32> = (0..10).collect();
-        let p = price_admission(&c, &longer, 0, 0);
+        let p = price_admission(&c, &longer, 0);
         assert_eq!(p.cached, 2, "both full blocks peeked");
         assert_eq!(p.cold_prefill, 1, "only the partial tail is cold");
         // pricing must not promote: the peek leaves eviction order alone
         c.free_sequence(id).unwrap();
         let before = c.stats().evictions;
-        let _ = price_admission(&c, &longer, 0, 0);
+        let _ = price_admission(&c, &longer, 0);
         assert_eq!(c.stats().evictions, before);
     }
 
@@ -199,13 +402,13 @@ mod tests {
         let live = fill(&mut c, &(100..112).collect::<Vec<u32>>());
         // never fits: 6 cold prefill blocks > 4 capacity
         let huge: Vec<u32> = (0..24).collect();
-        assert_eq!(price_admission(&c, &huge, 0, 0).verdict(), AdmissionVerdict::Reject);
+        assert_eq!(price_admission(&c, &huge, 0).verdict(), AdmissionVerdict::Reject);
         // fits the pool but not while the live sequence holds it
         let mid: Vec<u32> = (200..208).collect(); // 2 blocks, 1 free
-        assert_eq!(price_admission(&c, &mid, 0, 0).verdict(), AdmissionVerdict::Defer);
+        assert_eq!(price_admission(&c, &mid, 0).verdict(), AdmissionVerdict::Defer);
         // retiring the live sequence turns its blocks evictable
         c.free_sequence(live).unwrap();
-        let p = price_admission(&c, &mid, 0, 0);
+        let p = price_admission(&c, &mid, 0);
         assert!(p.free + p.evictable >= 2);
         assert_eq!(p.verdict(), AdmissionVerdict::Admit);
     }
@@ -213,10 +416,10 @@ mod tests {
     #[test]
     fn unsatisfiable_total_footprint_is_rejected_not_deferred() {
         // a tiny prompt with a generation budget the stripe can never
-        // hold must Reject — Deferring it would wedge the FIFO queue
-        // forever behind an unsatisfiable head
+        // hold must Reject — Deferring it would leave an unsatisfiable
+        // entry aging toward the barrier and wedging its stripe
         let c = cache(8);
-        let p = price_admission(&c, &[1], 1_000, 0);
+        let p = price_admission(&c, &[1], 1_000);
         assert!(p.cold > p.capacity);
         assert_eq!(p.verdict(), AdmissionVerdict::Reject);
 
@@ -227,7 +430,7 @@ mod tests {
         let id = fill(&mut c, &(0..12).collect::<Vec<u32>>()); // 3 blocks
         c.free_sequence(id).unwrap(); // trie keeps them (refcount 1)
         let longer: Vec<u32> = (0..20).collect(); // 5 blocks total
-        let p = price_admission(&c, &longer, 0, 0);
+        let p = price_admission(&c, &longer, 0);
         assert_eq!((p.cached, p.cold, p.cold_prefill), (3, 2, 2));
         assert_eq!(p.verdict(), AdmissionVerdict::Reject, "3 cached + 2 cold > 4");
     }
@@ -238,24 +441,22 @@ mod tests {
         // 12-token prompt with max_new=5 peaks at 16 resident tokens —
         // exactly a 4-block stripe, so it must Admit, not Reject
         let c = cache(4);
-        let p = price_admission(&c, &(0..12).collect::<Vec<u32>>(), 5, 0);
+        let p = price_admission(&c, &(0..12).collect::<Vec<u32>>(), 5);
         assert_eq!(p.cold, 4, "16 resident tokens, not 17");
         assert_eq!(p.verdict(), AdmissionVerdict::Admit);
     }
 
     #[test]
-    fn pressure_widens_the_evictability_scan() {
-        // cold fits free, but the caller's reservations don't: pricing
-        // must still compute evictable so deferral decisions see the
-        // real headroom instead of a lazily-zeroed one
+    fn evictability_is_flat_and_always_reported() {
+        // the price reports the real evictable count whether or not
+        // free blocks suffice — no lazy zero, no O(nodes) scan
         let mut c = cache(8);
         let id = fill(&mut c, &(0..16).collect::<Vec<u32>>()); // 4 blocks
         c.free_sequence(id).unwrap(); // all 4 now trie-only evictable
-        let p = price_admission(&c, &[500, 501, 502], 0, 0);
+        let p = price_admission(&c, &[500, 501, 502], 0);
         assert_eq!((p.cold, p.free), (1, 4));
-        assert_eq!(p.evictable, 0, "no pressure → scan skipped");
-        let p = price_admission(&c, &[500, 501, 502], 0, 6);
-        assert_eq!(p.evictable, 4, "pressure forces the real scan");
+        assert_eq!(p.evictable, 4, "counter reported even when free suffices");
+        assert_eq!(p.evictable, c.evictable_blocks_scan(), "counter equals the scan");
         assert_eq!(p.verdict(), AdmissionVerdict::Admit);
     }
 
@@ -281,7 +482,7 @@ mod tests {
         // cold; free 0; its own 3 prefix blocks are the only evictable
         // ones and must be excluded from headroom
         let longer: Vec<u32> = (0..20).collect();
-        let p = price_admission(&c, &longer, 0, 0);
+        let p = price_admission(&c, &longer, 0);
         assert_eq!((p.cached, p.cold, p.free), (3, 2, 0));
         assert_eq!(p.evictable, 0, "own prefix excluded");
         assert_eq!(p.verdict(), AdmissionVerdict::Defer);
@@ -294,9 +495,82 @@ mod tests {
             2,
         );
         let prompt: Vec<u32> = (0..4).collect();
-        let p = pool.price_admission(&prompt, 0, 0);
+        let p = pool.price_admission(&prompt, 0);
         // a 2-stripe split of 8 blocks prices against one 4-block stripe
         assert_eq!(p.capacity, 4);
         assert_eq!(p.verdict(), AdmissionVerdict::Admit);
+    }
+
+    #[test]
+    fn priority_parse_and_order() {
+        assert_eq!(Priority::parse("interactive"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse("batch"), Some(Priority::Batch));
+        assert_eq!(Priority::parse("best-effort"), Some(Priority::BestEffort));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert!(Priority::Interactive > Priority::Batch);
+        assert!(Priority::Batch > Priority::BestEffort);
+        assert_eq!(Priority::default(), Priority::Batch);
+        for p in [Priority::Interactive, Priority::Batch, Priority::BestEffort] {
+            assert_eq!(Priority::parse(p.name()), Some(p), "names round-trip");
+        }
+    }
+
+    #[test]
+    fn queue_orders_by_class_then_arrival() {
+        let mut q: AdmissionQueue<&str> = AdmissionQueue::new(16, 100);
+        q.push("be", Priority::BestEffort).unwrap();
+        q.push("batch-1", Priority::Batch).unwrap();
+        q.push("inter", Priority::Interactive).unwrap();
+        q.push("batch-2", Priority::Batch).unwrap();
+        let order: Vec<&str> = q.order().iter().map(|&k| q.get(k).unwrap().item).collect();
+        assert_eq!(order, vec!["inter", "batch-1", "batch-2", "be"]);
+    }
+
+    #[test]
+    fn aging_promotes_and_reaches_the_barrier() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(16, 10);
+        q.push(0, Priority::BestEffort).unwrap();
+        q.push(1, Priority::Interactive).unwrap();
+        // a fresh Interactive outranks the young BestEffort
+        let top = q.order()[0];
+        assert_eq!(q.get(top).unwrap().item, 1);
+        q.remove(top).unwrap(); // admitted
+        let be_key = q.order()[0];
+        // 20 ticks = +2 ranks: the waiting BestEffort now ties a
+        // *fresh* Interactive and wins on arrival order
+        for _ in 0..20 {
+            q.age_tick();
+        }
+        q.push(2, Priority::Interactive).unwrap();
+        assert_eq!(q.get(q.order()[0]).unwrap().item, 0, "aged entry overtakes");
+        assert!(!q.aged_to_barrier(be_key), "rank 2 is not yet past every class");
+        for _ in 0..10 {
+            q.age_tick();
+        }
+        assert!(q.aged_to_barrier(be_key), "rank 3 bars overtaking");
+    }
+
+    #[test]
+    fn depth_cap_sheds_and_requeue_bypasses_it() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(2, 100);
+        q.push(1, Priority::Batch).unwrap();
+        q.push(2, Priority::Batch).unwrap();
+        assert_eq!(q.push(3, Priority::Interactive), Err(3), "cap sheds, class-blind");
+        assert_eq!(q.len(), 2);
+        // preemption requeues must never shed admitted work
+        q.push_unbounded(4, Priority::BestEffort);
+        assert_eq!(q.len(), 3);
+        // requeue carries aging credit forward (barrier still reachable)
+        q.requeue(5, Priority::BestEffort, 301);
+        let carried = q.order()[0];
+        assert_eq!(q.get(carried).unwrap().item, 5, "carried wait outranks everyone");
+        assert!(q.aged_to_barrier(carried));
+        q.remove(carried).unwrap();
+        // removal by stable key survives reordering
+        let key = q.order()[0];
+        let got = q.remove(key).unwrap();
+        assert_eq!(got.item, 1, "FIFO head of the equal-rank band");
+        assert_eq!(q.len(), 2);
+        assert!(q.remove(key).is_none(), "keys are consumed");
     }
 }

@@ -12,16 +12,21 @@
 //! → {"type":"ping"}                ← {"ok":true,"pong":true}
 //! → {"type":"metrics"}             ← {"ok":true,"metrics":{...}}
 //!
-//! → {"type":"generate","tokens":[...],"max_new":N}
-//! ← {"stream":true,"id":n,"pos":p,"token":t}      (one per token, as
-//! ← {"stream":true,"id":n,"pos":p,"token":t}       scheduler ticks
-//! ← {"ok":true,"done":true,"id":n,"tokens":[...]}  complete)
+//! → {"type":"generate","tokens":[...],"max_new":N,
+//!    "priority":"interactive"}                     (priority optional:
+//! ← {"stream":true,"id":n,"pos":p,"token":t}       interactive | batch
+//! ← {"stream":true,"id":n,"pos":p,"token":t}       (default) |
+//! ← {"ok":true,"done":true,"id":n,"tokens":[...]}  best-effort)
 //! ```
 //!
 //! `generate` is the continuous-batching surface: the engine's
 //! scheduler folds every in-flight request's decode step into one
 //! batched INT8 attention call per tick, and each connection's tokens
-//! stream out as their ticks finish (see [`crate::sched`]).
+//! stream out as their ticks finish (see [`crate::sched`]). The
+//! `priority` field selects the admission class: interactive traffic
+//! is admitted first and may preempt lower classes under KV-pool
+//! pressure; preempted sequences are replayed bit-identically, so a
+//! class only ever changes scheduling latency, never tokens.
 
 pub mod protocol;
 pub mod tcp;

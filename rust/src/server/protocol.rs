@@ -3,6 +3,7 @@
 use crate::coordinator::engine::PrefillResponse;
 use crate::coordinator::request::{AccuracyClass, RequestPayload};
 use crate::coordinator::Response;
+use crate::sched::Priority;
 use crate::util::json::{parse, Json};
 
 /// Decoded client request.
@@ -20,8 +21,14 @@ pub enum WireRequest {
     /// Continuous-batched generation with streaming token delivery:
     /// the server answers with one `{"stream":true,...}` line per
     /// generated token as scheduler ticks complete, then a final
-    /// `{"ok":...,"done":true,...}` line.
-    Generate { tokens: Vec<u32>, max_new: usize },
+    /// `{"ok":...,"done":true,...}` line. The optional `priority`
+    /// field (`"interactive"` | `"batch"` | `"best-effort"`, default
+    /// `"batch"`) selects the admission class: interactive traffic is
+    /// admitted first and may preempt lower classes under KV-pool
+    /// pressure (preempted sequences are replayed bit-identically, so
+    /// clients only ever observe scheduling latency, never different
+    /// tokens).
+    Generate { tokens: Vec<u32>, max_new: usize, priority: Priority },
     Ping,
     Metrics,
 }
@@ -113,10 +120,21 @@ pub fn decode_request(line: &str) -> Result<WireRequest, String> {
             q: f32_array(&j, "q")?,
         }),
         Some("release") => Ok(WireRequest::Release { seq_id: seq_id()? }),
-        Some("generate") => Ok(WireRequest::Generate {
-            tokens: u32_array(&j, "tokens")?,
-            max_new: j.at("max_new").as_usize().ok_or("missing max_new")?,
-        }),
+        Some("generate") => {
+            let pj = j.at("priority");
+            let priority = if pj.is_null() {
+                Priority::default()
+            } else {
+                pj.as_str().and_then(Priority::parse).ok_or_else(|| {
+                    "bad priority (interactive | batch | best-effort)".to_string()
+                })?
+            };
+            Ok(WireRequest::Generate {
+                tokens: u32_array(&j, "tokens")?,
+                max_new: j.at("max_new").as_usize().ok_or("missing max_new")?,
+                priority,
+            })
+        }
         Some(other) => Err(format!("unknown request type {other:?}")),
         None => Err("missing type field".into()),
     }
@@ -320,12 +338,38 @@ mod tests {
     #[test]
     fn decode_and_encode_generate() {
         match decode_request(r#"{"type":"generate","tokens":[1,2,3],"max_new":8}"#).unwrap() {
-            WireRequest::Generate { tokens, max_new } => {
+            WireRequest::Generate { tokens, max_new, priority } => {
                 assert_eq!(tokens, vec![1, 2, 3]);
                 assert_eq!(max_new, 8);
+                assert_eq!(priority, Priority::Batch, "omitted priority defaults to batch");
             }
             other => panic!("{other:?}"),
         }
+        match decode_request(
+            r#"{"type":"generate","tokens":[4],"max_new":2,"priority":"interactive"}"#,
+        )
+        .unwrap()
+        {
+            WireRequest::Generate { priority, .. } => {
+                assert_eq!(priority, Priority::Interactive);
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode_request(
+            r#"{"type":"generate","tokens":[4],"max_new":2,"priority":"best-effort"}"#,
+        )
+        .unwrap()
+        {
+            WireRequest::Generate { priority, .. } => {
+                assert_eq!(priority, Priority::BestEffort);
+            }
+            other => panic!("{other:?}"),
+        }
+        // unknown classes are rejected, not silently defaulted
+        assert!(decode_request(
+            r#"{"type":"generate","tokens":[4],"max_new":2,"priority":"urgent"}"#
+        )
+        .is_err());
         assert!(decode_request(r#"{"type":"generate","tokens":[1]}"#).is_err());
         assert!(decode_request(r#"{"type":"generate","max_new":4}"#).is_err());
 

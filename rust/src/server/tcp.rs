@@ -146,10 +146,10 @@ fn handle_connection(
                 Ok(()) => WireResponse::Done,
                 Err(e) => WireResponse::Error(e),
             },
-            Ok(WireRequest::Generate { tokens, max_new }) => {
+            Ok(WireRequest::Generate { tokens, max_new, priority }) => {
                 // streaming verb: tokens go out line by line as their
                 // scheduler ticks complete, then one terminal line
-                stream_generate(&mut writer, &engine, tokens, max_new)?;
+                stream_generate(&mut writer, &engine, tokens, max_new, priority)?;
                 continue;
             }
         };
@@ -167,10 +167,11 @@ fn stream_generate(
     engine: &Engine,
     tokens: Vec<u32>,
     max_new: usize,
+    priority: crate::sched::Priority,
 ) -> std::io::Result<()> {
     use crate::sched::StreamEvent;
     use crate::server::protocol::{encode_generate_done, encode_stream_token};
-    let (id, rx) = match engine.generate(tokens, max_new) {
+    let (id, rx) = match engine.generate_with_priority(tokens, max_new, priority) {
         Ok(pair) => pair,
         Err(e) => {
             writer.write_all(encode_generate_done(0, Err(&e)).as_bytes())?;
@@ -333,21 +334,40 @@ impl Client {
     /// Continuous-batched generation with streaming delivery: `on_token`
     /// fires per token *as the server's scheduler ticks complete*;
     /// returns the terminal response line (ok/done/tokens or error).
+    /// Uses the server's default priority class; see
+    /// [`Client::generate_streaming_with_priority`].
     pub fn generate_streaming(
         &mut self,
         tokens: &[u32],
         max_new: usize,
+        on_token: impl FnMut(usize, u32),
+    ) -> std::io::Result<crate::util::json::Json> {
+        self.generate_streaming_with_priority(tokens, max_new, "", on_token)
+    }
+
+    /// [`Client::generate_streaming`] with an explicit admission
+    /// priority class (`"interactive"` | `"batch"` | `"best-effort"`;
+    /// an empty string omits the field, leaving the server default).
+    pub fn generate_streaming_with_priority(
+        &mut self,
+        tokens: &[u32],
+        max_new: usize,
+        priority: &str,
         mut on_token: impl FnMut(usize, u32),
     ) -> std::io::Result<crate::util::json::Json> {
         use crate::util::json::Json;
-        let req = Json::obj(vec![
+        let mut fields = vec![
             ("type", Json::str("generate")),
             (
                 "tokens",
                 Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
             ),
             ("max_new", Json::num(max_new as f64)),
-        ]);
+        ];
+        if !priority.is_empty() {
+            fields.push(("priority", Json::str(priority)));
+        }
+        let req = Json::obj(fields);
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
@@ -382,6 +402,21 @@ impl Client {
     ) -> std::io::Result<(Vec<u32>, crate::util::json::Json)> {
         let mut streamed = Vec::new();
         let done = self.generate_streaming(tokens, max_new, |_, t| streamed.push(t))?;
+        Ok((streamed, done))
+    }
+
+    /// Convenience: [`Client::generate`] with an explicit priority
+    /// class (see [`Client::generate_streaming_with_priority`]).
+    pub fn generate_with_priority(
+        &mut self,
+        tokens: &[u32],
+        max_new: usize,
+        priority: &str,
+    ) -> std::io::Result<(Vec<u32>, crate::util::json::Json)> {
+        let mut streamed = Vec::new();
+        let done = self.generate_streaming_with_priority(tokens, max_new, priority, |_, t| {
+            streamed.push(t)
+        })?;
         Ok((streamed, done))
     }
 

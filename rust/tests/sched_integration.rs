@@ -12,7 +12,7 @@
 use int_flashattention::coordinator::metrics::Registry;
 use int_flashattention::kv::CacheConfig;
 use int_flashattention::sched::{
-    HashModel, SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel,
+    HashModel, Priority, SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel,
 };
 use int_flashattention::util::proptest::{check, Config, Pair, UsizeRange};
 use int_flashattention::util::rng::Pcg64;
@@ -236,6 +236,151 @@ fn eviction_pressure_preserves_streams_and_metrics() {
     );
     assert!(metrics.counter("sched.tokens").get() >= 30);
     assert!(metrics.histogram("sched.tick.batch_size").count() > 0);
+}
+
+#[test]
+fn starvation_smalls_flow_past_deferred_giant() {
+    // the PR 3 FIFO would park every later arrival behind a deferred
+    // head. Here a long-running blocker reserves 279 of 300 blocks, a
+    // same-class giant (23 blocks) defers for the blocker's whole run,
+    // and a stream of small prompts (1 block each) must flow past it —
+    // the pool math makes the ordering deterministic (the giant cannot
+    // be admitted before the blocker retires, ~1100 ticks later)
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let cache = Arc::new(StripedKvCache::new(cache_cfg(300), 1));
+    let metrics = Arc::new(Registry::default());
+    let sched = Scheduler::start(cache, model.clone(), SchedConfig::default(), metrics.clone());
+    let baseline = StripedKvCache::new(cache_cfg(512), 1);
+
+    // blocker: resident 16 + 1099 = 1115 tokens → 279 of 300 blocks
+    let blocker_prompt: Vec<u32> = (9000..9016).collect();
+    let blocker = sched.submit(1, blocker_prompt.clone(), 1100);
+    match blocker.recv().expect("blocker streams") {
+        StreamEvent::Token { .. } => {}
+        other => panic!("expected a token, got {other:?}"),
+    }
+    // giant: resident 24 + 67 = 91 tokens → 23 blocks > 21 unreserved
+    let giant_prompt: Vec<u32> = (7000..7024).collect();
+    let giant = sched.submit(2, giant_prompt.clone(), 68);
+    // smalls arrive *after* the giant and must still be admitted
+    for (i, base) in [100u32, 200, 300, 400].iter().enumerate() {
+        let prompt: Vec<u32> = vec![*base, base + 1];
+        let want = sequential_generate(&baseline, &model, &prompt, 2);
+        let got = drain(sched.submit(10 + i as u64, prompt, 2)).expect("small completes");
+        assert_eq!(got, want, "small {i} diverged");
+    }
+    // every small finished while the giant was still deferred: only
+    // the blocker and the four smalls have been admitted
+    assert_eq!(metrics.counter("sched.admitted").get(), 5, "giant must still be queued");
+    assert!(metrics.counter("sched.admission.deferred").get() >= 1);
+    // the giant is not starved: it completes once the blocker retires
+    let want = sequential_generate(&baseline, &model, &giant_prompt, 68);
+    assert_eq!(drain(giant).expect("giant completes"), want);
+    // drain the blocker (first token was consumed above)
+    let mut blocker_tokens = match drain_partial(blocker) {
+        Ok(t) => t,
+        Err(e) => panic!("blocker failed: {e}"),
+    };
+    assert_eq!(blocker_tokens.len(), 1099);
+    let want = sequential_generate(&baseline, &model, &blocker_prompt, 1100);
+    blocker_tokens.insert(0, want[0]);
+    assert_eq!(blocker_tokens, want, "blocker stream exact");
+}
+
+#[test]
+fn preempted_sequence_replays_bit_identically() {
+    // a BestEffort victim is evicted mid-stream by an Interactive
+    // aggressor that cannot fit otherwise; the victim's blocks are
+    // recycled (forced eviction of its trie-resident prefix), and on
+    // re-admission its replayed stream must continue bit-identically —
+    // the client sees one seamless token sequence
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let cache = Arc::new(StripedKvCache::new(cache_cfg(24), 1));
+    let metrics = Arc::new(Registry::default());
+    let sched = Scheduler::start(
+        cache.clone(),
+        model.clone(),
+        SchedConfig::default(),
+        metrics.clone(),
+    );
+    let baseline = StripedKvCache::new(cache_cfg(256), 1);
+
+    // victim: resident 8 + 79 = 87 tokens → 22 of 24 blocks
+    let victim_prompt: Vec<u32> = (3000..3008).collect();
+    let victim = sched.submit_with_priority(1, victim_prompt.clone(), 80, Priority::BestEffort);
+    match victim.recv().expect("victim streams before preemption") {
+        StreamEvent::Token { .. } => {}
+        other => panic!("expected a token, got {other:?}"),
+    }
+    // aggressor: resident 12 + 24 = 36 tokens → 9 blocks; 9 + the
+    // victim's outstanding reservation can never fit 24, so admission
+    // must preempt the victim (9 ≤ capacity makes it feasible)
+    let agg_prompt: Vec<u32> = (4000..4012).collect();
+    let agg = sched.submit_with_priority(2, agg_prompt.clone(), 25, Priority::Interactive);
+    let want_agg = sequential_generate(&baseline, &model, &agg_prompt, 25);
+    assert_eq!(drain(agg).expect("aggressor completes"), want_agg);
+    assert!(
+        metrics.counter("sched.preemptions").get() >= 1,
+        "aggressor can only fit by preempting the victim"
+    );
+    // the victim finishes after re-admission; its stream (including
+    // the tokens delivered before preemption) equals an uninterrupted
+    // sequential run, bit for bit
+    let mut got = match drain_partial(victim) {
+        Ok(t) => t,
+        Err(e) => panic!("victim failed: {e}"),
+    };
+    let want = sequential_generate(&baseline, &model, &victim_prompt, 80);
+    got.insert(0, want[0]);
+    assert_eq!(got, want, "preempt/replay must be invisible in the stream");
+    assert!(
+        cache.stats().evictions > 0,
+        "the aggressor's growth must recycle the victim's blocks"
+    );
+}
+
+#[test]
+fn property_mixed_priorities_and_preemption_keep_streams_exact() {
+    // random priorities over a pool far too small for the combined
+    // reservations: admissions defer, overtake, and preempt — yet
+    // every stream must still match its sequential per-call twin
+    let g = Pair(UsizeRange(1, 10_000), UsizeRange(2, 4));
+    check(
+        "mixed-priority scheduling matches sequential decode",
+        &g,
+        Config { cases: 8, ..Config::default() },
+        |&(seed, max_inflight)| {
+            let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+            let prompts = prompt_set(seed as u64, 6);
+            let classes = [Priority::Interactive, Priority::Batch, Priority::BestEffort];
+
+            let baseline = StripedKvCache::new(cache_cfg(256), 1);
+            let want: Vec<Vec<u32>> = prompts
+                .iter()
+                .map(|(p, m)| sequential_generate(&baseline, &model, p, *m))
+                .collect();
+
+            // 16 blocks = 64 tokens: six prompts of up to 6 blocks each
+            // cannot all be resident — deferral and preemption churn
+            let cache = Arc::new(StripedKvCache::new(cache_cfg(16), 1));
+            let sched = Scheduler::start(
+                cache,
+                model.clone(),
+                SchedConfig { max_inflight, ..SchedConfig::default() },
+                Arc::new(Registry::default()),
+            );
+            let rxs: Vec<Receiver<StreamEvent>> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, (p, m))| {
+                    sched.submit_with_priority(i as u64, p.clone(), *m, classes[i % 3])
+                })
+                .collect();
+            rxs.into_iter()
+                .zip(&want)
+                .all(|(rx, w)| drain(rx).expect("stream completes") == *w)
+        },
+    );
 }
 
 #[test]

@@ -191,6 +191,22 @@ fn generate_streams_tokens_over_the_wire() {
     assert!(m.at("hist.sched.tick.batch_size").at("count").as_i64().unwrap() >= 1);
     assert!(m.at("gauge.sched.stripe.contention").as_i64().unwrap() >= 0);
 
+    // the per-request priority field rides the same verb: an explicit
+    // class generates the same deterministic stream (priority is pure
+    // scheduling), and an unknown class errors without wedging the
+    // connection
+    let (streamed, d3) = client
+        .generate_with_priority(&prompt, 7, "interactive")
+        .expect("interactive generate");
+    assert_eq!(d3.at("ok").as_bool(), Some(true), "{d3:?}");
+    assert_eq!(streamed, want, "priority never changes tokens");
+    let (_, bad) = client
+        .generate_with_priority(&prompt, 7, "urgent")
+        .expect("bad priority answered");
+    assert_eq!(bad.at("ok").as_bool(), Some(false));
+    assert!(bad.at("error").as_str().unwrap().contains("priority"));
+    assert!(client.ping().expect("ping"));
+
     // a prompt whose cold prefill can never fit fails with a terminal
     // error line and leaves the connection usable
     let (toks, fail) = client

@@ -12,7 +12,9 @@
 //!        --backend pjrt|native      --policy eager|deadline|full
 
 use int_flashattention::coordinator::batcher::BatchPolicy;
-use int_flashattention::coordinator::engine::{Backend, Engine, EngineConfig, NativeBackend, PjrtBackend};
+use int_flashattention::coordinator::engine::{
+    Backend, Engine, EngineConfig, NativeBackend, PjrtBackend,
+};
 use int_flashattention::coordinator::router::BucketRouter;
 use int_flashattention::runtime::{executor::HostTensor, ArtifactRegistry, Executor, Manifest};
 use int_flashattention::server::{Client, Server};
@@ -111,7 +113,13 @@ fn main() -> anyhow::Result<()> {
     // engine metrics
     let snap = engine.metrics.snapshot();
     println!("\n-- engine metrics --");
-    for key in ["counter.submitted", "counter.completed", "counter.batches.formed", "counter.batch.slots_wasted"] {
+    let keys = [
+        "counter.submitted",
+        "counter.completed",
+        "counter.batches.formed",
+        "counter.batch.slots_wasted",
+    ];
+    for key in keys {
         if let Some(v) = snap.at(key).as_i64() {
             println!("{key}: {v}");
         }

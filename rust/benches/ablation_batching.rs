@@ -78,7 +78,7 @@ fn run_policy(policy: BatchPolicy, requests: usize, rate_per_s: f64) -> (Summary
 fn main() {
     let requests = 48;
     let rate = 400.0;
-    println!("# A2 — batching policy ablation ({requests} Poisson requests @ ~{rate}/s offered)\n");
+    println!("# A2 — batching policy ablation ({requests} Poisson requests @ ~{rate}/s)\n");
     let mut t = Table::new(&[
         "policy", "served/s", "p50 ms", "p99 ms", "batches", "wasted slots",
     ]);

@@ -34,7 +34,15 @@ fn main() {
         let m = bench("blk", &cfg_bench, || {
             int_flash::int_flash_attention_f32_in(&q, &k, &v, &cfg, INT8_R)
         });
-        let wl = Workload { batch: 4, heads: 32, seq, head_dim: 128, causal: false, block_q: bq, block_k: bk };
+        let wl = Workload {
+            batch: 4,
+            heads: 32,
+            seq,
+            head_dim: 128,
+            causal: false,
+            block_q: bq,
+            block_k: bk,
+        };
         let modelled = predict(&gpu, &wl, Variant::Int8).unwrap().total * 1e3;
         let sram = tile_sram_bytes(&wl, Variant::Int8);
         t.row(&[

@@ -15,7 +15,7 @@ fn main() {
     let gpu = GpuModel::rtx4090();
     println!("# A3 — INT4 vs INT8 ablation (d={d})\n");
     let mut t = Table::new(&[
-        "seq", "dist", "int8 MRE", "int4 MRE", "int4/int8 err", "int8 ms (model)", "int4 ms (model)",
+        "seq", "dist", "int8 MRE", "int4 MRE", "err ratio", "int8 ms (model)", "int4 ms (model)",
     ]);
     for dist in [Dist::Normal, Dist::Uniform] {
         for seq in [1024usize, 2048, 4096] {

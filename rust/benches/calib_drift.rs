@@ -1,0 +1,204 @@
+//! calib/drift serving bench: what online re-calibration costs on the
+//! decode hot path, and how long a scale hot-swap takes.
+//!
+//! Two measurements:
+//!
+//!   - **sampled-stats overhead** — continuous-batched decode
+//!     tokens/sec with in-path sampling off, at 1 % and at 10 % (the
+//!     tick loop offers every appended K/V row; unsampled rows cost one
+//!     atomic increment, sampled rows one shard-mutex fold);
+//!   - **swap latency** — wall-clock of `StripedKvCache::swap_scales`
+//!     over a pool with resident sequences (per-stripe lock + config
+//!     Arc swap; no data is touched, so this is the full stall a swap
+//!     can ever impose on the serving path).
+//!
+//! Prints markdown tables and writes `BENCH_calib_drift.json` (consumed
+//! by the CI bench-smoke step as an artifact).
+//!
+//! Run: `cargo bench --bench calib_drift` (INTFA_BENCH_FULL=1 lengthens
+//! generation; INTFA_BENCH_OUT overrides the JSON path).
+
+use int_flashattention::attention::Variant;
+use int_flashattention::bench_harness::{bench, black_box, BenchConfig, Table};
+use int_flashattention::calib::{CalibrationPlan, RecalibConfig};
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::kv::CacheConfig;
+use int_flashattention::quant::INT8_R;
+use int_flashattention::sched::{HashModel, SchedConfig, StripedKvCache};
+use int_flashattention::util::json::Json;
+use int_flashattention::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Instant;
+
+const HEADS: usize = 4;
+const HEAD_DIM: usize = 64;
+const STRIPES: usize = 4;
+const PROMPT_LEN: usize = 32;
+const CONCURRENCY: usize = 8;
+
+fn engine(sample_every: u64) -> Engine {
+    let router = BucketRouter::new(vec![Bucket {
+        variant: Variant::Int8,
+        batch: 2,
+        heads: HEADS,
+        seq: 64,
+        head_dim: HEAD_DIM,
+        causal: true,
+        artifact: String::new(),
+    }]);
+    let e = Engine::new(
+        router,
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    )
+    .with_kv_striped(
+        CacheConfig { block_tokens: 16, max_blocks: 2048, ..CacheConfig::new(HEADS, HEAD_DIM) },
+        STRIPES,
+        2,
+    );
+    if sample_every == 0 {
+        return e;
+    }
+    e.with_recalib(RecalibConfig {
+        sample_every,
+        // measure pure sampling overhead: drift checks effectively off
+        check_every_ticks: u64::MAX,
+        ..RecalibConfig::default()
+    })
+    .expect("kv attached")
+}
+
+fn prompt(i: usize) -> Vec<u32> {
+    let base = (i as u32 + 1) * 100_000;
+    (base..base + PROMPT_LEN as u32).collect()
+}
+
+/// Batched decode tokens/sec with the given sampling rate.
+fn run_batched(sample_every: u64, max_new: usize, model: &Arc<HashModel>) -> (f64, Vec<Vec<u32>>) {
+    let e = engine(sample_every)
+        .with_sched(
+            model.clone(),
+            SchedConfig { max_inflight: CONCURRENCY, ..SchedConfig::default() },
+        )
+        .expect("kv attached");
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..CONCURRENCY)
+        .map(|i| e.generate(prompt(i), max_new).expect("submit").1)
+        .collect();
+    let tails: Vec<Vec<u32>> = rxs
+        .into_iter()
+        .map(|rx| {
+            use int_flashattention::sched::StreamEvent;
+            let mut out = Vec::new();
+            loop {
+                match rx.recv().expect("stream open") {
+                    StreamEvent::Token { token, .. } => out.push(token),
+                    StreamEvent::Done { .. } => return out,
+                    StreamEvent::Failed { reason, .. } => panic!("stream failed: {reason}"),
+                }
+            }
+        })
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    (((CONCURRENCY * max_new) as f64) / wall, tails)
+}
+
+fn main() {
+    let full = std::env::var("INTFA_BENCH_FULL").is_ok();
+    let cfg_bench = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let max_new: usize = if full { 128 } else { 32 };
+    let reps: usize = if full { 5 } else { 3 };
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+
+    println!("# calib/drift — sampling overhead + scale hot-swap latency\n");
+    println!(
+        "geometry: heads={HEADS} d={HEAD_DIM} block_tokens=16, {STRIPES} stripes; \
+         {CONCURRENCY} concurrent sequences, prompt={PROMPT_LEN} max_new={max_new}, \
+         best of {reps}\n"
+    );
+
+    // ---- A. sampled-stats overhead on the decode hot path -------------
+    // (sample_every, label): 0 = recalibration off entirely
+    let rates: [(u64, &str); 3] = [(0, "off"), (100, "1%"), (10, "10%")];
+    let mut table = Table::new(&["sampling", "tok/s", "vs off"]);
+    let mut rates_json = Vec::new();
+    let mut base_tps = 0.0f64;
+    let mut base_tails: Option<Vec<Vec<u32>>> = None;
+    for (every, label) in rates {
+        let mut best = 0.0f64;
+        let mut tails = Vec::new();
+        for _ in 0..reps {
+            let (tps, t) = run_batched(every, max_new, &model);
+            best = best.max(tps);
+            tails = t;
+        }
+        // sampling must be an observer: token streams are identical at
+        // every rate (the exactness contract, asserted in the bench)
+        match &base_tails {
+            None => base_tails = Some(tails),
+            Some(b) => assert_eq!(b, &tails, "sampling changed the token stream"),
+        }
+        if every == 0 {
+            base_tps = best;
+        }
+        let ratio = best / base_tps;
+        table.row(&[label.into(), format!("{best:.0}"), format!("{ratio:.3}×")]);
+        rates_json.push(Json::obj(vec![
+            ("sample_every", Json::num(every as f64)),
+            ("label", Json::str(label)),
+            ("tok_per_s", Json::num(best)),
+            ("vs_off", Json::num(ratio)),
+        ]));
+    }
+    print!("{}", table.render());
+    println!();
+
+    // ---- B. swap latency ----------------------------------------------
+    // a pool with resident sequences: the swap walks the stripes once,
+    // validating + installing a new config Arc under each stripe lock
+    let pool = StripedKvCache::new(
+        CacheConfig { block_tokens: 16, max_blocks: 1024, ..CacheConfig::new(HEADS, HEAD_DIM) },
+        STRIPES,
+    );
+    let mut rng = Pcg64::seeded(7);
+    for i in 0..CONCURRENCY as u32 {
+        let tokens: Vec<u32> = (i * 1000..i * 1000 + 64).collect();
+        let (id, cached) = pool.start_sequence(&tokens);
+        for &t in &tokens[cached..] {
+            let (k, v) = (rng.normal_vec(HEADS * HEAD_DIM), rng.normal_vec(HEADS * HEAD_DIM));
+            pool.append_token(id, t, &k, &v).expect("pool sized for the bench");
+        }
+    }
+    let mut plan = CalibrationPlan::uncalibrated(INT8_R);
+    plan.v_absmax = 2.0;
+    plan.v_scale = 2.0 / plan.r;
+    plan.batches = 1;
+    let swap = bench("swap_scales", &cfg_bench, || {
+        black_box(pool.swap_scales(&plan).expect("valid plan"))
+    });
+    let mut table = Table::new(&["operation", "mean µs"]);
+    table.row(&["swap_scales".into(), format!("{:.2}", swap.mean_ns() / 1e3)]);
+    print!("{}", table.render());
+
+    let report = Json::obj(vec![
+        (
+            "geometry",
+            Json::obj(vec![
+                ("heads", Json::num(HEADS as f64)),
+                ("head_dim", Json::num(HEAD_DIM as f64)),
+                ("block_tokens", Json::num(16.0)),
+                ("stripes", Json::num(STRIPES as f64)),
+                ("concurrency", Json::num(CONCURRENCY as f64)),
+                ("max_new", Json::num(max_new as f64)),
+            ]),
+        ),
+        ("sampling", Json::Arr(rates_json)),
+        ("swap_us", Json::num(swap.mean_ns() / 1e3)),
+    ]);
+    let out =
+        std::env::var("INTFA_BENCH_OUT").unwrap_or_else(|_| "BENCH_calib_drift.json".into());
+    std::fs::write(&out, report.to_pretty()).expect("write bench report");
+    println!("\nwrote {out}");
+}

@@ -69,5 +69,5 @@ fn main() {
         ]);
     }
     print!("{}", t2.render());
-    println!("\n(CPU series validates plumbing/scaling; the dtype speedup claim lives in series A)");
+    println!("\n(CPU series validates plumbing/scaling; dtype speedup claims live in series A)");
 }

@@ -38,7 +38,7 @@ fn main() {
         let m_i8 = bench("i8 blocked", &cfg, || gemm::gemm_i8(&a8, &b8));
         let m_f32 = bench("f32 blocked", &cfg, || gemm::gemm_f32(&af, &bf));
         t.row(&[
-            format!("{n}"),
+            n.to_string(),
             format!("{:.3}", m_naive.mean_ms()),
             format!("{:.3}", m_i8.mean_ms()),
             format!("{:.2}", ops / m_i8.mean_ns()),

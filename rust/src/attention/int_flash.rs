@@ -229,16 +229,20 @@ mod tests {
     fn q_block_partition_exact_invariance() {
         // rounding depends only on the KV partition, never on B_r
         let (q, k, v) = setup(5, 128, 32, Dist::Normal);
-        let a = int_flash_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(16, 32), quant::INT8_R);
-        let b = int_flash_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(64, 32), quant::INT8_R);
+        let cfg_a = AttnConfig::new(32).blocks(16, 32);
+        let cfg_b = AttnConfig::new(32).blocks(64, 32);
+        let a = int_flash_attention_f32_in(&q, &k, &v, &cfg_a, quant::INT8_R);
+        let b = int_flash_attention_f32_in(&q, &k, &v, &cfg_b, quant::INT8_R);
         assert!(stats::max_abs_diff(&a.data, &b.data) < 1e-5);
     }
 
     #[test]
     fn kv_partition_noise_bounded() {
         let (q, k, v) = setup(6, 128, 32, Dist::Normal);
-        let a = int_flash_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(32, 16), quant::INT8_R);
-        let b = int_flash_attention_f32_in(&q, &k, &v, &AttnConfig::new(32).blocks(32, 128), quant::INT8_R);
+        let cfg_a = AttnConfig::new(32).blocks(32, 16);
+        let cfg_b = AttnConfig::new(32).blocks(32, 128);
+        let a = int_flash_attention_f32_in(&q, &k, &v, &cfg_a, quant::INT8_R);
+        let b = int_flash_attention_f32_in(&q, &k, &v, &cfg_b, quant::INT8_R);
         assert!(stats::mre(&a.data, &b.data) < 0.02);
     }
 

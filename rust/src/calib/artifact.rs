@@ -6,15 +6,17 @@
 use super::autotune::{
     self, autotune, AutotuneConfig, BucketReport, VariantTable,
 };
+use super::drift::DriftBaseline;
 use super::plan::CalibrationPlan;
 use crate::runtime::Manifest;
 use crate::util::json::{parse, Json};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
-/// Version 2 added the optional calibration geometry; version-1 files
-/// (no geometry) still load.
-const ARTIFACT_VERSION: i64 = 2;
+/// Version 2 added the optional calibration geometry; version 3 the
+/// optional drift baseline (the EMA absmax levels the run measured,
+/// consumed by online re-calibration). Version-1/2 files still load.
+const ARTIFACT_VERSION: i64 = 3;
 
 /// The geometry a calibration run measured — persisted with the artifact
 /// so deployments validate compatibility *once at load time* instead of
@@ -53,20 +55,23 @@ impl CalibrationGeometry {
     }
 
     fn from_json(j: &Json) -> Result<CalibrationGeometry> {
-        let heads = j.at("heads").as_usize().ok_or(anyhow!("geometry missing heads"))?;
+        let heads = j
+            .at("heads")
+            .as_usize()
+            .ok_or_else(|| anyhow!("geometry missing heads"))?;
         let head_dim = j
             .at("head_dim")
             .as_usize()
-            .ok_or(anyhow!("geometry missing head_dim"))?;
+            .ok_or_else(|| anyhow!("geometry missing head_dim"))?;
         if heads == 0 || head_dim == 0 {
             bail!("geometry has empty dimensions ({heads}×{head_dim})");
         }
         let seq_buckets = j
             .at("seq_buckets")
             .as_arr()
-            .ok_or(anyhow!("geometry missing seq_buckets"))?
+            .ok_or_else(|| anyhow!("geometry missing seq_buckets"))?
             .iter()
-            .map(|v| v.as_usize().ok_or(anyhow!("bad seq bucket")))
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad seq bucket")))
             .collect::<Result<Vec<usize>>>()?;
         Ok(CalibrationGeometry { heads, head_dim, seq_buckets })
     }
@@ -83,6 +88,11 @@ pub struct CalibrationArtifact {
     /// Measured geometry; `None` for version-1 artifacts and runs that
     /// never declared a head count.
     pub geometry: Option<CalibrationGeometry>,
+    /// The activation levels the run calibrated at (per-head K + V EMA
+    /// absmax) — online re-calibration's drift reference. `None` for
+    /// pre-version-3 artifacts; [`crate::calib::Recalibrator`] then
+    /// derives a baseline from the plan itself.
+    pub drift: Option<DriftBaseline>,
 }
 
 impl CalibrationArtifact {
@@ -102,7 +112,16 @@ impl CalibrationArtifact {
             seqs.dedup();
             CalibrationGeometry { heads, head_dim: cfg.head_dim, seq_buckets: seqs }
         });
-        CalibrationArtifact { plan, table, reports, geometry }
+        CalibrationArtifact { plan, table, reports, geometry, drift: None }
+    }
+
+    /// Attach the calibration run's measured drift baseline (persisted
+    /// from version 3 on; `intfa calibrate` records it so a serving
+    /// process detects drift against what was actually measured, not
+    /// against the plan's derived clips).
+    pub fn with_drift_baseline(mut self, baseline: DriftBaseline) -> CalibrationArtifact {
+        self.drift = Some(baseline);
+        self
     }
 
     pub fn to_json(&self) -> Json {
@@ -114,6 +133,9 @@ impl CalibrationArtifact {
         ];
         if let Some(g) = &self.geometry {
             fields.push(("geometry", g.to_json()));
+        }
+        if let Some(d) = &self.drift {
+            fields.push(("drift", d.to_json()));
         }
         Json::obj(fields)
     }
@@ -135,12 +157,30 @@ impl CalibrationArtifact {
             plan.validate_geometry(g.heads, g.head_dim)
                 .map_err(|e| anyhow!("calibration artifact geometry: {e}"))?;
         }
+        let drift = if j.at("drift").is_null() {
+            None
+        } else {
+            let d = DriftBaseline::from_json(j.at("drift")).map_err(|e| anyhow!("{e}"))?;
+            // a baseline the declared geometry cannot serve would poison
+            // every drift evaluation — same fail-fast rule as the plan
+            if let Some(g) = &geometry {
+                if d.k.len() != g.heads {
+                    bail!(
+                        "drift baseline has {} K levels but the geometry declares {} heads",
+                        d.k.len(),
+                        g.heads
+                    );
+                }
+            }
+            Some(d)
+        };
         Ok(CalibrationArtifact {
             plan,
             table: VariantTable::from_json(j.at("table")).map_err(|e| anyhow!("{e}"))?,
             reports: autotune::reports_from_json(j.at("reports"))
                 .map_err(|e| anyhow!("{e}"))?,
             geometry,
+            drift,
         })
     }
 
@@ -203,7 +243,8 @@ mod tests {
             head_dim: 16,
             seq_buckets: vec![128],
         });
-        CalibrationArtifact { plan, table, reports: Vec::new(), geometry }
+        let drift = Some(DriftBaseline { k: vec![1.8, 2.1], v: 2.4 });
+        CalibrationArtifact { plan, table, reports: Vec::new(), geometry, drift }
     }
 
     #[test]
@@ -233,10 +274,39 @@ mod tests {
         if let crate::util::json::Json::Obj(map) = &mut j {
             map.insert("version".into(), Json::num(1.0));
             map.remove("geometry");
+            map.remove("drift");
         }
         let loaded = CalibrationArtifact::from_json(&j).unwrap();
         assert!(loaded.geometry.is_none());
+        assert!(loaded.drift.is_none());
         assert_eq!(loaded.plan, sample_artifact().plan);
+    }
+
+    #[test]
+    fn version_2_artifacts_load_without_drift_baseline() {
+        // a pre-drift artifact (geometry but no baseline) still loads;
+        // the recalibrator derives its baseline from the plan instead
+        let mut j = sample_artifact().to_json();
+        if let crate::util::json::Json::Obj(map) = &mut j {
+            map.insert("version".into(), Json::num(2.0));
+            map.remove("drift");
+        }
+        let loaded = CalibrationArtifact::from_json(&j).unwrap();
+        assert!(loaded.drift.is_none());
+        assert_eq!(loaded.geometry, sample_artifact().geometry);
+        assert_eq!(loaded.plan, sample_artifact().plan);
+    }
+
+    #[test]
+    fn version_3_drift_baseline_round_trips_and_validates() {
+        let artifact = sample_artifact();
+        let restored = CalibrationArtifact::from_json(&artifact.to_json()).unwrap();
+        assert_eq!(restored.drift, artifact.drift);
+        assert_eq!(restored, artifact);
+        // a baseline disagreeing with the geometry head count fails load
+        let mut bad = artifact.clone();
+        bad.drift = Some(DriftBaseline { k: vec![1.0; 5], v: 1.0 });
+        assert!(CalibrationArtifact::from_json(&bad.to_json()).is_err());
     }
 
     #[test]

@@ -1,0 +1,423 @@
+//! Online drift detection for a loaded calibration plan.
+//!
+//! A [`super::plan::CalibrationPlan`] is measured once; the paper's
+//! accuracy claims (token-level INT8 within a few percent of exact
+//! attention) hold only while the live activation distribution matches
+//! the one the scales were measured on. A serving process whose traffic
+//! shifts — new prompt mix, new model revision — silently degrades
+//! until a restart. This module is the detection half of online
+//! re-calibration (the swap half lives in [`super::swap`]):
+//!
+//!   - [`SampledStats`] — a sharded, thread-safe [`CalibStats`] fed by
+//!     the serving path at a configurable sample rate (1-in-N rows;
+//!     deterministic counter sampling, no RNG on the hot path);
+//!   - [`DriftBaseline`] — the per-head K and tensor V absmax levels
+//!     the loaded plan was calibrated at (persisted in version-3
+//!     artifacts, derived from the plan for older ones);
+//!   - [`DriftDetector`] — compares the live EMA absmax distribution
+//!     against the baseline as a normalized log-ratio divergence, with
+//!     hysteresis (separate trigger and release levels plus a
+//!     consecutive-window count) so a transient burst never flaps a
+//!     swap.
+
+use super::plan::UNCALIBRATED_ABSMAX;
+use super::stats::CalibStats;
+use super::CalibrationPlan;
+use crate::quant::SCALE_EPS;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Sharded sampled-statistics collector: the serving path's in-line
+/// [`CalibStats`]. Sampling is deterministic (every `every`-th recorded
+/// row is kept) and shards rotate per kept row, so concurrent recorders
+/// rarely contend on one mutex. All shards share one geometry; a
+/// [`SampledStats::merged`] snapshot folds them into a single
+/// [`CalibStats`] for drift evaluation and plan rebuilds.
+pub struct SampledStats {
+    shards: Vec<Mutex<CalibStats>>,
+    heads: usize,
+    head_dim: usize,
+    /// Keep one of every `every` offered rows (`0` disables sampling).
+    every: u64,
+    /// Rows offered (sampled or not) — the sampling clock.
+    seen: AtomicU64,
+    /// Rows actually folded into a shard.
+    kept: AtomicU64,
+}
+
+impl SampledStats {
+    pub fn new(heads: usize, head_dim: usize, every: u64, shards: usize) -> SampledStats {
+        SampledStats {
+            shards: (0..shards.max(1))
+                .map(|_| Mutex::new(CalibStats::new(heads, head_dim)))
+                .collect(),
+            heads,
+            head_dim,
+            every,
+            seen: AtomicU64::new(0),
+            kept: AtomicU64::new(0),
+        }
+    }
+
+    /// Offer one decode-path token's flat (heads, d) K/V rows; folds it
+    /// in when the sampling clock selects it. Returns whether the row
+    /// was kept. Shape errors are ignored (the serving path validates
+    /// shapes long before this hook).
+    pub fn offer_kv_token(&self, k: &[f32], v: &[f32]) -> bool {
+        if self.every == 0 {
+            return false;
+        }
+        let n = self.seen.fetch_add(1, Ordering::Relaxed);
+        if n % self.every != 0 {
+            return false;
+        }
+        let shard = ((n / self.every) % self.shards.len() as u64) as usize;
+        let mut guard = self.shards[shard].lock().unwrap();
+        if guard.record_kv_token(k, v).is_ok() {
+            self.kept.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Rows folded in so far (across all shards).
+    pub fn kept(&self) -> u64 {
+        self.kept.load(Ordering::Relaxed)
+    }
+
+    /// Fold every shard into one snapshot.
+    pub fn merged(&self) -> CalibStats {
+        let mut out = CalibStats::new(self.heads, self.head_dim);
+        for shard in &self.shards {
+            let guard = shard.lock().unwrap();
+            out.merge(&guard).expect("shards share one geometry");
+        }
+        out
+    }
+
+    /// Drop all collected statistics (after a swap: the new plan's
+    /// drift window starts fresh).
+    pub fn reset(&self) {
+        for shard in &self.shards {
+            *shard.lock().unwrap() = CalibStats::new(self.heads, self.head_dim);
+        }
+        self.kept.store(0, Ordering::Relaxed);
+    }
+}
+
+/// The activation levels a plan was calibrated at: per-head K absmax
+/// and the tensor-level V absmax. Version-3 artifacts persist the
+/// calibration run's EMA levels; for older artifacts (or uncalibrated
+/// fallbacks) the baseline derives from the plan itself.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftBaseline {
+    /// Per-head K absmax level.
+    pub k: Vec<f32>,
+    /// Tensor-level V absmax level.
+    pub v: f32,
+}
+
+impl DriftBaseline {
+    /// Baseline from the plan's own scales: K from the calibrated clips
+    /// (the N(0,1) guess when the plan carries none), V from the
+    /// measured range behind the V scale.
+    pub fn from_plan(plan: &CalibrationPlan, heads: usize) -> DriftBaseline {
+        let k = if plan.k_clip.len() == heads {
+            plan.k_clip.clone()
+        } else {
+            vec![UNCALIBRATED_ABSMAX; heads]
+        };
+        DriftBaseline { k, v: plan.v_absmax.max(SCALE_EPS) }
+    }
+
+    /// Baseline from measured statistics (what a calibration run — or a
+    /// completed swap — observed): the drift-tolerant EMA levels.
+    pub fn from_stats(stats: &CalibStats) -> DriftBaseline {
+        DriftBaseline {
+            k: stats.k.iter().map(|s| s.ema_absmax().max(SCALE_EPS)).collect(),
+            v: stats.v.ema_absmax().max(SCALE_EPS),
+        }
+    }
+
+    /// Normalized divergence of live statistics from this baseline: the
+    /// worst per-head |ln(live / baseline)| over the K heads and V.
+    /// Log-ratio is symmetric (shrinking activations drift exactly as
+    /// much as growing ones) and scale-free, so one threshold covers
+    /// every head. Operands with no observed rows contribute nothing.
+    pub fn divergence(&self, stats: &CalibStats) -> f32 {
+        let ratio = |live: f32, base: f32| -> f32 {
+            if live <= 0.0 || base <= 0.0 {
+                0.0
+            } else {
+                (live / base).ln().abs()
+            }
+        };
+        let mut worst = 0.0f32;
+        for (s, &base) in stats.k.iter().zip(&self.k) {
+            if s.rows() > 0 {
+                worst = worst.max(ratio(s.ema_absmax(), base));
+            }
+        }
+        if stats.v.rows() > 0 {
+            worst = worst.max(ratio(stats.v.ema_absmax(), self.v));
+        }
+        worst
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "k",
+                Json::Arr(self.k.iter().map(|&x| Json::num(x as f64)).collect()),
+            ),
+            ("v", Json::num(self.v as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DriftBaseline, String> {
+        let k = j
+            .at("k")
+            .as_arr()
+            .ok_or("drift baseline missing k")?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|v| v as f32)
+                    .ok_or_else(|| "bad drift k entry".to_string())
+            })
+            .collect::<Result<Vec<f32>, String>>()?;
+        let v = j.at("v").as_f64().ok_or("drift baseline missing v")? as f32;
+        if k.iter().any(|x| !x.is_finite() || *x <= 0.0) || !v.is_finite() || v <= 0.0 {
+            return Err("drift baseline levels must be positive and finite".into());
+        }
+        Ok(DriftBaseline { k, v })
+    }
+}
+
+/// One drift evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftReport {
+    /// Worst-case log-ratio divergence (see [`DriftBaseline::divergence`]).
+    pub divergence: f32,
+    /// This window crossed the trigger threshold.
+    pub drifted: bool,
+    /// Consecutive (non-released) drifted windows so far.
+    pub windows: u32,
+    /// Enough consecutive drifted windows to act on.
+    pub sustained: bool,
+}
+
+/// Hysteresis drift detector: `evaluate` counts consecutive windows
+/// whose divergence exceeds `threshold`; a window must fall below
+/// `threshold * release` to reset the count. A burst that crosses the
+/// trigger once and subsides never becomes sustained, and oscillation
+/// in the dead band between release and trigger neither triggers nor
+/// resets — the detector cannot flap.
+pub struct DriftDetector {
+    baseline: DriftBaseline,
+    threshold: f32,
+    release: f32,
+    trigger: u32,
+    above: u32,
+}
+
+impl DriftDetector {
+    /// `threshold` is the log-ratio trigger level, `release` the
+    /// hysteresis exit fraction of it (0 < release < 1), `trigger` the
+    /// consecutive drifted windows required before `sustained`.
+    pub fn new(
+        baseline: DriftBaseline,
+        threshold: f32,
+        release: f32,
+        trigger: u32,
+    ) -> DriftDetector {
+        assert!(threshold > 0.0, "drift threshold must be positive");
+        assert!(
+            release > 0.0 && release < 1.0,
+            "hysteresis release must be a fraction of the threshold in (0, 1)"
+        );
+        DriftDetector { baseline, threshold, release, trigger: trigger.max(1), above: 0 }
+    }
+
+    pub fn baseline(&self) -> &DriftBaseline {
+        &self.baseline
+    }
+
+    /// Current divergence without advancing the hysteresis state (the
+    /// status verb's read-only view).
+    pub fn peek(&self, stats: &CalibStats) -> f32 {
+        self.baseline.divergence(stats)
+    }
+
+    /// Fold one evaluation window into the hysteresis state.
+    pub fn evaluate(&mut self, stats: &CalibStats) -> DriftReport {
+        let divergence = self.baseline.divergence(stats);
+        let drifted = divergence > self.threshold;
+        if drifted {
+            self.above += 1;
+        } else if divergence < self.threshold * self.release {
+            self.above = 0;
+        }
+        DriftReport {
+            divergence,
+            drifted,
+            windows: self.above,
+            sustained: self.above >= self.trigger,
+        }
+    }
+
+    /// Re-anchor on a new baseline (after a swap) and reset hysteresis.
+    pub fn rebase(&mut self, baseline: DriftBaseline) {
+        self.baseline = baseline;
+        self.above = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::INT8_R;
+    use crate::util::rng::Pcg64;
+
+    const HEADS: usize = 2;
+    const HEAD_DIM: usize = 8;
+
+    fn stats_at(sigma: f32, rows: usize, seed: u64) -> CalibStats {
+        let mut cs = CalibStats::new(HEADS, HEAD_DIM);
+        let mut rng = Pcg64::seeded(seed);
+        for _ in 0..rows {
+            let k: Vec<f32> = rng.normal_vec(HEADS * HEAD_DIM).iter().map(|x| x * sigma).collect();
+            let v: Vec<f32> = rng.normal_vec(HEADS * HEAD_DIM).iter().map(|x| x * sigma).collect();
+            cs.record_kv_token(&k, &v).unwrap();
+        }
+        cs
+    }
+
+    #[test]
+    fn sampling_keeps_one_in_every_n() {
+        let s = SampledStats::new(HEADS, HEAD_DIM, 4, 2);
+        let mut rng = Pcg64::seeded(1);
+        let mut kept = 0;
+        for _ in 0..40 {
+            let k = rng.normal_vec(HEADS * HEAD_DIM);
+            let v = rng.normal_vec(HEADS * HEAD_DIM);
+            if s.offer_kv_token(&k, &v) {
+                kept += 1;
+            }
+        }
+        assert_eq!(kept, 10, "every 4th row kept");
+        assert_eq!(s.kept(), 10);
+        let merged = s.merged();
+        assert_eq!(merged.batches(), 10);
+        assert_eq!(merged.k[0].rows(), 10);
+        s.reset();
+        assert_eq!(s.kept(), 0);
+        assert_eq!(s.merged().batches(), 0);
+        // rate 0 disables sampling entirely
+        let off = SampledStats::new(HEADS, HEAD_DIM, 0, 1);
+        assert!(!off.offer_kv_token(&rng.normal_vec(16), &rng.normal_vec(16)));
+        assert_eq!(off.kept(), 0);
+    }
+
+    #[test]
+    fn sampled_merge_equals_direct_collection() {
+        // every-row sampling across shards must equal one unsharded
+        // collector fed the same rows
+        let s = SampledStats::new(HEADS, HEAD_DIM, 1, 3);
+        let mut direct = CalibStats::new(HEADS, HEAD_DIM);
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..30 {
+            let k = rng.normal_vec(HEADS * HEAD_DIM);
+            let v = rng.normal_vec(HEADS * HEAD_DIM);
+            assert!(s.offer_kv_token(&k, &v));
+            direct.record_kv_token(&k, &v).unwrap();
+        }
+        let merged = s.merged();
+        assert_eq!(merged.batches(), direct.batches());
+        assert_eq!(merged.v.absmax(), direct.v.absmax());
+        assert_eq!(merged.k[1].absmax(), direct.k[1].absmax());
+    }
+
+    #[test]
+    fn baseline_sources_and_round_trip() {
+        let mut plan = CalibrationPlan::uncalibrated(INT8_R);
+        let b = DriftBaseline::from_plan(&plan, HEADS);
+        assert_eq!(b.k, vec![UNCALIBRATED_ABSMAX; HEADS]);
+        assert_eq!(b.v, UNCALIBRATED_ABSMAX);
+        plan.k_clip = vec![1.5, 2.5];
+        plan.v_absmax = 0.8;
+        let b = DriftBaseline::from_plan(&plan, HEADS);
+        assert_eq!(b.k, vec![1.5, 2.5]);
+        assert_eq!(b.v, 0.8);
+        let restored = DriftBaseline::from_json(&b.to_json()).unwrap();
+        assert_eq!(restored, b);
+        // degenerate levels are rejected
+        let bad = Json::obj(vec![
+            ("k", Json::Arr(vec![Json::num(0.0)])),
+            ("v", Json::num(1.0)),
+        ]);
+        assert!(DriftBaseline::from_json(&bad).is_err());
+        assert!(DriftBaseline::from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn divergence_is_symmetric_and_zero_in_distribution() {
+        let stats = stats_at(1.0, 200, 3);
+        let base = DriftBaseline::from_stats(&stats);
+        // in-distribution traffic measures ~zero divergence
+        let live = stats_at(1.0, 200, 4);
+        assert!(base.divergence(&live) < 0.15, "{}", base.divergence(&live));
+        // a 3× shrink and a 3× growth diverge equally (log-ratio)
+        let up = base.divergence(&stats_at(3.0, 200, 5));
+        let down = base.divergence(&stats_at(1.0 / 3.0, 200, 6));
+        assert!(up > 0.8, "{up}");
+        assert!((up - down).abs() < 0.15, "up {up} down {down}");
+        // empty stats diverge nowhere
+        assert_eq!(base.divergence(&CalibStats::new(HEADS, HEAD_DIM)), 0.0);
+    }
+
+    #[test]
+    fn hysteresis_requires_sustained_drift_and_does_not_flap() {
+        let base = DriftBaseline::from_stats(&stats_at(1.0, 200, 7));
+        let mut det = DriftDetector::new(base, 0.25, 0.5, 3);
+        let calm = stats_at(1.0, 200, 8);
+        let drifted = stats_at(3.0, 200, 9);
+
+        // a single burst arms but never sustains once traffic calms
+        let r = det.evaluate(&drifted);
+        assert!(r.drifted && !r.sustained);
+        assert_eq!(r.windows, 1);
+        let r = det.evaluate(&calm);
+        assert!(!r.drifted);
+        assert_eq!(r.windows, 0, "release resets the count");
+
+        // oscillating traffic inside the dead band (between release and
+        // trigger) neither triggers nor resets: the detector holds
+        let band = stats_at(1.18, 200, 10);
+        let d = det.baseline().divergence(&band);
+        assert!(
+            d < 0.25 && d > 0.25 * 0.5,
+            "dead-band traffic must sit between release and trigger, got {d}"
+        );
+        det.evaluate(&drifted);
+        det.evaluate(&drifted);
+        let r = det.evaluate(&band);
+        assert_eq!(r.windows, 2, "dead band holds the armed count");
+        assert!(!r.sustained);
+
+        // sustained drift: trigger consecutive windows fire
+        det.rebase(DriftBaseline::from_stats(&stats_at(1.0, 200, 11)));
+        for i in 1..=3u32 {
+            let r = det.evaluate(&drifted);
+            assert_eq!(r.windows, i);
+            assert_eq!(r.sustained, i >= 3);
+        }
+        // rebase re-anchors: the drifted distribution becomes the norm
+        det.rebase(DriftBaseline::from_stats(&drifted));
+        let r = det.evaluate(&stats_at(3.0, 200, 12));
+        assert!(!r.drifted, "rebased detector accepts the new distribution");
+        assert_eq!(r.windows, 0);
+    }
+}

@@ -15,6 +15,14 @@
 //!      per (seq bucket × variant) and emits the variant-selection table
 //!      the router consumes in place of the static accuracy-class chain.
 //!
+//! Calibration is no longer boot-time-only: [`drift`] samples
+//! activation rows in the serving path and detects EMA-divergence
+//! drift against the loaded plan's baseline, and [`swap`] rebuilds a
+//! candidate plan from the sampled statistics and hot-swaps it behind
+//! an epoch handle without a restart (admitted sequences keep their
+//! admission-time grids; see the [`swap`] module docs for the epoch
+//! invariant).
+//!
 //! [`artifact`] persists the result next to the AOT artifacts (an
 //! optional `"calibration"` entry in `manifest.json`), so a serving
 //! process boots from measured, per-deployment scales:
@@ -33,10 +41,14 @@
 
 pub mod artifact;
 pub mod autotune;
+pub mod drift;
 pub mod plan;
 pub mod stats;
+pub mod swap;
 
 pub use artifact::{CalibrationArtifact, CalibrationGeometry};
 pub use autotune::{AutotuneConfig, BucketReport, VariantMeasurement, VariantTable};
+pub use drift::{DriftBaseline, DriftDetector, DriftReport, SampledStats};
 pub use plan::{CalibrationPlan, PlanBuilder, ScaleMethod, Smoothing};
 pub use stats::{CalibStats, StreamStats};
+pub use swap::{PlanHandle, RecalibConfig, Recalibrator, VersionedPlan};

@@ -1,0 +1,493 @@
+//! Zero-downtime calibration hot-swap: the epoch-tagged plan handle and
+//! the online re-calibrator that drives it.
+//!
+//! The swap contract, end to end:
+//!
+//!   - the serving path samples activation rows into a
+//!     [`super::drift::SampledStats`] (configurable 1-in-N rate);
+//!   - a [`super::drift::DriftDetector`] compares the live EMA absmax
+//!     distribution against the loaded plan's baseline with hysteresis;
+//!   - on *sustained* drift the [`Recalibrator`] rebuilds a candidate
+//!     [`CalibrationPlan`] from the sampled statistics, validates its
+//!     geometry, and swaps it in through a caller-supplied swap hook
+//!     (the KV pool's `swap_scales`) plus the [`PlanHandle`] epoch
+//!     handle — no restart, no traffic pause.
+//!
+//! # The epoch invariant
+//!
+//! A swap must never change an already-admitted sequence's tokens.
+//! This holds structurally, not by locking: every sequence snapshots
+//! its quantization config at admission (`kv::cache` clones the
+//! `Arc<CacheConfig>` per sequence), so its future appends keep the
+//! admission-time grid; and every written block stamps its V scale
+//! (`kv::block::Block::v_scale`), so decode dequantizes each block
+//! under the grid it was written with even when a sequence mixes
+//! pre- and post-swap blocks via prefix sharing. New admissions pick
+//! up the new scales at `start_sequence` — the swap barrier is the
+//! admission snapshot itself.
+//!
+//! Hot-swap is unsupported in per-channel K mode: those scales are
+//! folded into the *query* at decode, so mixed-epoch blocks under one
+//! query fold would decode wrong. `Recalibrator::new` refuses the mode
+//! up front.
+
+use super::drift::{DriftBaseline, DriftDetector, SampledStats};
+use super::plan::PlanBuilder;
+use super::CalibrationPlan;
+use crate::coordinator::metrics::{Counter, Gauge, Registry};
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+
+/// One epoch of the serving plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VersionedPlan {
+    /// 0 for the boot plan; +1 per swap.
+    pub epoch: u64,
+    pub plan: CalibrationPlan,
+}
+
+/// ArcSwap-style epoch handle on the current plan: `load` hands out a
+/// cheap `Arc` snapshot (readers never block a swap beyond the brief
+/// pointer exchange), `swap` installs a new epoch atomically. In-flight
+/// holders keep their epoch's `Arc` until they drop it.
+pub struct PlanHandle {
+    cur: Mutex<Arc<VersionedPlan>>,
+}
+
+impl PlanHandle {
+    pub fn new(plan: CalibrationPlan) -> PlanHandle {
+        PlanHandle { cur: Mutex::new(Arc::new(VersionedPlan { epoch: 0, plan })) }
+    }
+
+    /// Snapshot the current epoch's plan.
+    pub fn load(&self) -> Arc<VersionedPlan> {
+        self.cur.lock().unwrap().clone()
+    }
+
+    /// Install `plan` as the next epoch; returns the new epoch number.
+    pub fn swap(&self, plan: CalibrationPlan) -> u64 {
+        let mut guard = self.cur.lock().unwrap();
+        let epoch = guard.epoch + 1;
+        *guard = Arc::new(VersionedPlan { epoch, plan });
+        epoch
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.cur.lock().unwrap().epoch
+    }
+}
+
+/// Online re-calibration configuration (`intfa serve --recalib-*`).
+#[derive(Clone, Copy, Debug)]
+pub struct RecalibConfig {
+    /// Sample one of every `sample_every` activation rows (0 disables
+    /// collection entirely).
+    pub sample_every: u64,
+    /// Log-ratio divergence that counts a window as drifted
+    /// (`--drift-threshold`; 0.25 ≈ a 28 % shift of the absmax level).
+    pub threshold: f32,
+    /// Hysteresis release fraction: divergence must fall below
+    /// `threshold * release` to reset the drifted-window count.
+    pub release: f32,
+    /// Consecutive drifted windows before a swap fires.
+    pub trigger: u32,
+    /// Minimum sampled rows before any drift verdict (an empty window
+    /// must never swap).
+    pub min_rows: u64,
+    /// Scheduler ticks between drift evaluations.
+    pub check_every_ticks: u64,
+    /// Statistics shards (concurrent recorders rarely contend).
+    pub shards: usize,
+}
+
+impl Default for RecalibConfig {
+    fn default() -> Self {
+        RecalibConfig {
+            sample_every: 100,
+            threshold: 0.25,
+            release: 0.5,
+            trigger: 3,
+            min_rows: 256,
+            check_every_ticks: 64,
+            shards: 4,
+        }
+    }
+}
+
+/// The online re-calibrator: owns the sampled statistics, the drift
+/// detector and the epoch handle; the scheduler's tick loop calls
+/// [`Recalibrator::record_token`] (sampling) and
+/// [`Recalibrator::check`] (evaluation + swap). Swapping goes through a
+/// caller-supplied hook so this module never reaches into the KV pool
+/// directly — the hook is `StripedKvCache::swap_scales` in the engine
+/// and a recording closure in tests.
+pub struct Recalibrator {
+    cfg: RecalibConfig,
+    handle: PlanHandle,
+    stats: SampledStats,
+    detector: Mutex<DriftDetector>,
+    /// Serializes whole rebuild→pool-swap→handle-swap→rebase cycles:
+    /// the tick loop's auto-check and an operator force-swap running
+    /// concurrently must not interleave their pool and handle updates,
+    /// or the handle could report a plan the pool no longer serves.
+    swap_gate: Mutex<()>,
+    builder: PlanBuilder,
+    heads: usize,
+    head_dim: usize,
+    swaps: Arc<Counter>,
+    checks: Arc<Counter>,
+    swap_failed: Arc<Counter>,
+    divergence_milli: Arc<Gauge>,
+    windows: Arc<Gauge>,
+    epoch_gauge: Arc<Gauge>,
+}
+
+impl Recalibrator {
+    /// Build over the boot plan. `baseline` is the version-3 artifact's
+    /// persisted drift baseline when present; older artifacts derive it
+    /// from the plan. Fails for plans this geometry cannot serve and
+    /// for per-channel K mode (see the module docs).
+    pub fn new(
+        plan: CalibrationPlan,
+        baseline: Option<DriftBaseline>,
+        heads: usize,
+        head_dim: usize,
+        cfg: RecalibConfig,
+        metrics: &Registry,
+    ) -> Result<Recalibrator, String> {
+        plan.validate_geometry(heads, head_dim)?;
+        if !plan.k_channel_absmax.is_empty() {
+            return Err(
+                "online re-calibration is unsupported in per-channel K mode: channel \
+                 scales fold into the decode query, so mixed-epoch blocks would \
+                 dequantize wrong"
+                    .to_string(),
+            );
+        }
+        if cfg.threshold <= 0.0 || !cfg.threshold.is_finite() {
+            return Err(format!(
+                "drift threshold must be positive and finite, got {}",
+                cfg.threshold
+            ));
+        }
+        // exclusive at 0: release = 0 could never reset the armed
+        // count, so isolated bursts spread over days would accumulate
+        // into a spurious swap — exactly what hysteresis exists to stop
+        if cfg.release <= 0.0 || cfg.release >= 1.0 {
+            return Err(format!(
+                "hysteresis release must be a fraction in (0, 1), got {}",
+                cfg.release
+            ));
+        }
+        if let Some(b) = &baseline {
+            if b.k.len() != heads {
+                return Err(format!(
+                    "drift baseline has {} K levels but the deployment has {heads} heads",
+                    b.k.len()
+                ));
+            }
+        }
+        let baseline = baseline.unwrap_or_else(|| DriftBaseline::from_plan(&plan, heads));
+        let detector =
+            DriftDetector::new(baseline, cfg.threshold, cfg.release, cfg.trigger);
+        // rebuild candidates with the deployed plan's estimator and
+        // smoothing choice — a swap retunes scales, never policy
+        let builder = PlanBuilder::new(plan.r).method(plan.method).smoothing(plan.smoothing);
+        let epoch_gauge = metrics.gauge("calib.epoch");
+        epoch_gauge.set(0);
+        Ok(Recalibrator {
+            stats: SampledStats::new(heads, head_dim, cfg.sample_every, cfg.shards),
+            detector: Mutex::new(detector),
+            swap_gate: Mutex::new(()),
+            builder,
+            heads,
+            head_dim,
+            swaps: metrics.counter("calib.swaps"),
+            checks: metrics.counter("calib.drift.checks"),
+            swap_failed: metrics.counter("calib.drift.swap_failed"),
+            divergence_milli: metrics.gauge("calib.drift.divergence_milli"),
+            windows: metrics.gauge("calib.drift.windows"),
+            epoch_gauge,
+            handle: PlanHandle::new(plan),
+            cfg,
+        })
+    }
+
+    /// The epoch handle (current plan + epoch).
+    pub fn handle(&self) -> &PlanHandle {
+        &self.handle
+    }
+
+    /// Drift-evaluation cadence in scheduler ticks.
+    pub fn check_every(&self) -> u64 {
+        self.cfg.check_every_ticks.max(1)
+    }
+
+    /// Sampling hook for one token's flat (heads, d) K/V rows — called
+    /// from the tick loop's append path and the engine's `extend` /
+    /// `prefill` verbs. Deterministic 1-in-N sampling; costs one atomic
+    /// increment on unsampled rows.
+    pub fn record_token(&self, k: &[f32], v: &[f32]) {
+        self.stats.offer_kv_token(k, v);
+    }
+
+    /// Sampled rows collected in the current window.
+    pub fn sampled_rows(&self) -> u64 {
+        self.stats.kept()
+    }
+
+    /// One drift evaluation window: update the detector, and on
+    /// sustained drift rebuild a candidate plan and swap it through
+    /// `swap_scales`. Returns the new epoch when a swap happened.
+    pub fn check(
+        &self,
+        swap_scales: &dyn Fn(&CalibrationPlan) -> Result<u64, String>,
+    ) -> Option<u64> {
+        self.checks.inc();
+        // gate on the cheap counter before paying the shard merge: the
+        // check runs on the tick thread against hot-path recorders
+        if self.stats.kept() < self.cfg.min_rows.max(1) {
+            return None;
+        }
+        let merged = self.stats.merged();
+        let report = {
+            let mut det = self.detector.lock().unwrap();
+            det.evaluate(&merged)
+        };
+        self.divergence_milli.set((report.divergence * 1000.0) as i64);
+        self.windows.set(report.windows as i64);
+        if !report.sustained {
+            return None;
+        }
+        match self.rebuild_and_swap(&merged, swap_scales) {
+            Ok(epoch) => Some(epoch),
+            Err(_) => {
+                self.swap_failed.inc();
+                None
+            }
+        }
+    }
+
+    /// Operator-forced swap (the server's `recalib` verb): rebuild from
+    /// whatever is sampled and swap now, drift or not.
+    pub fn force_swap(
+        &self,
+        swap_scales: &dyn Fn(&CalibrationPlan) -> Result<u64, String>,
+    ) -> Result<u64, String> {
+        let merged = self.stats.merged();
+        if merged.batches() == 0 {
+            return Err("no sampled activation rows to calibrate from".into());
+        }
+        self.rebuild_and_swap(&merged, swap_scales)
+    }
+
+    fn rebuild_and_swap(
+        &self,
+        merged: &super::CalibStats,
+        swap_scales: &dyn Fn(&CalibrationPlan) -> Result<u64, String>,
+    ) -> Result<u64, String> {
+        let _gate = self.swap_gate.lock().unwrap();
+        let candidate = self.builder.build(merged);
+        candidate.validate_geometry(self.heads, self.head_dim)?;
+        // the pool swap can fail (geometry drift, unsupported mode);
+        // the handle only advances once the pool accepted the plan, so
+        // the two can never disagree about the serving scales
+        swap_scales(&candidate)?;
+        let epoch = self.handle.swap(candidate);
+        {
+            let mut det = self.detector.lock().unwrap();
+            det.rebase(DriftBaseline::from_stats(merged));
+        }
+        self.stats.reset();
+        self.swaps.inc();
+        self.epoch_gauge.set(epoch as i64);
+        self.divergence_milli.set(0);
+        self.windows.set(0);
+        Ok(epoch)
+    }
+
+    /// Status snapshot for the server's `recalib` verb.
+    pub fn status(&self) -> Json {
+        let merged = self.stats.merged();
+        let (divergence, baseline_v) = {
+            let det = self.detector.lock().unwrap();
+            (det.peek(&merged), det.baseline().v)
+        };
+        let cur = self.handle.load();
+        Json::obj(vec![
+            ("epoch", Json::num(cur.epoch as f64)),
+            ("swaps", Json::num(self.swaps.get() as f64)),
+            ("sampled_rows", Json::num(self.stats.kept() as f64)),
+            ("sample_every", Json::num(self.cfg.sample_every as f64)),
+            ("divergence", Json::num(divergence as f64)),
+            ("threshold", Json::num(self.cfg.threshold as f64)),
+            ("min_rows", Json::num(self.cfg.min_rows as f64)),
+            ("baseline_v_absmax", Json::num(baseline_v as f64)),
+            ("v_scale", Json::num(cur.plan.v_scale as f64)),
+            ("plan_batches", Json::num(cur.plan.batches as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::INT8_R;
+    use crate::util::rng::Pcg64;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    const HEADS: usize = 2;
+    const HEAD_DIM: usize = 8;
+
+    fn recalibrator(cfg: RecalibConfig, registry: &Registry) -> Recalibrator {
+        let mut plan = CalibrationPlan::uncalibrated(INT8_R);
+        // boot plan calibrated far below N(0,1) traffic → drifted
+        plan.v_absmax = 0.2;
+        plan.v_scale = 0.2 / plan.r;
+        plan.batches = 1;
+        Recalibrator::new(plan, None, HEADS, HEAD_DIM, cfg, registry).unwrap()
+    }
+
+    fn feed(rc: &Recalibrator, rows: usize, seed: u64) {
+        let mut rng = Pcg64::seeded(seed);
+        for _ in 0..rows {
+            let k = rng.normal_vec(HEADS * HEAD_DIM);
+            let v = rng.normal_vec(HEADS * HEAD_DIM);
+            rc.record_token(&k, &v);
+        }
+    }
+
+    #[test]
+    fn plan_handle_epochs_and_snapshots() {
+        let handle = PlanHandle::new(CalibrationPlan::uncalibrated(INT8_R));
+        assert_eq!(handle.epoch(), 0);
+        let boot = handle.load();
+        let mut next = CalibrationPlan::uncalibrated(INT8_R);
+        next.v_absmax = 2.0;
+        next.v_scale = 2.0 / next.r;
+        assert_eq!(handle.swap(next.clone()), 1);
+        assert_eq!(handle.epoch(), 1);
+        // the pre-swap snapshot is untouched — in-flight holders keep
+        // their admission epoch
+        assert_eq!(boot.epoch, 0);
+        assert_eq!(boot.plan, CalibrationPlan::uncalibrated(INT8_R));
+        assert_eq!(handle.load().plan, next);
+    }
+
+    #[test]
+    fn sustained_drift_swaps_once_then_settles() {
+        let registry = Registry::default();
+        let cfg = RecalibConfig {
+            sample_every: 1,
+            trigger: 2,
+            min_rows: 32,
+            ..RecalibConfig::default()
+        };
+        let rc = recalibrator(cfg, &registry);
+        let swapped = AtomicU64::new(0);
+        let epoch = AtomicU64::new(0);
+        let swap = |p: &CalibrationPlan| -> Result<u64, String> {
+            assert!(p.v_absmax > 1.0, "candidate measured from N(0,1) traffic");
+            swapped.fetch_add(1, Ordering::Relaxed);
+            Ok(epoch.fetch_add(1, Ordering::Relaxed) + 1)
+        };
+        feed(&rc, 64, 1);
+        // first drifted window arms, second sustains → swap
+        assert_eq!(rc.check(&swap), None);
+        assert_eq!(rc.check(&swap), Some(1));
+        assert_eq!(swapped.load(Ordering::Relaxed), 1);
+        assert_eq!(registry.counter("calib.swaps").get(), 1);
+        assert_eq!(registry.gauge("calib.epoch").get(), 1);
+        assert_eq!(rc.handle().epoch(), 1);
+        // stats were reset: below min_rows, no further verdicts
+        assert_eq!(rc.sampled_rows(), 0);
+        assert_eq!(rc.check(&swap), None);
+        // in-distribution traffic against the rebased baseline: no flap
+        feed(&rc, 64, 2);
+        assert_eq!(rc.check(&swap), None);
+        assert_eq!(rc.check(&swap), None);
+        assert_eq!(swapped.load(Ordering::Relaxed), 1, "exactly one swap");
+    }
+
+    #[test]
+    fn failed_pool_swap_keeps_the_old_epoch() {
+        let registry = Registry::default();
+        let cfg = RecalibConfig {
+            sample_every: 1,
+            trigger: 1,
+            min_rows: 8,
+            ..RecalibConfig::default()
+        };
+        let rc = recalibrator(cfg, &registry);
+        feed(&rc, 16, 3);
+        let fail = |_: &CalibrationPlan| -> Result<u64, String> { Err("pool said no".into()) };
+        assert_eq!(rc.check(&fail), None);
+        assert_eq!(rc.handle().epoch(), 0, "handle never advances past the pool");
+        assert_eq!(registry.counter("calib.drift.swap_failed").get(), 1);
+        assert_eq!(registry.counter("calib.swaps").get(), 0);
+        // samples are kept — the next healthy check can still swap
+        assert!(rc.sampled_rows() >= 16);
+        let ok = |_: &CalibrationPlan| -> Result<u64, String> { Ok(1) };
+        assert_eq!(rc.check(&ok), Some(1));
+    }
+
+    #[test]
+    fn force_swap_needs_samples_and_min_rows_gates_checks() {
+        let registry = Registry::default();
+        let cfg = RecalibConfig {
+            sample_every: 1,
+            trigger: 1,
+            min_rows: 1_000_000,
+            ..RecalibConfig::default()
+        };
+        let rc = recalibrator(cfg, &registry);
+        let ok = |_: &CalibrationPlan| -> Result<u64, String> { Ok(1) };
+        assert!(rc.force_swap(&ok).is_err(), "nothing sampled yet");
+        feed(&rc, 32, 4);
+        // drift is obvious but the window is below min_rows: no auto swap
+        assert_eq!(rc.check(&ok), None);
+        // the operator can still force it
+        assert_eq!(rc.force_swap(&ok), Ok(1));
+        assert_eq!(registry.counter("calib.swaps").get(), 1);
+    }
+
+    #[test]
+    fn per_channel_mode_is_refused() {
+        let mut plan = CalibrationPlan::uncalibrated(INT8_R);
+        plan.k_channel_absmax = vec![1.0; HEADS * HEAD_DIM];
+        let registry = Registry::default();
+        let err = Recalibrator::new(
+            plan,
+            None,
+            HEADS,
+            HEAD_DIM,
+            RecalibConfig::default(),
+            &registry,
+        );
+        assert!(err.is_err());
+        // mismatched persisted baseline is refused too
+        let bad_baseline = DriftBaseline { k: vec![1.0; HEADS + 1], v: 1.0 };
+        let err = Recalibrator::new(
+            CalibrationPlan::uncalibrated(INT8_R),
+            Some(bad_baseline),
+            HEADS,
+            HEAD_DIM,
+            RecalibConfig::default(),
+            &registry,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn status_reports_the_live_window() {
+        let registry = Registry::default();
+        let cfg = RecalibConfig { sample_every: 1, ..RecalibConfig::default() };
+        let rc = recalibrator(cfg, &registry);
+        feed(&rc, 16, 5);
+        let s = rc.status();
+        assert_eq!(s.at("epoch").as_i64(), Some(0));
+        assert_eq!(s.at("sampled_rows").as_i64(), Some(16));
+        assert!(s.at("divergence").as_f64().unwrap() > 0.25, "drifted boot plan");
+        assert!(s.at("v_scale").as_f64().is_some());
+    }
+}

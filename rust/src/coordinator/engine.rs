@@ -10,10 +10,11 @@ use super::metrics::Registry;
 use super::request::{AccuracyClass, Request, RequestPayload, Response};
 use super::router::{Bucket, BucketRouter};
 use crate::attention::{multihead, AttnConfig, Variant};
-use crate::calib::{CalibrationArtifact, CalibrationPlan};
+use crate::calib::{CalibrationArtifact, CalibrationPlan, RecalibConfig, Recalibrator};
 use crate::kv::{CacheConfig, RadixKvCache};
 use crate::quant::{INT4_R, INT8_R};
 use crate::sched::{Priority, SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel};
+use crate::util::json::Json;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -284,6 +285,7 @@ pub struct Engine {
     calibration: Option<CalibrationArtifact>,
     kv: Option<KvRuntime>,
     sched: Option<Scheduler>,
+    recalib: Option<Arc<Recalibrator>>,
     pub metrics: Arc<Registry>,
     next_id: std::sync::atomic::AtomicU64,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -365,6 +367,7 @@ impl Engine {
             calibration,
             kv: None,
             sched: None,
+            recalib: None,
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
             threads,
@@ -397,10 +400,48 @@ impl Engine {
         self
     }
 
+    /// Attach online re-calibration (requires a KV cache; attach it
+    /// *before* [`Engine::with_sched`] so the tick loop picks up the
+    /// sampling and drift-check hooks). The boot plan is the loaded
+    /// calibration artifact's — with its persisted drift baseline when
+    /// the artifact carries one (version 3) — or the uncalibrated
+    /// fallback. Fails in per-channel K mode, where scale hot-swap is
+    /// structurally unsupported (see [`crate::calib::swap`]).
+    pub fn with_recalib(mut self, cfg: RecalibConfig) -> Result<Engine, String> {
+        if self.sched.is_some() {
+            // the scheduler captured `recalib: None` at start — attaching
+            // now would look enabled while never sampling or checking
+            return Err(
+                "attach online re-calibration before the scheduler \
+                 (with_recalib, then with_sched)"
+                    .to_string(),
+            );
+        }
+        let kv = self.kv.as_ref().ok_or("online re-calibration requires a kv cache")?;
+        let kcfg = kv.cache.config();
+        let (plan, baseline) = match &self.calibration {
+            Some(a) => (a.plan.clone(), a.drift.clone()),
+            None => (CalibrationPlan::uncalibrated(kcfg.r), None),
+        };
+        let rc = Recalibrator::new(
+            plan,
+            baseline,
+            kcfg.heads,
+            kcfg.head_dim,
+            cfg,
+            &self.metrics,
+        )?;
+        self.metrics.gauge("calib.recalib.enabled").set(1);
+        self.recalib = Some(Arc::new(rc));
+        Ok(self)
+    }
+
     /// Attach the continuous-batching decode scheduler (requires a KV
     /// cache): enables the streaming [`Engine::generate`] surface. Each
     /// tick batches every in-flight decode step into one attention call
-    /// over the shared striped pool (see [`crate::sched`]).
+    /// over the shared striped pool (see [`crate::sched`]). When
+    /// [`Engine::with_recalib`] ran first, the tick loop also samples
+    /// activation rows and drives the drift-detection / hot-swap cycle.
     pub fn with_sched(
         mut self,
         model: Arc<dyn TokenModel>,
@@ -416,11 +457,12 @@ impl Engine {
             ));
         }
         self.metrics.gauge("sched.enabled").set(1);
-        self.sched = Some(Scheduler::start(
+        self.sched = Some(Scheduler::start_with_recalib(
             kv.cache.clone(),
             model,
             cfg,
             self.metrics.clone(),
+            self.recalib.clone(),
         ));
         Ok(self)
     }
@@ -431,6 +473,27 @@ impl Engine {
 
     pub fn has_sched(&self) -> bool {
         self.sched.is_some()
+    }
+
+    pub fn has_recalib(&self) -> bool {
+        self.recalib.is_some()
+    }
+
+    /// Online re-calibration status (the server's `recalib` verb);
+    /// `None` when re-calibration is not enabled.
+    pub fn recalib_status(&self) -> Option<Json> {
+        self.recalib.as_ref().map(|rc| rc.status())
+    }
+
+    /// Operator-forced scale hot-swap from the currently sampled
+    /// statistics (the `recalib` verb's `force` mode). Returns the new
+    /// calibration epoch. In-flight sequences keep their admission-time
+    /// grids; new admissions pick up the swapped scales.
+    pub fn recalib_force(&self) -> Result<u64, String> {
+        let rc = self.recalib.as_ref().ok_or("online re-calibration not enabled")?;
+        let kv = self.kv.as_ref().ok_or("online re-calibration requires a kv cache")?;
+        let cache = kv.cache.clone();
+        rc.force_swap(&|plan| cache.swap_scales(plan))
     }
 
     pub fn router(&self) -> &BucketRouter {
@@ -576,14 +639,13 @@ impl Engine {
             self.metrics.counter("kv.prefill.batches_skipped").inc();
             let mut o = vec![0.0f32; h * new_tokens * d];
             for t in cached..n {
+                let (krow, vrow) = (gather(&payload.k, t), gather(&payload.v, t));
                 cache
-                    .append_token(
-                        seq_id,
-                        tokens[t],
-                        &gather(&payload.k, t),
-                        &gather(&payload.v, t),
-                    )
+                    .append_token(seq_id, tokens[t], &krow, &vrow)
                     .map_err(|e| abort(format!("kv append: {e}")))?;
+                if let Some(rc) = &self.recalib {
+                    rc.record_token(&krow, &vrow);
+                }
                 let view = cache
                     .decode_view(seq_id)
                     .map_err(|e| abort(format!("kv decode: {e}")))?;
@@ -603,14 +665,13 @@ impl Engine {
             // override: append the missing suffix, then run the batched
             // pipeline and keep only the new rows
             for t in cached..n {
+                let (krow, vrow) = (gather(&payload.k, t), gather(&payload.v, t));
                 cache
-                    .append_token(
-                        seq_id,
-                        tokens[t],
-                        &gather(&payload.k, t),
-                        &gather(&payload.v, t),
-                    )
+                    .append_token(seq_id, tokens[t], &krow, &vrow)
                     .map_err(|e| abort(format!("kv append: {e}")))?;
+                if let Some(rc) = &self.recalib {
+                    rc.record_token(&krow, &vrow);
+                }
             }
             self.sync_kv_metrics(cache);
             let resp = self.submit_blocking(accuracy, payload);
@@ -658,7 +719,12 @@ impl Engine {
         let kv = self.kv.as_ref().ok_or("kv cache not enabled")?;
         kv.cache
             .append_token(seq_id, token, k, v)
-            .map_err(|e| e.to_string())
+            .map_err(|e| e.to_string())?;
+        // caller-managed decode loops feed drift detection too
+        if let Some(rc) = &self.recalib {
+            rc.record_token(k, v);
+        }
+        Ok(())
     }
 
     /// Split-K decode: one query token (flat (heads, d)) attends to the
@@ -1171,6 +1237,7 @@ mod tests {
             },
             reports: Vec::new(),
             geometry: None,
+            drift: None,
         };
         let e = Engine::with_calibration(
             native_router(),
@@ -1299,6 +1366,51 @@ mod tests {
             .with_kv_striped(CacheConfig::new(2, 16), 1, 1)
             .with_sched(Arc::new(HashModel::new(4, 8)), SchedConfig::default());
         assert!(mismatch.is_err());
+    }
+
+    #[test]
+    fn recalib_surface_swaps_without_restart() {
+        use crate::calib::RecalibConfig;
+        use crate::kv::CacheConfig;
+        use crate::sched::HashModel;
+        let e = engine(EngineConfig { policy: BatchPolicy::Eager, ..EngineConfig::default() })
+            .with_kv_striped(
+                CacheConfig { block_tokens: 8, max_blocks: 256, ..CacheConfig::new(2, 16) },
+                2,
+                2,
+            )
+            .with_recalib(RecalibConfig {
+                sample_every: 1,
+                // auto-checks effectively off: this test drives the
+                // operator-forced path
+                check_every_ticks: u64::MAX,
+                ..RecalibConfig::default()
+            })
+            .expect("kv present")
+            .with_sched(Arc::new(HashModel::new(2, 16)), SchedConfig::default())
+            .expect("kv present");
+        assert!(e.has_recalib());
+        assert_eq!(e.metrics.gauge("calib.recalib.enabled").get(), 1);
+        assert!(e.recalib_force().is_err(), "nothing sampled yet");
+        let prompt: Vec<u32> = (0..12).collect();
+        let before = e.generate_blocking(prompt.clone(), 5).expect("stream completes");
+        let status = e.recalib_status().expect("status available");
+        assert_eq!(status.at("epoch").as_i64(), Some(0));
+        assert!(status.at("sampled_rows").as_i64().unwrap() > 0);
+        // forced hot-swap, then the engine keeps serving — no restart
+        assert_eq!(e.recalib_force(), Ok(1));
+        assert_eq!(e.recalib_status().unwrap().at("epoch").as_i64(), Some(1));
+        assert_eq!(e.metrics.counter("calib.swaps").get(), 1);
+        assert_eq!(e.metrics.gauge("calib.epoch").get(), 1);
+        let after = e.generate_blocking(prompt, 5).expect("post-swap stream completes");
+        assert_eq!(after.len(), before.len());
+        // engines without the surface reject it cleanly
+        let bare = engine(EngineConfig::default());
+        assert!(bare.recalib_status().is_none());
+        assert!(bare.recalib_force().is_err());
+        assert!(engine(EngineConfig::default())
+            .with_recalib(RecalibConfig::default())
+            .is_err());
     }
 
     #[test]

@@ -30,6 +30,14 @@ pub struct Block {
     pub k_codes: Vec<i8>,
     pub v_codes: Vec<i8>,
     pub k_scales: Vec<f32>,
+    /// The tensor-level V scale this block's V codes were written with,
+    /// stamped at the block's first token write (0.0 = unstamped; decode
+    /// falls back to the config scale). Making the V grid a property of
+    /// the *block* is what keeps decode exact across calibration
+    /// hot-swaps: a sequence mixing pre- and post-swap blocks (prefix
+    /// sharing, long generations) dequantizes each block under the grid
+    /// it was quantized with.
+    pub v_scale: f32,
 }
 
 /// Fixed-capacity refcounted block pool.
@@ -64,6 +72,7 @@ impl BlockPool {
                     k_codes: vec![0; kv_elems],
                     v_codes: vec![0; kv_elems],
                     k_scales: vec![0.0; scale_elems],
+                    v_scale: 0.0,
                 })
             })
             .collect();
@@ -180,6 +189,9 @@ impl BlockPool {
         dst.k_codes.copy_from_slice(&src.k_codes);
         dst.v_codes.copy_from_slice(&src.v_codes);
         dst.k_scales.copy_from_slice(&src.k_scales);
+        // the copy keeps the source's V grid: continued writes into a
+        // COW'd partial block must stay on the grid its codes use
+        dst.v_scale = src.v_scale;
         self.release(i);
         Some(ni)
     }

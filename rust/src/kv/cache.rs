@@ -152,18 +152,28 @@ pub(crate) struct Sequence {
     /// `Some` for prefix-sharable sequences (trie-registered); `None`
     /// for anonymous sequences using the legacy token-id-free API.
     pub token_ids: Option<Vec<u32>>,
+    /// The quantization config this sequence was admitted under — its
+    /// appends and decodes stay on the admission-time grid even when
+    /// [`RadixKvCache::swap_scales`] installs a new plan mid-stream, so
+    /// a hot-swap can never change an already-admitted sequence's
+    /// numerics (the epoch invariant; see [`crate::calib::swap`]).
+    pub cfg: Arc<CacheConfig>,
 }
 
 /// Shared-prefix radix KV cache for one attention layer.
 pub struct RadixKvCache {
-    /// Shared with every [`crate::kv::decode::DecodeView`] this cache
-    /// hands out (views outlive the cache lock).
+    /// The *current-epoch* config: new sequences snapshot it at
+    /// admission; [`RadixKvCache::swap_scales`] replaces it. Shared with
+    /// every [`crate::kv::decode::DecodeView`] this cache hands out
+    /// (views outlive the cache lock).
     pub(crate) cfg: Arc<CacheConfig>,
     pub(crate) pool: BlockPool,
     trie: RadixIndex,
     pub(crate) seqs: HashMap<u64, Sequence>,
     next_id: u64,
     stats: KvStats,
+    /// Calibration epoch: 0 at boot, +1 per [`RadixKvCache::swap_scales`].
+    epoch: u64,
 }
 
 /// Back-compat alias: the old `coordinator::kvcache` pool name.
@@ -181,11 +191,48 @@ impl RadixKvCache {
             seqs: HashMap::new(),
             next_id: 1,
             stats: KvStats::default(),
+            epoch: 0,
         }
     }
 
     pub fn config(&self) -> &CacheConfig {
         &self.cfg
+    }
+
+    /// Calibration epoch (0 = boot plan; +1 per scale hot-swap).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Hot-swap the quantization scales to `plan` without touching any
+    /// resident data: new admissions snapshot the new config, live
+    /// sequences keep their admission-time snapshots, and written
+    /// blocks keep their stamped grids (see [`crate::kv::block::Block`])
+    /// — mixed-epoch decode stays exact by construction. Geometry, the
+    /// integer range and the K-scale *mode* are immutable: a plan that
+    /// changes any of them is a deployment change, not a re-calibration,
+    /// and is refused.
+    pub fn swap_scales(&mut self, plan: &CalibrationPlan) -> Result<u64, String> {
+        plan.validate_geometry(self.cfg.heads, self.cfg.head_dim)?;
+        if plan.r != self.cfg.r {
+            return Err(format!(
+                "scale swap cannot change the integer range (cache r={}, plan r={})",
+                self.cfg.r, plan.r
+            ));
+        }
+        if self.cfg.per_channel_k() || !plan.k_channel_absmax.is_empty() {
+            return Err(
+                "scale swap is unsupported in per-channel K mode: channel scales fold \
+                 into the decode query, so mixed-epoch blocks would dequantize wrong"
+                    .to_string(),
+            );
+        }
+        let mut cfg = (*self.cfg).clone();
+        cfg.v_scale = plan.v_scale;
+        cfg.k_clip = plan.k_clip.clone();
+        self.cfg = Arc::new(cfg);
+        self.epoch += 1;
+        Ok(self.epoch)
     }
 
     pub fn stats(&self) -> KvStats {
@@ -202,8 +249,15 @@ impl RadixKvCache {
     pub fn alloc_sequence(&mut self) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.seqs
-            .insert(id, Sequence { blocks: Vec::new(), len_tokens: 0, token_ids: None });
+        self.seqs.insert(
+            id,
+            Sequence {
+                blocks: Vec::new(),
+                len_tokens: 0,
+                token_ids: None,
+                cfg: self.cfg.clone(),
+            },
+        );
         id
     }
 
@@ -212,6 +266,21 @@ impl RadixKvCache {
     /// the caller appends K/V only for `tokens[cached..]` (its prefill
     /// for the first `cached` tokens is skipped entirely).
     pub fn start_sequence(&mut self, tokens: &[u32]) -> (u64, usize) {
+        let cfg = self.cfg.clone();
+        self.start_sequence_pinned(tokens, cfg)
+    }
+
+    /// [`RadixKvCache::start_sequence`] under an explicit admission-time
+    /// config snapshot instead of the current epoch's — the
+    /// preemption-replay path: a victim re-admitted after a scale
+    /// hot-swap must rebuild its history on the grid it was originally
+    /// admitted under, or the replayed stream would diverge from the
+    /// uninterrupted run.
+    pub fn start_sequence_pinned(
+        &mut self,
+        tokens: &[u32],
+        cfg: Arc<CacheConfig>,
+    ) -> (u64, usize) {
         let matched = self.trie.lookup(tokens, self.cfg.block_tokens);
         for &b in &matched {
             self.pool.retain(b);
@@ -231,10 +300,17 @@ impl RadixKvCache {
                 blocks: matched,
                 len_tokens: cached,
                 token_ids: Some(tokens[..cached].to_vec()),
+                cfg,
             },
         );
         self.debug_check_evictable();
         (id, cached)
+    }
+
+    /// The admission-time config snapshot of a live sequence (what a
+    /// preemption carries across its requeue).
+    pub fn seq_cfg(&self, id: u64) -> Option<Arc<CacheConfig>> {
+        self.seqs.get(&id).map(|s| s.cfg.clone())
     }
 
     /// Fork a sequence (parallel sampling): the fork shares every block,
@@ -246,6 +322,8 @@ impl RadixKvCache {
             blocks: src.blocks.clone(),
             len_tokens: src.len_tokens,
             token_ids: src.token_ids.clone(),
+            // a fork continues the parent's stream: same admission grid
+            cfg: src.cfg.clone(),
         };
         for &b in &forked.blocks {
             self.pool.retain(b);
@@ -367,12 +445,12 @@ impl RadixKvCache {
         if k.len() != h * d || v.len() != h * d {
             return Err(CacheError::BadShape { expected: h * d, got: k.len() });
         }
-        let (slot, last_block) = {
+        let (slot, last_block, seq_cfg) = {
             let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSequence(id))?;
             if seq.token_ids.is_some() && token.is_none() {
                 return Err(CacheError::TokenRequired(id));
             }
-            (seq.len_tokens % bt, seq.blocks.last().copied())
+            (seq.len_tokens % bt, seq.blocks.last().copied(), seq.cfg.clone())
         };
         // a writable target: fresh block at a boundary, otherwise the
         // last block — copied first if shared (fork divergence)
@@ -391,7 +469,10 @@ impl RadixKvCache {
                 b
             }
         };
-        quantize::write_token(&self.cfg, self.pool.block_mut(target), slot, k, v);
+        // quantize under the sequence's admission-time config, not the
+        // current epoch's: a hot-swap must never change the grid of an
+        // already-admitted stream (its new blocks stamp the old scale)
+        quantize::write_token(&seq_cfg, self.pool.block_mut(target), slot, k, v);
         let seq = self.seqs.get_mut(&id).unwrap();
         seq.len_tokens += 1;
         if let (Some(tok), Some(ids)) = (token, seq.token_ids.as_mut()) {
@@ -456,7 +537,7 @@ mod tests {
     use super::*;
     use crate::attention::{reference, AttnConfig};
     use crate::tensor::MatF32;
-    use crate::util::rng::{Dist, Pcg64};
+    use crate::util::rng::Pcg64;
     use crate::util::stats;
 
     fn cfg(heads: usize, d: usize) -> CacheConfig {
@@ -693,6 +774,157 @@ mod tests {
         }
         assert_eq!(pool.evictable_blocks(), pool.evictable_blocks_scan());
         assert!(pool.evictable_blocks() > 0, "retired prefixes stay trie-resident");
+    }
+
+    fn plan_with_v(v_absmax: f32) -> CalibrationPlan {
+        let mut plan = CalibrationPlan::uncalibrated(crate::quant::INT8_R);
+        plan.v_absmax = v_absmax;
+        plan.v_scale = v_absmax / plan.r;
+        plan.batches = 1;
+        plan
+    }
+
+    #[test]
+    fn swap_scales_rejects_deployment_changes() {
+        let mut pool = RadixKvCache::new(cfg(2, 8));
+        // wrong geometry (clip count)
+        let mut bad = plan_with_v(1.0);
+        bad.k_clip = vec![1.0; 3];
+        assert!(pool.swap_scales(&bad).is_err());
+        // wrong integer range
+        let mut bad = plan_with_v(1.0);
+        bad.r = 7.0;
+        assert!(pool.swap_scales(&bad).is_err());
+        // per-channel mode, either side
+        let mut bad = plan_with_v(1.0);
+        bad.k_channel_absmax = vec![1.0; 2 * 8];
+        assert!(pool.swap_scales(&bad).is_err());
+        assert_eq!(pool.epoch(), 0, "failed swaps leave the epoch alone");
+        assert_eq!(pool.swap_scales(&plan_with_v(1.0)), Ok(1));
+        assert_eq!(pool.epoch(), 1);
+    }
+
+    #[test]
+    fn hot_swap_preserves_admitted_sequences_bit_exactly() {
+        // twin caches fed identical rows; one hot-swaps mid-stream.
+        // The admitted sequence must decode (and keep appending)
+        // bit-identically to the never-swapped twin.
+        let (h, d) = (2usize, 8usize);
+        let boot = plan_with_v(0.5);
+        let mk = || {
+            RadixKvCache::new(CacheConfig {
+                block_tokens: 4,
+                max_blocks: 64,
+                ..CacheConfig::calibrated(h, d, &boot)
+            })
+        };
+        let (mut swapped, mut plain) = (mk(), mk());
+        let tokens: Vec<u32> = (0..10).collect();
+        let rows: Vec<(Vec<f32>, Vec<f32>)> = {
+            let mut rng = Pcg64::seeded(31);
+            (0..16).map(|_| (rng.normal_vec(h * d), rng.normal_vec(h * d))).collect()
+        };
+        let (a, _) = swapped.start_sequence(&tokens);
+        let (b, _) = plain.start_sequence(&tokens);
+        for t in 0..6 {
+            swapped.append_token(a, tokens[t], &rows[t].0, &rows[t].1).unwrap();
+            plain.append_token(b, tokens[t], &rows[t].0, &rows[t].1).unwrap();
+        }
+        // mid-stream swap to a very different grid
+        assert_eq!(swapped.swap_scales(&plan_with_v(3.0)), Ok(1));
+        let mut rng = Pcg64::seeded(32);
+        let q: Vec<f32> = rng.normal_vec(h * d);
+        assert_eq!(
+            swapped.decode_attention(a, &q, None).unwrap(),
+            plain.decode_attention(b, &q, None).unwrap(),
+            "already-written blocks decode on their stamped grid"
+        );
+        // post-swap appends (crossing a block boundary at t=8) still
+        // ride the admission-time snapshot: streams stay identical
+        for t in 6..10 {
+            swapped.append_token(a, tokens[t], &rows[t].0, &rows[t].1).unwrap();
+            plain.append_token(b, tokens[t], &rows[t].0, &rows[t].1).unwrap();
+        }
+        for workers in [1usize, 2, 4] {
+            assert_eq!(
+                swapped.decode_attention_splitk(a, &q, None, workers).unwrap(),
+                plain.decode_attention_splitk(b, &q, None, workers).unwrap(),
+                "workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn hot_swap_applies_to_new_admissions_and_mixed_epochs_stay_exact() {
+        let (h, d) = (1usize, 8usize);
+        let boot = plan_with_v(0.5);
+        let next = plan_with_v(3.0);
+        let mut cache = RadixKvCache::new(CacheConfig {
+            block_tokens: 4,
+            max_blocks: 64,
+            ..CacheConfig::calibrated(h, d, &boot)
+        });
+        let tokens: Vec<u32> = (0..8).collect();
+        let mut rng = Pcg64::seeded(33);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..12).map(|_| (rng.normal_vec(h * d), rng.normal_vec(h * d))).collect();
+        let (old_seq, _) = cache.start_sequence(&tokens);
+        for t in 0..8 {
+            cache.append_token(old_seq, tokens[t], &rows[t].0, &rows[t].1).unwrap();
+        }
+        cache.swap_scales(&next).unwrap();
+
+        // a fresh post-swap prompt is bit-identical to the same prompt
+        // in a cache booted directly on the new plan
+        let fresh_tokens: Vec<u32> = (100..106).collect();
+        let (fresh, _) = cache.start_sequence(&fresh_tokens);
+        let mut booted = RadixKvCache::new(CacheConfig {
+            block_tokens: 4,
+            max_blocks: 64,
+            ..CacheConfig::calibrated(h, d, &next)
+        });
+        let (twin, _) = booted.start_sequence(&fresh_tokens);
+        for (t, row) in rows.iter().take(6).enumerate() {
+            cache.append_token(fresh, fresh_tokens[t], &row.0, &row.1).unwrap();
+            booted.append_token(twin, fresh_tokens[t], &row.0, &row.1).unwrap();
+        }
+        let q: Vec<f32> = rng.normal_vec(h * d);
+        let post = cache.decode_attention(fresh, &q, None).unwrap();
+        assert_eq!(
+            post,
+            booted.decode_attention(twin, &q, None).unwrap(),
+            "new admissions run the new plan exactly"
+        );
+        // and the new grid is actually different from the old one
+        let mut old_boot = RadixKvCache::new(CacheConfig {
+            block_tokens: 4,
+            max_blocks: 64,
+            ..CacheConfig::calibrated(h, d, &boot)
+        });
+        let (ob, _) = old_boot.start_sequence(&fresh_tokens);
+        for (t, row) in rows.iter().take(6).enumerate() {
+            old_boot.append_token(ob, fresh_tokens[t], &row.0, &row.1).unwrap();
+        }
+        assert_ne!(post, old_boot.decode_attention(ob, &q, None).unwrap());
+
+        // mixed epochs: a post-swap admission over the pre-swap shared
+        // prefix decodes over blocks of BOTH grids — split-K must stay
+        // bit-identical for any worker count (the grouped exact merge)
+        let longer: Vec<u32> = (0..12).collect();
+        let (mixed, cached) = cache.start_sequence(&longer);
+        assert_eq!(cached, 8, "old-epoch prefix blocks reused");
+        for t in cached..12 {
+            cache.append_token(mixed, longer[t], &rows[t].0, &rows[t].1).unwrap();
+        }
+        let gold = cache.decode_attention(mixed, &q, None).unwrap();
+        assert!(gold.iter().all(|x| x.is_finite()));
+        for workers in [2usize, 3, 4, 8] {
+            assert_eq!(
+                cache.decode_attention_splitk(mixed, &q, None, workers).unwrap(),
+                gold,
+                "mixed-epoch split-K workers={workers}"
+            );
+        }
     }
 
     #[test]

@@ -39,6 +39,17 @@ struct QuantQuery {
     scales: Vec<f32>,
 }
 
+/// One partition's pass-2 partial state: integer probability mass per
+/// head plus the integer `P·V₈` accumulators, grouped by the stamped
+/// V grid of the blocks that produced them (one group outside a
+/// calibration hot-swap). Integer group-wise merge keeps split-K exact
+/// even when a sequence mixes grids.
+struct VPartial {
+    l: Vec<i64>,
+    /// (V-scale bits, flat (heads, d) integer acc) per distinct grid.
+    groups: Vec<(u32, Vec<i64>)>,
+}
+
 /// Blocks of work per worker below which spawning another thread costs
 /// more than it saves (thread spawn ≈ tens of µs; one block of scores is
 /// `block_tokens × heads × d` multiply-adds). [`RadixKvCache::suggested_splitk`]
@@ -115,27 +126,43 @@ impl DecodeView {
             }
         }
 
-        // pass 2: integer (l, acc) partials under the shared max;
-        // merge = integer sum (exact)
+        // pass 2: integer (l, acc) partials under the shared max, the
+        // acc grouped per stamped V grid; merge = integer sum per grid
+        // (exact). One grid is the steady state — a sequence spans
+        // several only across a calibration hot-swap (its own old
+        // blocks, or a shared prefix written under an earlier epoch).
         let partials =
             self.map_parts(&parts, |b0, b1| self.partial_sums(b0, b1, &qq, tau, &m));
         let mut l = vec![0i64; h];
-        let mut acc = vec![0i64; h * d];
-        for (pl, pa) in &partials {
-            for (a, &b) in l.iter_mut().zip(pl) {
+        let mut groups: Vec<(u32, Vec<i64>)> = Vec::new();
+        for p in &partials {
+            for (a, &b) in l.iter_mut().zip(&p.l) {
                 *a += b;
             }
-            for (a, &b) in acc.iter_mut().zip(pa) {
-                *a += b;
+            for (bits, acc) in &p.groups {
+                match groups.iter_mut().find(|(gb, _)| gb == bits) {
+                    Some((_, g)) => {
+                        for (a, &b) in g.iter_mut().zip(acc) {
+                            *a += b;
+                        }
+                    }
+                    None => groups.push((*bits, acc.clone())),
+                }
             }
         }
 
-        // finalize once: O = acc·S_V / l
+        // finalize once: O = Σ_grids acc·S_V / l, the grids summed in
+        // canonical (scale-bits) order so any worker count and any
+        // partition boundary produce bit-identical floats
+        groups.sort_by_key(|(bits, _)| *bits);
         let mut out = vec![0.0f32; h * d];
         for head in 0..h {
-            let rescale = self.cfg.v_scale / (l[head] as f32).max(SCALE_EPS);
-            for i in 0..d {
-                out[head * d + i] = acc[head * d + i] as f32 * rescale;
+            let lmax = (l[head] as f32).max(SCALE_EPS);
+            for (bits, acc) in &groups {
+                let rescale = f32::from_bits(*bits) / lmax;
+                for i in 0..d {
+                    out[head * d + i] += acc[head * d + i] as f32 * rescale;
+                }
             }
         }
         Ok(out)
@@ -210,21 +237,35 @@ impl DecodeView {
         m
     }
 
-    fn partial_sums(
-        &self,
-        b0: usize,
-        b1: usize,
-        qq: &QuantQuery,
-        tau: f32,
-        m: &[f32],
-    ) -> (Vec<i64>, Vec<i64>) {
+    /// The block's stamped V grid ([`Block::v_scale`]), with the config
+    /// scale as the fallback for blocks written before stamping existed
+    /// (hand-built test pools).
+    #[inline]
+    fn block_v_scale(&self, block: &Block) -> f32 {
+        if block.v_scale > 0.0 {
+            block.v_scale
+        } else {
+            self.cfg.v_scale
+        }
+    }
+
+    fn partial_sums(&self, b0: usize, b1: usize, qq: &QuantQuery, tau: f32, m: &[f32]) -> VPartial {
         let (h, d, bt) = (self.cfg.heads, self.cfg.head_dim, self.cfg.block_tokens);
         let r = self.cfg.r;
         let mut l = vec![0i64; h];
-        let mut acc = vec![0i64; h * d];
+        let mut groups: Vec<(u32, Vec<i64>)> = Vec::new();
         for bi in b0..b1 {
             let block = &self.blocks[bi];
             let tokens = self.block_fill(bi);
+            let bits = self.block_v_scale(block).to_bits();
+            let gi = match groups.iter().position(|(gb, _)| *gb == bits) {
+                Some(gi) => gi,
+                None => {
+                    groups.push((bits, vec![0i64; h * d]));
+                    groups.len() - 1
+                }
+            };
+            let acc = &mut groups[gi].1;
             for head in 0..h {
                 for t in 0..tokens {
                     let s = self.score(block, head, t, qq, tau);
@@ -238,7 +279,7 @@ impl DecodeView {
                 }
             }
         }
-        (l, acc)
+        VPartial { l, groups }
     }
 
     /// Token-level query quantization (live rowmax, the paper's runtime
@@ -344,7 +385,10 @@ impl RadixKvCache {
     pub fn decode_view(&self, id: u64) -> Result<DecodeView, CacheError> {
         let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSequence(id))?;
         Ok(DecodeView {
-            cfg: self.cfg.clone(),
+            // the sequence's admission-time config: a scale hot-swap
+            // between admission and decode must not shift this stream's
+            // grid (geometry and r never change across swaps)
+            cfg: seq.cfg.clone(),
             blocks: seq.blocks.iter().map(|&b| self.pool.block_arc(b)).collect(),
             len_tokens: seq.len_tokens,
         })

@@ -18,7 +18,11 @@
 //!     K-scale mode ([`crate::calib::CalibrationPlan::k_channel_absmax`],
 //!     per the GPU INT8-KV-cache line of work), plus the fixed tensor
 //!     V scale. Scales attach at the block level: every sequence sharing
-//!     a block shares its quantization operating point by construction.
+//!     a block shares its quantization operating point by construction —
+//!     the V scale is stamped onto each block at its first write
+//!     ([`block::Block::v_scale`]), which is what keeps decode exact
+//!     across online re-calibration hot-swaps
+//!     ([`RadixKvCache::swap_scales`]; see [`crate::calib::swap`]).
 //!   - [`decode`]: single-query INT8 attention over the cached codes —
 //!     sequential, or split-K across worker threads with an *exact*
 //!     partial-state merge (see below). Compute runs on a pinned

@@ -18,6 +18,13 @@ fn clip_round(x: f32, r: f32) -> i8 {
 }
 
 /// Quantize one token's flat (heads, d) K/V rows into `block` at `slot`.
+///
+/// The V grid is block-attached: the block's first token write stamps
+/// `cfg.v_scale` onto the block, and every later write into the same
+/// block (partial-tail fills, COW continuations) reuses the stamp — so
+/// a calibration hot-swap between two writes can never split one
+/// block's V codes across two grids, and decode dequantizes each block
+/// under exactly the scale it was written with.
 pub(crate) fn write_token(
     cfg: &CacheConfig,
     block: &mut Block,
@@ -27,7 +34,10 @@ pub(crate) fn write_token(
 ) {
     let (h, d, bt) = (cfg.heads, cfg.head_dim, cfg.block_tokens);
     let r = cfg.r;
-    let inv_v = 1.0 / cfg.v_scale;
+    if slot == 0 || block.v_scale <= 0.0 {
+        block.v_scale = cfg.v_scale;
+    }
+    let inv_v = 1.0 / block.v_scale;
     let per_channel = cfg.per_channel_k();
     for head in 0..h {
         let krow = &k[head * d..(head + 1) * d];
@@ -105,5 +115,36 @@ mod tests {
         assert_eq!(block.k_codes[3], 127, "out-of-range saturates");
         // per-token scale slot untouched in channel mode
         assert_eq!(block.k_scales[0], 0.0);
+    }
+
+    #[test]
+    fn v_grid_is_stamped_once_per_block() {
+        // the first write stamps the config's V scale; a config change
+        // between writes (a calibration hot-swap) must not re-grid the
+        // block's existing V codes
+        let cfg = CacheConfig { block_tokens: 4, ..CacheConfig::new(1, 4) };
+        let kv = cfg.heads * cfg.block_tokens * cfg.head_dim;
+        let mut pool = BlockPool::new(2, kv, cfg.heads * cfg.block_tokens);
+        let b = pool.alloc().unwrap();
+        let v = [1.0f32, -1.0, 0.5, 0.25];
+        let k = [0.5f32; 4];
+        write_token(&cfg, pool.block_mut(b), 0, &k, &v);
+        let stamped = pool.block(b).v_scale;
+        assert_eq!(stamped, cfg.v_scale);
+        let code0 = pool.block(b).v_codes[0];
+        // swapped config: half the scale — later slots keep the stamp
+        let mut swapped = cfg.clone();
+        swapped.v_scale = cfg.v_scale / 2.0;
+        write_token(&swapped, pool.block_mut(b), 1, &k, &v);
+        let block = pool.block(b);
+        assert_eq!(block.v_scale, stamped, "stamp survives a config swap");
+        assert_eq!(
+            block.v_codes[4], code0,
+            "slot 1 quantizes on the stamped grid, not the swapped one"
+        );
+        // a fresh block under the swapped config picks up the new grid
+        let nb = pool.alloc().unwrap();
+        write_token(&swapped, pool.block_mut(nb), 0, &k, &v);
+        assert_eq!(pool.block(nb).v_scale, swapped.v_scale);
     }
 }

@@ -59,6 +59,22 @@ USAGE:
                      interactive | batch (default) | best-effort — interactive
                      admits first and may preempt lower classes under pool
                      pressure (preempted sequences replay bit-identically)
+                   [--no-recalib] [--recalib-sample-rate R] [--drift-threshold T]
+                     --recalib-sample-rate fraction of appended K/V rows sampled
+                                          into the online calibration stats,
+                                          default 0.01 (1 %); 0 disables
+                     --drift-threshold    log-ratio divergence of the live EMA
+                                          absmax vs the loaded plan that counts
+                                          as drift, default 0.25 (≈ 28 % shift);
+                                          sustained drift rebuilds the plan and
+                                          hot-swaps scales with zero downtime —
+                                          admitted streams keep their admission
+                                          grids, new admissions get new scales
+                     --no-recalib         disable online re-calibration (also
+                                          implied by per-channel K artifacts,
+                                          where scale hot-swap is unsupported)
+                     status / forced swap via the recalib verb:
+                     {\"type\":\"recalib\"} | {\"type\":\"recalib\",\"force\":true}
   intfa client     [--addr HOST:PORT] [--requests N] [--concurrency C]
                    [--heads H] [--seq N] [--head-dim D] [--accuracy fast|balanced|exact]
   intfa calibrate  [--out FILE] [--heads H] [--head-dim D] [--batches N]
@@ -176,14 +192,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
             kv_cfg.block_tokens = args.get_usize("kv-block-tokens", 16)?;
             let splitk = args.get_usize("kv-split-k", 4)?;
             let stripes = args.get_usize("sched-stripes", 4)?;
+            let per_channel_k = !kv_cfg.k_channel_scale.is_empty();
             log_info!(
                 "kv cache: {heads}×{head_dim}, {} blocks × {} tokens over {stripes} \
-                 stripes, split-K {splitk}, per-channel K {}",
+                 stripes, split-K {splitk}, per-channel K {per_channel_k}",
                 kv_cfg.max_blocks,
-                kv_cfg.block_tokens,
-                !kv_cfg.k_channel_scale.is_empty()
+                kv_cfg.block_tokens
             );
             let engine = engine.with_kv_striped(kv_cfg, stripes, splitk);
+            // online re-calibration: sampled in-path stats + drift
+            // detection + zero-downtime scale hot-swap (unsupported in
+            // per-channel K mode, where channel scales fold into the
+            // decode query)
+            let sample_rate = args.get_f64("recalib-sample-rate", 0.01)?;
+            let engine = if args.has("no-recalib") || sample_rate <= 0.0 {
+                engine
+            } else if per_channel_k {
+                int_flashattention::log_warn!(
+                    "per-channel K artifact: online re-calibration disabled \
+                     (scale hot-swap would re-grid shared blocks)"
+                );
+                engine
+            } else {
+                let recalib_cfg = int_flashattention::calib::RecalibConfig {
+                    sample_every: (1.0 / sample_rate).round().max(1.0) as u64,
+                    threshold: args.get_f64("drift-threshold", 0.25)? as f32,
+                    ..int_flashattention::calib::RecalibConfig::default()
+                };
+                log_info!(
+                    "recalib: sampling 1/{} rows, drift threshold {}, check every {} ticks",
+                    recalib_cfg.sample_every,
+                    recalib_cfg.threshold,
+                    recalib_cfg.check_every_ticks
+                );
+                engine.with_recalib(recalib_cfg).map_err(|e| anyhow!(e))?
+            };
             if args.has("no-sched") {
                 engine
             } else {
@@ -313,7 +356,10 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     );
 
     let cfg = AutotuneConfig { seqs, head_dim: d, heads, dist, ..AutotuneConfig::default() };
-    let artifact = CalibrationArtifact::autotuned(plan, &cfg);
+    // persist the run's measured EMA levels so a serving process
+    // detects drift against what was calibrated, not a derived guess
+    let baseline = int_flashattention::calib::DriftBaseline::from_stats(&stats);
+    let artifact = CalibrationArtifact::autotuned(plan, &cfg).with_drift_baseline(baseline);
     let mut table = Table::new(&["seq", "fast", "balanced", "exact", "int8 mre", "int8 Mtok/s"]);
     let join = |vs: &[Variant]| {
         vs.iter().map(|v| v.name()).collect::<Vec<_>>().join(" > ")

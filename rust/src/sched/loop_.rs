@@ -75,8 +75,9 @@
 use super::model::TokenModel;
 use super::queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority};
 use super::stripe::StripedKvCache;
+use crate::calib::Recalibrator;
 use crate::coordinator::metrics::{Counter, Registry};
-use crate::kv::CacheError;
+use crate::kv::{CacheConfig, CacheError};
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -165,6 +166,12 @@ struct Pending {
     /// fresh submissions); never re-streamed.
     generated: Vec<u32>,
     stream: Sender<StreamEvent>,
+    /// For preemption requeues: the victim's admission-time config,
+    /// pinned across the requeue so replay rebuilds its history on the
+    /// grid it was originally admitted under — a calibration hot-swap
+    /// between preemption and re-admission must not change the stream
+    /// (`None` for fresh submissions: they admit on the current epoch).
+    cfg: Option<Arc<CacheConfig>>,
 }
 
 /// One in-flight generation.
@@ -209,10 +216,26 @@ impl Scheduler {
         cfg: SchedConfig,
         metrics: Arc<Registry>,
     ) -> Scheduler {
+        Self::start_with_recalib(cache, model, cfg, metrics, None)
+    }
+
+    /// [`Scheduler::start`] with an online re-calibrator attached: the
+    /// tick loop samples appended K/V rows into its statistics and runs
+    /// a drift check every [`Recalibrator::check_every`] ticks, which
+    /// may hot-swap the pool's quantization scales (`calib.swaps`).
+    /// Sampling and swapping never change an admitted sequence's tokens
+    /// — see [`crate::calib::swap`] for the epoch invariant.
+    pub fn start_with_recalib(
+        cache: Arc<StripedKvCache>,
+        model: Arc<dyn TokenModel>,
+        cfg: SchedConfig,
+        metrics: Arc<Registry>,
+        recalib: Option<Arc<Recalibrator>>,
+    ) -> Scheduler {
         let (tx, rx) = mpsc::channel();
         let join = std::thread::Builder::new()
             .name("intfa-sched-tick".into())
-            .spawn(move || tick_loop(rx, cache, model, cfg, metrics))
+            .spawn(move || tick_loop(rx, cache, model, cfg, metrics, recalib))
             .expect("spawn scheduler tick loop");
         Scheduler { tx, join: Some(join) }
     }
@@ -263,6 +286,7 @@ fn enqueue(queue: &mut AdmissionQueue<Pending>, s: Submit, shed: &Counter, cap: 
         max_new: s.max_new,
         generated: Vec::new(),
         stream: s.stream,
+        cfg: None,
     };
     if let Err(p) = queue.push(pending, s.class) {
         shed.inc();
@@ -279,6 +303,7 @@ fn tick_loop(
     model: Arc<dyn TokenModel>,
     cfg: SchedConfig,
     metrics: Arc<Registry>,
+    recalib: Option<Arc<Recalibrator>>,
 ) {
     let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(cfg.queue_cap, cfg.aging_ticks);
     let mut active: Vec<Active> = Vec::new();
@@ -294,6 +319,11 @@ fn tick_loop(
     let batch_size = metrics.histogram("sched.tick.batch_size");
     let tick_us = metrics.histogram("sched.tick.us");
     let queue_depth = metrics.gauge("sched.queue.depth");
+    // per-class depths, indexed by Priority::rank (a best-effort flood
+    // filling the shared cap is invisible in the aggregate gauge alone)
+    let queue_depth_best_effort = metrics.gauge("sched.queue.depth.best_effort");
+    let queue_depth_batch = metrics.gauge("sched.queue.depth.batch");
+    let queue_depth_interactive = metrics.gauge("sched.queue.depth.interactive");
     let inflight = metrics.gauge("sched.inflight");
     let contention = metrics.gauge("sched.stripe.contention");
     let kv_hits = metrics.gauge("kv.prefix.hits");
@@ -493,8 +523,14 @@ fn tick_loop(
                             }
                         }
                     }
-                    let e = queue.remove(key).expect("ordered key is live");
-                    let (seq, cached) = cache.start_sequence(&e.item.tokens);
+                    let mut e = queue.remove(key).expect("ordered key is live");
+                    // a preemption requeue re-admits under its pinned
+                    // admission-time config; fresh prompts snapshot the
+                    // current epoch (the swap barrier at admission)
+                    let (seq, cached) = match e.item.cfg.take() {
+                        Some(cfg) => cache.start_sequence_pinned(&e.item.tokens, cfg),
+                        None => cache.start_sequence(&e.item.tokens),
+                    };
                     admitted.inc();
                     progressed = true;
                     admit_stamp += 1;
@@ -550,6 +586,12 @@ fn tick_loop(
                 let (k, v) = model.kv(a.tokens[pos], pos);
                 match cache.append_token(a.seq, a.tokens[pos], &k, &v) {
                     Ok(()) => {
+                        // sampled in-path stats for drift detection
+                        // (deterministic 1-in-N; an atomic bump when
+                        // the row is not selected)
+                        if let Some(rc) = &recalib {
+                            rc.record_token(&k, &v);
+                        }
                         a.appended += 1;
                         a.stalled = 0;
                         budget -= 1;
@@ -627,6 +669,9 @@ fn tick_loop(
                         // here is caught up in step 2 next tick
                         let (k, v) = model.kv(next, pos + 1);
                         if cache.append_token(a.seq, next, &k, &v).is_ok() {
+                            if let Some(rc) = &recalib {
+                                rc.record_token(&k, &v);
+                            }
                             a.appended += 1;
                         }
                     }
@@ -644,6 +689,10 @@ fn tick_loop(
         flush_removed(&cache, &mut active, &mut remove);
 
         queue_depth.set(queue.len() as i64);
+        let by_class = queue.depth_by_class();
+        queue_depth_best_effort.set(by_class[Priority::BestEffort.rank() as usize] as i64);
+        queue_depth_batch.set(by_class[Priority::Batch.rank() as usize] as i64);
+        queue_depth_interactive.set(by_class[Priority::Interactive.rank() as usize] as i64);
         inflight.set(active.len() as i64);
         contention.set(cache.contention() as i64);
         // mirror the cache's sharing counters (the engine only syncs
@@ -654,6 +703,18 @@ fn tick_loop(
         kv_reused.set(snap.stats.tokens_reused as i64);
         kv_evictions.set(snap.stats.evictions as i64);
         kv_free.set(snap.blocks_free as i64);
+
+        // ---- 6. online re-calibration -------------------------------
+        // evaluate drift on a tick cadence; a sustained-drift window
+        // rebuilds a candidate plan from the sampled stats and
+        // hot-swaps every stripe's scales. New admissions (next tick's
+        // step 1) snapshot the new config; everything already admitted
+        // keeps its grid — the swap is invisible to live streams.
+        if let Some(rc) = &recalib {
+            if ticks.get() % rc.check_every() == 0 {
+                rc.check(&|plan| cache.swap_scales(plan));
+            }
+        }
         tick_us.observe_us(t0.elapsed().as_micros() as u64);
 
         // every in-flight sequence is stalled on pool pressure: back off
@@ -716,6 +777,10 @@ fn preempt(
     let v = active.remove(victim);
     preemptions.inc();
     preempt_tokens.add(v.appended as u64);
+    // pin the victim's admission-time grid before releasing the
+    // sequence: replay must rebuild bit-identical blocks even if a
+    // calibration hot-swap lands before re-admission
+    let cfg = cache.seq_cfg(v.seq);
     let _ = cache.free_sequence(v.seq);
     queue.requeue(
         Pending {
@@ -724,6 +789,7 @@ fn preempt(
             max_new: v.max_new,
             generated: v.generated,
             stream: v.stream,
+            cfg,
         },
         v.class,
         v.waited_carry,
@@ -757,7 +823,7 @@ fn pick_victim(
         .enumerate()
         .filter(|(_, a)| {
             preemptible(a, class, aging_ticks)
-                && stripe.map_or(true, |s| cache.stripe_of_seq(a.seq) == s)
+                && stripe.is_none_or(|s| cache.stripe_of_seq(a.seq) == s)
         })
         .min_by_key(|(_, a)| (a.class, std::cmp::Reverse(a.admitted_at)))
         .map(|(i, _)| i)
@@ -955,6 +1021,43 @@ mod tests {
         assert!(queued, "both in-cap entries remain queued behind the blocker");
         drop(blocker);
         drop((q1, q2));
+        drop(sched);
+    }
+
+    #[test]
+    fn per_class_queue_depth_gauges_track_the_mix() {
+        // one in-flight blocker parks everything else: the queued mix
+        // (2 batch + 1 best-effort, 0 interactive) must be visible in
+        // the per-class gauges, not just the aggregate depth
+        let metrics = Arc::new(Registry::default());
+        let sched = Scheduler::start(
+            pool(1024, 1),
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig { max_inflight: 1, ..SchedConfig::default() },
+            metrics.clone(),
+        );
+        let blocker = sched.submit(1, vec![1, 2, 3], 4000);
+        match blocker.recv().expect("blocker streams") {
+            StreamEvent::Token { .. } => {}
+            other => panic!("expected a token, got {other:?}"),
+        }
+        let q1 = sched.submit_with_priority(2, vec![10], 1, Priority::Batch);
+        let q2 = sched.submit_with_priority(3, vec![11], 1, Priority::Batch);
+        let q3 = sched.submit_with_priority(4, vec![12], 1, Priority::BestEffort);
+        let mut seen = false;
+        for _ in 0..400 {
+            if metrics.gauge("sched.queue.depth.batch").get() == 2
+                && metrics.gauge("sched.queue.depth.best_effort").get() == 1
+                && metrics.gauge("sched.queue.depth.interactive").get() == 0
+                && metrics.gauge("sched.queue.depth").get() == 3
+            {
+                seen = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(seen, "per-class gauges never matched the queued mix");
+        drop((blocker, q1, q2, q3));
         drop(sched);
     }
 

@@ -78,11 +78,12 @@ pub enum AdmissionVerdict {
 /// Request priority class. Order is meaningful: `BestEffort < Batch <
 /// Interactive` (derived `Ord`), and preemption-by-recompute only ever
 /// evicts a *strictly lower* class.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Priority {
     /// Throughput filler: first to wait, first to be preempted.
     BestEffort,
     /// The default class for bulk generation.
+    #[default]
     Batch,
     /// Latency-sensitive traffic: admitted first, never preempted by
     /// lower classes.
@@ -131,12 +132,6 @@ impl Priority {
     /// every other.
     pub fn aged_past_all(self, waited: u64, aging_ticks: u64) -> bool {
         self.effective_rank(waited, aging_ticks) > Priority::MAX_RANK
-    }
-}
-
-impl Default for Priority {
-    fn default() -> Self {
-        Priority::Batch
     }
 }
 
@@ -259,6 +254,17 @@ impl<T> AdmissionQueue<T> {
 
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+
+    /// Queued entries per class, indexed by [`Priority::rank`] — the
+    /// `sched.queue.depth.*` gauges (a best-effort flood filling the
+    /// shared cap is invisible in the aggregate depth alone).
+    pub fn depth_by_class(&self) -> [usize; 3] {
+        let mut out = [0usize; 3];
+        for e in &self.entries {
+            out[e.class.rank() as usize] += 1;
+        }
+        out
     }
 
     /// Enqueue; `Err(item)` when the depth cap would be exceeded — the
@@ -524,6 +530,12 @@ mod tests {
         q.push("batch-2", Priority::Batch).unwrap();
         let order: Vec<&str> = q.order().iter().map(|&k| q.get(k).unwrap().item).collect();
         assert_eq!(order, vec!["inter", "batch-1", "batch-2", "be"]);
+        // per-class depths, indexed by rank
+        assert_eq!(q.depth_by_class(), [1, 2, 1]);
+        let key = q.order()[0];
+        q.remove(key).unwrap();
+        assert_eq!(q.depth_by_class(), [1, 2, 0]);
+        assert_eq!(q.depth_by_class().iter().sum::<usize>(), q.len());
     }
 
     #[test]

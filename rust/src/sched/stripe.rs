@@ -27,7 +27,7 @@
 use crate::kv::{decode_views, CacheConfig, CacheError, DecodeView, KvStats, RadixKvCache};
 use crate::util::hash::fnv1a_u32s;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard, TryLockError};
+use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 
 /// N independently-locked KV cache stripes behind one sequence-id space.
 pub struct StripedKvCache {
@@ -39,6 +39,12 @@ pub struct StripedKvCache {
     rr: AtomicUsize,
     /// Lock acquisitions that found the stripe mutex held.
     contention: AtomicU64,
+    /// Serializes [`StripedKvCache::swap_scales`]: swaps walk the
+    /// stripes one mutex at a time, so two concurrent swappers (the
+    /// tick loop's drift check and an operator `recalib force` verb)
+    /// could otherwise interleave and leave stripes on *different*
+    /// plans forever. Held only across a swap — never on serving paths.
+    swap_serial: Mutex<()>,
 }
 
 impl StripedKvCache {
@@ -63,6 +69,7 @@ impl StripedKvCache {
             stripes,
             rr: AtomicUsize::new(0),
             contention: AtomicU64::new(0),
+            swap_serial: Mutex::new(()),
         }
     }
 
@@ -75,6 +82,7 @@ impl StripedKvCache {
             stripes: vec![Mutex::new(cache)],
             rr: AtomicUsize::new(0),
             contention: AtomicU64::new(0),
+            swap_serial: Mutex::new(()),
         }
     }
 
@@ -82,9 +90,35 @@ impl StripedKvCache {
         self.stripes.len()
     }
 
-    /// Global geometry (total `max_blocks`).
+    /// Global geometry (total `max_blocks`). Geometry fields are
+    /// authoritative for the pool's lifetime; the *scale* fields
+    /// reflect the boot plan only — after a [`StripedKvCache::swap_scales`]
+    /// the per-stripe configs carry the current epoch's scales.
     pub fn config(&self) -> &CacheConfig {
         &self.cfg
+    }
+
+    /// Hot-swap the quantization scales on every stripe (see
+    /// [`RadixKvCache::swap_scales`] for the exactness contract).
+    /// All-or-nothing: swaps are serialized (`swap_serial`), the plan
+    /// is validated against stripe 0 first, and every stripe applies
+    /// the same accepted plan — so stripes can never end up serving
+    /// different plans, even under concurrent swappers. Returns the new
+    /// (shared) epoch.
+    pub fn swap_scales(&self, plan: &crate::calib::CalibrationPlan) -> Result<u64, String> {
+        let _serial = self.swap_serial.lock().unwrap();
+        let mut epoch = 0;
+        for s in 0..self.stripes.len() {
+            // stripes share one geometry and epoch history: a plan
+            // stripe 0 accepts is valid for every stripe
+            epoch = self.lock(s).swap_scales(plan)?;
+        }
+        Ok(epoch)
+    }
+
+    /// Current calibration epoch (0 = boot plan).
+    pub fn epoch(&self) -> u64 {
+        self.lock(0).epoch()
     }
 
     /// Waited lock acquisitions so far (the contention gauge).
@@ -139,6 +173,24 @@ impl StripedKvCache {
         let s = self.route(tokens);
         let (local, cached) = self.lock(s).start_sequence(tokens);
         (self.global_id(s, local), cached)
+    }
+
+    /// [`RadixKvCache::start_sequence_pinned`] on the prompt's stripe —
+    /// re-admission of a preempted sequence under its original
+    /// admission-time config (bit-identical replay across hot-swaps).
+    pub fn start_sequence_pinned(
+        &self,
+        tokens: &[u32],
+        cfg: Arc<CacheConfig>,
+    ) -> (u64, usize) {
+        let s = self.route(tokens);
+        let (local, cached) = self.lock(s).start_sequence_pinned(tokens, cfg);
+        (self.global_id(s, local), cached)
+    }
+
+    /// The admission-time config snapshot of a live sequence.
+    pub fn seq_cfg(&self, id: u64) -> Option<Arc<CacheConfig>> {
+        self.lock(self.stripe_of(id)).seq_cfg(self.local_id(id))
     }
 
     /// Anonymous sequence (no prefix sharing), round-robin striped.
@@ -415,6 +467,32 @@ mod tests {
                 Err(CacheError::UnknownSequence(_))
             ));
         }
+    }
+
+    #[test]
+    fn swap_scales_covers_every_stripe() {
+        let pool = StripedKvCache::new(cfg(64), 4);
+        assert_eq!(pool.epoch(), 0);
+        let mut plan = crate::calib::CalibrationPlan::uncalibrated(crate::quant::INT8_R);
+        plan.v_absmax = 1.5;
+        plan.v_scale = 1.5 / plan.r;
+        plan.batches = 1;
+        assert_eq!(pool.swap_scales(&plan), Ok(1));
+        assert_eq!(pool.epoch(), 1);
+        // every stripe serves the new grid: sequences routed anywhere
+        // stamp the swapped V scale onto their blocks
+        for base in [0u32, 7, 400, 901] {
+            let id = build(&pool, &(base..base + 5).collect::<Vec<u32>>());
+            let view = pool.decode_view(id).unwrap();
+            let mut rng = Pcg64::seeded(base as u64);
+            let out = view.decode_splitk(&rng.normal_vec(HEADS * HEAD_DIM), None, 2).unwrap();
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+        // an invalid plan fails without advancing any stripe's epoch
+        let mut bad = plan.clone();
+        bad.r = 7.0;
+        assert!(pool.swap_scales(&bad).is_err());
+        assert_eq!(pool.epoch(), 1);
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //!
 //! → {"type":"ping"}                ← {"ok":true,"pong":true}
 //! → {"type":"metrics"}             ← {"ok":true,"metrics":{...}}
+//! → {"type":"recalib"}             ← {"ok":true,"recalib":{...}}
+//! → {"type":"recalib","force":true}  (hot-swap now, then status)
 //!
 //! → {"type":"generate","tokens":[...],"max_new":N,
 //!    "priority":"interactive"}                     (priority optional:

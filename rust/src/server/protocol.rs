@@ -29,6 +29,10 @@ pub enum WireRequest {
     /// clients only ever observe scheduling latency, never different
     /// tokens).
     Generate { tokens: Vec<u32>, max_new: usize, priority: Priority },
+    /// Online re-calibration: status snapshot, or an operator-forced
+    /// scale hot-swap (`{"type":"recalib","force":true}`). Swaps never
+    /// change tokens of already-admitted streams (the epoch invariant).
+    Recalib { force: bool },
     Ping,
     Metrics,
 }
@@ -44,6 +48,8 @@ pub enum WireResponse {
     Done,
     Pong,
     Metrics(Json),
+    /// Re-calibration status snapshot (after a force-swap when asked).
+    Recalib(Json),
     Error(String),
 }
 
@@ -100,6 +106,9 @@ pub fn decode_request(line: &str) -> Result<WireRequest, String> {
     match j.at("type").as_str() {
         Some("ping") => Ok(WireRequest::Ping),
         Some("metrics") => Ok(WireRequest::Metrics),
+        Some("recalib") => Ok(WireRequest::Recalib {
+            force: j.at("force").as_bool() == Some(true),
+        }),
         Some("attention") => Ok(WireRequest::Attention {
             accuracy: accuracy()?,
             payload: payload_fields(&j)?,
@@ -193,6 +202,11 @@ pub fn encode_response(resp: &WireResponse) -> String {
             ("metrics", m.clone()),
         ])
         .to_string(),
+        WireResponse::Recalib(s) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("recalib", s.clone()),
+        ])
+        .to_string(),
         WireResponse::Error(e) => Json::obj(vec![
             ("ok", Json::Bool(false)),
             ("error", Json::str(e.clone())),
@@ -259,6 +273,29 @@ mod tests {
             decode_request(r#"{"type":"metrics"}"#),
             Ok(WireRequest::Metrics)
         ));
+    }
+
+    #[test]
+    fn decode_and_encode_recalib() {
+        assert!(matches!(
+            decode_request(r#"{"type":"recalib"}"#),
+            Ok(WireRequest::Recalib { force: false })
+        ));
+        assert!(matches!(
+            decode_request(r#"{"type":"recalib","force":true}"#),
+            Ok(WireRequest::Recalib { force: true })
+        ));
+        assert!(matches!(
+            decode_request(r#"{"type":"recalib","force":false}"#),
+            Ok(WireRequest::Recalib { force: false })
+        ));
+        let status = crate::util::json::Json::obj(vec![
+            ("epoch", crate::util::json::Json::num(2.0)),
+        ]);
+        let line = encode_response(&WireResponse::Recalib(status));
+        let j = crate::util::json::parse(&line).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(true));
+        assert_eq!(j.at("recalib").at("epoch").as_i64(), Some(2));
     }
 
     #[test]

@@ -123,6 +123,17 @@ fn handle_connection(
             Err(e) => WireResponse::Error(e),
             Ok(WireRequest::Ping) => WireResponse::Pong,
             Ok(WireRequest::Metrics) => WireResponse::Metrics(engine.metrics.snapshot()),
+            Ok(WireRequest::Recalib { force }) => {
+                let forced = if force { engine.recalib_force().map(|_| ()) } else { Ok(()) };
+                match forced.and_then(|()| {
+                    engine
+                        .recalib_status()
+                        .ok_or_else(|| "online re-calibration not enabled".to_string())
+                }) {
+                    Ok(status) => WireResponse::Recalib(status),
+                    Err(e) => WireResponse::Error(e),
+                }
+            }
             Ok(WireRequest::Attention { accuracy, payload }) => {
                 WireResponse::Attention(engine.submit_blocking(accuracy, payload))
             }
@@ -235,6 +246,19 @@ impl Client {
         Ok(crate::util::json::parse(&resp)
             .map(|j| j.at("metrics").clone())
             .unwrap_or(crate::util::json::Json::Null))
+    }
+
+    /// Online re-calibration status, or (with `force`) an operator-
+    /// forced scale hot-swap followed by the post-swap status. Returns
+    /// the full response line (check `ok` — the verb errors when the
+    /// server runs without re-calibration).
+    pub fn recalib(&mut self, force: bool) -> std::io::Result<crate::util::json::Json> {
+        use crate::util::json::Json;
+        let mut fields = vec![("type", Json::str("recalib"))];
+        if force {
+            fields.push(("force", Json::Bool(true)));
+        }
+        self.call_json(&Json::obj(fields))
     }
 
     /// Submit an attention request; returns the parsed response JSON.

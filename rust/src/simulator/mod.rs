@@ -208,7 +208,8 @@ pub fn tile_sram_bytes(wl: &Workload, v: Variant) -> usize {
     let (bq, bk, d) = (wl.block_q, wl.block_k, wl.head_dim);
     let e = v.qkv_bytes();
     let operands = ((bq * d) as f64 * e) + 2.0 * ((bk * d) as f64 * e);
-    let p_tile = (bq * bk) as f64 * if matches!(v, Variant::Int8 | Variant::Int4) { 1.0 } else { 2.0 };
+    let p_bytes = if matches!(v, Variant::Int8 | Variant::Int4) { 1.0 } else { 2.0 };
+    let p_tile = (bq * bk) as f64 * p_bytes;
     let accum = (bq * d * 4 + 2 * bq * 4) as f64;
     (operands + p_tile + accum) as usize
 }

@@ -378,9 +378,9 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 9e15 {
-                    out.push_str(&format!("{}", *n as i64));
+                    out.push_str(&(*n as i64).to_string());
                 } else {
-                    out.push_str(&format!("{n}"));
+                    out.push_str(&n.to_string());
                 }
             }
             Json::Str(s) => write_escaped(out, s),

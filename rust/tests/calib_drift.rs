@@ -1,0 +1,308 @@
+//! Online re-calibration integration: drifted traffic through the
+//! engine triggers a zero-downtime scale hot-swap (`calib.swaps`
+//! increments, serving continues), and the epoch invariant holds —
+//! a swap never changes the token stream of a sequence admitted
+//! before it, while new admissions pick up the new scales.
+
+use int_flashattention::attention::Variant;
+use int_flashattention::calib::{
+    CalibrationArtifact, CalibrationPlan, RecalibConfig, VariantTable,
+};
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::metrics::Registry;
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::kv::CacheConfig;
+use int_flashattention::quant::INT8_R;
+use int_flashattention::sched::{
+    HashModel, Priority, SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel,
+};
+use std::sync::Arc;
+
+const HEADS: usize = 2;
+const HEAD_DIM: usize = 16;
+
+fn router() -> BucketRouter {
+    BucketRouter::new(vec![Bucket {
+        variant: Variant::Int8,
+        batch: 2,
+        heads: HEADS,
+        seq: 64,
+        head_dim: HEAD_DIM,
+        causal: true,
+        artifact: String::new(),
+    }])
+}
+
+/// A calibrated plan whose V grid sits at `v_absmax` (token-level K,
+/// no clips) — far below live N(0,1) traffic when `v_absmax` is small.
+fn plan_with_v(v_absmax: f32) -> CalibrationPlan {
+    let mut plan = CalibrationPlan::uncalibrated(INT8_R);
+    plan.v_absmax = v_absmax;
+    plan.v_scale = v_absmax / plan.r;
+    plan.batches = 1;
+    plan
+}
+
+fn artifact(plan: CalibrationPlan) -> CalibrationArtifact {
+    CalibrationArtifact {
+        plan,
+        table: VariantTable { buckets: Vec::new() },
+        reports: Vec::new(),
+        geometry: None,
+        drift: None,
+    }
+}
+
+/// Engine over `plan`-calibrated KV scales, with or without online
+/// re-calibration, scheduler attached.
+fn engine(plan: &CalibrationPlan, recalib: Option<RecalibConfig>) -> Engine {
+    let kv_cfg = CacheConfig {
+        block_tokens: 8,
+        max_blocks: 256,
+        ..CacheConfig::calibrated(HEADS, HEAD_DIM, plan)
+    };
+    let e = Engine::with_calibration(
+        router(),
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+        Some(artifact(plan.clone())),
+    )
+    .with_kv_striped(kv_cfg, 2, 2);
+    let e = match recalib {
+        Some(cfg) => e.with_recalib(cfg).expect("kv attached"),
+        None => e,
+    };
+    e.with_sched(Arc::new(HashModel::new(HEADS, HEAD_DIM)), SchedConfig::default())
+        .expect("kv attached")
+}
+
+fn drain(rx: &std::sync::mpsc::Receiver<StreamEvent>, into: &mut Vec<u32>) {
+    loop {
+        match rx.recv().expect("stream open until terminal event") {
+            StreamEvent::Token { token, .. } => into.push(token),
+            StreamEvent::Done { tokens, .. } => {
+                assert_eq!(&tokens[..], &into[..], "Done carries the streamed tail");
+                return;
+            }
+            StreamEvent::Failed { reason, .. } => panic!("stream failed: {reason}"),
+        }
+    }
+}
+
+#[test]
+fn hot_swap_mid_stream_never_changes_admitted_streams() {
+    let boot = plan_with_v(0.5);
+    // auto-checks off: this test controls the swap moment exactly
+    let with_swap = engine(
+        &boot,
+        Some(RecalibConfig {
+            sample_every: 1,
+            check_every_ticks: u64::MAX,
+            ..RecalibConfig::default()
+        }),
+    );
+    let without_swap = engine(&boot, None);
+    let prompt: Vec<u32> = (0..20).collect();
+    let max_new = 40;
+
+    // baseline: the same prompt on a never-swapped twin engine
+    let baseline = without_swap
+        .generate_blocking(prompt.clone(), max_new)
+        .expect("baseline stream");
+
+    // swap mid-stream: admit, read a few tokens, force the hot-swap,
+    // then drain the rest of the stream
+    let (_, rx) = with_swap.generate(prompt, max_new).expect("submit");
+    let mut streamed = Vec::new();
+    for _ in 0..3 {
+        match rx.recv().expect("stream open") {
+            StreamEvent::Token { token, .. } => streamed.push(token),
+            other => panic!("expected a token, got {other:?}"),
+        }
+    }
+    let epoch = with_swap.recalib_force().expect("sampled rows exist");
+    assert_eq!(epoch, 1);
+    assert_eq!(with_swap.metrics.counter("calib.swaps").get(), 1);
+    drain(&rx, &mut streamed);
+    assert_eq!(
+        streamed, baseline,
+        "a mid-stream hot-swap must not change an admitted sequence's tokens"
+    );
+
+    // a fresh post-swap admission runs the NEW scales: its stream
+    // diverges from the boot-plan twin on the same (disjoint) prompt
+    let fresh: Vec<u32> = (5_000..5_020).collect();
+    let post_swap = with_swap
+        .generate_blocking(fresh.clone(), max_new)
+        .expect("post-swap stream");
+    let boot_twin = without_swap
+        .generate_blocking(fresh, max_new)
+        .expect("twin stream");
+    assert_eq!(post_swap.len(), boot_twin.len());
+    assert_ne!(
+        post_swap, boot_twin,
+        "new admissions must pick up the swapped scales"
+    );
+}
+
+/// Reference semantics: one sequence at a time, per-call decode loop.
+fn sequential_generate(
+    cache: &StripedKvCache,
+    model: &HashModel,
+    prompt: &[u32],
+    max_new: usize,
+) -> Vec<u32> {
+    let (seq, cached) = cache.start_sequence(prompt);
+    let mut tokens = prompt.to_vec();
+    for pos in cached..tokens.len() {
+        let (k, v) = model.kv(tokens[pos], pos);
+        cache.append_token(seq, tokens[pos], &k, &v).expect("baseline pool sized");
+    }
+    let mut generated = Vec::new();
+    while generated.len() < max_new {
+        let pos = tokens.len() - 1;
+        let q = model.query(tokens[pos], pos);
+        let out = cache.decode_splitk(seq, &q, None, 1).expect("decode");
+        let next = model.next_token(&out, pos);
+        generated.push(next);
+        tokens.push(next);
+        if generated.len() < max_new {
+            let (k, v) = model.kv(next, pos + 1);
+            cache.append_token(seq, next, &k, &v).expect("baseline pool sized");
+        }
+    }
+    cache.free_sequence(seq).expect("free");
+    generated
+}
+
+#[test]
+fn preempted_sequence_replays_bit_identically_across_a_swap() {
+    // the epoch invariant under preemption-by-recompute: a victim
+    // admitted at epoch 0, preempted AFTER a hot-swap installed epoch
+    // 1, must replay its history on its pinned admission-time grid —
+    // its stream equals an uninterrupted epoch-0 run, while the
+    // epoch-1 aggressor matches an epoch-1 sequential twin
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let sched_cfg = |bt: usize| CacheConfig {
+        block_tokens: 4,
+        max_blocks: bt,
+        ..CacheConfig::calibrated(HEADS, HEAD_DIM, &plan_with_v(0.5))
+    };
+    let cache = Arc::new(StripedKvCache::new(sched_cfg(24), 1));
+    let metrics = Arc::new(Registry::default());
+    let sched = Scheduler::start(
+        cache.clone(),
+        model.clone(),
+        SchedConfig::default(),
+        metrics.clone(),
+    );
+    let next_plan = plan_with_v(3.0);
+
+    // victim: resident 8 + 79 = 87 tokens → 22 of 24 blocks (epoch 0)
+    let victim_prompt: Vec<u32> = (3000..3008).collect();
+    let victim = sched.submit_with_priority(1, victim_prompt.clone(), 80, Priority::BestEffort);
+    match victim.recv().expect("victim streams before preemption") {
+        StreamEvent::Token { .. } => {}
+        other => panic!("expected a token, got {other:?}"),
+    }
+    // hot-swap while the victim is mid-stream
+    assert_eq!(cache.swap_scales(&next_plan), Ok(1));
+
+    // aggressor (epoch 1): 9 blocks can only fit by preempting
+    let agg_prompt: Vec<u32> = (4000..4012).collect();
+    let agg = sched.submit_with_priority(2, agg_prompt.clone(), 25, Priority::Interactive);
+    let mut agg_tokens = Vec::new();
+    loop {
+        match agg.recv().expect("aggressor stream open") {
+            StreamEvent::Token { token, .. } => agg_tokens.push(token),
+            StreamEvent::Done { .. } => break,
+            StreamEvent::Failed { reason, .. } => panic!("aggressor failed: {reason}"),
+        }
+    }
+    assert!(
+        metrics.counter("sched.preemptions").get() >= 1,
+        "aggressor can only fit by preempting the victim"
+    );
+    // aggressor admitted post-swap: equals an epoch-1 sequential twin
+    let new_twin = StripedKvCache::new(CacheConfig {
+        block_tokens: 4,
+        max_blocks: 256,
+        ..CacheConfig::calibrated(HEADS, HEAD_DIM, &next_plan)
+    });
+    assert_eq!(agg_tokens, sequential_generate(&new_twin, &model, &agg_prompt, 25));
+
+    // victim replays on its PINNED epoch-0 grid: the full stream
+    // (first token included) equals an uninterrupted epoch-0 run
+    let mut got = vec![];
+    loop {
+        match victim.recv().expect("victim stream open") {
+            StreamEvent::Token { token, .. } => got.push(token),
+            StreamEvent::Done { .. } => break,
+            StreamEvent::Failed { reason, .. } => panic!("victim failed: {reason}"),
+        }
+    }
+    let old_twin = StripedKvCache::new(CacheConfig {
+        block_tokens: 4,
+        max_blocks: 256,
+        ..CacheConfig::calibrated(HEADS, HEAD_DIM, &plan_with_v(0.5))
+    });
+    let want = sequential_generate(&old_twin, &model, &victim_prompt, 80);
+    got.insert(0, want[0]);
+    assert_eq!(
+        got, want,
+        "preempt/replay across a hot-swap must be invisible in the stream"
+    );
+    drop(sched);
+}
+
+#[test]
+fn drifted_traffic_auto_swaps_without_restart() {
+    // boot plan calibrated at v_absmax 0.2 — live N(0,1) activations
+    // diverge by ln(~2.2/0.2) ≈ 2.4, far past the 0.25 threshold
+    let e = engine(
+        &plan_with_v(0.2),
+        Some(RecalibConfig {
+            sample_every: 1,
+            threshold: 0.25,
+            release: 0.5,
+            trigger: 2,
+            min_rows: 32,
+            check_every_ticks: 1,
+            shards: 2,
+        }),
+    );
+    assert_eq!(e.metrics.counter("calib.swaps").get(), 0);
+    // drive drifted traffic; the tick loop samples, detects sustained
+    // drift, rebuilds a plan from the live stats and swaps — no restart
+    for i in 0..3u32 {
+        let prompt: Vec<u32> = (i * 1000..i * 1000 + 16).collect();
+        let out = e.generate_blocking(prompt, 40).expect("stream completes");
+        assert_eq!(out.len(), 40);
+    }
+    let swaps = e.metrics.counter("calib.swaps").get();
+    assert!(swaps >= 1, "sustained drift must trigger a hot-swap");
+    assert_eq!(e.metrics.gauge("calib.epoch").get() as u64, swaps);
+    let status = e.recalib_status().expect("recalib enabled");
+    assert_eq!(status.at("epoch").as_i64(), Some(swaps as i64));
+    // the swapped plan was measured from live traffic: its V range is
+    // the traffic's, not the stale 0.2
+    assert!(
+        status.at("v_scale").as_f64().unwrap() > (0.5 / INT8_R) as f64,
+        "swapped V grid must track the live distribution"
+    );
+    // serving continues on the new epoch
+    let out = e.generate_blocking((9_000..9_016).collect(), 8).expect("post-swap serving");
+    assert_eq!(out.len(), 8);
+    // and the rebased detector reports the new normal: no further swaps
+    // under unchanged traffic
+    for i in 10..12u32 {
+        let prompt: Vec<u32> = (i * 1000..i * 1000 + 16).collect();
+        e.generate_blocking(prompt, 40).expect("stream completes");
+    }
+    assert_eq!(
+        e.metrics.counter("calib.swaps").get(),
+        swaps,
+        "in-distribution traffic after the rebase must not flap"
+    );
+}

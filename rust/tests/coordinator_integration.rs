@@ -4,7 +4,9 @@
 
 use int_flashattention::attention::Variant;
 use int_flashattention::coordinator::batcher::BatchPolicy;
-use int_flashattention::coordinator::engine::{Backend, Engine, EngineConfig, NativeBackend, PjrtBackend};
+use int_flashattention::coordinator::engine::{
+    Backend, Engine, EngineConfig, NativeBackend, PjrtBackend,
+};
 use int_flashattention::coordinator::router::{Bucket, BucketRouter};
 use int_flashattention::coordinator::{AccuracyClass, RequestPayload};
 use int_flashattention::runtime::Manifest;
@@ -56,7 +58,8 @@ fn native_engine_throughput_many_requests() {
             let mut ok = 0;
             for i in 0..10 {
                 let seq = 16 + ((t as usize * 13 + i * 7) % 100);
-                let resp = engine.submit_blocking(AccuracyClass::Fast, payload(&mut rng, 2, seq, 16));
+                let p = payload(&mut rng, 2, seq, 16);
+                let resp = engine.submit_blocking(AccuracyClass::Fast, p);
                 if resp.result.is_ok() {
                     ok += 1;
                 }
@@ -64,7 +67,7 @@ fn native_engine_throughput_many_requests() {
             ok
         }));
     }
-    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>().iter().sum();
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
     assert_eq!(total, 40, "all requests served");
     let snap = engine.metrics.snapshot();
     assert_eq!(snap.at("counter.completed").as_i64(), Some(40));

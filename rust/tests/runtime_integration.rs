@@ -4,7 +4,7 @@
 
 use int_flashattention::attention::{self, multihead::HeadBatch, AttnConfig, Variant};
 use int_flashattention::runtime::{executor::HostTensor, ArtifactRegistry, Executor};
-use int_flashattention::util::rng::{Dist, Pcg64};
+use int_flashattention::util::rng::Pcg64;
 use int_flashattention::util::stats;
 use std::sync::Arc;
 

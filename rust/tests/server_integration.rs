@@ -85,8 +85,9 @@ fn protocol_error_handling() {
     assert!(j.at("error").as_str().unwrap().contains("unknown"));
 
     // unroutable geometry
+    let zeros = vec![0.0; 7 * 16 * 8];
     let resp = client
-        .attention("fast", 7, 16, 8, &vec![0.0; 7 * 16 * 8], &vec![0.0; 7 * 16 * 8], &vec![0.0; 7 * 16 * 8])
+        .attention("fast", 7, 16, 8, &zeros, &zeros, &zeros)
         .expect("attention");
     assert_eq!(resp.at("ok").as_bool(), Some(false));
 

@@ -318,6 +318,12 @@ impl Engine {
             _ => router,
         };
         let metrics = Arc::new(Registry::default());
+        metrics.set_info("build.info", &[("version", env!("CARGO_PKG_VERSION"))]);
+        let start_s = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as i64)
+            .unwrap_or(0);
+        metrics.gauge("process.start_time_seconds").set(start_s);
         metrics
             .gauge("calib.loaded")
             .set(calibration.is_some() as i64);

@@ -1,5 +1,7 @@
 //! Serving metrics: counters, gauges, latency histograms with a JSON
-//! snapshot (exposed through the server's `metrics` verb).
+//! snapshot (exposed through the server's `metrics` verb) and typed
+//! iteration accessors for the Prometheus text exposition
+//! ([`crate::obs::prom`]).
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -42,35 +44,86 @@ impl Gauge {
     }
 }
 
-/// Log-scale latency histogram (µs buckets, powers of two up to ~67 s).
+/// Log-scale histogram over power-of-two buckets.
+///
+/// Bucket `i` covers `(2^(i-1), 2^i]` (bucket 0 covers `[0, 1]`); the
+/// last bucket is the overflow catch-all, exported as `+Inf`. Values
+/// are unit-agnostic — latencies go through [`Histogram::observe_us`]
+/// (the name documents the unit), plain counts such as per-tick batch
+/// sizes through [`Histogram::observe`]. The exact minimum and maximum
+/// observed values are tracked so quantiles can be clamped to the
+/// observed range instead of reporting a bucket bound no sample ever
+/// reached.
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
-    sum_us: AtomicU64,
+    sum: AtomicU64,
     count: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
 }
 
 const HIST_BUCKETS: usize = 27;
+
+/// Number of buckets with a finite upper bound (`2^0 .. 2^25`, ~34 s
+/// in µs); index `HIST_BUCKETS - 1` is the overflow (`+Inf`) bucket.
+pub const HIST_FINITE_BUCKETS: usize = HIST_BUCKETS - 1;
 
 impl Default for Histogram {
     fn default() -> Self {
         Histogram {
             buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            sum_us: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
             count: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
         }
     }
 }
 
 impl Histogram {
-    pub fn observe_us(&self, us: u64) {
-        let idx = (64 - us.max(1).leading_zeros() as usize).min(HIST_BUCKETS - 1);
+    /// Record one unit-agnostic value (counts, sizes, latencies alike).
+    pub fn observe(&self, v: u64) {
+        // ceil(log2(v)): exact powers of two land on their own bound
+        let idx = if v <= 1 {
+            0
+        } else {
+            (64 - (v - 1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        };
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// [`Histogram::observe`] for microsecond latencies (the dominant
+    /// use; the name keeps the unit visible at call sites).
+    pub fn observe_us(&self, us: u64) {
+        self.observe(us);
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed values (Prometheus `_sum`).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Smallest observed value (0 when empty).
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Largest observed value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -78,25 +131,60 @@ impl Histogram {
         if c == 0 {
             0.0
         } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+            self.sum() as f64 / c as f64
         }
     }
 
-    /// Approximate quantile from bucket upper bounds.
-    pub fn quantile_us(&self, q: f64) -> u64 {
+    /// Cumulative bucket counts with their finite upper bounds — the
+    /// Prometheus `_bucket{le=...}` series. Returns
+    /// [`HIST_FINITE_BUCKETS`] `(le, cumulative_count)` pairs; the
+    /// implicit `+Inf` cumulative count equals [`Histogram::count`].
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::with_capacity(HIST_FINITE_BUCKETS);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().take(HIST_FINITE_BUCKETS).enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            out.push((1u64 << i, cum));
+        }
+        out
+    }
+
+    /// Interpolated quantile: linear within the containing bucket,
+    /// clamped to the exact observed `[min, max]` range — `quantile(0)`
+    /// can never report a bound below the smallest observed value and
+    /// `quantile(1)` never exceeds the largest.
+    pub fn quantile(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
-            return 0;
+            return 0.0;
         }
-        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let target = (((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64).clamp(1, total);
+        let lo_obs = self.min() as f64;
+        let hi_obs = self.max() as f64;
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << i; // bucket upper bound
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 && seen + c >= target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                // the overflow bucket has no finite bound: its samples
+                // all sit in (2^25, max]
+                let hi = if i >= HIST_FINITE_BUCKETS {
+                    hi_obs
+                } else {
+                    (1u64 << i) as f64
+                };
+                let frac = (target - seen) as f64 / c as f64;
+                return (lo + frac * (hi - lo)).clamp(lo_obs, hi_obs);
             }
+            seen += c;
         }
-        1u64 << (HIST_BUCKETS - 1)
+        hi_obs
+    }
+
+    /// [`Histogram::quantile`] rounded to integer microseconds (the
+    /// JSON snapshot's `p50_us`/`p99_us`/`p999_us` fields).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        self.quantile(q).round() as u64
     }
 }
 
@@ -106,6 +194,10 @@ pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+    /// Static label sets (`build.info` → `[("version", "0.1.0")]`),
+    /// exported as value-1 info gauges in Prometheus and as string
+    /// objects in the JSON snapshot.
+    infos: Mutex<BTreeMap<String, Vec<(String, String)>>>,
 }
 
 impl Registry {
@@ -136,6 +228,58 @@ impl Registry {
             .clone()
     }
 
+    /// Register a static info metric: a constant label set under a
+    /// family name (Prometheus `name{labels...} 1` idiom).
+    pub fn set_info(&self, name: &str, labels: &[(&str, &str)]) {
+        self.infos.lock().unwrap().insert(
+            name.to_string(),
+            labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+        );
+    }
+
+    /// All counters, name-sorted (exposition iteration).
+    pub fn counters(&self) -> Vec<(String, std::sync::Arc<Counter>)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// All gauges, name-sorted (exposition iteration).
+    pub fn gauges(&self) -> Vec<(String, std::sync::Arc<Gauge>)> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// All histograms, name-sorted (exposition iteration).
+    pub fn histograms(&self) -> Vec<(String, std::sync::Arc<Histogram>)> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// All info label sets, name-sorted (exposition iteration).
+    pub fn infos(&self) -> Vec<(String, Vec<(String, String)>)> {
+        self.infos
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
     /// Snapshot everything as JSON.
     pub fn snapshot(&self) -> Json {
         let mut obj = BTreeMap::new();
@@ -146,14 +290,40 @@ impl Registry {
             obj.insert(format!("gauge.{k}"), Json::num(g.get() as f64));
         }
         for (k, h) in self.histograms.lock().unwrap().iter() {
+            // cumulative (le, count) pairs over the finite bounds; the
+            // +Inf cumulative count is `count` itself
+            let buckets = Json::Arr(
+                h.cumulative_buckets()
+                    .into_iter()
+                    .map(|(le, c)| {
+                        Json::Arr(vec![Json::num(le as f64), Json::num(c as f64)])
+                    })
+                    .collect(),
+            );
             obj.insert(
                 format!("hist.{k}"),
                 Json::obj(vec![
                     ("count", Json::num(h.count() as f64)),
+                    ("sum", Json::num(h.sum() as f64)),
                     ("mean_us", Json::num(h.mean_us())),
+                    ("min", Json::num(h.min() as f64)),
+                    ("max", Json::num(h.max() as f64)),
                     ("p50_us", Json::num(h.quantile_us(0.5) as f64)),
                     ("p99_us", Json::num(h.quantile_us(0.99) as f64)),
+                    ("p999_us", Json::num(h.quantile_us(0.999) as f64)),
+                    ("buckets", buckets),
                 ]),
+            );
+        }
+        for (k, labels) in self.infos.lock().unwrap().iter() {
+            obj.insert(
+                format!("info.{k}"),
+                Json::Obj(
+                    labels
+                        .iter()
+                        .map(|(lk, lv)| (lk.clone(), Json::str(lv.clone())))
+                        .collect(),
+                ),
             );
         }
         Json::Obj(obj)
@@ -192,6 +362,86 @@ mod tests {
         let p99 = h.quantile_us(0.99);
         assert!(p99 >= 1 << 19, "p99 {p99}");
         assert!(h.quantile_us(0.0) <= p50);
+        assert!(h.quantile_us(0.999) >= p99);
+    }
+
+    #[test]
+    fn quantile_zero_never_undershoots_the_minimum() {
+        // regression: the old implementation returned the first
+        // non-empty bucket's *bound* for q=0 — and for q exactly 0 the
+        // ceil'd target of 0 matched bucket 0 immediately, reporting 1
+        // for data whose smallest sample was 1000
+        let h = Histogram::default();
+        for us in [1000u64, 1500, 9000] {
+            h.observe_us(us);
+        }
+        assert!(h.quantile_us(0.0) >= 1000, "q=0 is ≥ the observed minimum");
+        assert!(h.quantile_us(1.0) <= 9000, "q=1 is ≤ the observed maximum");
+        assert_eq!(h.min(), 1000);
+        assert_eq!(h.max(), 9000);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_the_bucket() {
+        // 100 samples spread across one bucket (513..=1024): pure
+        // bound-reporting would return 1024 for every quantile; the
+        // interpolated estimate must move with q
+        let h = Histogram::default();
+        for i in 0..100u64 {
+            h.observe(513 + 5 * i);
+        }
+        let p10 = h.quantile(0.10);
+        let p50 = h.quantile(0.50);
+        let p90 = h.quantile(0.90);
+        assert!(p10 < p50 && p50 < p90, "quantiles ordered: {p10} {p50} {p90}");
+        assert!(p50 > 513.0 && p50 < 1024.0, "p50 {p50} interior to the bucket");
+        // a single-value histogram reports that value, not its bound
+        let one = Histogram::default();
+        one.observe(1000);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(one.quantile_us(q), 1000);
+        }
+    }
+
+    #[test]
+    fn observe_is_value_scale_not_microseconds() {
+        // batch sizes: small integers must stay distinguishable (the
+        // old observe_us floor misfiled 0/1 together and reported
+        // power-of-two bounds)
+        let h = Histogram::default();
+        for v in [0u64, 1, 1, 2, 4, 8] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 8);
+        assert_eq!(h.sum(), 16);
+        // exact powers of two land on their own bound
+        let b = h.cumulative_buckets();
+        assert_eq!(b[0], (1, 3), "0 and the two 1s in [0,1]");
+        assert_eq!(b[1], (2, 4));
+        assert_eq!(b[2], (4, 5));
+        assert_eq!(b[3], (8, 6));
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_bounded_by_count() {
+        let h = Histogram::default();
+        let mut x = 0x243f_6a88u64;
+        for _ in 0..500 {
+            // xorshift over a wide value range incl. the overflow bucket
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            h.observe(x % (1 << 30));
+        }
+        let b = h.cumulative_buckets();
+        assert_eq!(b.len(), HIST_FINITE_BUCKETS);
+        for w in b.windows(2) {
+            assert!(w[0].1 <= w[1].1, "cumulative counts never decrease");
+            assert!(w[0].0 < w[1].0, "bounds strictly increase");
+        }
+        assert!(b.last().unwrap().1 <= h.count(), "+Inf (count) closes the series");
     }
 
     #[test]
@@ -199,6 +449,9 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile_us(0.5), 0);
         assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.sum(), 0);
     }
 
     #[test]
@@ -207,10 +460,18 @@ mod tests {
         r.counter("a").inc();
         r.gauge("b").set(7);
         r.histogram("lat").observe_us(100);
+        r.set_info("build.info", &[("version", "1.2.3")]);
         let s = r.snapshot();
         assert_eq!(s.at("counter.a").as_i64(), Some(1));
         assert_eq!(s.at("gauge.b").as_i64(), Some(7));
         assert_eq!(s.at("hist.lat").at("count").as_i64(), Some(1));
+        assert_eq!(s.at("hist.lat").at("p999_us").as_i64(), Some(100));
+        assert_eq!(s.at("hist.lat").at("min").as_i64(), Some(100));
+        assert_eq!(
+            s.at("hist.lat").at("buckets").as_arr().unwrap().len(),
+            HIST_FINITE_BUCKETS
+        );
+        assert_eq!(s.at("info.build.info").at("version").as_str(), Some("1.2.3"));
         // serializes cleanly
         assert!(crate::util::json::parse(&s.to_string()).is_ok());
     }
@@ -231,5 +492,7 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(h.count(), 4000);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1000);
     }
 }

@@ -29,6 +29,8 @@ pub mod calib;
 pub mod coordinator;
 pub mod gemm;
 pub mod kv;
+pub mod loadgen;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sched;

@@ -1,0 +1,364 @@
+//! Closed-loop execution of a [`LoadPlan`] against a live endpoint.
+//!
+//! One client thread per planned session: each sleeps until its
+//! arrival instant, connects to the newline-JSON serving port, and
+//! plays its turns back-to-back — every turn replays the accumulated
+//! history (system prompt + prior turns + generated replies) the way a
+//! chat client does, which is exactly the access pattern the radix
+//! prefix cache rewards. Latencies are measured where a user would
+//! measure them: TTFT is request-send to first streamed token, ITL the
+//! gap between consecutive streamed tokens, e2e send-to-terminal-line.
+//!
+//! The aggregate [`LoadReport`] mirrors the server-side lifecycle
+//! histograms (`sched.ttft_us.{class}` …) from the *outside*, so a
+//! bench run cross-checks the observability stack end to end: what the
+//! scrape endpoint claims should bracket what clients actually saw.
+
+use std::io;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::obs::CLASS_NAMES;
+use crate::sched::Priority;
+use crate::server::Client;
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+use super::plan::{LoadConfig, LoadPlan, SessionPlan};
+
+/// Client-side measurements for one completed turn.
+#[derive(Clone, Debug)]
+pub struct TurnOutcome {
+    pub class: Priority,
+    /// Terminal response was `ok` (not shed, not errored).
+    pub ok: bool,
+    /// Tokens streamed before the terminal line.
+    pub tokens: usize,
+    /// First streamed token relative to request send; `None` when the
+    /// turn streamed nothing.
+    pub ttft_us: Option<u64>,
+    /// Client-observed gaps between consecutive streamed tokens.
+    pub itl_us: Vec<u64>,
+    pub e2e_us: u64,
+}
+
+/// Interpolated percentiles over one latency family (microseconds).
+/// All-zero when the family collected no samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Pcts {
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+}
+
+/// Per-priority-class slice of a [`LoadReport`].
+#[derive(Clone, Debug, Default)]
+pub struct ClassStats {
+    pub turns: usize,
+    pub ok: usize,
+    pub tokens: usize,
+    pub ttft: Pcts,
+    pub itl: Pcts,
+    pub e2e: Pcts,
+}
+
+/// Aggregated result of one bench-load run. [`LoadReport::to_json`]
+/// is the `BENCH_load.json` artifact shape CI archives.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub seed: u64,
+    pub wall_s: f64,
+    pub turns_planned: usize,
+    pub turns_completed: usize,
+    pub turns_ok: usize,
+    /// Sessions that failed to connect or died mid-run (their
+    /// remaining turns are missing from `turns_completed`).
+    pub session_errors: usize,
+    pub tokens_total: usize,
+    /// Tokens/sec delivered by ok turns that met both SLOs.
+    pub goodput_tok_s: f64,
+    /// Fraction of completed turns that were ok and met both SLOs.
+    pub slo_attainment: f64,
+    pub slo_ttft_ms: f64,
+    pub slo_itl_ms: f64,
+    /// Indexed by [`Priority::rank`]; every class is always present.
+    pub classes: [ClassStats; 3],
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        let pcts = |p: &Pcts| {
+            Json::obj(vec![
+                ("p50", Json::num(p.p50_us)),
+                ("p99", Json::num(p.p99_us)),
+                ("p999", Json::num(p.p999_us)),
+            ])
+        };
+        let mut classes = Vec::with_capacity(3);
+        for (name, c) in CLASS_NAMES.iter().zip(self.classes.iter()) {
+            let obj = Json::obj(vec![
+                ("turns", Json::num(c.turns as f64)),
+                ("ok", Json::num(c.ok as f64)),
+                ("tokens", Json::num(c.tokens as f64)),
+                ("ttft_us", pcts(&c.ttft)),
+                ("itl_us", pcts(&c.itl)),
+                ("e2e_us", pcts(&c.e2e)),
+            ]);
+            classes.push((*name, obj));
+        }
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            (
+                "turns",
+                Json::obj(vec![
+                    ("planned", Json::num(self.turns_planned as f64)),
+                    ("completed", Json::num(self.turns_completed as f64)),
+                    ("ok", Json::num(self.turns_ok as f64)),
+                    ("session_errors", Json::num(self.session_errors as f64)),
+                ]),
+            ),
+            ("tokens_total", Json::num(self.tokens_total as f64)),
+            ("goodput_tok_s", Json::num(self.goodput_tok_s)),
+            (
+                "slo",
+                Json::obj(vec![
+                    ("ttft_ms", Json::num(self.slo_ttft_ms)),
+                    ("itl_ms", Json::num(self.slo_itl_ms)),
+                    ("attainment", Json::num(self.slo_attainment)),
+                ]),
+            ),
+            ("classes", Json::obj(classes)),
+        ])
+    }
+}
+
+fn run_session(addr: &str, epoch: Instant, s: &SessionPlan) -> io::Result<Vec<TurnOutcome>> {
+    let target = Duration::from_micros(s.start_offset_us);
+    let elapsed = epoch.elapsed();
+    if target > elapsed {
+        thread::sleep(target - elapsed);
+    }
+    let mut client = Client::connect(addr)?;
+    let mut history = s.system_prompt.clone();
+    let mut outcomes = Vec::with_capacity(s.turns.len());
+    for turn in &s.turns {
+        history.extend_from_slice(&turn.user_tokens);
+        let mut stamps: Vec<Instant> = Vec::with_capacity(turn.max_new);
+        let mut generated: Vec<u32> = Vec::with_capacity(turn.max_new);
+        let class = s.class.name();
+        let start = Instant::now();
+        let push = |_: usize, t: u32| {
+            stamps.push(Instant::now());
+            generated.push(t);
+        };
+        let resp = client.generate_streaming_with_priority(&history, turn.max_new, class, push)?;
+        let e2e_us = start.elapsed().as_micros() as u64;
+        let ok = resp.at("ok").as_bool() == Some(true);
+        let ttft_us = stamps.first().map(|t| t.duration_since(start).as_micros() as u64);
+        let itl_us = stamps
+            .windows(2)
+            .map(|w| w[1].duration_since(w[0]).as_micros() as u64)
+            .collect();
+        outcomes.push(TurnOutcome {
+            class: s.class,
+            ok,
+            tokens: generated.len(),
+            ttft_us,
+            itl_us,
+            e2e_us,
+        });
+        history.extend_from_slice(&generated);
+    }
+    Ok(outcomes)
+}
+
+fn pcts_of(samples: &mut [f64]) -> Pcts {
+    if samples.is_empty() {
+        return Pcts::default();
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    Pcts {
+        p50_us: percentile_sorted(samples, 0.50),
+        p99_us: percentile_sorted(samples, 0.99),
+        p999_us: percentile_sorted(samples, 0.999),
+    }
+}
+
+fn aggregate(
+    cfg: &LoadConfig,
+    turns_planned: usize,
+    wall_s: f64,
+    session_errors: usize,
+    outcomes: &[TurnOutcome],
+) -> LoadReport {
+    let slo_ttft_us = cfg.slo_ttft_ms * 1_000.0;
+    let slo_itl_us = cfg.slo_itl_ms * 1_000.0;
+    let mut ttft: [Vec<f64>; 3] = Default::default();
+    let mut itl: [Vec<f64>; 3] = Default::default();
+    let mut e2e: [Vec<f64>; 3] = Default::default();
+    let mut classes: [ClassStats; 3] = Default::default();
+    let mut good_tokens = 0usize;
+    let mut met = 0usize;
+    for o in outcomes {
+        let r = o.class.rank() as usize;
+        classes[r].turns += 1;
+        classes[r].tokens += o.tokens;
+        if let Some(t) = o.ttft_us {
+            ttft[r].push(t as f64);
+        }
+        itl[r].extend(o.itl_us.iter().map(|&g| g as f64));
+        e2e[r].push(o.e2e_us as f64);
+        if o.ok {
+            classes[r].ok += 1;
+            let ttft_met = match o.ttft_us {
+                Some(t) => t as f64 <= slo_ttft_us,
+                None => true,
+            };
+            let itl_met = o.itl_us.iter().all(|&g| g as f64 <= slo_itl_us);
+            if ttft_met && itl_met {
+                met += 1;
+                good_tokens += o.tokens;
+            }
+        }
+    }
+    for r in 0..3 {
+        classes[r].ttft = pcts_of(&mut ttft[r]);
+        classes[r].itl = pcts_of(&mut itl[r]);
+        classes[r].e2e = pcts_of(&mut e2e[r]);
+    }
+    let turns_ok = classes.iter().map(|c| c.ok).sum();
+    let tokens_total = classes.iter().map(|c| c.tokens).sum();
+    let goodput_tok_s = if wall_s > 0.0 {
+        good_tokens as f64 / wall_s
+    } else {
+        0.0
+    };
+    let slo_attainment = if outcomes.is_empty() {
+        0.0
+    } else {
+        met as f64 / outcomes.len() as f64
+    };
+    LoadReport {
+        seed: cfg.seed,
+        wall_s,
+        turns_planned,
+        turns_completed: outcomes.len(),
+        turns_ok,
+        session_errors,
+        tokens_total,
+        goodput_tok_s,
+        slo_attainment,
+        slo_ttft_ms: cfg.slo_ttft_ms,
+        slo_itl_ms: cfg.slo_itl_ms,
+        classes,
+    }
+}
+
+/// Execute `plan` against the newline-JSON serving endpoint at `addr`
+/// with one closed-loop client thread per session, and aggregate the
+/// client-observed latencies into a [`LoadReport`].
+pub fn run(addr: &str, cfg: &LoadConfig, plan: &LoadPlan) -> LoadReport {
+    let epoch = Instant::now();
+    let mut handles = Vec::with_capacity(plan.sessions.len());
+    for s in plan.sessions.iter().cloned() {
+        let addr = addr.to_string();
+        let h = thread::Builder::new()
+            .name("intfa-loadgen".into())
+            .spawn(move || run_session(&addr, epoch, &s))
+            .expect("spawn loadgen session thread");
+        handles.push(h);
+    }
+    let mut outcomes = Vec::new();
+    let mut session_errors = 0usize;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(mut o)) => outcomes.append(&mut o),
+            Ok(Err(e)) => {
+                session_errors += 1;
+                crate::log_warn!("loadgen session failed: {}", e);
+            }
+            Err(_) => session_errors += 1,
+        }
+    }
+    let wall_s = epoch.elapsed().as_secs_f64();
+    aggregate(cfg, plan.turn_count(), wall_s, session_errors, &outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn turn(
+        class: Priority,
+        ok: bool,
+        tokens: usize,
+        ttft: u64,
+        itl: &[u64],
+        e2e: u64,
+    ) -> TurnOutcome {
+        TurnOutcome {
+            class,
+            ok,
+            tokens,
+            ttft_us: if tokens == 0 { None } else { Some(ttft) },
+            itl_us: itl.to_vec(),
+            e2e_us: e2e,
+        }
+    }
+
+    #[test]
+    fn aggregate_computes_slo_goodput_and_percentiles() {
+        let cfg = LoadConfig {
+            slo_ttft_ms: 500.0,
+            slo_itl_ms: 500.0,
+            ..LoadConfig::default()
+        };
+        let outcomes = vec![
+            turn(Priority::Interactive, true, 4, 1_000, &[100], 5_000),
+            turn(Priority::Interactive, true, 4, 900_000, &[100], 1_000_000),
+            turn(Priority::Batch, false, 0, 0, &[], 2_000),
+        ];
+        let r = aggregate(&cfg, 4, 2.0, 1, &outcomes);
+        assert_eq!(r.turns_planned, 4);
+        assert_eq!(r.turns_completed, 3);
+        assert_eq!(r.turns_ok, 2);
+        assert_eq!(r.session_errors, 1);
+        assert_eq!(r.tokens_total, 8);
+        // Only the first turn meets the TTFT SLO: 4 tokens / 2 s.
+        assert!((r.goodput_tok_s - 2.0).abs() < 1e-9);
+        assert!((r.slo_attainment - 1.0 / 3.0).abs() < 1e-9);
+        let inter = &r.classes[Priority::Interactive.rank() as usize];
+        assert_eq!(inter.turns, 2);
+        assert_eq!(inter.tokens, 8);
+        // ttft samples [1_000, 900_000]: interpolated p50 is midway.
+        assert!((inter.ttft.p50_us - 450_500.0).abs() < 1e-6);
+        assert!(inter.ttft.p999_us > inter.ttft.p50_us);
+        // The failed batch turn contributed no ttft sample: zeros.
+        let batch = &r.classes[Priority::Batch.rank() as usize];
+        assert_eq!(batch.turns, 1);
+        assert_eq!(batch.ok, 0);
+        assert_eq!(batch.ttft.p50_us, 0.0);
+        // best-effort saw no traffic but is still reported.
+        assert_eq!(r.classes[0].turns, 0);
+    }
+
+    #[test]
+    fn report_json_has_all_classes_and_round_trips() {
+        let cfg = LoadConfig::default();
+        let r = aggregate(&cfg, 0, 1.0, 0, &[]);
+        let j = r.to_json();
+        for name in CLASS_NAMES {
+            let c = j.at("classes").at(name);
+            assert!(c.at("ttft_us").at("p999").as_f64().is_some());
+            assert!(c.at("itl_us").at("p50").as_f64().is_some());
+            assert!(c.at("e2e_us").at("p99").as_f64().is_some());
+        }
+        assert_eq!(j.at("slo").at("attainment").as_f64(), Some(0.0));
+        assert_eq!(j.at("turns").at("planned").as_f64(), Some(0.0));
+        let text = j.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.at("seed").as_f64(), Some(42.0));
+        assert_eq!(back.at("goodput_tok_s").as_f64(), Some(0.0));
+    }
+}

@@ -1,0 +1,30 @@
+//! Closed-loop bench-load harness.
+//!
+//! Two halves:
+//!
+//!   - [`plan::plan`]: a seed plus a [`plan::LoadConfig`] deterministically
+//!     materializes a [`plan::LoadPlan`] — Poisson or bursty session
+//!     arrivals, mixed priority classes, multi-turn sessions that open
+//!     with shared system prompts and replay their accumulated history
+//!     each turn (the access pattern the radix prefix cache rewards),
+//!     and per-turn prompt-length / generation-budget draws. Same seed,
+//!     same schedule: runs are replayable and CI-comparable.
+//!   - [`driver::run`]: one closed-loop client thread per session plays
+//!     the plan against a live `intfa serve` endpoint over the real TCP
+//!     surface and measures TTFT / inter-token latency / e2e where a
+//!     user would, then aggregates per-class p50/p99/p99.9 and goodput
+//!     under a configurable SLO into a [`driver::LoadReport`] (JSON via
+//!     [`driver::LoadReport::to_json`], archived by CI as
+//!     `BENCH_load.json`).
+//!
+//! Together with the scheduler's lifecycle histograms and the
+//! Prometheus scrape endpoint ([`crate::server::prom`]), this closes
+//! the observability loop: the driver generates known traffic, the
+//! server's `/metrics` exposition must tell the same latency story
+//! from the inside.
+
+pub mod driver;
+pub mod plan;
+
+pub use driver::{run, ClassStats, LoadReport, Pcts, TurnOutcome};
+pub use plan::{plan, Arrival, LoadConfig, LoadPlan, SessionPlan, TurnPlan};

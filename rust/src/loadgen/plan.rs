@@ -1,0 +1,278 @@
+//! Deterministic workload plans for the closed-loop bench driver.
+//!
+//! A [`LoadConfig`] plus a seed fully determines a [`LoadPlan`]: every
+//! arrival instant, priority class, system-prompt assignment, prompt
+//! length, and generation budget is drawn from one [`Pcg64`] stream in
+//! a fixed order. Two runs with the same config therefore replay the
+//! *identical* request schedule — the property CI's bench-load smoke
+//! and the determinism regression test lean on — while changing only
+//! the seed re-rolls the whole mix.
+//!
+//! Sessions are multi-turn: each session opens with one of a small set
+//! of shared system prompts (so concurrent sessions exercise the radix
+//! prefix cache's cross-sequence block sharing) and then appends its
+//! accumulated history on every turn, the way a chat client replays
+//! context. Token ids are synthesized in disjoint ranges (system
+//! prompts at `1_000_000+`, user turns at `2_000_000+`) so planned
+//! prompts never collide with test fixtures' small-integer tokens.
+
+use crate::sched::Priority;
+use crate::util::rng::Pcg64;
+
+/// Arrival process for session start times.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Independent exponential inter-arrivals at `rate` sessions/sec.
+    Poisson { rate: f64 },
+    /// Bursts of `burst` sessions arriving at the same instant, with
+    /// exponential gaps between bursts sized so the long-run rate is
+    /// still `rate` sessions/sec. Stresses admission shedding and
+    /// preemption in a way smooth Poisson traffic does not.
+    Bursty { rate: f64, burst: usize },
+}
+
+/// Everything that shapes a generated workload. `seed` makes it
+/// replayable; the rest sizes it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadConfig {
+    pub seed: u64,
+    /// Number of client sessions (one connection each).
+    pub sessions: usize,
+    /// Turns per session; each turn replays the accumulated history.
+    pub turns: usize,
+    pub arrival: Arrival,
+    /// Probability weights per class, indexed by [`Priority::rank`]
+    /// (`[best_effort, batch, interactive]`). Need not sum to 1.
+    pub class_mix: [f64; 3],
+    /// Inclusive `(min, max)` user-turn prompt length in tokens.
+    pub prompt_tokens: (usize, usize),
+    /// Inclusive `(min, max)` generation budget per turn.
+    pub max_new: (usize, usize),
+    /// Number of distinct shared system prompts sessions draw from.
+    pub system_prompts: usize,
+    /// Length of each system prompt in tokens.
+    pub system_prompt_len: usize,
+    /// TTFT service-level objective (milliseconds) for goodput.
+    pub slo_ttft_ms: f64,
+    /// Inter-token-latency SLO (milliseconds) for goodput.
+    pub slo_itl_ms: f64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            seed: 42,
+            sessions: 8,
+            turns: 2,
+            arrival: Arrival::Poisson { rate: 16.0 },
+            class_mix: [0.2, 0.3, 0.5],
+            prompt_tokens: (4, 12),
+            max_new: (4, 12),
+            system_prompts: 2,
+            system_prompt_len: 8,
+            slo_ttft_ms: 2_000.0,
+            slo_itl_ms: 500.0,
+        }
+    }
+}
+
+/// One user turn: the new tokens appended to the session history and
+/// the generation budget requested for the reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TurnPlan {
+    pub user_tokens: Vec<u32>,
+    pub max_new: usize,
+}
+
+/// One planned session: when it starts, what class it runs at, which
+/// shared system prompt it opens with, and its turns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionPlan {
+    /// Start instant, microseconds after the run epoch.
+    pub start_offset_us: u64,
+    pub class: Priority,
+    pub system_prompt: Vec<u32>,
+    pub turns: Vec<TurnPlan>,
+}
+
+/// A fully materialized workload: feed to [`crate::loadgen::run`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadPlan {
+    pub seed: u64,
+    pub sessions: Vec<SessionPlan>,
+}
+
+impl LoadPlan {
+    /// Total planned turns across all sessions.
+    pub fn turn_count(&self) -> usize {
+        self.sessions.iter().map(|s| s.turns.len()).sum()
+    }
+}
+
+fn sample_range(rng: &mut Pcg64, (lo, hi): (usize, usize)) -> usize {
+    let (lo, hi) = (lo.min(hi), lo.max(hi));
+    lo + rng.next_range((hi - lo + 1) as u64) as usize
+}
+
+fn sample_class(rng: &mut Pcg64, mix: &[f64; 3]) -> Priority {
+    let total: f64 = mix.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+    if total <= 0.0 {
+        return Priority::Batch;
+    }
+    let x = rng.next_f64() * total;
+    let mut cum = 0.0;
+    for (rank, w) in mix.iter().enumerate() {
+        if w.is_finite() && *w > 0.0 {
+            cum += w;
+            if x < cum {
+                return match rank {
+                    0 => Priority::BestEffort,
+                    1 => Priority::Batch,
+                    _ => Priority::Interactive,
+                };
+            }
+        }
+    }
+    Priority::Interactive
+}
+
+/// Materialize `cfg` into a replayable schedule. Deterministic: one
+/// RNG stream, fixed draw order (arrival, class, system prompt, then
+/// per-turn prompt length and budget).
+pub fn plan(cfg: &LoadConfig) -> LoadPlan {
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let mut clock_us = 0.0_f64;
+    let mut burst_left = 0usize;
+    let mut sessions = Vec::with_capacity(cfg.sessions);
+    for s in 0..cfg.sessions {
+        match cfg.arrival {
+            Arrival::Poisson { rate } => {
+                clock_us += rng.exp_interval(rate) * 1e6;
+            }
+            Arrival::Bursty { rate, burst } => {
+                let burst = burst.max(1);
+                if burst_left == 0 {
+                    // Gaps between bursts of `burst` keep the long-run
+                    // session rate at `rate`.
+                    clock_us += rng.exp_interval(rate / burst as f64) * 1e6;
+                    burst_left = burst;
+                }
+                burst_left -= 1;
+            }
+        }
+        let class = sample_class(&mut rng, &cfg.class_mix);
+        let sp = rng.next_range(cfg.system_prompts.max(1) as u64) as usize;
+        let system_prompt: Vec<u32> = (0..cfg.system_prompt_len)
+            .map(|i| (1_000_000 + sp * 10_000 + i) as u32)
+            .collect();
+        let turns = (0..cfg.turns.max(1))
+            .map(|t| {
+                let plen = sample_range(&mut rng, cfg.prompt_tokens);
+                let user_tokens = (0..plen)
+                    .map(|i| (2_000_000 + s * 100_000 + t * 1_000 + i) as u32)
+                    .collect();
+                let max_new = sample_range(&mut rng, cfg.max_new);
+                TurnPlan {
+                    user_tokens,
+                    max_new,
+                }
+            })
+            .collect();
+        sessions.push(SessionPlan {
+            start_offset_us: clock_us as u64,
+            class,
+            system_prompt,
+            turns,
+        });
+    }
+    LoadPlan {
+        seed: cfg.seed,
+        sessions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_plan_different_seed_differs() {
+        let cfg = LoadConfig::default();
+        assert_eq!(plan(&cfg), plan(&cfg));
+        let other = LoadConfig {
+            seed: 43,
+            ..cfg.clone()
+        };
+        assert_ne!(plan(&cfg), plan(&other));
+    }
+
+    #[test]
+    fn plan_respects_config_bounds() {
+        let cfg = LoadConfig {
+            sessions: 20,
+            turns: 3,
+            prompt_tokens: (5, 9),
+            max_new: (2, 6),
+            system_prompts: 3,
+            system_prompt_len: 4,
+            ..LoadConfig::default()
+        };
+        let p = plan(&cfg);
+        assert_eq!(p.sessions.len(), 20);
+        assert_eq!(p.turn_count(), 60);
+        let mut offsets_sorted = true;
+        let mut prev = 0u64;
+        for s in &p.sessions {
+            assert_eq!(s.system_prompt.len(), 4);
+            assert!(s.system_prompt[0] >= 1_000_000);
+            offsets_sorted &= s.start_offset_us >= prev;
+            prev = s.start_offset_us;
+            for t in &s.turns {
+                assert!((5..=9).contains(&t.user_tokens.len()));
+                assert!((2..=6).contains(&t.max_new));
+                assert!(t.user_tokens[0] >= 2_000_000);
+            }
+        }
+        assert!(offsets_sorted, "arrivals must be time-ordered");
+    }
+
+    #[test]
+    fn bursty_arrivals_share_instants() {
+        let cfg = LoadConfig {
+            sessions: 12,
+            arrival: Arrival::Bursty {
+                rate: 16.0,
+                burst: 4,
+            },
+            ..LoadConfig::default()
+        };
+        let p = plan(&cfg);
+        // Every burst of 4 consecutive sessions lands on one instant.
+        for chunk in p.sessions.chunks(4) {
+            let first = chunk[0].start_offset_us;
+            assert!(chunk.iter().all(|s| s.start_offset_us == first));
+        }
+        // ... and distinct bursts land on distinct instants.
+        let burst_a = p.sessions[0].start_offset_us;
+        let burst_b = p.sessions[4].start_offset_us;
+        assert_ne!(burst_a, burst_b, "distinct bursts, distinct instants");
+    }
+
+    #[test]
+    fn degenerate_class_mix_pins_the_class() {
+        let cfg = LoadConfig {
+            sessions: 16,
+            class_mix: [0.0, 0.0, 1.0],
+            ..LoadConfig::default()
+        };
+        let p = plan(&cfg);
+        let pinned = p.sessions.iter().all(|s| s.class == Priority::Interactive);
+        assert!(pinned, "mix [0,0,1] must yield only interactive");
+        let zero = LoadConfig {
+            class_mix: [0.0, 0.0, 0.0],
+            ..cfg
+        };
+        let fallback = plan(&zero).sessions.iter().all(|s| s.class == Priority::Batch);
+        assert!(fallback, "all-zero mix falls back to the default class");
+    }
+}

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve        start the TCP serving engine over AOT artifacts
 //!   client       load-generator client against a running server
+//!   bench-load   closed-loop bench-load harness (seeded, multi-turn)
 //!   calibrate    run calibration + precision autotuning, write artifact
 //!   golden       validate every artifact against its golden fixture
 //!   accuracy     regenerate the paper's Tables 1-2 (MRE)
@@ -20,7 +21,7 @@ use int_flashattention::coordinator::engine::{
 };
 use int_flashattention::coordinator::router::BucketRouter;
 use int_flashattention::runtime::Manifest;
-use int_flashattention::server::{Client, Server};
+use int_flashattention::server::{scrape_text, Client, MetricsServer, Server};
 use int_flashattention::simulator::{predict, GpuModel, Workload};
 use int_flashattention::util::cli::Args;
 use int_flashattention::util::log::{self, Level};
@@ -35,11 +36,29 @@ intfa — INT-FlashAttention serving runtime
 
 USAGE:
   intfa serve      [--artifacts DIR] [--addr HOST:PORT] [--backend pjrt|native]
+                   [--metrics-addr HOST:PORT]
+                     --metrics-addr       also serve a Prometheus text exposition
+                                          (GET /metrics) on its own bind address:
+                                          counters as *_total, latency histograms
+                                          as *_bucket/_sum/_count with cumulative
+                                          le labels, per-class series labelled
+                                          class=\"interactive|batch|best_effort\"
                    [--policy eager|deadline|full] [--deadline-ms N] [--workers N]
                    [--no-kv] [--kv-blocks N] [--kv-block-tokens N] [--kv-split-k N]
                    [--no-sched] [--sched-stripes N] [--sched-tick-us N]
                    [--sched-max-inflight N] [--sched-prefill-chunk N]
                    [--sched-workers N] [--sched-queue-cap N] [--sched-aging-ticks N]
+                   [--sched-queue-cap-interactive N] [--sched-queue-cap-batch N]
+                   [--sched-queue-cap-best-effort N] [--no-lifecycle]
+                     --sched-queue-cap-*  per-class admission queue caps (default
+                                          unbounded up to --sched-queue-cap): a
+                                          flood in one class sheds against its own
+                                          budget instead of exhausting the shared
+                                          cap other classes depend on
+                     --no-lifecycle       disable request-lifecycle latency
+                                          histograms (sched.ttft_us.* etc.);
+                                          token streams are bit-identical either
+                                          way — observation never reschedules
                      --sched-stripes      KV pool stripes (independent locks), default 4
                      --sched-tick-us      idle-tick wait for new work in µs, default 500
                                           (in-flight decodes never wait; this bounds
@@ -77,6 +96,20 @@ USAGE:
                      {\"type\":\"recalib\"} | {\"type\":\"recalib\",\"force\":true}
   intfa client     [--addr HOST:PORT] [--requests N] [--concurrency C]
                    [--heads H] [--seq N] [--head-dim D] [--accuracy fast|balanced|exact]
+  intfa bench-load [--addr HOST:PORT | --in-process] [--seed S] [--sessions N]
+                   [--turns N] [--arrival poisson|bursty] [--rate R] [--burst B]
+                   [--class-mix BE,BATCH,INTER] [--prompt-min N] [--prompt-max N]
+                   [--new-min N] [--new-max N] [--system-prompts N]
+                   [--system-prompt-len N] [--slo-ttft-ms MS] [--slo-itl-ms MS]
+                   [--out FILE] [--heads H] [--head-dim D] [--kv-blocks N]
+                     closed-loop load harness against the generate verb:
+                     seeded (replayable) Poisson or bursty arrivals, multi-turn
+                     sessions sharing system prompts (radix prefix reuse),
+                     mixed priority classes; reports per-class TTFT/ITL/e2e
+                     p50/p99/p99.9 and goodput under the SLO as JSON (--out,
+                     default BENCH_load.json). --in-process spins up the
+                     reference engine + scrape endpoint in this process and
+                     self-checks the Prometheus exposition after the run
   intfa calibrate  [--out FILE] [--heads H] [--head-dim D] [--batches N]
                    [--calib-seq N] [--dist normal|uniform] [--method absmax|p999|ema]
                    [--seqs 128,256,512] [--seed S] [--per-channel-k]
@@ -108,6 +141,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("serve") => cmd_serve(args),
         Some("client") => cmd_client(args),
+        Some("bench-load") => cmd_bench_load(args),
         Some("calibrate") => cmd_calibrate(args),
         Some("golden") => cmd_golden(args),
         Some("accuracy") => cmd_accuracy(args),
@@ -241,6 +275,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     batch_workers: args.get_usize("sched-workers", 4)?,
                     queue_cap: args.get_usize("sched-queue-cap", 1024)?,
                     aging_ticks: args.get_u64("sched-aging-ticks", 256)?,
+                    queue_cap_by_class: [
+                        args.get_usize("sched-queue-cap-best-effort", usize::MAX)?,
+                        args.get_usize("sched-queue-cap-batch", usize::MAX)?,
+                        args.get_usize("sched-queue-cap-interactive", usize::MAX)?,
+                    ],
+                    lifecycle: !args.has("no-lifecycle"),
                     ..int_flashattention::sched::SchedConfig::default()
                 };
                 log_info!(
@@ -261,9 +301,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => engine,
     };
+    let registry = engine.metrics.clone();
     let server = Server::bind(Arc::new(engine), args.get_or("addr", "127.0.0.1:7433"))?;
     println!("listening on {}", server.local_addr());
+    // Prometheus exposition on its own bind address, so scrapers never
+    // contend with the inference port
+    let metrics_srv = match args.get("metrics-addr") {
+        Some(addr) => {
+            let m = MetricsServer::bind(registry, addr)?;
+            println!("metrics on http://{}/metrics", m.local_addr());
+            Some(m.start())
+        }
+        None => None,
+    };
     server.serve();
+    if let Some((handle, join)) = metrics_srv {
+        handle.shutdown();
+        let _ = join.join();
+    }
     Ok(())
 }
 
@@ -314,6 +369,145 @@ fn cmd_client(args: &Args) -> Result<()> {
         s.p50,
         s.p99
     );
+    Ok(())
+}
+
+fn parse_mix(s: &str) -> Result<[f64; 3]> {
+    let parts: Vec<f64> = s
+        .split(',')
+        .map(|p| p.trim().parse::<f64>().map_err(|_| anyhow!("bad class-mix part {p:?}")))
+        .collect::<Result<_>>()?;
+    if parts.len() != 3 {
+        bail!("--class-mix wants three weights: best_effort,batch,interactive");
+    }
+    Ok([parts[0], parts[1], parts[2]])
+}
+
+fn bench_load_config(args: &Args) -> Result<int_flashattention::loadgen::LoadConfig> {
+    use int_flashattention::loadgen::{Arrival, LoadConfig};
+    let rate = args.get_f64("rate", 16.0)?;
+    let arrival = match args.get_or("arrival", "poisson") {
+        "poisson" => Arrival::Poisson { rate },
+        "bursty" => Arrival::Bursty { rate, burst: args.get_usize("burst", 4)? },
+        other => bail!("unknown --arrival {other:?} (poisson | bursty)"),
+    };
+    Ok(LoadConfig {
+        seed: args.get_u64("seed", 42)?,
+        sessions: args.get_usize("sessions", 8)?,
+        turns: args.get_usize("turns", 2)?,
+        arrival,
+        class_mix: parse_mix(args.get_or("class-mix", "0.2,0.3,0.5"))?,
+        prompt_tokens: (args.get_usize("prompt-min", 4)?, args.get_usize("prompt-max", 12)?),
+        max_new: (args.get_usize("new-min", 4)?, args.get_usize("new-max", 12)?),
+        system_prompts: args.get_usize("system-prompts", 2)?,
+        system_prompt_len: args.get_usize("system-prompt-len", 8)?,
+        slo_ttft_ms: args.get_f64("slo-ttft-ms", 2_000.0)?,
+        slo_itl_ms: args.get_f64("slo-itl-ms", 500.0)?,
+    })
+}
+
+/// The reference in-process serving stack for `bench-load --in-process`:
+/// NativeBackend + HashModel engine (same shape as the sched benches)
+/// behind the real TCP surface.
+fn bench_engine(args: &Args) -> Result<Engine> {
+    use int_flashattention::coordinator::router::Bucket;
+    use int_flashattention::kv::CacheConfig;
+    use int_flashattention::sched::{HashModel, SchedConfig};
+
+    let heads = args.get_usize("heads", 4)?;
+    let head_dim = args.get_usize("head-dim", 64)?;
+    let blocks = args.get_usize("kv-blocks", 512)?;
+    let router = BucketRouter::new(vec![Bucket {
+        variant: Variant::Int8,
+        batch: 2,
+        heads,
+        seq: 64,
+        head_dim,
+        causal: true,
+        artifact: String::new(),
+    }]);
+    Engine::new(
+        router,
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    )
+    .with_kv_striped(
+        CacheConfig { block_tokens: 16, max_blocks: blocks, ..CacheConfig::new(heads, head_dim) },
+        2,
+        2,
+    )
+    .with_sched(
+        Arc::new(HashModel::new(heads, head_dim)),
+        SchedConfig {
+            max_inflight: args.get_usize("sched-max-inflight", 16)?,
+            lifecycle: !args.has("no-lifecycle"),
+            ..SchedConfig::default()
+        },
+    )
+    .map_err(|e| anyhow!(e))
+}
+
+fn cmd_bench_load(args: &Args) -> Result<()> {
+    use int_flashattention::loadgen;
+    use int_flashattention::obs::prom::validate_exposition;
+    use int_flashattention::util::json::Json;
+
+    let cfg = bench_load_config(args)?;
+    let plan = loadgen::plan(&cfg);
+    log_info!(
+        "bench-load: seed {} — {} sessions, {} turns planned",
+        cfg.seed,
+        plan.sessions.len(),
+        plan.turn_count()
+    );
+
+    let (report, scrape_ok) = if args.has("in-process") {
+        let engine = bench_engine(args)?;
+        let registry = engine.metrics.clone();
+        let server = Server::bind(Arc::new(engine), "127.0.0.1:0")?;
+        let addr = server.local_addr().to_string();
+        let metrics_srv = MetricsServer::bind(registry, "127.0.0.1:0")?;
+        let metrics_addr = metrics_srv.local_addr();
+        let (mhandle, mjoin) = metrics_srv.start();
+        let (handle, join) = server.start();
+
+        let report = loadgen::run(&addr, &cfg, &plan);
+
+        // self-check: with bench traffic just recorded, the exposition
+        // must be valid Prometheus text carrying the lifecycle families
+        let body = scrape_text(metrics_addr)?;
+        let series = validate_exposition(&body).map_err(|e| anyhow!("bad exposition: {e}"))?;
+        for needle in ["sched_ttft_us_bucket{class=", "sched_itl_us_", "sched_e2e_us_", "_total"] {
+            if !body.contains(needle) {
+                bail!("scrape self-check: exposition is missing {needle:?}");
+            }
+        }
+        log_info!("scrape self-check ok: {series} series from {metrics_addr}");
+
+        handle.shutdown();
+        let _ = join.join();
+        mhandle.shutdown();
+        let _ = mjoin.join();
+        (report, Some(true))
+    } else {
+        let addr = args.get_or("addr", "127.0.0.1:7433").to_string();
+        (loadgen::run(&addr, &cfg, &plan), None)
+    };
+
+    let mut j = report.to_json();
+    if let (Json::Obj(map), Some(ok)) = (&mut j, scrape_ok) {
+        map.insert("scrape_ok".to_string(), Json::Bool(ok));
+    }
+    println!(
+        "bench-load: {}/{} turns ok, goodput {:.1} tok/s, SLO attainment {:.1}%",
+        report.turns_ok,
+        report.turns_completed,
+        report.goodput_tok_s,
+        report.slo_attainment * 100.0
+    );
+    let out = args.get_or("out", "BENCH_load.json").to_string();
+    std::fs::write(&out, j.to_pretty())?;
+    println!("wrote {out}");
     Ok(())
 }
 

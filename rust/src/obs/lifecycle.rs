@@ -1,0 +1,153 @@
+//! Per-class request-lifecycle latency families.
+//!
+//! One [`Lifecycle`] is created by the scheduler tick loop and records
+//! the client-visible timeline of every sequence: queue wait (enqueue →
+//! admission, per admission), TTFT (enqueue → first streamed token,
+//! exactly once per sequence even across preempt/replay), ITL (gap
+//! between consecutive streamed tokens — spanning preemptions, because
+//! that is what the client observes), and end-to-end (enqueue → Done).
+//!
+//! Registry names carry the class as a trailing dotted segment
+//! (`sched.ttft_us.interactive`); the Prometheus renderer folds that
+//! segment into a `class` label so the families group as
+//! `sched_ttft_us_bucket{class="interactive",le="..."}`.
+
+use crate::coordinator::metrics::{Counter, Histogram, Registry};
+use crate::sched::queue::Priority;
+use std::sync::Arc;
+
+/// Class-name segments indexed by [`Priority::rank`]:
+/// `0 = best_effort, 1 = batch, 2 = interactive`. Underscored (not the
+/// hyphenated [`Priority::name`] form) so the segment survives
+/// Prometheus name sanitization as a clean label value.
+pub const CLASS_NAMES: [&str; 3] = ["best_effort", "batch", "interactive"];
+
+/// Handles to the per-class lifecycle metric families.
+///
+/// All record methods are no-ops when built via [`Lifecycle::disabled`]
+/// — the scheduler uses that to prove observation never perturbs
+/// streams.
+pub struct Lifecycle {
+    enabled: bool,
+    ttft: [Arc<Histogram>; 3],
+    itl: [Arc<Histogram>; 3],
+    e2e: [Arc<Histogram>; 3],
+    queue_wait: [Arc<Histogram>; 3],
+    shed: [Arc<Counter>; 3],
+}
+
+fn per_class(reg: &Registry, family: &str) -> [Arc<Histogram>; 3] {
+    CLASS_NAMES.map(|class| reg.histogram(&format!("{family}.{class}")))
+}
+
+impl Lifecycle {
+    /// Register the lifecycle families in `reg` (idempotent: the
+    /// registry interns by name, so every family exists — with zero
+    /// counts — from scheduler start, and scrapes see a stable set).
+    pub fn new(reg: &Registry) -> Lifecycle {
+        Self::build(reg, true)
+    }
+
+    /// A lifecycle whose record methods do nothing (histograms live in
+    /// a private throwaway registry).
+    pub fn disabled() -> Lifecycle {
+        Self::build(&Registry::default(), false)
+    }
+
+    fn build(reg: &Registry, enabled: bool) -> Lifecycle {
+        Lifecycle {
+            enabled,
+            ttft: per_class(reg, "sched.ttft_us"),
+            itl: per_class(reg, "sched.itl_us"),
+            e2e: per_class(reg, "sched.e2e_us"),
+            queue_wait: per_class(reg, "sched.queue_wait_us"),
+            shed: CLASS_NAMES
+                .map(|class| reg.counter(&format!("sched.admission.shed.{class}"))),
+        }
+    }
+
+    /// Time to first streamed token, µs since enqueue.
+    pub fn record_ttft(&self, class: Priority, us: u64) {
+        if self.enabled {
+            self.ttft[class.rank() as usize].observe_us(us);
+        }
+    }
+
+    /// Inter-token gap, µs since the previous streamed token.
+    pub fn record_itl(&self, class: Priority, us: u64) {
+        if self.enabled {
+            self.itl[class.rank() as usize].observe_us(us);
+        }
+    }
+
+    /// End-to-end completion latency, µs since enqueue.
+    pub fn record_e2e(&self, class: Priority, us: u64) {
+        if self.enabled {
+            self.e2e[class.rank() as usize].observe_us(us);
+        }
+    }
+
+    /// Queue wait for one admission, µs since the last (re-)enqueue.
+    pub fn record_queue_wait(&self, class: Priority, us: u64) {
+        if self.enabled {
+            self.queue_wait[class.rank() as usize].observe_us(us);
+        }
+    }
+
+    /// One admission shed for `class` (cap overflow).
+    pub fn record_shed(&self, class: Priority) {
+        if self.enabled {
+            self.shed[class.rank() as usize].inc();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_into_the_class_indexed_families() {
+        let reg = Registry::default();
+        let lc = Lifecycle::new(&reg);
+        lc.record_ttft(Priority::Interactive, 1200);
+        lc.record_itl(Priority::Batch, 300);
+        lc.record_e2e(Priority::BestEffort, 9000);
+        lc.record_queue_wait(Priority::Interactive, 40);
+        lc.record_shed(Priority::BestEffort);
+        assert_eq!(reg.histogram("sched.ttft_us.interactive").count(), 1);
+        assert_eq!(reg.histogram("sched.ttft_us.batch").count(), 0);
+        assert_eq!(reg.histogram("sched.itl_us.batch").count(), 1);
+        assert_eq!(reg.histogram("sched.e2e_us.best_effort").count(), 1);
+        assert_eq!(reg.histogram("sched.queue_wait_us.interactive").count(), 1);
+        assert_eq!(reg.counter("sched.admission.shed.best_effort").get(), 1);
+        assert_eq!(reg.counter("sched.admission.shed.interactive").get(), 0);
+    }
+
+    #[test]
+    fn families_exist_from_construction() {
+        // a scrape between scheduler start and first request must see
+        // the full stable family set, not a growing one
+        let reg = Registry::default();
+        let _lc = Lifecycle::new(&reg);
+        let names: Vec<String> = reg.histograms().into_iter().map(|(n, _)| n).collect();
+        for fam in ["sched.ttft_us", "sched.itl_us", "sched.e2e_us", "sched.queue_wait_us"] {
+            for class in CLASS_NAMES {
+                assert!(
+                    names.contains(&format!("{fam}.{class}")),
+                    "missing {fam}.{class}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_lifecycle_records_nothing() {
+        let reg = Registry::default();
+        let lc = Lifecycle::disabled();
+        lc.record_ttft(Priority::Interactive, 1200);
+        lc.record_shed(Priority::Interactive);
+        assert_eq!(reg.histograms().len(), 0);
+        assert_eq!(reg.counters().len(), 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Observability layer: request-lifecycle latency tracing and
+//! Prometheus text exposition.
+//!
+//! [`lifecycle`] owns the per-priority-class latency families the tick
+//! loop records into (TTFT, inter-token latency, end-to-end, queue
+//! wait, per-class shed counts). [`prom`] renders the whole
+//! [`crate::coordinator::metrics::Registry`] as Prometheus text format
+//! 0.0.4 — dependency-free, served over raw HTTP/1.1 by
+//! [`crate::server::prom::MetricsServer`].
+//!
+//! Everything here is pure observation: recording a histogram must
+//! never change a token stream (the scheduler's exactness contract).
+//! `tests/obs_integration.rs` proves streams are bit-identical with
+//! lifecycle collection enabled vs disabled.
+
+pub mod lifecycle;
+pub mod prom;
+
+pub use lifecycle::{Lifecycle, CLASS_NAMES};
+pub use prom::{render, sanitize, validate_exposition};

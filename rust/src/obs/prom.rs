@@ -1,0 +1,444 @@
+//! Prometheus text exposition (format 0.0.4) over the metrics
+//! [`Registry`] — dependency-free rendering plus a validating parser
+//! used by tests and the bench-load scrape self-check.
+//!
+//! Mapping from registry names:
+//! - dots (and any other character outside `[a-zA-Z0-9_:]`) become `_`;
+//! - counters gain the `_total` suffix;
+//! - a trailing `.{best_effort,batch,interactive}` segment is folded
+//!   into a `class` label so per-class families group as one series
+//!   set (`sched.ttft_us.interactive` →
+//!   `sched_ttft_us_bucket{class="interactive",le="..."}`);
+//! - histograms export every finite power-of-two bound plus `+Inf`,
+//!   then `_sum` and `_count`;
+//! - info label sets ([`Registry::set_info`]) render as value-1 gauges
+//!   (`build_info{version="0.1.0"} 1`).
+
+use crate::coordinator::metrics::{Histogram, Registry};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// Priority-class name segments recognised as a trailing label.
+const CLASSES: [&str; 3] = ["best_effort", "batch", "interactive"];
+
+/// Sanitize a registry name into a legal Prometheus metric name:
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*`, everything else replaced by `_`.
+pub fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, ch) in name.chars().enumerate() {
+        let ok = ch.is_ascii_alphabetic()
+            || ch == '_'
+            || ch == ':'
+            || (i > 0 && ch.is_ascii_digit());
+        out.push(if ok { ch } else { '_' });
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Split a trailing `.{class}` segment off a registry name.
+fn split_class(name: &str) -> (&str, Option<&'static str>) {
+    for class in CLASSES {
+        if let Some(stem) = name.strip_suffix(class) {
+            if let Some(stem) = stem.strip_suffix('.') {
+                return (stem, Some(class));
+            }
+        }
+    }
+    (name, None)
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// `{class="..."}` / `{class="...",le="..."}` / `{le="..."}` / `` —
+/// class always renders before `le` for a stable golden layout.
+fn labels(class: Option<&str>, le: Option<&str>) -> String {
+    let mut parts = Vec::new();
+    if let Some(c) = class {
+        parts.push(format!("class=\"{}\"", escape_label(c)));
+    }
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Group same-family series (the classless aggregate plus per-class
+/// variants) under one sanitized family name. Registry iteration is
+/// name-sorted, so within a family the aggregate sorts first and class
+/// variants follow alphabetically — a deterministic exposition.
+fn group_by_family<T>(
+    series: Vec<(String, T)>,
+) -> BTreeMap<String, Vec<(Option<&'static str>, T)>> {
+    let mut fams: BTreeMap<String, Vec<(Option<&'static str>, T)>> = BTreeMap::new();
+    for (name, v) in series {
+        let (stem, class) = split_class(&name);
+        fams.entry(sanitize(stem)).or_default().push((class, v));
+    }
+    fams
+}
+
+/// Render the full registry as Prometheus text format 0.0.4.
+pub fn render(reg: &Registry) -> String {
+    let mut out = String::new();
+
+    for (fam, series) in group_by_family(reg.counters()) {
+        let _ = writeln!(out, "# TYPE {fam}_total counter");
+        for (class, c) in series {
+            let _ = writeln!(out, "{fam}_total{} {}", labels(class, None), c.get());
+        }
+    }
+
+    for (fam, series) in group_by_family(reg.gauges()) {
+        let _ = writeln!(out, "# TYPE {fam} gauge");
+        for (class, g) in series {
+            let _ = writeln!(out, "{fam}{} {}", labels(class, None), g.get());
+        }
+    }
+
+    for (fam, series) in group_by_family(reg.histograms()) {
+        let _ = writeln!(out, "# TYPE {fam} histogram");
+        for (class, h) in series {
+            render_histogram(&mut out, &fam, class, &h);
+        }
+    }
+
+    for (name, label_set) in reg.infos() {
+        let fam = sanitize(&name);
+        let _ = writeln!(out, "# TYPE {fam} gauge");
+        let rendered: Vec<String> = label_set
+            .iter()
+            .map(|(k, v)| format!("{}=\"{}\"", sanitize(k), escape_label(v)))
+            .collect();
+        if rendered.is_empty() {
+            let _ = writeln!(out, "{fam} 1");
+        } else {
+            let _ = writeln!(out, "{fam}{{{}}} 1", rendered.join(","));
+        }
+    }
+
+    out
+}
+
+fn render_histogram(out: &mut String, fam: &str, class: Option<&str>, h: &Arc<Histogram>) {
+    // snapshot count first: concurrent observes between bucket reads
+    // could otherwise leave a finite cumulative count above +Inf
+    let count = h.count();
+    for (le, cum) in h.cumulative_buckets() {
+        let _ = writeln!(
+            out,
+            "{fam}_bucket{} {}",
+            labels(class, Some(&le.to_string())),
+            cum.min(count)
+        );
+    }
+    let _ = writeln!(out, "{fam}_bucket{} {count}", labels(class, Some("+Inf")));
+    let _ = writeln!(out, "{fam}_sum{} {}", labels(class, None), h.sum());
+    let _ = writeln!(out, "{fam}_count{} {count}", labels(class, None));
+}
+
+/// Validate Prometheus text: legal names, one `# TYPE` per family,
+/// parseable samples, and per-series `_bucket` invariants (strictly
+/// increasing `le`, non-decreasing cumulative counts, closed by
+/// `+Inf`). Returns the number of samples on success.
+pub fn validate_exposition(text: &str) -> Result<usize, String> {
+    let mut typed: BTreeSet<String> = BTreeSet::new();
+    // key: bucket series identity (name + non-le labels) →
+    // (last le, last cumulative count, +Inf seen)
+    let mut buckets: BTreeMap<String, (f64, f64, bool)> = BTreeMap::new();
+    let mut samples = 0usize;
+
+    for (idx, line) in text.lines().enumerate() {
+        let at = |msg: String| format!("line {}: {msg}", idx + 1);
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let fam = it.next().ok_or_else(|| at("TYPE without a family".into()))?;
+            let kind = it.next().ok_or_else(|| at("TYPE without a kind".into()))?;
+            if !["counter", "gauge", "histogram", "summary", "untyped"].contains(&kind) {
+                return Err(at(format!("unknown metric kind {kind:?}")));
+            }
+            if !typed.insert(fam.to_string()) {
+                return Err(at(format!("duplicate # TYPE for {fam}")));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+
+        let (name, label_pairs, value) = parse_sample(line).map_err(at)?;
+        samples += 1;
+        if name.ends_with("_bucket") {
+            let le = label_pairs
+                .iter()
+                .find(|(k, _)| k == "le")
+                .map(|(_, v)| v.as_str())
+                .ok_or_else(|| at(format!("{name} without an le label")))?;
+            let le_val = if le == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.parse::<f64>().map_err(|_| at(format!("bad le {le:?}")))?
+            };
+            let mut key = name.clone();
+            for (k, v) in &label_pairs {
+                if k != "le" {
+                    key.push_str(&format!(";{k}={v}"));
+                }
+            }
+            let entry = buckets.entry(key).or_insert((f64::NEG_INFINITY, -1.0, false));
+            if le_val <= entry.0 {
+                return Err(at(format!("le not strictly increasing in {name}")));
+            }
+            if value < entry.1 {
+                return Err(at(format!("cumulative count decreased in {name}")));
+            }
+            *entry = (le_val, value, le_val.is_infinite());
+        }
+    }
+
+    for (key, (_, _, closed)) in &buckets {
+        if !closed {
+            return Err(format!("bucket series {key} not closed by le=\"+Inf\""));
+        }
+    }
+    Ok(samples)
+}
+
+/// Parse one sample line: `name[{labels}] value`.
+fn parse_sample(line: &str) -> Result<(String, Vec<(String, String)>, f64), String> {
+    let line = line.trim_end();
+    let name_end = line
+        .find(|c: char| c == '{' || c.is_whitespace())
+        .ok_or_else(|| format!("no value in {line:?}"))?;
+    let name = &line[..name_end];
+    if name.is_empty()
+        || name.starts_with(|c: char| c.is_ascii_digit())
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    {
+        return Err(format!("illegal metric name {name:?}"));
+    }
+
+    let (label_pairs, rest) = if line[name_end..].starts_with('{') {
+        let body_start = name_end + 1;
+        let close = find_label_close(&line[body_start..])
+            .ok_or_else(|| format!("unterminated labels in {line:?}"))?;
+        let body = &line[body_start..body_start + close];
+        (parse_labels(body)?, &line[body_start + close + 1..])
+    } else {
+        (Vec::new(), &line[name_end..])
+    };
+
+    let value_str = rest.trim();
+    let value = match value_str {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        v => v
+            .parse::<f64>()
+            .map_err(|_| format!("bad sample value {v:?}"))?,
+    };
+    Ok((name.to_string(), label_pairs, value))
+}
+
+/// Index of the closing `}` of a label body, honouring quoted strings
+/// with backslash escapes.
+fn find_label_close(s: &str) -> Option<usize> {
+    let mut in_quotes = false;
+    let mut escaped = false;
+    for (i, c) in s.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_quotes => escaped = true,
+            '"' => in_quotes = !in_quotes,
+            '}' if !in_quotes => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_labels(body: &str) -> Result<Vec<(String, String)>, String> {
+    let mut pairs = Vec::new();
+    let mut rest = body.trim();
+    while !rest.is_empty() {
+        let eq = rest
+            .find('=')
+            .ok_or_else(|| format!("label without '=' in {body:?}"))?;
+        let key = rest[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("empty label name in {body:?}"));
+        }
+        let after = rest[eq + 1..].trim_start();
+        if !after.starts_with('"') {
+            return Err(format!("unquoted label value in {body:?}"));
+        }
+        let mut escaped = false;
+        let mut close = None;
+        for (i, c) in after[1..].char_indices() {
+            if escaped {
+                escaped = false;
+                continue;
+            }
+            match c {
+                '\\' => escaped = true,
+                '"' => {
+                    close = Some(i);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let close = close.ok_or_else(|| format!("unterminated label value in {body:?}"))?;
+        let raw = &after[1..1 + close];
+        let value = raw
+            .replace("\\\"", "\"")
+            .replace("\\n", "\n")
+            .replace("\\\\", "\\");
+        pairs.push((key.to_string(), value));
+        rest = after[1 + close + 1..].trim_start();
+        if let Some(stripped) = rest.strip_prefix(',') {
+            rest = stripped.trim_start();
+        } else if !rest.is_empty() {
+            return Err(format!("expected ',' between labels in {body:?}"));
+        }
+    }
+    Ok(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::HIST_FINITE_BUCKETS;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn sanitizes_names() {
+        assert_eq!(sanitize("sched.tick.us"), "sched_tick_us");
+        assert_eq!(sanitize("kv-pool/free"), "kv_pool_free");
+        assert_eq!(sanitize("9lives"), "_lives");
+        assert_eq!(sanitize("ok_name:sub"), "ok_name:sub");
+    }
+
+    #[test]
+    fn golden_counter_gauge_info_layout() {
+        let reg = Registry::default();
+        reg.counter("sched.admitted").add(3);
+        reg.counter("sched.admission.shed").add(2);
+        reg.counter("sched.admission.shed.interactive").inc();
+        reg.gauge("sched.queue.depth").set(4);
+        reg.set_info("build.info", &[("version", "1.2.3")]);
+        let text = render(&reg);
+        // class segment folded into a label, aggregate series first
+        let want = "\
+# TYPE sched_admission_shed_total counter
+sched_admission_shed_total 2
+sched_admission_shed_total{class=\"interactive\"} 1
+# TYPE sched_admitted_total counter
+sched_admitted_total 3
+# TYPE sched_queue_depth gauge
+sched_queue_depth 4
+# TYPE build_info gauge
+build_info{version=\"1.2.3\"} 1
+";
+        assert_eq!(text, want);
+        validate_exposition(&text).expect("golden text validates");
+    }
+
+    #[test]
+    fn histogram_renders_buckets_sum_count() {
+        let reg = Registry::default();
+        let h = reg.histogram("sched.ttft_us.interactive");
+        for v in [1u64, 2, 1000] {
+            h.observe_us(v);
+        }
+        let text = render(&reg);
+        assert!(text.contains("# TYPE sched_ttft_us histogram"), "{text}");
+        assert!(
+            text.contains("sched_ttft_us_bucket{class=\"interactive\",le=\"1\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("sched_ttft_us_bucket{class=\"interactive\",le=\"1024\"} 3"),
+            "{text}"
+        );
+        assert!(
+            text.contains("sched_ttft_us_bucket{class=\"interactive\",le=\"+Inf\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("sched_ttft_us_sum{class=\"interactive\"} 1003"), "{text}");
+        assert!(text.contains("sched_ttft_us_count{class=\"interactive\"} 3"), "{text}");
+        // one bucket line per finite bound plus +Inf
+        let bucket_lines = text.lines().filter(|l| l.starts_with("sched_ttft_us_bucket")).count();
+        assert_eq!(bucket_lines, HIST_FINITE_BUCKETS + 1);
+        validate_exposition(&text).expect("histogram text validates");
+    }
+
+    #[test]
+    fn property_random_registries_always_validate() {
+        // renderer output must satisfy its own validator (le ordering,
+        // cumulative monotonicity, single TYPE) for arbitrary contents
+        for seed in 0..20u64 {
+            let mut rng = Pcg64::seeded(seed);
+            let reg = Registry::default();
+            for i in 0..(1 + rng.next_range(6)) {
+                reg.counter(&format!("c{i}.weird-name.{i}"))
+                    .add(rng.next_range(1000));
+            }
+            for i in 0..(1 + rng.next_range(4)) {
+                reg.gauge(&format!("g{i}.depth")).set(rng.next_range(50) as i64 - 25);
+            }
+            for (i, class) in CLASSES.iter().enumerate() {
+                let h = reg.histogram(&format!("lat{i}.us.{class}"));
+                for _ in 0..rng.next_range(200) {
+                    h.observe_us(rng.next_range(1 << 28));
+                }
+            }
+            let text = render(&reg);
+            let samples = validate_exposition(&text)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+            assert!(samples > 0);
+        }
+    }
+
+    #[test]
+    fn validator_rejects_broken_expositions() {
+        assert!(validate_exposition("9bad_name 1\n").is_err());
+        assert!(
+            validate_exposition("x_bucket{le=\"2\"} 1\nx_bucket{le=\"2\"} 1\nx_bucket{le=\"+Inf\"} 1\n")
+                .is_err(),
+            "le must strictly increase"
+        );
+        assert!(
+            validate_exposition("x_bucket{le=\"1\"} 5\nx_bucket{le=\"2\"} 3\nx_bucket{le=\"+Inf\"} 5\n")
+                .is_err(),
+            "cumulative counts must not decrease"
+        );
+        assert!(
+            validate_exposition("x_bucket{le=\"1\"} 1\nx_bucket{le=\"2\"} 2\n").is_err(),
+            "bucket series must close with +Inf"
+        );
+        assert!(
+            validate_exposition("# TYPE a counter\n# TYPE a counter\na_total 1\n").is_err(),
+            "duplicate TYPE"
+        );
+        assert!(validate_exposition("name 1.5e3\n").is_ok());
+        assert!(validate_exposition("name{a=\"x,y\",b=\"q\\\"r\"} 2\n").is_ok());
+    }
+}

@@ -71,13 +71,24 @@
 //! preemption only change *when* steps run, so per-sequence token
 //! streams are bit-identical to K independent per-call loops
 //! (property-tested in `tests/sched_integration.rs`).
+//!
+//! # Lifecycle tracing
+//!
+//! Every sequence's client-visible timeline is stamped into the
+//! per-class [`Lifecycle`] families: queue wait at each admission,
+//! TTFT at the first streamed token (exactly once per sequence —
+//! preempt/replay carries the flag), inter-token gaps between streamed
+//! tokens (spanning preemptions), and end-to-end latency at `Done`.
+//! Tracing is pure observation — `SchedConfig { lifecycle: false }`
+//! produces bit-identical streams (`tests/obs_integration.rs`).
 
 use super::model::TokenModel;
-use super::queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority};
+use super::queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority, ShedCause};
 use super::stripe::StripedKvCache;
 use crate::calib::Recalibrator;
 use crate::coordinator::metrics::{Counter, Registry};
 use crate::kv::{CacheConfig, CacheError};
+use crate::obs::Lifecycle;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -109,9 +120,21 @@ pub struct SchedConfig {
     /// [`StreamEvent::Failed`] instead of queueing without bound
     /// (`--sched-queue-cap`).
     pub queue_cap: usize,
+    /// Per-class queue depth caps indexed by [`Priority::rank`]
+    /// (`--sched-queue-cap-{best-effort,batch,interactive}`): a flood
+    /// in one class sheds against its own budget before it can consume
+    /// the shared cap other classes depend on. `usize::MAX` leaves a
+    /// class bounded only by `queue_cap`.
+    pub queue_cap_by_class: [usize; 3],
     /// Ticks per one-class aging promotion of a queued entry
     /// (`--sched-aging-ticks`); the starvation bound.
     pub aging_ticks: u64,
+    /// Record request-lifecycle latency histograms (queue wait, TTFT,
+    /// inter-token, end-to-end). Pure observation — disabling it exists
+    /// only so tests can prove token streams are bit-identical with
+    /// collection on and off (the exactness contract is untouched by
+    /// observation).
+    pub lifecycle: bool,
 }
 
 impl Default for SchedConfig {
@@ -123,7 +146,9 @@ impl Default for SchedConfig {
             batch_workers: 4,
             stall_ticks: 512,
             queue_cap: 1024,
+            queue_cap_by_class: [usize::MAX; 3],
             aging_ticks: 256,
+            lifecycle: true,
         }
     }
 }
@@ -147,6 +172,8 @@ struct Submit {
     max_new: usize,
     class: Priority,
     stream: Sender<StreamEvent>,
+    /// Client-side submit stamp: the TTFT / end-to-end origin.
+    enqueued_at: Instant,
 }
 
 enum Cmd {
@@ -172,6 +199,18 @@ struct Pending {
     /// between preemption and re-admission must not change the stream
     /// (`None` for fresh submissions: they admit on the current epoch).
     cfg: Option<Arc<CacheConfig>>,
+    /// Submit stamp, carried across preemption (TTFT/e2e origin).
+    enqueued_at: Instant,
+    /// Last (re-)enqueue stamp: each admission's queue wait is measured
+    /// from here, so a preempted sequence's second wait is its own
+    /// sample, not a double-count of the first.
+    queued_at: Instant,
+    /// Whether the first token already streamed — TTFT is recorded at
+    /// most once per sequence, including across preempt/replay cycles.
+    ttft_done: bool,
+    /// Previous streamed-token stamp. Inter-token gaps span preemption
+    /// (a client staring at a stalled stream experiences the gap).
+    last_token_at: Option<Instant>,
 }
 
 /// One in-flight generation.
@@ -198,6 +237,12 @@ struct Active {
     /// across preempt cycles); once past the aging barrier the
     /// sequence is exempt from further preemption.
     waited_carry: u64,
+    /// Submit stamp (TTFT/e2e origin; survives preemption).
+    enqueued_at: Instant,
+    /// Whether the first token already streamed (see [`Pending`]).
+    ttft_done: bool,
+    /// Previous streamed-token stamp (see [`Pending`]).
+    last_token_at: Option<Instant>,
 }
 
 /// Handle on the tick loop. Dropping it shuts the loop down (pending
@@ -257,7 +302,14 @@ impl Scheduler {
         class: Priority,
     ) -> Receiver<StreamEvent> {
         let (stx, srx) = mpsc::channel();
-        let sub = Submit { id, tokens, max_new, class, stream: stx.clone() };
+        let sub = Submit {
+            id,
+            tokens,
+            max_new,
+            class,
+            stream: stx.clone(),
+            enqueued_at: Instant::now(),
+        };
         if self.tx.send(Cmd::Submit(sub)).is_err() {
             let _ = stx.send(StreamEvent::Failed {
                 id,
@@ -277,9 +329,18 @@ impl Drop for Scheduler {
     }
 }
 
-/// Enqueue a submission, shedding with `Failed` when the depth cap is
-/// hit (the bounded-queue half of admission control).
-fn enqueue(queue: &mut AdmissionQueue<Pending>, s: Submit, shed: &Counter, cap: usize) {
+/// Enqueue a submission, shedding with `Failed` when the shared depth
+/// cap or the class's own cap is hit (the bounded-queue half of
+/// admission control). Sheds count in the aggregate `shed` counter and
+/// the per-class `sched.admission.shed.{class}` family.
+fn enqueue(
+    queue: &mut AdmissionQueue<Pending>,
+    s: Submit,
+    lc: &Lifecycle,
+    shed: &Counter,
+    cfg: &SchedConfig,
+) {
+    let class = s.class;
     let pending = Pending {
         id: s.id,
         tokens: s.tokens,
@@ -287,13 +348,23 @@ fn enqueue(queue: &mut AdmissionQueue<Pending>, s: Submit, shed: &Counter, cap: 
         generated: Vec::new(),
         stream: s.stream,
         cfg: None,
+        enqueued_at: s.enqueued_at,
+        queued_at: Instant::now(),
+        ttft_done: false,
+        last_token_at: None,
     };
-    if let Err(p) = queue.push(pending, s.class) {
+    if let Err((p, cause)) = queue.push(pending, class) {
         shed.inc();
-        let _ = p.stream.send(StreamEvent::Failed {
-            id: p.id,
-            reason: format!("admission queue full ({cap} queued)"),
-        });
+        lc.record_shed(class);
+        let reason = match cause {
+            ShedCause::SharedCap => format!("admission queue full ({} queued)", cfg.queue_cap),
+            ShedCause::ClassCap => format!(
+                "admission queue full for class {} (cap {})",
+                class.name(),
+                cfg.queue_cap_by_class[class.rank() as usize]
+            ),
+        };
+        let _ = p.stream.send(StreamEvent::Failed { id: p.id, reason });
     }
 }
 
@@ -305,10 +376,16 @@ fn tick_loop(
     metrics: Arc<Registry>,
     recalib: Option<Arc<Recalibrator>>,
 ) {
-    let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(cfg.queue_cap, cfg.aging_ticks);
+    let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(cfg.queue_cap, cfg.aging_ticks)
+        .with_class_caps(cfg.queue_cap_by_class);
     let mut active: Vec<Active> = Vec::new();
     let mut admit_stamp: u64 = 0;
+    // request-lifecycle latency families (queue wait / TTFT / ITL /
+    // e2e per class) — no-op when disabled, and never load-bearing:
+    // the exactness contract requires identical streams either way
+    let lc = if cfg.lifecycle { Lifecycle::new(&metrics) } else { Lifecycle::disabled() };
     let ticks = metrics.counter("sched.ticks");
+    let uptime = metrics.gauge("sched.uptime_ticks");
     let tokens_out = metrics.counter("sched.tokens");
     let admitted = metrics.counter("sched.admitted");
     let deferred = metrics.counter("sched.admission.deferred");
@@ -343,7 +420,7 @@ fn tick_loop(
         // must not spin at kHz against an idle pool.
         if active.is_empty() {
             match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &shed, cfg.queue_cap),
+                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &lc, &shed, &cfg),
                 Ok(Cmd::Shutdown) => shutdown = true,
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
@@ -351,7 +428,7 @@ fn tick_loop(
         }
         loop {
             match rx.try_recv() {
-                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &shed, cfg.queue_cap),
+                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &lc, &shed, &cfg),
                 Ok(Cmd::Shutdown) => shutdown = true,
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -384,6 +461,7 @@ fn tick_loop(
 
         let t0 = Instant::now();
         ticks.inc();
+        uptime.set(ticks.get() as i64);
         let mut progressed = false;
 
         // ---- 1. admission: priority order, aging, preemption ----------
@@ -534,6 +612,10 @@ fn tick_loop(
                     admitted.inc();
                     progressed = true;
                     admit_stamp += 1;
+                    lc.record_queue_wait(
+                        e.class,
+                        e.item.queued_at.elapsed().as_micros() as u64,
+                    );
                     active.push(Active {
                         id: e.item.id,
                         seq,
@@ -546,6 +628,9 @@ fn tick_loop(
                         class: e.class,
                         admitted_at: admit_stamp,
                         waited_carry: e.waited,
+                        enqueued_at: e.item.enqueued_at,
+                        ttft_done: e.item.ttft_done,
+                        last_token_at: e.item.last_token_at,
                     });
                 }
                 AdmissionVerdict::Defer => {
@@ -613,7 +698,7 @@ fn tick_loop(
                 }
             }
         }
-        flush_removed(&cache, &mut active, &mut remove);
+        flush_removed(&cache, &mut active, &mut remove, &lc);
 
         // ---- 3. one batched decode call over every ready sequence -----
         let ready: Vec<usize> = active
@@ -632,11 +717,12 @@ fn tick_loop(
             .collect();
         let outs = if queries.is_empty() {
             // decode-free ticks (admission/prefill-only) record no
-            // sample: the histogram's 1-µs floor would misfile them as
-            // 1-sized batches and mask real batching behavior
+            // sample: they would misfile as 1-sized batches and mask
+            // real batching behavior
             Vec::new()
         } else {
-            batch_size.observe_us(queries.len() as u64);
+            // value-scale observe: batch sizes are counts, not µs
+            batch_size.observe(queries.len() as u64);
             cache.decode_batch(&queries, cfg.batch_workers)
         };
 
@@ -661,6 +747,23 @@ fn tick_loop(
                         remove.push((i, Some("stream receiver dropped".into())));
                         continue;
                     }
+                    // lifecycle stamps ride on the successful send: the
+                    // first ever token is the TTFT sample (once per
+                    // sequence — the flag survives preempt/replay); each
+                    // later one contributes the client-observed
+                    // inter-token gap, which deliberately spans
+                    // preemptions
+                    let now = Instant::now();
+                    if !a.ttft_done {
+                        a.ttft_done = true;
+                        lc.record_ttft(
+                            a.class,
+                            now.duration_since(a.enqueued_at).as_micros() as u64,
+                        );
+                    } else if let Some(prev) = a.last_token_at {
+                        lc.record_itl(a.class, now.duration_since(prev).as_micros() as u64);
+                    }
+                    a.last_token_at = Some(now);
                     a.tokens.push(next);
                     a.generated.push(next);
                     if a.generated.len() < a.max_new {
@@ -686,7 +789,7 @@ fn tick_loop(
                 remove.push((i, None));
             }
         }
-        flush_removed(&cache, &mut active, &mut remove);
+        flush_removed(&cache, &mut active, &mut remove, &lc);
 
         queue_depth.set(queue.len() as i64);
         let by_class = queue.depth_by_class();
@@ -790,6 +893,14 @@ fn preempt(
             generated: v.generated,
             stream: v.stream,
             cfg,
+            // lifecycle stamps survive the cycle: TTFT stays
+            // once-per-sequence, the next inter-token gap spans the
+            // replay, and only queued_at resets (each admission's
+            // queue wait is its own sample)
+            enqueued_at: v.enqueued_at,
+            queued_at: Instant::now(),
+            ttft_done: v.ttft_done,
+            last_token_at: v.last_token_at,
         },
         v.class,
         v.waited_carry,
@@ -831,11 +942,14 @@ fn pick_victim(
 
 /// Retire the marked sequences: free their blocks (shared prefixes stay
 /// trie-resident) and send the terminal stream event. Indices are
-/// collected during iteration, so removal happens highest-first.
+/// collected during iteration, so removal happens highest-first. A
+/// clean completion records its end-to-end latency; failures do not
+/// (mixing sheds and successes in one histogram poisons the SLO view).
 fn flush_removed(
     cache: &StripedKvCache,
     active: &mut Vec<Active>,
     remove: &mut Vec<(usize, Option<String>)>,
+    lc: &Lifecycle,
 ) {
     if remove.is_empty() {
         return;
@@ -846,7 +960,10 @@ fn flush_removed(
         let a = active.remove(i);
         let _ = cache.free_sequence(a.seq);
         let _ = match reason {
-            None => a.stream.send(StreamEvent::Done { id: a.id, tokens: a.generated }),
+            None => {
+                lc.record_e2e(a.class, a.enqueued_at.elapsed().as_micros() as u64);
+                a.stream.send(StreamEvent::Done { id: a.id, tokens: a.generated })
+            }
             Some(reason) => a.stream.send(StreamEvent::Failed { id: a.id, reason }),
         };
     }
@@ -1021,6 +1138,53 @@ mod tests {
         assert!(queued, "both in-cap entries remain queued behind the blocker");
         drop(blocker);
         drop((q1, q2));
+        drop(sched);
+    }
+
+    #[test]
+    fn class_cap_sheds_the_flooding_class_only() {
+        // best-effort floods its own 1-deep budget behind a blocker: the
+        // overflow sheds with a class-cap reason and a per-class shed
+        // count, while batch traffic still queues under the shared cap
+        let metrics = Arc::new(Registry::default());
+        let sched = Scheduler::start(
+            pool(1024, 1),
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig {
+                max_inflight: 1,
+                queue_cap_by_class: [1, usize::MAX, usize::MAX],
+                ..SchedConfig::default()
+            },
+            metrics.clone(),
+        );
+        let blocker = sched.submit(1, vec![1, 2, 3], 4000);
+        match blocker.recv().expect("blocker streams") {
+            StreamEvent::Token { .. } => {}
+            other => panic!("expected a token, got {other:?}"),
+        }
+        let q1 = sched.submit_with_priority(2, vec![10], 1, Priority::BestEffort);
+        let overflow = sched.submit_with_priority(3, vec![11], 1, Priority::BestEffort);
+        let (tokens, err) = drain(overflow);
+        assert!(tokens.is_empty());
+        let reason = err.unwrap();
+        assert!(reason.contains("queue full for class best-effort"), "{reason}");
+        assert_eq!(metrics.counter("sched.admission.shed").get(), 1);
+        assert_eq!(metrics.counter("sched.admission.shed.best_effort").get(), 1);
+        assert_eq!(metrics.counter("sched.admission.shed.batch").get(), 0);
+        // the other classes still have the whole shared cap
+        let q2 = sched.submit_with_priority(4, vec![12], 1, Priority::Batch);
+        let mut queued = false;
+        for _ in 0..400 {
+            if metrics.gauge("sched.queue.depth.best_effort").get() == 1
+                && metrics.gauge("sched.queue.depth.batch").get() == 1
+            {
+                queued = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(queued, "in-cap entries of both classes remain queued");
+        drop((blocker, q1, q2));
         drop(sched);
     }
 

@@ -59,5 +59,5 @@ pub mod stripe;
 
 pub use loop_::{SchedConfig, Scheduler, StreamEvent};
 pub use model::{HashModel, TokenModel};
-pub use queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority};
+pub use queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority, ShedCause};
 pub use stripe::StripedKvCache;

@@ -50,9 +50,13 @@
 //!     stops admitting *anything* past it on its stripe until it gets
 //!     in;
 //!   - a hard depth cap sheds overflow at submit time
-//!     ([`AdmissionQueue::push`] returns the item back; the scheduler
-//!     fails it with `StreamEvent::Failed`), mirroring what the `Gate`
-//!     does for batched traffic.
+//!     ([`AdmissionQueue::push`] returns the item back with a
+//!     [`ShedCause`]; the scheduler fails it with
+//!     `StreamEvent::Failed`), mirroring what the `Gate` does for
+//!     batched traffic. Optional per-class caps
+//!     ([`AdmissionQueue::with_class_caps`]) bound each class
+//!     separately, so a best-effort flood cannot consume the whole
+//!     shared cap before interactive traffic arrives.
 //!
 //! The scheduler prices entries in effective-rank order and admits any
 //! that fit — price-aware overtaking — while a deferred entry bars
@@ -215,6 +219,18 @@ impl super::stripe::StripedKvCache {
     }
 }
 
+/// Why [`AdmissionQueue::push`] handed an entry back instead of
+/// queueing it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedCause {
+    /// The shared depth cap was hit.
+    SharedCap,
+    /// The entry's own class cap was hit: a flood in one class sheds
+    /// against its own budget before it can consume the shared cap
+    /// that other classes depend on.
+    ClassCap,
+}
+
 /// One queued entry: the payload plus its scheduling metadata.
 pub struct Queued<T> {
     pub item: T,
@@ -234,6 +250,9 @@ pub struct Queued<T> {
 pub struct AdmissionQueue<T> {
     entries: Vec<Queued<T>>,
     cap: usize,
+    /// Per-class depth caps indexed by [`Priority::rank`];
+    /// `usize::MAX` leaves a class bounded only by the shared cap.
+    class_caps: [usize; 3],
     aging_ticks: u64,
     next_arrival: u64,
 }
@@ -243,9 +262,18 @@ impl<T> AdmissionQueue<T> {
         AdmissionQueue {
             entries: Vec::new(),
             cap: cap.max(1),
+            class_caps: [usize::MAX; 3],
             aging_ticks: aging_ticks.max(1),
             next_arrival: 0,
         }
+    }
+
+    /// Builder: per-class depth caps (indexed by [`Priority::rank`]).
+    /// A zero cap is clamped to 1 — a class can always hold one entry,
+    /// matching the shared cap's floor.
+    pub fn with_class_caps(mut self, caps: [usize; 3]) -> AdmissionQueue<T> {
+        self.class_caps = caps.map(|c| c.max(1));
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -267,11 +295,17 @@ impl<T> AdmissionQueue<T> {
         out
     }
 
-    /// Enqueue; `Err(item)` when the depth cap would be exceeded — the
-    /// caller sheds the request instead of queueing without bound.
-    pub fn push(&mut self, item: T, class: Priority) -> Result<(), T> {
+    /// Enqueue; hands the item back with a [`ShedCause`] when the
+    /// shared depth cap or the submission's own class cap would be
+    /// exceeded — the caller sheds the request instead of queueing
+    /// without bound.
+    pub fn push(&mut self, item: T, class: Priority) -> Result<(), (T, ShedCause)> {
         if self.entries.len() >= self.cap {
-            return Err(item);
+            return Err((item, ShedCause::SharedCap));
+        }
+        let rank = class.rank() as usize;
+        if self.depth_by_class()[rank] >= self.class_caps[rank] {
+            return Err((item, ShedCause::ClassCap));
         }
         self.push_unbounded(item, class);
         Ok(())
@@ -567,7 +601,11 @@ mod tests {
         let mut q: AdmissionQueue<u32> = AdmissionQueue::new(2, 100);
         q.push(1, Priority::Batch).unwrap();
         q.push(2, Priority::Batch).unwrap();
-        assert_eq!(q.push(3, Priority::Interactive), Err(3), "cap sheds, class-blind");
+        assert_eq!(
+            q.push(3, Priority::Interactive),
+            Err((3, ShedCause::SharedCap)),
+            "cap sheds, class-blind"
+        );
         assert_eq!(q.len(), 2);
         // preemption requeues must never shed admitted work
         q.push_unbounded(4, Priority::BestEffort);
@@ -584,5 +622,32 @@ mod tests {
         assert_eq!(got.item, 1, "FIFO head of the equal-rank band");
         assert_eq!(q.len(), 2);
         assert!(q.remove(key).is_none(), "keys are consumed");
+    }
+
+    #[test]
+    fn class_cap_sheds_only_its_own_class() {
+        let mut q: AdmissionQueue<u32> =
+            AdmissionQueue::new(16, 100).with_class_caps([1, usize::MAX, 2]);
+        q.push(1, Priority::BestEffort).unwrap();
+        assert_eq!(
+            q.push(2, Priority::BestEffort),
+            Err((2, ShedCause::ClassCap)),
+            "best-effort flood sheds against its own budget"
+        );
+        // other classes are untouched by a full best-effort budget
+        q.push(3, Priority::Interactive).unwrap();
+        q.push(4, Priority::Interactive).unwrap();
+        assert_eq!(q.push(5, Priority::Interactive), Err((5, ShedCause::ClassCap)));
+        q.push(6, Priority::Batch).unwrap();
+        // preemption requeues stay cap-exempt even past a class cap
+        q.push_unbounded(7, Priority::BestEffort);
+        assert_eq!(q.depth_by_class(), [2, 1, 2]);
+        // admitting the queued best-effort entries reopens the budget
+        while q.depth_by_class()[0] > 0 {
+            let key = *q.order().last().unwrap();
+            assert_eq!(q.get(key).unwrap().class, Priority::BestEffort);
+            q.remove(key).unwrap();
+        }
+        q.push(8, Priority::BestEffort).unwrap();
     }
 }

@@ -30,8 +30,10 @@
 //! pressure; preempted sequences are replayed bit-identically, so a
 //! class only ever changes scheduling latency, never tokens.
 
+pub mod prom;
 pub mod protocol;
 pub mod tcp;
 
+pub use prom::{scrape_text, MetricsServer, MetricsShutdown};
 pub use protocol::{decode_request, encode_response, WireRequest, WireResponse};
 pub use tcp::{Client, Server};

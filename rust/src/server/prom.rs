@@ -1,0 +1,224 @@
+//! Prometheus scrape endpoint: a dependency-free minimal HTTP/1.1
+//! responder on its own bind address (`intfa serve --metrics-addr`),
+//! kept separate from the newline-JSON serving port so scrapers never
+//! contend with inference traffic.
+//!
+//! Only `GET /metrics` (and `GET /` as an alias) is served; each
+//! response closes the connection — the exposition is tiny and
+//! scrapers arrive at multi-second intervals, so connection reuse
+//! buys nothing.
+
+use crate::coordinator::metrics::Registry;
+use crate::obs::prom::render;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// HTTP scrape front-end over a metrics [`Registry`].
+pub struct MetricsServer {
+    registry: Arc<Registry>,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl MetricsServer {
+    /// Bind to an address ("127.0.0.1:0" picks a free port).
+    pub fn bind(
+        registry: Arc<Registry>,
+        addr: impl ToSocketAddrs,
+    ) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(MetricsServer { registry, listener, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound listener")
+    }
+
+    /// Handle that signals the accept loop to stop.
+    pub fn shutdown_handle(&self) -> MetricsShutdown {
+        MetricsShutdown { flag: self.shutdown.clone(), addr: self.local_addr() }
+    }
+
+    /// Accept-loop until shutdown; one thread per scrape connection.
+    pub fn serve(self) {
+        crate::log_info!("metrics on {}", self.local_addr());
+        // accept with a timeout so the shutdown flag is polled
+        self.listener
+            .set_nonblocking(true)
+            .expect("nonblocking listener");
+        let mut conns = Vec::new();
+        while !self.shutdown.load(Ordering::Acquire) {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    crate::log_debug!("scrape from {peer}");
+                    let registry = self.registry.clone();
+                    conns.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_scrape(stream, &registry) {
+                            crate::log_debug!("scrape failed: {e}");
+                        }
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    crate::log_warn!("metrics accept error: {e}");
+                    break;
+                }
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+    }
+
+    /// Spawn the accept loop on a background thread.
+    pub fn start(self) -> (MetricsShutdown, std::thread::JoinHandle<()>) {
+        let handle = self.shutdown_handle();
+        let join = std::thread::Builder::new()
+            .name("intfa-metrics".into())
+            .spawn(move || self.serve())
+            .expect("spawn metrics server");
+        (handle, join)
+    }
+}
+
+/// Signals the metrics accept loop to stop.
+pub struct MetricsShutdown {
+    flag: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+}
+
+impl MetricsShutdown {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+}
+
+fn handle_scrape(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(500)))?;
+    // read the request head (through the blank line); the request has
+    // no body, so a bounded read is enough
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        if head.len() > 16 * 1024 {
+            return respond(&mut stream, "431 Request Header Fields Too Large", "", "");
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(e) => return Err(e),
+        }
+    }
+    let request_line = std::str::from_utf8(&head)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("")
+        .to_string();
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let path = path.split('?').next().unwrap_or("");
+    match (method, path) {
+        ("GET", "/metrics") | ("GET", "/") => {
+            let body = render(registry);
+            respond(&mut stream, "200 OK", "text/plain; version=0.0.4; charset=utf-8", &body)
+        }
+        ("GET", _) => respond(&mut stream, "404 Not Found", "text/plain", "not found\n"),
+        _ => respond(&mut stream, "405 Method Not Allowed", "text/plain", "GET only\n"),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Blocking GET of `/metrics` from `addr`, returning the body — the
+/// scrape half used by tests and the bench-load self-check (no HTTP
+/// client dependency anywhere).
+pub fn scrape_text(addr: impl ToSocketAddrs) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: intfa\r\nConnection: close\r\n\r\n")?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let (head, body) = raw.split_once("\r\n\r\n").ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "no header/body separator")
+    })?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains("200") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("scrape status {status:?}"),
+        ));
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::prom::validate_exposition;
+
+    #[test]
+    fn serves_and_scrapes_prometheus_text() {
+        let reg = Arc::new(Registry::default());
+        reg.counter("sched.tokens").add(41);
+        reg.histogram("sched.ttft_us.interactive").observe_us(1500);
+        let server = MetricsServer::bind(reg.clone(), "127.0.0.1:0").expect("bind");
+        let addr = server.local_addr();
+        let (handle, join) = server.start();
+
+        let body = scrape_text(addr).expect("scrape");
+        assert!(body.contains("sched_tokens_total 41"), "{body}");
+        assert!(
+            body.contains("sched_ttft_us_bucket{class=\"interactive\",le=\"2048\"} 1"),
+            "{body}"
+        );
+        validate_exposition(&body).expect("scrape body validates");
+
+        // live updates are visible on the next scrape
+        reg.counter("sched.tokens").inc();
+        let body = scrape_text(addr).expect("second scrape");
+        assert!(body.contains("sched_tokens_total 42"), "{body}");
+
+        handle.shutdown();
+        join.join().expect("metrics server joins");
+    }
+
+    #[test]
+    fn unknown_paths_get_404() {
+        let reg = Arc::new(Registry::default());
+        let server = MetricsServer::bind(reg, "127.0.0.1:0").expect("bind");
+        let addr = server.local_addr();
+        let (handle, join) = server.start();
+
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(b"GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+            .expect("send");
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).expect("read");
+        assert!(raw.starts_with("HTTP/1.1 404"), "{raw}");
+
+        handle.shutdown();
+        join.join().expect("joins");
+    }
+}

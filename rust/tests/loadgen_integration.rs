@@ -1,0 +1,94 @@
+//! loadgen/ integration: seeded plans replay identically, and a small
+//! closed-loop run against an in-process server completes every
+//! planned turn with client-observed latencies aggregated per class.
+
+use int_flashattention::attention::Variant;
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::kv::CacheConfig;
+use int_flashattention::loadgen::{self, Arrival, LoadConfig};
+use int_flashattention::sched::{HashModel, SchedConfig};
+use int_flashattention::server::Server;
+use std::sync::Arc;
+
+const HEADS: usize = 2;
+const HEAD_DIM: usize = 8;
+
+fn engine() -> Engine {
+    let router = BucketRouter::new(vec![Bucket {
+        variant: Variant::Int8,
+        batch: 2,
+        heads: HEADS,
+        seq: 64,
+        head_dim: HEAD_DIM,
+        causal: true,
+        artifact: String::new(),
+    }]);
+    Engine::new(
+        router,
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    )
+    .with_kv_striped(
+        CacheConfig { block_tokens: 4, max_blocks: 512, ..CacheConfig::new(HEADS, HEAD_DIM) },
+        2,
+        2,
+    )
+    .with_sched(Arc::new(HashModel::new(HEADS, HEAD_DIM)), SchedConfig::default())
+    .expect("kv attached")
+}
+
+fn small_cfg(seed: u64) -> LoadConfig {
+    LoadConfig {
+        seed,
+        sessions: 4,
+        turns: 2,
+        arrival: Arrival::Bursty { rate: 400.0, burst: 2 },
+        class_mix: [0.25, 0.25, 0.5],
+        prompt_tokens: (3, 6),
+        max_new: (2, 4),
+        system_prompts: 1,
+        system_prompt_len: 4,
+        // generous SLOs: in-process, every turn should meet them
+        slo_ttft_ms: 60_000.0,
+        slo_itl_ms: 60_000.0,
+    }
+}
+
+#[test]
+fn plan_is_deterministic_per_seed() {
+    assert_eq!(loadgen::plan(&small_cfg(7)), loadgen::plan(&small_cfg(7)));
+    assert_ne!(loadgen::plan(&small_cfg(7)), loadgen::plan(&small_cfg(8)));
+}
+
+#[test]
+fn closed_loop_run_reports_every_planned_turn() {
+    let server = Server::bind(Arc::new(engine()), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr().to_string();
+    let (handle, join) = server.start();
+
+    let cfg = small_cfg(11);
+    let plan = loadgen::plan(&cfg);
+    let report = loadgen::run(&addr, &cfg, &plan);
+    handle.shutdown();
+    join.join().expect("server joins");
+
+    assert_eq!(report.session_errors, 0);
+    assert_eq!(report.turns_completed, plan.turn_count());
+    assert_eq!(report.turns_ok, plan.turn_count());
+    assert!(report.tokens_total > 0);
+    assert!((report.slo_attainment - 1.0).abs() < 1e-9);
+    assert!(report.goodput_tok_s > 0.0);
+    // every class key is present in the JSON artifact, stats or zeros
+    let j = report.to_json();
+    for class in ["best_effort", "batch", "interactive"] {
+        let c = j.at("classes").at(class);
+        assert!(c.at("ttft_us").at("p999").as_f64().is_some(), "{class}");
+        assert!(c.at("itl_us").at("p50").as_f64().is_some(), "{class}");
+        assert!(c.at("e2e_us").at("p99").as_f64().is_some(), "{class}");
+    }
+    // the turns that ran recorded real latencies
+    let total_turns: usize = (0..3).map(|r| report.classes[r].turns).sum();
+    assert_eq!(total_turns, plan.turn_count());
+}

@@ -1,0 +1,168 @@
+//! obs/ integration: request-lifecycle latency tracing and the
+//! Prometheus scrape endpoint against a live scheduler.
+//!
+//! Three properties:
+//!
+//!   - TTFT is a *sequence* statistic, not an admission statistic: a
+//!     preempted-and-replayed victim records it exactly once, and its
+//!     inter-token gaps keep counting across the preemption.
+//!   - Observation never reschedules: token streams are bit-identical
+//!     with lifecycle tracing on and off, and a disabled lifecycle
+//!     registers no histogram families at all.
+//!   - The scrape endpoint serves the lifecycle families for real
+//!     traffic as valid Prometheus text, class labels and all.
+
+use int_flashattention::coordinator::metrics::Registry;
+use int_flashattention::kv::CacheConfig;
+use int_flashattention::obs::prom::validate_exposition;
+use int_flashattention::sched::{
+    HashModel, Priority, SchedConfig, Scheduler, StreamEvent, StripedKvCache,
+};
+use int_flashattention::server::{scrape_text, MetricsServer};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+const HEADS: usize = 2;
+const HEAD_DIM: usize = 8;
+
+fn cache_cfg(max_blocks: usize) -> CacheConfig {
+    CacheConfig { block_tokens: 4, max_blocks, ..CacheConfig::new(HEADS, HEAD_DIM) }
+}
+
+fn drain(rx: Receiver<StreamEvent>) -> Result<Vec<u32>, String> {
+    let mut tokens = Vec::new();
+    loop {
+        match rx.recv().map_err(|_| "stream dropped".to_string())? {
+            StreamEvent::Token { token, .. } => tokens.push(token),
+            StreamEvent::Done { .. } => return Ok(tokens),
+            StreamEvent::Failed { reason, .. } => return Err(reason),
+        }
+    }
+}
+
+#[test]
+fn ttft_is_recorded_exactly_once_across_preemption_and_replay() {
+    // same geometry as sched_integration's preemption scenario: the
+    // Interactive aggressor can only fit by evicting the BestEffort
+    // victim mid-stream, and the victim later replays to completion
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let cache = Arc::new(StripedKvCache::new(cache_cfg(24), 1));
+    let metrics = Arc::new(Registry::default());
+    let sched = Scheduler::start(cache, model, SchedConfig::default(), metrics.clone());
+
+    // victim: resident 8 + 79 = 87 tokens → 22 of 24 blocks
+    let victim_prompt: Vec<u32> = (3000..3008).collect();
+    let victim = sched.submit_with_priority(1, victim_prompt, 80, Priority::BestEffort);
+    match victim.recv().expect("victim streams before preemption") {
+        StreamEvent::Token { .. } => {}
+        other => panic!("expected a token, got {other:?}"),
+    }
+    let agg_prompt: Vec<u32> = (4000..4012).collect();
+    let agg = sched.submit_with_priority(2, agg_prompt, 25, Priority::Interactive);
+    drain(agg).expect("aggressor completes");
+    drain(victim).expect("victim completes after replay");
+    let preemptions = metrics.counter("sched.preemptions").get();
+    assert!(preemptions >= 1, "aggressor can only fit by preempting the victim");
+
+    // TTFT: once per *sequence*, not once per admission — the victim
+    // was admitted 1 + preemptions times but its first token was one event
+    assert_eq!(metrics.histogram("sched.ttft_us.best_effort").count(), 1);
+    assert_eq!(metrics.histogram("sched.ttft_us.interactive").count(), 1);
+    // ITL is client-observed: every token after the first records one
+    // gap, including the gap spanning the preemption itself
+    assert_eq!(metrics.histogram("sched.itl_us.best_effort").count(), 79);
+    assert_eq!(metrics.histogram("sched.itl_us.interactive").count(), 24);
+    // e2e on clean completion only, per sequence
+    assert_eq!(metrics.histogram("sched.e2e_us.best_effort").count(), 1);
+    assert_eq!(metrics.histogram("sched.e2e_us.interactive").count(), 1);
+    // queue-wait: one sample per admission — initial plus each requeue
+    assert_eq!(
+        metrics.histogram("sched.queue_wait_us.best_effort").count(),
+        1 + preemptions
+    );
+    assert_eq!(metrics.histogram("sched.queue_wait_us.interactive").count(), 1);
+    assert!(metrics.gauge("sched.uptime_ticks").get() > 0);
+}
+
+#[test]
+fn streams_are_bit_identical_with_lifecycle_on_and_off() {
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let prompts: Vec<(Vec<u32>, usize)> = (0..4u32)
+        .map(|i| {
+            let base = (i + 1) * 100;
+            ((base..base + 6 + i).collect(), 3 + i as usize)
+        })
+        .collect();
+    let classes = [
+        Priority::Interactive,
+        Priority::Batch,
+        Priority::BestEffort,
+        Priority::Batch,
+    ];
+    let run = |lifecycle: bool| -> (Vec<Vec<u32>>, Arc<Registry>) {
+        let metrics = Arc::new(Registry::default());
+        let cache = Arc::new(StripedKvCache::new(cache_cfg(64), 2));
+        let sched = Scheduler::start(
+            cache,
+            model.clone(),
+            SchedConfig { lifecycle, ..SchedConfig::default() },
+            metrics.clone(),
+        );
+        let rxs: Vec<Receiver<StreamEvent>> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, (p, m))| sched.submit_with_priority(i as u64, p.clone(), *m, classes[i]))
+            .collect();
+        let streams = rxs
+            .into_iter()
+            .map(|rx| drain(rx).expect("stream completes"))
+            .collect();
+        (streams, metrics)
+    };
+    let (on, with_lc) = run(true);
+    let (off, without_lc) = run(false);
+    assert_eq!(on, off, "observation must never change token streams");
+    assert!(with_lc.histogram("sched.ttft_us.interactive").count() >= 1);
+    let clean = without_lc
+        .histograms()
+        .iter()
+        .all(|(name, _)| !name.starts_with("sched.ttft_us"));
+    assert!(clean, "disabled lifecycle must not register families");
+}
+
+#[test]
+fn scrape_serves_lifecycle_series_for_live_traffic() {
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let cache = Arc::new(StripedKvCache::new(cache_cfg(128), 2));
+    let metrics = Arc::new(Registry::default());
+    let sched = Scheduler::start(cache, model, SchedConfig::default(), metrics.clone());
+    let all = [Priority::Interactive, Priority::Batch, Priority::BestEffort];
+    for (i, class) in all.into_iter().enumerate() {
+        let base = (i as u32 + 1) * 1_000;
+        let prompt: Vec<u32> = (base..base + 6).collect();
+        drain(sched.submit_with_priority(i as u64, prompt, 4, class)).expect("completes");
+    }
+
+    let server = MetricsServer::bind(metrics, "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let (handle, join) = server.start();
+    let body = scrape_text(addr).expect("scrape");
+    handle.shutdown();
+    join.join().expect("metrics server joins");
+
+    let series = validate_exposition(&body).expect("valid Prometheus text");
+    assert!(series > 0);
+    for needle in [
+        "# TYPE sched_ttft_us histogram",
+        "sched_ttft_us_bucket{class=\"interactive\",le=\"",
+        "sched_ttft_us_bucket{class=\"batch\",le=\"",
+        "sched_ttft_us_bucket{class=\"best_effort\",le=\"",
+        "sched_itl_us_sum{class=\"interactive\"}",
+        "sched_e2e_us_count{class=\"batch\"}",
+        "sched_queue_wait_us_bucket{class=\"best_effort\",le=\"+Inf\"}",
+        "sched_tokens_total",
+        "sched_uptime_ticks",
+    ] {
+        assert!(body.contains(needle), "missing {needle:?} in:\n{body}");
+    }
+}

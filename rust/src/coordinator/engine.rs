@@ -463,6 +463,14 @@ impl Engine {
             ));
         }
         self.metrics.gauge("sched.enabled").set(1);
+        // kernel-level time attribution shares the scheduler's profile
+        // gate (`--no-profile` clears both): install a live handle into
+        // every stripe so appends and decode views time themselves
+        if cfg.profile {
+            kv.cache.install_kernel_profiler(Arc::new(crate::obs::KernelProfiler::new(
+                &self.metrics,
+            )));
+        }
         self.sched = Some(Scheduler::start_with_recalib(
             kv.cache.clone(),
             model,
@@ -471,6 +479,14 @@ impl Engine {
             self.recalib.clone(),
         ));
         Ok(self)
+    }
+
+    /// The scheduler's flight-recorder dump (the server's `debug-dump`
+    /// verb): ring contents, totals, and the last automatic anomaly
+    /// snapshot. Errs when no scheduler is attached.
+    pub fn debug_dump(&self) -> Result<Json, String> {
+        let sched = self.sched.as_ref().ok_or("scheduler not enabled")?;
+        Ok(sched.flight().dump_json())
     }
 
     pub fn has_kv(&self) -> bool {
@@ -788,6 +804,19 @@ impl Engine {
         max_new: usize,
         priority: Priority,
     ) -> Result<(u64, Receiver<StreamEvent>), String> {
+        self.generate_traced(tokens, max_new, priority, None)
+    }
+
+    /// [`Engine::generate_with_priority`] with a caller-supplied trace
+    /// id (the wire verb's optional `trace` field). `None` assigns the
+    /// request id, so every stream always carries a usable trace id.
+    pub fn generate_traced(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        priority: Priority,
+        trace: Option<u64>,
+    ) -> Result<(u64, Receiver<StreamEvent>), String> {
         let sched = self.sched.as_ref().ok_or("scheduler not enabled")?;
         if tokens.is_empty() {
             return Err("empty prompt".into());
@@ -796,7 +825,8 @@ impl Engine {
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.metrics.counter("sched.submitted").inc();
-        Ok((id, sched.submit_with_priority(id, tokens, max_new, priority)))
+        let trace = trace.unwrap_or(id);
+        Ok((id, sched.submit_traced(id, tokens, max_new, priority, trace)))
     }
 
     /// Convenience: generate and block until the stream terminates,

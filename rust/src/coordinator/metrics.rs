@@ -280,6 +280,21 @@ impl Registry {
             .collect()
     }
 
+    /// Every metric name currently interned, across all four kinds,
+    /// sorted and deduplicated. This is the ground truth the
+    /// documentation lint (`docs/OBSERVABILITY.md` must catalogue every
+    /// live family) checks against after a full loadgen run.
+    pub fn family_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        names.extend(self.counters.lock().unwrap().keys().cloned());
+        names.extend(self.gauges.lock().unwrap().keys().cloned());
+        names.extend(self.histograms.lock().unwrap().keys().cloned());
+        names.extend(self.infos.lock().unwrap().keys().cloned());
+        names.sort();
+        names.dedup();
+        names
+    }
+
     /// Snapshot everything as JSON.
     pub fn snapshot(&self) -> Json {
         let mut obj = BTreeMap::new();
@@ -452,6 +467,20 @@ mod tests {
         assert_eq!(h.min(), 0);
         assert_eq!(h.max(), 0);
         assert_eq!(h.sum(), 0);
+    }
+
+    #[test]
+    fn family_names_cover_all_kinds_sorted_deduped() {
+        let r = Registry::default();
+        r.counter("z.count").inc();
+        r.gauge("a.depth").set(1);
+        r.histogram("m.lat").observe_us(5);
+        r.histogram("m.lat").observe_us(6); // same family, one name
+        r.set_info("build.info", &[("v", "1")]);
+        assert_eq!(
+            r.family_names(),
+            vec!["a.depth", "build.info", "m.lat", "z.count"]
+        );
     }
 
     #[test]

@@ -174,6 +174,12 @@ pub struct RadixKvCache {
     stats: KvStats,
     /// Calibration epoch: 0 at boot, +1 per [`RadixKvCache::swap_scales`].
     epoch: u64,
+    /// Kernel time attribution (`engine.kernel_us.*`): disabled (zero
+    /// overhead) unless the engine installs a live handle via
+    /// [`RadixKvCache::set_kernel_profiler`]. Shared with every
+    /// [`crate::kv::decode::DecodeView`] this cache hands out, so
+    /// split-K passes time themselves outside the cache lock.
+    pub(crate) prof: Arc<crate::obs::KernelProfiler>,
 }
 
 /// Back-compat alias: the old `coordinator::kvcache` pool name.
@@ -192,11 +198,18 @@ impl RadixKvCache {
             next_id: 1,
             stats: KvStats::default(),
             epoch: 0,
+            prof: Arc::new(crate::obs::KernelProfiler::disabled()),
         }
     }
 
     pub fn config(&self) -> &CacheConfig {
         &self.cfg
+    }
+
+    /// Install a kernel profiler: appends time their block quantize and
+    /// decode views created from here on time their split-K passes.
+    pub fn set_kernel_profiler(&mut self, prof: Arc<crate::obs::KernelProfiler>) {
+        self.prof = prof;
     }
 
     /// Calibration epoch (0 = boot plan; +1 per scale hot-swap).
@@ -472,7 +485,10 @@ impl RadixKvCache {
         // quantize under the sequence's admission-time config, not the
         // current epoch's: a hot-swap must never change the grid of an
         // already-admitted stream (its new blocks stamp the old scale)
-        quantize::write_token(&seq_cfg, self.pool.block_mut(target), slot, k, v);
+        let (pool, prof) = (&mut self.pool, &self.prof);
+        prof.time(crate::obs::Kernel::BlockQuantize, || {
+            quantize::write_token(&seq_cfg, pool.block_mut(target), slot, k, v)
+        });
         let seq = self.seqs.get_mut(&id).unwrap();
         seq.len_tokens += 1;
         if let (Some(tok), Some(ids)) = (token, seq.token_ids.as_mut()) {

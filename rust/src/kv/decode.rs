@@ -80,6 +80,10 @@ pub struct DecodeView {
     cfg: Arc<super::cache::CacheConfig>,
     blocks: Vec<Arc<Block>>,
     len_tokens: usize,
+    /// Kernel time attribution, cloned from the cache at pin time so
+    /// pass 1 / pass 2 timing runs lock-free with the compute
+    /// (disabled handles are exact passthroughs).
+    prof: Arc<crate::obs::KernelProfiler>,
 }
 
 impl DecodeView {
@@ -118,53 +122,59 @@ impl DecodeView {
         let parts = partition(self.blocks.len(), workers);
 
         // pass 1: partial score maxima per head; merge = max (exact)
-        let maxes = self.map_parts(&parts, |b0, b1| self.partial_max(b0, b1, &qq, tau));
-        let mut m = vec![f32::NEG_INFINITY; h];
-        for pm in &maxes {
-            for (a, &b) in m.iter_mut().zip(pm) {
-                *a = a.max(b);
+        let m = self.prof.time(crate::obs::Kernel::SplitkPass1, || {
+            let maxes = self.map_parts(&parts, |b0, b1| self.partial_max(b0, b1, &qq, tau));
+            let mut m = vec![f32::NEG_INFINITY; h];
+            for pm in &maxes {
+                for (a, &b) in m.iter_mut().zip(pm) {
+                    *a = a.max(b);
+                }
             }
-        }
+            m
+        });
 
         // pass 2: integer (l, acc) partials under the shared max, the
         // acc grouped per stamped V grid; merge = integer sum per grid
         // (exact). One grid is the steady state — a sequence spans
         // several only across a calibration hot-swap (its own old
         // blocks, or a shared prefix written under an earlier epoch).
-        let partials =
-            self.map_parts(&parts, |b0, b1| self.partial_sums(b0, b1, &qq, tau, &m));
-        let mut l = vec![0i64; h];
-        let mut groups: Vec<(u32, Vec<i64>)> = Vec::new();
-        for p in &partials {
-            for (a, &b) in l.iter_mut().zip(&p.l) {
-                *a += b;
-            }
-            for (bits, acc) in &p.groups {
-                match groups.iter_mut().find(|(gb, _)| gb == bits) {
-                    Some((_, g)) => {
-                        for (a, &b) in g.iter_mut().zip(acc) {
-                            *a += b;
+        let out = self.prof.time(crate::obs::Kernel::SplitkPass2, || {
+            let partials =
+                self.map_parts(&parts, |b0, b1| self.partial_sums(b0, b1, &qq, tau, &m));
+            let mut l = vec![0i64; h];
+            let mut groups: Vec<(u32, Vec<i64>)> = Vec::new();
+            for p in &partials {
+                for (a, &b) in l.iter_mut().zip(&p.l) {
+                    *a += b;
+                }
+                for (bits, acc) in &p.groups {
+                    match groups.iter_mut().find(|(gb, _)| gb == bits) {
+                        Some((_, g)) => {
+                            for (a, &b) in g.iter_mut().zip(acc) {
+                                *a += b;
+                            }
                         }
+                        None => groups.push((*bits, acc.clone())),
                     }
-                    None => groups.push((*bits, acc.clone())),
                 }
             }
-        }
 
-        // finalize once: O = Σ_grids acc·S_V / l, the grids summed in
-        // canonical (scale-bits) order so any worker count and any
-        // partition boundary produce bit-identical floats
-        groups.sort_by_key(|(bits, _)| *bits);
-        let mut out = vec![0.0f32; h * d];
-        for head in 0..h {
-            let lmax = (l[head] as f32).max(SCALE_EPS);
-            for (bits, acc) in &groups {
-                let rescale = f32::from_bits(*bits) / lmax;
-                for i in 0..d {
-                    out[head * d + i] += acc[head * d + i] as f32 * rescale;
+            // finalize once: O = Σ_grids acc·S_V / l, the grids summed
+            // in canonical (scale-bits) order so any worker count and
+            // any partition boundary produce bit-identical floats
+            groups.sort_by_key(|(bits, _)| *bits);
+            let mut out = vec![0.0f32; h * d];
+            for head in 0..h {
+                let lmax = (l[head] as f32).max(SCALE_EPS);
+                for (bits, acc) in &groups {
+                    let rescale = f32::from_bits(*bits) / lmax;
+                    for i in 0..d {
+                        out[head * d + i] += acc[head * d + i] as f32 * rescale;
+                    }
                 }
             }
-        }
+            out
+        });
         Ok(out)
     }
 
@@ -391,6 +401,7 @@ impl RadixKvCache {
             cfg: seq.cfg.clone(),
             blocks: seq.blocks.iter().map(|&b| self.pool.block_arc(b)).collect(),
             len_tokens: seq.len_tokens,
+            prof: self.prof.clone(),
         })
     }
 

@@ -133,6 +133,40 @@ impl LoadReport {
     }
 }
 
+/// Fold the server's profiler histograms — scraped via the `metrics`
+/// verb after a run — into the `BENCH_load.json` shape: one entry per
+/// `sched.phase_us.*` (tick-phase) and `engine.kernel_us.*` (kernel
+/// sub-phase) family with the sample count, total time, mean, and tail
+/// quantiles. Families absent from the snapshot (server started with
+/// `--no-profile`, or no scheduler) simply drop out, leaving empty
+/// objects — the breakdown never fails a bench run.
+pub fn phase_breakdown(metrics: &Json) -> Json {
+    let mut phases = std::collections::BTreeMap::new();
+    let mut kernels = std::collections::BTreeMap::new();
+    if let Json::Obj(map) = metrics {
+        for (key, v) in map {
+            let fold = || {
+                Json::obj(vec![
+                    ("count", v.at("count").clone()),
+                    ("total_us", v.at("sum").clone()),
+                    ("mean_us", v.at("mean_us").clone()),
+                    ("p50_us", v.at("p50_us").clone()),
+                    ("p99_us", v.at("p99_us").clone()),
+                ])
+            };
+            if let Some(name) = key.strip_prefix("hist.sched.phase_us.") {
+                phases.insert(name.to_string(), fold());
+            } else if let Some(name) = key.strip_prefix("hist.engine.kernel_us.") {
+                kernels.insert(name.to_string(), fold());
+            }
+        }
+    }
+    Json::obj(vec![
+        ("sched_phase_us", Json::Obj(phases)),
+        ("engine_kernel_us", Json::Obj(kernels)),
+    ])
+}
+
 fn run_session(addr: &str, epoch: Instant, s: &SessionPlan) -> io::Result<Vec<TurnOutcome>> {
     let target = Duration::from_micros(s.start_offset_us);
     let elapsed = epoch.elapsed();
@@ -341,6 +375,33 @@ mod tests {
         assert_eq!(batch.ttft.p50_us, 0.0);
         // best-effort saw no traffic but is still reported.
         assert_eq!(r.classes[0].turns, 0);
+    }
+
+    #[test]
+    fn phase_breakdown_folds_profiler_families_and_tolerates_absence() {
+        // a registry with profiler traffic produces the two family maps
+        let reg = crate::coordinator::metrics::Registry::default();
+        reg.histogram("sched.phase_us.decode").observe_us(120);
+        reg.histogram("sched.phase_us.decode").observe_us(80);
+        reg.histogram("engine.kernel_us.splitk_pass1").observe_us(40);
+        reg.histogram("sched.ttft_us.batch").observe_us(999); // not a phase family
+        let b = phase_breakdown(&reg.snapshot());
+        let decode = b.at("sched_phase_us").at("decode");
+        assert_eq!(decode.at("count").as_i64(), Some(2));
+        assert_eq!(decode.at("total_us").as_i64(), Some(200));
+        assert!(decode.at("p99_us").as_i64().is_some());
+        assert_eq!(
+            b.at("engine_kernel_us").at("splitk_pass1").at("count").as_i64(),
+            Some(1)
+        );
+        assert!(
+            b.at("sched_phase_us").at("ttft_us").is_null(),
+            "non-profiler families stay out of the breakdown"
+        );
+        // --no-profile servers: breakdown present but empty, never an error
+        let empty = phase_breakdown(&crate::coordinator::metrics::Registry::default().snapshot());
+        assert!(matches!(empty.at("sched_phase_us"), Json::Obj(m) if m.is_empty()));
+        assert!(matches!(empty.at("engine_kernel_us"), Json::Obj(m) if m.is_empty()));
     }
 
     #[test]

@@ -26,5 +26,5 @@
 pub mod driver;
 pub mod plan;
 
-pub use driver::{run, ClassStats, LoadReport, Pcts, TurnOutcome};
+pub use driver::{phase_breakdown, run, ClassStats, LoadReport, Pcts, TurnOutcome};
 pub use plan::{plan, Arrival, LoadConfig, LoadPlan, SessionPlan, TurnPlan};

@@ -50,6 +50,7 @@ USAGE:
                    [--sched-workers N] [--sched-queue-cap N] [--sched-aging-ticks N]
                    [--sched-queue-cap-interactive N] [--sched-queue-cap-batch N]
                    [--sched-queue-cap-best-effort N] [--no-lifecycle]
+                   [--no-profile] [--flight-capacity N]
                      --sched-queue-cap-*  per-class admission queue caps (default
                                           unbounded up to --sched-queue-cap): a
                                           flood in one class sheds against its own
@@ -59,6 +60,17 @@ USAGE:
                                           histograms (sched.ttft_us.* etc.);
                                           token streams are bit-identical either
                                           way — observation never reschedules
+                     --no-profile         disable the tick-phase and kernel
+                                          profilers (sched.phase_us.* /
+                                          engine.kernel_us.* histograms); same
+                                          bit-identity guarantee as lifecycle
+                     --flight-capacity    flight-recorder ring size in events,
+                                          default 256; the ring holds structured
+                                          admit/defer/shed/preempt/requeue/evict/
+                                          hot-swap events dumped automatically on
+                                          anomalies (shed burst, preemption storm,
+                                          swap failure, tick overrun) and on
+                                          demand via {\"type\":\"debug-dump\"}
                      --sched-stripes      KV pool stripes (independent locks), default 4
                      --sched-tick-us      idle-tick wait for new work in µs, default 500
                                           (in-flight decodes never wait; this bounds
@@ -102,6 +114,17 @@ USAGE:
                    [--new-min N] [--new-max N] [--system-prompts N]
                    [--system-prompt-len N] [--slo-ttft-ms MS] [--slo-itl-ms MS]
                    [--out FILE] [--heads H] [--head-dim D] [--kv-blocks N]
+                   [--sched-stripes N] [--force-preempt] [--flight-dump FILE]
+                     --force-preempt      after the plan run, drive one
+                                          deterministic preemption (best-effort
+                                          victim vs interactive aggressor) so the
+                                          flight recorder provably holds the
+                                          preempt/requeue pair; needs a pool small
+                                          enough to collide (e.g. --in-process
+                                          --kv-blocks 8 --sched-stripes 1)
+                     --flight-dump FILE   fetch the flight recorder via the
+                                          debug-dump verb after the run and write
+                                          the dump JSON to FILE
                      closed-loop load harness against the generate verb:
                      seeded (replayable) Poisson or bursty arrivals, multi-turn
                      sessions sharing system prompts (radix prefix reuse),
@@ -281,6 +304,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         args.get_usize("sched-queue-cap-interactive", usize::MAX)?,
                     ],
                     lifecycle: !args.has("no-lifecycle"),
+                    profile: !args.has("no-profile"),
+                    flight_capacity: args.get_usize("flight-capacity", 256)?,
                     ..int_flashattention::sched::SchedConfig::default()
                 };
                 log_info!(
@@ -417,6 +442,7 @@ fn bench_engine(args: &Args) -> Result<Engine> {
     let heads = args.get_usize("heads", 4)?;
     let head_dim = args.get_usize("head-dim", 64)?;
     let blocks = args.get_usize("kv-blocks", 512)?;
+    let stripes = args.get_usize("sched-stripes", 2)?;
     let router = BucketRouter::new(vec![Bucket {
         variant: Variant::Int8,
         batch: 2,
@@ -433,7 +459,7 @@ fn bench_engine(args: &Args) -> Result<Engine> {
     )
     .with_kv_striped(
         CacheConfig { block_tokens: 16, max_blocks: blocks, ..CacheConfig::new(heads, head_dim) },
-        2,
+        stripes,
         2,
     )
     .with_sched(
@@ -441,10 +467,76 @@ fn bench_engine(args: &Args) -> Result<Engine> {
         SchedConfig {
             max_inflight: args.get_usize("sched-max-inflight", 16)?,
             lifecycle: !args.has("no-lifecycle"),
+            profile: !args.has("no-profile"),
+            flight_capacity: args.get_usize("flight-capacity", 256)?,
             ..SchedConfig::default()
         },
     )
     .map_err(|e| anyhow!(e))
+}
+
+/// `--force-preempt`: drive one deterministic preemption through the
+/// wire so the flight recorder provably holds a preempt/requeue event
+/// pair — a long best-effort victim occupies the pool, then an
+/// interactive aggressor forces preempt-by-recompute. Only collides
+/// when the pool is small (e.g. `--in-process --kv-blocks 8
+/// --sched-stripes 1`). Fixed trace ids (victim 1111, aggressor 2222)
+/// make the dump's causal chain greppable.
+fn force_preempt(addr: &str) -> Result<()> {
+    let victim_addr = addr.to_string();
+    let (first_tx, first_rx) = std::sync::mpsc::channel::<()>();
+    let victim = std::thread::spawn(
+        move || -> std::io::Result<int_flashattention::util::json::Json> {
+            let mut c = Client::connect(&victim_addr)?;
+            let prompt: Vec<u32> = (3000..3008).collect();
+            let mut signalled = false;
+            c.generate_streaming_traced(&prompt, 80, "best-effort", Some(1111), move |_, _, _| {
+                if !signalled {
+                    let _ = first_tx.send(());
+                    signalled = true;
+                }
+            })
+        },
+    );
+    // only launch the aggressor once the victim is admitted and holds
+    // blocks — otherwise there is nothing to preempt
+    first_rx
+        .recv_timeout(Duration::from_secs(30))
+        .map_err(|_| anyhow!("force-preempt: victim never streamed a token"))?;
+    let mut c = Client::connect(addr)?;
+    let agg_prompt: Vec<u32> = (4000..4012).collect();
+    let agg = c.generate_streaming_traced(&agg_prompt, 25, "interactive", Some(2222), |_, _, _| {})?;
+    if agg.at("ok").as_bool() != Some(true) {
+        bail!("force-preempt: aggressor failed: {}", agg.to_string());
+    }
+    let v = victim
+        .join()
+        .map_err(|_| anyhow!("force-preempt: victim thread panicked"))??;
+    if v.at("ok").as_bool() != Some(true) {
+        bail!("force-preempt: victim failed: {}", v.to_string());
+    }
+    log_info!("force-preempt: victim (trace 1111) and aggressor (trace 2222) both completed");
+    Ok(())
+}
+
+/// Post-run work against the still-live server: optional forced
+/// preemption, the profiler phase-breakdown scrape folded into
+/// `BENCH_load.json`, and the optional flight-recorder dump file.
+fn bench_epilogue(addr: &str, args: &Args) -> Result<int_flashattention::util::json::Json> {
+    if args.has("force-preempt") {
+        force_preempt(addr)?;
+    }
+    let mut client = Client::connect(addr)?;
+    let phases = int_flashattention::loadgen::phase_breakdown(&client.metrics()?);
+    if let Some(path) = args.get("flight-dump") {
+        let resp = client.debug_dump()?;
+        if resp.at("ok").as_bool() != Some(true) {
+            bail!("debug-dump failed: {}", resp.to_string());
+        }
+        std::fs::write(path, resp.at("flight").to_pretty())?;
+        println!("wrote flight dump to {path}");
+    }
+    Ok(phases)
 }
 
 fn cmd_bench_load(args: &Args) -> Result<()> {
@@ -461,7 +553,7 @@ fn cmd_bench_load(args: &Args) -> Result<()> {
         plan.turn_count()
     );
 
-    let (report, scrape_ok) = if args.has("in-process") {
+    let (report, scrape_ok, phases) = if args.has("in-process") {
         let engine = bench_engine(args)?;
         let registry = engine.metrics.clone();
         let server = Server::bind(Arc::new(engine), "127.0.0.1:0")?;
@@ -484,19 +576,27 @@ fn cmd_bench_load(args: &Args) -> Result<()> {
         }
         log_info!("scrape self-check ok: {series} series from {metrics_addr}");
 
+        // epilogue runs before shutdown — it talks to the live server
+        let phases = bench_epilogue(&addr, args)?;
+
         handle.shutdown();
         let _ = join.join();
         mhandle.shutdown();
         let _ = mjoin.join();
-        (report, Some(true))
+        (report, Some(true), phases)
     } else {
         let addr = args.get_or("addr", "127.0.0.1:7433").to_string();
-        (loadgen::run(&addr, &cfg, &plan), None)
+        let report = loadgen::run(&addr, &cfg, &plan);
+        let phases = bench_epilogue(&addr, args)?;
+        (report, None, phases)
     };
 
     let mut j = report.to_json();
-    if let (Json::Obj(map), Some(ok)) = (&mut j, scrape_ok) {
-        map.insert("scrape_ok".to_string(), Json::Bool(ok));
+    if let Json::Obj(map) = &mut j {
+        map.insert("phases".to_string(), phases);
+        if let Some(ok) = scrape_ok {
+            map.insert("scrape_ok".to_string(), Json::Bool(ok));
+        }
     }
     println!(
         "bench-load: {}/{} turns ok, goodput {:.1} tok/s, SLO attainment {:.1}%",

@@ -1,0 +1,484 @@
+//! Flight recorder: a fixed-capacity ring buffer of structured
+//! scheduler events with automatic anomaly dumps.
+//!
+//! The scheduler records every consequential decision — admit / defer /
+//! reject / shed / preempt / requeue / evict / hot-swap / tick-overrun
+//! — as a fixed-size [`FlightEvent`] stamped with the tick, a global
+//! monotonic sequence number, and the request's id + trace id. The ring
+//! is allocation-free after construction: [`FlightRecorder::new`]
+//! preallocates `capacity` slots and recording overwrites the oldest
+//! entry, so steady-state serving pays one short mutex hold and a
+//! struct copy per event.
+//!
+//! Anomaly detection rides on the per-tick deltas the scheduler already
+//! has: a shed burst, a preemption storm, a failed scale hot-swap, or a
+//! tick blowing past its overrun threshold triggers an automatic JSON
+//! dump of the whole ring ([`FlightRecorder::last_anomaly`]) — the
+//! state *leading up to* the anomaly, which is exactly what a
+//! post-incident investigation needs. Each trigger is latched: a burst
+//! fires one dump, and the trigger re-arms only after a quiet tick, so
+//! a sustained storm cannot spam dumps. The same JSON is available on
+//! demand through the server's `debug-dump` verb
+//! ([`crate::server::Client::debug_dump`]).
+
+use crate::obs::lifecycle::CLASS_NAMES;
+use crate::util::json::Json;
+use std::sync::Mutex;
+
+/// What happened. One variant per scheduler decision the recorder
+/// captures; serialized as the snake_case `kind` field of the dump.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlightEventKind {
+    /// A queued request was admitted to a stripe (`detail` = cold
+    /// blocks its prompt priced at).
+    Admit,
+    /// Admission deferred under block pressure (`detail` = cold blocks
+    /// the stripe could not cover).
+    Defer,
+    /// Admission rejected: the footprint can never fit (`detail` =
+    /// total blocks required).
+    Reject,
+    /// Shed at enqueue: the admission queue (or its class cap) was
+    /// full (`detail` = queue depth at shed).
+    Shed,
+    /// A live sequence was preempted for a higher class (`detail` =
+    /// resident tokens evicted for replay).
+    Preempt,
+    /// The preempted victim went back to the admission queue
+    /// (`detail` = tokens it must replay).
+    Requeue,
+    /// Trie blocks were LRU-evicted under pool pressure (`detail` =
+    /// blocks evicted this tick; not request-scoped).
+    Evict,
+    /// A calibration scale hot-swap landed (`detail` = new epoch).
+    HotSwap,
+    /// A hot-swap attempt failed validation (`detail` = failure count
+    /// so far).
+    SwapFail,
+    /// A tick exceeded the overrun threshold (`detail` = tick µs).
+    TickOverrun,
+}
+
+impl FlightEventKind {
+    /// The snake_case wire name of this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightEventKind::Admit => "admit",
+            FlightEventKind::Defer => "defer",
+            FlightEventKind::Reject => "reject",
+            FlightEventKind::Shed => "shed",
+            FlightEventKind::Preempt => "preempt",
+            FlightEventKind::Requeue => "requeue",
+            FlightEventKind::Evict => "evict",
+            FlightEventKind::HotSwap => "hot_swap",
+            FlightEventKind::SwapFail => "swap_fail",
+            FlightEventKind::TickOverrun => "tick_overrun",
+        }
+    }
+}
+
+/// `class` value for events not scoped to a priority class.
+pub const NO_CLASS: u8 = u8::MAX;
+/// `stripe` value for events not scoped to a stripe.
+pub const NO_STRIPE: u32 = u32::MAX;
+
+/// One recorded scheduler event. Fixed-size and `Copy` so the ring
+/// never allocates; `seq` is stamped by [`FlightRecorder::record`]
+/// (global monotonic order across all writers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlightEvent {
+    pub kind: FlightEventKind,
+    /// Scheduler tick the event happened on.
+    pub tick: u64,
+    /// Global monotonic sequence number (stamped at record time).
+    pub seq: u64,
+    /// Request id (`0` when not request-scoped).
+    pub id: u64,
+    /// Wire-level trace id (`0` when none).
+    pub trace: u64,
+    /// [`crate::sched::Priority`] rank, or [`NO_CLASS`].
+    pub class: u8,
+    /// Stripe index, or [`NO_STRIPE`].
+    pub stripe: u32,
+    /// Kind-specific magnitude (see [`FlightEventKind`]).
+    pub detail: u64,
+}
+
+impl FlightEvent {
+    /// An event with every optional field blank — callers fill in what
+    /// applies.
+    pub fn new(kind: FlightEventKind, tick: u64) -> FlightEvent {
+        FlightEvent {
+            kind,
+            tick,
+            seq: 0,
+            id: 0,
+            trace: 0,
+            class: NO_CLASS,
+            stripe: NO_STRIPE,
+            detail: 0,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        let mut fields = vec![
+            ("kind", Json::str(self.kind.name())),
+            ("tick", Json::num(self.tick as f64)),
+            ("seq", Json::num(self.seq as f64)),
+            ("id", Json::num(self.id as f64)),
+            ("trace", Json::num(self.trace as f64)),
+            ("detail", Json::num(self.detail as f64)),
+        ];
+        fields.push((
+            "class",
+            match CLASS_NAMES.get(self.class as usize) {
+                Some(name) => Json::str(*name),
+                None => Json::Null,
+            },
+        ));
+        fields.push((
+            "stripe",
+            if self.stripe == NO_STRIPE {
+                Json::Null
+            } else {
+                Json::num(self.stripe as f64)
+            },
+        ));
+        Json::obj(fields)
+    }
+}
+
+/// Per-tick trigger levels for the automatic anomaly dump.
+#[derive(Clone, Copy, Debug)]
+pub struct AnomalyThresholds {
+    /// Sheds in one tick at or above this fire a `shed_burst`.
+    pub shed_burst: u64,
+    /// Preemptions in one tick at or above this fire a
+    /// `preempt_storm`.
+    pub preempt_storm: u64,
+    /// Tick wall time at or above this (µs) fires a `tick_overrun`.
+    pub tick_overrun_us: u64,
+}
+
+impl Default for AnomalyThresholds {
+    fn default() -> AnomalyThresholds {
+        AnomalyThresholds { shed_burst: 4, preempt_storm: 4, tick_overrun_us: 50_000 }
+    }
+}
+
+/// The anomaly kinds [`FlightRecorder::tick_check`] can fire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Anomaly {
+    ShedBurst,
+    PreemptStorm,
+    SwapFailure,
+    TickOverrun,
+}
+
+impl Anomaly {
+    pub fn name(self) -> &'static str {
+        match self {
+            Anomaly::ShedBurst => "shed_burst",
+            Anomaly::PreemptStorm => "preempt_storm",
+            Anomaly::SwapFailure => "swap_failure",
+            Anomaly::TickOverrun => "tick_overrun",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Anomaly::ShedBurst => 0,
+            Anomaly::PreemptStorm => 1,
+            Anomaly::SwapFailure => 2,
+            Anomaly::TickOverrun => 3,
+        }
+    }
+}
+
+const ANOMALY_KINDS: usize = 4;
+
+struct Ring {
+    /// Preallocated storage; `slots.len() < capacity` only before the
+    /// ring first wraps.
+    slots: Vec<FlightEvent>,
+    /// Index of the oldest entry once wrapped.
+    head: usize,
+    /// Total events ever recorded (also the next `seq`).
+    recorded: u64,
+    /// Per-anomaly latch: `true` = armed (will fire on trigger).
+    armed: [bool; ANOMALY_KINDS],
+    /// Anomalies fired in total.
+    anomalies: u64,
+    /// The automatic dump taken when the last anomaly fired.
+    last_anomaly: Option<Json>,
+}
+
+/// Fixed-capacity scheduler event recorder. All methods take `&self`;
+/// writers serialize on one internal mutex (events are tiny copies, so
+/// the hold is nanoseconds).
+pub struct FlightRecorder {
+    capacity: usize,
+    thresholds: AnomalyThresholds,
+    ring: Mutex<Ring>,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            capacity,
+            thresholds: AnomalyThresholds::default(),
+            ring: Mutex::new(Ring {
+                slots: Vec::with_capacity(capacity),
+                head: 0,
+                recorded: 0,
+                armed: [true; ANOMALY_KINDS],
+                anomalies: 0,
+                last_anomaly: None,
+            }),
+        }
+    }
+
+    pub fn with_thresholds(mut self, thresholds: AnomalyThresholds) -> FlightRecorder {
+        self.thresholds = thresholds;
+        self
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The trigger levels in force (callers share them, e.g. the tick
+    /// loop records a `tick_overrun` event against the same bar the
+    /// anomaly check uses).
+    pub fn thresholds(&self) -> AnomalyThresholds {
+        self.thresholds
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever recorded (drops = `recorded - len`).
+    pub fn recorded(&self) -> u64 {
+        self.ring.lock().unwrap().recorded
+    }
+
+    /// Anomaly dumps fired so far.
+    pub fn anomalies(&self) -> u64 {
+        self.ring.lock().unwrap().anomalies
+    }
+
+    /// Record one event; its `seq` field is overwritten with the next
+    /// global sequence number, which is returned.
+    pub fn record(&self, mut ev: FlightEvent) -> u64 {
+        let mut r = self.ring.lock().unwrap();
+        ev.seq = r.recorded;
+        r.recorded += 1;
+        if r.slots.len() < self.capacity {
+            r.slots.push(ev);
+        } else {
+            let head = r.head;
+            r.slots[head] = ev;
+            r.head = (head + 1) % self.capacity;
+        }
+        ev.seq
+    }
+
+    /// The held events, oldest first.
+    pub fn events(&self) -> Vec<FlightEvent> {
+        let r = self.ring.lock().unwrap();
+        Self::ordered(&r)
+    }
+
+    fn ordered(r: &Ring) -> Vec<FlightEvent> {
+        let mut out = Vec::with_capacity(r.slots.len());
+        out.extend_from_slice(&r.slots[r.head..]);
+        out.extend_from_slice(&r.slots[..r.head]);
+        out
+    }
+
+    /// Evaluate this tick's anomaly deltas. Each trigger is latched —
+    /// it fires at most once per burst, and re-arms only on a tick
+    /// where its condition is quiet again. Firing snapshots the ring
+    /// into [`FlightRecorder::last_anomaly`] and returns the fired
+    /// kinds (callers log / count them).
+    pub fn tick_check(
+        &self,
+        tick: u64,
+        sheds: u64,
+        preempts: u64,
+        swap_failures: u64,
+        tick_us: u64,
+    ) -> Vec<Anomaly> {
+        let t = self.thresholds;
+        let conditions = [
+            (Anomaly::ShedBurst, sheds >= t.shed_burst),
+            (Anomaly::PreemptStorm, preempts >= t.preempt_storm),
+            (Anomaly::SwapFailure, swap_failures > 0),
+            (Anomaly::TickOverrun, tick_us >= t.tick_overrun_us),
+        ];
+        let mut r = self.ring.lock().unwrap();
+        let mut fired = Vec::new();
+        for (kind, triggered) in conditions {
+            let i = kind.index();
+            if triggered && r.armed[i] {
+                r.armed[i] = false;
+                fired.push(kind);
+            } else if !triggered {
+                r.armed[i] = true;
+            }
+        }
+        if !fired.is_empty() {
+            r.anomalies += fired.len() as u64;
+            let dump = Self::dump_locked(&r, self.capacity, Some((tick, &fired)));
+            r.last_anomaly = Some(dump);
+        }
+        fired
+    }
+
+    /// The ring as JSON: capacity, totals, the ordered event list, and
+    /// the last automatic anomaly dump (if any fired). This is the
+    /// `debug-dump` verb's payload.
+    pub fn dump_json(&self) -> Json {
+        let r = self.ring.lock().unwrap();
+        let mut j = Self::dump_locked(&r, self.capacity, None);
+        if let (Json::Obj(map), Some(last)) = (&mut j, &r.last_anomaly) {
+            map.insert("last_anomaly".to_string(), last.clone());
+        }
+        j
+    }
+
+    fn dump_locked(r: &Ring, capacity: usize, anomaly: Option<(u64, &[Anomaly])>) -> Json {
+        let events: Vec<Json> = Self::ordered(r).into_iter().map(|e| e.to_json()).collect();
+        let mut fields = vec![
+            ("capacity", Json::num(capacity as f64)),
+            ("recorded", Json::num(r.recorded as f64)),
+            ("dropped", Json::num((r.recorded - events.len() as u64) as f64)),
+            ("anomalies", Json::num(r.anomalies as f64)),
+            ("events", Json::Arr(events)),
+        ];
+        if let Some((tick, kinds)) = anomaly {
+            fields.push(("anomaly_tick", Json::num(tick as f64)));
+            fields.push((
+                "anomaly_kinds",
+                Json::Arr(kinds.iter().map(|k| Json::str(k.name())).collect()),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ev(kind: FlightEventKind, tick: u64) -> FlightEvent {
+        FlightEvent::new(kind, tick)
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_events_in_order() {
+        let fr = FlightRecorder::new(4);
+        for t in 0..10u64 {
+            fr.record(ev(FlightEventKind::Admit, t));
+        }
+        assert_eq!(fr.len(), 4);
+        assert_eq!(fr.recorded(), 10);
+        let events = fr.events();
+        let ticks: Vec<u64> = events.iter().map(|e| e.tick).collect();
+        assert_eq!(ticks, vec![6, 7, 8, 9], "oldest-first, newest retained");
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "seq mirrors record order");
+    }
+
+    #[test]
+    fn capacity_bound_holds_under_concurrent_writers() {
+        let fr = Arc::new(FlightRecorder::new(64));
+        let mut handles = Vec::new();
+        for w in 0..8u64 {
+            let fr = fr.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    let mut e = ev(FlightEventKind::Shed, i);
+                    e.id = w;
+                    fr.record(e);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fr.len(), 64, "ring never exceeds capacity");
+        assert_eq!(fr.recorded(), 8 * 500);
+        // global order preserved: seq strictly increasing oldest-first
+        let seqs: Vec<u64> = fr.events().iter().map(|e| e.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[1] == w[0] + 1), "contiguous tail: {seqs:?}");
+        assert_eq!(*seqs.last().unwrap(), 8 * 500 - 1);
+    }
+
+    #[test]
+    fn anomaly_fires_exactly_once_per_burst_and_rearms_after_quiet() {
+        let fr = FlightRecorder::new(8).with_thresholds(AnomalyThresholds {
+            shed_burst: 3,
+            preempt_storm: 2,
+            tick_overrun_us: 1_000,
+        });
+        // tick 1: burst begins → fires once
+        assert_eq!(fr.tick_check(1, 5, 0, 0, 10), vec![Anomaly::ShedBurst]);
+        // ticks 2..4: burst continues → latched, no refire
+        for t in 2..5 {
+            assert!(fr.tick_check(t, 9, 0, 0, 10).is_empty(), "tick {t} must stay latched");
+        }
+        // tick 5: quiet re-arms; tick 6: new burst fires again
+        assert!(fr.tick_check(5, 0, 0, 0, 10).is_empty());
+        assert_eq!(fr.tick_check(6, 4, 0, 0, 10), vec![Anomaly::ShedBurst]);
+        assert_eq!(fr.anomalies(), 2);
+        // independent latches: a preempt storm during a latched shed
+        // burst still fires
+        assert_eq!(fr.tick_check(7, 9, 3, 0, 10), vec![Anomaly::PreemptStorm]);
+        // swap failure + overrun fire on their own conditions
+        let fired = fr.tick_check(8, 0, 0, 1, 5_000);
+        assert_eq!(fired, vec![Anomaly::SwapFailure, Anomaly::TickOverrun]);
+    }
+
+    #[test]
+    fn anomaly_snapshot_carries_the_ring_and_kind() {
+        let fr = FlightRecorder::new(8);
+        let mut e = ev(FlightEventKind::Preempt, 3);
+        e.id = 7;
+        e.trace = 99;
+        e.class = 0;
+        e.stripe = 1;
+        e.detail = 42;
+        fr.record(e);
+        fr.record(ev(FlightEventKind::Requeue, 3));
+        assert_eq!(fr.tick_check(3, 0, 9, 0, 0), vec![Anomaly::PreemptStorm]);
+        let dump = fr.dump_json();
+        assert_eq!(dump.at("capacity").as_usize(), Some(8));
+        assert_eq!(dump.at("recorded").as_usize(), Some(2));
+        let events = dump.at("events").as_arr().unwrap();
+        assert_eq!(events[0].at("kind").as_str(), Some("preempt"));
+        assert_eq!(events[0].at("trace").as_usize(), Some(99));
+        assert_eq!(events[0].at("class").as_str(), Some("best_effort"));
+        assert_eq!(events[0].at("stripe").as_usize(), Some(1));
+        assert_eq!(events[1].at("kind").as_str(), Some("requeue"));
+        assert!(events[1].at("class").is_null(), "blank class serializes null");
+        let last = dump.at("last_anomaly");
+        assert_eq!(last.at("anomaly_tick").as_usize(), Some(3));
+        assert_eq!(
+            last.at("anomaly_kinds").as_arr().unwrap()[0].as_str(),
+            Some("preempt_storm")
+        );
+        // the dump round-trips through the JSON codec
+        let text = dump.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back, dump);
+    }
+}

@@ -1,20 +1,30 @@
-//! Observability layer: request-lifecycle latency tracing and
-//! Prometheus text exposition.
+//! Observability layer: request-lifecycle latency tracing, tick-phase
+//! and kernel profiling, a scheduler flight recorder, and Prometheus
+//! text exposition.
 //!
 //! [`lifecycle`] owns the per-priority-class latency families the tick
 //! loop records into (TTFT, inter-token latency, end-to-end, queue
-//! wait, per-class shed counts). [`prom`] renders the whole
+//! wait, per-class shed counts). [`profiler`] attributes time *inside*
+//! a tick (`sched.phase_us.*`) and inside the INT8 decode kernels
+//! (`engine.kernel_us.*`). [`flight`] is the fixed-capacity ring of
+//! structured scheduler events with automatic anomaly dumps, served by
+//! the `debug-dump` wire verb. [`prom`] renders the whole
 //! [`crate::coordinator::metrics::Registry`] as Prometheus text format
 //! 0.0.4 — dependency-free, served over raw HTTP/1.1 by
 //! [`crate::server::prom::MetricsServer`].
 //!
-//! Everything here is pure observation: recording a histogram must
-//! never change a token stream (the scheduler's exactness contract).
-//! `tests/obs_integration.rs` proves streams are bit-identical with
-//! lifecycle collection enabled vs disabled.
+//! Everything here is pure observation: recording a histogram or a
+//! flight event must never change a token stream (the scheduler's
+//! exactness contract). `tests/obs_integration.rs` proves streams are
+//! bit-identical with lifecycle collection — and with profiling —
+//! enabled vs disabled.
 
+pub mod flight;
 pub mod lifecycle;
+pub mod profiler;
 pub mod prom;
 
+pub use flight::{Anomaly, AnomalyThresholds, FlightEvent, FlightEventKind, FlightRecorder};
 pub use lifecycle::{Lifecycle, CLASS_NAMES};
+pub use profiler::{Kernel, KernelProfiler, PhaseProfiler, TickPhase};
 pub use prom::{render, sanitize, validate_exposition};

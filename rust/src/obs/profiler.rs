@@ -1,0 +1,194 @@
+//! Tick-phase and kernel time-attribution profiler.
+//!
+//! PR 6's lifecycle families say how slow a request was; these families
+//! say where the time went. Two levels:
+//!
+//!   - [`PhaseProfiler`]: wall time of each scheduler tick phase
+//!     (admission pricing, prefill chunking, the batched decode call,
+//!     stream delivery, the recalibration check) into
+//!     `sched.phase_us.{phase}` histograms.
+//!   - [`KernelProfiler`]: the engine/kernel sub-phases of the INT8
+//!     decode path — block quantization on append, split-K pass 1
+//!     (integer QK^T + partial max) and pass 2 (the `(m, l, acc)`
+//!     integer merge + finalize) — into `engine.kernel_us.{kernel}`
+//!     histograms. A handle is installed into every KV stripe and
+//!     cloned into each [`crate::kv::DecodeView`], so the timing runs
+//!     inside the decode worker threads without taking any lock.
+//!
+//! Like [`crate::obs::Lifecycle`], both are pure observation: every
+//! record method is a no-op when built disabled, and
+//! `tests/obs_integration.rs` asserts token streams are bit-identical
+//! with profiling on and off (`--no-profile`).
+
+use crate::coordinator::metrics::{Histogram, Registry};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Scheduler tick phases, in tick order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TickPhase {
+    Admission,
+    Prefill,
+    Decode,
+    Stream,
+    Recalib,
+}
+
+/// Registry-name segments for each tick phase
+/// (`sched.phase_us.{segment}`).
+pub const PHASE_NAMES: [&str; 5] = ["admission", "prefill", "decode", "stream", "recalib"];
+
+impl TickPhase {
+    fn index(self) -> usize {
+        match self {
+            TickPhase::Admission => 0,
+            TickPhase::Prefill => 1,
+            TickPhase::Decode => 2,
+            TickPhase::Stream => 3,
+            TickPhase::Recalib => 4,
+        }
+    }
+}
+
+/// Handles to the `sched.phase_us.*` families; owned by the tick loop.
+pub struct PhaseProfiler {
+    enabled: bool,
+    phases: [Arc<Histogram>; 5],
+}
+
+impl PhaseProfiler {
+    /// Register the phase families in `reg` (all exist, with zero
+    /// counts, from scheduler start).
+    pub fn new(reg: &Registry) -> PhaseProfiler {
+        Self::build(reg, true)
+    }
+
+    /// A profiler whose record methods do nothing.
+    pub fn disabled() -> PhaseProfiler {
+        Self::build(&Registry::default(), false)
+    }
+
+    fn build(reg: &Registry, enabled: bool) -> PhaseProfiler {
+        PhaseProfiler {
+            enabled,
+            phases: PHASE_NAMES.map(|p| reg.histogram(&format!("sched.phase_us.{p}"))),
+        }
+    }
+
+    /// Record the wall time of one phase since `t0`.
+    pub fn record_since(&self, phase: TickPhase, t0: Instant) {
+        if self.enabled {
+            self.phases[phase.index()].observe_us(t0.elapsed().as_micros() as u64);
+        }
+    }
+}
+
+/// Kernel sub-phases of the INT8 decode/append path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Block quantization of one token's K/V rows on append.
+    BlockQuantize,
+    /// Split-K pass 1: integer QK^T scoring + per-partition max.
+    SplitkPass1,
+    /// Split-K pass 2: integer `(l, acc)` partials, merge and finalize.
+    SplitkPass2,
+}
+
+/// Registry-name segments for each kernel
+/// (`engine.kernel_us.{segment}`).
+pub const KERNEL_NAMES: [&str; 3] = ["block_quantize", "splitk_pass1", "splitk_pass2"];
+
+impl Kernel {
+    fn index(self) -> usize {
+        match self {
+            Kernel::BlockQuantize => 0,
+            Kernel::SplitkPass1 => 1,
+            Kernel::SplitkPass2 => 2,
+        }
+    }
+}
+
+/// Shared handle to the `engine.kernel_us.*` families. Cheap to clone
+/// behind an `Arc`; histogram observation is atomic, so decode worker
+/// threads record concurrently without coordination.
+pub struct KernelProfiler {
+    enabled: bool,
+    kernels: [Arc<Histogram>; 3],
+}
+
+impl KernelProfiler {
+    /// Register the kernel families in `reg`.
+    pub fn new(reg: &Registry) -> KernelProfiler {
+        Self::build(reg, true)
+    }
+
+    /// A profiler that times nothing (the default for caches built
+    /// outside an engine — zero overhead on the decode path).
+    pub fn disabled() -> KernelProfiler {
+        Self::build(&Registry::default(), false)
+    }
+
+    fn build(reg: &Registry, enabled: bool) -> KernelProfiler {
+        KernelProfiler {
+            enabled,
+            kernels: KERNEL_NAMES.map(|k| reg.histogram(&format!("engine.kernel_us.{k}"))),
+        }
+    }
+
+    /// Run `f`, attributing its wall time to `kernel`. When disabled
+    /// this is exactly `f()` — no clock reads on the hot path.
+    pub fn time<R>(&self, kernel: Kernel, f: impl FnOnce() -> R) -> R {
+        if !self.enabled {
+            return f();
+        }
+        let t0 = Instant::now();
+        let r = f();
+        self.kernels[kernel.index()].observe_us(t0.elapsed().as_micros() as u64);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_families_exist_and_record_by_phase() {
+        let reg = Registry::default();
+        let prof = PhaseProfiler::new(&reg);
+        for p in PHASE_NAMES {
+            assert_eq!(reg.histogram(&format!("sched.phase_us.{p}")).count(), 0);
+        }
+        prof.record_since(TickPhase::Decode, Instant::now());
+        prof.record_since(TickPhase::Decode, Instant::now());
+        prof.record_since(TickPhase::Recalib, Instant::now());
+        assert_eq!(reg.histogram("sched.phase_us.decode").count(), 2);
+        assert_eq!(reg.histogram("sched.phase_us.recalib").count(), 1);
+        assert_eq!(reg.histogram("sched.phase_us.admission").count(), 0);
+    }
+
+    #[test]
+    fn disabled_phase_profiler_records_nothing() {
+        let reg = Registry::default();
+        let prof = PhaseProfiler::disabled();
+        prof.record_since(TickPhase::Admission, Instant::now());
+        assert_eq!(reg.histograms().len(), 0);
+    }
+
+    #[test]
+    fn kernel_timing_returns_the_closure_result() {
+        let reg = Registry::default();
+        let prof = KernelProfiler::new(&reg);
+        let v = prof.time(Kernel::SplitkPass1, || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(reg.histogram("engine.kernel_us.splitk_pass1").count(), 1);
+        assert_eq!(reg.histogram("engine.kernel_us.splitk_pass2").count(), 0);
+        assert_eq!(reg.histogram("engine.kernel_us.block_quantize").count(), 0);
+    }
+
+    #[test]
+    fn disabled_kernel_profiler_is_a_passthrough() {
+        let prof = KernelProfiler::disabled();
+        assert_eq!(prof.time(Kernel::BlockQuantize, || 7), 7);
+    }
+}

@@ -72,7 +72,7 @@
 //! streams are bit-identical to K independent per-call loops
 //! (property-tested in `tests/sched_integration.rs`).
 //!
-//! # Lifecycle tracing
+//! # Lifecycle tracing, profiling, and the flight recorder
 //!
 //! Every sequence's client-visible timeline is stamped into the
 //! per-class [`Lifecycle`] families: queue wait at each admission,
@@ -81,6 +81,23 @@
 //! tokens (spanning preemptions), and end-to-end latency at `Done`.
 //! Tracing is pure observation — `SchedConfig { lifecycle: false }`
 //! produces bit-identical streams (`tests/obs_integration.rs`).
+//!
+//! Three deeper layers share that contract:
+//!
+//!   - the tick-phase profiler ([`crate::obs::PhaseProfiler`],
+//!     `SchedConfig { profile }`, `--no-profile`) attributes each
+//!     tick's wall time across admission / prefill / decode / stream /
+//!     recalib into `sched.phase_us.{phase}` histograms;
+//!   - the flight recorder ([`crate::obs::FlightRecorder`],
+//!     `--flight-capacity`) keeps the last N scheduler decisions
+//!     (admit/defer/reject/shed/preempt/requeue/evict/hot-swap/
+//!     tick-overrun) as structured events, auto-dumping on anomaly
+//!     bursts and serving the `debug-dump` verb;
+//!   - every request carries a wire-level *trace id*
+//!     ([`Scheduler::submit_traced`]) echoed on each
+//!     [`StreamEvent`] and stamped into its flight events, so a
+//!     client-observed anomaly resolves to the exact ticks, stripe and
+//!     preemption cycle that produced it.
 
 use super::model::TokenModel;
 use super::queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority, ShedCause};
@@ -88,7 +105,8 @@ use super::stripe::StripedKvCache;
 use crate::calib::Recalibrator;
 use crate::coordinator::metrics::{Counter, Registry};
 use crate::kv::{CacheConfig, CacheError};
-use crate::obs::Lifecycle;
+use crate::obs::flight::{FlightEvent, FlightEventKind, FlightRecorder};
+use crate::obs::{Lifecycle, PhaseProfiler, TickPhase};
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -135,6 +153,15 @@ pub struct SchedConfig {
     /// collection on and off (the exactness contract is untouched by
     /// observation).
     pub lifecycle: bool,
+    /// Record tick-phase histograms (`sched.phase_us.*`). Pure
+    /// observation like `lifecycle`; `--no-profile` clears it (and the
+    /// engine's kernel timers) and the bit-identity test covers both
+    /// settings.
+    pub profile: bool,
+    /// Flight-recorder ring capacity in events
+    /// (`intfa serve --flight-capacity`). The ring is preallocated once
+    /// at scheduler start; recording never allocates.
+    pub flight_capacity: usize,
 }
 
 impl Default for SchedConfig {
@@ -149,25 +176,41 @@ impl Default for SchedConfig {
             queue_cap_by_class: [usize::MAX; 3],
             aging_ticks: 256,
             lifecycle: true,
+            profile: true,
+            flight_capacity: 256,
         }
     }
 }
 
 /// Per-sequence stream message. `pos` is the token's absolute position
-/// (prompt positions are `0..prompt_len`).
+/// (prompt positions are `0..prompt_len`). `trace` is the wire-level
+/// trace id ([`Scheduler::submit_traced`]) echoed on every event so a
+/// client can hand it back when filing an anomaly report.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum StreamEvent {
     /// One generated token, delivered as its tick completes.
-    Token { id: u64, pos: usize, token: u32 },
+    Token { id: u64, trace: u64, pos: usize, token: u32 },
     /// Generation finished; `tokens` is the full generated tail.
-    Done { id: u64, tokens: Vec<u32> },
+    Done { id: u64, trace: u64, tokens: Vec<u32> },
     /// Admission rejected or shed the prompt, or the sequence failed
     /// mid-stream.
-    Failed { id: u64, reason: String },
+    Failed { id: u64, trace: u64, reason: String },
+}
+
+impl StreamEvent {
+    /// The trace id the event is stamped with.
+    pub fn trace(&self) -> u64 {
+        match self {
+            StreamEvent::Token { trace, .. }
+            | StreamEvent::Done { trace, .. }
+            | StreamEvent::Failed { trace, .. } => *trace,
+        }
+    }
 }
 
 struct Submit {
     id: u64,
+    trace: u64,
     tokens: Vec<u32>,
     max_new: usize,
     class: Priority,
@@ -184,6 +227,9 @@ enum Cmd {
 /// One queued (or preempted-and-requeued) generation.
 struct Pending {
     id: u64,
+    /// Wire-level trace id; survives preempt/requeue so the flight
+    /// recorder's causal chain stays joinable on one key.
+    trace: u64,
     /// Prompt tokens; for a preemption requeue, prompt + generated
     /// tail — the full history the replay rebuilds.
     tokens: Vec<u32>,
@@ -216,6 +262,8 @@ struct Pending {
 /// One in-flight generation.
 struct Active {
     id: u64,
+    /// Wire-level trace id (see [`Pending::trace`]).
+    trace: u64,
     /// KV sequence handle (stripe-encoded).
     seq: u64,
     /// Prompt + generated tokens.
@@ -249,6 +297,7 @@ struct Active {
 /// and in-flight requests receive [`StreamEvent::Failed`]).
 pub struct Scheduler {
     tx: Sender<Cmd>,
+    flight: Arc<FlightRecorder>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -278,11 +327,20 @@ impl Scheduler {
         recalib: Option<Arc<Recalibrator>>,
     ) -> Scheduler {
         let (tx, rx) = mpsc::channel();
+        let flight = Arc::new(FlightRecorder::new(cfg.flight_capacity));
+        let fl = flight.clone();
         let join = std::thread::Builder::new()
             .name("intfa-sched-tick".into())
-            .spawn(move || tick_loop(rx, cache, model, cfg, metrics, recalib))
+            .spawn(move || tick_loop(rx, cache, model, cfg, metrics, recalib, fl))
             .expect("spawn scheduler tick loop");
-        Scheduler { tx, join: Some(join) }
+        Scheduler { tx, flight, join: Some(join) }
+    }
+
+    /// The scheduler's flight recorder: the last N admission /
+    /// preemption / eviction / swap decisions as structured events,
+    /// served by the `debug-dump` wire verb.
+    pub fn flight(&self) -> Arc<FlightRecorder> {
+        self.flight.clone()
     }
 
     /// Submit a prompt for continuous-batched generation at the
@@ -293,7 +351,8 @@ impl Scheduler {
         self.submit_with_priority(id, tokens, max_new, Priority::default())
     }
 
-    /// [`Scheduler::submit`] with an explicit [`Priority`] class.
+    /// [`Scheduler::submit`] with an explicit [`Priority`] class. The
+    /// trace id defaults to the request id.
     pub fn submit_with_priority(
         &self,
         id: u64,
@@ -301,9 +360,25 @@ impl Scheduler {
         max_new: usize,
         class: Priority,
     ) -> Receiver<StreamEvent> {
+        self.submit_traced(id, tokens, max_new, class, id)
+    }
+
+    /// [`Scheduler::submit_with_priority`] with an explicit wire-level
+    /// trace id: echoed on every [`StreamEvent`] and stamped into the
+    /// request's flight-recorder events, so one client-observed anomaly
+    /// resolves to the ticks and preempt/replay cycle that produced it.
+    pub fn submit_traced(
+        &self,
+        id: u64,
+        tokens: Vec<u32>,
+        max_new: usize,
+        class: Priority,
+        trace: u64,
+    ) -> Receiver<StreamEvent> {
         let (stx, srx) = mpsc::channel();
         let sub = Submit {
             id,
+            trace,
             tokens,
             max_new,
             class,
@@ -313,6 +388,7 @@ impl Scheduler {
         if self.tx.send(Cmd::Submit(sub)).is_err() {
             let _ = stx.send(StreamEvent::Failed {
                 id,
+                trace,
                 reason: "scheduler shut down".into(),
             });
         }
@@ -339,10 +415,13 @@ fn enqueue(
     lc: &Lifecycle,
     shed: &Counter,
     cfg: &SchedConfig,
+    flight: &FlightRecorder,
+    tick: u64,
 ) {
     let class = s.class;
     let pending = Pending {
         id: s.id,
+        trace: s.trace,
         tokens: s.tokens,
         max_new: s.max_new,
         generated: Vec::new(),
@@ -356,6 +435,11 @@ fn enqueue(
     if let Err((p, cause)) = queue.push(pending, class) {
         shed.inc();
         lc.record_shed(class);
+        let mut ev = FlightEvent::new(FlightEventKind::Shed, tick);
+        ev.id = p.id;
+        ev.trace = p.trace;
+        ev.class = class.rank() as u8;
+        flight.record(ev);
         let reason = match cause {
             ShedCause::SharedCap => format!("admission queue full ({} queued)", cfg.queue_cap),
             ShedCause::ClassCap => format!(
@@ -364,7 +448,7 @@ fn enqueue(
                 cfg.queue_cap_by_class[class.rank() as usize]
             ),
         };
-        let _ = p.stream.send(StreamEvent::Failed { id: p.id, reason });
+        let _ = p.stream.send(StreamEvent::Failed { id: p.id, trace: p.trace, reason });
     }
 }
 
@@ -375,6 +459,7 @@ fn tick_loop(
     cfg: SchedConfig,
     metrics: Arc<Registry>,
     recalib: Option<Arc<Recalibrator>>,
+    flight: Arc<FlightRecorder>,
 ) {
     let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(cfg.queue_cap, cfg.aging_ticks)
         .with_class_caps(cfg.queue_cap_by_class);
@@ -384,6 +469,8 @@ fn tick_loop(
     // e2e per class) — no-op when disabled, and never load-bearing:
     // the exactness contract requires identical streams either way
     let lc = if cfg.lifecycle { Lifecycle::new(&metrics) } else { Lifecycle::disabled() };
+    // tick-phase time attribution — same pure-observation contract
+    let prof = if cfg.profile { PhaseProfiler::new(&metrics) } else { PhaseProfiler::disabled() };
     let ticks = metrics.counter("sched.ticks");
     let uptime = metrics.gauge("sched.uptime_ticks");
     let tokens_out = metrics.counter("sched.tokens");
@@ -407,7 +494,25 @@ fn tick_loop(
     let kv_reused = metrics.gauge("kv.prefix.tokens_reused");
     let kv_evictions = metrics.gauge("kv.evictions");
     let kv_free = metrics.gauge("kv.blocks.free");
+    // radix hit depth (in blocks) per admission — value-scale, not µs
+    let prefix_hit_blocks = metrics.histogram("kv.prefix_hit_blocks");
+    // per-stripe pool visibility: a balanced global gauge can hide one
+    // saturated stripe (the router hashes prefixes, not load)
+    let stripe_occupancy: Vec<_> = (0..cache.stripes())
+        .map(|i| metrics.gauge(&format!("kv.stripe.{i}.occupancy")))
+        .collect();
+    let stripe_evictable: Vec<_> = (0..cache.stripes())
+        .map(|i| metrics.gauge(&format!("kv.stripe.{i}.evictable")))
+        .collect();
+    let flight_anomalies = metrics.counter("sched.flight.anomalies");
     let block_tokens = cache.config().block_tokens;
+    // previous-tick counter values: the flight recorder's anomaly
+    // check and its Evict/SwapFail events work on per-tick deltas
+    let mut last_shed: u64 = 0;
+    let mut last_preempts: u64 = 0;
+    let mut last_evictions: u64 = 0;
+    let mut last_swap_failed: u64 = 0;
+    let swap_failed = metrics.counter("calib.drift.swap_failed");
 
     let mut shutdown = false;
     loop {
@@ -420,7 +525,7 @@ fn tick_loop(
         // must not spin at kHz against an idle pool.
         if active.is_empty() {
             match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &lc, &shed, &cfg),
+                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &lc, &shed, &cfg, &flight, ticks.get()),
                 Ok(Cmd::Shutdown) => shutdown = true,
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
@@ -428,7 +533,7 @@ fn tick_loop(
         }
         loop {
             match rx.try_recv() {
-                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &lc, &shed, &cfg),
+                Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &lc, &shed, &cfg, &flight, ticks.get()),
                 Ok(Cmd::Shutdown) => shutdown = true,
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -443,6 +548,7 @@ fn tick_loop(
             for e in queue.drain_all() {
                 let _ = e.item.stream.send(StreamEvent::Failed {
                     id: e.item.id,
+                    trace: e.item.trace,
                     reason: "scheduler shut down".into(),
                 });
             }
@@ -450,6 +556,7 @@ fn tick_loop(
                 let _ = cache.free_sequence(a.seq);
                 let _ = a.stream.send(StreamEvent::Failed {
                     id: a.id,
+                    trace: a.trace,
                     reason: "scheduler shut down".into(),
                 });
             }
@@ -461,10 +568,12 @@ fn tick_loop(
 
         let t0 = Instant::now();
         ticks.inc();
-        uptime.set(ticks.get() as i64);
+        let tick = ticks.get();
+        uptime.set(tick as i64);
         let mut progressed = false;
 
         // ---- 1. admission: priority order, aging, preemption ----------
+        let t_phase = Instant::now();
         queue.age_tick();
         // per-stripe class bar: a deferred entry claims its stripe's
         // next headroom against strictly lower classes (and against
@@ -495,8 +604,14 @@ fn tick_loop(
             if is_empty {
                 let e = queue.remove(key).expect("ordered key is live");
                 rejected.inc();
+                let mut ev = FlightEvent::new(FlightEventKind::Reject, tick);
+                ev.id = e.item.id;
+                ev.trace = e.item.trace;
+                ev.class = class.rank() as u8;
+                flight.record(ev);
                 let _ = e.item.stream.send(StreamEvent::Failed {
                     id: e.item.id,
+                    trace: e.item.trace,
                     reason: "empty prompt".into(),
                 });
                 continue;
@@ -567,7 +682,16 @@ fn tick_loop(
                 // it recovered nothing (the victim's blocks were all
                 // shared), so the estimate is wrong — stop churning
                 let slack_before = price.headroom() as i64 - reserved as i64;
-                preempt(&cache, &mut active, vi, &mut queue, &preemptions, &preempt_tokens);
+                preempt(
+                    &cache,
+                    &mut active,
+                    vi,
+                    &mut queue,
+                    &preemptions,
+                    &preempt_tokens,
+                    &flight,
+                    tick,
+                );
                 reserved = reserved_blocks(&cache, &active, stripe, block_tokens);
                 price = {
                     let e = queue.get(key).expect("candidate still queued");
@@ -594,6 +718,8 @@ fn tick_loop(
                                 &mut queue,
                                 &preemptions,
                                 &preempt_tokens,
+                                &flight,
+                                tick,
                             ),
                             None => {
                                 deferred.inc();
@@ -616,8 +742,18 @@ fn tick_loop(
                         e.class,
                         e.item.queued_at.elapsed().as_micros() as u64,
                     );
+                    // radix hit depth for this admission, in blocks
+                    prefix_hit_blocks.observe((cached / block_tokens) as u64);
+                    let mut ev = FlightEvent::new(FlightEventKind::Admit, tick);
+                    ev.id = e.item.id;
+                    ev.trace = e.item.trace;
+                    ev.class = e.class.rank() as u8;
+                    ev.stripe = stripe as u32;
+                    ev.detail = price.cold as u64;
+                    flight.record(ev);
                     active.push(Active {
                         id: e.item.id,
+                        trace: e.item.trace,
                         seq,
                         tokens: e.item.tokens,
                         appended: cached,
@@ -635,6 +771,16 @@ fn tick_loop(
                 }
                 AdmissionVerdict::Defer => {
                     deferred.inc();
+                    {
+                        let e = queue.get(key).expect("ordered key is live");
+                        let mut ev = FlightEvent::new(FlightEventKind::Defer, tick);
+                        ev.id = e.item.id;
+                        ev.trace = e.item.trace;
+                        ev.class = e.class.rank() as u8;
+                        ev.stripe = stripe as u32;
+                        ev.detail = price.cold as u64;
+                        flight.record(ev);
+                    }
                     // claim this stripe's next headroom against lower
                     // *effective* ranks: equal-rank traffic may still
                     // overtake (price-aware reordering), and once this
@@ -645,8 +791,16 @@ fn tick_loop(
                 AdmissionVerdict::Reject => {
                     let e = queue.remove(key).expect("ordered key is live");
                     rejected.inc();
+                    let mut ev = FlightEvent::new(FlightEventKind::Reject, tick);
+                    ev.id = e.item.id;
+                    ev.trace = e.item.trace;
+                    ev.class = e.class.rank() as u8;
+                    ev.stripe = stripe as u32;
+                    ev.detail = (price.cached + price.cold) as u64;
+                    flight.record(ev);
                     let _ = e.item.stream.send(StreamEvent::Failed {
                         id: e.item.id,
+                        trace: e.item.trace,
                         reason: format!(
                             "admission rejected: total footprint {} blocks \
                              (cached {} + cold {}, prefill alone {}), stripe \
@@ -662,7 +816,10 @@ fn tick_loop(
             }
         }
 
+        prof.record_since(TickPhase::Admission, t_phase);
+
         // ---- 2. prefill chunks / append catch-up ----------------------
+        let t_phase = Instant::now();
         let mut remove: Vec<(usize, Option<String>)> = Vec::new();
         for (i, a) in active.iter_mut().enumerate() {
             let mut budget = cfg.prefill_chunk.min(a.tokens.len() - a.appended);
@@ -699,8 +856,10 @@ fn tick_loop(
             }
         }
         flush_removed(&cache, &mut active, &mut remove, &lc);
+        prof.record_since(TickPhase::Prefill, t_phase);
 
         // ---- 3. one batched decode call over every ready sequence -----
+        let t_phase = Instant::now();
         let ready: Vec<usize> = active
             .iter()
             .enumerate()
@@ -725,8 +884,10 @@ fn tick_loop(
             batch_size.observe(queries.len() as u64);
             cache.decode_batch(&queries, cfg.batch_workers)
         };
+        prof.record_since(TickPhase::Decode, t_phase);
 
         // ---- 4. stream tokens, append their K/V -----------------------
+        let t_phase = Instant::now();
         for (&i, out) in ready.iter().zip(&outs) {
             let a = &mut active[i];
             match out {
@@ -737,6 +898,7 @@ fn tick_loop(
                     progressed = true;
                     let send = a.stream.send(StreamEvent::Token {
                         id: a.id,
+                        trace: a.trace,
                         pos: pos + 1,
                         token: next,
                     });
@@ -790,6 +952,7 @@ fn tick_loop(
             }
         }
         flush_removed(&cache, &mut active, &mut remove, &lc);
+        prof.record_since(TickPhase::Stream, t_phase);
 
         queue_depth.set(queue.len() as i64);
         let by_class = queue.depth_by_class();
@@ -806,6 +969,16 @@ fn tick_loop(
         kv_reused.set(snap.stats.tokens_reused as i64);
         kv_evictions.set(snap.stats.evictions as i64);
         kv_free.set(snap.blocks_free as i64);
+        for (i, u) in snap.per_stripe.iter().enumerate() {
+            stripe_occupancy[i].set(u.occupied as i64);
+            stripe_evictable[i].set(u.evictable as i64);
+        }
+        if snap.stats.evictions > last_evictions {
+            let mut ev = FlightEvent::new(FlightEventKind::Evict, tick);
+            ev.detail = snap.stats.evictions - last_evictions;
+            flight.record(ev);
+            last_evictions = snap.stats.evictions;
+        }
 
         // ---- 6. online re-calibration -------------------------------
         // evaluate drift on a tick cadence; a sustained-drift window
@@ -813,12 +986,49 @@ fn tick_loop(
         // hot-swaps every stripe's scales. New admissions (next tick's
         // step 1) snapshot the new config; everything already admitted
         // keeps its grid — the swap is invisible to live streams.
+        let t_phase = Instant::now();
         if let Some(rc) = &recalib {
-            if ticks.get() % rc.check_every() == 0 {
-                rc.check(&|plan| cache.swap_scales(plan));
+            if tick % rc.check_every() == 0 {
+                if let Some(epoch) = rc.check(&|plan| cache.swap_scales(plan)) {
+                    let mut ev = FlightEvent::new(FlightEventKind::HotSwap, tick);
+                    ev.detail = epoch;
+                    flight.record(ev);
+                }
             }
         }
-        tick_us.observe_us(t0.elapsed().as_micros() as u64);
+        prof.record_since(TickPhase::Recalib, t_phase);
+        let tick_elapsed_us = t0.elapsed().as_micros() as u64;
+        tick_us.observe_us(tick_elapsed_us);
+
+        // ---- 7. flight-recorder anomaly check -----------------------
+        // per-tick deltas of the burst counters; latched per anomaly
+        // kind so one sustained storm dumps exactly once
+        let swap_fails = swap_failed.get().saturating_sub(last_swap_failed);
+        if swap_fails > 0 {
+            let mut ev = FlightEvent::new(FlightEventKind::SwapFail, tick);
+            ev.detail = swap_fails;
+            flight.record(ev);
+            last_swap_failed = swap_failed.get();
+        }
+        if tick_elapsed_us >= flight.thresholds().tick_overrun_us {
+            let mut ev = FlightEvent::new(FlightEventKind::TickOverrun, tick);
+            ev.detail = tick_elapsed_us;
+            flight.record(ev);
+        }
+        let sheds = shed.get().saturating_sub(last_shed);
+        let preempts = preemptions.get().saturating_sub(last_preempts);
+        last_shed = shed.get();
+        last_preempts = preemptions.get();
+        let fired = flight.tick_check(tick, sheds, preempts, swap_fails, tick_elapsed_us);
+        for a in &fired {
+            flight_anomalies.inc();
+            crate::log_warn!(
+                "sched: flight-recorder anomaly '{}' at tick {} ({} events buffered)",
+                a.name(),
+                tick,
+                flight.len()
+            );
+        }
 
         // every in-flight sequence is stalled on pool pressure: back off
         // instead of spinning hot until neighbors release blocks
@@ -869,6 +1079,7 @@ fn reserved_blocks(
 /// aging credit carried over) for bit-identical replay on re-admission
 /// — the preemption-by-recompute primitive shared by the slot- and
 /// block-pressure paths.
+#[allow(clippy::too_many_arguments)]
 fn preempt(
     cache: &StripedKvCache,
     active: &mut Vec<Active>,
@@ -876,18 +1087,36 @@ fn preempt(
     queue: &mut AdmissionQueue<Pending>,
     preemptions: &Counter,
     preempt_tokens: &Counter,
+    flight: &FlightRecorder,
+    tick: u64,
 ) {
     let v = active.remove(victim);
     preemptions.inc();
     preempt_tokens.add(v.appended as u64);
+    let stripe = cache.stripe_of_seq(v.seq) as u32;
+    let mut ev = FlightEvent::new(FlightEventKind::Preempt, tick);
+    ev.id = v.id;
+    ev.trace = v.trace;
+    ev.class = v.class.rank() as u8;
+    ev.stripe = stripe;
+    ev.detail = v.appended as u64;
+    flight.record(ev);
     // pin the victim's admission-time grid before releasing the
     // sequence: replay must rebuild bit-identical blocks even if a
     // calibration hot-swap lands before re-admission
     let cfg = cache.seq_cfg(v.seq);
     let _ = cache.free_sequence(v.seq);
+    let mut rq = FlightEvent::new(FlightEventKind::Requeue, tick);
+    rq.id = v.id;
+    rq.trace = v.trace;
+    rq.class = v.class.rank() as u8;
+    rq.stripe = stripe;
+    rq.detail = v.tokens.len() as u64;
+    flight.record(rq);
     queue.requeue(
         Pending {
             id: v.id,
+            trace: v.trace,
             tokens: v.tokens,
             max_new: v.max_new,
             generated: v.generated,
@@ -962,9 +1191,15 @@ fn flush_removed(
         let _ = match reason {
             None => {
                 lc.record_e2e(a.class, a.enqueued_at.elapsed().as_micros() as u64);
-                a.stream.send(StreamEvent::Done { id: a.id, tokens: a.generated })
+                a.stream.send(StreamEvent::Done {
+                    id: a.id,
+                    trace: a.trace,
+                    tokens: a.generated,
+                })
             }
-            Some(reason) => a.stream.send(StreamEvent::Failed { id: a.id, reason }),
+            Some(reason) => {
+                a.stream.send(StreamEvent::Failed { id: a.id, trace: a.trace, reason })
+            }
         };
     }
 }

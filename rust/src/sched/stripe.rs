@@ -313,10 +313,24 @@ impl StripedKvCache {
             snap.stats.tokens_reused += st.tokens_reused;
             snap.stats.evictions += st.evictions;
             snap.stats.cow_copies += st.cow_copies;
-            snap.blocks_free += g.blocks_free();
+            let free = g.blocks_free();
+            snap.blocks_free += free;
             snap.blocks_shared += g.blocks_shared();
+            snap.per_stripe.push(StripeUsage {
+                occupied: g.capacity_blocks() - free,
+                evictable: g.evictable_blocks(),
+            });
         }
         snap
+    }
+
+    /// Install a kernel profiler handle into every stripe: appends and
+    /// decode views created from here on attribute their block-quantize
+    /// and split-K pass times to `engine.kernel_us.*`.
+    pub fn install_kernel_profiler(&self, prof: Arc<crate::obs::KernelProfiler>) {
+        for s in 0..self.stripes.len() {
+            self.lock(s).set_kernel_profiler(prof.clone());
+        }
     }
 
     /// Aggregate sharing/reuse counters across stripes.
@@ -341,11 +355,24 @@ impl StripedKvCache {
 
 /// Aggregated cross-stripe state from one [`StripedKvCache::snapshot`]
 /// pass.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct KvSnapshot {
     pub stats: KvStats,
     pub blocks_free: usize,
     pub blocks_shared: usize,
+    /// Per-stripe pool usage, indexed by stripe (the scheduler exports
+    /// these as `kv.stripe.{i}.occupancy` / `.evictable` gauges).
+    pub per_stripe: Vec<StripeUsage>,
+}
+
+/// One stripe's pool usage within a [`KvSnapshot`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StripeUsage {
+    /// Blocks currently allocated (capacity − free).
+    pub occupied: usize,
+    /// Allocated blocks with no live reference (trie-cached only):
+    /// what an eviction sweep could reclaim right now.
+    pub evictable: usize,
 }
 
 #[cfg(test)]

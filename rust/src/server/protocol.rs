@@ -27,12 +27,20 @@ pub enum WireRequest {
     /// admitted first and may preempt lower classes under KV-pool
     /// pressure (preempted sequences are replayed bit-identically, so
     /// clients only ever observe scheduling latency, never different
-    /// tokens).
-    Generate { tokens: Vec<u32>, max_new: usize, priority: Priority },
+    /// tokens). The optional `trace` field attaches a caller-supplied
+    /// trace id that is echoed on every streamed line and stamped into
+    /// lifecycle and flight-recorder events server-side; when omitted
+    /// the server assigns the request id so streams are always
+    /// correlatable.
+    Generate { tokens: Vec<u32>, max_new: usize, priority: Priority, trace: Option<u64> },
     /// Online re-calibration: status snapshot, or an operator-forced
     /// scale hot-swap (`{"type":"recalib","force":true}`). Swaps never
     /// change tokens of already-admitted streams (the epoch invariant).
     Recalib { force: bool },
+    /// Dump the scheduler's flight recorder (ring buffer of structured
+    /// admission/preemption/eviction events) as JSON — the on-demand
+    /// twin of the automatic anomaly dump.
+    DebugDump,
     Ping,
     Metrics,
 }
@@ -50,6 +58,8 @@ pub enum WireResponse {
     Metrics(Json),
     /// Re-calibration status snapshot (after a force-swap when asked).
     Recalib(Json),
+    /// Flight-recorder dump (`debug-dump` verb).
+    FlightDump(Json),
     Error(String),
 }
 
@@ -106,6 +116,7 @@ pub fn decode_request(line: &str) -> Result<WireRequest, String> {
     match j.at("type").as_str() {
         Some("ping") => Ok(WireRequest::Ping),
         Some("metrics") => Ok(WireRequest::Metrics),
+        Some("debug-dump") => Ok(WireRequest::DebugDump),
         Some("recalib") => Ok(WireRequest::Recalib {
             force: j.at("force").as_bool() == Some(true),
         }),
@@ -138,10 +149,24 @@ pub fn decode_request(line: &str) -> Result<WireRequest, String> {
                     "bad priority (interactive | batch | best-effort)".to_string()
                 })?
             };
+            // trace ids are u64 (like seq_id): parsed via usize, not
+            // u32_field — callers commonly derive them from clocks or
+            // external span ids that exceed 32 bits
+            let tj = j.at("trace");
+            let trace = if tj.is_null() {
+                None
+            } else {
+                Some(
+                    tj.as_usize()
+                        .map(|x| x as u64)
+                        .ok_or_else(|| "trace: expected an unsigned integer".to_string())?,
+                )
+            };
             Ok(WireRequest::Generate {
                 tokens: u32_array(&j, "tokens")?,
                 max_new: j.at("max_new").as_usize().ok_or("missing max_new")?,
                 priority,
+                trace,
             })
         }
         Some(other) => Err(format!("unknown request type {other:?}")),
@@ -150,11 +175,14 @@ pub fn decode_request(line: &str) -> Result<WireRequest, String> {
 }
 
 /// One streamed token line (`generate` verb): not a terminal response —
-/// the client keeps reading until a line without `"stream"`.
-pub fn encode_stream_token(id: u64, pos: usize, token: u32) -> String {
+/// the client keeps reading until a line without `"stream"`. Every line
+/// echoes the request's trace id so multiplexing proxies can correlate
+/// tokens with server-side lifecycle/flight events.
+pub fn encode_stream_token(id: u64, trace: u64, pos: usize, token: u32) -> String {
     Json::obj(vec![
         ("stream", Json::Bool(true)),
         ("id", Json::num(id as f64)),
+        ("trace", Json::num(trace as f64)),
         ("pos", Json::num(pos as f64)),
         ("token", Json::num(token as f64)),
     ])
@@ -162,12 +190,13 @@ pub fn encode_stream_token(id: u64, pos: usize, token: u32) -> String {
 }
 
 /// Terminal line of a `generate` stream.
-pub fn encode_generate_done(id: u64, result: Result<&[u32], &str>) -> String {
+pub fn encode_generate_done(id: u64, trace: u64, result: Result<&[u32], &str>) -> String {
     match result {
         Ok(tokens) => Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("done", Json::Bool(true)),
             ("id", Json::num(id as f64)),
+            ("trace", Json::num(trace as f64)),
             (
                 "tokens",
                 Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
@@ -179,6 +208,7 @@ pub fn encode_generate_done(id: u64, result: Result<&[u32], &str>) -> String {
             ("ok", Json::Bool(false)),
             ("done", Json::Bool(true)),
             ("id", Json::num(id as f64)),
+            ("trace", Json::num(trace as f64)),
             ("error", Json::str(e)),
         ])
         .to_string(),
@@ -205,6 +235,11 @@ pub fn encode_response(resp: &WireResponse) -> String {
         WireResponse::Recalib(s) => Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("recalib", s.clone()),
+        ])
+        .to_string(),
+        WireResponse::FlightDump(d) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("flight", d.clone()),
         ])
         .to_string(),
         WireResponse::Error(e) => Json::obj(vec![
@@ -375,13 +410,28 @@ mod tests {
     #[test]
     fn decode_and_encode_generate() {
         match decode_request(r#"{"type":"generate","tokens":[1,2,3],"max_new":8}"#).unwrap() {
-            WireRequest::Generate { tokens, max_new, priority } => {
+            WireRequest::Generate { tokens, max_new, priority, trace } => {
                 assert_eq!(tokens, vec![1, 2, 3]);
                 assert_eq!(max_new, 8);
                 assert_eq!(priority, Priority::Batch, "omitted priority defaults to batch");
+                assert_eq!(trace, None, "omitted trace stays unset (server assigns)");
             }
             other => panic!("{other:?}"),
         }
+        // trace ids exceed u32 — seq_id-width parse, echoed verbatim
+        match decode_request(
+            r#"{"type":"generate","tokens":[1],"max_new":2,"trace":8589934592}"#,
+        )
+        .unwrap()
+        {
+            WireRequest::Generate { trace, .. } => assert_eq!(trace, Some(8_589_934_592)),
+            other => panic!("{other:?}"),
+        }
+        assert!(
+            decode_request(r#"{"type":"generate","tokens":[1],"max_new":2,"trace":"abc"}"#)
+                .is_err(),
+            "non-numeric trace is rejected, not ignored"
+        );
         match decode_request(
             r#"{"type":"generate","tokens":[4],"max_new":2,"priority":"interactive"}"#,
         )
@@ -410,24 +460,44 @@ mod tests {
         assert!(decode_request(r#"{"type":"generate","tokens":[1]}"#).is_err());
         assert!(decode_request(r#"{"type":"generate","max_new":4}"#).is_err());
 
-        let line = encode_stream_token(7, 12, 400);
+        let line = encode_stream_token(7, 99, 12, 400);
         let j = crate::util::json::parse(&line).unwrap();
         assert_eq!(j.at("stream").as_bool(), Some(true));
+        assert_eq!(j.at("trace").as_i64(), Some(99), "every token line echoes the trace id");
         assert_eq!(j.at("pos").as_i64(), Some(12));
         assert_eq!(j.at("token").as_i64(), Some(400));
         assert!(!line.contains('\n'));
 
-        let done = encode_generate_done(7, Ok(&[4, 5, 6]));
+        let done = encode_generate_done(7, 99, Ok(&[4, 5, 6]));
         let j = crate::util::json::parse(&done).unwrap();
         assert_eq!(j.at("ok").as_bool(), Some(true));
         assert_eq!(j.at("done").as_bool(), Some(true));
+        assert_eq!(j.at("trace").as_i64(), Some(99));
         assert_eq!(j.at("count").as_i64(), Some(3));
         assert!(j.at("stream").is_null(), "terminal line carries no stream flag");
 
-        let failed = encode_generate_done(7, Err("admission rejected"));
+        let failed = encode_generate_done(7, 99, Err("admission rejected"));
         let j = crate::util::json::parse(&failed).unwrap();
         assert_eq!(j.at("ok").as_bool(), Some(false));
+        assert_eq!(j.at("trace").as_i64(), Some(99), "error terminals keep the trace id too");
         assert!(j.at("error").as_str().unwrap().contains("rejected"));
+    }
+
+    #[test]
+    fn decode_and_encode_debug_dump() {
+        assert!(matches!(
+            decode_request(r#"{"type":"debug-dump"}"#),
+            Ok(WireRequest::DebugDump)
+        ));
+        let dump = crate::util::json::Json::obj(vec![
+            ("capacity", crate::util::json::Json::num(16.0)),
+            ("events", crate::util::json::Json::Arr(vec![])),
+        ]);
+        let line = encode_response(&WireResponse::FlightDump(dump));
+        let j = crate::util::json::parse(&line).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(true));
+        assert_eq!(j.at("flight").at("capacity").as_i64(), Some(16));
+        assert!(j.at("flight").at("events").as_arr().is_some());
     }
 
     #[test]

@@ -123,6 +123,10 @@ fn handle_connection(
             Err(e) => WireResponse::Error(e),
             Ok(WireRequest::Ping) => WireResponse::Pong,
             Ok(WireRequest::Metrics) => WireResponse::Metrics(engine.metrics.snapshot()),
+            Ok(WireRequest::DebugDump) => match engine.debug_dump() {
+                Ok(dump) => WireResponse::FlightDump(dump),
+                Err(e) => WireResponse::Error(e),
+            },
             Ok(WireRequest::Recalib { force }) => {
                 let forced = if force { engine.recalib_force().map(|_| ()) } else { Ok(()) };
                 match forced.and_then(|()| {
@@ -157,10 +161,10 @@ fn handle_connection(
                 Ok(()) => WireResponse::Done,
                 Err(e) => WireResponse::Error(e),
             },
-            Ok(WireRequest::Generate { tokens, max_new, priority }) => {
+            Ok(WireRequest::Generate { tokens, max_new, priority, trace }) => {
                 // streaming verb: tokens go out line by line as their
                 // scheduler ticks complete, then one terminal line
-                stream_generate(&mut writer, &engine, tokens, max_new, priority)?;
+                stream_generate(&mut writer, &engine, tokens, max_new, priority, trace)?;
                 continue;
             }
         };
@@ -179,28 +183,35 @@ fn stream_generate(
     tokens: Vec<u32>,
     max_new: usize,
     priority: crate::sched::Priority,
+    trace: Option<u64>,
 ) -> std::io::Result<()> {
     use crate::sched::StreamEvent;
     use crate::server::protocol::{encode_generate_done, encode_stream_token};
-    let (id, rx) = match engine.generate_with_priority(tokens, max_new, priority) {
+    let (id, rx) = match engine.generate_traced(tokens, max_new, priority, trace) {
         Ok(pair) => pair,
         Err(e) => {
-            writer.write_all(encode_generate_done(0, Err(&e)).as_bytes())?;
+            writer.write_all(encode_generate_done(0, trace.unwrap_or(0), Err(&e)).as_bytes())?;
             writer.write_all(b"\n")?;
             return writer.flush();
         }
     };
     loop {
+        // every line echoes the event's trace id (caller-supplied or
+        // server-assigned) so clients can correlate with flight dumps
         let line = match rx.recv() {
-            Ok(StreamEvent::Token { pos, token, .. }) => {
-                writer.write_all(encode_stream_token(id, pos, token).as_bytes())?;
+            Ok(StreamEvent::Token { trace, pos, token, .. }) => {
+                writer.write_all(encode_stream_token(id, trace, pos, token).as_bytes())?;
                 writer.write_all(b"\n")?;
                 writer.flush()?;
                 continue;
             }
-            Ok(StreamEvent::Done { tokens, .. }) => encode_generate_done(id, Ok(&tokens)),
-            Ok(StreamEvent::Failed { reason, .. }) => encode_generate_done(id, Err(&reason)),
-            Err(_) => encode_generate_done(id, Err("stream dropped")),
+            Ok(StreamEvent::Done { trace, tokens, .. }) => {
+                encode_generate_done(id, trace, Ok(&tokens))
+            }
+            Ok(StreamEvent::Failed { trace, reason, .. }) => {
+                encode_generate_done(id, trace, Err(&reason))
+            }
+            Err(_) => encode_generate_done(id, trace.unwrap_or(id), Err("stream dropped")),
         };
         writer.write_all(line.as_bytes())?;
         writer.write_all(b"\n")?;
@@ -259,6 +270,16 @@ impl Client {
             fields.push(("force", Json::Bool(true)));
         }
         self.call_json(&Json::obj(fields))
+    }
+
+    /// Fetch the scheduler's flight-recorder dump (`debug-dump` verb).
+    /// Returns the full response line: on success `flight` holds the
+    /// dump (`capacity` / `recorded` / `dropped` / `anomalies` /
+    /// `events`); `ok:false` with `error` when the server runs without
+    /// the scheduler.
+    pub fn debug_dump(&mut self) -> std::io::Result<crate::util::json::Json> {
+        use crate::util::json::Json;
+        self.call_json(&Json::obj(vec![("type", Json::str("debug-dump"))]))
     }
 
     /// Submit an attention request; returns the parsed response JSON.
@@ -379,6 +400,25 @@ impl Client {
         priority: &str,
         mut on_token: impl FnMut(usize, u32),
     ) -> std::io::Result<crate::util::json::Json> {
+        self.generate_streaming_traced(tokens, max_new, priority, None, |_, pos, tok| {
+            on_token(pos, tok)
+        })
+    }
+
+    /// Fully general streaming generate: explicit priority class plus
+    /// an optional caller-supplied trace id. `on_token` receives
+    /// `(trace, pos, token)` per streamed line — the trace is whatever
+    /// the server echoes (the supplied id, or the server-assigned
+    /// request id when `trace` is `None`). The terminal line (returned)
+    /// also carries `trace`.
+    pub fn generate_streaming_traced(
+        &mut self,
+        tokens: &[u32],
+        max_new: usize,
+        priority: &str,
+        trace: Option<u64>,
+        mut on_token: impl FnMut(u64, usize, u32),
+    ) -> std::io::Result<crate::util::json::Json> {
         use crate::util::json::Json;
         let mut fields = vec![
             ("type", Json::str("generate")),
@@ -390,6 +430,9 @@ impl Client {
         ];
         if !priority.is_empty() {
             fields.push(("priority", Json::str(priority)));
+        }
+        if let Some(t) = trace {
+            fields.push(("trace", Json::num(t as f64)));
         }
         let req = Json::obj(fields);
         self.writer.write_all(req.to_string().as_bytes())?;
@@ -410,7 +453,8 @@ impl Client {
             if j.at("stream").as_bool() == Some(true) {
                 if let (Some(pos), Some(tok)) = (j.at("pos").as_usize(), j.at("token").as_usize())
                 {
-                    on_token(pos, tok as u32);
+                    let tr = j.at("trace").as_usize().map(|x| x as u64).unwrap_or(0);
+                    on_token(tr, pos, tok as u32);
                 }
                 continue;
             }

@@ -1,0 +1,108 @@
+//! docs/OBSERVABILITY.md lint: every metric family a real load run
+//! registers must be documented.
+//!
+//! The doc catalogues families as backtick-quoted names, with `{...}`
+//! segments for templated labels (`sched.ttft_us.{class}`,
+//! `kv.stripe.{i}.occupancy`). This test drives a full loadgen run
+//! against an in-process server, enumerates the live registry, and
+//! fails on any family the doc does not cover — a new metric ships
+//! with its documentation or not at all.
+
+use int_flashattention::attention::Variant;
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::kv::CacheConfig;
+use int_flashattention::loadgen::{self, LoadConfig};
+use int_flashattention::sched::{HashModel, SchedConfig};
+use int_flashattention::server::Server;
+use std::sync::Arc;
+
+fn doc_text() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/OBSERVABILITY.md");
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// Backtick-quoted tokens that look like metric families: dotted, no
+/// whitespace. Over-collecting (flags, JSON keys) is harmless — extra
+/// templates can only make the lint more permissive about names that
+/// never go live.
+fn doc_families(doc: &str) -> Vec<String> {
+    doc.split('`')
+        .skip(1)
+        .step_by(2)
+        .filter(|t| t.contains('.') && !t.contains(char::is_whitespace))
+        .map(str::to_string)
+        .collect()
+}
+
+/// `name` matches `template` when the dotted segments align and each
+/// template segment is either literal-equal or a `{...}` placeholder.
+fn matches_template(name: &str, template: &str) -> bool {
+    let n: Vec<&str> = name.split('.').collect();
+    let t: Vec<&str> = template.split('.').collect();
+    n.len() == t.len()
+        && n.iter()
+            .zip(t.iter())
+            .all(|(ns, ts)| ns == ts || (ts.starts_with('{') && ts.ends_with('}')))
+}
+
+#[test]
+fn template_matching_covers_classes_and_stripes() {
+    assert!(matches_template("sched.ttft_us.interactive", "sched.ttft_us.{class}"));
+    assert!(matches_template("kv.stripe.3.occupancy", "kv.stripe.{i}.occupancy"));
+    assert!(matches_template("sched.ticks", "sched.ticks"));
+    assert!(!matches_template("sched.ticks.extra", "sched.ticks"));
+    assert!(!matches_template("kv.stripe.3.evictable", "kv.stripe.{i}.occupancy"));
+}
+
+#[test]
+fn every_live_metric_family_is_documented() {
+    let mk = |variant| Bucket {
+        variant,
+        batch: 2,
+        heads: 2,
+        seq: 32,
+        head_dim: 8,
+        causal: true,
+        artifact: String::new(),
+    };
+    let router =
+        BucketRouter::new(vec![mk(Variant::Int8), mk(Variant::Fp16), mk(Variant::HalfInt8)]);
+    let cfg = CacheConfig { block_tokens: 8, max_blocks: 64, ..CacheConfig::new(2, 8) };
+    let engine = Arc::new(
+        Engine::new(
+            router,
+            Arc::new(NativeBackend { threads: 1 }),
+            EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+        )
+        .with_kv_striped(cfg, 2, 2)
+        .with_sched(Arc::new(HashModel::new(2, 8)), SchedConfig::default())
+        .expect("kv attached"),
+    );
+    let registry = engine.metrics.clone();
+    let server = Server::bind(engine, "127.0.0.1:0").expect("bind");
+    let (handle, join) = server.start();
+
+    // a full (small) deterministic load run: multi-turn sessions,
+    // mixed classes, shared system prompts — the serving-path families
+    let load = LoadConfig { sessions: 4, turns: 2, ..LoadConfig::default() };
+    let plan = loadgen::plan(&load);
+    let report = loadgen::run(&handle.addr().to_string(), &load, &plan);
+    assert!(report.turns_ok >= 1, "load run produced no traffic");
+    handle.shutdown();
+    join.join().unwrap();
+
+    let doc = doc_text();
+    let templates = doc_families(&doc);
+    assert!(templates.len() >= 40, "doc catalogue looks truncated: {} entries", templates.len());
+    let missing: Vec<String> = registry
+        .family_names()
+        .into_iter()
+        .filter(|name| !templates.iter().any(|t| matches_template(name, t)))
+        .collect();
+    assert!(
+        missing.is_empty(),
+        "families live in the registry but missing from docs/OBSERVABILITY.md: {missing:?}"
+    );
+}

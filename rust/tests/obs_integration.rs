@@ -1,19 +1,24 @@
-//! obs/ integration: request-lifecycle latency tracing and the
-//! Prometheus scrape endpoint against a live scheduler.
+//! obs/ integration: request-lifecycle latency tracing, the tick-phase
+//! and kernel profilers, the flight recorder, and the Prometheus
+//! scrape endpoint against a live scheduler.
 //!
-//! Three properties:
+//! The properties:
 //!
 //!   - TTFT is a *sequence* statistic, not an admission statistic: a
 //!     preempted-and-replayed victim records it exactly once, and its
 //!     inter-token gaps keep counting across the preemption.
 //!   - Observation never reschedules: token streams are bit-identical
-//!     with lifecycle tracing on and off, and a disabled lifecycle
-//!     registers no histogram families at all.
+//!     with lifecycle tracing — and with profiling — on and off, and a
+//!     disabled collector registers no histogram families at all.
+//!   - The flight recorder's dump carries the causal event chain
+//!     (admit → preempt → requeue → re-admit) for a preempted trace
+//!     id, and a forced preemption storm fires the anomaly snapshot.
 //!   - The scrape endpoint serves the lifecycle families for real
 //!     traffic as valid Prometheus text, class labels and all.
 
 use int_flashattention::coordinator::metrics::Registry;
 use int_flashattention::kv::CacheConfig;
+use int_flashattention::obs::flight::FlightEventKind;
 use int_flashattention::obs::prom::validate_exposition;
 use int_flashattention::sched::{
     HashModel, Priority, SchedConfig, Scheduler, StreamEvent, StripedKvCache,
@@ -164,5 +169,266 @@ fn scrape_serves_lifecycle_series_for_live_traffic() {
         "sched_uptime_ticks",
     ] {
         assert!(body.contains(needle), "missing {needle:?} in:\n{body}");
+    }
+}
+
+#[test]
+fn streams_are_bit_identical_with_profiler_on_and_off() {
+    // mirror of the lifecycle bit-identity test for the tick-phase
+    // profiler: `--no-profile` must be pure observation removal
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let prompts: Vec<(Vec<u32>, usize)> = (0..4u32)
+        .map(|i| {
+            let base = (i + 1) * 100;
+            ((base..base + 6 + i).collect(), 3 + i as usize)
+        })
+        .collect();
+    let classes = [
+        Priority::Interactive,
+        Priority::Batch,
+        Priority::BestEffort,
+        Priority::Batch,
+    ];
+    let run = |profile: bool| -> (Vec<Vec<u32>>, Arc<Registry>) {
+        let metrics = Arc::new(Registry::default());
+        let cache = Arc::new(StripedKvCache::new(cache_cfg(64), 2));
+        let sched = Scheduler::start(
+            cache,
+            model.clone(),
+            SchedConfig { profile, ..SchedConfig::default() },
+            metrics.clone(),
+        );
+        let rxs: Vec<Receiver<StreamEvent>> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, (p, m))| sched.submit_with_priority(i as u64, p.clone(), *m, classes[i]))
+            .collect();
+        let streams = rxs
+            .into_iter()
+            .map(|rx| drain(rx).expect("stream completes"))
+            .collect();
+        (streams, metrics)
+    };
+    let (on, with_prof) = run(true);
+    let (off, without_prof) = run(false);
+    assert_eq!(on, off, "profiling must never change token streams");
+    // every phase the traffic exercised has samples
+    for phase in ["admission", "prefill", "decode", "stream"] {
+        let name = format!("sched.phase_us.{phase}");
+        assert!(with_prof.histogram(&name).count() >= 1, "no samples for {name}");
+    }
+    let clean = without_prof.histograms().iter().all(|(name, _)| {
+        !name.starts_with("sched.phase_us") && !name.starts_with("engine.kernel_us")
+    });
+    assert!(clean, "disabled profiler must not register families");
+}
+
+#[test]
+fn kernel_profiler_times_engine_kernels_without_changing_tokens() {
+    // the engine path installs the kernel profiler into the striped
+    // cache: block-quantize / split-K pass timings appear, and tokens
+    // stay bit-identical with profiling off
+    use int_flashattention::attention::Variant;
+    use int_flashattention::coordinator::batcher::BatchPolicy;
+    use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+    use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+
+    let build = |profile: bool| {
+        let router = BucketRouter::new(vec![Bucket {
+            variant: Variant::Int8,
+            batch: 2,
+            heads: HEADS,
+            seq: 32,
+            head_dim: HEAD_DIM,
+            causal: true,
+            artifact: String::new(),
+        }]);
+        Engine::new(
+            router,
+            Arc::new(NativeBackend { threads: 1 }),
+            EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+        )
+        .with_kv_striped(cache_cfg(64), 2, 2)
+        .with_sched(
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig { profile, ..SchedConfig::default() },
+        )
+        .expect("kv attached")
+    };
+    let on = build(true);
+    let prompt: Vec<u32> = (100..110).collect();
+    let t_on = on.generate_blocking(prompt.clone(), 6).expect("generates");
+    assert_eq!(t_on.len(), 6);
+    for kernel in ["block_quantize", "splitk_pass1", "splitk_pass2"] {
+        let name = format!("engine.kernel_us.{kernel}");
+        assert!(on.metrics.histogram(&name).count() >= 1, "no samples for {name}");
+    }
+    assert!(on.metrics.histogram("sched.phase_us.decode").count() >= 1);
+
+    let off = build(false);
+    let t_off = off.generate_blocking(prompt, 6).expect("generates");
+    assert_eq!(t_on, t_off, "kernel profiling must never change tokens");
+    let clean = off.metrics.histograms().iter().all(|(name, _)| {
+        !name.starts_with("engine.kernel_us") && !name.starts_with("sched.phase_us")
+    });
+    assert!(clean, "disabled profiler must not register families");
+}
+
+#[test]
+fn flight_dump_carries_the_causal_chain_for_a_preempted_trace() {
+    // same pressure geometry as the TTFT test, but with explicit trace
+    // ids: the flight recorder must hold the victim's full causal
+    // chain — admit, preempt, requeue, replay admit — in seq order
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let cache = Arc::new(StripedKvCache::new(cache_cfg(24), 1));
+    let metrics = Arc::new(Registry::default());
+    let sched = Scheduler::start(cache, model, SchedConfig::default(), metrics.clone());
+
+    let victim_prompt: Vec<u32> = (3000..3008).collect();
+    let victim = sched.submit_traced(1, victim_prompt, 80, Priority::BestEffort, 1111);
+    match victim.recv().expect("victim streams before preemption") {
+        StreamEvent::Token { trace, .. } => assert_eq!(trace, 1111),
+        other => panic!("expected a token, got {other:?}"),
+    }
+    let agg_prompt: Vec<u32> = (4000..4012).collect();
+    let agg = sched.submit_traced(2, agg_prompt, 25, Priority::Interactive, 2222);
+    drain(agg).expect("aggressor completes");
+    drain(victim).expect("victim completes after replay");
+    assert!(metrics.counter("sched.preemptions").get() >= 1);
+
+    let flight = sched.flight();
+    let events = flight.events();
+    let seqs = |kind: FlightEventKind, trace: u64| -> Vec<u64> {
+        events
+            .iter()
+            .filter(|e| e.kind == kind && e.trace == trace)
+            .map(|e| e.seq)
+            .collect()
+    };
+    let admits = seqs(FlightEventKind::Admit, 1111);
+    let preempts = seqs(FlightEventKind::Preempt, 1111);
+    let requeues = seqs(FlightEventKind::Requeue, 1111);
+    assert!(admits.len() >= 2, "initial + replay admissions: {admits:?}");
+    assert!(!preempts.is_empty(), "preemption recorded");
+    assert_eq!(requeues.len(), preempts.len(), "every preempt requeues");
+    assert!(admits[0] < preempts[0], "admitted before preempted");
+    assert!(preempts[0] < requeues[0], "preempt precedes its requeue");
+    assert!(admits.iter().any(|s| *s > requeues[0]), "replay admission follows the requeue");
+    assert!(
+        !seqs(FlightEventKind::Admit, 2222).is_empty(),
+        "aggressor admitted under its own trace"
+    );
+
+    // the wire payload exposes the same chain and round-trips
+    let dump = flight.dump_json();
+    assert_eq!(dump.at("capacity").as_usize(), Some(256));
+    assert!(dump.at("recorded").as_usize().unwrap() >= events.len());
+    let json_events = dump.at("events").as_arr().expect("events array");
+    assert!(json_events.iter().any(|e| {
+        e.at("kind").as_str() == Some("preempt") && e.at("trace").as_usize() == Some(1111)
+    }));
+    let text = dump.to_string();
+    let back = int_flashattention::util::json::parse(&text).expect("dump parses");
+    assert_eq!(back, dump);
+}
+
+#[test]
+fn preempt_storm_fires_one_anomaly_snapshot_with_the_chain() {
+    // four BestEffort victims fill the stripe; an Interactive
+    // aggressor sized one block short of the whole pool can only fit
+    // by evicting all four in a single admission tick — at the default
+    // preempt_storm threshold (4) that fires exactly one anomaly dump
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let cache = Arc::new(StripedKvCache::new(cache_cfg(64), 1));
+    let metrics = Arc::new(Registry::default());
+    let sched = Scheduler::start(
+        cache,
+        model,
+        SchedConfig { flight_capacity: 4096, ..SchedConfig::default() },
+        metrics.clone(),
+    );
+
+    // victims: 4 + 60 = 64 tokens → 16 of 64 blocks each; all four
+    // resident together exactly fill the pool, so none self-preempt
+    let victims: Vec<Receiver<StreamEvent>> = (0..4u64)
+        .map(|i| {
+            let base = 5000 + i as u32 * 100;
+            let prompt: Vec<u32> = (base..base + 4).collect();
+            sched.submit_traced(i + 1, prompt, 60, Priority::BestEffort, 5001 + i)
+        })
+        .collect();
+    for rx in &victims {
+        match rx.recv().expect("victim streams") {
+            StreamEvent::Token { .. } => {}
+            other => panic!("expected a token, got {other:?}"),
+        }
+    }
+    // aggressor: 12 + 240 = 252 tokens → 63 blocks; any surviving
+    // victim holds ≥ 2 blocks, so all four must go
+    let agg_prompt: Vec<u32> = (9000..9012).collect();
+    let agg = sched.submit_traced(9, agg_prompt, 240, Priority::Interactive, 9999);
+
+    // the storm tick's anomaly check has run once the aggressor's
+    // second token streams (token n+1 follows tick n's end-of-tick
+    // check); dump here, before hundreds more ticks can fire an
+    // unrelated anomaly over the snapshot
+    let mut agg_tokens = Vec::new();
+    for _ in 0..2 {
+        match agg.recv().expect("aggressor streams") {
+            StreamEvent::Token { token, .. } => agg_tokens.push(token),
+            other => panic!("expected a token, got {other:?}"),
+        }
+    }
+    let flight = sched.flight();
+    assert!(flight.anomalies() >= 1, "storm must fire the anomaly dump");
+    assert!(metrics.counter("sched.flight.anomalies").get() >= 1);
+    assert!(metrics.counter("sched.preemptions").get() >= 4);
+    let dump = flight.dump_json();
+    let last = dump.at("last_anomaly");
+    assert!(!last.is_null(), "automatic snapshot retained");
+    let kinds = last.at("anomaly_kinds").as_arr().expect("kinds");
+    assert!(
+        kinds.iter().any(|k| k.as_str() == Some("preempt_storm")),
+        "preempt_storm among fired kinds: {kinds:?}"
+    );
+    // the snapshot was taken at the storm tick: it already holds the
+    // admit → preempt → requeue chain for every victim trace
+    let snap = last.at("events").as_arr().expect("snapshot events");
+    for trace in 5001u64..5005 {
+        let seq_of = |kind: &str| -> Option<i64> {
+            snap.iter()
+                .find(|e| {
+                    e.at("kind").as_str() == Some(kind)
+                        && e.at("trace").as_usize() == Some(trace as usize)
+                })
+                .and_then(|e| e.at("seq").as_i64())
+        };
+        let admit = seq_of("admit").expect("victim admit in snapshot");
+        let preempt = seq_of("preempt").expect("victim preempt in snapshot");
+        let requeue = seq_of("requeue").expect("victim requeue in snapshot");
+        assert!(admit < preempt && preempt < requeue, "causal order for trace {trace}");
+    }
+
+    // everyone still completes: observation and anomaly dumps are pure
+    loop {
+        match agg.recv().expect("aggressor stream stays live") {
+            StreamEvent::Token { token, .. } => agg_tokens.push(token),
+            StreamEvent::Done { .. } => break,
+            other => panic!("aggressor failed: {other:?}"),
+        }
+    }
+    assert_eq!(agg_tokens.len(), 240);
+    // 59 = max_new 60 minus the first token consumed above
+    for rx in victims {
+        assert_eq!(drain(rx).expect("victim completes after replay").len(), 59);
+    }
+    // victims were re-admitted under their original trace ids
+    let events = flight.events();
+    for trace in 5001u64..5005 {
+        let admits = events
+            .iter()
+            .filter(|e| e.kind == FlightEventKind::Admit && e.trace == trace)
+            .count();
+        assert!(admits >= 2, "initial + replay admissions for trace {trace}");
     }
 }

@@ -9,9 +9,7 @@ use int_flashattention::server::{Client, Server};
 use int_flashattention::util::rng::Pcg64;
 use std::sync::Arc;
 
-fn test_server() -> (int_flashattention::server::tcp::ShutdownHandle, std::thread::JoinHandle<()>) {
-    use int_flashattention::kv::CacheConfig;
-    use int_flashattention::sched::{HashModel, SchedConfig};
+fn test_router() -> BucketRouter {
     let mk = |variant, seq| Bucket {
         variant,
         batch: 2,
@@ -21,28 +19,40 @@ fn test_server() -> (int_flashattention::server::tcp::ShutdownHandle, std::threa
         causal: true,
         artifact: String::new(),
     };
-    let router = BucketRouter::new(vec![
+    BucketRouter::new(vec![
         mk(Variant::Int8, 32),
         mk(Variant::Fp16, 32),
         mk(Variant::HalfInt8, 32),
-    ]);
-    let cfg = CacheConfig {
-        block_tokens: 8,
-        max_blocks: 32,
-        ..CacheConfig::new(2, 8)
-    };
+    ])
+}
+
+fn server_with_cache(
+    cfg: int_flashattention::kv::CacheConfig,
+    stripes: usize,
+) -> (int_flashattention::server::tcp::ShutdownHandle, std::thread::JoinHandle<()>) {
+    use int_flashattention::sched::{HashModel, SchedConfig};
     let engine = Arc::new(
         Engine::new(
-            router,
+            test_router(),
             Arc::new(NativeBackend { threads: 1 }),
             EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
         )
-        .with_kv_striped(cfg, 2, 2)
+        .with_kv_striped(cfg, stripes, 2)
         .with_sched(Arc::new(HashModel::new(2, 8)), SchedConfig::default())
         .expect("kv attached"),
     );
     let server = Server::bind(engine, "127.0.0.1:0").expect("bind");
     server.start()
+}
+
+fn test_server() -> (int_flashattention::server::tcp::ShutdownHandle, std::thread::JoinHandle<()>) {
+    use int_flashattention::kv::CacheConfig;
+    let cfg = CacheConfig {
+        block_tokens: 8,
+        max_blocks: 32,
+        ..CacheConfig::new(2, 8)
+    };
+    server_with_cache(cfg, 2)
 }
 
 #[test]
@@ -218,6 +228,152 @@ fn generate_streams_tokens_over_the_wire() {
     assert!(fail.at("error").as_str().unwrap().contains("admission rejected"));
     assert!(client.ping().expect("ping"));
 
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn trace_ids_round_trip_over_the_wire() {
+    let (handle, join) = test_server();
+    let mut client = Client::connect(handle.addr()).expect("connect");
+    let prompt: Vec<u32> = (50..60).collect();
+
+    // an explicit trace id — wider than u32, traces are u64 on the
+    // wire — echoes on every stream line and the terminal line
+    let mut traces = Vec::new();
+    let done = client
+        .generate_streaming_traced(&prompt, 5, "", Some(8_589_934_592), |tr, _, _| {
+            traces.push(tr)
+        })
+        .expect("generate");
+    assert_eq!(done.at("ok").as_bool(), Some(true), "{done:?}");
+    assert_eq!(done.at("trace").as_usize(), Some(8_589_934_592));
+    assert_eq!(traces.len(), 5);
+    assert!(traces.iter().all(|&t| t == 8_589_934_592), "{traces:?}");
+
+    // omitted trace: the server assigns the request id, echoed
+    // consistently across the stream and the terminal
+    let mut traces = Vec::new();
+    let done = client
+        .generate_streaming_traced(&prompt, 5, "interactive", None, |tr, _, _| traces.push(tr))
+        .expect("generate");
+    assert_eq!(done.at("ok").as_bool(), Some(true), "{done:?}");
+    let assigned = done.at("trace").as_usize().expect("assigned trace") as u64;
+    assert_eq!(
+        done.at("id").as_usize().map(|v| v as u64),
+        Some(assigned),
+        "default trace is the request id"
+    );
+    assert!(traces.iter().all(|&t| t == assigned), "{traces:?}");
+
+    // a failed generate still carries the trace on its terminal line
+    let huge: Vec<u32> = (0..1000).collect();
+    let done = client
+        .generate_streaming_traced(&huge, 1, "", Some(424_242), |_, _, _| {})
+        .expect("rejected generate answered");
+    assert_eq!(done.at("ok").as_bool(), Some(false));
+    assert_eq!(done.at("trace").as_usize(), Some(424_242));
+    assert!(client.ping().expect("ping"));
+
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn debug_dump_serves_the_preempt_chain_over_the_wire() {
+    use int_flashattention::kv::CacheConfig;
+    use std::time::Duration;
+    // pressure geometry (cf. tests/obs_integration.rs): one stripe of
+    // 24 four-token blocks — the interactive aggressor only fits by
+    // preempting the best-effort victim mid-stream
+    let cfg = CacheConfig { block_tokens: 4, max_blocks: 24, ..CacheConfig::new(2, 8) };
+    let (handle, join) = server_with_cache(cfg, 1);
+    let addr = handle.addr();
+
+    let (first_tx, first_rx) = std::sync::mpsc::channel::<()>();
+    let victim = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).expect("victim connects");
+        let prompt: Vec<u32> = (3000..3008).collect();
+        let mut sent = false;
+        c.generate_streaming_traced(&prompt, 80, "best-effort", Some(1111), move |tr, _, _| {
+            assert_eq!(tr, 1111);
+            if !sent {
+                sent = true;
+                let _ = first_tx.send(());
+            }
+        })
+        .expect("victim stream")
+    });
+    first_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("victim streams its first token");
+
+    let mut client = Client::connect(addr).expect("connect");
+    let agg_prompt: Vec<u32> = (4000..4012).collect();
+    let mut agg_count = 0usize;
+    let agg_done = client
+        .generate_streaming_traced(&agg_prompt, 25, "interactive", Some(2222), |tr, _, _| {
+            assert_eq!(tr, 2222);
+            agg_count += 1;
+        })
+        .expect("aggressor stream");
+    assert_eq!(agg_done.at("ok").as_bool(), Some(true), "{agg_done:?}");
+    assert_eq!(agg_count, 25);
+
+    // the victim's trace survives preemption and replay to completion
+    let vdone = victim.join().expect("victim thread");
+    assert_eq!(vdone.at("ok").as_bool(), Some(true), "{vdone:?}");
+    assert_eq!(vdone.at("trace").as_usize(), Some(1111));
+    assert_eq!(vdone.at("count").as_i64(), Some(80));
+    let m = client.metrics().expect("metrics");
+    assert!(m.at("counter.sched.preemptions").as_i64().unwrap() >= 1);
+
+    // debug-dump serves the flight ring holding the causal chain
+    let resp = client.debug_dump().expect("debug-dump");
+    assert_eq!(resp.at("ok").as_bool(), Some(true), "{resp:?}");
+    let flight = resp.at("flight");
+    assert!(flight.at("recorded").as_usize().unwrap() >= 4);
+    let events = flight.at("events").as_arr().expect("events");
+    let seq_of = |kind: &str, trace: usize| -> Option<i64> {
+        events
+            .iter()
+            .find(|e| {
+                e.at("kind").as_str() == Some(kind) && e.at("trace").as_usize() == Some(trace)
+            })
+            .and_then(|e| e.at("seq").as_i64())
+    };
+    let admit = seq_of("admit", 1111).expect("victim admit");
+    let preempt = seq_of("preempt", 1111).expect("victim preempt");
+    let requeue = seq_of("requeue", 1111).expect("victim requeue");
+    assert!(admit < preempt && preempt < requeue, "causal order over the wire");
+    assert!(
+        events.iter().any(|e| {
+            e.at("kind").as_str() == Some("admit")
+                && e.at("trace").as_usize() == Some(1111)
+                && e.at("seq").as_i64() > Some(requeue)
+        }),
+        "replay admission follows the requeue"
+    );
+    assert!(seq_of("admit", 2222).is_some(), "aggressor admitted");
+
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn debug_dump_errors_cleanly_without_a_scheduler() {
+    let engine = Arc::new(Engine::new(
+        test_router(),
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    ));
+    let server = Server::bind(engine, "127.0.0.1:0").expect("bind");
+    let (handle, join) = server.start();
+    let mut client = Client::connect(handle.addr()).expect("connect");
+    let resp = client.debug_dump().expect("answered");
+    assert_eq!(resp.at("ok").as_bool(), Some(false));
+    assert!(resp.at("error").as_str().unwrap().contains("scheduler"));
+    assert!(client.ping().expect("ping"));
     handle.shutdown();
     join.join().unwrap();
 }

@@ -15,8 +15,11 @@ use std::path::Path;
 
 /// Version 2 added the optional calibration geometry; version 3 the
 /// optional drift baseline (the EMA absmax levels the run measured,
-/// consumed by online re-calibration). Version-1/2 files still load.
-const ARTIFACT_VERSION: i64 = 3;
+/// consumed by online re-calibration); version 4 the per-(layer,
+/// head-group) plan table from model-backed calibration runs. Files at
+/// any earlier version still load (pre-4 artifacts surface as a
+/// single-entry plan table).
+const ARTIFACT_VERSION: i64 = 4;
 
 /// The geometry a calibration run measured — persisted with the artifact
 /// so deployments validate compatibility *once at load time* instead of
@@ -77,6 +80,77 @@ impl CalibrationGeometry {
     }
 }
 
+/// Per-(layer, head-group) calibration detail, persisted from version 4
+/// on. The deployable flat plan (`CalibrationArtifact::plan`, geometry
+/// `layers*heads × head_dim` for a head-folded transformer) stays the
+/// single source the KV cache boots from; this table keeps the
+/// per-layer measurements behind it addressable — for audits, for
+/// layer-targeted re-calibration, and for models whose layers quantize
+/// very differently. A model-less calibration run is the degenerate
+/// single-entry table keyed `(0, 0)`; pre-4 artifacts load as exactly
+/// that.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct LayerPlans {
+    /// `((layer, head_group), plan)`, unique keys, ascending.
+    pub entries: Vec<((usize, usize), CalibrationPlan)>,
+}
+
+impl LayerPlans {
+    /// The degenerate table of a run with no layer structure: the whole
+    /// plan keyed `(0, 0)`.
+    pub fn single(plan: CalibrationPlan) -> LayerPlans {
+        LayerPlans { entries: vec![((0, 0), plan)] }
+    }
+
+    pub fn get(&self, layer: usize, head_group: usize) -> Option<&CalibrationPlan> {
+        self.entries
+            .iter()
+            .find(|((l, g), _)| (*l, *g) == (layer, head_group))
+            .map(|(_, p)| p)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|((l, g), p)| {
+                    Json::obj(vec![
+                        ("layer", Json::num(*l as f64)),
+                        ("head_group", Json::num(*g as f64)),
+                        ("plan", p.to_json()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    fn from_json(j: &Json) -> Result<LayerPlans> {
+        let arr = j.as_arr().ok_or_else(|| anyhow!("layer_plans is not an array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let layer = e
+                .at("layer")
+                .as_usize()
+                .ok_or_else(|| anyhow!("layer_plans entry missing layer"))?;
+            let group = e
+                .at("head_group")
+                .as_usize()
+                .ok_or_else(|| anyhow!("layer_plans entry missing head_group"))?;
+            let plan = CalibrationPlan::from_json(e.at("plan"))
+                .map_err(|e| anyhow!("layer_plans ({layer}, {group}): {e}"))?;
+            entries.push(((layer, group), plan));
+        }
+        let mut keys: Vec<_> = entries.iter().map(|(k, _)| *k).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        if keys.len() != entries.len() {
+            bail!("layer_plans has duplicate (layer, head_group) keys");
+        }
+        entries.sort_by_key(|(k, _)| *k);
+        Ok(LayerPlans { entries })
+    }
+}
+
 /// Everything a serving process needs from a calibration run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CalibrationArtifact {
@@ -93,6 +167,10 @@ pub struct CalibrationArtifact {
     /// pre-version-3 artifacts; [`crate::calib::Recalibrator`] then
     /// derives a baseline from the plan itself.
     pub drift: Option<DriftBaseline>,
+    /// Per-(layer, head-group) plan table behind the flat `plan`
+    /// (version 4, from `intfa calibrate --from-model`); earlier
+    /// artifacts and model-less runs carry the single-entry table.
+    pub layer_plans: LayerPlans,
 }
 
 impl CalibrationArtifact {
@@ -112,7 +190,8 @@ impl CalibrationArtifact {
             seqs.dedup();
             CalibrationGeometry { heads, head_dim: cfg.head_dim, seq_buckets: seqs }
         });
-        CalibrationArtifact { plan, table, reports, geometry, drift: None }
+        let layer_plans = LayerPlans::single(plan.clone());
+        CalibrationArtifact { plan, table, reports, geometry, drift: None, layer_plans }
     }
 
     /// Attach the calibration run's measured drift baseline (persisted
@@ -121,6 +200,15 @@ impl CalibrationArtifact {
     /// against the plan's derived clips).
     pub fn with_drift_baseline(mut self, baseline: DriftBaseline) -> CalibrationArtifact {
         self.drift = Some(baseline);
+        self
+    }
+
+    /// Attach the per-(layer, head-group) plan table a model-backed
+    /// calibration run measured (persisted from version 4 on). The flat
+    /// `plan` stays the deployable aggregate; this keeps the per-layer
+    /// detail behind it.
+    pub fn with_layer_plans(mut self, layer_plans: LayerPlans) -> CalibrationArtifact {
+        self.layer_plans = layer_plans;
         self
     }
 
@@ -137,6 +225,7 @@ impl CalibrationArtifact {
         if let Some(d) = &self.drift {
             fields.push(("drift", d.to_json()));
         }
+        fields.push(("layer_plans", self.layer_plans.to_json()));
         Json::obj(fields)
     }
 
@@ -174,6 +263,19 @@ impl CalibrationArtifact {
             }
             Some(d)
         };
+        // pre-4 artifacts (and hand-written files omitting the field)
+        // surface the flat plan as a single-entry table; a present but
+        // malformed table is an error, never silently dropped
+        let layer_plans = if j.at("layer_plans").is_null() {
+            LayerPlans::single(plan.clone())
+        } else {
+            let lp = LayerPlans::from_json(j.at("layer_plans"))?;
+            if lp.entries.is_empty() {
+                LayerPlans::single(plan.clone())
+            } else {
+                lp
+            }
+        };
         Ok(CalibrationArtifact {
             plan,
             table: VariantTable::from_json(j.at("table")).map_err(|e| anyhow!("{e}"))?,
@@ -181,6 +283,7 @@ impl CalibrationArtifact {
                 .map_err(|e| anyhow!("{e}"))?,
             geometry,
             drift,
+            layer_plans,
         })
     }
 
@@ -244,7 +347,8 @@ mod tests {
             seq_buckets: vec![128],
         });
         let drift = Some(DriftBaseline { k: vec![1.8, 2.1], v: 2.4 });
-        CalibrationArtifact { plan, table, reports: Vec::new(), geometry, drift }
+        let layer_plans = LayerPlans::single(plan.clone());
+        CalibrationArtifact { plan, table, reports: Vec::new(), geometry, drift, layer_plans }
     }
 
     #[test]
@@ -307,6 +411,42 @@ mod tests {
         let mut bad = artifact.clone();
         bad.drift = Some(DriftBaseline { k: vec![1.0; 5], v: 1.0 });
         assert!(CalibrationArtifact::from_json(&bad.to_json()).is_err());
+    }
+
+    #[test]
+    fn version_4_layer_plan_table_round_trips() {
+        // a two-layer model-backed run: per-layer plans differ
+        let mut artifact = sample_artifact();
+        let mut l1 = artifact.plan.clone();
+        l1.k_clip = vec![1.5, 1.75];
+        let table = LayerPlans {
+            entries: vec![((0, 0), artifact.plan.clone()), ((1, 0), l1.clone())],
+        };
+        artifact = artifact.with_layer_plans(table);
+        let restored = CalibrationArtifact::from_json(&artifact.to_json()).unwrap();
+        assert_eq!(restored, artifact);
+        assert_eq!(restored.layer_plans.entries.len(), 2);
+        assert_eq!(restored.layer_plans.get(1, 0), Some(&l1));
+        assert_eq!(restored.layer_plans.get(2, 0), None);
+
+        // duplicate keys are rejected, not last-wins
+        let twice = vec![((0, 0), sample_artifact().plan), ((0, 0), sample_artifact().plan)];
+        let dup = artifact.with_layer_plans(LayerPlans { entries: twice });
+        assert!(CalibrationArtifact::from_json(&dup.to_json()).is_err());
+    }
+
+    #[test]
+    fn pre_4_artifacts_load_as_single_entry_table() {
+        // a version-3 file has no layer_plans field: the flat plan
+        // surfaces as the (0, 0) entry
+        let mut j = sample_artifact().to_json();
+        if let crate::util::json::Json::Obj(map) = &mut j {
+            map.insert("version".into(), Json::num(3.0));
+            map.remove("layer_plans");
+        }
+        let loaded = CalibrationArtifact::from_json(&j).unwrap();
+        assert_eq!(loaded.layer_plans, LayerPlans::single(loaded.plan.clone()));
+        assert_eq!(loaded.layer_plans.get(0, 0), Some(&loaded.plan));
     }
 
     #[test]

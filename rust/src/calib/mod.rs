@@ -46,7 +46,7 @@ pub mod plan;
 pub mod stats;
 pub mod swap;
 
-pub use artifact::{CalibrationArtifact, CalibrationGeometry};
+pub use artifact::{CalibrationArtifact, CalibrationGeometry, LayerPlans};
 pub use autotune::{AutotuneConfig, BucketReport, VariantMeasurement, VariantTable};
 pub use drift::{DriftBaseline, DriftDetector, DriftReport, SampledStats};
 pub use plan::{CalibrationPlan, PlanBuilder, ScaleMethod, Smoothing};

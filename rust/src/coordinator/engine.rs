@@ -13,7 +13,9 @@ use crate::attention::{multihead, AttnConfig, Variant};
 use crate::calib::{CalibrationArtifact, CalibrationPlan, RecalibConfig, Recalibrator};
 use crate::kv::{CacheConfig, RadixKvCache};
 use crate::quant::{INT4_R, INT8_R};
-use crate::sched::{Priority, SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel};
+use crate::sched::{
+    Priority, Sampling, SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel,
+};
 use crate::util::json::Json;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -463,6 +465,11 @@ impl Engine {
             ));
         }
         self.metrics.gauge("sched.enabled").set(1);
+        // static model facts for dashboards and the registry-vs-doc
+        // lint: which model implementation serves, at what shape
+        let info = model.describe();
+        self.metrics.gauge("model.layers").set(info.layers as i64);
+        self.metrics.gauge("model.vocab").set(info.vocab as i64);
         // kernel-level time attribution shares the scheduler's profile
         // gate (`--no-profile` clears both): install a live handle into
         // every stripe so appends and decode views time themselves
@@ -479,6 +486,22 @@ impl Engine {
             self.recalib.clone(),
         ));
         Ok(self)
+    }
+
+    /// Select the serving model: [`Engine::with_sched`] under its
+    /// intended name now that real models exist. `intfa serve --model`
+    /// lands here with a loaded
+    /// [`TransformerModel`](crate::model::TransformerModel); model-less
+    /// serving passes the [`HashModel`](crate::sched::HashModel)
+    /// stand-in. The model's `(heads, head_dim)` geometry — for a
+    /// transformer, `(layers * heads, head_dim)` after head-folding —
+    /// must match the attached KV cache.
+    pub fn with_model(
+        self,
+        model: Arc<dyn TokenModel>,
+        cfg: SchedConfig,
+    ) -> Result<Engine, String> {
+        self.with_sched(model, cfg)
     }
 
     /// The scheduler's flight-recorder dump (the server's `debug-dump`
@@ -817,16 +840,33 @@ impl Engine {
         priority: Priority,
         trace: Option<u64>,
     ) -> Result<(u64, Receiver<StreamEvent>), String> {
+        self.generate_sampled(tokens, max_new, priority, trace, Sampling::default())
+    }
+
+    /// [`Engine::generate_traced`] with per-request [`Sampling`] params
+    /// (the wire verb's `seed`/`temperature`/`top_k`/`top_p` fields).
+    /// The default params mean greedy decoding, so every other
+    /// `generate_*` surface is unchanged. Malformed params are rejected
+    /// here, before a request id is burned.
+    pub fn generate_sampled(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        priority: Priority,
+        trace: Option<u64>,
+        sampling: Sampling,
+    ) -> Result<(u64, Receiver<StreamEvent>), String> {
         let sched = self.sched.as_ref().ok_or("scheduler not enabled")?;
         if tokens.is_empty() {
             return Err("empty prompt".into());
         }
+        sampling.validate()?;
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.metrics.counter("sched.submitted").inc();
         let trace = trace.unwrap_or(id);
-        Ok((id, sched.submit_traced(id, tokens, max_new, priority, trace)))
+        Ok((id, sched.submit_sampled(id, tokens, max_new, priority, trace, sampling)))
     }
 
     /// Convenience: generate and block until the stream terminates,
@@ -1274,6 +1314,7 @@ mod tests {
             reports: Vec::new(),
             geometry: None,
             drift: None,
+            layer_plans: Default::default(),
         };
         let e = Engine::with_calibration(
             native_router(),

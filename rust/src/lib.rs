@@ -18,7 +18,9 @@
 //!   cache measured scales, the shared-prefix radix KV cache with
 //!   copy-on-write INT8 blocks and split-K flash-decode ([`kv`]), the
 //!   continuous-batching decode scheduler with its striped KV pool and
-//!   streaming token delivery ([`sched`]), and the Ampere cost-model
+//!   streaming token delivery ([`sched`]), the artifact-backed
+//!   multi-layer transformer model served through it ([`model`]), and
+//!   the Ampere cost-model
 //!   simulator that regenerates the paper's Figure 2.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
@@ -30,6 +32,7 @@ pub mod coordinator;
 pub mod gemm;
 pub mod kv;
 pub mod loadgen;
+pub mod model;
 pub mod obs;
 pub mod quant;
 pub mod runtime;

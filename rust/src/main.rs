@@ -5,6 +5,7 @@
 //!   client       load-generator client against a running server
 //!   bench-load   closed-loop bench-load harness (seeded, multi-turn)
 //!   calibrate    run calibration + precision autotuning, write artifact
+//!   gen-weights  write a tiny seeded transformer weight manifest
 //!   golden       validate every artifact against its golden fixture
 //!   accuracy     regenerate the paper's Tables 1-2 (MRE)
 //!   perf-model   regenerate the paper's Figure 2 (Ampere cost model)
@@ -36,6 +37,19 @@ intfa — INT-FlashAttention serving runtime
 
 USAGE:
   intfa serve      [--artifacts DIR] [--addr HOST:PORT] [--backend pjrt|native]
+                   [--model DIR]
+                     --model              serve the transformer weight manifest in
+                                          DIR (model.json + weights.bin, see
+                                          `intfa gen-weights` and docs/MODEL.md)
+                                          through the striped INT8 KV/sched path;
+                                          its head-folded geometry
+                                          (layers*heads × head_dim) replaces the
+                                          bucket geometry for the KV cache, and
+                                          generate requests gain seeded sampling
+                                          (\"seed\"/\"temperature\"/\"top_k\"/
+                                          \"top_p\"). Without --model, generation
+                                          runs the deterministic HashModel
+                                          stand-in as before
                    [--metrics-addr HOST:PORT]
                      --metrics-addr       also serve a Prometheus text exposition
                                           (GET /metrics) on its own bind address:
@@ -115,6 +129,12 @@ USAGE:
                    [--system-prompt-len N] [--slo-ttft-ms MS] [--slo-itl-ms MS]
                    [--out FILE] [--heads H] [--head-dim D] [--kv-blocks N]
                    [--sched-stripes N] [--force-preempt] [--flight-dump FILE]
+                   [--model DIR]
+                     --model              with --in-process, serve the transformer
+                                          weight manifest in DIR instead of the
+                                          HashModel stand-in (geometry comes from
+                                          the manifest; --heads/--head-dim are
+                                          ignored)
                      --force-preempt      after the plan run, drive one
                                           deterministic preemption (best-effort
                                           victim vs interactive aggressor) so the
@@ -136,6 +156,19 @@ USAGE:
   intfa calibrate  [--out FILE] [--heads H] [--head-dim D] [--batches N]
                    [--calib-seq N] [--dist normal|uniform] [--method absmax|p999|ema]
                    [--seqs 128,256,512] [--seed S] [--per-channel-k]
+                   [--from-model DIR]
+                     --from-model         calibrate from the transformer manifest
+                                          in DIR: seeded token streams drive real
+                                          layer activations through CalibStats
+                                          (geometry from the manifest; --heads/
+                                          --head-dim/--dist are ignored) and the
+                                          artifact gains a per-(layer, head-group)
+                                          plan table (version 4)
+  intfa gen-weights [--out DIR] [--layers N] [--heads H] [--head-dim D]
+                   [--vocab V] [--seed S]
+                     write a tiny seeded transformer weight manifest (model.json +
+                     weights.bin) for tests, benches and CI; load it with
+                     serve/bench-load/calibrate --model/--from-model
   intfa golden     [--artifacts DIR]
   intfa accuracy   [--dist normal|uniform] [--seqs 1024,2048] [--head-dim D]
   intfa perf-model [--gpu rtx4090|a100] [--seqs 1024,...,16384]
@@ -166,6 +199,7 @@ fn run(args: &Args) -> Result<()> {
         Some("client") => cmd_client(args),
         Some("bench-load") => cmd_bench_load(args),
         Some("calibrate") => cmd_calibrate(args),
+        Some("gen-weights") => cmd_gen_weights(args),
         Some("golden") => cmd_golden(args),
         Some("accuracy") => cmd_accuracy(args),
         Some("perf-model") => cmd_perf_model(args),
@@ -230,18 +264,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     log_info!("backend={} buckets={}", backend.name(), router.buckets().len());
-    // shared-prefix KV cache over the manifest's attention geometry: the
-    // prefill/extend/decode verbs and prefix reuse around prefill
-    let kv_geometry = (!args.has("no-kv"))
-        .then(|| router.buckets().first().map(|b| (b.heads, b.head_dim)))
-        .flatten();
+    // artifact-backed LM: loaded before the KV cache because its
+    // head-folded geometry (layers*heads × head_dim) is the cache
+    // geometry the scheduler must run
+    let lm = match args.get("model") {
+        Some(dir) => {
+            if args.has("no-kv") || args.has("no-sched") {
+                bail!("--model needs the kv cache and scheduler (drop --no-kv/--no-sched)");
+            }
+            let weights = int_flashattention::model::ModelWeights::load(dir)?;
+            let c = weights.cfg;
+            log_info!(
+                "model: {} layers × {} heads × d{}, vocab {} (from {dir})",
+                c.layers,
+                c.heads,
+                c.head_dim,
+                c.vocab
+            );
+            Some(Arc::new(int_flashattention::model::TransformerModel::new(weights)))
+        }
+        None => None,
+    };
+    // shared-prefix KV cache over the manifest's attention geometry (the
+    // prefill/extend/decode verbs and prefix reuse around prefill) — or
+    // the model's head-folded geometry when one is served
+    let kv_geometry = match &lm {
+        Some(m) => Some(m.weights().cfg.geometry()),
+        None => (!args.has("no-kv"))
+            .then(|| router.buckets().first().map(|b| (b.heads, b.head_dim)))
+            .flatten(),
+    };
     let engine = Engine::with_calibration(router, backend, cfg, calibration);
     let engine = match kv_geometry {
         Some((heads, head_dim)) => {
             let mut kv_cfg = match engine.calibration() {
                 Some(artifact) => {
-                    int_flashattention::kv::CacheConfig::from_artifact(heads, head_dim, artifact)
-                        .map_err(|e| anyhow!(e))?
+                    match int_flashattention::kv::CacheConfig::from_artifact(
+                        heads, head_dim, artifact,
+                    ) {
+                        Ok(c) => c,
+                        // a model changes the cache geometry; an artifact
+                        // calibrated for the bucket geometry can't serve
+                        // it — fall back rather than refuse to boot
+                        Err(e) if lm.is_some() => {
+                            int_flashattention::log_warn!(
+                                "calibration artifact does not fit the model's kv \
+                                 geometry ({e}); serving uncalibrated scales — \
+                                 re-run `intfa calibrate --from-model`"
+                            );
+                            int_flashattention::kv::CacheConfig::new(heads, head_dim)
+                        }
+                        Err(e) => return Err(anyhow!(e)),
+                    }
                 }
                 None => int_flashattention::kv::CacheConfig::new(heads, head_dim),
             };
@@ -287,10 +361,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if args.has("no-sched") {
                 engine
             } else {
-                // continuous-batching generate verb: until an LM artifact
-                // path exists, generation runs the deterministic
-                // reference pseudo-LM (sched::HashModel) — the serving
-                // mechanics (admission, batching, streaming) are real
+                // continuous-batching generate verb: the loaded model
+                // when --model was given, else the deterministic
+                // HashModel stand-in (serving mechanics are identical)
                 let sched_cfg = int_flashattention::sched::SchedConfig {
                     tick_budget: Duration::from_micros(args.get_u64("sched-tick-us", 500)?),
                     max_inflight: args.get_usize("sched-max-inflight", 32)?,
@@ -318,10 +391,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     sched_cfg.queue_cap,
                     sched_cfg.aging_ticks
                 );
-                let model = Arc::new(int_flashattention::sched::HashModel::new(
-                    heads, head_dim,
-                ));
-                engine.with_sched(model, sched_cfg).map_err(|e| anyhow!(e))?
+                let model: Arc<dyn int_flashattention::sched::TokenModel> = match &lm {
+                    Some(m) => m.clone(),
+                    None => Arc::new(int_flashattention::sched::HashModel::new(heads, head_dim)),
+                };
+                engine.with_model(model, sched_cfg).map_err(|e| anyhow!(e))?
             }
         }
         None => engine,
@@ -432,15 +506,26 @@ fn bench_load_config(args: &Args) -> Result<int_flashattention::loadgen::LoadCon
 }
 
 /// The reference in-process serving stack for `bench-load --in-process`:
-/// NativeBackend + HashModel engine (same shape as the sched benches)
-/// behind the real TCP surface.
+/// NativeBackend engine (same shape as the sched benches) behind the
+/// real TCP surface, generating through the transformer manifest named
+/// by `--model` or the HashModel stand-in.
 fn bench_engine(args: &Args) -> Result<Engine> {
     use int_flashattention::coordinator::router::Bucket;
     use int_flashattention::kv::CacheConfig;
-    use int_flashattention::sched::{HashModel, SchedConfig};
+    use int_flashattention::sched::{HashModel, SchedConfig, TokenModel};
 
-    let heads = args.get_usize("heads", 4)?;
-    let head_dim = args.get_usize("head-dim", 64)?;
+    let (model, heads, head_dim): (Arc<dyn TokenModel>, usize, usize) = match args.get("model") {
+        Some(dir) => {
+            let weights = int_flashattention::model::ModelWeights::load(dir)?;
+            let (h, d) = weights.cfg.geometry();
+            (Arc::new(int_flashattention::model::TransformerModel::new(weights)), h, d)
+        }
+        None => {
+            let heads = args.get_usize("heads", 4)?;
+            let head_dim = args.get_usize("head-dim", 64)?;
+            (Arc::new(HashModel::new(heads, head_dim)), heads, head_dim)
+        }
+    };
     let blocks = args.get_usize("kv-blocks", 512)?;
     let stripes = args.get_usize("sched-stripes", 2)?;
     let router = BucketRouter::new(vec![Bucket {
@@ -462,8 +547,8 @@ fn bench_engine(args: &Args) -> Result<Engine> {
         stripes,
         2,
     )
-    .with_sched(
-        Arc::new(HashModel::new(heads, head_dim)),
+    .with_model(
+        model,
         SchedConfig {
             max_inflight: args.get_usize("sched-max-inflight", 16)?,
             lifecycle: !args.has("no-lifecycle"),
@@ -612,8 +697,9 @@ fn cmd_bench_load(args: &Args) -> Result<()> {
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
-    let heads = args.get_usize("heads", 8)?;
-    let d = args.get_usize("head-dim", 64)?;
+    use int_flashattention::calib::LayerPlans;
+    use int_flashattention::sched::TokenModel;
+
     let batches = args.get_usize("batches", 32)?;
     let calib_seq = args.get_usize("calib-seq", 128)?;
     let dist = Dist::parse(args.get_or("dist", "normal")).ok_or_else(|| anyhow!("bad --dist"))?;
@@ -626,21 +712,86 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| anyhow!("bad seq {s}")))
         .collect::<Result<_>>()?;
     let out = args.get_or("out", "calibration.json").to_string();
+    let seed = args.get_u64("seed", 7)?;
+    let per_channel_k = args.has("per-channel-k");
+    let build = |stats: &CalibStats| {
+        PlanBuilder::new(int_flashattention::quant::INT8_R)
+            .method(method)
+            .per_channel_k(per_channel_k)
+            .build(stats)
+    };
 
-    // synthetic calibration traffic (swap for recorded activations in prod)
-    let mut stats = CalibStats::new(heads, d);
-    let mut rng = Pcg64::new(args.get_u64("seed", 7)?, 3);
-    for _ in 0..batches {
-        let n = heads * calib_seq * d;
-        let q = dist.sample_vec(&mut rng, n);
-        let k = dist.sample_vec(&mut rng, n);
-        let v = dist.sample_vec(&mut rng, n);
-        stats.record_qkv(&q, &k, &v, calib_seq).map_err(|e| anyhow!(e))?;
-    }
-    let plan = PlanBuilder::new(int_flashattention::quant::INT8_R)
-        .method(method)
-        .per_channel_k(args.has("per-channel-k"))
-        .build(&stats);
+    let (stats, layer_plans, heads, d) = match args.get("from-model") {
+        Some(dir) => {
+            // real layer activations: seeded token streams through the
+            // model's (token, pos)-pure projections, recorded at the
+            // full head-folded geometry (the flat deployable plan) and
+            // per layer (the version-4 plan table)
+            let weights = int_flashattention::model::ModelWeights::load(dir)?;
+            let mcfg = weights.cfg;
+            let model = int_flashattention::model::TransformerModel::new(weights);
+            let (gh, gd) = mcfg.geometry();
+            let mut stats = CalibStats::new(gh, gd);
+            let mut layer_stats: Vec<CalibStats> =
+                (0..mcfg.layers).map(|_| CalibStats::new(mcfg.heads, gd)).collect();
+            let mut rng = Pcg64::new(seed, 3);
+            // record_qkv layout: flat (heads, seq, d), per-head span
+            let span = calib_seq * gd;
+            for _ in 0..batches {
+                let mut q = vec![0.0f32; gh * span];
+                let mut k = q.clone();
+                let mut v = q.clone();
+                for pos in 0..calib_seq {
+                    let tok = rng.next_range(mcfg.vocab as u64) as u32;
+                    let qr = model.query(tok, pos);
+                    let (kr, vr) = model.kv(tok, pos);
+                    for h in 0..gh {
+                        let dst = h * span + pos * gd;
+                        q[dst..dst + gd].copy_from_slice(&qr[h * gd..(h + 1) * gd]);
+                        k[dst..dst + gd].copy_from_slice(&kr[h * gd..(h + 1) * gd]);
+                        v[dst..dst + gd].copy_from_slice(&vr[h * gd..(h + 1) * gd]);
+                    }
+                }
+                stats.record_qkv(&q, &k, &v, calib_seq).map_err(|e| anyhow!(e))?;
+                // layer ℓ's heads are rows ℓH..(ℓ+1)H of the fold —
+                // contiguous spans of the same batch
+                for (l, ls) in layer_stats.iter_mut().enumerate() {
+                    let lo = l * mcfg.heads * span;
+                    let hi = (l + 1) * mcfg.heads * span;
+                    ls.record_qkv(&q[lo..hi], &k[lo..hi], &v[lo..hi], calib_seq)
+                        .map_err(|e| anyhow!(e))?;
+                }
+            }
+            log_info!(
+                "calibrated from model {dir}: {} layers × {} heads × d{gd}, \
+                 {batches} batches of {calib_seq} tokens",
+                mcfg.layers,
+                mcfg.heads
+            );
+            let entries = layer_stats
+                .iter()
+                .enumerate()
+                .map(|(l, ls)| ((l, 0), build(ls)))
+                .collect();
+            (stats, LayerPlans { entries }, gh, gd)
+        }
+        None => {
+            let heads = args.get_usize("heads", 8)?;
+            let d = args.get_usize("head-dim", 64)?;
+            // synthetic calibration traffic (no weight manifest on hand)
+            let mut stats = CalibStats::new(heads, d);
+            let mut rng = Pcg64::new(seed, 3);
+            for _ in 0..batches {
+                let n = heads * calib_seq * d;
+                let q = dist.sample_vec(&mut rng, n);
+                let k = dist.sample_vec(&mut rng, n);
+                let v = dist.sample_vec(&mut rng, n);
+                stats.record_qkv(&q, &k, &v, calib_seq).map_err(|e| anyhow!(e))?;
+            }
+            (stats, LayerPlans::default(), heads, d)
+        }
+    };
+    let plan = build(&stats);
     log_info!(
         "plan: v_scale={:.6} (uncalibrated {:.6}) smoothing={} batches={}",
         plan.v_scale,
@@ -653,7 +804,10 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     // persist the run's measured EMA levels so a serving process
     // detects drift against what was calibrated, not a derived guess
     let baseline = int_flashattention::calib::DriftBaseline::from_stats(&stats);
-    let artifact = CalibrationArtifact::autotuned(plan, &cfg).with_drift_baseline(baseline);
+    let mut artifact = CalibrationArtifact::autotuned(plan, &cfg).with_drift_baseline(baseline);
+    if !layer_plans.entries.is_empty() {
+        artifact = artifact.with_layer_plans(layer_plans);
+    }
     let mut table = Table::new(&["seq", "fast", "balanced", "exact", "int8 mre", "int8 Mtok/s"]);
     let join = |vs: &[Variant]| {
         vs.iter().map(|v| v.name()).collect::<Vec<_>>().join(" > ")
@@ -673,6 +827,35 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     print!("{}", table.render());
     artifact.save(&out)?;
     println!("wrote {out} — reference it from manifest.json as \"calibration\": \"{out}\"");
+    Ok(())
+}
+
+/// `intfa gen-weights`: the fixture generator — a tiny seeded
+/// transformer manifest for tests, benches and CI. The same
+/// (config, seed) always writes bit-identical weights, so fixtures
+/// never need to be checked in.
+fn cmd_gen_weights(args: &Args) -> Result<()> {
+    use int_flashattention::model::{ModelConfig, ModelWeights};
+
+    let cfg = ModelConfig {
+        layers: args.get_usize("layers", 2)?,
+        heads: args.get_usize("heads", 2)?,
+        head_dim: args.get_usize("head-dim", 8)?,
+        vocab: u32::try_from(args.get_usize("vocab", 256)?)
+            .map_err(|_| anyhow!("--vocab does not fit u32"))?,
+    };
+    cfg.validate()?;
+    let seed = args.get_u64("seed", 11)?;
+    let out = args.get_or("out", "model").to_string();
+    let weights = ModelWeights::seeded(cfg, seed);
+    weights.save(&out)?;
+    let (gh, gd) = cfg.geometry();
+    println!(
+        "wrote {out}/model.json + weights.bin — {} layers × {} heads × d{} (kv geometry \
+         {gh}×{gd}), vocab {}, seed {seed}",
+        cfg.layers, cfg.heads, cfg.head_dim, cfg.vocab
+    );
+    println!("serve it: intfa serve --model {out}");
     Ok(())
 }
 

@@ -1,0 +1,31 @@
+//! `model/` — the artifact-backed transformer serving path.
+//!
+//! Until this subsystem existed, everything downstream of the INT8
+//! attention kernel was exercised only by the PRNG hash stand-in
+//! ([`crate::sched::HashModel`]). This module supplies the real thing
+//! behind the same [`crate::sched::TokenModel`] seam:
+//!
+//!   - [`weights`]: the versioned on-disk weight manifest
+//!     (`model.json` + `weights.bin`, strict loader) and the seeded
+//!     fixture generator behind `intfa gen-weights`;
+//!   - [`transformer`]: [`TransformerModel`] — embeddings → L
+//!     head-folded transformer layers (layer ℓ owns head rows
+//!     `ℓ*H..(ℓ+1)*H` of the shared striped KV pool, so every layer's
+//!     attention runs through the batched INT8 flash decode) → summed
+//!     output projections → final-norm → tied-embedding logits;
+//!   - [`sampler`]: seeded greedy/top-k/top-p sampling as a pure
+//!     per-step function of `(logits, pos, params)`, preserving the
+//!     scheduler's bit-identity and preempt/replay contracts.
+//!
+//! Serving selects the model at boot: `intfa serve --model <dir>` loads
+//! a manifest and serves [`TransformerModel`]; without `--model` the
+//! hash stand-in still serves, keeping model-less benches and
+//! determinism tests intact. See `docs/MODEL.md`.
+
+pub mod sampler;
+pub mod transformer;
+pub mod weights;
+
+pub use sampler::{argmax, sample};
+pub use transformer::TransformerModel;
+pub use weights::{LayerWeights, ModelConfig, ModelWeights};

@@ -1,0 +1,168 @@
+//! Seeded next-token sampling as a pure per-step function.
+//!
+//! The scheduler's replay contracts (continuous batching ≡ sequential
+//! decode; preempt/replay resumes bit-identically) require that token
+//! selection carries **no state between steps**: a replayed tail must
+//! re-draw exactly what the uninterrupted run drew. So instead of one
+//! long-lived RNG advanced per token, every step derives a fresh
+//! [`Pcg64`] from `(seed, pos)` and makes a single draw — sampling
+//! becomes a pure function of `(logits, pos, params)`, and ordering,
+//! batching and replay cannot perturb it.
+//!
+//! The pipeline is the standard one: temperature softmax over the
+//! top-k candidates, nucleus (top-p) truncation, one uniform draw.
+//! `temperature <= 0` (the default) short-circuits to [`argmax`], and
+//! `top_k == 1` collapses to the same choice, so greedy streams never
+//! consult the seed at all.
+
+use crate::sched::Sampling;
+use crate::util::rng::Pcg64;
+
+/// PRNG stream id for sampling draws, distinct from the weight-init
+/// streams in [`super::weights`].
+const SAMPLE_STREAM: u64 = 0x53414d50; // "SAMP"
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Greedy reference: index of the maximum logit, first occurrence on
+/// ties — the deterministic baseline the sampled path degrades to.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Draw the next token. Pure: same `(logits, pos, sampling)` always
+/// yields the same token, with no carried RNG state.
+pub fn sample(logits: &[f32], pos: usize, sampling: &Sampling) -> u32 {
+    if sampling.is_greedy() || logits.len() < 2 {
+        return argmax(logits);
+    }
+    // candidates by (logit desc, index asc): a total order, so the
+    // truncation sets below are reproducible across platforms
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        logits[b as usize]
+            .partial_cmp(&logits[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    if sampling.top_k > 0 {
+        idx.truncate(sampling.top_k.max(1));
+    }
+    // temperature softmax over the survivors (max-subtracted for
+    // stability; probs descend with idx's order)
+    let t = sampling.temperature;
+    let m = logits[idx[0] as usize];
+    let mut probs: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i as usize] - m) / t) as f64).exp())
+        .collect();
+    let total: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= total;
+    }
+    // nucleus truncation: smallest prefix with mass >= top_p
+    if sampling.top_p < 1.0 {
+        let mut mass = 0.0;
+        let mut keep = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            mass += p;
+            if mass >= sampling.top_p as f64 {
+                keep = i + 1;
+                break;
+            }
+        }
+        idx.truncate(keep);
+        probs.truncate(keep);
+        let total: f64 = probs.iter().sum();
+        for p in &mut probs {
+            *p /= total;
+        }
+    }
+    // single draw from a per-(seed, pos) PRNG — no carried state
+    let step_seed = splitmix(sampling.seed ^ (pos as u64).wrapping_mul(0x9e3779b97f4a7c15));
+    let u = Pcg64::new(step_seed, SAMPLE_STREAM).next_f64();
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return idx[i];
+        }
+    }
+    *idx.last().expect("candidate set is non-empty")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 2.5, -1.0, 2.4, 0.0, 1.9, -3.0, 0.7]
+    }
+
+    #[test]
+    fn greedy_and_top_k_one_match_argmax() {
+        let l = logits();
+        assert_eq!(argmax(&l), 1);
+        let greedy = Sampling::default();
+        assert_eq!(sample(&l, 0, &greedy), 1);
+        for pos in 0..32 {
+            let k1 = Sampling { seed: 42, temperature: 0.7, top_k: 1, ..Sampling::default() };
+            assert_eq!(sample(&l, pos, &k1), argmax(&l), "top_k=1 must be greedy at pos {pos}");
+        }
+    }
+
+    #[test]
+    fn argmax_ties_pick_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 0.0]), 1);
+    }
+
+    #[test]
+    fn sampling_is_pure_and_seed_position_sensitive() {
+        let l = logits();
+        let s = Sampling { seed: 7, temperature: 1.0, top_k: 0, top_p: 1.0 };
+        for pos in 0..64 {
+            assert_eq!(sample(&l, pos, &s), sample(&l, pos, &s), "pure at pos {pos}");
+        }
+        // across positions/seeds the draws must vary somewhere
+        let stream: Vec<u32> = (0..64).map(|p| sample(&l, p, &s)).collect();
+        assert!(stream.iter().any(|&t| t != stream[0]), "position must reach the draw");
+        let other = Sampling { seed: 8, ..s };
+        let stream2: Vec<u32> = (0..64).map(|p| sample(&l, p, &other)).collect();
+        assert_ne!(stream, stream2, "seed must reach the draw");
+    }
+
+    #[test]
+    fn truncation_limits_support() {
+        let l = logits();
+        // top_k=3 keeps logits {2.5, 2.4, 1.9} → indices {1, 3, 5}
+        let s = Sampling { seed: 1, temperature: 1.5, top_k: 3, top_p: 1.0 };
+        for pos in 0..256 {
+            let t = sample(&l, pos, &s);
+            assert!([1, 3, 5].contains(&t), "token {t} outside top-3 at pos {pos}");
+        }
+        // a tiny nucleus collapses to the argmax even at high temperature
+        let p = Sampling { seed: 1, temperature: 2.0, top_k: 0, top_p: 0.05 };
+        for pos in 0..64 {
+            assert_eq!(sample(&l, pos, &p), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_explores_the_tail() {
+        let l = logits();
+        let s = Sampling { seed: 3, temperature: 3.0, top_k: 0, top_p: 1.0 };
+        let drawn: std::collections::BTreeSet<u32> = (0..512).map(|p| sample(&l, p, &s)).collect();
+        assert!(drawn.len() >= 4, "hot sampling should reach several tokens, got {drawn:?}");
+    }
+}

@@ -1,0 +1,250 @@
+//! Artifact-backed multi-layer transformer behind the [`TokenModel`]
+//! seam.
+//!
+//! # Head-folding: layers as row ranges of one striped pool
+//!
+//! The scheduler owns cross-token state (the striped INT8 KV cache) and
+//! consults the model only through `(token, pos)`-pure projections.
+//! A multi-layer model fits that seam by *folding layers into heads*:
+//! with L layers of H heads each, the model reports geometry
+//! `(L*H, head_dim)`, and layer ℓ's heads occupy head rows
+//! `ℓ*H .. (ℓ+1)*H` of every KV block — each layer owns its own stripe
+//! of the pool, and a `(layer, head-group)` in the calibration artifact
+//! is exactly one layer's row range. Every decode step then runs real
+//! INT8 flash attention for all L layers in the scheduler's one batched
+//! call, and radix prefix reuse / preempt-replay keep working because
+//! the projections stay pure.
+//!
+//! The price of purity is that Q/K/V for layer ℓ are projected from the
+//! *context-free* residual tower (embedding + per-layer norm/FFN
+//! residuals of the token alone, no attention mixing between tokens —
+//! attention output enters once, at the logits head). That is the same
+//! trade [`HashModel`](crate::sched::HashModel) makes, but with real
+//! weight matrices, real activation distributions, and a real logits →
+//! sampler path, which is what calibration and the INT8 grids actually
+//! see.
+//!
+//! Per-token pipeline:
+//!
+//! ```text
+//! h0 = embed[token % vocab] + posenc(pos)
+//! for ℓ in 0..L:
+//!     xℓ = rmsnorm(hℓ, normℓ)
+//!     q[ℓH..], k[ℓH..], v[ℓH..] = xℓ·Wqℓ, xℓ·Wkℓ, xℓ·Wvℓ
+//!     hℓ₊₁ = hℓ + tanh(xℓ·Wffℓ)
+//! logits(out) = embed · rmsnorm(Σℓ out[ℓH..(ℓ+1)H]·Woℓ, final_norm)
+//! ```
+
+use super::sampler;
+use super::weights::ModelWeights;
+use crate::sched::{ModelInfo, Sampling, TokenModel};
+
+/// Multi-layer causal LM serving the scheduler through head-folded
+/// geometry. Stateless across calls; all context lives in the KV cache.
+pub struct TransformerModel {
+    w: ModelWeights,
+}
+
+fn rmsnorm(x: &[f32], gain: &[f32]) -> Vec<f32> {
+    let ms = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    x.iter().zip(gain).map(|(&v, &g)| v * inv * g).collect()
+}
+
+/// `y = x · W` for row-major `W[len(x)][cols]`, accumulated input-major
+/// so the traversal is cache-linear over `W`.
+fn matvec(x: &[f32], w: &[f32], cols: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), x.len() * cols);
+    let mut y = vec![0.0f32; cols];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * cols..(i + 1) * cols];
+        for (yj, &wj) in y.iter_mut().zip(row) {
+            *yj += xi * wj;
+        }
+    }
+    y
+}
+
+impl TransformerModel {
+    pub fn new(weights: ModelWeights) -> TransformerModel {
+        TransformerModel { w: weights }
+    }
+
+    pub fn weights(&self) -> &ModelWeights {
+        &self.w
+    }
+
+    /// Sinusoidal positional encoding — pure in `pos`, so identical
+    /// prefixes still quantize to identical KV blocks.
+    fn posenc(&self, pos: usize) -> Vec<f32> {
+        let hidden = self.w.cfg.hidden();
+        let mut e = vec![0.0f32; hidden];
+        for i in 0..hidden / 2 {
+            let freq = 1.0 / 10_000f32.powf(2.0 * i as f32 / hidden as f32);
+            let angle = pos as f32 * freq;
+            e[2 * i] = angle.sin();
+            e[2 * i + 1] = angle.cos();
+        }
+        e
+    }
+
+    /// The residual tower: per-layer *normed* inputs `xℓ` for
+    /// `(token, pos)`. Context-free by design (see module docs); also
+    /// the activation source for `intfa calibrate --from-model`.
+    pub fn layer_inputs(&self, token: u32, pos: usize) -> Vec<Vec<f32>> {
+        let hidden = self.w.cfg.hidden();
+        let row = (token % self.w.cfg.vocab) as usize * hidden;
+        let mut h: Vec<f32> = self.w.embed[row..row + hidden].to_vec();
+        for (v, p) in h.iter_mut().zip(self.posenc(pos)) {
+            *v += p;
+        }
+        let mut inputs = Vec::with_capacity(self.w.cfg.layers);
+        for l in &self.w.layers {
+            let x = rmsnorm(&h, &l.norm);
+            let ff = matvec(&x, &l.wff, hidden);
+            for (hv, &f) in h.iter_mut().zip(&ff) {
+                *hv += f.tanh();
+            }
+            inputs.push(x);
+        }
+        inputs
+    }
+
+    /// Logits over the vocab from a decode output (flat `(L*H, d)`):
+    /// per-layer output projections summed, final-normed, unembedded
+    /// through the tied embedding. Public so tests can pin the greedy
+    /// path against an argmax reference.
+    pub fn logits(&self, out: &[f32]) -> Vec<f32> {
+        let cfg = &self.w.cfg;
+        let hidden = cfg.hidden();
+        assert_eq!(out.len(), cfg.layers * hidden, "decode output has wrong geometry");
+        let mut z = vec![0.0f32; hidden];
+        for (l, lw) in self.w.layers.iter().enumerate() {
+            let o = matvec(&out[l * hidden..(l + 1) * hidden], &lw.wo, hidden);
+            for (zv, &ov) in z.iter_mut().zip(&o) {
+                *zv += ov;
+            }
+        }
+        let u = rmsnorm(&z, &self.w.final_norm);
+        let vocab = cfg.vocab as usize;
+        (0..vocab)
+            .map(|t| {
+                self.w.embed[t * hidden..(t + 1) * hidden]
+                    .iter()
+                    .zip(&u)
+                    .map(|(&e, &uv)| e * uv)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+impl TokenModel for TransformerModel {
+    fn geometry(&self) -> (usize, usize) {
+        self.w.cfg.geometry()
+    }
+
+    fn query(&self, token: u32, pos: usize) -> Vec<f32> {
+        let hidden = self.w.cfg.hidden();
+        let mut q = Vec::with_capacity(self.w.cfg.layers * hidden);
+        for (x, l) in self.layer_inputs(token, pos).iter().zip(&self.w.layers) {
+            q.extend(matvec(x, &l.wq, hidden));
+        }
+        q
+    }
+
+    fn kv(&self, token: u32, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        let hidden = self.w.cfg.hidden();
+        let mut k = Vec::with_capacity(self.w.cfg.layers * hidden);
+        let mut v = Vec::with_capacity(self.w.cfg.layers * hidden);
+        for (x, l) in self.layer_inputs(token, pos).iter().zip(&self.w.layers) {
+            k.extend(matvec(x, &l.wk, hidden));
+            v.extend(matvec(x, &l.wv, hidden));
+        }
+        (k, v)
+    }
+
+    fn next_token(&self, out: &[f32], _pos: usize) -> u32 {
+        sampler::argmax(&self.logits(out))
+    }
+
+    fn next_token_sampled(&self, out: &[f32], pos: usize, sampling: &Sampling) -> u32 {
+        sampler::sample(&self.logits(out), pos, sampling)
+    }
+
+    fn describe(&self) -> ModelInfo {
+        ModelInfo {
+            name: "transformer",
+            layers: self.w.cfg.layers,
+            vocab: self.w.cfg.vocab,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::weights::{ModelConfig, ModelWeights};
+    use super::*;
+
+    fn tiny() -> TransformerModel {
+        TransformerModel::new(ModelWeights::seeded(
+            ModelConfig { layers: 2, heads: 2, head_dim: 8, vocab: 64 },
+            11,
+        ))
+    }
+
+    #[test]
+    fn projections_are_pure_and_head_folded() {
+        let m = tiny();
+        assert_eq!(m.geometry(), (4, 8)); // 2 layers × 2 heads
+        assert_eq!(m.query(5, 3), m.query(5, 3));
+        assert_eq!(m.kv(5, 3), m.kv(5, 3));
+        assert_eq!(m.query(5, 3).len(), 32);
+        let (k, v) = m.kv(5, 3);
+        assert_eq!((k.len(), v.len()), (32, 32));
+        assert_ne!(m.query(5, 3), m.query(5, 4), "position matters");
+        assert_ne!(m.query(5, 3), m.query(6, 3), "token matters");
+        // layers see different projections of the same token
+        assert_ne!(k[..16], k[16..], "layer stripes must differ");
+        // out-of-vocab tokens fold onto embedding rows mod vocab
+        assert_eq!(m.kv(5 + 64, 3), m.kv(5, 3));
+    }
+
+    #[test]
+    fn greedy_equals_argmax_over_logits() {
+        let m = tiny();
+        for t in [0u32, 7, 40] {
+            let out = m.query(t, 2); // any (L*H, d) activation works as a probe
+            let logits = m.logits(&out);
+            assert_eq!(logits.len(), 64);
+            assert!(logits.iter().all(|x| x.is_finite()));
+            let greedy = m.next_token(&out, 2);
+            assert_eq!(greedy, sampler::argmax(&logits));
+            assert!(greedy < 64);
+            assert_eq!(
+                m.next_token_sampled(&out, 2, &Sampling::default()),
+                greedy,
+                "default sampling is greedy"
+            );
+        }
+    }
+
+    #[test]
+    fn sampled_tokens_stay_in_vocab_and_vary() {
+        let m = tiny();
+        let out = m.query(3, 1);
+        let s = Sampling { seed: 9, temperature: 1.2, top_k: 0, top_p: 1.0 };
+        let stream: Vec<u32> = (0..128).map(|p| m.next_token_sampled(&out, p, &s)).collect();
+        assert!(stream.iter().all(|&t| t < 64));
+        assert!(stream.iter().any(|&t| t != stream[0]), "hot sampling should vary");
+    }
+
+    #[test]
+    fn describe_reports_real_shape() {
+        let m = tiny();
+        assert_eq!(m.describe(), ModelInfo { name: "transformer", layers: 2, vocab: 64 });
+    }
+}

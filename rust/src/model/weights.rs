@@ -1,0 +1,409 @@
+//! Versioned on-disk weight manifest for [`super::TransformerModel`].
+//!
+//! A model directory holds two files, following the same conventions as
+//! the AOT artifact manifest ([`crate::runtime::manifest`]): a strict
+//! versioned JSON header and dumb binary payloads next to it.
+//!
+//!   - `model.json` — version, model config (layers / heads / head_dim /
+//!     vocab), and a per-tensor table of `{name, offset, elems}` byte
+//!     offsets into the payload, plus an FNV-1a checksum of the payload
+//!     bytes;
+//!   - `weights.bin` — every tensor as little-endian f32, concatenated.
+//!
+//! Load errors are loud and specific: unsupported versions, missing or
+//! malformed header fields, out-of-range tensor offsets, size and
+//! checksum mismatches all fail the boot instead of serving garbage
+//! weights. `ModelWeights::seeded` is the fixture generator behind
+//! `intfa gen-weights`: a tiny deterministic model for tests and CI.
+
+use crate::util::hash::{fnv1a_extend, fnv1a_init};
+use crate::util::json::{parse, Json};
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// `model.json` schema version.
+const MODEL_VERSION: i64 = 1;
+/// Header `kind` tag — distinguishes a model manifest from the AOT
+/// artifact manifest that shares the directory-of-JSON convention.
+const MODEL_KIND: &str = "intfa-model";
+const HEADER_FILE: &str = "model.json";
+const WEIGHTS_FILE: &str = "weights.bin";
+
+/// Transformer shape. `hidden == heads * head_dim` by construction —
+/// attention heads partition the residual stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub layers: usize,
+    /// Attention heads per layer.
+    pub heads: usize,
+    pub head_dim: usize,
+    pub vocab: u32,
+}
+
+impl ModelConfig {
+    /// Residual-stream width.
+    pub fn hidden(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// KV-cache geometry the model serves: every layer's heads occupy
+    /// their own row range of each block, so the pool runs
+    /// `layers * heads` rows of `head_dim` (layer ℓ owns rows
+    /// `ℓ*heads .. (ℓ+1)*heads` — its own stripe of the pool).
+    pub fn geometry(&self) -> (usize, usize) {
+        (self.layers * self.heads, self.head_dim)
+    }
+
+    /// Reject degenerate configs (zero dims, vocab < 2) before any
+    /// allocation happens.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers == 0 || self.heads == 0 || self.head_dim == 0 {
+            bail!(
+                "model config has empty dimensions ({}×{}×{})",
+                self.layers,
+                self.heads,
+                self.head_dim
+            );
+        }
+        if self.vocab < 2 {
+            bail!("model vocab must be at least 2, got {}", self.vocab);
+        }
+        Ok(())
+    }
+}
+
+/// One layer's parameters. Projections are row-major `[hidden][hidden]`
+/// (input index major), mapping the normed residual stream to the
+/// layer's `heads * head_dim` Q/K/V rows and back.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerWeights {
+    /// RMSNorm gain, `[hidden]`.
+    pub norm: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    /// Attention-output projection back into the logit stream.
+    pub wo: Vec<f32>,
+    /// Context-free feed-forward of the residual tower.
+    pub wff: Vec<f32>,
+}
+
+/// A full model: embeddings, per-layer weights, final norm. The
+/// unembedding is tied to `embed` (logits = E · u), halving fixture
+/// size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    /// Token embeddings, row-major `[vocab][hidden]`.
+    pub embed: Vec<f32>,
+    /// Final RMSNorm gain before the tied unembedding, `[hidden]`.
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+/// Expected tensor table for a config: `(name, elems)` in payload
+/// order. Shared by the writer, the loader and the size validation.
+fn tensor_table(cfg: &ModelConfig) -> Vec<(String, usize)> {
+    let hidden = cfg.hidden();
+    let mut t = vec![
+        ("embed".to_string(), cfg.vocab as usize * hidden),
+        ("final_norm".to_string(), hidden),
+    ];
+    for l in 0..cfg.layers {
+        t.push((format!("layer{l}.norm"), hidden));
+        for w in ["wq", "wk", "wv", "wo", "wff"] {
+            t.push((format!("layer{l}.{w}"), hidden * hidden));
+        }
+    }
+    t
+}
+
+fn checksum(bytes: &[u8]) -> u64 {
+    fnv1a_extend(fnv1a_init(0), bytes.iter().copied())
+}
+
+impl ModelWeights {
+    /// Deterministic seeded initialization — the `intfa gen-weights`
+    /// fixture generator. Every tensor draws from its own PRNG stream,
+    /// so a tensor's values depend only on `(seed, tensor)` and stay
+    /// stable if the config around it changes.
+    pub fn seeded(cfg: ModelConfig, seed: u64) -> ModelWeights {
+        cfg.validate().expect("seeded() needs a valid config");
+        let hidden = cfg.hidden();
+        // 1/sqrt(hidden) keeps projected activations near unit RMS —
+        // the regime the INT8 grids (and the uncalibrated fallback
+        // scale) are sized for
+        let proj_scale = 1.0 / (hidden as f32).sqrt();
+        let mat = |stream: u64, n: usize, scale: f32| -> Vec<f32> {
+            let mut rng = Pcg64::new(seed, stream);
+            let mut v = rng.normal_vec(n);
+            for x in &mut v {
+                *x *= scale;
+            }
+            v
+        };
+        let gain = |stream: u64, n: usize| -> Vec<f32> {
+            let mut rng = Pcg64::new(seed, stream);
+            rng.uniform_vec(n, 0.9, 1.1)
+        };
+        let layers = (0..cfg.layers)
+            .map(|l| {
+                let base = 16 + l as u64 * 8;
+                LayerWeights {
+                    norm: gain(base, hidden),
+                    wq: mat(base + 1, hidden * hidden, proj_scale),
+                    wk: mat(base + 2, hidden * hidden, proj_scale),
+                    wv: mat(base + 3, hidden * hidden, proj_scale),
+                    wo: mat(base + 4, hidden * hidden, proj_scale),
+                    wff: mat(base + 5, hidden * hidden, proj_scale),
+                }
+            })
+            .collect();
+        ModelWeights {
+            cfg,
+            embed: mat(1, cfg.vocab as usize * hidden, 1.0),
+            final_norm: gain(2, hidden),
+            layers,
+        }
+    }
+
+    /// Flatten into payload order (the order [`tensor_table`] names).
+    fn tensors(&self) -> Vec<&[f32]> {
+        let mut out: Vec<&[f32]> = vec![&self.embed, &self.final_norm];
+        for l in &self.layers {
+            out.push(&l.norm);
+            out.push(&l.wq);
+            out.push(&l.wk);
+            out.push(&l.wv);
+            out.push(&l.wo);
+            out.push(&l.wff);
+        }
+        out
+    }
+
+    /// Write `model.json` + `weights.bin` into `dir` (created if
+    /// absent).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).with_context(|| format!("creating model dir {dir:?}"))?;
+        let table = tensor_table(&self.cfg);
+        let tensors = self.tensors();
+        let mut bytes: Vec<u8> = Vec::new();
+        let mut specs: Vec<Json> = Vec::new();
+        for ((name, elems), data) in table.iter().zip(&tensors) {
+            assert_eq!(data.len(), *elems, "tensor {name} size drifted from its table entry");
+            specs.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("offset", Json::num(bytes.len() as f64)),
+                ("elems", Json::num(*elems as f64)),
+            ]));
+            for x in *data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        // u64 doesn't round-trip through a JSON f64 — hex string instead
+        let sum = format!("{:016x}", checksum(&bytes));
+        let header = Json::obj(vec![
+            ("version", Json::num(MODEL_VERSION as f64)),
+            ("kind", Json::str(MODEL_KIND)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("layers", Json::num(self.cfg.layers as f64)),
+                    ("heads", Json::num(self.cfg.heads as f64)),
+                    ("head_dim", Json::num(self.cfg.head_dim as f64)),
+                    ("vocab", Json::num(self.cfg.vocab as f64)),
+                ]),
+            ),
+            ("data", Json::str(WEIGHTS_FILE)),
+            ("fnv1a", Json::str(&sum)),
+            ("tensors", Json::Arr(specs)),
+        ]);
+        std::fs::write(dir.join(WEIGHTS_FILE), &bytes)
+            .with_context(|| format!("writing {:?}", dir.join(WEIGHTS_FILE)))?;
+        std::fs::write(dir.join(HEADER_FILE), header.to_pretty())
+            .with_context(|| format!("writing {:?}", dir.join(HEADER_FILE)))?;
+        Ok(())
+    }
+
+    /// Load and validate a model directory. Malformed headers, missing
+    /// tensors, bad offsets and payload corruption are all hard errors.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelWeights> {
+        let dir = dir.as_ref();
+        let header_path = dir.join(HEADER_FILE);
+        let text = std::fs::read_to_string(&header_path)
+            .with_context(|| format!("reading model header {header_path:?}"))?;
+        let j = parse(&text).map_err(|e| anyhow!("parsing {header_path:?}: {e}"))?;
+        let version = j.at("version").as_i64().unwrap_or(0);
+        if version != MODEL_VERSION {
+            bail!("unsupported model manifest version {version} (supported: {MODEL_VERSION})");
+        }
+        match j.at("kind").as_str() {
+            Some(MODEL_KIND) => {}
+            other => bail!("not a model manifest: kind {other:?} (expected {MODEL_KIND:?})"),
+        }
+        let c = j.at("config");
+        let field = |key: &str| -> Result<usize> {
+            c.at(key).as_usize().ok_or_else(|| anyhow!("model config missing {key}"))
+        };
+        let cfg = ModelConfig {
+            layers: field("layers")?,
+            heads: field("heads")?,
+            head_dim: field("head_dim")?,
+            vocab: field("vocab")? as u32,
+        };
+        cfg.validate()?;
+        let data_file = j
+            .at("data")
+            .as_str()
+            .ok_or_else(|| anyhow!("model header missing data file"))?;
+        let bin_path = dir.join(data_file);
+        let bytes = std::fs::read(&bin_path)
+            .with_context(|| format!("reading model weights {bin_path:?}"))?;
+        if let Some(sum) = j.at("fnv1a").as_str() {
+            let want = u64::from_str_radix(sum, 16)
+                .map_err(|_| anyhow!("malformed fnv1a checksum {sum:?}"))?;
+            let got = checksum(&bytes);
+            if got != want {
+                bail!("weights checksum mismatch: header {want:016x}, payload {got:016x}");
+            }
+        }
+        // index the header's tensor table by name
+        let specs = j
+            .at("tensors")
+            .as_arr()
+            .ok_or_else(|| anyhow!("model header missing tensors"))?;
+        let mut by_name = std::collections::BTreeMap::new();
+        for s in specs {
+            let name = s.at("name").as_str().ok_or_else(|| anyhow!("tensor spec missing name"))?;
+            let offset = s
+                .at("offset")
+                .as_usize()
+                .ok_or_else(|| anyhow!("tensor {name} missing offset"))?;
+            let elems = s
+                .at("elems")
+                .as_usize()
+                .ok_or_else(|| anyhow!("tensor {name} missing elems"))?;
+            by_name.insert(name.to_string(), (offset, elems));
+        }
+        let read_tensor = |name: &str, want_elems: usize| -> Result<Vec<f32>> {
+            let &(offset, elems) = by_name
+                .get(name)
+                .ok_or_else(|| anyhow!("model is missing tensor {name}"))?;
+            if elems != want_elems {
+                bail!("tensor {name} has {elems} elems, config implies {want_elems}");
+            }
+            let len = elems.checked_mul(4).ok_or_else(|| anyhow!("tensor {name} overflows"))?;
+            let end = offset.checked_add(len).ok_or_else(|| anyhow!("tensor {name} overflows"))?;
+            if offset % 4 != 0 || end > bytes.len() {
+                bail!(
+                    "tensor {name} spans bytes {offset}..{end} of a {}-byte payload",
+                    bytes.len()
+                );
+            }
+            Ok(bytes[offset..end]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect())
+        };
+        let hidden = cfg.hidden();
+        let layers = (0..cfg.layers)
+            .map(|l| {
+                Ok(LayerWeights {
+                    norm: read_tensor(&format!("layer{l}.norm"), hidden)?,
+                    wq: read_tensor(&format!("layer{l}.wq"), hidden * hidden)?,
+                    wk: read_tensor(&format!("layer{l}.wk"), hidden * hidden)?,
+                    wv: read_tensor(&format!("layer{l}.wv"), hidden * hidden)?,
+                    wo: read_tensor(&format!("layer{l}.wo"), hidden * hidden)?,
+                    wff: read_tensor(&format!("layer{l}.wff"), hidden * hidden)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelWeights {
+            cfg,
+            embed: read_tensor("embed", cfg.vocab as usize * hidden)?,
+            final_norm: read_tensor("final_norm", hidden)?,
+            layers,
+        })
+        .and_then(|w| {
+            // weights must be finite: one NaN would poison every grid
+            let all = w.tensors().iter().flat_map(|t| t.iter()).all(|x| x.is_finite());
+            if all {
+                Ok(w)
+            } else {
+                Err(anyhow!("model weights contain non-finite values"))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("intfa-model-{name}-{}", std::process::id()))
+    }
+
+    fn tiny() -> ModelConfig {
+        ModelConfig { layers: 2, heads: 2, head_dim: 8, vocab: 64 }
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_shaped() {
+        let a = ModelWeights::seeded(tiny(), 11);
+        let b = ModelWeights::seeded(tiny(), 11);
+        assert_eq!(a, b);
+        let c = ModelWeights::seeded(tiny(), 12);
+        assert_ne!(a.embed, c.embed, "seed must matter");
+        assert_eq!(a.cfg.geometry(), (4, 8));
+        assert_eq!(a.embed.len(), 64 * 16);
+        assert_eq!(a.layers.len(), 2);
+        assert_eq!(a.layers[0].wq.len(), 16 * 16);
+        assert!(a.layers[0].norm.iter().all(|&g| (0.9..=1.1).contains(&g)));
+    }
+
+    #[test]
+    fn save_load_round_trip_is_identical() {
+        let dir = tmp_dir("roundtrip");
+        let w = ModelWeights::seeded(tiny(), 7);
+        w.save(&dir).unwrap();
+        let restored = ModelWeights::load(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(restored, w);
+    }
+
+    #[test]
+    fn load_rejects_corruption() {
+        let dir = tmp_dir("corrupt");
+        let w = ModelWeights::seeded(tiny(), 7);
+        w.save(&dir).unwrap();
+
+        // flipped payload byte → checksum mismatch
+        let bin = dir.join(WEIGHTS_FILE);
+        let mut bytes = std::fs::read(&bin).unwrap();
+        bytes[8] ^= 0xff;
+        std::fs::write(&bin, &bytes).unwrap();
+        let err = ModelWeights::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        bytes[8] ^= 0xff;
+
+        // truncated payload → tensor out of range
+        std::fs::write(&bin, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(ModelWeights::load(&dir).is_err());
+        std::fs::write(&bin, &bytes).unwrap();
+        assert!(ModelWeights::load(&dir).is_ok(), "restored payload must load again");
+
+        // wrong version and wrong kind are both rejected
+        let header = std::fs::read_to_string(dir.join(HEADER_FILE)).unwrap();
+        std::fs::write(dir.join(HEADER_FILE), header.replace("\"version\": 1", "\"version\": 99"))
+            .unwrap();
+        assert!(ModelWeights::load(&dir).unwrap_err().to_string().contains("version"));
+        std::fs::write(dir.join(HEADER_FILE), header.replace(MODEL_KIND, "not-a-model")).unwrap();
+        assert!(ModelWeights::load(&dir).is_err());
+
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(ModelWeights::load(&dir).is_err(), "missing dir is an error");
+    }
+}

@@ -99,7 +99,7 @@
 //!     client-observed anomaly resolves to the exact ticks, stripe and
 //!     preemption cycle that produced it.
 
-use super::model::TokenModel;
+use super::model::{Sampling, TokenModel};
 use super::queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority, ShedCause};
 use super::stripe::StripedKvCache;
 use crate::calib::Recalibrator;
@@ -214,6 +214,9 @@ struct Submit {
     tokens: Vec<u32>,
     max_new: usize,
     class: Priority,
+    /// Per-request sampling params, handed to the model at every
+    /// next-token step.
+    sampling: Sampling,
     stream: Sender<StreamEvent>,
     /// Client-side submit stamp: the TTFT / end-to-end origin.
     enqueued_at: Instant,
@@ -238,6 +241,9 @@ struct Pending {
     /// Tokens generated and streamed before a preemption (empty for
     /// fresh submissions); never re-streamed.
     generated: Vec<u32>,
+    /// Sampling params; carried across preempt/requeue unchanged (the
+    /// replayed tail must be re-sampled under the same params).
+    sampling: Sampling,
     stream: Sender<StreamEvent>,
     /// For preemption requeues: the victim's admission-time config,
     /// pinned across the requeue so replay rebuilds its history on the
@@ -273,6 +279,8 @@ struct Active {
     appended: usize,
     max_new: usize,
     generated: Vec<u32>,
+    /// Per-request sampling params (see [`Pending::sampling`]).
+    sampling: Sampling,
     stream: Sender<StreamEvent>,
     stalled: usize,
     /// Priority class (preemption eligibility: strictly lower classes
@@ -375,6 +383,22 @@ impl Scheduler {
         class: Priority,
         trace: u64,
     ) -> Receiver<StreamEvent> {
+        self.submit_sampled(id, tokens, max_new, class, trace, Sampling::default())
+    }
+
+    /// [`Scheduler::submit_traced`] with per-request [`Sampling`]
+    /// params, handed to the model at every next-token step. The
+    /// default params mean greedy decoding, so the untouched submit
+    /// surfaces keep their historical streams bit-for-bit.
+    pub fn submit_sampled(
+        &self,
+        id: u64,
+        tokens: Vec<u32>,
+        max_new: usize,
+        class: Priority,
+        trace: u64,
+        sampling: Sampling,
+    ) -> Receiver<StreamEvent> {
         let (stx, srx) = mpsc::channel();
         let sub = Submit {
             id,
@@ -382,6 +406,7 @@ impl Scheduler {
             tokens,
             max_new,
             class,
+            sampling,
             stream: stx.clone(),
             enqueued_at: Instant::now(),
         };
@@ -425,6 +450,7 @@ fn enqueue(
         tokens: s.tokens,
         max_new: s.max_new,
         generated: Vec::new(),
+        sampling: s.sampling,
         stream: s.stream,
         cfg: None,
         enqueued_at: s.enqueued_at,
@@ -759,6 +785,7 @@ fn tick_loop(
                         appended: cached,
                         max_new: e.item.max_new,
                         generated: e.item.generated,
+                        sampling: e.item.sampling,
                         stream: e.item.stream,
                         stalled: 0,
                         class: e.class,
@@ -893,7 +920,7 @@ fn tick_loop(
             match out {
                 Ok(o) => {
                     let pos = a.tokens.len() - 1;
-                    let next = model.next_token(o, pos);
+                    let next = model.next_token_sampled(o, pos, &a.sampling);
                     tokens_out.inc();
                     progressed = true;
                     let send = a.stream.send(StreamEvent::Token {
@@ -1120,6 +1147,7 @@ fn preempt(
             tokens: v.tokens,
             max_new: v.max_new,
             generated: v.generated,
+            sampling: v.sampling,
             stream: v.stream,
             cfg,
             // lifecycle stamps survive the cycle: TTFT stays

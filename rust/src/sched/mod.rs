@@ -32,10 +32,13 @@
 //!     ([`crate::kv::decode_views`] over pinned lock-free views), and
 //!     yields tokens to per-sequence streams
 //!     ([`loop_::StreamEvent`]).
-//!   - [`model`]: the deterministic [`model::TokenModel`] closing the
+//!   - [`model`]: the [`model::TokenModel`] seam closing the
 //!     autoregressive loop (query/K/V activations per token, next-token
-//!     selection from attention output). [`model::HashModel`] is the
-//!     reference pseudo-LM used by tests, benches and `intfa serve`.
+//!     selection from attention output, per-request
+//!     [`model::Sampling`]). `intfa serve --model` plugs in the
+//!     artifact-backed [`crate::model::TransformerModel`];
+//!     [`model::HashModel`] is the deterministic stand-in used by tests,
+//!     benches and model-less serving.
 //!
 //! # Exactness contract
 //!
@@ -58,6 +61,6 @@ pub mod queue;
 pub mod stripe;
 
 pub use loop_::{SchedConfig, Scheduler, StreamEvent};
-pub use model::{HashModel, TokenModel};
+pub use model::{HashModel, ModelInfo, Sampling, TokenModel};
 pub use queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority, ShedCause};
 pub use stripe::StripedKvCache;

@@ -1,26 +1,92 @@
 //! The token model closing the scheduler's autoregressive loop.
 //!
-//! The serving stack is attention-only — there is no transformer LM on
-//! the rust side — so generation needs a pluggable source of per-token
-//! activations and a next-token rule. [`TokenModel`] is that seam: the
-//! scheduler (and any sequential baseline it is checked against) asks
-//! it for the decode query, the appended K/V rows and the next token.
+//! Generation needs a pluggable source of per-token activations and a
+//! next-token rule. [`TokenModel`] is that seam: the scheduler (and any
+//! sequential baseline it is checked against) asks it for the decode
+//! query, the appended K/V rows and the next token. Two implementations
+//! serve it today: [`crate::model::TransformerModel`], the
+//! artifact-backed multi-layer LM (`intfa serve --model`), and
+//! [`HashModel`], the PRNG stand-in for tests and determinism checks.
 //!
 //! Determinism is load-bearing, not cosmetic. Radix prefix reuse is
 //! only sound when an identical token prefix reproduces identical K/V
 //! rows (the serving invariant the kv/ tests pin down), and the
 //! scheduler's bit-identity contract — continuous batching yields the
 //! same streams as sequential per-call decode — is only *testable*
-//! when both sides consult the same deterministic model.
+//! when both sides consult the same deterministic model. Real models
+//! keep the contract the same way the hash stand-in does: `kv`/`query`
+//! are pure functions of `(token, pos)`, and sampling
+//! ([`TokenModel::next_token_sampled`]) is a pure function of its
+//! arguments — no RNG state carried between steps — so preempt/replay
+//! reproduces identical streams.
 //!
-//! [`HashModel`] is the reference implementation: activations are PRNG
-//! rows keyed by `(token, position)`, next-token selection hashes the
-//! attention output's exact bit pattern. Any numeric divergence
-//! anywhere in the batched path therefore derails the token stream
-//! immediately — making the property tests maximally sensitive.
+//! [`HashModel`] remains the bit-sensitivity reference: activations are
+//! PRNG rows keyed by `(token, position)`, next-token selection hashes
+//! the attention output's exact bit pattern. Any numeric divergence
+//! anywhere in the batched path derails its token stream immediately —
+//! making the property tests maximally sensitive.
 
 use crate::util::hash::{fnv1a_extend, fnv1a_init};
 use crate::util::rng::Pcg64;
+
+/// Per-request sampling parameters, threaded from the `generate` wire
+/// verb through the scheduler to [`TokenModel::next_token_sampled`].
+///
+/// The defaults mean greedy decoding: `temperature == 0` selects the
+/// argmax and the seed is never consulted. Streams are a pure function
+/// of (params, decode output, position) — deliberately no mutable RNG
+/// state — so continuous batching, striping and preempt/replay leave
+/// sampled streams bit-identical, the same contract greedy streams
+/// already have.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sampling {
+    /// PRNG seed; each step derives its own stream from `(seed, pos)`.
+    pub seed: u64,
+    /// Softmax temperature; `<= 0` means greedy (argmax).
+    pub temperature: f32,
+    /// Keep only the k highest-logit candidates; `0` disables.
+    pub top_k: usize,
+    /// Nucleus sampling mass in `(0, 1]`; `1.0` disables.
+    pub top_p: f32,
+}
+
+impl Default for Sampling {
+    fn default() -> Sampling {
+        Sampling { seed: 0, temperature: 0.0, top_k: 0, top_p: 1.0 }
+    }
+}
+
+impl Sampling {
+    /// Greedy requests never consult the seed or the truncation knobs.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// The wire-level validity rule, shared by the protocol decoder and
+    /// direct submitters: malformed params are rejected up front, never
+    /// silently clamped into a different request.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(format!("temperature must be finite and >= 0, got {}", self.temperature));
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            return Err(format!("top_p must be in (0, 1], got {}", self.top_p));
+        }
+        Ok(())
+    }
+}
+
+/// Static model facts for observability (`model.layers` / `model.vocab`
+/// gauges) and logging — not consulted on the decode path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelInfo {
+    /// Implementation name for log lines ("hash", "transformer").
+    pub name: &'static str,
+    /// Transformer layer count (1 for the hash stand-in).
+    pub layers: usize,
+    /// Token-id range generated tokens are drawn from.
+    pub vocab: u32,
+}
 
 /// Deterministic autoregressive model surface: everything the tick loop
 /// needs to run a sequence, with no state of its own.
@@ -40,6 +106,18 @@ pub trait TokenModel: Send + Sync {
     /// Next token given the decode output (flat (heads, d)) of the step
     /// from position `pos`.
     fn next_token(&self, out: &[f32], pos: usize) -> u32;
+
+    /// Next token under per-request [`Sampling`] params. Must be a pure
+    /// function of its arguments (replay bit-identity depends on it).
+    /// The default ignores the params — models without logits (the hash
+    /// stand-in) sample nothing.
+    fn next_token_sampled(&self, out: &[f32], pos: usize, sampling: &Sampling) -> u32 {
+        let _ = sampling;
+        self.next_token(out, pos)
+    }
+
+    /// Static descriptor for observability gauges and boot logs.
+    fn describe(&self) -> ModelInfo;
 }
 
 fn splitmix(mut x: u64) -> u64 {
@@ -97,6 +175,10 @@ impl TokenModel for HashModel {
         });
         (h % self.vocab as u64) as u32
     }
+
+    fn describe(&self) -> ModelInfo {
+        ModelInfo { name: "hash", layers: 1, vocab: self.vocab }
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +203,24 @@ mod tests {
         let mut tweaked = out.clone();
         tweaked[0] = f32::from_bits(tweaked[0].to_bits() ^ 1);
         assert_ne!(m.next_token(&out, 2), m.next_token(&tweaked, 2));
+    }
+
+    #[test]
+    fn sampling_defaults_and_validation() {
+        let d = Sampling::default();
+        assert!(d.is_greedy());
+        assert!(d.validate().is_ok());
+        // the hash stand-in has no logits: sampled == greedy by default
+        let m = HashModel::new(2, 8);
+        let out = m.query(1, 1);
+        let s = Sampling { seed: 9, temperature: 0.8, top_k: 5, top_p: 0.9 };
+        assert!(s.validate().is_ok());
+        assert_eq!(m.next_token_sampled(&out, 2, &s), m.next_token(&out, 2));
+        // malformed params are rejected, not clamped
+        assert!(Sampling { temperature: f32::NAN, ..d }.validate().is_err());
+        assert!(Sampling { temperature: -1.0, ..d }.validate().is_err());
+        assert!(Sampling { top_p: 0.0, ..d }.validate().is_err());
+        assert!(Sampling { top_p: 1.5, ..d }.validate().is_err());
+        assert_eq!(m.describe(), ModelInfo { name: "hash", layers: 1, vocab: 50_000 });
     }
 }

@@ -3,7 +3,7 @@
 use crate::coordinator::engine::PrefillResponse;
 use crate::coordinator::request::{AccuracyClass, RequestPayload};
 use crate::coordinator::Response;
-use crate::sched::Priority;
+use crate::sched::{Priority, Sampling};
 use crate::util::json::{parse, Json};
 
 /// Decoded client request.
@@ -31,8 +31,20 @@ pub enum WireRequest {
     /// trace id that is echoed on every streamed line and stamped into
     /// lifecycle and flight-recorder events server-side; when omitted
     /// the server assigns the request id so streams are always
-    /// correlatable.
-    Generate { tokens: Vec<u32>, max_new: usize, priority: Priority, trace: Option<u64> },
+    /// correlatable. Optional sampling fields select seeded sampling
+    /// when the served model has logits: `temperature` (float, `0`
+    /// or omitted = greedy), `seed` (u64, default 0), `top_k`
+    /// (candidate cap, `0`/omitted = off), `top_p` (nucleus mass in
+    /// `(0, 1]`, `1.0`/omitted = off). Malformed values are rejected,
+    /// never clamped; the same `(seed, params)` always replays the
+    /// same stream.
+    Generate {
+        tokens: Vec<u32>,
+        max_new: usize,
+        priority: Priority,
+        trace: Option<u64>,
+        sampling: Sampling,
+    },
     /// Online re-calibration: status snapshot, or an operator-forced
     /// scale hot-swap (`{"type":"recalib","force":true}`). Swaps never
     /// change tokens of already-admitted streams (the epoch invariant).
@@ -162,11 +174,44 @@ pub fn decode_request(line: &str) -> Result<WireRequest, String> {
                         .ok_or_else(|| "trace: expected an unsigned integer".to_string())?,
                 )
             };
+            // sampling params: absent fields keep the greedy defaults;
+            // present-but-malformed fields are rejected (the protocol
+            // never clamps a request into a different one)
+            let mut sampling = Sampling::default();
+            let num_field = |key: &str| -> Result<Option<f64>, String> {
+                let v = j.at(key);
+                if v.is_null() {
+                    Ok(None)
+                } else {
+                    v.as_f64().map(Some).ok_or_else(|| format!("{key}: expected a number"))
+                }
+            };
+            if let Some(t) = num_field("temperature")? {
+                sampling.temperature = t as f32;
+            }
+            if let Some(p) = num_field("top_p")? {
+                sampling.top_p = p as f32;
+            }
+            let sj = j.at("seed");
+            if !sj.is_null() {
+                sampling.seed = sj
+                    .as_usize()
+                    .map(|x| x as u64)
+                    .ok_or_else(|| "seed: expected an unsigned integer".to_string())?;
+            }
+            let kj = j.at("top_k");
+            if !kj.is_null() {
+                sampling.top_k = kj
+                    .as_usize()
+                    .ok_or_else(|| "top_k: expected an unsigned integer".to_string())?;
+            }
+            sampling.validate()?;
             Ok(WireRequest::Generate {
                 tokens: u32_array(&j, "tokens")?,
                 max_new: j.at("max_new").as_usize().ok_or("missing max_new")?,
                 priority,
                 trace,
+                sampling,
             })
         }
         Some(other) => Err(format!("unknown request type {other:?}")),
@@ -410,11 +455,12 @@ mod tests {
     #[test]
     fn decode_and_encode_generate() {
         match decode_request(r#"{"type":"generate","tokens":[1,2,3],"max_new":8}"#).unwrap() {
-            WireRequest::Generate { tokens, max_new, priority, trace } => {
+            WireRequest::Generate { tokens, max_new, priority, trace, sampling } => {
                 assert_eq!(tokens, vec![1, 2, 3]);
                 assert_eq!(max_new, 8);
                 assert_eq!(priority, Priority::Batch, "omitted priority defaults to batch");
                 assert_eq!(trace, None, "omitted trace stays unset (server assigns)");
+                assert_eq!(sampling, Sampling::default(), "omitted sampling means greedy");
             }
             other => panic!("{other:?}"),
         }
@@ -459,6 +505,33 @@ mod tests {
         .is_err());
         assert!(decode_request(r#"{"type":"generate","tokens":[1]}"#).is_err());
         assert!(decode_request(r#"{"type":"generate","max_new":4}"#).is_err());
+
+        // sampling fields decode into Sampling; malformed ones reject
+        let hot = decode_request(
+            r#"{"type":"generate","tokens":[1],"max_new":2,
+               "seed":7,"temperature":0.8,"top_k":40,"top_p":0.95}"#,
+        )
+        .unwrap();
+        match hot {
+            WireRequest::Generate { sampling, .. } => {
+                assert_eq!(sampling.seed, 7);
+                assert_eq!(sampling.temperature, 0.8);
+                assert_eq!(sampling.top_k, 40);
+                assert_eq!(sampling.top_p, 0.95);
+                assert!(!sampling.is_greedy());
+            }
+            other => panic!("{other:?}"),
+        }
+        for bad in [
+            r#"{"type":"generate","tokens":[1],"max_new":2,"temperature":-0.5}"#,
+            r#"{"type":"generate","tokens":[1],"max_new":2,"temperature":"hot"}"#,
+            r#"{"type":"generate","tokens":[1],"max_new":2,"top_p":0.0}"#,
+            r#"{"type":"generate","tokens":[1],"max_new":2,"top_p":1.5}"#,
+            r#"{"type":"generate","tokens":[1],"max_new":2,"top_k":-3}"#,
+            r#"{"type":"generate","tokens":[1],"max_new":2,"seed":"abc"}"#,
+        ] {
+            assert!(decode_request(bad).is_err(), "must reject {bad}");
+        }
 
         let line = encode_stream_token(7, 99, 12, 400);
         let j = crate::util::json::parse(&line).unwrap();

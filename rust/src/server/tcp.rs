@@ -161,10 +161,10 @@ fn handle_connection(
                 Ok(()) => WireResponse::Done,
                 Err(e) => WireResponse::Error(e),
             },
-            Ok(WireRequest::Generate { tokens, max_new, priority, trace }) => {
+            Ok(WireRequest::Generate { tokens, max_new, priority, trace, sampling }) => {
                 // streaming verb: tokens go out line by line as their
                 // scheduler ticks complete, then one terminal line
-                stream_generate(&mut writer, &engine, tokens, max_new, priority, trace)?;
+                stream_generate(&mut writer, &engine, tokens, max_new, priority, trace, sampling)?;
                 continue;
             }
         };
@@ -184,10 +184,11 @@ fn stream_generate(
     max_new: usize,
     priority: crate::sched::Priority,
     trace: Option<u64>,
+    sampling: crate::sched::Sampling,
 ) -> std::io::Result<()> {
     use crate::sched::StreamEvent;
     use crate::server::protocol::{encode_generate_done, encode_stream_token};
-    let (id, rx) = match engine.generate_traced(tokens, max_new, priority, trace) {
+    let (id, rx) = match engine.generate_sampled(tokens, max_new, priority, trace, sampling) {
         Ok(pair) => pair,
         Err(e) => {
             writer.write_all(encode_generate_done(0, trace.unwrap_or(0), Err(&e)).as_bytes())?;
@@ -417,6 +418,23 @@ impl Client {
         max_new: usize,
         priority: &str,
         trace: Option<u64>,
+        on_token: impl FnMut(u64, usize, u32),
+    ) -> std::io::Result<crate::util::json::Json> {
+        let sampling = crate::sched::Sampling::default();
+        self.generate_streaming_sampled(tokens, max_new, priority, trace, sampling, on_token)
+    }
+
+    /// [`Client::generate_streaming_traced`] with per-request sampling
+    /// params. Default-valued fields are omitted from the wire line, so
+    /// a greedy request is byte-identical to one sent by the older
+    /// surfaces.
+    pub fn generate_streaming_sampled(
+        &mut self,
+        tokens: &[u32],
+        max_new: usize,
+        priority: &str,
+        trace: Option<u64>,
+        sampling: crate::sched::Sampling,
         mut on_token: impl FnMut(u64, usize, u32),
     ) -> std::io::Result<crate::util::json::Json> {
         use crate::util::json::Json;
@@ -433,6 +451,19 @@ impl Client {
         }
         if let Some(t) = trace {
             fields.push(("trace", Json::num(t as f64)));
+        }
+        let d = crate::sched::Sampling::default();
+        if sampling.temperature != d.temperature {
+            fields.push(("temperature", Json::num(sampling.temperature as f64)));
+        }
+        if sampling.seed != d.seed {
+            fields.push(("seed", Json::num(sampling.seed as f64)));
+        }
+        if sampling.top_k != d.top_k {
+            fields.push(("top_k", Json::num(sampling.top_k as f64)));
+        }
+        if sampling.top_p != d.top_p {
+            fields.push(("top_p", Json::num(sampling.top_p as f64)));
         }
         let req = Json::obj(fields);
         self.writer.write_all(req.to_string().as_bytes())?;

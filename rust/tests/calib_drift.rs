@@ -51,6 +51,7 @@ fn artifact(plan: CalibrationPlan) -> CalibrationArtifact {
         reports: Vec::new(),
         geometry: None,
         drift: None,
+        layer_plans: Default::default(),
     }
 }
 

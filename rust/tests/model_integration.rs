@@ -1,0 +1,306 @@
+//! model/ integration: the artifact-backed transformer rides the same
+//! scheduling invariants HashModel pinned down, plus the sampling ones
+//! it introduces.
+//!
+//! The load-bearing properties:
+//!
+//!   1. batched [`TransformerModel`] streams are bit-identical to a
+//!      sequential per-call decode loop over the same weights — the
+//!      head-folded (layers × heads) geometry changes nothing about
+//!      exact scheduling;
+//!   2. sampled streams are a pure function of (weights, prompt,
+//!      sampling): the same seed + params yield bit-identical streams
+//!      across concurrency caps, stripe counts and preempt/replay;
+//!   3. the greedy path is the argmax reference: `Sampling::default()`
+//!      and `top_k = 1` both reproduce `argmax(logits)` exactly.
+
+use int_flashattention::coordinator::metrics::Registry;
+use int_flashattention::kv::CacheConfig;
+use int_flashattention::model::{ModelConfig, ModelWeights, TransformerModel};
+use int_flashattention::sched::{
+    Priority, Sampling, SchedConfig, Scheduler, StreamEvent, StripedKvCache, TokenModel,
+};
+use int_flashattention::util::proptest::{check, Config, Pair, UsizeRange};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+const LAYERS: usize = 2;
+const HEADS: usize = 2;
+const HEAD_DIM: usize = 8;
+const VOCAB: u32 = 64;
+
+fn tiny_model(seed: u64) -> Arc<TransformerModel> {
+    let cfg = ModelConfig { layers: LAYERS, heads: HEADS, head_dim: HEAD_DIM, vocab: VOCAB };
+    Arc::new(TransformerModel::new(ModelWeights::seeded(cfg, seed)))
+}
+
+/// Pool geometry for the folded (layers × heads) stripe rows.
+fn cache_cfg(max_blocks: usize) -> CacheConfig {
+    CacheConfig { block_tokens: 4, max_blocks, ..CacheConfig::new(LAYERS * HEADS, HEAD_DIM) }
+}
+
+/// The reference semantics: one sequence at a time, per-call
+/// `start_sequence` / `append_token` / `decode_splitk`, sampling each
+/// next token through the same per-step [`Sampling`] the scheduler
+/// hands the model.
+fn sequential_generate(
+    cache: &StripedKvCache,
+    model: &dyn TokenModel,
+    prompt: &[u32],
+    max_new: usize,
+    sampling: &Sampling,
+) -> Vec<u32> {
+    let (seq, cached) = cache.start_sequence(prompt);
+    let mut tokens = prompt.to_vec();
+    for pos in cached..tokens.len() {
+        let (k, v) = model.kv(tokens[pos], pos);
+        cache.append_token(seq, tokens[pos], &k, &v).expect("baseline pool sized");
+    }
+    let mut generated = Vec::new();
+    while generated.len() < max_new {
+        let pos = tokens.len() - 1;
+        let q = model.query(tokens[pos], pos);
+        let out = cache.decode_splitk(seq, &q, None, 1).expect("decode");
+        let next = model.next_token_sampled(&out, pos, sampling);
+        generated.push(next);
+        tokens.push(next);
+        if generated.len() < max_new {
+            let (k, v) = model.kv(next, pos + 1);
+            cache.append_token(seq, next, &k, &v).expect("baseline pool sized");
+        }
+    }
+    cache.free_sequence(seq).expect("free");
+    generated
+}
+
+fn drain(rx: Receiver<StreamEvent>) -> Result<Vec<u32>, String> {
+    let mut streamed = Vec::new();
+    loop {
+        match rx.recv().map_err(|_| "stream dropped".to_string())? {
+            StreamEvent::Token { token, .. } => streamed.push(token),
+            StreamEvent::Done { tokens, .. } => {
+                assert_eq!(tokens, streamed, "Done tail equals the streamed tokens");
+                return Ok(tokens);
+            }
+            StreamEvent::Failed { reason, .. } => return Err(reason),
+        }
+    }
+}
+
+/// Like [`drain`] but tolerates that the stream's first token was
+/// already consumed off the channel.
+fn drain_rest(rx: Receiver<StreamEvent>) -> Result<Vec<u32>, String> {
+    let mut streamed = Vec::new();
+    loop {
+        match rx.recv().map_err(|_| "stream dropped".to_string())? {
+            StreamEvent::Token { token, .. } => streamed.push(token),
+            StreamEvent::Done { tokens, .. } => {
+                assert_eq!(&tokens[1..], streamed.as_slice(), "Done tail matches");
+                return Ok(streamed);
+            }
+            StreamEvent::Failed { reason, .. } => return Err(reason),
+        }
+    }
+}
+
+/// Deterministic prompt set over the model's real vocab.
+fn prompt_set(seed: u64, count: usize) -> Vec<(Vec<u32>, usize)> {
+    let mut rng = int_flashattention::util::rng::Pcg64::new(seed, 13);
+    (0..count)
+        .map(|_| {
+            let base = rng.next_range(u64::from(VOCAB) - 20) as u32;
+            let len = 1 + rng.next_range(12) as usize;
+            let max_new = 1 + rng.next_range(8) as usize;
+            ((0..len as u32).map(|i| base + (i % 16)).collect(), max_new)
+        })
+        .collect()
+}
+
+fn hot_sampling(seed: u64) -> Sampling {
+    Sampling { seed, temperature: 0.9, top_k: 16, top_p: 0.95 }
+}
+
+#[test]
+fn property_batched_transformer_matches_sequential() {
+    // random (seed, concurrency cap): greedy transformer streams under
+    // continuous batching must equal their sequential per-call twins
+    // bit for bit — the invariant sched_integration pins for the hash
+    // model, now over the real head-folded layered geometry
+    let g = Pair(UsizeRange(1, 10_000), UsizeRange(1, 4));
+    check(
+        "batched transformer matches sequential decode",
+        &g,
+        Config { cases: 6, ..Config::default() },
+        |&(seed, max_inflight)| {
+            let model = tiny_model(11);
+            let prompts = prompt_set(seed as u64, 4);
+            let greedy = Sampling::default();
+
+            // ample pool for the baseline so its appends never fail
+            let baseline = StripedKvCache::new(cache_cfg(256), 1);
+            let want: Vec<Vec<u32>> = prompts
+                .iter()
+                .map(|(p, m)| sequential_generate(&baseline, model.as_ref(), p, *m, &greedy))
+                .collect();
+
+            let cache = Arc::new(StripedKvCache::new(cache_cfg(64), 2));
+            let sched = Scheduler::start(
+                cache,
+                model.clone(),
+                SchedConfig { max_inflight, ..SchedConfig::default() },
+                Arc::new(Registry::default()),
+            );
+            let rxs: Vec<Receiver<StreamEvent>> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, (p, m))| sched.submit(i as u64, p.clone(), *m))
+                .collect();
+            rxs.into_iter().zip(&want).all(|(rx, w)| drain(rx).expect("stream") == *w)
+        },
+    );
+}
+
+#[test]
+fn property_sampled_streams_identical_across_schedulers() {
+    // same seed + sampling params ⇒ bit-identical streams no matter
+    // the concurrency cap or stripe count: sampling is a pure per-step
+    // function of (logits, pos, params), never of batch composition
+    let g = Pair(UsizeRange(1, 10_000), UsizeRange(1, 4));
+    check(
+        "sampled streams are scheduler-invariant",
+        &g,
+        Config { cases: 6, ..Config::default() },
+        |&(seed, max_inflight)| {
+            let model = tiny_model(11);
+            let prompts = prompt_set(seed as u64, 4);
+            let class = Priority::default();
+
+            let baseline = StripedKvCache::new(cache_cfg(256), 1);
+            let want: Vec<Vec<u32>> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, (p, m))| {
+                    let hot = hot_sampling(seed as u64 + i as u64);
+                    sequential_generate(&baseline, model.as_ref(), p, *m, &hot)
+                })
+                .collect();
+
+            for stripes in [1usize, 2] {
+                let cache = Arc::new(StripedKvCache::new(cache_cfg(64), stripes));
+                let sched = Scheduler::start(
+                    cache,
+                    model.clone(),
+                    SchedConfig { max_inflight, ..SchedConfig::default() },
+                    Arc::new(Registry::default()),
+                );
+                let rxs: Vec<Receiver<StreamEvent>> = prompts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (p, m))| {
+                        let hot = hot_sampling(seed as u64 + i as u64);
+                        sched.submit_sampled(i as u64, p.clone(), *m, class, i as u64, hot)
+                    })
+                    .collect();
+                if !rxs.into_iter().zip(&want).all(|(rx, w)| drain(rx).expect("stream") == *w) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn preempted_sampled_stream_replays_bit_identically() {
+    // eviction + replay must re-derive the same sampled tokens: the
+    // per-position PRNG carries no state across steps, so a replayed
+    // prefix lands on the identical stream
+    let model = tiny_model(11);
+    let victim_prompt: Vec<u32> = (10..18).collect();
+    let agg_prompt: Vec<u32> = (30..42).collect();
+    let hot = hot_sampling(7);
+    let greedy = Sampling::default();
+
+    let baseline = StripedKvCache::new(cache_cfg(256), 1);
+    let want_victim = sequential_generate(&baseline, model.as_ref(), &victim_prompt, 80, &hot);
+    let want_agg = sequential_generate(&baseline, model.as_ref(), &agg_prompt, 25, &greedy);
+
+    // small single-stripe pool: the Interactive aggressor must evict
+    // the BestEffort victim mid-stream (same block arithmetic as the
+    // hash-model preemption test — 22 of 24 blocks vs 10)
+    let cache = Arc::new(StripedKvCache::new(cache_cfg(24), 1));
+    let metrics = Arc::new(Registry::default());
+    let sched = Scheduler::start(cache, model, SchedConfig::default(), metrics.clone());
+
+    let victim_rx = sched.submit_sampled(1, victim_prompt, 80, Priority::BestEffort, 1, hot);
+    // let the victim produce at least one token before the aggressor
+    let first = loop {
+        match victim_rx.recv().expect("victim streams") {
+            StreamEvent::Token { token, .. } => break token,
+            other => panic!("expected a token, got {other:?}"),
+        }
+    };
+    assert_eq!(first, want_victim[0], "first sampled token matches reference");
+
+    let agg_rx = sched.submit_sampled(2, agg_prompt, 25, Priority::Interactive, 2, greedy);
+    assert_eq!(drain(agg_rx).expect("aggressor completes"), want_agg);
+
+    let mut rest = vec![first];
+    rest.extend(drain_rest(victim_rx).expect("victim completes"));
+    assert_eq!(rest, want_victim, "replayed sampled stream is bit-identical");
+    assert!(
+        metrics.counter("sched.preemptions").get() >= 1,
+        "the aggressor actually forced a preemption"
+    );
+}
+
+#[test]
+fn greedy_equals_argmax_and_top_k_one() {
+    // Sampling::default() and top_k = 1 both reduce to the argmax
+    // reference over the model's real logits head
+    let model = tiny_model(11);
+    let prompt: Vec<u32> = (5..13).collect();
+    let greedy = Sampling::default();
+    let top1 = Sampling { seed: 99, temperature: 1.3, top_k: 1, top_p: 1.0 };
+
+    let c1 = StripedKvCache::new(cache_cfg(256), 1);
+    let want = sequential_generate(&c1, model.as_ref(), &prompt, 20, &greedy);
+    let c2 = StripedKvCache::new(cache_cfg(256), 1);
+    let got_top1 = sequential_generate(&c2, model.as_ref(), &prompt, 20, &top1);
+    assert_eq!(want, got_top1, "top_k = 1 is the greedy stream");
+
+    // replay greedily by hand, checking every step against argmax of
+    // the model's logits
+    let c3 = StripedKvCache::new(cache_cfg(256), 1);
+    let (seq, _) = c3.start_sequence(&prompt);
+    let mut tokens = prompt.clone();
+    for pos in 0..tokens.len() {
+        let (k, v) = model.kv(tokens[pos], pos);
+        c3.append_token(seq, tokens[pos], &k, &v).expect("append");
+    }
+    for (step, &expect) in want.iter().enumerate() {
+        let pos = tokens.len() - 1;
+        let q = model.query(tokens[pos], pos);
+        let out = c3.decode_splitk(seq, &q, None, 1).expect("decode");
+        let logits = model.logits(&out);
+        let next = int_flashattention::model::argmax(&logits);
+        assert_eq!(next, expect, "greedy step {step} is argmax over logits");
+        assert!(next < VOCAB, "token inside the real vocab");
+        tokens.push(next);
+        let (k, v) = model.kv(next, pos + 1);
+        c3.append_token(seq, next, &k, &v).expect("append");
+    }
+    c3.free_sequence(seq).expect("free");
+    assert!(want.iter().all(|&t| t < VOCAB), "greedy stream stays in vocab");
+}
+
+#[test]
+fn sampled_tokens_stay_in_vocab() {
+    let model = tiny_model(11);
+    let cache = StripedKvCache::new(cache_cfg(256), 1);
+    for seed in 0..8u64 {
+        let s = Sampling { seed, temperature: 2.0, top_k: 0, top_p: 1.0 };
+        let toks = sequential_generate(&cache, model.as_ref(), &[1, 2, 3, 4], 16, &s);
+        assert!(toks.iter().all(|&t| t < VOCAB), "seed {seed} stays in vocab");
+    }
+}

@@ -288,6 +288,10 @@ pub struct Engine {
     kv: Option<KvRuntime>,
     sched: Option<Scheduler>,
     recalib: Option<Arc<Recalibrator>>,
+    /// Identity under a router (`intfa serve --worker-id`); `None` when
+    /// serving standalone. Echoed by `health` so the router can verify
+    /// it is talking to the worker it thinks it is.
+    worker_id: Option<u64>,
     pub metrics: Arc<Registry>,
     next_id: std::sync::atomic::AtomicU64,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -376,6 +380,7 @@ impl Engine {
             kv: None,
             sched: None,
             recalib: None,
+            worker_id: None,
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
             threads,
@@ -510,6 +515,57 @@ impl Engine {
     pub fn debug_dump(&self) -> Result<Json, String> {
         let sched = self.sched.as_ref().ok_or("scheduler not enabled")?;
         Ok(sched.flight().dump_json())
+    }
+
+    /// Tag this engine with its worker id under a router. Surfaced as
+    /// the `worker.id` gauge and echoed in [`Engine::health`].
+    pub fn with_worker_id(mut self, id: u64) -> Engine {
+        self.metrics.gauge("worker.id").set(id as i64);
+        self.worker_id = Some(id);
+        self
+    }
+
+    pub fn worker_id(&self) -> Option<u64> {
+        self.worker_id
+    }
+
+    /// Liveness/readiness snapshot (the server's `health` verb): worker
+    /// identity plus the scheduler's drain state and load counters.
+    /// Cheap enough to poll — reads a few atomics, takes no locks.
+    pub fn health(&self) -> Json {
+        let (draining, drained, inflight, queued) = match &self.sched {
+            Some(s) => (s.is_draining(), s.drained(), s.inflight(), s.queued()),
+            None => (false, false, 0, 0),
+        };
+        let mut fields = Vec::new();
+        if let Some(w) = self.worker_id {
+            fields.push(("worker", Json::num(w as f64)));
+        }
+        fields.push(("sched", Json::Bool(self.sched.is_some())));
+        fields.push(("draining", Json::Bool(draining)));
+        fields.push(("drained", Json::Bool(drained)));
+        fields.push(("inflight", Json::num(inflight as f64)));
+        fields.push(("queued", Json::num(queued as f64)));
+        Json::obj(fields)
+    }
+
+    /// Flip the scheduler into stop-admitting drain mode (the server's
+    /// `drain` verb). Irreversible: queued entries are refused with
+    /// [`crate::sched::DRAINING_REASON`] so a router can requeue them,
+    /// in-flight sequences finish and stream to completion, and
+    /// [`Engine::drained`] goes true once nothing is left. Returns the
+    /// post-flip health snapshot. Errs when no scheduler is attached.
+    pub fn drain(&self) -> Result<Json, String> {
+        let sched = self.sched.as_ref().ok_or("scheduler not enabled")?;
+        sched.drain();
+        Ok(self.health())
+    }
+
+    /// True once a drain has fully quiesced the scheduler: draining was
+    /// requested and no in-flight or queued work remains. Always false
+    /// before [`Engine::drain`].
+    pub fn drained(&self) -> bool {
+        self.sched.as_ref().is_some_and(|s| s.drained())
     }
 
     pub fn has_kv(&self) -> bool {

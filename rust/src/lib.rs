@@ -19,8 +19,10 @@
 //!   copy-on-write INT8 blocks and split-K flash-decode ([`kv`]), the
 //!   continuous-batching decode scheduler with its striped KV pool and
 //!   streaming token delivery ([`sched`]), the artifact-backed
-//!   multi-layer transformer model served through it ([`model`]), and
-//!   the Ampere cost-model
+//!   multi-layer transformer model served through it ([`model`]), the
+//!   multi-process router tier that shards prompts across N worker
+//!   engines with health-monitored lifecycle and graceful drain
+//!   ([`router`]), and the Ampere cost-model
 //!   simulator that regenerates the paper's Figure 2.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
@@ -35,6 +37,7 @@ pub mod loadgen;
 pub mod model;
 pub mod obs;
 pub mod quant;
+pub mod router;
 pub mod runtime;
 pub mod sched;
 pub mod server;

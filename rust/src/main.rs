@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   serve        start the TCP serving engine over AOT artifacts
+//!   route        router tier: shard prompts across N serve workers
+//!   drain        gracefully drain a worker (directly or via a router)
 //!   client       load-generator client against a running server
 //!   bench-load   closed-loop bench-load harness (seeded, multi-turn)
 //!   calibrate    run calibration + precision autotuning, write artifact
@@ -120,6 +122,32 @@ USAGE:
                                           where scale hot-swap is unsupported)
                      status / forced swap via the recalib verb:
                      {\"type\":\"recalib\"} | {\"type\":\"recalib\",\"force\":true}
+                   [--worker-id N]
+                     --worker-id          tag this engine as worker N under an
+                                          `intfa route` tier: sets the worker.id
+                                          gauge, echoes N from the health verb,
+                                          and makes {\"type\":\"drain\",\"worker\":M}
+                                          refuse unless M == N
+  intfa route      [--addr HOST:PORT] [--metrics-addr HOST:PORT]
+                   [--workers N | --worker-addr A,B,...]
+                   [--drain-timeout MS] [--health-interval-ms MS]
+                   [--health-timeout-ms MS] [--unhealthy-after K]
+                   [--route-block-tokens N]
+                     router tier in front of N engine workers, speaking the
+                     same newline-JSON protocol (loadgen and every client work
+                     unchanged). Prompts route by first-block prefix hash so
+                     radix prefix locality survives the process split; generate
+                     streams are relayed verbatim (bit-identical to a single
+                     worker). --workers N spawns N in-process HashModel workers
+                     on free ports (tests/CI); --worker-addr attaches running
+                     `intfa serve` processes. A worker refused mid-drain is
+                     requeued to a sibling; {\"type\":\"drain\",\"worker\":N} on
+                     the router drains worker N for a rolling restart
+                     ({\"type\":\"health\"} reports per-worker state)
+  intfa drain      [--addr HOST:PORT] [--worker N]
+                     send a graceful drain: to a router (--worker required,
+                     waits until that worker quiesces) or directly to a worker
+                     (stops admission, finishes in-flight streams, exits)
   intfa client     [--addr HOST:PORT] [--requests N] [--concurrency C]
                    [--heads H] [--seq N] [--head-dim D] [--accuracy fast|balanced|exact]
   intfa bench-load [--addr HOST:PORT | --in-process] [--seed S] [--sessions N]
@@ -196,6 +224,8 @@ fn main() {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("serve") => cmd_serve(args),
+        Some("route") => cmd_route(args),
+        Some("drain") => cmd_drain(args),
         Some("client") => cmd_client(args),
         Some("bench-load") => cmd_bench_load(args),
         Some("calibrate") => cmd_calibrate(args),
@@ -400,6 +430,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => engine,
     };
+    // identity under a router tier: echoed by the health verb and
+    // asserted by id-carrying drain requests
+    let engine = match args.get("worker-id") {
+        Some(s) => {
+            let id: u64 = s.parse().map_err(|_| anyhow!("bad --worker-id {s:?}"))?;
+            log_info!("worker id {id}");
+            engine.with_worker_id(id)
+        }
+        None => engine,
+    };
     let registry = engine.metrics.clone();
     let server = Server::bind(Arc::new(engine), args.get_or("addr", "127.0.0.1:7433"))?;
     println!("listening on {}", server.local_addr());
@@ -418,6 +458,104 @@ fn cmd_serve(args: &Args) -> Result<()> {
         handle.shutdown();
         let _ = join.join();
     }
+    Ok(())
+}
+
+/// `intfa route`: the router tier — shard generate traffic across N
+/// engine workers with health-monitored lifecycle and graceful drain.
+fn cmd_route(args: &Args) -> Result<()> {
+    use int_flashattention::coordinator::metrics::Registry;
+    use int_flashattention::router::{
+        HealthMonitor, RouterConfig, RouterMetrics, RouterServer, WorkerPool,
+    };
+
+    let cfg = RouterConfig {
+        health_interval: Duration::from_millis(args.get_u64("health-interval-ms", 200)?),
+        health_timeout: Duration::from_millis(args.get_u64("health-timeout-ms", 1_000)?),
+        unhealthy_after: u32::try_from(args.get_usize("unhealthy-after", 3)?)
+            .map_err(|_| anyhow!("--unhealthy-after too large"))?,
+        drain_timeout: Duration::from_millis(args.get_u64("drain-timeout", 30_000)?),
+        route_block_tokens: args.get_usize("route-block-tokens", 16)?,
+        ..RouterConfig::default()
+    };
+
+    // workers: attach running serve processes, or spawn an in-process
+    // fleet (HashModel workers on free ports — tests and CI)
+    let mut spawned = Vec::new();
+    let addrs: Vec<String> = match args.get("worker-addr") {
+        Some(_) => args.get_list("worker-addr", &[]),
+        None => {
+            let n = args.get_usize("workers", 2)?;
+            if n == 0 {
+                bail!("--workers must be at least 1");
+            }
+            let mut addrs = Vec::new();
+            for i in 0..n {
+                let engine = bench_engine(args)?.with_worker_id(i as u64);
+                let server = Server::bind(Arc::new(engine), "127.0.0.1:0")?;
+                addrs.push(server.local_addr().to_string());
+                log_info!("spawned in-process worker {i} on {}", addrs[i]);
+                spawned.push(server.start());
+            }
+            addrs
+        }
+    };
+    if addrs.is_empty() {
+        bail!("--worker-addr lists no workers");
+    }
+
+    let pool = Arc::new(WorkerPool::new(addrs.clone(), cfg.route_block_tokens));
+    let registry = Arc::new(Registry::default());
+    registry.set_info("build.info", &[("version", env!("CARGO_PKG_VERSION"))]);
+    let metrics = Arc::new(RouterMetrics::new(&registry, pool.len()));
+    let monitor = HealthMonitor::start(pool.clone(), metrics.clone(), cfg.clone());
+
+    let router = RouterServer::bind(
+        pool,
+        metrics,
+        registry.clone(),
+        cfg,
+        args.get_or("addr", "127.0.0.1:7500"),
+    )?;
+    println!("router listening on {} over {} workers", router.local_addr(), addrs.len());
+    let metrics_srv = match args.get("metrics-addr") {
+        Some(addr) => {
+            let m = MetricsServer::bind(registry, addr)?;
+            println!("metrics on http://{}/metrics", m.local_addr());
+            Some(m.start())
+        }
+        None => None,
+    };
+    router.serve();
+    monitor.stop();
+    if let Some((handle, join)) = metrics_srv {
+        handle.shutdown();
+        let _ = join.join();
+    }
+    for (handle, join) in spawned {
+        handle.shutdown();
+        let _ = join.join();
+    }
+    Ok(())
+}
+
+/// `intfa drain`: operator-facing graceful drain. Against a router,
+/// `--worker N` names the worker and the call returns once it has
+/// quiesced; against a worker directly, the drain is acknowledged
+/// immediately and the worker exits on its own once in-flight
+/// sequences finish.
+fn cmd_drain(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7500").to_string();
+    let worker = match args.get("worker") {
+        Some(s) => Some(s.parse::<u64>().map_err(|_| anyhow!("bad --worker {s:?}"))?),
+        None => None,
+    };
+    let mut c = Client::connect(&addr)?;
+    let resp = c.drain(worker).map_err(|e| anyhow!("{e}"))?;
+    if resp.at("ok").as_bool() != Some(true) {
+        bail!("drain failed: {}", resp.to_string());
+    }
+    println!("{}", resp.at("drain").to_pretty());
     Ok(())
 }
 

@@ -1,0 +1,82 @@
+//! Drain coordinator: the rolling-restart primitive.
+
+use super::pool::WorkerPool;
+use super::RouterConfig;
+use crate::server::Client;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Gracefully drain worker `w`:
+///
+/// 1. mark the slot draining — routing stops sending it new work
+///    *before* the worker even hears about the drain, so the refusal
+///    window is as small as the wire allows;
+/// 2. send the `drain` verb (without a `worker` id assertion — the
+///    socket is already the disambiguation, and attached workers
+///    started without `--worker-id` must stay drainable);
+/// 3. poll the worker's `health` until it reports `drained` (in-flight
+///    sequences finished streaming, queue flushed) or is confirmed
+///    gone — a drained worker exits on its own, so connect-refused
+///    after the acknowledged drain also means done — bounded by
+///    `drain_timeout`.
+///
+/// In-flight streams keep flowing while this blocks; requests the
+/// worker refuses mid-drain carry [`crate::sched::DRAINING_REASON`]
+/// and are requeued to a sibling by the relay path. On timeout the
+/// slot stays marked draining (the drain is still in progress
+/// worker-side); the error says how long we waited.
+pub fn drain_worker(pool: &WorkerPool, cfg: &RouterConfig, w: usize) -> Result<Json, String> {
+    if w >= pool.len() {
+        return Err(format!("drain: no worker {w} (workers 0..{})", pool.len()));
+    }
+    let slot = pool.slot(w);
+    slot.set_draining(true);
+
+    let mut c = Client::connect_with_timeout(&slot.addr, Some(cfg.health_timeout))
+        .map_err(|e| format!("drain: worker {w} ({}): {e}", slot.addr))?;
+    let resp = c.drain(None).map_err(|e| format!("drain: worker {w}: {e}"))?;
+    if resp.at("ok").as_bool() != Some(true) {
+        return Err(format!(
+            "drain: worker {w} refused: {}",
+            resp.at("error").as_str().unwrap_or("unknown error")
+        ));
+    }
+
+    let t0 = Instant::now();
+    let drained = loop {
+        if t0.elapsed() >= cfg.drain_timeout {
+            break false;
+        }
+        // fresh connection per poll: the worker closes its sockets as
+        // it exits. A drained worker exits *on its own*, so once the
+        // drain verb has been acknowledged, connect-refused IS the
+        // success signal — the worker may quiesce and vanish between
+        // two polls, and waiting for a `drained:true` answer it can no
+        // longer give would turn every clean drain into a timeout.
+        match Client::connect_with_timeout(&slot.addr, Some(cfg.health_timeout)) {
+            Err(e) if e.is_unreachable() => break true,
+            Err(_) => {} // slow probe: poll again
+            Ok(mut c) => {
+                let done = c
+                    .health()
+                    .map(|h| h.at("health").at("drained").as_bool() == Some(true))
+                    .unwrap_or(false);
+                if done {
+                    break true;
+                }
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    };
+    if !drained {
+        return Err(format!(
+            "drain: worker {w} not drained after {}ms (still draining worker-side)",
+            cfg.drain_timeout.as_millis()
+        ));
+    }
+    Ok(Json::obj(vec![
+        ("worker", Json::num(w as f64)),
+        ("drained", Json::Bool(true)),
+        ("waited_ms", Json::num(t0.elapsed().as_millis() as f64)),
+    ]))
+}

@@ -1,0 +1,88 @@
+//! Health monitor: periodic `health` probes with dead-vs-slow
+//! classification, K-strikes demotion, and automatic recovery.
+
+use super::pool::{RouterMetrics, WorkerPool};
+use super::RouterConfig;
+use crate::server::Client;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Background thread polling every worker's `health` verb. A worker is
+/// demoted to unhealthy after `unhealthy_after` consecutive failed
+/// probes (connect refused, read timeout, or a malformed answer) and
+/// promoted back on the first successful one — probing never stops, so
+/// the poll interval doubles as the retry backoff. A worker that
+/// reports itself draining (drained directly, not through this router)
+/// is marked draining in the pool so routing stops sending it work.
+pub struct HealthMonitor {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HealthMonitor {
+    pub fn start(
+        pool: Arc<WorkerPool>,
+        metrics: Arc<RouterMetrics>,
+        cfg: RouterConfig,
+    ) -> HealthMonitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("intfa-router-health".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Acquire) {
+                    for slot in pool.slots() {
+                        metrics.health_checks.inc();
+                        match probe(&slot.addr, &cfg) {
+                            Ok(draining) => {
+                                slot.probe_ok();
+                                slot.set_healthy(true);
+                                if draining {
+                                    slot.set_draining(true);
+                                }
+                            }
+                            Err(_) => {
+                                metrics.health_failures.inc();
+                                if slot.probe_failed() >= cfg.unhealthy_after {
+                                    slot.set_healthy(false);
+                                }
+                            }
+                        }
+                    }
+                    metrics.observe_pool(&pool);
+                    std::thread::sleep(cfg.health_interval);
+                }
+            })
+            .expect("spawn health monitor");
+        HealthMonitor { stop, join: Some(join) }
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for HealthMonitor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One probe: fresh connection (a wedged pooled socket must not hide a
+/// live worker), `health` verb, classify. Returns whether the worker
+/// reports itself draining.
+fn probe(addr: &str, cfg: &RouterConfig) -> Result<bool, String> {
+    let mut c = Client::connect_with_timeout(addr, Some(cfg.health_timeout))
+        .map_err(|e| e.to_string())?;
+    let resp = c.health().map_err(|e| e.to_string())?;
+    if resp.at("ok").as_bool() != Some(true) {
+        return Err(format!("health answered not-ok: {}", resp.to_string()));
+    }
+    Ok(resp.at("health").at("draining").as_bool() == Some(true))
+}

@@ -1,0 +1,100 @@
+//! Multi-process serving tier: `intfa route` — a router in front of N
+//! engine workers (each an `intfa serve` process speaking the
+//! newline-JSON protocol of [`crate::server`]).
+//!
+//! One engine process is the scaling ceiling the ROADMAP's router/worker
+//! split removes. Four pieces (TGI's router/`ShardedClient` shape):
+//!
+//!   - [`pool`]: the [`pool::WorkerPool`] — per-worker address plus
+//!     lock-free health/draining/inflight state, and the routing
+//!     decision itself. Routing extends the scheduler's first-block
+//!     prefix-hash striping ([`crate::sched::stripe`]) across process
+//!     boundaries: a prompt hashes by its first `route_block_tokens`
+//!     tokens ([`crate::util::hash::fnv1a_u32s`]), so identical system
+//!     prompts colocate on one worker and radix prefix reuse survives
+//!     the split. Ineligible targets fall through to the next eligible
+//!     worker.
+//!   - [`health`]: the [`health::HealthMonitor`] thread — polls every
+//!     worker's `health` verb on an interval with a read timeout
+//!     (dead-peer vs slow-peer via
+//!     [`crate::server::ClientError`]), marks a worker unhealthy after
+//!     K consecutive failures, keeps probing (the interval is the
+//!     retry backoff) and re-marks it healthy when it answers again.
+//!   - [`drain`]: [`drain::drain_worker`] — the rolling-restart
+//!     primitive. Marks the worker draining in the pool (routing stops
+//!     immediately), sends the `drain` verb, and polls until the
+//!     worker reports drained or the timeout lapses. The drained
+//!     worker exits on its own; the monitor then marks it unhealthy.
+//!   - [`serve`]: the [`serve::RouterServer`] accept loop. Generate
+//!     requests are *relayed raw*: the router decodes the line only to
+//!     validate it and extract the routing key, forwards the client's
+//!     original bytes to the worker, and copies the worker's stream
+//!     lines back verbatim. A request refused by a draining worker
+//!     (terminal error equal to [`crate::sched::DRAINING_REASON`]
+//!     before any streamed token) or a worker that dies before
+//!     streaming is requeued to a sibling — the cross-process twin of
+//!     preemption-by-recompute's requeue.
+//!
+//! # Exactness contract, across the process boundary
+//!
+//! The standing contract — scheduling transforms never change tokens —
+//! extends through the router: every `(trace, pos, token)` stream line
+//! and every terminal `tokens` array a client reads through the router
+//! is bit-identical to the same request against a single worker,
+//! including requests requeued around a mid-run drain. (The `id` field
+//! is engine-local, exactly as it is between two single-engine runs
+//! with different arrival interleavings; identity is per-sequence
+//! token content, keyed by trace id.) Property-tested in
+//! `tests/router_integration.rs`.
+//!
+//! Not to be confused with [`crate::coordinator::router`], the
+//! precision-bucket router inside one engine.
+
+pub mod drain;
+pub mod health;
+pub mod pool;
+pub mod serve;
+
+pub use drain::drain_worker;
+pub use health::HealthMonitor;
+pub use pool::{RouterMetrics, WorkerPool};
+pub use serve::{RouterServer, RouterShutdown};
+
+use std::time::Duration;
+
+/// Tunables for the router tier (`intfa route` flags).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Health-poll period per worker (`--health-interval-ms`). Also the
+    /// retry backoff while a worker is marked unhealthy.
+    pub health_interval: Duration,
+    /// Read timeout on health probes: a worker that holds the socket
+    /// open but never answers is classified slow, then unhealthy.
+    pub health_timeout: Duration,
+    /// Consecutive failed probes before a worker is marked unhealthy.
+    pub unhealthy_after: u32,
+    /// How long a drain may take before `drain_worker` gives up
+    /// (`--drain-timeout`, milliseconds on the CLI). The worker stays
+    /// marked draining either way.
+    pub drain_timeout: Duration,
+    /// Read timeout while relaying a generate stream; `None` (default)
+    /// blocks — a busy worker mid-generation is slow, not dead.
+    pub relay_timeout: Option<Duration>,
+    /// Prefix-hash window in tokens (`--route-block-tokens`): match the
+    /// workers' `--kv-block-tokens` so router striping and in-worker
+    /// stripe routing agree on what "first block" means.
+    pub route_block_tokens: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            health_interval: Duration::from_millis(200),
+            health_timeout: Duration::from_millis(1_000),
+            unhealthy_after: 3,
+            drain_timeout: Duration::from_millis(30_000),
+            relay_timeout: None,
+            route_block_tokens: 16,
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Worker pool: per-worker state + the cross-process routing decision.
+
+use crate::coordinator::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::util::hash::fnv1a_u32s;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// One worker's lock-free state. `healthy` starts true (optimistic —
+/// the monitor demotes a worker that fails its probes, rather than
+/// every worker starting black-holed until the first poll).
+pub struct WorkerSlot {
+    /// `HOST:PORT` of the worker's serve socket.
+    pub addr: String,
+    healthy: AtomicBool,
+    draining: AtomicBool,
+    /// Generate relays currently open against this worker.
+    inflight: AtomicUsize,
+    /// Consecutive failed health probes (reset on success).
+    failures: AtomicU32,
+}
+
+impl WorkerSlot {
+    fn new(addr: String) -> WorkerSlot {
+        WorkerSlot {
+            addr,
+            healthy: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            failures: AtomicU32::new(0),
+        }
+    }
+
+    pub fn healthy(&self) -> bool {
+        self.healthy.load(Ordering::Acquire)
+    }
+
+    pub fn set_healthy(&self, v: bool) {
+        self.healthy.store(v, Ordering::Release);
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    pub fn set_draining(&self, v: bool) {
+        self.draining.store(v, Ordering::Release);
+    }
+
+    /// Routable: up, and not being drained for a rolling restart.
+    pub fn eligible(&self) -> bool {
+        self.healthy() && !self.draining()
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn inflight_add(&self, d: isize) {
+        if d >= 0 {
+            self.inflight.fetch_add(d as usize, Ordering::AcqRel);
+        } else {
+            self.inflight.fetch_sub((-d) as usize, Ordering::AcqRel);
+        }
+    }
+
+    /// Record a failed probe; returns the consecutive-failure count.
+    pub fn probe_failed(&self) -> u32 {
+        self.failures.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    pub fn probe_ok(&self) {
+        self.failures.store(0, Ordering::Release);
+    }
+}
+
+/// The routing table: ordered worker slots plus the prefix-hash window.
+pub struct WorkerPool {
+    slots: Vec<Arc<WorkerSlot>>,
+    route_block_tokens: usize,
+}
+
+impl WorkerPool {
+    pub fn new(addrs: Vec<String>, route_block_tokens: usize) -> WorkerPool {
+        assert!(!addrs.is_empty(), "router needs at least one worker");
+        WorkerPool {
+            slots: addrs.into_iter().map(|a| Arc::new(WorkerSlot::new(a))).collect(),
+            route_block_tokens: route_block_tokens.max(1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn slot(&self, i: usize) -> &Arc<WorkerSlot> {
+        &self.slots[i]
+    }
+
+    pub fn slots(&self) -> &[Arc<WorkerSlot>] {
+        &self.slots
+    }
+
+    /// The home worker for a prompt: first-block prefix hash — the same
+    /// `fnv1a_u32s` window the in-worker stripe router uses, so prefix
+    /// locality (shared system prompts → shared radix blocks) survives
+    /// the process split.
+    pub fn home(&self, tokens: &[u32]) -> usize {
+        let window = &tokens[..tokens.len().min(self.route_block_tokens)];
+        (fnv1a_u32s(window) % self.slots.len() as u64) as usize
+    }
+
+    /// Route a prompt: its home worker when eligible, else the next
+    /// eligible worker scanning forward (deterministic, so a retried
+    /// request lands on the same sibling). Workers in `exclude` (this
+    /// request's already-failed attempts) are skipped. `None` when no
+    /// worker is routable.
+    pub fn route(&self, tokens: &[u32], exclude: &[usize]) -> Option<usize> {
+        let n = self.slots.len();
+        let start = self.home(tokens);
+        (0..n)
+            .map(|off| (start + off) % n)
+            .find(|i| !exclude.contains(i) && self.slots[*i].eligible())
+    }
+}
+
+/// Every `router.*` metric family, registered up front so the scrape
+/// (and the `obs_docs` registry-vs-doc lint) sees the full catalogue
+/// from boot instead of families popping in as events first occur.
+pub struct RouterMetrics {
+    /// Generate exchanges relayed to a worker terminal line (ok or not).
+    pub routed: Arc<Counter>,
+    /// Relays re-routed to a sibling (drain refusal or dead worker
+    /// before any streamed token).
+    pub requeued: Arc<Counter>,
+    /// Exchanges whose terminal was an error (worker-relayed, lost
+    /// mid-stream, or no eligible worker at all).
+    pub failed: Arc<Counter>,
+    /// Per-exchange relay latency (request in → terminal line out).
+    pub fanin_us: Arc<Histogram>,
+    /// Health probes sent / probes that errored.
+    pub health_checks: Arc<Counter>,
+    pub health_failures: Arc<Counter>,
+    /// Worker count (static for the process lifetime).
+    pub workers: Arc<Gauge>,
+    /// Per-worker gauges, indexed like the pool's slots.
+    pub worker_healthy: Vec<Arc<Gauge>>,
+    pub worker_inflight: Vec<Arc<Gauge>>,
+    pub worker_draining: Vec<Arc<Gauge>>,
+}
+
+impl RouterMetrics {
+    pub fn new(registry: &Registry, workers: usize) -> RouterMetrics {
+        let m = RouterMetrics {
+            routed: registry.counter("router.routed"),
+            requeued: registry.counter("router.requeued"),
+            failed: registry.counter("router.failed"),
+            fanin_us: registry.histogram("router.fanin.us"),
+            health_checks: registry.counter("router.health.checks"),
+            health_failures: registry.counter("router.health.failures"),
+            workers: registry.gauge("router.workers"),
+            worker_healthy: (0..workers)
+                .map(|i| registry.gauge(&format!("router.worker.{i}.healthy")))
+                .collect(),
+            worker_inflight: (0..workers)
+                .map(|i| registry.gauge(&format!("router.worker.{i}.inflight")))
+                .collect(),
+            worker_draining: (0..workers)
+                .map(|i| registry.gauge(&format!("router.worker.{i}.draining")))
+                .collect(),
+        };
+        m.workers.set(workers as i64);
+        for g in &m.worker_healthy {
+            g.set(1); // slots start optimistic-healthy, mirror that
+        }
+        m
+    }
+
+    /// Refresh the per-worker gauges from the pool's live state.
+    pub fn observe_pool(&self, pool: &WorkerPool) {
+        for (i, slot) in pool.slots().iter().enumerate() {
+            self.worker_healthy[i].set(slot.healthy() as i64);
+            self.worker_inflight[i].set(slot.inflight() as i64);
+            self.worker_draining[i].set(slot.draining() as i64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn home_matches_stripe_hash_window() {
+        let pool = WorkerPool::new(vec!["a".into(), "b".into(), "c".into()], 4);
+        let long: Vec<u32> = (0..32).collect();
+        // only the first `route_block_tokens` tokens matter: a shared
+        // system prompt pins the whole family to one worker
+        assert_eq!(pool.home(&long), pool.home(&long[..4]));
+        let expect = (fnv1a_u32s(&long[..4]) % 3) as usize;
+        assert_eq!(pool.home(&long), expect);
+        // short prompts hash what they have
+        assert_eq!(pool.home(&[7]), (fnv1a_u32s(&[7]) % 3) as usize);
+    }
+
+    #[test]
+    fn route_falls_through_ineligible_workers() {
+        let pool = WorkerPool::new(vec!["a".into(), "b".into(), "c".into()], 4);
+        let tokens: Vec<u32> = (100..108).collect();
+        let home = pool.home(&tokens);
+        assert_eq!(pool.route(&tokens, &[]), Some(home));
+
+        // draining home → deterministic next eligible
+        pool.slot(home).set_draining(true);
+        assert_eq!(pool.route(&tokens, &[]), Some((home + 1) % 3));
+
+        // excluded sibling (a failed attempt) is skipped too
+        assert_eq!(pool.route(&tokens, &[(home + 1) % 3]), Some((home + 2) % 3));
+
+        // nothing eligible → None
+        for s in pool.slots() {
+            s.set_healthy(false);
+        }
+        assert_eq!(pool.route(&tokens, &[]), None);
+
+        // recovery re-routes home
+        pool.slot(home).set_healthy(true);
+        pool.slot(home).set_draining(false);
+        assert_eq!(pool.route(&tokens, &[]), Some(home));
+    }
+
+    #[test]
+    fn metrics_catalogue_registers_up_front() {
+        let reg = Registry::default();
+        let m = RouterMetrics::new(&reg, 2);
+        let names = reg.family_names();
+        for want in [
+            "router.routed",
+            "router.requeued",
+            "router.failed",
+            "router.fanin.us",
+            "router.health.checks",
+            "router.health.failures",
+            "router.workers",
+            "router.worker.0.healthy",
+            "router.worker.1.inflight",
+            "router.worker.0.draining",
+        ] {
+            assert!(names.iter().any(|n| n == want), "missing {want} in {names:?}");
+        }
+        let pool = WorkerPool::new(vec!["a".into(), "b".into()], 4);
+        pool.slot(1).set_draining(true);
+        pool.slot(1).inflight_add(2);
+        m.observe_pool(&pool);
+        assert_eq!(m.worker_draining[1].get(), 1);
+        assert_eq!(m.worker_inflight[1].get(), 2);
+        assert_eq!(m.worker_healthy[0].get(), 1);
+    }
+}

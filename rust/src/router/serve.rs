@@ -1,0 +1,346 @@
+//! Router front-end: accept loop + the verbatim stream relay.
+
+use super::drain::drain_worker;
+use super::pool::{RouterMetrics, WorkerPool};
+use super::RouterConfig;
+use crate::server::protocol::{
+    decode_request, encode_generate_done, encode_response, WireRequest, WireResponse,
+};
+use crate::server::Client;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The router's TCP front-end. Speaks the same newline-JSON protocol
+/// as a worker, so `loadgen` and every existing client drive it
+/// unchanged; `generate` is relayed to a worker chosen by the pool,
+/// everything stateful (`prefill`/`extend`/`decode`/`release`/
+/// `attention`) is refused — KV sequence handles are worker-local and
+/// do not survive a process boundary.
+pub struct RouterServer {
+    pool: Arc<WorkerPool>,
+    metrics: Arc<RouterMetrics>,
+    registry: Arc<crate::coordinator::metrics::Registry>,
+    cfg: RouterConfig,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl RouterServer {
+    pub fn bind(
+        pool: Arc<WorkerPool>,
+        metrics: Arc<RouterMetrics>,
+        registry: Arc<crate::coordinator::metrics::Registry>,
+        cfg: RouterConfig,
+        addr: impl ToSocketAddrs,
+    ) -> std::io::Result<RouterServer> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(RouterServer {
+            pool,
+            metrics,
+            registry,
+            cfg,
+            listener,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound listener")
+    }
+
+    pub fn shutdown_handle(&self) -> RouterShutdown {
+        RouterShutdown { flag: self.shutdown.clone(), addr: self.local_addr() }
+    }
+
+    /// Accept-loop until shutdown; one thread per connection (the same
+    /// shape as the worker's [`crate::server::Server::serve`]).
+    pub fn serve(self) {
+        crate::log_info!(
+            "router on {} over {} workers",
+            self.local_addr(),
+            self.pool.len()
+        );
+        self.listener.set_nonblocking(true).expect("nonblocking listener");
+        let mut conns = Vec::new();
+        while !self.shutdown.load(Ordering::Acquire) {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    crate::log_debug!("router connection from {peer}");
+                    let pool = self.pool.clone();
+                    let metrics = self.metrics.clone();
+                    let registry = self.registry.clone();
+                    let cfg = self.cfg.clone();
+                    let flag = self.shutdown.clone();
+                    conns.push(std::thread::spawn(move || {
+                        let r = handle_connection(stream, pool, metrics, registry, cfg, flag);
+                        if let Err(e) = r {
+                            crate::log_debug!("router connection closed: {e}");
+                        }
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    crate::log_warn!("router accept error: {e}");
+                    break;
+                }
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+    }
+
+    /// Spawn the accept loop on a background thread.
+    pub fn start(self) -> (RouterShutdown, std::thread::JoinHandle<()>) {
+        let handle = self.shutdown_handle();
+        let join = std::thread::Builder::new()
+            .name("intfa-router-accept".into())
+            .spawn(move || self.serve())
+            .expect("spawn router");
+        (handle, join)
+    }
+}
+
+/// Signals the router accept loop (and its connections) to stop.
+pub struct RouterShutdown {
+    flag: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+}
+
+impl RouterShutdown {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    pool: Arc<WorkerPool>,
+    metrics: Arc<RouterMetrics>,
+    registry: Arc<crate::coordinator::metrics::Registry>,
+    cfg: RouterConfig,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match decode_request(line.trim()) {
+            Err(e) => WireResponse::Error(e),
+            Ok(WireRequest::Ping) => WireResponse::Pong,
+            Ok(WireRequest::Metrics) => WireResponse::Metrics(registry.snapshot()),
+            Ok(WireRequest::Health) => WireResponse::Health(router_health(&pool)),
+            Ok(WireRequest::Drain { worker: Some(w) }) => {
+                // blocks this connection until the worker quiesces (or
+                // the timeout) — streams relay on their own connections
+                match drain_worker(&pool, &cfg, w as usize) {
+                    Ok(j) => WireResponse::Drain(j),
+                    Err(e) => WireResponse::Error(e),
+                }
+            }
+            Ok(WireRequest::Drain { worker: None }) => WireResponse::Error(
+                "drain through the router must name a worker (\"worker\":N)".into(),
+            ),
+            Ok(WireRequest::Generate { tokens, trace, .. }) => {
+                // relay the client's original bytes, not a re-encoding:
+                // the worker's stream is the stream the client sees
+                relay_generate(&mut writer, &pool, &metrics, &cfg, line.trim(), &tokens, trace)?;
+                continue;
+            }
+            Ok(_) => WireResponse::Error(
+                "verb not supported through the router (KV sequence state is \
+                 worker-local); connect to a worker directly"
+                    .into(),
+            ),
+        };
+        writer.write_all(encode_response(&resp).as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+/// The router's own `health` answer: pool-wide summary plus one entry
+/// per worker.
+fn router_health(pool: &WorkerPool) -> Json {
+    let workers: Vec<Json> = pool
+        .slots()
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            Json::obj(vec![
+                ("worker", Json::num(i as f64)),
+                ("addr", Json::str(s.addr.as_str())),
+                ("healthy", Json::Bool(s.healthy())),
+                ("draining", Json::Bool(s.draining())),
+                ("inflight", Json::num(s.inflight() as f64)),
+            ])
+        })
+        .collect();
+    let eligible = pool.slots().iter().filter(|s| s.eligible()).count();
+    Json::obj(vec![
+        ("router", Json::Bool(true)),
+        ("workers", Json::num(pool.len() as f64)),
+        ("eligible", Json::num(eligible as f64)),
+        ("detail", Json::Arr(workers)),
+    ])
+}
+
+/// Outcome of one relay attempt against one worker.
+enum Attempt {
+    /// A terminal line reached the client; `ok` is its `ok` field.
+    Done { ok: bool },
+    /// Nothing was written to the client — safe to retry a sibling.
+    Requeue,
+}
+
+/// Relay one generate exchange, requeueing to siblings while that is
+/// still invisible to the client. The requeue triggers are exactly the
+/// two cases where the worker provably produced no tokens: a terminal
+/// [`crate::sched::DRAINING_REASON`] refusal with nothing streamed
+/// (the worker's drain flush), and a worker unreachable before its
+/// first streamed line. Once a token has been relayed the request is
+/// pinned — replaying it elsewhere would re-stream positions the
+/// client already consumed.
+fn relay_generate(
+    writer: &mut BufWriter<TcpStream>,
+    pool: &WorkerPool,
+    metrics: &RouterMetrics,
+    cfg: &RouterConfig,
+    raw: &str,
+    tokens: &[u32],
+    trace: Option<u64>,
+) -> std::io::Result<()> {
+    let t0 = Instant::now();
+    let mut tried: Vec<usize> = Vec::new();
+    loop {
+        let Some(w) = pool.route(tokens, &tried) else {
+            let reason = if tried.is_empty() {
+                "no eligible worker".to_string()
+            } else {
+                format!("no eligible worker after {} attempt(s)", tried.len())
+            };
+            metrics.failed.inc();
+            metrics.fanin_us.observe_us(t0.elapsed().as_micros() as u64);
+            let line = encode_generate_done(0, trace.unwrap_or(0), Err(&reason));
+            writer.write_all(line.as_bytes())?;
+            writer.write_all(b"\n")?;
+            return writer.flush();
+        };
+        tried.push(w);
+        let slot = pool.slot(w);
+        slot.inflight_add(1);
+        let attempt = relay_once(writer, &slot.addr, cfg, raw, trace);
+        slot.inflight_add(-1);
+        match attempt? {
+            Attempt::Done { ok } => {
+                metrics.routed.inc();
+                if !ok {
+                    metrics.failed.inc();
+                }
+                metrics.fanin_us.observe_us(t0.elapsed().as_micros() as u64);
+                return Ok(());
+            }
+            Attempt::Requeue => {
+                metrics.requeued.inc();
+                crate::log_debug!("router: requeueing off worker {w}");
+            }
+        }
+    }
+}
+
+/// One attempt against one worker over a fresh connection. Client-side
+/// socket errors propagate as `Err` (the exchange is dead anyway);
+/// worker-side trouble maps to [`Attempt`].
+fn relay_once(
+    writer: &mut BufWriter<TcpStream>,
+    addr: &str,
+    cfg: &RouterConfig,
+    raw: &str,
+    trace: Option<u64>,
+) -> std::io::Result<Attempt> {
+    let mut worker = match Client::connect_with_timeout(addr, cfg.relay_timeout) {
+        Ok(c) => c,
+        Err(_) => return Ok(Attempt::Requeue), // nothing sent: safe retry
+    };
+    if worker.send_line(raw).is_err() {
+        return Ok(Attempt::Requeue);
+    }
+    let mut streamed = false;
+    loop {
+        let line = match worker.recv_line() {
+            Ok(l) => l,
+            Err(e) if e.is_unreachable() && !streamed => return Ok(Attempt::Requeue),
+            Err(e) => {
+                // tokens already relayed (or the peer is merely slow):
+                // a requeue would replay positions the client has seen
+                let msg = format!("worker connection lost mid-stream: {e}");
+                let done = encode_generate_done(0, trace.unwrap_or(0), Err(&msg));
+                writer.write_all(done.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                return Ok(Attempt::Done { ok: false });
+            }
+        };
+        let j = match crate::util::json::parse(&line) {
+            Ok(j) => j,
+            Err(_) if !streamed => return Ok(Attempt::Requeue),
+            Err(e) => {
+                let msg = format!("worker spoke garbage mid-stream: {e}");
+                let done = encode_generate_done(0, trace.unwrap_or(0), Err(&msg));
+                writer.write_all(done.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                return Ok(Attempt::Done { ok: false });
+            }
+        };
+        if j.at("stream").as_bool() == Some(true) {
+            writer.write_all(line.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            streamed = true;
+            continue;
+        }
+        // terminal line: a drain refusal before any token is the
+        // requeue signal (exact-match on the scheduler's load-bearing
+        // refusal string — see sched::DRAINING_REASON)
+        if !streamed
+            && j.at("ok").as_bool() == Some(false)
+            && j.at("error").as_str() == Some(crate::sched::DRAINING_REASON)
+        {
+            return Ok(Attempt::Requeue);
+        }
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        return Ok(Attempt::Done { ok: j.at("ok").as_bool() == Some(true) });
+    }
+}

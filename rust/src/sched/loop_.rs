@@ -40,7 +40,8 @@
 //!
 //! Under pool pressure a deferred candidate of class C may evict live
 //! sequences of *strictly lower* class on its stripe (lowest class
-//! first, most recently admitted first), but only while feasibility —
+//! first, then cheapest replay per block freed, most recently admitted
+//! breaking ties), but only while feasibility —
 //! remaining victims' blocks plus surviving headroom covering the
 //! cold demand — holds, re-checked before every eviction: evicting
 //! past the point where admission is reachable would churn replays
@@ -107,6 +108,7 @@ use crate::coordinator::metrics::{Counter, Registry};
 use crate::kv::{CacheConfig, CacheError};
 use crate::obs::flight::{FlightEvent, FlightEventKind, FlightRecorder};
 use crate::obs::{Lifecycle, PhaseProfiler, TickPhase};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -115,6 +117,14 @@ use std::time::{Duration, Instant};
 /// queue is deep; entries beyond the budget simply age one more tick
 /// (they are scanned first next tick once their rank rises).
 const ADMIT_SCAN_BUDGET: usize = 128;
+
+/// Terminal failure reason for requests refused because the scheduler
+/// is draining ([`Scheduler::drain`]). The wording is load-bearing:
+/// the router matches this marker on a worker's terminal line to
+/// requeue the request to a sibling worker (the same replay-shaped
+/// move preemption-by-recompute makes within one worker) instead of
+/// surfacing the failure to the client.
+pub const DRAINING_REASON: &str = "draining: admission stopped";
 
 /// Tick-loop configuration (`intfa serve --sched-*`).
 #[derive(Clone, Debug)]
@@ -301,11 +311,24 @@ struct Active {
     last_token_at: Option<Instant>,
 }
 
+/// Scheduler state shared with the tick loop and observable without a
+/// channel round-trip: the drain flag ([`Scheduler::drain`]) and the
+/// loop's published in-flight / queued counts. The worker's `health`
+/// verb and the router's drain coordinator poll these, so they must
+/// stay readable even while the loop is mid-tick.
+#[derive(Default)]
+struct SchedState {
+    draining: AtomicBool,
+    inflight: AtomicUsize,
+    queued: AtomicUsize,
+}
+
 /// Handle on the tick loop. Dropping it shuts the loop down (pending
 /// and in-flight requests receive [`StreamEvent::Failed`]).
 pub struct Scheduler {
     tx: Sender<Cmd>,
     flight: Arc<FlightRecorder>,
+    state: Arc<SchedState>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -337,11 +360,46 @@ impl Scheduler {
         let (tx, rx) = mpsc::channel();
         let flight = Arc::new(FlightRecorder::new(cfg.flight_capacity));
         let fl = flight.clone();
+        let state = Arc::new(SchedState::default());
+        let st = state.clone();
         let join = std::thread::Builder::new()
             .name("intfa-sched-tick".into())
-            .spawn(move || tick_loop(rx, cache, model, cfg, metrics, recalib, fl))
+            .spawn(move || tick_loop(rx, cache, model, cfg, metrics, recalib, fl, st))
             .expect("spawn scheduler tick loop");
-        Scheduler { tx, flight, join: Some(join) }
+        Scheduler { tx, flight, state, join: Some(join) }
+    }
+
+    /// Flip the tick loop into draining mode: admission stops — queued
+    /// entries and newly submitted requests fail with
+    /// [`DRAINING_REASON`] so the router can requeue them to a sibling
+    /// worker — while in-flight sequences keep ticking to completion.
+    /// Irreversible for the life of the scheduler: drain is the
+    /// prelude to a worker exiting for a rolling restart.
+    pub fn drain(&self) {
+        self.state.draining.store(true, Ordering::Release);
+    }
+
+    /// Whether a drain has been requested ([`Scheduler::drain`]).
+    pub fn is_draining(&self) -> bool {
+        self.state.draining.load(Ordering::Acquire)
+    }
+
+    /// In-flight sequence count as published by the tick loop.
+    pub fn inflight(&self) -> usize {
+        self.state.inflight.load(Ordering::Acquire)
+    }
+
+    /// Queued (submitted-but-unadmitted) request count as published by
+    /// the tick loop.
+    pub fn queued(&self) -> usize {
+        self.state.queued.load(Ordering::Acquire)
+    }
+
+    /// Whether a requested drain has completed: admission is stopped
+    /// and the last in-flight sequence has finished streaming. Always
+    /// `false` before [`Scheduler::drain`] is called.
+    pub fn drained(&self) -> bool {
+        self.is_draining() && self.inflight() == 0 && self.queued() == 0
     }
 
     /// The scheduler's flight recorder: the last N admission /
@@ -478,6 +536,7 @@ fn enqueue(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn tick_loop(
     rx: Receiver<Cmd>,
     cache: Arc<StripedKvCache>,
@@ -486,6 +545,7 @@ fn tick_loop(
     metrics: Arc<Registry>,
     recalib: Option<Arc<Recalibrator>>,
     flight: Arc<FlightRecorder>,
+    state: Arc<SchedState>,
 ) {
     let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(cfg.queue_cap, cfg.aging_ticks)
         .with_class_caps(cfg.queue_cap_by_class);
@@ -531,6 +591,10 @@ fn tick_loop(
         .map(|i| metrics.gauge(&format!("kv.stripe.{i}.evictable")))
         .collect();
     let flight_anomalies = metrics.counter("sched.flight.anomalies");
+    // drain visibility: the flag as a gauge plus every request refused
+    // while draining (each refusal is a router requeue on the other end)
+    let draining_gauge = metrics.gauge("sched.draining");
+    let drain_refused = metrics.counter("sched.drain.refused");
     let block_tokens = cache.config().block_tokens;
     // previous-tick counter values: the flight recorder's anomaly
     // check and its Evict/SwapFail events work on per-tick deltas
@@ -549,8 +613,15 @@ fn tick_loop(
         // kv_release / new submissions wake it) rather than every
         // tick_budget — admission pricing takes the stripe lock and
         // must not spin at kHz against an idle pool.
+        // the drain flag is read per received submit, not once per
+        // iteration: a store sequenced before the sender's channel send
+        // is then guaranteed visible here, so no submit issued after
+        // Scheduler::drain can slip into the queue
         if active.is_empty() {
             match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(Cmd::Submit(s)) if state.draining.load(Ordering::Acquire) => {
+                    refuse_draining(s, &drain_refused, &flight, ticks.get())
+                }
                 Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &lc, &shed, &cfg, &flight, ticks.get()),
                 Ok(Cmd::Shutdown) => shutdown = true,
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -559,6 +630,9 @@ fn tick_loop(
         }
         loop {
             match rx.try_recv() {
+                Ok(Cmd::Submit(s)) if state.draining.load(Ordering::Acquire) => {
+                    refuse_draining(s, &drain_refused, &flight, ticks.get())
+                }
                 Ok(Cmd::Submit(s)) => enqueue(&mut queue, s, &lc, &shed, &cfg, &flight, ticks.get()),
                 Ok(Cmd::Shutdown) => shutdown = true,
                 Err(TryRecvError::Empty) => break,
@@ -588,6 +662,29 @@ fn tick_loop(
             }
             return;
         }
+        // ---- draining: refuse queued work, let in-flight finish -------
+        // the queue is flushed (each entry fails with the requeue
+        // marker) but the loop keeps ticking: in-flight sequences run
+        // to completion and stream normally, which is the whole point
+        // of a graceful drain
+        if state.draining.load(Ordering::Acquire) && !queue.is_empty() {
+            for e in queue.drain_all() {
+                let s = Submit {
+                    id: e.item.id,
+                    trace: e.item.trace,
+                    tokens: e.item.tokens,
+                    max_new: e.item.max_new,
+                    class: e.class,
+                    sampling: e.item.sampling,
+                    stream: e.item.stream,
+                    enqueued_at: e.item.enqueued_at,
+                };
+                refuse_draining(s, &drain_refused, &flight, ticks.get());
+            }
+        }
+        draining_gauge.set(state.draining.load(Ordering::Acquire) as i64);
+        state.inflight.store(active.len(), Ordering::Release);
+        state.queued.store(queue.len(), Ordering::Release);
         if active.is_empty() && queue.is_empty() {
             continue;
         }
@@ -987,6 +1084,8 @@ fn tick_loop(
         queue_depth_batch.set(by_class[Priority::Batch.rank() as usize] as i64);
         queue_depth_interactive.set(by_class[Priority::Interactive.rank() as usize] as i64);
         inflight.set(active.len() as i64);
+        state.inflight.store(active.len(), Ordering::Release);
+        state.queued.store(queue.len(), Ordering::Release);
         contention.set(cache.contention() as i64);
         // mirror the cache's sharing counters (the engine only syncs
         // them on its own verbs; scheduler traffic must show up too) —
@@ -1063,6 +1162,25 @@ fn tick_loop(
             std::thread::sleep(cfg.tick_budget);
         }
     }
+}
+
+/// Refuse one submission because the scheduler is draining: terminal
+/// [`StreamEvent::Failed`] carrying [`DRAINING_REASON`] (the router's
+/// cue to requeue to a sibling worker), a `sched.drain.refused` count,
+/// and a flight Reject event so the drain is reconstructible from the
+/// recorder.
+fn refuse_draining(s: Submit, refused: &Counter, flight: &FlightRecorder, tick: u64) {
+    refused.inc();
+    let mut ev = FlightEvent::new(FlightEventKind::Reject, tick);
+    ev.id = s.id;
+    ev.trace = s.trace;
+    ev.class = s.class.rank() as u8;
+    flight.record(ev);
+    let _ = s.stream.send(StreamEvent::Failed {
+        id: s.id,
+        trace: s.trace,
+        reason: DRAINING_REASON.into(),
+    });
 }
 
 /// Reservation-aware verdict: the raw price plus the caller's
@@ -1174,11 +1292,30 @@ fn preemptible(a: &Active, class: Priority, aging_ticks: u64) -> bool {
     a.class < class && !a.class.aged_past_all(a.waited_carry, aging_ticks)
 }
 
+/// A victim's replay cost per block freed, as an exact integer
+/// rational `(cost, blocks)` compared cross-multiplied. Preemption
+/// pays the victim's whole history — prompt plus generated tail — in
+/// replayed appends, and recovers the blocks it had allocated; a
+/// zero-append victim still frees its in-flight slot and its planned
+/// reservation, so `blocks` is clamped to 1 (it then scores by raw
+/// replay length, which is what a slot eviction costs).
+fn replay_per_block(a: &Active, block_tokens: usize) -> (u64, u64) {
+    let cost = a.tokens.len() as u64;
+    let blocks = a.appended.div_ceil(block_tokens).max(1) as u64;
+    (cost, blocks)
+}
+
 /// Preemption victim for a candidate of class `class`: among
 /// [`preemptible`] sequences — on one stripe for block pressure
 /// (`stripe: Some`), anywhere for slot pressure (in-flight slots are
-/// global) — lowest class first, most recently admitted first (least
-/// sunk work lost).
+/// global) — lowest class first, then *cheapest replay per block
+/// freed* ([`replay_per_block`]). The old LIFO-within-class rule
+/// could evict a mid-prefill giant whose eviction frees almost
+/// nothing while costing a full replay, just for being newest; the
+/// cost score picks the victim that buys the most blocks per replayed
+/// token. Ties (the steady state: fully resident victims all cost
+/// about one block's worth of tokens per block) fall back to most
+/// recently admitted first — least sunk work lost, as before.
 fn pick_victim(
     cache: &StripedKvCache,
     active: &[Active],
@@ -1186,6 +1323,7 @@ fn pick_victim(
     stripe: Option<usize>,
     aging_ticks: u64,
 ) -> Option<usize> {
+    let block_tokens = cache.config().block_tokens;
     active
         .iter()
         .enumerate()
@@ -1193,7 +1331,14 @@ fn pick_victim(
             preemptible(a, class, aging_ticks)
                 && stripe.is_none_or(|s| cache.stripe_of_seq(a.seq) == s)
         })
-        .min_by_key(|(_, a)| (a.class, std::cmp::Reverse(a.admitted_at)))
+        .min_by(|(_, x), (_, y)| {
+            let (cx, bx) = replay_per_block(x, block_tokens);
+            let (cy, by) = replay_per_block(y, block_tokens);
+            x.class
+                .cmp(&y.class)
+                .then_with(|| (cx * by).cmp(&(cy * bx)))
+                .then_with(|| y.admitted_at.cmp(&x.admitted_at))
+        })
         .map(|(i, _)| i)
 }
 
@@ -1485,6 +1630,138 @@ mod tests {
         }
         assert!(seen, "per-class gauges never matched the queued mix");
         drop((blocker, q1, q2, q3));
+        drop(sched);
+    }
+
+    #[test]
+    fn victim_cost_model_beats_lifo_within_class() {
+        // regression for the replay-length-vs-blocks-freed score: the
+        // old LIFO-within-class rule always evicted the most recently
+        // admitted victim — here a mid-prefill giant (40 tokens to
+        // replay, 1 block freed) — where the cost model must pick the
+        // earlier, fully resident sequence (8 tokens replayed, 2
+        // blocks freed)
+        let cache = pool(64, 1); // block_tokens 4
+        let (tx, _rx) = mpsc::channel();
+        let mk = |id: u64, tokens: usize, appended: usize, admitted_at: u64| Active {
+            id,
+            trace: id,
+            seq: 0,
+            tokens: (0..tokens as u32).collect(),
+            appended,
+            max_new: 8,
+            generated: Vec::new(),
+            sampling: Sampling::default(),
+            stream: tx.clone(),
+            stalled: 0,
+            class: Priority::BestEffort,
+            admitted_at,
+            waited_carry: 0,
+            enqueued_at: Instant::now(),
+            ttft_done: false,
+            last_token_at: None,
+        };
+        let active = vec![mk(1, 8, 8, 1), mk(2, 40, 4, 2)];
+        let vi = pick_victim(&cache, &active, Priority::Interactive, None, 256).unwrap();
+        assert_eq!(active[vi].id, 1, "cheap replay per block wins over LIFO");
+
+        // class still dominates the score: a batch victim is never
+        // chosen while a best-effort one exists, however expensive
+        let active = vec![
+            Active { class: Priority::Batch, ..mk(3, 4, 4, 3) },
+            mk(4, 400, 4, 4),
+        ];
+        let vi = pick_victim(&cache, &active, Priority::Interactive, None, 256).unwrap();
+        assert_eq!(active[vi].id, 4, "strictly lowest class first, whatever the cost");
+
+        // equal scores fall back to most-recent (least sunk work lost)
+        let active = vec![mk(5, 8, 8, 5), mk(6, 8, 8, 6)];
+        let vi = pick_victim(&cache, &active, Priority::Interactive, None, 256).unwrap();
+        assert_eq!(active[vi].id, 6, "ties break to the newest admission");
+    }
+
+    #[test]
+    fn drain_stops_admission_and_finishes_in_flight() {
+        let metrics = Arc::new(Registry::default());
+        let sched = Scheduler::start(
+            pool(1024, 1),
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig::default(),
+            metrics.clone(),
+        );
+        assert!(!sched.drained(), "never drained before a drain request");
+        let rx = sched.submit(1, vec![1, 2, 3], 300);
+        let mut tokens = Vec::new();
+        match rx.recv().expect("stream opens") {
+            StreamEvent::Token { token, .. } => tokens.push(token),
+            other => panic!("expected a token, got {other:?}"),
+        }
+        sched.drain();
+        assert!(sched.is_draining());
+        // post-drain submissions are refused with the requeue marker
+        let refused = sched.submit(2, vec![9, 9], 4);
+        let (rt, rerr) = drain(refused);
+        assert!(rt.is_empty());
+        assert_eq!(rerr.as_deref(), Some(DRAINING_REASON));
+        // the in-flight stream runs to completion — drain is graceful
+        loop {
+            match rx.recv().expect("in-flight stream stays open") {
+                StreamEvent::Token { token, .. } => tokens.push(token),
+                StreamEvent::Done { tokens: done, .. } => {
+                    assert_eq!(done, tokens);
+                    break;
+                }
+                StreamEvent::Failed { reason, .. } => panic!("in-flight failed: {reason}"),
+            }
+        }
+        assert_eq!(tokens.len(), 300);
+        let mut done = false;
+        for _ in 0..400 {
+            if sched.drained() {
+                done = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(done, "drain completes once the in-flight set empties");
+        assert_eq!(metrics.counter("sched.drain.refused").get(), 1);
+        drop(sched);
+    }
+
+    #[test]
+    fn drain_refuses_queued_entries_for_requeue() {
+        // a blocker holds the only slot, so a second request is queued
+        // but unadmitted when the drain lands: it must be refused with
+        // the draining marker (the router's requeue cue), while the
+        // blocker still streams to completion
+        let sched = Scheduler::start(
+            pool(1024, 1),
+            Arc::new(HashModel::new(HEADS, HEAD_DIM)),
+            SchedConfig { max_inflight: 1, ..SchedConfig::default() },
+            Arc::new(Registry::default()),
+        );
+        let blocker = sched.submit(1, vec![1, 2, 3], 300);
+        let mut tokens = Vec::new();
+        match blocker.recv().expect("blocker streams") {
+            StreamEvent::Token { token, .. } => tokens.push(token),
+            other => panic!("expected a token, got {other:?}"),
+        }
+        let queued = sched.submit_with_priority(2, vec![7], 1, Priority::Batch);
+        sched.drain();
+        let (qt, qerr) = drain(queued);
+        assert!(qt.is_empty());
+        assert_eq!(qerr.as_deref(), Some(DRAINING_REASON));
+        loop {
+            match blocker.recv().expect("blocker stream stays open") {
+                StreamEvent::Token { token, .. } => tokens.push(token),
+                StreamEvent::Done { tokens: done, .. } => {
+                    assert_eq!(done, tokens);
+                    break;
+                }
+                StreamEvent::Failed { reason, .. } => panic!("blocker failed: {reason}"),
+            }
+        }
+        assert_eq!(tokens.len(), 300, "in-flight work finished despite the drain");
         drop(sched);
     }
 

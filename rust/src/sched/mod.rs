@@ -60,7 +60,7 @@ pub mod model;
 pub mod queue;
 pub mod stripe;
 
-pub use loop_::{SchedConfig, Scheduler, StreamEvent};
+pub use loop_::{SchedConfig, Scheduler, StreamEvent, DRAINING_REASON};
 pub use model::{HashModel, ModelInfo, Sampling, TokenModel};
 pub use queue::{AdmissionPrice, AdmissionQueue, AdmissionVerdict, Priority, ShedCause};
 pub use stripe::StripedKvCache;

@@ -247,8 +247,31 @@ pub struct Queued<T> {
 /// Entries are keyed by their arrival stamp (stable across reorders)
 /// and admitted in [`AdmissionQueue::order`]: effective rank
 /// descending, arrival ascending. See the module docs for the policy.
+///
+/// # Indexing
+///
+/// The admission order is a *lazily maintained* sorted index rather
+/// than a per-call sort: because every queued entry ages by exactly one
+/// tick per [`AdmissionQueue::age_tick`], relative order only changes
+/// when an entry's `waited` crosses a multiple of `aging_ticks` (a rank
+/// promotion). Inserts binary-search into the index, removals
+/// binary-search out of it, and only a promotion marks it dirty for a
+/// full re-sort on the next [`AdmissionQueue::order`] call. Key lookup
+/// ([`AdmissionQueue::get`] / [`AdmissionQueue::remove`]) goes through
+/// an arrival→slot map instead of a linear scan, so the scheduler's
+/// per-tick admission walk is no longer quadratic in queue depth.
 pub struct AdmissionQueue<T> {
     entries: Vec<Queued<T>>,
+    /// Arrival stamp → slot in `entries` (slots move on `swap_remove`).
+    pos: std::collections::HashMap<u64, usize>,
+    /// Arrival stamps sorted in admission order; authoritative while
+    /// `!dirty`, rebuilt from `entries` otherwise.
+    index: Vec<u64>,
+    /// Set when a rank promotion (or bulk mutation) may have
+    /// invalidated `index`.
+    dirty: bool,
+    /// Queued entries per class, indexed by [`Priority::rank`].
+    counts: [usize; 3],
     cap: usize,
     /// Per-class depth caps indexed by [`Priority::rank`];
     /// `usize::MAX` leaves a class bounded only by the shared cap.
@@ -261,6 +284,10 @@ impl<T> AdmissionQueue<T> {
     pub fn new(cap: usize, aging_ticks: u64) -> AdmissionQueue<T> {
         AdmissionQueue {
             entries: Vec::new(),
+            pos: std::collections::HashMap::new(),
+            index: Vec::new(),
+            dirty: false,
+            counts: [0; 3],
             cap: cap.max(1),
             class_caps: [usize::MAX; 3],
             aging_ticks: aging_ticks.max(1),
@@ -287,12 +314,9 @@ impl<T> AdmissionQueue<T> {
     /// Queued entries per class, indexed by [`Priority::rank`] — the
     /// `sched.queue.depth.*` gauges (a best-effort flood filling the
     /// shared cap is invisible in the aggregate depth alone).
+    /// Maintained incrementally; O(1).
     pub fn depth_by_class(&self) -> [usize; 3] {
-        let mut out = [0usize; 3];
-        for e in &self.entries {
-            out[e.class.rank() as usize] += 1;
-        }
-        out
+        self.counts
     }
 
     /// Enqueue; hands the item back with a [`ShedCause`] when the
@@ -325,13 +349,32 @@ impl<T> AdmissionQueue<T> {
     pub fn requeue(&mut self, item: T, class: Priority, waited: u64) {
         let arrival = self.next_arrival;
         self.next_arrival += 1;
+        let rank = class.effective_rank(waited, self.aging_ticks);
+        self.pos.insert(arrival, self.entries.len());
         self.entries.push(Queued { item, class, arrival, waited });
+        self.counts[class.rank() as usize] += 1;
+        if !self.dirty {
+            // binary insert into the live index: the index is sorted by
+            // (rank desc, arrival asc), so the partition point under
+            // "ordered before the new key" is the insertion slot
+            let at = self
+                .index
+                .partition_point(|&k| Self::before(self.key_of(k), (rank, arrival)));
+            self.index.insert(at, arrival);
+        }
     }
 
-    /// One scheduler tick elapsed: every queued entry ages.
+    /// One scheduler tick elapsed: every queued entry ages. Uniform
+    /// aging preserves relative order except when an entry's `waited`
+    /// crosses a multiple of `aging_ticks` — only that rank promotion
+    /// dirties the index.
     pub fn age_tick(&mut self) {
+        let aging = self.aging_ticks;
         for e in &mut self.entries {
             e.waited += 1;
+            if e.waited % aging == 0 {
+                self.dirty = true;
+            }
         }
     }
 
@@ -342,20 +385,81 @@ impl<T> AdmissionQueue<T> {
         e.class.effective_rank(e.waited, self.aging_ticks)
     }
 
+    /// Current `(effective rank, arrival)` sort key of a live entry.
+    fn key_of(&self, arrival: u64) -> (u64, u64) {
+        let e = &self.entries[self.pos[&arrival]];
+        (self.effective_rank(e), arrival)
+    }
+
+    /// Whether sort key `a` orders strictly before `b` in admission
+    /// order (rank descending, arrival ascending).
+    fn before(a: (u64, u64), b: (u64, u64)) -> bool {
+        a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)
+    }
+
     /// Whether the entry has aged past every class
     /// ([`Priority::aged_past_all`]): the scheduler stops admitting
     /// anything behind it on its stripe (the starvation backstop for
     /// repeatedly deferred requests).
     pub fn aged_to_barrier(&self, arrival: u64) -> bool {
-        self.entries
-            .iter()
-            .find(|e| e.arrival == arrival)
+        self.pos
+            .get(&arrival)
+            .map(|&i| &self.entries[i])
             .is_some_and(|e| e.class.aged_past_all(e.waited, self.aging_ticks))
     }
 
     /// Arrival stamps in admission order: effective rank descending,
-    /// arrival ascending (stable FIFO within a rank).
-    pub fn order(&self) -> Vec<u64> {
+    /// arrival ascending (stable FIFO within a rank). Served from the
+    /// maintained index; re-sorted only after a rank promotion.
+    pub fn order(&mut self) -> Vec<u64> {
+        if self.dirty {
+            let mut keys: Vec<(u64, u64)> = self
+                .entries
+                .iter()
+                .map(|e| (self.effective_rank(e), e.arrival))
+                .collect();
+            keys.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            self.index = keys.into_iter().map(|(_, arrival)| arrival).collect();
+            self.dirty = false;
+        }
+        self.index.clone()
+    }
+
+    pub fn get(&self, arrival: u64) -> Option<&Queued<T>> {
+        self.pos.get(&arrival).map(|&i| &self.entries[i])
+    }
+
+    pub fn remove(&mut self, arrival: u64) -> Option<Queued<T>> {
+        let i = *self.pos.get(&arrival)?;
+        if !self.dirty {
+            // the index is sorted, so the entry's own key bisects to it
+            let key = (self.effective_rank(&self.entries[i]), arrival);
+            let at = self.index.partition_point(|&k| Self::before(self.key_of(k), key));
+            debug_assert_eq!(self.index.get(at), Some(&arrival));
+            self.index.remove(at);
+        }
+        self.pos.remove(&arrival);
+        let e = self.entries.swap_remove(i);
+        if let Some(moved) = self.entries.get(i) {
+            self.pos.insert(moved.arrival, i);
+        }
+        self.counts[e.class.rank() as usize] -= 1;
+        Some(e)
+    }
+
+    /// Take every entry (shutdown: the caller fails their streams).
+    pub fn drain_all(&mut self) -> Vec<Queued<T>> {
+        self.pos.clear();
+        self.index.clear();
+        self.dirty = false;
+        self.counts = [0; 3];
+        std::mem::take(&mut self.entries)
+    }
+
+    /// Reference admission order: the pre-index full sort. The
+    /// property test pins the maintained index against this.
+    #[cfg(test)]
+    fn reference_order(&self) -> Vec<u64> {
         let mut keys: Vec<(u64, u64)> = self
             .entries
             .iter()
@@ -363,20 +467,6 @@ impl<T> AdmissionQueue<T> {
             .collect();
         keys.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
         keys.into_iter().map(|(_, arrival)| arrival).collect()
-    }
-
-    pub fn get(&self, arrival: u64) -> Option<&Queued<T>> {
-        self.entries.iter().find(|e| e.arrival == arrival)
-    }
-
-    pub fn remove(&mut self, arrival: u64) -> Option<Queued<T>> {
-        let i = self.entries.iter().position(|e| e.arrival == arrival)?;
-        Some(self.entries.remove(i))
-    }
-
-    /// Take every entry (shutdown: the caller fails their streams).
-    pub fn drain_all(&mut self) -> Vec<Queued<T>> {
-        std::mem::take(&mut self.entries)
     }
 }
 
@@ -622,6 +712,50 @@ mod tests {
         assert_eq!(got.item, 1, "FIFO head of the equal-rank band");
         assert_eq!(q.len(), 2);
         assert!(q.remove(key).is_none(), "keys are consumed");
+    }
+
+    #[test]
+    fn lazy_index_matches_reference_order_under_random_ops() {
+        // property test: a random interleaving of push / requeue /
+        // age_tick / remove must leave the maintained index identical
+        // to the old per-call full sort, and the incremental class
+        // depths identical to a fresh count
+        let classes = [Priority::BestEffort, Priority::Batch, Priority::Interactive];
+        for seed in 0..8u64 {
+            let mut rng = Pcg64::seeded(0xdead_beef ^ seed);
+            let mut q: AdmissionQueue<u64> = AdmissionQueue::new(usize::MAX, 4);
+            for step in 0..400u64 {
+                match (rng.next_u64() % 100, q.len()) {
+                    // remove a random live key (exercises index bisection)
+                    (0..=24, n) if n > 0 => {
+                        let order = q.order();
+                        let key = order[(rng.next_u64() as usize) % order.len()];
+                        let got = q.remove(key).unwrap();
+                        assert_eq!(got.arrival, key);
+                        assert!(q.remove(key).is_none(), "keys are consumed");
+                    }
+                    // age (dirties the index only on promotions)
+                    (25..=44, _) => q.age_tick(),
+                    // requeue with carried credit (arbitrary rank insert)
+                    (45..=59, _) => {
+                        let class = classes[(rng.next_u64() as usize) % 3];
+                        q.requeue(step, class, rng.next_u64() % 23);
+                    }
+                    // plain push
+                    _ => {
+                        let class = classes[(rng.next_u64() as usize) % 3];
+                        q.push(step, class).unwrap();
+                    }
+                }
+                assert_eq!(q.order(), q.reference_order(), "seed {seed} step {step}");
+                let mut counted = [0usize; 3];
+                for &k in &q.order() {
+                    counted[q.get(k).unwrap().class.rank() as usize] += 1;
+                }
+                assert_eq!(q.depth_by_class(), counted);
+                assert_eq!(q.len(), q.order().len());
+            }
+        }
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //! → {"type":"metrics"}             ← {"ok":true,"metrics":{...}}
 //! → {"type":"recalib"}             ← {"ok":true,"recalib":{...}}
 //! → {"type":"recalib","force":true}  (hot-swap now, then status)
+//! → {"type":"health"}              ← {"ok":true,"health":{"worker":0,
+//!                                      "draining":false,"inflight":n,...}}
+//! → {"type":"drain","worker":0}    ← {"ok":true,"drain":{...}}
+//!                                    (worker optional: asserts which
+//!                                     worker id is meant; mismatch errs)
 //!
 //! → {"type":"generate","tokens":[...],"max_new":N,
 //!    "priority":"interactive"}                     (priority optional:
@@ -29,6 +34,13 @@
 //! is admitted first and may preempt lower classes under KV-pool
 //! pressure; preempted sequences are replayed bit-identically, so a
 //! class only ever changes scheduling latency, never tokens.
+//!
+//! `health` and `drain` are the worker-lifecycle verbs consumed by the
+//! router tier ([`crate::router`]): the router polls `health`, and
+//! `drain` flips the scheduler into stop-admitting mode — in-flight
+//! sequences finish and stream to completion, queued/new requests are
+//! refused with [`crate::sched::DRAINING_REASON`] (the router requeues
+//! those to a sibling worker), and the process exits once quiesced.
 
 pub mod prom;
 pub mod protocol;
@@ -36,4 +48,4 @@ pub mod tcp;
 
 pub use prom::{scrape_text, MetricsServer, MetricsShutdown};
 pub use protocol::{decode_request, encode_response, WireRequest, WireResponse};
-pub use tcp::{Client, Server};
+pub use tcp::{Client, ClientError, Server};

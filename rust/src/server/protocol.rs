@@ -53,6 +53,15 @@ pub enum WireRequest {
     /// admission/preemption/eviction events) as JSON — the on-demand
     /// twin of the automatic anomaly dump.
     DebugDump,
+    /// Liveness/readiness snapshot: worker id, drain state, in-flight
+    /// and queued counts. Cheap (a few atomic loads) — this is the verb
+    /// the router's health monitor polls.
+    Health,
+    /// Graceful drain: stop admitting, finish in-flight sequences,
+    /// then exit. The optional `worker` field lets a caller assert
+    /// *which* worker it means to drain — a worker whose id mismatches
+    /// refuses, and a router resolves the id to the right worker.
+    Drain { worker: Option<u64> },
     Ping,
     Metrics,
 }
@@ -72,6 +81,11 @@ pub enum WireResponse {
     Recalib(Json),
     /// Flight-recorder dump (`debug-dump` verb).
     FlightDump(Json),
+    /// Health snapshot (`health` verb).
+    Health(Json),
+    /// Drain acknowledged; carries the post-flip health snapshot
+    /// (`drain` verb).
+    Drain(Json),
     Error(String),
 }
 
@@ -129,6 +143,22 @@ pub fn decode_request(line: &str) -> Result<WireRequest, String> {
         Some("ping") => Ok(WireRequest::Ping),
         Some("metrics") => Ok(WireRequest::Metrics),
         Some("debug-dump") => Ok(WireRequest::DebugDump),
+        Some("health") => Ok(WireRequest::Health),
+        Some("drain") => {
+            // worker ids are u64 like seq/trace ids; present-but-
+            // malformed is rejected, never treated as "any worker"
+            let wj = j.at("worker");
+            let worker = if wj.is_null() {
+                None
+            } else {
+                Some(
+                    wj.as_usize()
+                        .map(|x| x as u64)
+                        .ok_or_else(|| "worker: expected an unsigned integer".to_string())?,
+                )
+            };
+            Ok(WireRequest::Drain { worker })
+        }
         Some("recalib") => Ok(WireRequest::Recalib {
             force: j.at("force").as_bool() == Some(true),
         }),
@@ -285,6 +315,16 @@ pub fn encode_response(resp: &WireResponse) -> String {
         WireResponse::FlightDump(d) => Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("flight", d.clone()),
+        ])
+        .to_string(),
+        WireResponse::Health(h) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("health", h.clone()),
+        ])
+        .to_string(),
+        WireResponse::Drain(h) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("drain", h.clone()),
         ])
         .to_string(),
         WireResponse::Error(e) => Json::obj(vec![
@@ -554,6 +594,45 @@ mod tests {
         assert_eq!(j.at("ok").as_bool(), Some(false));
         assert_eq!(j.at("trace").as_i64(), Some(99), "error terminals keep the trace id too");
         assert!(j.at("error").as_str().unwrap().contains("rejected"));
+    }
+
+    #[test]
+    fn decode_and_encode_health_and_drain() {
+        assert!(matches!(
+            decode_request(r#"{"type":"health"}"#),
+            Ok(WireRequest::Health)
+        ));
+        assert!(matches!(
+            decode_request(r#"{"type":"drain"}"#),
+            Ok(WireRequest::Drain { worker: None })
+        ));
+        assert!(matches!(
+            decode_request(r#"{"type":"drain","worker":1}"#),
+            Ok(WireRequest::Drain { worker: Some(1) })
+        ));
+        // worker ids are u64-wide, same as seq/trace ids
+        assert!(matches!(
+            decode_request(r#"{"type":"drain","worker":8589934592}"#),
+            Ok(WireRequest::Drain { worker: Some(8_589_934_592) })
+        ));
+        // present-but-malformed worker is rejected, never "any worker"
+        assert!(decode_request(r#"{"type":"drain","worker":"zero"}"#).is_err());
+        assert!(decode_request(r#"{"type":"drain","worker":-1}"#).is_err());
+
+        let snap = crate::util::json::Json::obj(vec![
+            ("draining", crate::util::json::Json::Bool(true)),
+            ("inflight", crate::util::json::Json::num(3.0)),
+        ]);
+        let line = encode_response(&WireResponse::Health(snap.clone()));
+        let j = crate::util::json::parse(&line).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(true));
+        assert_eq!(j.at("health").at("draining").as_bool(), Some(true));
+        assert_eq!(j.at("health").at("inflight").as_i64(), Some(3));
+
+        let line = encode_response(&WireResponse::Drain(snap));
+        let j = crate::util::json::parse(&line).unwrap();
+        assert_eq!(j.at("ok").as_bool(), Some(true));
+        assert_eq!(j.at("drain").at("draining").as_bool(), Some(true));
     }
 
     #[test]

@@ -127,6 +127,43 @@ fn handle_connection(
                 Ok(dump) => WireResponse::FlightDump(dump),
                 Err(e) => WireResponse::Error(e),
             },
+            Ok(WireRequest::Health) => WireResponse::Health(engine.health()),
+            Ok(WireRequest::Drain { worker }) => {
+                // a caller that names a worker id is asserting identity:
+                // refuse on mismatch (or when this worker has no id to
+                // confirm) instead of draining the wrong process
+                let me = engine.worker_id();
+                if worker.is_some() && worker != me {
+                    let me = me.map(|w| w.to_string()).unwrap_or_else(|| "unset".into());
+                    WireResponse::Error(format!(
+                        "drain: worker id mismatch (asked for {}, this worker is {me})",
+                        worker.unwrap_or(0)
+                    ))
+                } else {
+                    match engine.drain() {
+                        Ok(h) => {
+                            // exit-after-quiesce: once drain empties the
+                            // scheduler, flip the accept loop's shutdown
+                            // flag so the worker process can exit; open
+                            // connections finish their current exchange
+                            // first (streams complete mid-drain)
+                            let engine = engine.clone();
+                            let flag = shutdown.clone();
+                            std::thread::Builder::new()
+                                .name("intfa-drain-watch".into())
+                                .spawn(move || {
+                                    while !engine.drained() {
+                                        std::thread::sleep(std::time::Duration::from_millis(10));
+                                    }
+                                    flag.store(true, Ordering::Release);
+                                })
+                                .expect("spawn drain watchdog");
+                            WireResponse::Drain(h)
+                        }
+                        Err(e) => WireResponse::Error(e),
+                    }
+                }
+            }
             Ok(WireRequest::Recalib { force }) => {
                 let forced = if force { engine.recalib_force().map(|_| ()) } else { Ok(()) };
                 match forced.and_then(|()| {
@@ -220,6 +257,59 @@ fn stream_generate(
     }
 }
 
+/// Typed client-side transport failure. The router's health monitor
+/// (and any robust client) must distinguish a *dead* peer — mark the
+/// worker unhealthy, route elsewhere — from a *slow* one — back off,
+/// the worker may just be busy with a long tick.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The peer is gone: connection refused / reset / aborted, broken
+    /// pipe, or the socket closed mid-exchange.
+    WorkerUnreachable(std::io::Error),
+    /// The configured read timeout elapsed with the connection still
+    /// up — slow, not dead.
+    SlowPeer(std::io::Error),
+    /// Anything else (malformed response, local I/O failure).
+    Other(std::io::Error),
+}
+
+impl ClientError {
+    /// Classify a transport error by its [`std::io::ErrorKind`].
+    pub fn from_io(e: std::io::Error) -> ClientError {
+        use std::io::ErrorKind::*;
+        match e.kind() {
+            UnexpectedEof | ConnectionRefused | ConnectionReset | ConnectionAborted
+            | BrokenPipe | NotConnected => ClientError::WorkerUnreachable(e),
+            WouldBlock | TimedOut => ClientError::SlowPeer(e),
+            _ => ClientError::Other(e),
+        }
+    }
+
+    pub fn is_unreachable(&self) -> bool {
+        matches!(self, ClientError::WorkerUnreachable(_))
+    }
+
+    pub fn into_io(self) -> std::io::Error {
+        match self {
+            ClientError::WorkerUnreachable(e)
+            | ClientError::SlowPeer(e)
+            | ClientError::Other(e) => e,
+        }
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::WorkerUnreachable(e) => write!(f, "worker unreachable: {e}"),
+            ClientError::SlowPeer(e) => write!(f, "peer slow (read timeout): {e}"),
+            ClientError::Other(e) => write!(f, "client error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
 /// Blocking line-protocol client.
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -236,6 +326,28 @@ impl Client {
         })
     }
 
+    /// [`Client::connect`] plus a read timeout, with classified errors.
+    /// Without a timeout a read on a wedged-but-open socket blocks
+    /// forever; with one it surfaces as [`ClientError::SlowPeer`].
+    pub fn connect_with_timeout(
+        addr: impl ToSocketAddrs,
+        read_timeout: Option<std::time::Duration>,
+    ) -> Result<Client, ClientError> {
+        let mut c = Client::connect(addr).map_err(ClientError::from_io)?;
+        c.set_read_timeout(read_timeout).map_err(ClientError::from_io)?;
+        Ok(c)
+    }
+
+    /// Set (or clear) the read timeout on the underlying socket. The
+    /// reader and writer halves share one socket, so the option covers
+    /// every subsequent read, including mid-stream `generate` reads.
+    pub fn set_read_timeout(
+        &mut self,
+        timeout: Option<std::time::Duration>,
+    ) -> std::io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)
+    }
+
     /// Send one raw JSON line, receive one line back.
     pub fn call_raw(&mut self, line: &str) -> std::io::Result<String> {
         self.writer.write_all(line.as_bytes())?;
@@ -244,6 +356,70 @@ impl Client {
         let mut resp = String::new();
         self.reader.read_line(&mut resp)?;
         Ok(resp.trim().to_string())
+    }
+
+    /// Send one raw line without reading a reply — the router forwards
+    /// a client's original request line verbatim, then relays the
+    /// worker's answer with [`Client::recv_line`].
+    pub fn send_line(&mut self, line: &str) -> Result<(), ClientError> {
+        let io = (|| {
+            self.writer.write_all(line.as_bytes())?;
+            self.writer.write_all(b"\n")?;
+            self.writer.flush()
+        })();
+        io.map_err(ClientError::from_io)
+    }
+
+    /// Read one line with classified errors: EOF (peer closed) is
+    /// [`ClientError::WorkerUnreachable`], a read timeout is
+    /// [`ClientError::SlowPeer`].
+    pub fn recv_line(&mut self) -> Result<String, ClientError> {
+        let mut resp = String::new();
+        match self.reader.read_line(&mut resp) {
+            Ok(0) => Err(ClientError::WorkerUnreachable(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "peer closed the connection",
+            ))),
+            Ok(_) => Ok(resp.trim().to_string()),
+            Err(e) => Err(ClientError::from_io(e)),
+        }
+    }
+
+    /// One-line exchange with classified errors (a `call_raw` that can
+    /// tell a dead peer from a slow one).
+    pub fn call_classified(&mut self, line: &str) -> Result<String, ClientError> {
+        self.send_line(line)?;
+        self.recv_line()
+    }
+
+    /// `health` verb: the worker's liveness/drain snapshot. Returns the
+    /// full response line (`health` holds the snapshot on success).
+    pub fn health(&mut self) -> Result<crate::util::json::Json, ClientError> {
+        let resp = self.call_classified(r#"{"type":"health"}"#)?;
+        crate::util::json::parse(&resp).map_err(|e| {
+            ClientError::Other(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                e.to_string(),
+            ))
+        })
+    }
+
+    /// `drain` verb: flip the worker into stop-admitting drain mode,
+    /// optionally asserting which worker id is meant. Returns the full
+    /// response line (`drain` holds the post-flip snapshot on success).
+    pub fn drain(&mut self, worker: Option<u64>) -> Result<crate::util::json::Json, ClientError> {
+        use crate::util::json::Json;
+        let mut fields = vec![("type", Json::str("drain"))];
+        if let Some(w) = worker {
+            fields.push(("worker", Json::num(w as f64)));
+        }
+        let resp = self.call_classified(&Json::obj(fields).to_string())?;
+        crate::util::json::parse(&resp).map_err(|e| {
+            ClientError::Other(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                e.to_string(),
+            ))
+        })
     }
 
     pub fn ping(&mut self) -> std::io::Result<bool> {
@@ -491,6 +667,26 @@ impl Client {
             }
             return Ok(j);
         }
+    }
+
+    /// [`Client::generate_streaming_sampled`] with classified transport
+    /// errors: a socket that dies mid-stream surfaces as
+    /// [`ClientError::WorkerUnreachable`] and an elapsed read timeout
+    /// as [`ClientError::SlowPeer`] — set one via
+    /// [`Client::set_read_timeout`], else a dead-but-open peer blocks
+    /// this call forever.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_streaming_classified(
+        &mut self,
+        tokens: &[u32],
+        max_new: usize,
+        priority: &str,
+        trace: Option<u64>,
+        sampling: crate::sched::Sampling,
+        on_token: impl FnMut(u64, usize, u32),
+    ) -> Result<crate::util::json::Json, ClientError> {
+        self.generate_streaming_sampled(tokens, max_new, priority, trace, sampling, on_token)
+            .map_err(ClientError::from_io)
     }
 
     /// Convenience: generate and collect the streamed tokens.

@@ -106,3 +106,27 @@ fn every_live_metric_family_is_documented() {
         "families live in the registry but missing from docs/OBSERVABILITY.md: {missing:?}"
     );
 }
+
+/// Same lint for the router tier: `RouterMetrics` registers its whole
+/// catalogue up front, so a synthetic registry is exactly what a live
+/// `intfa route` process would scrape as.
+#[test]
+fn every_router_metric_family_is_documented() {
+    use int_flashattention::coordinator::metrics::Registry;
+    use int_flashattention::router::RouterMetrics;
+
+    let registry = Registry::default();
+    let _metrics = RouterMetrics::new(&registry, 3);
+
+    let doc = doc_text();
+    let templates = doc_families(&doc);
+    let missing: Vec<String> = registry
+        .family_names()
+        .into_iter()
+        .filter(|name| !templates.iter().any(|t| matches_template(name, t)))
+        .collect();
+    assert!(
+        missing.is_empty(),
+        "router families missing from docs/OBSERVABILITY.md: {missing:?}"
+    );
+}

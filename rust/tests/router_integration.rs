@@ -1,0 +1,454 @@
+//! Router-tier integration: drain semantics over real TCP, health
+//! failover, and the exactness contract across the process boundary —
+//! streams through a 2-worker router are bit-identical to the same
+//! requests against a single engine, including around a mid-run drain.
+
+use int_flashattention::attention::Variant;
+use int_flashattention::coordinator::batcher::BatchPolicy;
+use int_flashattention::coordinator::engine::{Engine, EngineConfig, NativeBackend};
+use int_flashattention::coordinator::metrics::Registry;
+use int_flashattention::coordinator::router::{Bucket, BucketRouter};
+use int_flashattention::kv::CacheConfig;
+use int_flashattention::router::{
+    HealthMonitor, RouterConfig, RouterMetrics, RouterServer, RouterShutdown, WorkerPool,
+};
+use int_flashattention::sched::{HashModel, SchedConfig, DRAINING_REASON};
+use int_flashattention::server::tcp::ShutdownHandle;
+use int_flashattention::server::{Client, ClientError, Server};
+use std::sync::Arc;
+use std::time::Duration;
+
+const HEADS: usize = 2;
+const DIM: usize = 8;
+
+/// One in-process engine worker on a free port (the same stack
+/// `intfa route --workers` spawns).
+fn worker(worker_id: u64) -> (ShutdownHandle, std::thread::JoinHandle<()>) {
+    let mk = |variant, seq| Bucket {
+        variant,
+        batch: 2,
+        heads: HEADS,
+        seq,
+        head_dim: DIM,
+        causal: true,
+        artifact: String::new(),
+    };
+    let cfg = CacheConfig { block_tokens: 8, max_blocks: 256, ..CacheConfig::new(HEADS, DIM) };
+    let engine = Engine::new(
+        BucketRouter::new(vec![
+            mk(Variant::Int8, 32),
+            mk(Variant::Fp16, 32),
+            mk(Variant::HalfInt8, 32),
+        ]),
+        Arc::new(NativeBackend { threads: 1 }),
+        EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
+    )
+    .with_kv_striped(cfg, 2, 2)
+    .with_sched(Arc::new(HashModel::new(HEADS, DIM)), SchedConfig::default())
+    .expect("kv attached")
+    .with_worker_id(worker_id);
+    let server = Server::bind(Arc::new(engine), "127.0.0.1:0").expect("bind worker");
+    server.start()
+}
+
+struct RouterRig {
+    handle: RouterShutdown,
+    join: std::thread::JoinHandle<()>,
+    pool: Arc<WorkerPool>,
+    metrics: Arc<RouterMetrics>,
+    cfg: RouterConfig,
+}
+
+fn router_over(addrs: Vec<String>) -> RouterRig {
+    let cfg = RouterConfig {
+        route_block_tokens: 8, // match the workers' kv block_tokens
+        drain_timeout: Duration::from_secs(60),
+        ..RouterConfig::default()
+    };
+    let pool = Arc::new(WorkerPool::new(addrs, cfg.route_block_tokens));
+    let registry = Arc::new(Registry::default());
+    let metrics = Arc::new(RouterMetrics::new(&registry, pool.len()));
+    let server = RouterServer::bind(
+        pool.clone(),
+        metrics.clone(),
+        registry,
+        cfg.clone(),
+        "127.0.0.1:0",
+    )
+    .expect("bind router");
+    let (handle, join) = server.start();
+    RouterRig { handle, join, pool, metrics, cfg }
+}
+
+/// Everything a client observes from one generate exchange, minus the
+/// engine-local `id` (which legitimately differs between runs, exactly
+/// as it does between two single-engine runs with different arrival
+/// interleavings).
+#[derive(Debug, PartialEq)]
+struct Observed {
+    stream: Vec<(u64, usize, u32)>,
+    ok: bool,
+    trace: u64,
+    tokens: Vec<u32>,
+}
+
+fn run_generate(addr: &str, prompt: &[u32], max_new: usize, trace: u64) -> Observed {
+    let mut c = Client::connect(addr).expect("connect");
+    let mut stream = Vec::new();
+    let done = c
+        .generate_streaming_traced(prompt, max_new, "", Some(trace), |tr, pos, tok| {
+            stream.push((tr, pos, tok))
+        })
+        .expect("generate");
+    Observed {
+        stream,
+        ok: done.at("ok").as_bool() == Some(true),
+        trace: done.at("trace").as_usize().map(|x| x as u64).unwrap_or(0),
+        tokens: done
+            .at("tokens")
+            .as_arr()
+            .map(|a| a.iter().map(|t| t.as_usize().unwrap() as u32).collect())
+            .unwrap_or_default(),
+    }
+}
+
+/// Run every request concurrently (own connection each) and collect
+/// observations in request order.
+fn run_all(addr: &str, reqs: &[(Vec<u32>, usize, u64)]) -> Vec<Observed> {
+    let handles: Vec<_> = reqs
+        .iter()
+        .cloned()
+        .map(|(prompt, max_new, trace)| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || run_generate(&addr, &prompt, max_new, trace))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("request thread")).collect()
+}
+
+#[test]
+fn drain_finishes_inflight_and_refuses_new_over_tcp() {
+    let (handle, join) = worker(0);
+    let addr = handle.addr().to_string();
+
+    // health before drain: identified, not draining
+    let mut probe = Client::connect(&addr).expect("connect");
+    let h = probe.health().expect("health");
+    assert_eq!(h.at("ok").as_bool(), Some(true));
+    assert_eq!(h.at("health").at("worker").as_i64(), Some(0));
+    assert_eq!(h.at("health").at("draining").as_bool(), Some(false));
+
+    // long in-flight stream; signal once the first token lands
+    let (first_tx, first_rx) = std::sync::mpsc::channel::<()>();
+    let inflight_addr = addr.clone();
+    let inflight = std::thread::spawn(move || {
+        let mut c = Client::connect(&inflight_addr).expect("connect");
+        let mut stream = Vec::new();
+        let mut signalled = false;
+        let done = c
+            .generate_streaming_traced(&[1, 2, 3], 300, "", Some(77), |_, pos, tok| {
+                stream.push((pos, tok));
+                if !signalled {
+                    let _ = first_tx.send(());
+                    signalled = true;
+                }
+            })
+            .expect("generate");
+        (stream, done)
+    });
+    first_rx.recv_timeout(Duration::from_secs(30)).expect("first token");
+
+    // drain: acknowledged with the post-flip snapshot
+    let d = probe.drain(None).expect("drain");
+    assert_eq!(d.at("ok").as_bool(), Some(true), "{d:?}");
+    assert_eq!(d.at("drain").at("draining").as_bool(), Some(true));
+
+    // asserting a wrong worker id refuses
+    let e = probe.drain(Some(9)).expect("drain call");
+    assert_eq!(e.at("ok").as_bool(), Some(false));
+    assert!(e.at("error").as_str().unwrap().contains("mismatch"), "{e:?}");
+
+    // new work is refused with the load-bearing requeue reason
+    let refused = run_generate(&addr, &[50, 51], 10, 88);
+    assert!(!refused.ok);
+    assert!(refused.stream.is_empty(), "refused request must not stream");
+
+    // ... and the in-flight stream ran to completion regardless
+    let (stream, done) = inflight.join().expect("inflight thread");
+    assert_eq!(done.at("ok").as_bool(), Some(true), "{done:?}");
+    assert_eq!(done.at("count").as_usize(), Some(300));
+    assert_eq!(stream.len(), 300);
+
+    // quiesced worker exits on its own — no shutdown() call here
+    join.join().expect("worker exited after drain");
+}
+
+#[test]
+fn drain_refusal_carries_the_draining_reason() {
+    let (handle, join) = worker(0);
+    let addr = handle.addr().to_string();
+    let mut probe = Client::connect(&addr).expect("connect");
+    probe.drain(None).expect("drain");
+    let mut c = Client::connect(&addr).expect("connect");
+    let done = c
+        .generate_streaming_traced(&[9, 9, 9], 5, "", Some(5), |_, _, _| {})
+        .expect("generate");
+    assert_eq!(done.at("ok").as_bool(), Some(false));
+    assert_eq!(
+        done.at("error").as_str(),
+        Some(DRAINING_REASON),
+        "the refusal string is what the router keys requeues on"
+    );
+    join.join().expect("worker exited");
+}
+
+#[test]
+fn router_streams_bit_identical_to_single_worker() {
+    // seeded request set: distinct prompts, distinct traces
+    let reqs: Vec<(Vec<u32>, usize, u64)> = (0..8u32)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..4 + (i % 3)).map(|p| 1000 + 100 * i + p).collect();
+            (prompt, 20, 9000 + i as u64)
+        })
+        .collect();
+
+    // reference: one engine, no router
+    let (ref_handle, ref_join) = worker(0);
+    let reference = run_all(&ref_handle.addr().to_string(), &reqs);
+    ref_handle.shutdown();
+    ref_join.join().unwrap();
+    assert!(reference.iter().all(|o| o.ok), "reference run failed");
+
+    // same requests through a 2-worker router
+    let (w0, j0) = worker(0);
+    let (w1, j1) = worker(1);
+    let rig = router_over(vec![w0.addr().to_string(), w1.addr().to_string()]);
+    let routed = run_all(&rig.handle.addr().to_string(), &reqs);
+
+    assert_eq!(routed, reference, "streams must be bit-identical through the router");
+    assert_eq!(rig.metrics.routed.get(), reqs.len() as u64);
+    assert_eq!(rig.metrics.requeued.get(), 0);
+    assert_eq!(rig.metrics.failed.get(), 0);
+
+    rig.handle.shutdown();
+    rig.join.join().unwrap();
+    w0.shutdown();
+    w1.shutdown();
+    j0.join().unwrap();
+    j1.join().unwrap();
+}
+
+#[test]
+fn mid_run_drain_requeues_and_streams_stay_identical() {
+    // pick prompts whose home worker (in a 2-pool) is known, so the
+    // test provably exercises both the drain-refusal requeue and the
+    // untouched sibling path
+    let probe_pool = WorkerPool::new(vec!["x".into(), "y".into()], 8);
+    let mut homed0 = Vec::new();
+    let mut homed1 = Vec::new();
+    for i in 0..64u32 {
+        let prompt: Vec<u32> = (0..5).map(|p| 5000 + 100 * i + p).collect();
+        if probe_pool.home(&prompt) == 0 {
+            homed0.push(prompt);
+        } else {
+            homed1.push(prompt);
+        }
+    }
+    assert!(homed0.len() >= 2 && homed1.len() >= 2, "hash degenerated");
+
+    // long phase-A streams (one per worker) + short phase-B requests
+    let phase_a: Vec<(Vec<u32>, usize, u64)> = vec![
+        (homed0[0].clone(), 300, 100),
+        (homed1[0].clone(), 300, 101),
+    ];
+    let phase_b: Vec<(Vec<u32>, usize, u64)> = vec![
+        (homed0[1].clone(), 15, 200), // will be refused by draining w0, requeued to w1
+        (homed1[1].clone(), 15, 201),
+    ];
+    let all: Vec<_> = phase_a.iter().chain(phase_b.iter()).cloned().collect();
+
+    // reference: everything against one engine
+    let (ref_handle, ref_join) = worker(0);
+    let reference = run_all(&ref_handle.addr().to_string(), &all);
+    ref_handle.shutdown();
+    ref_join.join().unwrap();
+
+    // live run: 2 workers + router, drain worker 0 mid-flight
+    let (w0, j0) = worker(0);
+    let (w1, j1) = worker(1);
+    let w0_addr = w0.addr().to_string();
+    let rig = router_over(vec![w0_addr.clone(), w1.addr().to_string()]);
+    let raddr = rig.handle.addr().to_string();
+
+    let a_handles: Vec<_> = phase_a
+        .iter()
+        .cloned()
+        .map(|(prompt, max_new, trace)| {
+            let addr = raddr.clone();
+            std::thread::spawn(move || run_generate(&addr, &prompt, max_new, trace))
+        })
+        .collect();
+    // wait until both phase-A streams are provably in flight
+    let t0 = std::time::Instant::now();
+    loop {
+        let inflight: usize = rig.pool.slots().iter().map(|s| s.inflight()).sum();
+        if inflight >= phase_a.len() {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "phase A never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // drain worker 0 *directly* (not via the router): the router finds
+    // out only through the wire — phase-B requests homed to worker 0
+    // are relayed there, refused with DRAINING_REASON, and requeued
+    let mut direct = Client::connect(&w0_addr).expect("connect w0");
+    let d = direct.drain(None).expect("drain w0");
+    assert_eq!(d.at("ok").as_bool(), Some(true), "{d:?}");
+
+    let b_results = run_all(&raddr, &phase_b);
+    let a_results: Vec<Observed> =
+        a_handles.into_iter().map(|h| h.join().expect("phase A thread")).collect();
+
+    let live: Vec<Observed> = a_results.into_iter().chain(b_results).collect();
+    assert_eq!(
+        live, reference,
+        "streams must stay bit-identical across a mid-run drain"
+    );
+    assert!(
+        rig.metrics.requeued.get() >= 1,
+        "the worker-0-homed phase-B request must have been requeued"
+    );
+    assert_eq!(rig.metrics.failed.get(), 0);
+
+    // the drained worker quiesced (phase A stream included) and exited
+    j0.join().expect("worker 0 exited after drain");
+
+    rig.handle.shutdown();
+    rig.join.join().unwrap();
+    w1.shutdown();
+    j1.join().unwrap();
+}
+
+#[test]
+fn health_monitor_demotes_dead_worker_and_router_fails_over() {
+    let (w0, j0) = worker(0);
+    let (w1, j1) = worker(1);
+    let rig = router_over(vec![w0.addr().to_string(), w1.addr().to_string()]);
+    let monitor = HealthMonitor::start(
+        rig.pool.clone(),
+        rig.metrics.clone(),
+        RouterConfig {
+            health_interval: Duration::from_millis(25),
+            health_timeout: Duration::from_millis(500),
+            unhealthy_after: 2,
+            ..rig.cfg.clone()
+        },
+    );
+
+    // kill worker 0; the monitor demotes it after consecutive failures
+    w0.shutdown();
+    j0.join().unwrap();
+    let t0 = std::time::Instant::now();
+    while rig.pool.slot(0).healthy() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker 0 never demoted");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(rig.metrics.health_failures.get() >= 2);
+
+    // any prompt — wherever it homes — now lands on worker 1 and works
+    for i in 0..4u32 {
+        let prompt: Vec<u32> = (0..6).map(|p| 7000 + 100 * i + p).collect();
+        let o = run_generate(&rig.handle.addr().to_string(), &prompt, 10, 300 + i as u64);
+        assert!(o.ok, "failover request {i} failed");
+        assert_eq!(o.tokens.len(), 10);
+    }
+
+    monitor.stop();
+    rig.handle.shutdown();
+    rig.join.join().unwrap();
+    w1.shutdown();
+    j1.join().unwrap();
+}
+
+#[test]
+fn client_errors_classify_dead_vs_slow_peers() {
+    // dead peer: connecting to a freed port refuses
+    let dead_addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    match Client::connect_with_timeout(dead_addr, Some(Duration::from_millis(200))) {
+        Err(e) => assert!(e.is_unreachable(), "refused connect must classify unreachable: {e}"),
+        Ok(_) => panic!("connected to a dead port"),
+    }
+
+    // slow peer: accepts, never answers — the read timeout classifies
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let slow_addr = listener.local_addr().unwrap();
+    let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+    let mut c = Client::connect_with_timeout(slow_addr, Some(Duration::from_millis(100)))
+        .expect("connect");
+    match c.health() {
+        Err(ClientError::SlowPeer(_)) => {}
+        other => panic!("expected SlowPeer, got {other:?}"),
+    }
+    drop(hold);
+
+    // peer that dies mid-exchange: EOF classifies unreachable
+    let (handle, join) = worker(0);
+    let timeout = Some(Duration::from_secs(5));
+    let mut c = Client::connect_with_timeout(handle.addr(), timeout).expect("connect");
+    assert!(c.ping().expect("ping"));
+    handle.shutdown();
+    join.join().unwrap();
+    match c.call_classified(r#"{"type":"ping"}"#) {
+        Err(e) => assert!(e.is_unreachable(), "EOF must classify unreachable: {e}"),
+        Ok(l) => panic!("got a reply from a dead server: {l}"),
+    }
+}
+
+#[test]
+fn router_front_end_speaks_the_protocol() {
+    let (w0, j0) = worker(0);
+    let rig = router_over(vec![w0.addr().to_string()]);
+    let mut c = Client::connect(rig.handle.addr()).expect("connect");
+
+    assert!(c.ping().expect("ping"));
+
+    let h = c.health().expect("health");
+    assert_eq!(h.at("health").at("router").as_bool(), Some(true));
+    assert_eq!(h.at("health").at("workers").as_i64(), Some(1));
+    assert_eq!(h.at("health").at("eligible").as_i64(), Some(1));
+    let detail = h.at("health").at("detail").as_arr().expect("detail array");
+    assert_eq!(detail.len(), 1);
+    assert_eq!(detail[0].at("healthy").as_bool(), Some(true));
+    assert_eq!(detail[0].at("draining").as_bool(), Some(false));
+
+    // stateful verbs are refused, not silently misrouted
+    let resp = c.call_raw(r#"{"type":"release","seq_id":1}"#).expect("raw");
+    let j = int_flashattention::util::json::parse(&resp).unwrap();
+    assert_eq!(j.at("ok").as_bool(), Some(false));
+    assert!(j.at("error").as_str().unwrap().contains("not supported through the router"));
+
+    // drain through the router must name a worker
+    let d = c.drain(None).expect("drain");
+    assert_eq!(d.at("ok").as_bool(), Some(false));
+    assert!(d.at("error").as_str().unwrap().contains("must name a worker"), "{d:?}");
+
+    // metrics verb answers with the router registry
+    let m = c.metrics().expect("metrics");
+    assert!(!m.at("gauge.router.workers").is_null(), "{m:?}");
+
+    // named drain through the router blocks until the worker quiesced
+    // and exited (idle worker: quiesces immediately)
+    let d = c.drain(Some(0)).expect("drain");
+    assert_eq!(d.at("ok").as_bool(), Some(true), "{d:?}");
+    assert_eq!(d.at("drain").at("drained").as_bool(), Some(true));
+    assert!(rig.pool.slot(0).draining());
+    j0.join().expect("worker exited after drain");
+
+    rig.handle.shutdown();
+    rig.join.join().unwrap();
+    w0.shutdown(); // already exited; flag-set is a no-op
+}

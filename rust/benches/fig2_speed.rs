@@ -9,8 +9,11 @@
 //!
 //! Run: `cargo bench --bench fig2_speed` (INTFA_BENCH_FULL=1 widens B).
 
+use int_flashattention::attention::int_flash::int_flash_attention_f32_in_with;
 use int_flashattention::attention::{attention_f32, AttnConfig, Variant};
 use int_flashattention::bench_harness::{bench, BenchConfig, Table};
+use int_flashattention::kernels;
+use int_flashattention::quant::INT8_R;
 use int_flashattention::simulator::{predict, GpuModel, Workload};
 use int_flashattention::tensor::MatF32;
 use int_flashattention::util::rng::{Dist, Pcg64};
@@ -44,9 +47,22 @@ fn main() {
     println!("\nexpected shape: int8 ≈ fp8 < half < fp16; gap widens with seq.\n");
 
     println!("## B. measured CPU (rust-native kernels, 1 head, d=64)\n");
+    let simd = kernels::simd_backend();
+    match simd {
+        Some(kb) => println!("int8 series A/B the kernel backends: scalar vs {}\n", kb.name()),
+        None => println!("no SIMD backend on this host — int8 simd column is \"-\"\n"),
+    }
     let seqs: &[usize] = if full { &[256, 512, 1024, 2048, 4096] } else { &[256, 512, 1024] };
     let cfg_bench = if full { BenchConfig::default() } else { BenchConfig::quick() };
-    let mut t2 = Table::new(&["seq", "fp16 ms", "fp8 ms", "half ms", "int8 ms", "int4 ms"]);
+    let mut t2 = Table::new(&[
+        "seq",
+        "fp16 ms",
+        "fp8 ms",
+        "half ms",
+        "int8 scalar ms",
+        "int8 simd ms",
+        "int4 ms",
+    ]);
     for &seq in seqs {
         let mut rng = Pcg64::seeded(seq as u64);
         let q = MatF32::random(seq, 64, Dist::Normal, &mut rng);
@@ -59,12 +75,23 @@ fn main() {
             })
             .mean_ms()
         };
+        let int8_scalar = bench("int8 scalar", &cfg_bench, || {
+            int_flash_attention_f32_in_with(&kernels::SCALAR, &q, &k, &v, &cfg, INT8_R)
+        })
+        .mean_ms();
+        let int8_simd = simd.map(|kb| {
+            bench(kb.name(), &cfg_bench, || {
+                int_flash_attention_f32_in_with(kb, &q, &k, &v, &cfg, INT8_R)
+            })
+            .mean_ms()
+        });
         t2.row(&[
             seq.to_string(),
             format!("{:.3}", m(Variant::Fp16)),
             format!("{:.3}", m(Variant::Fp8)),
             format!("{:.3}", m(Variant::HalfInt8)),
-            format!("{:.3}", m(Variant::Int8)),
+            format!("{int8_scalar:.3}"),
+            int8_simd.map_or("-".into(), |ms| format!("{ms:.3}")),
             format!("{:.3}", m(Variant::Int4)),
         ]);
     }

@@ -1,11 +1,20 @@
-//! Micro-benchmark for the GEMM substrate (L3 hot path): blocked vs naive,
-//! i8 vs f32 — feeds the §Perf iteration log.
+//! Micro-benchmark for the INT8 GEMM substrate (L3 hot path): naive vs
+//! blocked-scalar vs SIMD, plus the f32 baseline — feeds the §Perf
+//! iteration log and the CI SIMD gate.
+//!
+//! Each size also asserts scalar/SIMD bit-identity before timing, so a
+//! broken backend fails the bench instead of reporting a fast wrong
+//! answer. The machine-readable report lands in `BENCH_simd.json`
+//! (override with `INTFA_BENCH_OUT`); CI gates on `simd_available` and
+//! `speedup_best`.
 //!
 //! Run: `cargo bench --bench gemm_microbench`
 
 use int_flashattention::bench_harness::{bench, BenchConfig, Table};
 use int_flashattention::gemm;
+use int_flashattention::kernels::{self, KernelBackend};
 use int_flashattention::tensor::{MatF32, MatI8};
+use int_flashattention::util::json::Json;
 use int_flashattention::util::rng::Pcg64;
 
 fn rand_i8(seed: u64, rows: usize, cols: usize) -> MatI8 {
@@ -24,28 +33,78 @@ fn rand_f32(seed: u64, rows: usize, cols: usize) -> MatF32 {
 
 fn main() {
     let cfg = BenchConfig::default();
-    println!("# GEMM microbench (square M=N=K)\n");
+    let scalar = kernels::scalar_backend();
+    let simd = kernels::simd_backend();
+    match simd {
+        Some(kb) => println!("# GEMM microbench (square M=N=K) — SIMD backend: {}\n", kb.name()),
+        None => println!("# GEMM microbench (square M=N=K) — no SIMD backend on this host\n"),
+    }
     let mut t = Table::new(&[
-        "size", "i8 naive ms", "i8 blocked ms", "i8 GOPS", "f32 blocked ms", "f32 GFLOPS", "i8/f32",
+        "size",
+        "naive ms",
+        "scalar ms",
+        "scalar GOPS",
+        "simd ms",
+        "simd GOPS",
+        "simd/scalar",
+        "f32 ms",
     ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedup_best = 0.0f64;
     for n in [64usize, 128, 256, 512] {
         let a8 = rand_i8(1, n, n);
         let b8 = rand_i8(2, n, n);
         let af = rand_f32(3, n, n);
         let bf = rand_f32(4, n, n);
+        // correctness before speed: the timed kernels must agree bit for
+        // bit with the reference triple loop at every size
+        let want = kernels::gemm_i8_reference(&a8, &b8);
+        assert_eq!(want.data, scalar.gemm_i8(&a8, &b8).data, "scalar diverged at n={n}");
+        if let Some(kb) = simd {
+            assert_eq!(want.data, kb.gemm_i8(&a8, &b8).data, "{} diverged at n={n}", kb.name());
+        }
         let ops = 2.0 * (n as f64).powi(3);
-        let m_naive = bench("i8 naive", &cfg, || gemm::gemm_i8_naive(&a8, &b8));
-        let m_i8 = bench("i8 blocked", &cfg, || gemm::gemm_i8(&a8, &b8));
+        let m_naive = bench("i8 naive", &cfg, || kernels::gemm_i8_reference(&a8, &b8));
+        let m_scalar = bench("i8 scalar", &cfg, || scalar.gemm_i8(&a8, &b8));
+        let m_simd = simd.map(|kb| bench(kb.name(), &cfg, || kb.gemm_i8(&a8, &b8)));
         let m_f32 = bench("f32 blocked", &cfg, || gemm::gemm_f32(&af, &bf));
+        let speedup = m_simd.as_ref().map(|m| m_scalar.mean_ns() / m.mean_ns());
+        if let Some(s) = speedup {
+            speedup_best = speedup_best.max(s);
+        }
         t.row(&[
             n.to_string(),
             format!("{:.3}", m_naive.mean_ms()),
-            format!("{:.3}", m_i8.mean_ms()),
-            format!("{:.2}", ops / m_i8.mean_ns()),
+            format!("{:.3}", m_scalar.mean_ms()),
+            format!("{:.2}", ops / m_scalar.mean_ns()),
+            m_simd.as_ref().map_or("-".into(), |m| format!("{:.3}", m.mean_ms())),
+            m_simd.as_ref().map_or("-".into(), |m| format!("{:.2}", ops / m.mean_ns())),
+            speedup.map_or("-".into(), |s| format!("{s:.2}x")),
             format!("{:.3}", m_f32.mean_ms()),
-            format!("{:.2}", ops / m_f32.mean_ns()),
-            format!("{:.2}x", m_f32.mean_ns() / m_i8.mean_ns()),
         ]);
+        rows.push(Json::obj(vec![
+            ("size", Json::num(n as f64)),
+            ("naive_ms", Json::num(m_naive.mean_ms())),
+            ("scalar_ms", Json::num(m_scalar.mean_ms())),
+            ("scalar_gops", Json::num(ops / m_scalar.mean_ns())),
+            ("simd_ms", m_simd.as_ref().map_or(Json::Null, |m| Json::num(m.mean_ms()))),
+            ("simd_gops", m_simd.as_ref().map_or(Json::Null, |m| Json::num(ops / m.mean_ns()))),
+            ("speedup", speedup.map_or(Json::Null, Json::num)),
+        ]));
     }
     print!("{}", t.render());
+    if simd.is_some() {
+        println!("\nbest simd/scalar speedup: {speedup_best:.2}x");
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("gemm_microbench")),
+        ("simd_available", Json::Bool(simd.is_some())),
+        ("simd_backend", simd.map_or(Json::Null, |kb| Json::str(kb.name()))),
+        ("speedup_best", Json::num(speedup_best)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = std::env::var("INTFA_BENCH_OUT").unwrap_or_else(|_| "BENCH_simd.json".to_string());
+    std::fs::write(&out, report.to_pretty()).expect("write bench report");
+    println!("wrote {out}");
 }

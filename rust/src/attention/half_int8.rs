@@ -4,7 +4,7 @@
 //! MRE is ~5× below full-INT8's in Tables 1-2.
 
 use super::{causal_visible, AttnConfig, NEG_INF};
-use crate::gemm::gemm_i8_into;
+use crate::kernels;
 use crate::quant;
 use crate::tensor::{MatF32, MatI32, MatI8};
 
@@ -64,7 +64,7 @@ pub fn half_int8_attention(
                 s_i32 = MatI32::zeros(ib, jb);
                 s = MatF32::zeros(ib, jb);
             }
-            gemm_i8_into(&qi, &kj, &mut s_i32);
+            kernels::default_backend().gemm_i8_tile(&qi, &kj, &mut s_i32);
             for rr in 0..ib {
                 let scale_q = s_q[i0 + rr] * cfg.sm_scale;
                 let srow = s.row_mut(rr);

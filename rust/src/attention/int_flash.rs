@@ -2,23 +2,43 @@
 //!
 //! This is the serving hot path: token-level INT8 Q/K (scales S_Q, S_K),
 //! tensor-level INT8 V (scale S_V), both GEMMs in INT8×INT8→INT32
-//! ([`crate::gemm::gemm_i8_into`]), online softmax with the R-carrying
-//! running denominator `l`, final rescale `diag(l)⁻¹ · S_V` (lines 9-17).
+//! through a [`crate::kernels::KernelBackend`] (scalar or SIMD — bit
+//! identical either way), online softmax with the R-carrying running
+//! denominator `l`, final rescale `diag(l)⁻¹ · S_V` (lines 9-17).
 //!
 //! The same routine with `r = 7` is the INT4 extension (values still
 //! stored in i8; the paper's "compatible with other data formats" knob).
 
 use super::{causal_visible, AttnConfig, NEG_INF};
-use crate::gemm::gemm_i8_into;
+use crate::kernels::{self, KernelBackend};
 use crate::quant::{self, PerTensor, PerToken};
 use crate::tensor::{MatF32, MatI32, MatI8};
 
-/// Algorithm 1 on pre-quantized operands.
+/// Algorithm 1 on pre-quantized operands, via the process-default
+/// kernel backend (see [`crate::kernels::default_backend`]).
 ///
 /// `q8`/`k8` int8 codes with per-token scales `s_q`/`s_k`; `v8` int8 codes
 /// with tensor scale `s_v`; `r` is the P-requantization range (127 for
 /// INT8, 7 for INT4).
+#[allow(clippy::too_many_arguments)]
 pub fn int_flash_attention(
+    q8: &MatI8,
+    s_q: &[f32],
+    k8: &MatI8,
+    s_k: &[f32],
+    v8: &MatI8,
+    s_v: f32,
+    cfg: &AttnConfig,
+    r: f32,
+) -> MatF32 {
+    int_flash_attention_with(kernels::default_backend(), q8, s_q, k8, s_k, v8, s_v, cfg, r)
+}
+
+/// Algorithm 1 with an explicit kernel backend — the dispatch seam the
+/// benches use to compare scalar vs SIMD on identical inputs.
+#[allow(clippy::too_many_arguments)]
+pub fn int_flash_attention_with(
+    kb: &dyn KernelBackend,
     q8: &MatI8,
     s_q: &[f32],
     k8: &MatI8,
@@ -83,7 +103,7 @@ pub fn int_flash_attention(
                 s = MatF32::zeros(ib, jb);
                 p8 = MatI8::zeros(ib, jb);
             }
-            gemm_i8_into(&qi, &kj, &mut s_i32);
+            kb.gemm_i8_tile(&qi, &kj, &mut s_i32);
             for rr in 0..ib {
                 let scale_q = s_q[i0 + rr] * cfg.sm_scale;
                 let srow = s.row_mut(rr);
@@ -125,7 +145,7 @@ pub fn int_flash_attention(
             if pv.rows != ib {
                 pv = MatI32::zeros(ib, d);
             }
-            gemm_i8_into(&p8, &vt_blocks[jblk], &mut pv);
+            kb.gemm_i8_tile(&p8, &vt_blocks[jblk], &mut pv);
             for rr in 0..ib {
                 let arow = acc.row_mut(rr);
                 let prow = pv.row(rr);
@@ -161,11 +181,23 @@ pub fn int_flash_attention_f32_in(
     cfg: &AttnConfig,
     r: f32,
 ) -> MatF32 {
+    int_flash_attention_f32_in_with(kernels::default_backend(), q, k, v, cfg, r)
+}
+
+/// [`int_flash_attention_f32_in`] with an explicit kernel backend.
+pub fn int_flash_attention_f32_in_with(
+    kb: &dyn KernelBackend,
+    q: &MatF32,
+    k: &MatF32,
+    v: &MatF32,
+    cfg: &AttnConfig,
+    r: f32,
+) -> MatF32 {
     let qq: PerToken = quant::quantize_per_token(q, r);
     let kq: PerToken = quant::quantize_per_token(k, r);
     let vq: PerTensor = quant::quantize_per_tensor(v, r);
-    int_flash_attention(
-        &qq.codes, &qq.scales, &kq.codes, &kq.scales, &vq.codes, vq.scale, cfg, r,
+    int_flash_attention_with(
+        kb, &qq.codes, &qq.scales, &kq.codes, &kq.scales, &vq.codes, vq.scale, cfg, r,
     )
 }
 

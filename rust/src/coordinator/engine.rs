@@ -292,6 +292,10 @@ pub struct Engine {
     /// serving standalone. Echoed by `health` so the router can verify
     /// it is talking to the worker it thinks it is.
     worker_id: Option<u64>,
+    /// INT8 kernel backend (`--kernel-backend`), installed into the KV
+    /// stripes at attach time and surfaced as the `kernels.backend`
+    /// info gauge. Bit-identical across backends (docs/KERNELS.md).
+    kernels: &'static dyn crate::kernels::KernelBackend,
     pub metrics: Arc<Registry>,
     next_id: std::sync::atomic::AtomicU64,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -372,6 +376,8 @@ impl Engine {
             );
         }
 
+        let kernels = crate::kernels::default_backend();
+        metrics.set_info("kernels.backend", &[("backend", kernels.name())]);
         Engine {
             tx,
             gate,
@@ -381,10 +387,41 @@ impl Engine {
             sched: None,
             recalib: None,
             worker_id: None,
+            kernels,
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
             threads,
         }
+    }
+
+    /// Select the INT8 kernel backend (`--kernel-backend`): `Auto`
+    /// picks the best SIMD implementation the host supports and falls
+    /// back to scalar; `Simd` fails on hosts without one. Call *before*
+    /// [`Engine::with_kv`]/[`Engine::with_kv_striped`] so the cache
+    /// stripes pick the backend up. Backends are bit-identical
+    /// (docs/KERNELS.md), so this changes throughput, never tokens.
+    pub fn with_kernel_backend(
+        mut self,
+        choice: crate::kernels::KernelChoice,
+    ) -> Result<Engine, String> {
+        if self.kv.is_some() {
+            // the stripes captured the previous backend at attach time —
+            // changing it now would split append/decode across handles
+            return Err(
+                "select the kernel backend before attaching the kv cache \
+                 (with_kernel_backend, then with_kv/with_kv_striped)"
+                    .to_string(),
+            );
+        }
+        self.kernels = crate::kernels::backend_for(choice)?;
+        self.metrics
+            .set_info("kernels.backend", &[("backend", self.kernels.name())]);
+        Ok(self)
+    }
+
+    /// The selected kernel backend's name (`kernels.backend` label).
+    pub fn kernel_backend(&self) -> &'static str {
+        self.kernels.name()
     }
 
     /// Attach a shared-prefix KV cache: enables the `prefill` / `extend`
@@ -404,6 +441,7 @@ impl Engine {
     }
 
     fn install_kv(mut self, cache: StripedKvCache, splitk: usize) -> Engine {
+        cache.install_kernel_backend(self.kernels);
         self.metrics.gauge("kv.enabled").set(1);
         self.metrics
             .gauge("kv.blocks.free")

@@ -1,0 +1,244 @@
+//! Unified kernel-backend API for the INT8 hot loops.
+//!
+//! Every integer inner loop in the serving path — the i8×i8→i32 dot
+//! products behind QKᵀ and split-K pass 1, the p·V dequant/merge of
+//! split-K pass 2, and the f32→i8 block quantize on append — dispatches
+//! through the [`KernelBackend`] trait. Two implementations exist:
+//!
+//! - [`scalar::Scalar`] — the always-correct portable fallback,
+//!   extracted verbatim from the original free functions in `gemm/`,
+//!   `kv/decode.rs`, and `kv/quantize.rs`;
+//! - the SIMD backends in [`simd`] (AVX2 on x86_64, NEON on aarch64),
+//!   selected at runtime via feature detection.
+//!
+//! # Bit-identity contract
+//!
+//! Backends are interchangeable *bit for bit*, not just approximately:
+//! the integer kernels are exact by construction, and the float-side
+//! ops (quantize rounding, absmax) are implemented to reproduce the
+//! scalar code's IEEE semantics exactly for finite inputs. Property
+//! tests in `tests/kernel_backend.rs` and the in-crate suites treat any
+//! divergence as a hard failure. See `docs/KERNELS.md` for the full
+//! contract, the feature-detection matrix, and how to add a backend.
+//!
+//! # Selection
+//!
+//! [`backend_for`] maps a [`KernelChoice`] (`--kernel-backend
+//! {auto,scalar,simd}`) to a backend; `Auto` picks the best SIMD
+//! implementation the host supports and falls back to scalar. The
+//! engine threads an explicit handle through `StripedKvCache` /
+//! `RadixKvCache` / `DecodeView` so per-cache A/B comparison is
+//! possible in one process; the attention free functions use the
+//! process-wide [`default_backend`], fixed once via [`set_default`] at
+//! serve/bench startup. Because backends are bit-identical, mixing them
+//! can never change tokens — only throughput.
+
+pub mod scalar;
+pub mod simd;
+
+use crate::tensor::{MatI32, MatI8};
+use std::sync::OnceLock;
+
+/// The dispatch seam for the INT8 hot loops. All methods must be
+/// bit-identical to the [`scalar::Scalar`] implementation for finite
+/// inputs (NaN handling may differ between scalar clamps and SIMD
+/// min/max semantics; no serving path produces NaN here).
+pub trait KernelBackend: Send + Sync {
+    /// Stable identifier, surfaced in the `kernels.backend` info gauge
+    /// and bench reports: `"scalar"`, `"simd-avx2"`, `"simd-neon"`.
+    fn name(&self) -> &'static str;
+
+    /// Exact i8×i8→i32 dot product over `a.len()` (== `b.len()`)
+    /// elements. Widened per-element to i16×i16 then summed in i32;
+    /// exact while `len·127·128` fits i32 (len < ~130k).
+    fn dot_i8(&self, a: &[i8], b: &[i8]) -> i32;
+
+    /// INT8 GEMM into a caller-provided buffer: `c[m][n] = a.row(m) ·
+    /// bt.row(n)` with `bt` holding Bᵀ row-major. Panics on shape
+    /// mismatch (same messages as the original `gemm::gemm_i8_into`).
+    fn gemm_i8_tile(&self, a: &MatI8, bt: &MatI8, c: &mut MatI32);
+
+    /// Allocating wrapper over [`KernelBackend::gemm_i8_tile`].
+    fn gemm_i8(&self, a: &MatI8, bt: &MatI8) -> MatI32 {
+        let mut c = MatI32::zeros(a.rows, bt.rows);
+        self.gemm_i8_tile(a, bt, &mut c);
+        c
+    }
+
+    /// Split-K pass-2 merge: `acc[i] += p * v[i]` with the quantized
+    /// probability weight `p` and an i8 value row. Exact for any `p`
+    /// (backends may take a widened scalar path when `p` exceeds their
+    /// vector lane width).
+    fn dequant_merge(&self, p: i64, v: &[i8], acc: &mut [i64]);
+
+    /// Token/tensor-mode quantize: `dst[i] = clip_round(src[i] * inv)`
+    /// into the signed range `[-(r+1), r]`, matching `f32::round`
+    /// (half away from zero) exactly.
+    fn quantize_i8(&self, src: &[f32], inv: f32, r: f32, dst: &mut [i8]);
+
+    /// Per-channel quantize: `dst[i] = clip_round(src[i] / scales[i])`.
+    /// Division, not multiplication by a reciprocal — the per-channel
+    /// calibration path is specified in divide form and the two are not
+    /// bit-identical.
+    fn quantize_i8_per_channel(&self, src: &[f32], scales: &[f32], r: f32, dst: &mut [i8]);
+
+    /// `max(|x|)` over the row, 0.0 for an empty row — the row-scale
+    /// reduction feeding token-mode quantize.
+    fn absmax_f32(&self, src: &[f32]) -> f32;
+}
+
+/// Shape checks shared by every `gemm_i8_tile` implementation, kept
+/// identical to the original `gemm::gemm_i8_into` panic messages.
+pub(crate) fn check_gemm_shapes(a: &MatI8, bt: &MatI8, c: &MatI32) {
+    assert_eq!(a.cols, bt.cols, "K mismatch");
+    assert_eq!(c.rows, a.rows, "C rows mismatch");
+    assert_eq!(c.cols, bt.rows, "C cols mismatch");
+}
+
+/// Reference triple-loop INT8 GEMM (no blocking, no dispatch) — the
+/// oracle the backends are tested against, and the "naive" series in
+/// `benches/gemm_microbench.rs`.
+pub fn gemm_i8_reference(a: &MatI8, bt: &MatI8) -> MatI32 {
+    assert_eq!(a.cols, bt.cols, "K mismatch");
+    let mut c = MatI32::zeros(a.rows, bt.rows);
+    for m in 0..a.rows {
+        for n in 0..bt.rows {
+            let mut acc: i32 = 0;
+            for k in 0..a.cols {
+                acc += a.at(m, k) as i32 * bt.at(n, k) as i32;
+            }
+            c.set(m, n, acc);
+        }
+    }
+    c
+}
+
+/// CLI-facing backend selection (`--kernel-backend {auto,scalar,simd}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Best SIMD backend the host supports, scalar fallback.
+    Auto,
+    /// Portable scalar kernels, unconditionally.
+    Scalar,
+    /// Require a SIMD backend; selection fails if the host has none.
+    Simd,
+}
+
+impl KernelChoice {
+    /// Parse the CLI spelling; `None` on anything unrecognized.
+    pub fn parse(s: &str) -> Option<KernelChoice> {
+        match s {
+            "auto" => Some(KernelChoice::Auto),
+            "scalar" => Some(KernelChoice::Scalar),
+            "simd" => Some(KernelChoice::Simd),
+            _ => None,
+        }
+    }
+}
+
+/// The scalar backend as a static, so `&SCALAR` is a free
+/// `&'static dyn KernelBackend`.
+pub static SCALAR: scalar::Scalar = scalar::Scalar;
+
+/// The scalar backend, as trait object.
+pub fn scalar_backend() -> &'static dyn KernelBackend {
+    &SCALAR
+}
+
+/// The best SIMD backend this host supports, if any (AVX2 on x86_64,
+/// NEON on aarch64 — see [`simd::detect`]).
+pub fn simd_backend() -> Option<&'static dyn KernelBackend> {
+    simd::detect()
+}
+
+/// Resolve a [`KernelChoice`] to a backend. `Simd` is the only choice
+/// that can fail: it errors when the host supports no SIMD backend
+/// instead of silently degrading.
+pub fn backend_for(choice: KernelChoice) -> Result<&'static dyn KernelBackend, String> {
+    match choice {
+        KernelChoice::Scalar => Ok(&SCALAR),
+        KernelChoice::Auto => Ok(simd::detect().unwrap_or(&SCALAR)),
+        KernelChoice::Simd => simd::detect().ok_or_else(|| {
+            "kernel backend 'simd' requested but this host has no supported SIMD \
+             implementation (x86_64 needs AVX2; aarch64 always qualifies)"
+                .to_string()
+        }),
+    }
+}
+
+static DEFAULT: OnceLock<&'static dyn KernelBackend> = OnceLock::new();
+
+/// Process-wide default backend, used by paths without an explicit
+/// handle (the attention free functions, caches built before
+/// `--kernel-backend` is applied). First use pins `Auto` unless
+/// [`set_default`] ran earlier.
+pub fn default_backend() -> &'static dyn KernelBackend {
+    DEFAULT.get_or_init(|| backend_for(KernelChoice::Auto).expect("auto selection is infallible"))
+}
+
+/// Pin the process default (serve/bench startup, before any kernel
+/// runs). Errors if the choice cannot be satisfied, or if a different
+/// backend was already pinned — the default is set once.
+pub fn set_default(choice: KernelChoice) -> Result<&'static dyn KernelBackend, String> {
+    let want = backend_for(choice)?;
+    let got = *DEFAULT.get_or_init(|| want);
+    if got.name() != want.name() {
+        return Err(format!(
+            "kernel backend already pinned to '{}' for this process",
+            got.name()
+        ));
+    }
+    Ok(got)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_i8(seed: u64, rows: usize, cols: usize) -> MatI8 {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_range(255) as i32 - 127) as i8)
+            .collect();
+        MatI8::from_vec(rows, cols, data)
+    }
+
+    #[test]
+    fn choice_parses_cli_spellings() {
+        assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse("scalar"), Some(KernelChoice::Scalar));
+        assert_eq!(KernelChoice::parse("simd"), Some(KernelChoice::Simd));
+        assert_eq!(KernelChoice::parse("avx512"), None);
+        assert_eq!(KernelChoice::parse(""), None);
+    }
+
+    #[test]
+    fn scalar_matches_reference() {
+        for &(m, n, k) in &[(1, 1, 1), (3, 5, 7), (33, 17, 31), (64, 64, 64)] {
+            let a = rand_i8(m as u64 * 31 + k as u64, m, k);
+            let bt = rand_i8(n as u64 * 17 + 5, n, k);
+            let want = gemm_i8_reference(&a, &bt);
+            let got = SCALAR.gemm_i8(&a, &bt);
+            assert_eq!(want.data, got.data, "shape ({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn auto_resolves_and_scalar_is_scalar() {
+        assert_eq!(backend_for(KernelChoice::Scalar).unwrap().name(), "scalar");
+        let auto = backend_for(KernelChoice::Auto).unwrap();
+        match simd_backend() {
+            Some(s) => assert_eq!(auto.name(), s.name()),
+            None => assert_eq!(auto.name(), "scalar"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "K mismatch")]
+    fn reference_checks_k() {
+        let a = rand_i8(1, 2, 3);
+        let bt = rand_i8(2, 2, 4);
+        gemm_i8_reference(&a, &bt);
+    }
+}

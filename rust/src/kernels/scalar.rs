@@ -1,0 +1,159 @@
+//! The portable scalar backend — the bit-exactness oracle.
+//!
+//! These loops are the original free-function kernels from `gemm/`,
+//! `kv/decode.rs`, and `kv/quantize.rs`, moved here verbatim so every
+//! backend (and the property tests) shares one source of truth for the
+//! semantics. The helpers are `pub(crate)` because the SIMD backends
+//! delegate to them for ops they do not vectorize, and for ragged
+//! tails.
+//!
+//! § Perf note: do not "optimize" these by hand (e.g. unrolling or
+//! manual widening) — the SIMD backends exist for speed, and this path
+//! defines the semantics the others must reproduce bit for bit.
+
+use super::{check_gemm_shapes, KernelBackend};
+use crate::tensor::{MatI32, MatI8};
+
+/// Round (half away from zero, like `f32::round`) then clamp into the
+/// signed range `[-(r+1), r]`; the i8 cast is then lossless. Round
+/// first: clamping 127.6 before rounding would yield 128.
+#[inline]
+pub(crate) fn clip_round(x: f32, r: f32) -> i8 {
+    x.round().clamp(-(r + 1.0), r) as i8
+}
+
+#[inline]
+pub(crate) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as i16 * y as i16) as i32)
+        .sum()
+}
+
+/// Cache-blocked GEMM driver shared by the scalar and NEON backends:
+/// MC×NC panels of C stay hot while the per-element dot is pluggable.
+pub(crate) fn gemm_blocked(
+    a: &MatI8,
+    bt: &MatI8,
+    c: &mut MatI32,
+    dot: impl Fn(&[i8], &[i8]) -> i32,
+) {
+    check_gemm_shapes(a, bt, c);
+    const MC: usize = 64;
+    const NC: usize = 64;
+    for i0 in (0..a.rows).step_by(MC) {
+        let i1 = (i0 + MC).min(a.rows);
+        for j0 in (0..bt.rows).step_by(NC) {
+            let j1 = (j0 + NC).min(bt.rows);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let crow = c.row_mut(i);
+                for j in j0..j1 {
+                    crow[j] = dot(arow, bt.row(j));
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+pub(crate) fn dequant_merge(p: i64, v: &[i8], acc: &mut [i64]) {
+    debug_assert_eq!(v.len(), acc.len());
+    for (a, &x) in acc.iter_mut().zip(v) {
+        *a += p * x as i64;
+    }
+}
+
+#[inline]
+pub(crate) fn quantize_i8(src: &[f32], inv: f32, r: f32, dst: &mut [i8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d = clip_round(x * inv, r);
+    }
+}
+
+#[inline]
+pub(crate) fn quantize_i8_per_channel(src: &[f32], scales: &[f32], r: f32, dst: &mut [i8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    debug_assert_eq!(src.len(), scales.len());
+    for ((d, &x), &s) in dst.iter_mut().zip(src).zip(scales) {
+        *d = clip_round(x / s, r);
+    }
+}
+
+#[inline]
+pub(crate) fn absmax_f32(src: &[f32]) -> f32 {
+    src.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// The always-available portable backend. Correctness baseline: every
+/// other backend is property-tested bit-identical to this one.
+pub struct Scalar;
+
+impl KernelBackend for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn dot_i8(&self, a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        dot_i8(a, b)
+    }
+
+    fn gemm_i8_tile(&self, a: &MatI8, bt: &MatI8, c: &mut MatI32) {
+        gemm_blocked(a, bt, c, dot_i8);
+    }
+
+    fn dequant_merge(&self, p: i64, v: &[i8], acc: &mut [i64]) {
+        dequant_merge(p, v, acc);
+    }
+
+    fn quantize_i8(&self, src: &[f32], inv: f32, r: f32, dst: &mut [i8]) {
+        quantize_i8(src, inv, r, dst);
+    }
+
+    fn quantize_i8_per_channel(&self, src: &[f32], scales: &[f32], r: f32, dst: &mut [i8]) {
+        quantize_i8_per_channel(src, scales, r, dst);
+    }
+
+    fn absmax_f32(&self, src: &[f32]) -> f32 {
+        absmax_f32(src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_round_matches_quantizer_semantics() {
+        assert_eq!(clip_round(0.5, 127.0), 1);
+        assert_eq!(clip_round(-0.5, 127.0), -1);
+        assert_eq!(clip_round(2.4, 127.0), 2);
+        assert_eq!(clip_round(127.6, 127.0), 127);
+        assert_eq!(clip_round(-200.0, 127.0), -128);
+        assert_eq!(clip_round(9.0, 7.0), 7);
+        assert_eq!(clip_round(-9.0, 7.0), -8);
+    }
+
+    #[test]
+    fn dot_handles_empty_and_extremes() {
+        assert_eq!(dot_i8(&[], &[]), 0);
+        let a = vec![127i8; 64];
+        let b = vec![-128i8; 64];
+        assert_eq!(dot_i8(&a, &b), 64 * 127 * -128);
+    }
+
+    #[test]
+    fn dequant_merge_accumulates() {
+        let mut acc = vec![10i64, -10, 0];
+        dequant_merge(3, &[1, -2, 127], &mut acc);
+        assert_eq!(acc, vec![13, -16, 381]);
+    }
+
+    #[test]
+    fn absmax_of_empty_is_zero() {
+        assert_eq!(absmax_f32(&[]), 0.0);
+        assert_eq!(absmax_f32(&[-3.5, 2.0]), 3.5);
+    }
+}

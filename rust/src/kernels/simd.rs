@@ -1,0 +1,550 @@
+//! SIMD kernel backends behind runtime feature detection.
+//!
+//! [`detect`] returns the best backend the host supports — AVX2 on
+//! x86_64 (checked at runtime, so a baseline build still runs
+//! everywhere), base NEON on aarch64 (architecturally guaranteed, no
+//! check needed) — or `None`, in which case callers fall back to
+//! [`super::scalar::Scalar`].
+//!
+//! Everything here is bound by the bit-identity contract in
+//! `docs/KERNELS.md`: for finite inputs every op must reproduce the
+//! scalar path exactly. The integer kernels are exact by construction
+//! (widening multiplies, integer adds). The delicate part is the f32
+//! quantize rounding — `f32::round` rounds half *away from zero*, and
+//! the naive SIMD emulation `trunc(x + copysign(0.5, x))` is wrong
+//! (e.g. `0.49999997f32 + 0.5` rounds up to `1.0`), so the AVX2 path
+//! truncates toward zero and compares the exact fraction against 0.5
+//! instead. NEON sidesteps the problem entirely by delegating all f32
+//! ops to the shared scalar helpers and vectorizing only the i8 dot.
+
+use super::KernelBackend;
+
+/// Best SIMD backend for this host, if any.
+pub fn detect() -> Option<&'static dyn KernelBackend> {
+    detect_impl()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_impl() -> Option<&'static dyn KernelBackend> {
+    if is_x86_feature_detected!("avx2") {
+        Some(&x86::Avx2)
+    } else {
+        None
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_impl() -> Option<&'static dyn KernelBackend> {
+    Some(&neon::Neon)
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_impl() -> Option<&'static dyn KernelBackend> {
+    None
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::{check_gemm_shapes, scalar, KernelBackend};
+    use crate::tensor::{MatI32, MatI8};
+    use std::arch::x86_64::*;
+
+    /// AVX2 backend: 32-lane i8 dots via sign-extend + `vpmaddwd`, a
+    /// 4-column register-tiled GEMM inner kernel, 8-lane f32 quantize
+    /// with exact `f32::round` emulation, and 8-lane dequant/merge.
+    pub struct Avx2;
+
+    // `p · v` stays inside i32 in the vector path as long as
+    // |p| · 128 ≤ i32::MAX; larger weights take the scalar i64 path.
+    const P_VEC_MAX: i64 = (i32::MAX / 128) as i64;
+
+    impl KernelBackend for Avx2 {
+        fn name(&self) -> &'static str {
+            "simd-avx2"
+        }
+
+        fn dot_i8(&self, a: &[i8], b: &[i8]) -> i32 {
+            // SAFETY: Avx2 is only constructed behind
+            // is_x86_feature_detected!("avx2") in detect_impl().
+            unsafe { dot_i8_avx2(a, b) }
+        }
+
+        fn gemm_i8_tile(&self, a: &MatI8, bt: &MatI8, c: &mut MatI32) {
+            check_gemm_shapes(a, bt, c);
+            // SAFETY: as above; shapes checked, so all row accesses are
+            // in bounds.
+            unsafe { gemm_i8_avx2(a, bt, c) }
+        }
+
+        fn dequant_merge(&self, p: i64, v: &[i8], acc: &mut [i64]) {
+            debug_assert_eq!(v.len(), acc.len());
+            if (-P_VEC_MAX..=P_VEC_MAX).contains(&p) {
+                // SAFETY: feature-gated construction, equal lengths.
+                unsafe { dequant_merge_avx2(p as i32, v, acc) }
+            } else {
+                scalar::dequant_merge(p, v, acc);
+            }
+        }
+
+        fn quantize_i8(&self, src: &[f32], inv: f32, r: f32, dst: &mut [i8]) {
+            debug_assert_eq!(src.len(), dst.len());
+            // SAFETY: feature-gated construction, equal lengths.
+            unsafe { quantize_i8_avx2(src, inv, r, dst) }
+        }
+
+        fn quantize_i8_per_channel(&self, src: &[f32], scales: &[f32], r: f32, dst: &mut [i8]) {
+            debug_assert_eq!(src.len(), dst.len());
+            debug_assert_eq!(src.len(), scales.len());
+            // SAFETY: feature-gated construction, equal lengths.
+            unsafe { quantize_per_channel_avx2(src, scales, r, dst) }
+        }
+
+        fn absmax_f32(&self, src: &[f32]) -> f32 {
+            // SAFETY: feature-gated construction.
+            unsafe { absmax_f32_avx2(src) }
+        }
+    }
+
+    /// Accumulate 32 i8 products from `b` against the pre-widened
+    /// halves of an `a` vector: sign-extend to i16, `vpmaddwd` pairs
+    /// into 8 i32 lanes. Exact — |pair sum| ≤ 2·127·128 fits i16×i16
+    /// accumulation in i32 with huge margin.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn madd_block(acc: __m256i, a_lo: __m256i, a_hi: __m256i, b: *const i8) -> __m256i {
+        let vb = _mm256_loadu_si256(b as *const __m256i);
+        let b_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(vb));
+        let b_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(vb));
+        let acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a_lo, b_lo));
+        _mm256_add_epi32(acc, _mm256_madd_epi16(a_hi, b_hi))
+    }
+
+    /// Horizontal sum of the 8 i32 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b0100_1110>(s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b1011_0001>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 32 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let a_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(va));
+            let a_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(va));
+            acc = madd_block(acc, a_lo, a_hi, b.as_ptr().add(i));
+            i += 32;
+        }
+        let mut sum = hsum_epi32(acc);
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// Blocked GEMM with a 4-column register tile: one widened A vector
+    /// feeds four B rows, amortizing the A loads and keeping four i32
+    /// accumulators live across the K loop.
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_i8_avx2(a: &MatI8, bt: &MatI8, c: &mut MatI32) {
+        let k = a.cols;
+        const MC: usize = 64;
+        const NC: usize = 64;
+        for i0 in (0..a.rows).step_by(MC) {
+            let i1 = (i0 + MC).min(a.rows);
+            for j0 in (0..bt.rows).step_by(NC) {
+                let j1 = (j0 + NC).min(bt.rows);
+                for i in i0..i1 {
+                    let arow = a.row(i);
+                    let crow = c.row_mut(i);
+                    let mut j = j0;
+                    while j + 4 <= j1 {
+                        let b0 = bt.row(j);
+                        let b1 = bt.row(j + 1);
+                        let b2 = bt.row(j + 2);
+                        let b3 = bt.row(j + 3);
+                        let mut acc0 = _mm256_setzero_si256();
+                        let mut acc1 = _mm256_setzero_si256();
+                        let mut acc2 = _mm256_setzero_si256();
+                        let mut acc3 = _mm256_setzero_si256();
+                        let mut p = 0;
+                        while p + 32 <= k {
+                            let va = _mm256_loadu_si256(arow.as_ptr().add(p) as *const __m256i);
+                            let a_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(va));
+                            let a_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(va));
+                            acc0 = madd_block(acc0, a_lo, a_hi, b0.as_ptr().add(p));
+                            acc1 = madd_block(acc1, a_lo, a_hi, b1.as_ptr().add(p));
+                            acc2 = madd_block(acc2, a_lo, a_hi, b2.as_ptr().add(p));
+                            acc3 = madd_block(acc3, a_lo, a_hi, b3.as_ptr().add(p));
+                            p += 32;
+                        }
+                        let mut s0 = hsum_epi32(acc0);
+                        let mut s1 = hsum_epi32(acc1);
+                        let mut s2 = hsum_epi32(acc2);
+                        let mut s3 = hsum_epi32(acc3);
+                        while p < k {
+                            let x = arow[p] as i32;
+                            s0 += x * b0[p] as i32;
+                            s1 += x * b1[p] as i32;
+                            s2 += x * b2[p] as i32;
+                            s3 += x * b3[p] as i32;
+                            p += 1;
+                        }
+                        crow[j] = s0;
+                        crow[j + 1] = s1;
+                        crow[j + 2] = s2;
+                        crow[j + 3] = s3;
+                        j += 4;
+                    }
+                    while j < j1 {
+                        crow[j] = dot_i8_avx2(arow, bt.row(j));
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dequant_merge_avx2(p: i32, v: &[i8], acc: &mut [i64]) {
+        let n = v.len();
+        let vp = _mm256_set1_epi32(p);
+        let mut i = 0;
+        while i + 8 <= n {
+            // 8 codes → 8 exact i32 products → widen → two 4-lane i64 adds
+            let codes = _mm256_cvtepi8_epi32(_mm_loadl_epi64(v.as_ptr().add(i) as *const __m128i));
+            let prod = _mm256_mullo_epi32(codes, vp);
+            let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(prod));
+            let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(prod));
+            let a0 = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let a1 = _mm256_loadu_si256(acc.as_ptr().add(i + 4) as *const __m256i);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi64(a0, lo));
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(i + 4) as *mut __m256i,
+                _mm256_add_epi64(a1, hi),
+            );
+            i += 8;
+        }
+        while i < n {
+            acc[i] += p as i64 * v[i] as i64;
+            i += 1;
+        }
+    }
+
+    /// `f32::round` (half away from zero), exactly: truncate toward
+    /// zero, then step by ±1 where the exact fraction reaches 0.5.
+    /// `x − trunc(x)` is exact (Sterbenz for |x| ≥ 1, identity below),
+    /// so the 0.5 compare never misfires the way `x + 0.5` can.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn round_half_away(x: __m256) -> __m256 {
+        let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(x);
+        let frac = _mm256_sub_ps(x, t);
+        let one = _mm256_set1_ps(1.0);
+        let up = _mm256_and_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(frac, _mm256_set1_ps(0.5)), one);
+        let down = _mm256_and_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(frac, _mm256_set1_ps(-0.5)), one);
+        _mm256_add_ps(t, _mm256_sub_ps(up, down))
+    }
+
+    /// Round (first!) then clamp to `[lo, hi]` and convert; the input
+    /// of `_mm256_cvtps_epi32` is integral so the conversion is exact.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn clamp_round(x: __m256, lo: __m256, hi: __m256) -> __m256i {
+        let y = _mm256_min_ps(_mm256_max_ps(round_half_away(x), lo), hi);
+        _mm256_cvtps_epi32(y)
+    }
+
+    /// 8×i32 → 8×i8 (values already within [-128, 127], so the
+    /// saturating packs are lossless) and store.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_codes(dst: *mut i8, q: __m256i) {
+        let w = _mm_packs_epi32(_mm256_castsi256_si128(q), _mm256_extracti128_si256::<1>(q));
+        let b = _mm_packs_epi16(w, w);
+        _mm_storel_epi64(dst as *mut __m128i, b);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn quantize_i8_avx2(src: &[f32], inv: f32, r: f32, dst: &mut [i8]) {
+        let n = src.len();
+        let vinv = _mm256_set1_ps(inv);
+        let lo = _mm256_set1_ps(-(r + 1.0));
+        let hi = _mm256_set1_ps(r);
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_mul_ps(_mm256_loadu_ps(src.as_ptr().add(i)), vinv);
+            store_codes(dst.as_mut_ptr().add(i), clamp_round(x, lo, hi));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = scalar::clip_round(src[i] * inv, r);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn quantize_per_channel_avx2(src: &[f32], scales: &[f32], r: f32, dst: &mut [i8]) {
+        let n = src.len();
+        let lo = _mm256_set1_ps(-(r + 1.0));
+        let hi = _mm256_set1_ps(r);
+        let mut i = 0;
+        while i + 8 <= n {
+            // vdivps is correctly rounded, so it matches scalar `/` exactly
+            let x = _mm256_div_ps(
+                _mm256_loadu_ps(src.as_ptr().add(i)),
+                _mm256_loadu_ps(scales.as_ptr().add(i)),
+            );
+            store_codes(dst.as_mut_ptr().add(i), clamp_round(x, lo, hi));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = scalar::clip_round(src[i] / scales[i], r);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn absmax_f32_avx2(src: &[f32]) -> f32 {
+        let n = src.len();
+        let sign_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_and_ps(_mm256_loadu_ps(src.as_ptr().add(i)), sign_mask);
+            acc = _mm256_max_ps(acc, x);
+            i += 8;
+        }
+        let m = _mm_max_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+        let m = _mm_max_ps(m, _mm_shuffle_ps::<0b0100_1110>(m, m));
+        let m = _mm_max_ps(m, _mm_shuffle_ps::<0b1011_0001>(m, m));
+        let mut best = _mm_cvtss_f32(m);
+        while i < n {
+            best = best.max(src[i].abs());
+            i += 1;
+        }
+        best
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::super::{check_gemm_shapes, scalar, KernelBackend};
+    use crate::tensor::{MatI32, MatI8};
+    use std::arch::aarch64::*;
+
+    /// Base-NEON backend (architecturally guaranteed on aarch64, so no
+    /// runtime detection). Only the i8 dot/GEMM inner loops are
+    /// vectorized — `vmull_s8` + `vpadalq_s16`, the pre-`sdot` idiom;
+    /// the f32-side ops delegate to the shared scalar helpers, which
+    /// makes their bit-identity trivial. An `sdot` (dotprod feature)
+    /// variant is a named follow-on in `docs/KERNELS.md`.
+    pub struct Neon;
+
+    impl KernelBackend for Neon {
+        fn name(&self) -> &'static str {
+            "simd-neon"
+        }
+
+        fn dot_i8(&self, a: &[i8], b: &[i8]) -> i32 {
+            // SAFETY: NEON is part of the aarch64 baseline.
+            unsafe { dot_i8_neon(a, b) }
+        }
+
+        fn gemm_i8_tile(&self, a: &MatI8, bt: &MatI8, c: &mut MatI32) {
+            check_gemm_shapes(a, bt, c);
+            // SAFETY: as above.
+            scalar::gemm_blocked(a, bt, c, |x, y| unsafe { dot_i8_neon(x, y) });
+        }
+
+        fn dequant_merge(&self, p: i64, v: &[i8], acc: &mut [i64]) {
+            scalar::dequant_merge(p, v, acc);
+        }
+
+        fn quantize_i8(&self, src: &[f32], inv: f32, r: f32, dst: &mut [i8]) {
+            scalar::quantize_i8(src, inv, r, dst);
+        }
+
+        fn quantize_i8_per_channel(&self, src: &[f32], scales: &[f32], r: f32, dst: &mut [i8]) {
+            scalar::quantize_i8_per_channel(src, scales, r, dst);
+        }
+
+        fn absmax_f32(&self, src: &[f32]) -> f32 {
+            scalar::absmax_f32(src)
+        }
+    }
+
+    unsafe fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0;
+        while i + 16 <= n {
+            let va = vld1q_s8(a.as_ptr().add(i));
+            let vb = vld1q_s8(b.as_ptr().add(i));
+            let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+            let hi = vmull_s8(vget_high_s8(va), vget_high_s8(vb));
+            acc = vpadalq_s16(acc, lo);
+            acc = vpadalq_s16(acc, hi);
+            i += 16;
+        }
+        let mut sum = vaddvq_s32(acc);
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{scalar, SCALAR};
+    use super::*;
+    use crate::kernels::gemm_i8_reference;
+    use crate::tensor::{MatI32, MatI8};
+    use crate::util::rng::Pcg64;
+
+    fn rand_i8_vec(rng: &mut Pcg64, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.next_range(256) as i32 - 128) as i8).collect()
+    }
+
+    fn simd() -> Option<&'static dyn KernelBackend> {
+        let b = detect();
+        if b.is_none() {
+            eprintln!("skipping: no SIMD backend on this host");
+        }
+        b
+    }
+
+    #[test]
+    fn dot_matches_scalar_over_ragged_lengths() {
+        let Some(b) = simd() else { return };
+        let mut rng = Pcg64::seeded(11);
+        for n in 0..=70 {
+            let x = rand_i8_vec(&mut rng, n);
+            let y = rand_i8_vec(&mut rng, n);
+            assert_eq!(b.dot_i8(&x, &y), SCALAR.dot_i8(&x, &y), "len {n}");
+        }
+        // extremes: worst-case magnitudes across a full vector width
+        let x = vec![127i8; 100];
+        let y = vec![-128i8; 100];
+        assert_eq!(b.dot_i8(&x, &y), 100 * 127 * -128);
+    }
+
+    #[test]
+    fn gemm_matches_scalar_and_reference() {
+        let Some(b) = simd() else { return };
+        let mut rng = Pcg64::seeded(23);
+        for &(m, n, k) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (8, 4, 32),
+            (33, 17, 31),
+            (65, 33, 100),
+            (64, 64, 64),
+            (128, 96, 257),
+        ] {
+            let a = MatI8::from_vec(m, k, rand_i8_vec(&mut rng, m * k));
+            let bt = MatI8::from_vec(n, k, rand_i8_vec(&mut rng, n * k));
+            let want = gemm_i8_reference(&a, &bt);
+            let got = b.gemm_i8(&a, &bt);
+            assert_eq!(want.data, got.data, "shape ({m},{n},{k})");
+            let mut c = MatI32::zeros(m, n);
+            b.gemm_i8_tile(&a, &bt, &mut c);
+            assert_eq!(want.data, c.data, "tile ({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn dequant_merge_matches_scalar() {
+        let Some(b) = simd() else { return };
+        let mut rng = Pcg64::seeded(37);
+        for n in 0..=67 {
+            let v = rand_i8_vec(&mut rng, n);
+            for &p in &[0i64, 1, 127, -127, 1 << 20, i64::from(i32::MAX), i64::MAX / 256] {
+                let mut want: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64 >> 16).collect();
+                let mut got = want.clone();
+                scalar::dequant_merge(p, &v, &mut want);
+                b.dequant_merge(p, &v, &mut got);
+                assert_eq!(want, got, "len {n} p {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_matches_scalar_on_adversarial_values() {
+        let Some(b) = simd() else { return };
+        let just_below_half = f32::from_bits(0x3eff_ffff); // largest f32 < 0.5
+        let mut vals = vec![
+            0.0f32,
+            -0.0,
+            0.5,
+            -0.5,
+            1.5,
+            -1.5,
+            2.5,
+            -2.5,
+            just_below_half,
+            -just_below_half,
+            126.5,
+            127.49,
+            127.5,
+            -128.5,
+            -128.49,
+            1.0e30,
+            -1.0e30,
+            8_388_608.0, // 2^23: trunc(x) == x
+            8_388_609.0,
+            1.0e-40, // subnormal
+            -1.0e-40,
+            f32::MAX,
+            f32::MIN,
+        ];
+        let mut rng = Pcg64::seeded(41);
+        vals.extend((0..64).map(|_| rng.uniform_f32(-300.0, 300.0)));
+        for &inv in &[1.0f32, 0.0371, 254.0, 1.0e-6, 1.0e6] {
+            for &r in &[127.0f32, 7.0] {
+                let mut want = vec![0i8; vals.len()];
+                let mut got = vec![0i8; vals.len()];
+                SCALAR.quantize_i8(&vals, inv, r, &mut want);
+                b.quantize_i8(&vals, inv, r, &mut got);
+                assert_eq!(want, got, "inv {inv} r {r}");
+            }
+        }
+        // per-channel division form, including extreme scales
+        let scales: Vec<f32> = (0..vals.len())
+            .map(|i| [1.0e-6f32, 0.013, 1.0, 77.7, 1.0e6][i % 5])
+            .collect();
+        let mut want = vec![0i8; vals.len()];
+        let mut got = vec![0i8; vals.len()];
+        SCALAR.quantize_i8_per_channel(&vals, &scales, 127.0, &mut want);
+        b.quantize_i8_per_channel(&vals, &scales, 127.0, &mut got);
+        assert_eq!(want, got, "per-channel");
+    }
+
+    #[test]
+    fn absmax_matches_scalar() {
+        let Some(b) = simd() else { return };
+        let mut rng = Pcg64::seeded(53);
+        for n in 0..=67 {
+            let mut v: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-1.0e20, 1.0e20)).collect();
+            if n > 3 {
+                v[0] = -0.0;
+                v[1] = 1.0e-40;
+                v[2] = f32::MIN;
+            }
+            assert_eq!(
+                b.absmax_f32(&v).to_bits(),
+                SCALAR.absmax_f32(&v).to_bits(),
+                "len {n}"
+            );
+        }
+    }
+}

@@ -180,6 +180,12 @@ pub struct RadixKvCache {
     /// [`crate::kv::decode::DecodeView`] this cache hands out, so
     /// split-K passes time themselves outside the cache lock.
     pub(crate) prof: Arc<crate::obs::KernelProfiler>,
+    /// INT8 kernel backend: block quantize on append and every
+    /// [`crate::kv::decode::DecodeView`] handed out dispatch through
+    /// this seam (see [`crate::kernels`]). Not part of [`CacheConfig`]
+    /// — backends are bit-identical, so this is an execution-strategy
+    /// handle, never a quantization-grid property.
+    pub(crate) kernels: &'static dyn crate::kernels::KernelBackend,
 }
 
 /// Back-compat alias: the old `coordinator::kvcache` pool name.
@@ -199,6 +205,7 @@ impl RadixKvCache {
             stats: KvStats::default(),
             epoch: 0,
             prof: Arc::new(crate::obs::KernelProfiler::disabled()),
+            kernels: crate::kernels::default_backend(),
         }
     }
 
@@ -210,6 +217,14 @@ impl RadixKvCache {
     /// decode views created from here on time their split-K passes.
     pub fn set_kernel_profiler(&mut self, prof: Arc<crate::obs::KernelProfiler>) {
         self.prof = prof;
+    }
+
+    /// Select the kernel backend for this cache's quantize + decode
+    /// paths (`--kernel-backend`). Backends are bit-identical (see
+    /// `docs/KERNELS.md`), so swapping one in mid-stream can never
+    /// change numerics — only throughput.
+    pub fn set_kernel_backend(&mut self, kb: &'static dyn crate::kernels::KernelBackend) {
+        self.kernels = kb;
     }
 
     /// Calibration epoch (0 = boot plan; +1 per scale hot-swap).
@@ -485,9 +500,10 @@ impl RadixKvCache {
         // quantize under the sequence's admission-time config, not the
         // current epoch's: a hot-swap must never change the grid of an
         // already-admitted stream (its new blocks stamp the old scale)
+        let kb = self.kernels;
         let (pool, prof) = (&mut self.pool, &self.prof);
         prof.time(crate::obs::Kernel::BlockQuantize, || {
-            quantize::write_token(&seq_cfg, pool.block_mut(target), slot, k, v)
+            quantize::write_token(&seq_cfg, kb, pool.block_mut(target), slot, k, v)
         });
         let seq = self.seqs.get_mut(&id).unwrap();
         seq.len_tokens += 1;

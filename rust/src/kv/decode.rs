@@ -84,6 +84,10 @@ pub struct DecodeView {
     /// pass 1 / pass 2 timing runs lock-free with the compute
     /// (disabled handles are exact passthroughs).
     prof: Arc<crate::obs::KernelProfiler>,
+    /// Kernel backend captured at pin time (same reasoning as `prof`):
+    /// score dots, pass-2 dequant/merge and query quantize dispatch
+    /// through it. Bit-identical across backends.
+    kernels: &'static dyn crate::kernels::KernelBackend,
 }
 
 impl DecodeView {
@@ -215,10 +219,9 @@ impl DecodeView {
         let (d, bt) = (self.cfg.head_dim, self.cfg.block_tokens);
         let base = head * bt * d + t * d;
         let qbase = head * d;
-        let mut dot = 0i32;
-        for i in 0..d {
-            dot += qq.codes[qbase + i] as i32 * block.k_codes[base + i] as i32;
-        }
+        let dot = self
+            .kernels
+            .dot_i8(&qq.codes[qbase..qbase + d], &block.k_codes[base..base + d]);
         // per-channel mode folds the K scales into the query, so the
         // token's K rescale is identity there
         let k_scale = if self.cfg.per_channel_k() {
@@ -283,9 +286,11 @@ impl DecodeView {
                     let p = (r * (s - m[head]).exp()).round() as i64;
                     l[head] += p;
                     let base = head * bt * d + t * d;
-                    for i in 0..d {
-                        acc[head * d + i] += p * block.v_codes[base + i] as i64;
-                    }
+                    self.kernels.dequant_merge(
+                        p,
+                        &block.v_codes[base..base + d],
+                        &mut acc[head * d..(head + 1) * d],
+                    );
                 }
             }
         }
@@ -313,12 +318,11 @@ impl DecodeView {
             } else {
                 qrow
             };
-            let absmax = row.iter().fold(0.0f32, |mx, &x| mx.max(x.abs()));
+            let absmax = self.kernels.absmax_f32(row);
             let scale = absmax.max(SCALE_EPS) / r;
             let inv = 1.0 / scale;
-            for (i, &x) in row.iter().enumerate() {
-                codes[head * d + i] = (x * inv).round().clamp(-(r + 1.0), r) as i8;
-            }
+            self.kernels
+                .quantize_i8(row, inv, r, &mut codes[head * d..(head + 1) * d]);
             scales[head] = scale;
         }
         QuantQuery { codes, scales }
@@ -402,6 +406,7 @@ impl RadixKvCache {
             blocks: seq.blocks.iter().map(|&b| self.pool.block_arc(b)).collect(),
             len_tokens: seq.len_tokens,
             prof: self.prof.clone(),
+            kernels: self.kernels,
         })
     }
 

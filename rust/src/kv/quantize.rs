@@ -10,14 +10,12 @@
 
 use super::block::Block;
 use super::cache::CacheConfig;
+use crate::kernels::KernelBackend;
 use crate::quant::SCALE_EPS;
 
-#[inline]
-fn clip_round(x: f32, r: f32) -> i8 {
-    x.round().clamp(-(r + 1.0), r) as i8
-}
-
-/// Quantize one token's flat (heads, d) K/V rows into `block` at `slot`.
+/// Quantize one token's flat (heads, d) K/V rows into `block` at `slot`,
+/// through the cache's kernel backend `kb` (bit-identical across
+/// backends; see `docs/KERNELS.md`).
 ///
 /// The V grid is block-attached: the block's first token write stamps
 /// `cfg.v_scale` onto the block, and every later write into the same
@@ -27,6 +25,7 @@ fn clip_round(x: f32, r: f32) -> i8 {
 /// under exactly the scale it was written with.
 pub(crate) fn write_token(
     cfg: &CacheConfig,
+    kb: &dyn KernelBackend,
     block: &mut Block,
     slot: usize,
     k: &[f32],
@@ -44,31 +43,27 @@ pub(crate) fn write_token(
         let base = head * bt * d + slot * d;
         if per_channel {
             let scales = &cfg.k_channel_scale[head * d..(head + 1) * d];
-            for (i, (&x, &s)) in krow.iter().zip(scales).enumerate() {
-                block.k_codes[base + i] = clip_round(x / s, r);
-            }
+            kb.quantize_i8_per_channel(krow, scales, r, &mut block.k_codes[base..base + d]);
         } else {
-            let rowmax = krow.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let rowmax = kb.absmax_f32(krow);
             // calibrated per-head clip: outlier tokens saturate instead
             // of blowing up the whole row's quantization grid
             let absmax = cfg.clip_k_rowmax(head, rowmax);
             let scale = absmax.max(SCALE_EPS) / r;
             let inv = 1.0 / scale;
-            for (i, &x) in krow.iter().enumerate() {
-                block.k_codes[base + i] = clip_round(x * inv, r);
-            }
+            kb.quantize_i8(krow, inv, r, &mut block.k_codes[base..base + d]);
             block.k_scales[head * bt + slot] = scale;
         }
         let vrow = &v[head * d..(head + 1) * d];
-        for (i, &x) in vrow.iter().enumerate() {
-            block.v_codes[base + i] = clip_round(x * inv_v, r);
-        }
+        kb.quantize_i8(vrow, inv_v, r, &mut block.v_codes[base..base + d]);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::scalar::clip_round;
+    use crate::kernels::SCALAR;
     use crate::kv::block::BlockPool;
     use crate::util::rng::Pcg64;
 
@@ -86,7 +81,7 @@ mod tests {
         let mut rng = Pcg64::seeded(1);
         let k = rng.normal_vec(16);
         let v = rng.normal_vec(16);
-        write_token(&cfg, pool.block_mut(b), 1, &k, &v);
+        write_token(&cfg, &SCALAR, pool.block_mut(b), 1, &k, &v);
         let block = pool.block(b);
         for head in 0..2 {
             let krow = &k[head * 8..(head + 1) * 8];
@@ -107,7 +102,7 @@ mod tests {
         let (mut pool, b) = block_for(&cfg);
         let k = [0.5f32, 0.5, 0.5, 100.0];
         let v = [0.0f32; 4];
-        write_token(&cfg, pool.block_mut(b), 0, &k, &v);
+        write_token(&cfg, &SCALAR, pool.block_mut(b), 0, &k, &v);
         let block = pool.block(b);
         assert_eq!(block.k_codes[0], 50); // 0.5 / 0.01
         assert_eq!(block.k_codes[1], 25);
@@ -128,14 +123,14 @@ mod tests {
         let b = pool.alloc().unwrap();
         let v = [1.0f32, -1.0, 0.5, 0.25];
         let k = [0.5f32; 4];
-        write_token(&cfg, pool.block_mut(b), 0, &k, &v);
+        write_token(&cfg, &SCALAR, pool.block_mut(b), 0, &k, &v);
         let stamped = pool.block(b).v_scale;
         assert_eq!(stamped, cfg.v_scale);
         let code0 = pool.block(b).v_codes[0];
         // swapped config: half the scale — later slots keep the stamp
         let mut swapped = cfg.clone();
         swapped.v_scale = cfg.v_scale / 2.0;
-        write_token(&swapped, pool.block_mut(b), 1, &k, &v);
+        write_token(&swapped, &SCALAR, pool.block_mut(b), 1, &k, &v);
         let block = pool.block(b);
         assert_eq!(block.v_scale, stamped, "stamp survives a config swap");
         assert_eq!(
@@ -144,7 +139,43 @@ mod tests {
         );
         // a fresh block under the swapped config picks up the new grid
         let nb = pool.alloc().unwrap();
-        write_token(&swapped, pool.block_mut(nb), 0, &k, &v);
+        write_token(&swapped, &SCALAR, pool.block_mut(nb), 0, &k, &v);
         assert_eq!(pool.block(nb).v_scale, swapped.v_scale);
+    }
+
+    #[test]
+    fn block_quantize_bit_identical_across_backends() {
+        // write_token is pub(crate), so the scalar-vs-SIMD block-quantize
+        // identity lives here rather than in tests/kernel_backend.rs
+        let Some(simd) = crate::kernels::simd_backend() else {
+            eprintln!("skipping: no SIMD backend on this host");
+            return;
+        };
+        // d = 19: quantize and absmax both exercise their ragged tails
+        for (heads, d) in [(2usize, 19usize), (1, 8), (3, 64)] {
+            let mut cfg = CacheConfig { block_tokens: 4, ..CacheConfig::new(heads, d) };
+            for per_channel in [false, true] {
+                if per_channel {
+                    let mut rng = Pcg64::seeded(7);
+                    cfg.k_channel_scale =
+                        (0..heads * d).map(|_| rng.uniform_f32(0.001, 2.0)).collect();
+                } else {
+                    cfg.k_channel_scale = Vec::new();
+                }
+                let (mut pool_a, ba) = block_for(&cfg);
+                let (mut pool_b, bb) = block_for(&cfg);
+                let mut rng = Pcg64::seeded(99);
+                for slot in 0..cfg.block_tokens {
+                    let k = rng.normal_vec(heads * d);
+                    let v = rng.normal_vec(heads * d);
+                    write_token(&cfg, &SCALAR, pool_a.block_mut(ba), slot, &k, &v);
+                    write_token(&cfg, simd, pool_b.block_mut(bb), slot, &k, &v);
+                }
+                let (a, b) = (pool_a.block(ba), pool_b.block(bb));
+                assert_eq!(a.k_codes, b.k_codes, "k_codes d={d} pc={per_channel}");
+                assert_eq!(a.v_codes, b.v_codes, "v_codes d={d} pc={per_channel}");
+                assert_eq!(a.k_scales, b.k_scales, "k_scales d={d} pc={per_channel}");
+            }
+        }
     }
 }

@@ -32,6 +32,7 @@ pub mod bench_harness;
 pub mod calib;
 pub mod coordinator;
 pub mod gemm;
+pub mod kernels;
 pub mod kv;
 pub mod loadgen;
 pub mod model;

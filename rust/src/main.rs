@@ -52,6 +52,17 @@ USAGE:
                                           \"top_p\"). Without --model, generation
                                           runs the deterministic HashModel
                                           stand-in as before
+                   [--kernel-backend auto|scalar|simd]
+                     --kernel-backend     INT8 kernel backend for the hot loops
+                                          (QKᵀ dots, split-K merge, block
+                                          quantize): auto (default) picks the
+                                          best SIMD implementation the host
+                                          supports (AVX2 on x86_64, NEON on
+                                          aarch64) and falls back to scalar;
+                                          simd refuses to start instead of
+                                          degrading. Backends are bit-identical
+                                          — the choice changes throughput,
+                                          never tokens (docs/KERNELS.md)
                    [--metrics-addr HOST:PORT]
                      --metrics-addr       also serve a Prometheus text exposition
                                           (GET /metrics) on its own bind address:
@@ -157,7 +168,11 @@ USAGE:
                    [--system-prompt-len N] [--slo-ttft-ms MS] [--slo-itl-ms MS]
                    [--out FILE] [--heads H] [--head-dim D] [--kv-blocks N]
                    [--sched-stripes N] [--force-preempt] [--flight-dump FILE]
-                   [--model DIR]
+                   [--kernel-backend auto|scalar|simd] [--model DIR]
+                     --kernel-backend     with --in-process, the INT8 kernel
+                                          backend for the engine (see serve);
+                                          the report records the selection as
+                                          \"kernel_backend\"
                      --model              with --in-process, serve the transformer
                                           weight manifest in DIR instead of the
                                           HashModel stand-in (geometry comes from
@@ -239,6 +254,13 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// `--kernel-backend {auto,scalar,simd}` → [`KernelChoice`], shared by
+/// serve and bench-load.
+fn kernel_choice(args: &Args) -> Result<int_flashattention::kernels::KernelChoice> {
+    int_flashattention::kernels::KernelChoice::parse(args.get_or("kernel-backend", "auto"))
+        .ok_or_else(|| anyhow!("bad --kernel-backend (auto | scalar | simd)"))
 }
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -324,7 +346,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .then(|| router.buckets().first().map(|b| (b.heads, b.head_dim)))
             .flatten(),
     };
-    let engine = Engine::with_calibration(router, backend, cfg, calibration);
+    // INT8 kernel backend: pin the process default first (the attention
+    // free functions read it), then thread the explicit handle through
+    // the engine so the KV stripes capture it at attach time
+    let kb = kernel_choice(args)?;
+    int_flashattention::kernels::set_default(kb).map_err(|e| anyhow!(e))?;
+    let engine = Engine::with_calibration(router, backend, cfg, calibration)
+        .with_kernel_backend(kb)
+        .map_err(|e| anyhow!(e))?;
+    log_info!("kernel backend: {}", engine.kernel_backend());
     let engine = match kv_geometry {
         Some((heads, head_dim)) => {
             let mut kv_cfg = match engine.calibration() {
@@ -675,11 +705,15 @@ fn bench_engine(args: &Args) -> Result<Engine> {
         causal: true,
         artifact: String::new(),
     }]);
+    let kb = kernel_choice(args)?;
+    int_flashattention::kernels::set_default(kb).map_err(|e| anyhow!(e))?;
     Engine::new(
         router,
         Arc::new(NativeBackend { threads: 1 }),
         EngineConfig { policy: BatchPolicy::Eager, workers: 1, ..EngineConfig::default() },
     )
+    .with_kernel_backend(kb)
+    .map_err(|e| anyhow!(e))?
     .with_kv_striped(
         CacheConfig { block_tokens: 16, max_blocks: blocks, ..CacheConfig::new(heads, head_dim) },
         stripes,
@@ -776,8 +810,9 @@ fn cmd_bench_load(args: &Args) -> Result<()> {
         plan.turn_count()
     );
 
-    let (report, scrape_ok, phases) = if args.has("in-process") {
+    let (report, scrape_ok, phases, kernel_backend) = if args.has("in-process") {
         let engine = bench_engine(args)?;
+        let kernel_backend = engine.kernel_backend();
         let registry = engine.metrics.clone();
         let server = Server::bind(Arc::new(engine), "127.0.0.1:0")?;
         let addr = server.local_addr().to_string();
@@ -806,12 +841,12 @@ fn cmd_bench_load(args: &Args) -> Result<()> {
         let _ = join.join();
         mhandle.shutdown();
         let _ = mjoin.join();
-        (report, Some(true), phases)
+        (report, Some(true), phases, Some(kernel_backend))
     } else {
         let addr = args.get_or("addr", "127.0.0.1:7433").to_string();
         let report = loadgen::run(&addr, &cfg, &plan);
         let phases = bench_epilogue(&addr, args)?;
-        (report, None, phases)
+        (report, None, phases, None)
     };
 
     let mut j = report.to_json();
@@ -819,6 +854,11 @@ fn cmd_bench_load(args: &Args) -> Result<()> {
         map.insert("phases".to_string(), phases);
         if let Some(ok) = scrape_ok {
             map.insert("scrape_ok".to_string(), Json::Bool(ok));
+        }
+        // which kernel backend served the run (in-process only — a
+        // remote server's selection is not visible over the wire)
+        if let Some(kb) = kernel_backend {
+            map.insert("kernel_backend".to_string(), Json::str(kb));
         }
     }
     println!(

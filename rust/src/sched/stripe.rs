@@ -333,6 +333,15 @@ impl StripedKvCache {
         }
     }
 
+    /// Select the INT8 kernel backend on every stripe
+    /// (`--kernel-backend`). Backends are bit-identical (see
+    /// `docs/KERNELS.md`), so this changes throughput, never tokens.
+    pub fn install_kernel_backend(&self, kb: &'static dyn crate::kernels::KernelBackend) {
+        for s in 0..self.stripes.len() {
+            self.lock(s).set_kernel_backend(kb);
+        }
+    }
+
     /// Aggregate sharing/reuse counters across stripes.
     pub fn stats(&self) -> KvStats {
         self.snapshot().stats

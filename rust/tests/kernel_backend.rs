@@ -1,0 +1,206 @@
+//! Kernel-backend property suite: scalar and SIMD are bit-identical at
+//! every level of the stack — raw GEMM, split-K decode (pass 1 + pass
+//! 2), block quantize on append, and whole scheduler token streams.
+//!
+//! [`HashModel`] hashes the exact output bits into the next token, so a
+//! single ULP of backend divergence derails a stream immediately — the
+//! end-to-end test is the sharpest bit-identity probe we have.
+//!
+//! Hosts without a SIMD backend skip (with a note); CI forces the
+//! x86_64 runners through the real comparison with `INTFA_REQUIRE_SIMD=1`,
+//! which turns the skip into a failure.
+
+use int_flashattention::coordinator::metrics::Registry;
+use int_flashattention::kernels::{self, KernelBackend};
+use int_flashattention::kv::{CacheConfig, RadixKvCache};
+use int_flashattention::sched::{HashModel, SchedConfig, Scheduler, StreamEvent, StripedKvCache};
+use int_flashattention::tensor::{MatI32, MatI8};
+use int_flashattention::util::rng::Pcg64;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// The SIMD backend, or `None` after logging a skip. With
+/// `INTFA_REQUIRE_SIMD` set, a missing backend is a test failure — CI
+/// uses this to keep the suite honest on hosts that should have one.
+fn simd_or_skip(test: &str) -> Option<&'static dyn KernelBackend> {
+    match kernels::simd_backend() {
+        Some(kb) => Some(kb),
+        None if std::env::var("INTFA_REQUIRE_SIMD").is_ok() => {
+            panic!("INTFA_REQUIRE_SIMD is set but this host has no SIMD backend")
+        }
+        None => {
+            eprintln!("skipping {test}: no SIMD backend on this host");
+            None
+        }
+    }
+}
+
+fn rand_i8(rng: &mut Pcg64, rows: usize, cols: usize) -> MatI8 {
+    MatI8::from_vec(
+        rows,
+        cols,
+        (0..rows * cols).map(|_| (rng.next_range(255) as i32 - 127) as i8).collect(),
+    )
+}
+
+/// f32 slices compared by representation, not by `==` — the contract is
+/// bit-identity, and `==` would hide a -0.0 / +0.0 swap.
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn gemm_bit_identical_over_random_shapes() {
+    let Some(simd) = simd_or_skip("gemm_bit_identity") else {
+        return;
+    };
+    let scalar = kernels::scalar_backend();
+    let mut rng = Pcg64::seeded(0xC0FFEE);
+    for case in 0..40 {
+        // ragged shapes around the 32/8-lane widths and the 64x64 blocks
+        let m = 1 + rng.next_range(70) as usize;
+        let n = 1 + rng.next_range(70) as usize;
+        let k = 1 + rng.next_range(140) as usize;
+        let a = rand_i8(&mut rng, m, k);
+        let bt = rand_i8(&mut rng, n, k);
+        let want = scalar.gemm_i8(&a, &bt);
+        let got = simd.gemm_i8(&a, &bt);
+        assert_eq!(want.data, got.data, "case {case}: gemm_i8 ({m},{n},{k})");
+        // the into-buffer seam every serving caller actually uses
+        let mut c = MatI32::zeros(m, n);
+        simd.gemm_i8_tile(&a, &bt, &mut c);
+        assert_eq!(want.data, c.data, "case {case}: gemm_i8_tile ({m},{n},{k})");
+    }
+}
+
+/// Two caches over identical appends, one per backend. Quantize runs
+/// through each cache's own backend on append, so divergence anywhere
+/// in quantize *or* decode shows up in the outputs.
+fn filled_pair(
+    cfg: &CacheConfig,
+    simd: &'static dyn KernelBackend,
+    n_tokens: usize,
+    seed: u64,
+) -> (RadixKvCache, u64, RadixKvCache, u64, Vec<f32>) {
+    let mut a = RadixKvCache::new(cfg.clone());
+    a.set_kernel_backend(kernels::scalar_backend());
+    let mut b = RadixKvCache::new(cfg.clone());
+    b.set_kernel_backend(simd);
+    let ia = a.alloc_sequence();
+    let ib = b.alloc_sequence();
+    let hd = cfg.heads * cfg.head_dim;
+    let mut rng = Pcg64::seeded(seed);
+    for _ in 0..n_tokens {
+        let k = rng.normal_vec(hd);
+        let v = rng.normal_vec(hd);
+        a.append(ia, &k, &v).expect("pool sized for the test");
+        b.append(ib, &k, &v).expect("pool sized for the test");
+    }
+    let q = rng.normal_vec(hd);
+    (a, ia, b, ib, q)
+}
+
+#[test]
+fn splitk_decode_bit_identical_across_backends_and_workers() {
+    let Some(simd) = simd_or_skip("splitk_decode_bit_identity") else {
+        return;
+    };
+    // d=19 exercises every ragged tail; d=64 the full-lane fast paths
+    for (heads, d, n_tokens) in [(2usize, 19usize, 53usize), (1, 8, 17), (4, 64, 40)] {
+        let cfg =
+            CacheConfig { block_tokens: 8, max_blocks: 256, ..CacheConfig::new(heads, d) };
+        let seed = heads as u64 * 1000 + d as u64;
+        let (a, ia, b, ib, q) = filled_pair(&cfg, simd, n_tokens, seed);
+        let want = a.decode_attention_splitk(ia, &q, None, 1).expect("decode");
+        for workers in [1usize, 2, 3, 8] {
+            let ga = a.decode_attention_splitk(ia, &q, None, workers).expect("decode");
+            let gb = b.decode_attention_splitk(ib, &q, None, workers).expect("decode");
+            assert_eq!(bits(&want), bits(&ga), "scalar h={heads} d={d} workers={workers}");
+            assert_eq!(bits(&want), bits(&gb), "simd h={heads} d={d} workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn per_channel_k_decode_bit_identical_across_backends() {
+    let Some(simd) = simd_or_skip("per_channel_decode_bit_identity") else {
+        return;
+    };
+    // per-channel K switches quantize to the division path and decode
+    // to the channel-scale-folded query — a separate backend surface
+    let (heads, d) = (2usize, 19usize);
+    let mut cfg = CacheConfig { block_tokens: 8, max_blocks: 256, ..CacheConfig::new(heads, d) };
+    let mut rng = Pcg64::seeded(31);
+    cfg.k_channel_scale = (0..heads * d).map(|_| rng.uniform_f32(0.001, 2.0)).collect();
+    let (a, ia, b, ib, q) = filled_pair(&cfg, simd, 37, 77);
+    for workers in [1usize, 3] {
+        let ga = a.decode_attention_splitk(ia, &q, None, workers).expect("decode");
+        let gb = b.decode_attention_splitk(ib, &q, None, workers).expect("decode");
+        assert_eq!(bits(&ga), bits(&gb), "per-channel workers={workers}");
+    }
+}
+
+fn drain(rx: Receiver<StreamEvent>) -> Result<Vec<u32>, String> {
+    let mut tokens = Vec::new();
+    loop {
+        match rx.recv().map_err(|_| "stream dropped".to_string())? {
+            StreamEvent::Token { token, .. } => tokens.push(token),
+            StreamEvent::Done { .. } => return Ok(tokens),
+            StreamEvent::Failed { reason, .. } => return Err(reason),
+        }
+    }
+}
+
+/// Deterministic prompt set: shared-prefix families plus private
+/// prompts, lengths and budgets derived from the seed (the
+/// `sched_integration` generator).
+fn prompt_set(seed: u64, count: usize) -> Vec<(Vec<u32>, usize)> {
+    let mut rng = Pcg64::new(seed, 13);
+    (0..count)
+        .map(|_| {
+            let family = rng.next_range(3) as u32 * 1_000;
+            let len = 1 + rng.next_range(16) as usize;
+            let max_new = 1 + rng.next_range(8) as usize;
+            ((0..len as u32).map(|i| family + i).collect(), max_new)
+        })
+        .collect()
+}
+
+#[test]
+fn sched_streams_token_identical_across_backends() {
+    let Some(simd) = simd_or_skip("sched_stream_bit_identity") else {
+        return;
+    };
+    const HEADS: usize = 2;
+    const HEAD_DIM: usize = 8;
+    let cfg =
+        CacheConfig { block_tokens: 4, max_blocks: 64, ..CacheConfig::new(HEADS, HEAD_DIM) };
+    let model = Arc::new(HashModel::new(HEADS, HEAD_DIM));
+    let prompts = prompt_set(4242, 6);
+    // the full serving stack per backend: striped cache, prefix reuse,
+    // continuous batching, split-K decode — same prompts, two runs
+    let run = |kb: &'static dyn KernelBackend| -> Vec<Vec<u32>> {
+        let cache = StripedKvCache::new(cfg.clone(), 2);
+        cache.install_kernel_backend(kb);
+        let sched = Scheduler::start(
+            Arc::new(cache),
+            model.clone(),
+            SchedConfig { max_inflight: 3, ..SchedConfig::default() },
+            Arc::new(Registry::default()),
+        );
+        let rxs: Vec<Receiver<StreamEvent>> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, (p, m))| sched.submit(i as u64, p.clone(), *m))
+            .collect();
+        rxs.into_iter()
+            .map(|rx| drain(rx).expect("stream completes"))
+            .collect()
+    };
+    let scalar_streams = run(kernels::scalar_backend());
+    let simd_streams = run(simd);
+    assert_eq!(
+        scalar_streams, simd_streams,
+        "token streams must be bit-identical across kernel backends"
+    );
+}
